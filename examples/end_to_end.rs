@@ -1,0 +1,129 @@
+//! End-to-end driver: exercises the full three-layer system on real
+//! (small) workloads and reports the paper's headline metric — CCache's
+//! speedup over FGL and DUP — plus a cross-layer merge validation.
+//!
+//! What runs:
+//!  1. All four paper benchmarks (KV store, K-Means, PageRank, BFS) in
+//!     FGL / DUP / CCache (+atomics for BFS) at a working set matching
+//!     the LLC, on the simulated 8-core Table 2 machine (scaled). Every
+//!     run is verified against its sequential golden run.
+//!  2. Merge-path validation: a CCache run with merge recording on; the
+//!     recorded (src, upd, mem) line triples are re-executed through the
+//!     AOT-compiled Pallas merge kernels via PJRT and compared with the
+//!     native merge path bit-for-bit.
+//!
+//!     cargo run --release --example end_to_end
+
+use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::exec::Variant;
+use ccache::merge::batch::{BatchExecutor, NativeExecutor};
+use ccache::merge::MergeKind;
+use ccache::runtime;
+use ccache::sim::machine::{CoreCtx, Machine};
+use ccache::util::bench::Table;
+use ccache::workloads::graph::GraphKind;
+
+fn main() {
+    let cfg = scaled_config();
+    println!(
+        "== end-to-end: {} cores, L1 {} KiB, L2 {} KiB, LLC {} KiB ==\n",
+        cfg.cores,
+        cfg.l1.size_bytes / 1024,
+        cfg.l2.size_bytes / 1024,
+        cfg.llc.size_bytes / 1024
+    );
+
+    // ---- 1. the benchmark suite ----
+    let mut t = Table::new(
+        "headline: speedup vs FGL at working set = LLC capacity",
+        &["benchmark", "FGL Mcycles", "DUP", "CCACHE", "verified"],
+    );
+    let panels = [
+        BenchKind::KvAdd,
+        BenchKind::KMeans,
+        BenchKind::PageRank(GraphKind::Uniform),
+        BenchKind::PageRank(GraphKind::Rmat),
+        BenchKind::Bfs(GraphKind::Rmat),
+    ];
+    let mut ccache_speedups = Vec::new();
+    for kind in panels {
+        let bench = sized_benchmark(kind, 1.0, cfg.llc.size_bytes, 77);
+        eprintln!("running {}...", bench.name());
+        let fgl = bench.run(Variant::Fgl, cfg);
+        let dup = bench.run(Variant::Dup, cfg);
+        let cc = bench.run(Variant::CCache, cfg);
+        let all_ok = fgl.verified && dup.verified && cc.verified;
+        let s_cc = fgl.cycles() as f64 / cc.cycles() as f64;
+        ccache_speedups.push(s_cc);
+        t.row(&[
+            bench.name(),
+            format!("{:.1}", fgl.cycles() as f64 / 1e6),
+            format!("{:.2}x", fgl.cycles() as f64 / dup.cycles() as f64),
+            format!("{s_cc:.2}x"),
+            all_ok.to_string(),
+        ]);
+        assert!(all_ok, "verification failed for {}", bench.name());
+    }
+    t.print();
+    let best = ccache_speedups.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "max CCache speedup over FGL: {best:.2}x (paper: up to 3.2x on its testbed)\n"
+    );
+
+    // ---- 2. merge-path validation through PJRT ----
+    if !runtime::artifacts::artifacts_available() {
+        println!("(skipping PJRT merge validation: run `make artifacts`)");
+        return;
+    }
+    println!("merge-path validation: native vs AOT Pallas kernels (PJRT)");
+    let machine = Machine::new(cfg);
+    let region = machine.setup(|mem| {
+        mem.record_merges = true;
+        let r = mem.alloc_lines(64 * 4096);
+        for i in 0..4096u64 {
+            mem.poke(r.add(i * 64), (i % 97) as u32);
+        }
+        r
+    });
+    let cores = cfg.cores;
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                ctx.merge_init(0, MergeKind::AddU32);
+                let mut x = core as u64 + 1;
+                for _ in 0..20_000 {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(97);
+                    let k = (x >> 33) % 4096;
+                    let a = region.add(k * 64 + ((x >> 20) % 16) * 4);
+                    let v = ctx.c_read_u32(a, 0);
+                    ctx.c_write_u32(a, v.wrapping_add(1), 0);
+                    ctx.soft_merge();
+                }
+                ctx.merge();
+            });
+            f
+        })
+        .collect();
+    machine.run(programs);
+
+    let log = machine.setup(|mem| std::mem::take(&mut mem.merge_log));
+    println!("  recorded {} line merges from the CCache run", log.len());
+    let items: Vec<_> = log.iter().map(|r| r.item.clone()).collect();
+    let native = NativeExecutor.execute(MergeKind::AddU32, &items);
+    let mut pjrt =
+        runtime::PjrtMergeExecutor::load_default().expect("PJRT executor");
+    let via_pjrt = pjrt.execute(MergeKind::AddU32, &items);
+    assert_eq!(native.len(), via_pjrt.len());
+    let mismatches = native
+        .iter()
+        .zip(&via_pjrt)
+        .filter(|(a, b)| a != b)
+        .count();
+    println!(
+        "  native vs PJRT: {mismatches} mismatching lines of {}",
+        native.len()
+    );
+    assert_eq!(mismatches, 0, "merge paths diverged");
+    println!("  OK — the simulator's merge results are reproduced by the");
+    println!("  AOT-compiled JAX/Pallas kernels executed from rust via PJRT.");
+}

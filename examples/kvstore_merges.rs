@@ -1,0 +1,52 @@
+//! Section 6.3 — flexible, software-defined merge functions.
+//!
+//! Runs the key-value store with three different merge functions (plain
+//! add, saturating add, complex multiplication) and shows that CCache's
+//! advantage holds across all of them — the paper's core argument
+//! against fixed-function hardware (COUP).
+//!
+//!     cargo run --release --example kvstore_merges
+
+use ccache::coordinator::scaled_config;
+use ccache::exec::Variant;
+use ccache::util::bench::Table;
+use ccache::workloads::kvstore::{KvMerge, KvParams};
+use ccache::workloads::Benchmark;
+
+fn main() {
+    let cfg = scaled_config();
+    let keys = cfg.llc.size_bytes / 8; // WS ~ half the LLC
+    let mut t = Table::new(
+        "KV store: speedup vs FGL per merge function",
+        &["merge fn", "FGL cycles", "DUP", "CCACHE"],
+    );
+    for merge in [KvMerge::Add, KvMerge::Sat { max: 12 }, KvMerge::Cmul] {
+        let p = KvParams {
+            keys: if merge == KvMerge::Cmul { keys / 2 } else { keys },
+            accesses_per_key: 16,
+            seed: 7,
+            merge,
+            zipf_theta: 0.0,
+        };
+        let bench = Benchmark::Kv(p);
+        eprintln!("running {}...", bench.name());
+        let fgl = bench.run(Variant::Fgl, cfg);
+        fgl.assert_verified();
+        let dup = bench.run(Variant::Dup, cfg);
+        dup.assert_verified();
+        let cc = bench.run(Variant::CCache, cfg);
+        cc.assert_verified();
+        t.row(&[
+            merge.name().to_string(),
+            fgl.cycles().to_string(),
+            format!("{:.2}x", fgl.cycles() as f64 / dup.cycles() as f64),
+            format!("{:.2}x", fgl.cycles() as f64 / cc.cycles() as f64),
+        ]);
+    }
+    t.print();
+    println!(
+        "CCache's benefit persists across arbitrary merge semantics —\n\
+         saturating and complex-arithmetic updates would not fit a fixed\n\
+         hardware operation set (Section 6.3 / COUP comparison)."
+    );
+}

@@ -1,0 +1,46 @@
+//! Quickstart: run the key-value store on the simulated 8-core machine
+//! in all three execution strategies the paper compares, and print the
+//! headline speedups.
+//!
+//!     cargo run --release --example quickstart
+
+use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::exec::Variant;
+use ccache::util::bench::Table;
+
+fn main() {
+    let cfg = scaled_config();
+    // a working set matching LLC capacity — the paper's sweet spot
+    let bench = sized_benchmark(BenchKind::KvAdd, 1.0, cfg.llc.size_bytes, 42);
+    println!(
+        "benchmark: {} ({} cores, {} KiB LLC)\n",
+        bench.name(),
+        cfg.cores,
+        cfg.llc.size_bytes / 1024
+    );
+
+    let mut results = Vec::new();
+    for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
+        eprintln!("running {}...", v.name());
+        let r = bench.run(v, cfg);
+        r.assert_verified();
+        results.push(r);
+    }
+
+    let fgl = results[0].cycles() as f64;
+    let mut t = Table::new(
+        "key-value store — cycles and speedup vs FGL",
+        &["variant", "cycles", "speedup", "LLC miss%", "merges"],
+    );
+    for r in &results {
+        t.row(&[
+            r.variant.name().to_string(),
+            r.cycles().to_string(),
+            format!("{:.2}x", fgl / r.cycles() as f64),
+            format!("{:.1}", r.stats.llc.miss_rate() * 100.0),
+            r.stats.merges.to_string(),
+        ]);
+    }
+    t.print();
+    println!("all variants verified against the sequential golden run.");
+}

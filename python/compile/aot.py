@@ -1,0 +1,126 @@
+# Emit HLO text (NOT .serialize()) — jax>=0.5 serialized HloModuleProtos
+# carry 64-bit instruction ids that xla_extension 0.5.1 rejects
+# (`proto.id() <= INT_MAX`); the HLO *text* parser reassigns ids and
+# round-trips cleanly. See /opt/xla-example/load_hlo/.
+"""AOT compile path: lower every L2 entry point to artifacts/<name>.hlo.txt.
+
+This is the only place Python touches the system. `make artifacts` runs it
+once; the rust binary then loads the HLO text through the PJRT CPU client
+(rust/src/runtime/) and Python never appears on the request path.
+
+The shapes below are the executable-specialization contract with rust —
+rust/src/runtime/artifacts.rs must agree (it parses the emitted
+manifest.txt to verify at load time).
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import LINE_WORDS
+
+# ---- the AOT shape contract (mirrored in rust/src/runtime/artifacts.rs) ----
+MERGE_BATCH = 256  # rows per merge executable; rust pads partial batches
+KMEANS_N = 2048
+KMEANS_D = 16
+KMEANS_K = 16
+PAGERANK_V = 1024
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+LINE = (MERGE_BATCH, LINE_WORDS)
+
+# name -> (fn, arg specs). Keep in sync with the rust ArtifactKind enum.
+ENTRIES = {
+    "merge_add": (model.merge_batch_add, [_spec(LINE)] * 3),
+    "merge_sat": (model.merge_batch_sat, [_spec(LINE)] * 3 + [_spec((1, 1))]),
+    "merge_cmul": (model.merge_batch_cmul, [_spec(LINE)] * 3),
+    "merge_bitor": (
+        model.merge_batch_bitor,
+        [_spec(LINE, jnp.int32)] * 3,
+    ),
+    "merge_min": (model.merge_batch_min, [_spec(LINE)] * 3),
+    "merge_max": (model.merge_batch_max, [_spec(LINE)] * 3),
+    "merge_approx": (
+        model.merge_batch_approx,
+        [_spec(LINE)] * 3 + [_spec((MERGE_BATCH, 1))],
+    ),
+    "kmeans_step": (
+        model.kmeans_step,
+        [
+            _spec((KMEANS_N, KMEANS_D)),
+            _spec((KMEANS_K, KMEANS_D)),
+            _spec((KMEANS_N,)),
+        ],
+    ),
+    "pagerank_iter": (
+        model.pagerank_iter,
+        [
+            _spec((PAGERANK_V, PAGERANK_V)),
+            _spec((PAGERANK_V,)),
+            _spec((PAGERANK_V,)),
+        ],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name):
+    fn, specs = ENTRIES[name]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def manifest_line(name):
+    _, specs = ENTRIES[name]
+    args = ";".join(
+        f"{s.dtype}[{','.join(str(d) for d in s.shape)}]" for s in specs
+    )
+    return f"{name} {args}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = args.only.split(",") if args.only else list(ENTRIES)
+    for name in names:
+        text = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man = os.path.join(args.out_dir, "manifest.txt")
+    with open(man, "w") as f:
+        f.write(f"# ccache-rs AOT manifest: entry <dtype[shape];...>\n")
+        f.write(f"merge_batch={MERGE_BATCH}\n")
+        f.write(f"line_words={LINE_WORDS}\n")
+        f.write(f"kmeans={KMEANS_N},{KMEANS_D},{KMEANS_K}\n")
+        f.write(f"pagerank_v={PAGERANK_V}\n")
+        for name in ENTRIES:
+            f.write(manifest_line(name) + "\n")
+    print(f"wrote {man}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for ccache-rs.
+
+Every kernel here is authored with ``pl.pallas_call(..., interpret=True)``
+so it lowers to plain HLO that the CPU PJRT plugin (and the rust `xla`
+crate) can execute. Real-TPU lowering would emit Mosaic custom-calls the
+CPU client cannot run; interpret mode is the correctness/compile target,
+and TPU performance is estimated analytically in DESIGN.md / EXPERIMENTS.md.
+
+Modules:
+  merge_kernels -- batched cache-line merge functions (the paper's
+                   software-defined merges, Section 3.2 / 6.3)
+  kmeans        -- K-Means assignment/accumulation step (Section 5.1)
+  pagerank      -- one damped PageRank iteration (Section 5.1)
+  ref           -- pure-jnp oracles for all of the above
+"""

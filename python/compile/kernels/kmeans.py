@@ -1,0 +1,57 @@
+"""K-Means assignment kernel (Pallas, Layer 1).
+
+The assignment phase is the compute hot-spot of the paper's K-Means
+benchmark (Section 5.1): every point computes its distance to every
+cluster center. We tile points into [BLOCK_N, D] VMEM blocks while the
+full centroid tile [K, D] stays resident, and expand the distance into
+matmul form so the cross term hits the MXU:
+
+    ||p - c||^2 = ||p||^2 - 2 p.c + ||c||^2
+
+The per-cluster accumulation (the merge payload) is a one-hot matmul at
+Layer 2 (model.py) -- scatter-free, also MXU-shaped.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+
+
+def _assign_kernel(pts_ref, cen_ref, assign_ref, dist_ref):
+    pts = pts_ref[...]  # [BN, D]
+    cen = cen_ref[...]  # [K, D]
+    p2 = jnp.sum(pts * pts, axis=1, keepdims=True)
+    c2 = jnp.sum(cen * cen, axis=1)[None, :]
+    d2 = p2 - 2.0 * (pts @ cen.T) + c2
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+def kmeans_assign(points, centroids):
+    """points [N, D] f32, centroids [K, D] f32 ->
+    (assign [N] i32, dist2 [N] f32)."""
+    n, d = points.shape
+    k, d2 = centroids.shape
+    assert d == d2
+    block_n = min(BLOCK_N, n)
+    assert n % block_n == 0, f"N={n} not a multiple of {block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)

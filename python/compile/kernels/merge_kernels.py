@@ -1,0 +1,164 @@
+"""Batched cache-line merge kernels (Pallas, Layer 1).
+
+The CCache hardware merges one 64-byte line at a time through the merge
+registers (paper Section 4.2). In software we batch all pending line
+merges of a core (or a DUP reduction over a whole array) into a [B, 16]
+tile and run one kernel invocation -- the VMEM/BlockSpec analogue of the
+merge-register staging. Rows are independent, so padding rows are ignored
+by the caller.
+
+All kernels: inputs src/upd/mem [B, 16] -> merged mem' [B, 16].
+interpret=True throughout (see kernels/__init__.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LINE_WORDS
+
+# Rows per grid step. 128 rows x 16 words x 4 bytes x 4 buffers = 32 KiB,
+# comfortably inside a TPU core's VMEM with double-buffering headroom.
+BLOCK_B = 128
+
+
+def _row_spec(block_b):
+    return pl.BlockSpec((block_b, LINE_WORDS), lambda i: (i, 0))
+
+
+def _grid(b, block_b):
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    return (b // block_b,)
+
+
+def _line_merge_call(kernel, ops, extra_specs=(), extra_args=(), dtype=jnp.float32):
+    """Shared pallas_call wiring for [B,16]-shaped line merges."""
+    src, upd, mem = ops
+    b = src.shape[0]
+    block_b = min(BLOCK_B, b)
+    specs = [_row_spec(block_b)] * 3 + list(extra_specs)
+    return pl.pallas_call(
+        kernel,
+        grid=_grid(b, block_b),
+        in_specs=specs,
+        out_specs=_row_spec(block_b),
+        out_shape=jax.ShapeDtypeStruct((b, LINE_WORDS), dtype),
+        interpret=True,
+    )(src, upd, mem, *extra_args)
+
+
+# -- add --------------------------------------------------------------------
+
+
+def _add_kernel(src_ref, upd_ref, mem_ref, out_ref):
+    out_ref[...] = mem_ref[...] + (upd_ref[...] - src_ref[...])
+
+
+def merge_add(src, upd, mem):
+    return _line_merge_call(_add_kernel, (src, upd, mem))
+
+
+# -- saturating add ---------------------------------------------------------
+
+
+def _sat_kernel(src_ref, upd_ref, mem_ref, thresh_ref, out_ref):
+    applied = mem_ref[...] + (upd_ref[...] - src_ref[...])
+    out_ref[...] = jnp.minimum(applied, thresh_ref[0, 0])
+
+
+def merge_sat(src, upd, mem, thresh):
+    """thresh: [1, 1] f32 scalar staged like a merge register."""
+    return _line_merge_call(
+        _sat_kernel,
+        (src, upd, mem),
+        extra_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        extra_args=(thresh,),
+    )
+
+
+# -- complex multiply -------------------------------------------------------
+
+
+def _cmul_kernel(src_ref, upd_ref, mem_ref, out_ref):
+    src, upd, mem = src_ref[...], upd_ref[...], mem_ref[...]
+    sr, si = src[:, 0::2], src[:, 1::2]
+    ur, ui = upd[:, 0::2], upd[:, 1::2]
+    mr, mi = mem[:, 0::2], mem[:, 1::2]
+    den = sr * sr + si * si
+    fr = (ur * sr + ui * si) / den
+    fi = (ui * sr - ur * si) / den
+    outr = mr * fr - mi * fi
+    outi = mr * fi + mi * fr
+    out_ref[...] = jnp.stack([outr, outi], axis=-1).reshape(mem.shape)
+
+
+def merge_cmul(src, upd, mem):
+    return _line_merge_call(_cmul_kernel, (src, upd, mem))
+
+
+# -- bitwise OR (int32) -----------------------------------------------------
+
+
+def _bitor_kernel(src_ref, upd_ref, mem_ref, out_ref):
+    del src_ref  # OR is idempotent; the source bits are harmless to re-apply
+    out_ref[...] = mem_ref[...] | upd_ref[...]
+
+
+def merge_bitor(src, upd, mem):
+    return _line_merge_call(_bitor_kernel, (src, upd, mem), dtype=jnp.int32)
+
+
+# -- min / max --------------------------------------------------------------
+
+
+def _min_kernel(src_ref, upd_ref, mem_ref, out_ref):
+    del src_ref
+    out_ref[...] = jnp.minimum(mem_ref[...], upd_ref[...])
+
+
+def merge_min(src, upd, mem):
+    return _line_merge_call(_min_kernel, (src, upd, mem))
+
+
+def _max_kernel(src_ref, upd_ref, mem_ref, out_ref):
+    del src_ref
+    out_ref[...] = jnp.maximum(mem_ref[...], upd_ref[...])
+
+
+def merge_max(src, upd, mem):
+    return _line_merge_call(_max_kernel, (src, upd, mem))
+
+
+# -- approximate (update-dropping) add --------------------------------------
+
+
+def _approx_kernel(src_ref, upd_ref, mem_ref, mask_ref, out_ref):
+    delta = upd_ref[...] - src_ref[...]
+    out_ref[...] = mem_ref[...] + mask_ref[...] * delta
+
+
+def merge_approx(src, upd, mem, mask):
+    """mask: [B, 1] f32 of {0.0, 1.0}; 0 drops the line's update."""
+    b = src.shape[0]
+    block_b = min(BLOCK_B, b)
+    return _line_merge_call(
+        _approx_kernel,
+        (src, upd, mem),
+        extra_specs=[pl.BlockSpec((block_b, 1), lambda i: (i, 0))],
+        extra_args=(mask,),
+    )
+
+
+# Registry used by aot.py and the tests. Entries: name -> (fn, n_extra, dtype)
+# where n_extra counts trailing non-line operands (thresh / mask).
+MERGES = {
+    "add": (merge_add, 0, jnp.float32),
+    "sat": (merge_sat, 1, jnp.float32),
+    "cmul": (merge_cmul, 0, jnp.float32),
+    "bitor": (merge_bitor, 0, jnp.int32),
+    "min": (merge_min, 0, jnp.float32),
+    "max": (merge_max, 0, jnp.float32),
+    "approx": (merge_approx, 1, jnp.float32),
+}

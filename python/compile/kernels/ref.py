@@ -1,0 +1,147 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+Each function here is the *specification*: the Pallas kernels in
+``merge_kernels.py`` / ``kmeans.py`` / ``pagerank.py`` must match these
+bit-for-bit (integers) or to float tolerance. pytest enforces the match.
+
+Shapes follow the CCache hardware model: a cache line is 64 bytes, i.e.
+16 f32 words (or 16 i32 words, or 8 interleaved complex numbers). A merge
+batch is ``[B, 16]``: one row per source-buffer entry being merged.
+"""
+
+import jax.numpy as jnp
+
+LINE_WORDS = 16  # 64-byte cache line = 16 x 4-byte words
+
+
+# ---------------------------------------------------------------------------
+# Merge functions (paper Section 3.2, 4.5, 6.3).
+#
+# Signature convention, mirroring the CCache merge registers: each merge
+# takes the preserved `src` copy, the core's `upd` copy and the in-memory
+# `mem` copy, and returns the new memory value. All are [B, 16].
+# ---------------------------------------------------------------------------
+
+
+def merge_add(src, upd, mem):
+    """Additive merge: apply the core's delta to memory (Fig. 3)."""
+    return mem + (upd - src)
+
+
+def merge_sat(src, upd, mem, thresh):
+    """Saturating/thresholding additive merge (Section 4.5, 6.3).
+
+    The conditional must observe the *in-memory* value, not the updated
+    copy: the delta is applied and then clamped to `thresh` from above.
+    `thresh` has shape [1, 1] (a scalar staged like a merge register).
+    """
+    return jnp.minimum(mem + (upd - src), thresh)
+
+
+def merge_cmul(src, upd, mem):
+    """Complex-multiply merge (Section 6.3).
+
+    Lines hold 8 complex numbers as interleaved (re, im) f32 pairs. The
+    core's multiplicative factor is upd / src; memory is multiplied by it.
+    """
+    sr, si = src[:, 0::2], src[:, 1::2]
+    ur, ui = upd[:, 0::2], upd[:, 1::2]
+    mr, mi = mem[:, 0::2], mem[:, 1::2]
+    # factor = upd / src
+    den = sr * sr + si * si
+    fr = (ur * sr + ui * si) / den
+    fi = (ui * sr - ur * si) / den
+    # out = mem * factor
+    outr = mr * fr - mi * fi
+    outi = mr * fi + mi * fr
+    out = jnp.stack([outr, outi], axis=-1).reshape(mem.shape)
+    return out
+
+
+def merge_bitor(src, upd, mem):
+    """Bitwise-OR merge (BFS bitmap, Section 5.1). int32 lanes.
+
+    OR is idempotent, so merging the whole updated copy (which includes
+    the source bits) is correct: mem | upd.
+    """
+    del src
+    return mem | upd
+
+
+def merge_min(src, upd, mem):
+    """Minimum merge (e.g. shortest-path relaxations). Idempotent."""
+    del src
+    return jnp.minimum(mem, upd)
+
+
+def merge_max(src, upd, mem):
+    """Maximum merge. Idempotent."""
+    del src
+    return jnp.maximum(mem, upd)
+
+
+def merge_approx(src, upd, mem, mask):
+    """Approximate merge (Section 6.3): drop a line's update when its mask
+    entry is 0. The mask is drawn by the *caller* from a programmer-chosen
+    binomial distribution (no RNG inside the kernel -- the hardware analog
+    samples outside the merge unit). mask: [B, 1] f32 of {0.0, 1.0}.
+    """
+    return mem + mask * (upd - src)
+
+
+# ---------------------------------------------------------------------------
+# K-Means step (paper Section 5.1).
+# ---------------------------------------------------------------------------
+
+
+def kmeans_assign(points, centroids):
+    """Assign each point to the nearest centroid.
+
+    points: [N, D] f32, centroids: [K, D] f32 -> (assign [N] i32, dist2 [N] f32)
+    Distances are expanded into matmul form (MXU-friendly):
+    ||p - c||^2 = ||p||^2 - 2 p.c + ||c||^2.
+    """
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)  # [N,1]
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]  # [1,K]
+    cross = points @ centroids.T  # [N,K]
+    d2 = p2 - 2.0 * cross + c2
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return assign, jnp.min(d2, axis=1)
+
+
+def kmeans_accumulate(points, assign, mask, k):
+    """Per-cluster component-wise sums and counts (the merge payload).
+
+    points: [N, D], assign: [N] i32, mask: [N] f32 {0,1} (padding mask).
+    Returns (sums [K, D], counts [K]). One-hot matmul form, no scatter.
+    """
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * mask[:, None]
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def kmeans_step(points, centroids, mask):
+    """One full K-Means iteration worth of numeric work."""
+    assign, _ = kmeans_assign(points, centroids)
+    sums, counts = kmeans_accumulate(points, assign, mask, centroids.shape[0])
+    return assign, sums, counts
+
+
+# ---------------------------------------------------------------------------
+# PageRank iteration (paper Section 5.1). Dense-adjacency formulation used
+# by the AOT artifact (the simulator's CSR PageRank is the timing model;
+# this kernel is the numeric hot loop for the graph-analytics example).
+# ---------------------------------------------------------------------------
+
+
+def pagerank_iter(adj_norm, rank, damping=0.85):
+    """rank' = (1-d)/V + d * A_norm @ rank.
+
+    adj_norm: [V, V] f32 column-normalized adjacency (adj_norm[v, u] =
+    1/outdeg(u) if edge u->v else 0; dangling columns spread uniformly).
+    rank: [V] f32.
+    """
+    v = rank.shape[0]
+    return (1.0 - damping) / v + damping * (adj_norm @ rank)

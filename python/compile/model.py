@@ -1,0 +1,78 @@
+# Layer 2: the paper's numeric compute graphs in JAX, calling the Layer-1
+# Pallas kernels so everything lowers into one HLO module per artifact.
+# Python runs only at build time (make artifacts); rust loads the HLO text
+# through PJRT and executes it on the request path.
+"""L2 model graphs for ccache-rs.
+
+Exported entry points (see aot.py for the AOT shapes):
+
+  merge_batch_<kind>  -- batched line merges, kind in merge_kernels.MERGES
+  kmeans_step         -- assignment (Pallas) + one-hot accumulation (XLA)
+  pagerank_iter       -- damped dense matvec (Pallas)
+
+The functions return tuples so the HLO root is a tuple (the rust side
+unwraps with to_tuple*; lowering uses return_tuple=True).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import kmeans as kmeans_k
+from .kernels import merge_kernels as mk
+from .kernels import pagerank as pr_k
+
+
+# -- merges -----------------------------------------------------------------
+
+
+def merge_batch_add(src, upd, mem):
+    return (mk.merge_add(src, upd, mem),)
+
+
+def merge_batch_sat(src, upd, mem, thresh):
+    return (mk.merge_sat(src, upd, mem, thresh),)
+
+
+def merge_batch_cmul(src, upd, mem):
+    return (mk.merge_cmul(src, upd, mem),)
+
+
+def merge_batch_bitor(src, upd, mem):
+    return (mk.merge_bitor(src, upd, mem),)
+
+
+def merge_batch_min(src, upd, mem):
+    return (mk.merge_min(src, upd, mem),)
+
+
+def merge_batch_max(src, upd, mem):
+    return (mk.merge_max(src, upd, mem),)
+
+
+def merge_batch_approx(src, upd, mem, mask):
+    return (mk.merge_approx(src, upd, mem, mask),)
+
+
+# -- K-Means ----------------------------------------------------------------
+
+
+def kmeans_step(points, centroids, mask):
+    """One iteration of numeric work: Pallas assignment + one-hot matmul
+    accumulation (scatter-free; the [N,K] one-hot @ [N,D] points contraction
+    is MXU-shaped). mask [N] f32 zeroes padding rows.
+
+    Returns (assign [N] i32, sums [K, D] f32, counts [K] f32).
+    """
+    k = centroids.shape[0]
+    assign, _ = kmeans_k.kmeans_assign(points, centroids)
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * mask[:, None]
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    return (assign, sums, counts)
+
+
+# -- PageRank ---------------------------------------------------------------
+
+
+def pagerank_iter(adj_norm, rank, out_deg_inv):
+    return (pr_k.pagerank_iter(adj_norm, rank, out_deg_inv),)

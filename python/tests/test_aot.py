@@ -1,0 +1,29 @@
+"""AOT lowering smoke tests: every entry lowers to parseable HLO text."""
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("name", sorted(aot.ENTRIES))
+def test_entry_lowers_to_hlo_text(name):
+    text = aot.lower_entry(name)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # tuple root (return_tuple=True) so rust unwraps with to_tuple*
+    assert "ROOT" in text
+
+
+def test_manifest_lines_cover_all_entries():
+    for name in aot.ENTRIES:
+        line = aot.manifest_line(name)
+        assert line.startswith(name + " ")
+        assert "[" in line
+
+
+def test_shape_contract_constants():
+    # the contract mirrored in rust/src/runtime/artifacts.rs
+    assert aot.MERGE_BATCH == 256
+    assert aot.LINE_WORDS == 16
+    assert aot.KMEANS_N % 256 == 0
+    assert aot.PAGERANK_V % 128 == 0

@@ -1,0 +1,104 @@
+"""Pallas K-Means assignment kernel + L2 step vs the jnp oracle and a
+brute-force numpy reference."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import kmeans as kk
+from compile.kernels import ref
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def brute_assign(points, centroids):
+    d = ((points[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+    return d.argmin(1).astype(np.int32)
+
+
+@pytest.mark.parametrize("n,d,k", [(256, 4, 3), (512, 16, 16), (2048, 16, 16), (256, 2, 8)])
+def test_assign_matches_brute_force(rng, n, d, k):
+    pts = rng.normal(size=(n, d)).astype(np.float32) * 10
+    cen = rng.normal(size=(k, d)).astype(np.float32) * 10
+    got, _ = kk.kmeans_assign(jnp.asarray(pts), jnp.asarray(cen))
+    want = brute_assign(pts, cen)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("n,d,k", [(256, 8, 4), (2048, 16, 16)])
+def test_assign_matches_ref(rng, n, d, k):
+    pts = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    got_a, got_d = kk.kmeans_assign(pts, cen)
+    want_a, want_d = ref.kmeans_assign(pts, cen)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-4, atol=1e-3)
+
+
+def test_step_accumulation_with_mask(rng):
+    n, d, k = 512, 16, 16
+    pts = rng.normal(size=(n, d)).astype(np.float32)
+    cen = rng.normal(size=(k, d)).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    mask[400:] = 0.0  # padding rows must not contribute
+    assign, sums, counts = model.kmeans_step(
+        jnp.asarray(pts), jnp.asarray(cen), jnp.asarray(mask)
+    )
+    a = brute_assign(pts, cen)
+    np.testing.assert_array_equal(np.asarray(assign), a)
+    want_sums = np.zeros((k, d), np.float32)
+    want_counts = np.zeros(k, np.float32)
+    for i in range(400):
+        want_sums[a[i]] += pts[i]
+        want_counts[a[i]] += 1
+    np.testing.assert_allclose(np.asarray(sums), want_sums, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(counts), want_counts)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.sampled_from([256, 512, 1024]),
+    k=st.sampled_from([2, 5, 16]),
+    d=st.sampled_from([2, 8, 16]),
+)
+def test_assign_hypothesis_sweep(seed, n, k, d):
+    r = np.random.default_rng(seed)
+    pts = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    cen = jnp.asarray(r.normal(size=(k, d)).astype(np.float32))
+    got, _ = kk.kmeans_assign(pts, cen)
+    np.testing.assert_array_equal(np.asarray(got), brute_assign(np.asarray(pts), np.asarray(cen)))
+
+
+def test_converges_on_separated_clusters(rng):
+    """Full Lloyd iterations through the L2 step recover well-separated
+    cluster centers -- the end-to-end numeric sanity the simulator's K-Means
+    workload relies on."""
+    k, d, per = 4, 8, 128
+    true = rng.normal(size=(k, d)).astype(np.float32) * 50
+    pts = np.concatenate(
+        [true[i] + rng.normal(size=(per, d)).astype(np.float32) for i in range(k)]
+    )
+    n = pts.shape[0]
+    mask = jnp.ones(n, jnp.float32)
+    # seed one initial center inside each true cluster (k-means++-lite);
+    # random init can drop a cluster, which is a Lloyd property, not a
+    # kernel bug.
+    cen = pts[[i * per for i in range(k)]].copy()
+    for _ in range(10):
+        _, sums, counts = model.kmeans_step(
+            jnp.asarray(pts), jnp.asarray(cen), mask
+        )
+        counts = np.asarray(counts)
+        new = np.asarray(sums) / np.maximum(counts[:, None], 1.0)
+        cen = np.where(counts[:, None] > 0, new, cen)  # keep empty clusters
+    # every true center should be close to some recovered center
+    for i in range(k):
+        dmin = np.min(((cen - true[i]) ** 2).sum(1))
+        assert dmin < d * 1.0, f"center {i} not recovered (d2={dmin})"

@@ -1,0 +1,198 @@
+"""Pallas merge kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE Layer-1 correctness signal: every software-defined merge
+function the paper demonstrates (Section 3.2 / 6.3) must match its
+specification for arbitrary batches. Hypothesis sweeps batch sizes and
+value distributions; dedicated tests pin the algebraic properties the
+paper relies on (commutativity / serializability of merges).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import merge_kernels as mk
+from compile.kernels import ref
+
+LINE = ref.LINE_WORDS
+BATCHES = [1, 2, 8, 128, 256, 384]
+
+
+def rand_lines(rng, b, scale=100.0):
+    return jnp.asarray(
+        rng.uniform(-scale, scale, size=(b, LINE)).astype(np.float32)
+    )
+
+
+def rand_int_lines(rng, b):
+    return jnp.asarray(rng.integers(0, 2**31 - 1, size=(b, LINE), dtype=np.int32))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xCCAC4E)
+
+
+# ---------------------------------------------------------------------------
+# kernel == oracle, across batch sizes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b", BATCHES)
+def test_add_matches_ref(rng, b):
+    src, upd, mem = (rand_lines(rng, b) for _ in range(3))
+    got = mk.merge_add(src, upd, mem)
+    want = ref.merge_add(src, upd, mem)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+def test_sat_matches_ref(rng, b):
+    src, upd, mem = (rand_lines(rng, b) for _ in range(3))
+    thresh = jnp.asarray([[37.5]], dtype=jnp.float32)
+    got = mk.merge_sat(src, upd, mem, thresh)
+    want = ref.merge_sat(src, upd, mem, thresh)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert float(jnp.max(got)) <= 37.5 + 1e-6
+
+
+@pytest.mark.parametrize("b", BATCHES)
+def test_cmul_matches_ref(rng, b):
+    # keep sources away from 0 so upd/src is well-conditioned
+    src = rand_lines(rng, b) + jnp.where(rand_lines(rng, b) > 0, 150.0, -150.0)
+    upd, mem = rand_lines(rng, b), rand_lines(rng, b)
+    got = mk.merge_cmul(src, upd, mem)
+    want = ref.merge_cmul(src, upd, mem)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+def test_bitor_matches_ref(rng, b):
+    src, upd, mem = (rand_int_lines(rng, b) for _ in range(3))
+    got = mk.merge_bitor(src, upd, mem)
+    want = ref.merge_bitor(src, upd, mem)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+def test_min_max_match_ref(rng, b):
+    src, upd, mem = (rand_lines(rng, b) for _ in range(3))
+    np.testing.assert_array_equal(mk.merge_min(src, upd, mem), ref.merge_min(src, upd, mem))
+    np.testing.assert_array_equal(mk.merge_max(src, upd, mem), ref.merge_max(src, upd, mem))
+
+
+@pytest.mark.parametrize("b", BATCHES)
+def test_approx_matches_ref(rng, b):
+    src, upd, mem = (rand_lines(rng, b) for _ in range(3))
+    mask = jnp.asarray(
+        rng.integers(0, 2, size=(b, 1)).astype(np.float32)
+    )
+    got = mk.merge_approx(src, upd, mem, mask)
+    want = ref.merge_approx(src, upd, mem, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# algebraic properties the paper's correctness argument needs (Section 3.1):
+# applying two cores' merges in either order gives the same memory result.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(
+        st.floats(min_value=-1e3, max_value=1e3, allow_nan=False, width=32),
+        min_size=LINE * 4,
+        max_size=LINE * 4,
+    )
+)
+def test_add_merge_order_independent(data):
+    a = np.asarray(data, dtype=np.float32).reshape(4, LINE)
+    mem0 = jnp.asarray(a[0:1])
+    src = jnp.asarray(a[1:2])
+    upd_a, upd_b = jnp.asarray(a[2:3]), jnp.asarray(a[3:4])
+    # core A then core B
+    m1 = ref.merge_add(src, upd_b, ref.merge_add(src, upd_a, mem0))
+    # core B then core A
+    m2 = ref.merge_add(src, upd_a, ref.merge_add(src, upd_b, mem0))
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-3)
+    # and the pallas kernel agrees with the composed oracle
+    k1 = mk.merge_add(src, upd_b, mk.merge_add(src, upd_a, mem0))
+    np.testing.assert_allclose(k1, m1, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.lists(
+        st.integers(min_value=0, max_value=2**31 - 1),
+        min_size=LINE * 3,
+        max_size=LINE * 3,
+    )
+)
+def test_bitor_merge_order_independent(bits):
+    a = np.asarray(bits, dtype=np.int32).reshape(3, LINE)
+    mem0, upd_a, upd_b = (jnp.asarray(a[i : i + 1]) for i in range(3))
+    src = jnp.zeros_like(mem0)
+    m1 = ref.merge_bitor(src, upd_b, ref.merge_bitor(src, upd_a, mem0))
+    m2 = ref.merge_bitor(src, upd_a, ref.merge_bitor(src, upd_b, mem0))
+    np.testing.assert_array_equal(m1, m2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    vals=st.lists(
+        st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, width=32),
+        min_size=LINE * 3,
+        max_size=LINE * 3,
+    )
+)
+def test_min_merge_idempotent_and_commutative(vals):
+    a = np.asarray(vals, dtype=np.float32).reshape(3, LINE)
+    mem0, upd_a, upd_b = (jnp.asarray(a[i : i + 1]) for i in range(3))
+    src = jnp.zeros_like(mem0)
+    m1 = ref.merge_min(src, upd_b, ref.merge_min(src, upd_a, mem0))
+    m2 = ref.merge_min(src, upd_a, ref.merge_min(src, upd_b, mem0))
+    np.testing.assert_array_equal(m1, m2)
+    # idempotent: merging the same update twice changes nothing
+    np.testing.assert_array_equal(ref.merge_min(src, upd_a, m1), m1)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: batch size x random values for the add kernel (the one
+# every benchmark uses), checking kernel == oracle at every size.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1.0, 1e3, 1e6]),
+)
+def test_add_kernel_hypothesis_sweep(b, seed, scale):
+    r = np.random.default_rng(seed)
+    src, upd, mem = (
+        jnp.asarray(r.uniform(-scale, scale, (b, LINE)).astype(np.float32))
+        for _ in range(3)
+    )
+    np.testing.assert_allclose(
+        mk.merge_add(src, upd, mem),
+        ref.merge_add(src, upd, mem),
+        rtol=1e-6,
+        atol=scale * 1e-5,
+    )
+
+
+def test_sat_threshold_conditional_observes_memory(rng):
+    """Paper Section 4.5: the saturation conditional must clamp based on the
+    *merged memory* value. If memory is already at threshold, any positive
+    delta must leave it at the threshold."""
+    b = 8
+    thresh = jnp.asarray([[100.0]], dtype=jnp.float32)
+    mem = jnp.full((b, LINE), 100.0, dtype=jnp.float32)
+    src = jnp.zeros((b, LINE), dtype=jnp.float32)
+    upd = jnp.full((b, LINE), 55.0, dtype=jnp.float32)  # positive delta
+    out = mk.merge_sat(src, upd, mem, thresh)
+    np.testing.assert_array_equal(np.asarray(out), np.full((b, LINE), 100.0, np.float32))

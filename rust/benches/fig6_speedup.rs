@@ -1,0 +1,61 @@
+//! Fig 6 — performance comparison of CCache and DUP relative to FGL
+//! across working-set sizes (25%..400% of LLC capacity), for every
+//! benchmark panel including the Section 6.3 merge-function variants.
+//!
+//! Paper shape to match: CCache up to ~3.2x over FGL; DUP above FGL at
+//! small working sets for KV/PR/KMeans but degrading at larger ones;
+//! CCache's advantage growing with working-set size.
+//!
+//!     cargo bench --bench fig6_speedup            # core panels
+//!     CCACHE_FIG6_ALL=1 cargo bench --bench fig6_speedup   # all panels
+//!     CCACHE_FIG6_FRACS=0.25,0.5,1,2,4 ...                 # full x-axis
+
+use ccache::coordinator::{report, run_sweep, scaled_config, BenchKind};
+use ccache::exec::Variant;
+use ccache::workloads::graph::GraphKind;
+
+fn fracs() -> Vec<f64> {
+    match std::env::var("CCACHE_FIG6_FRACS") {
+        Ok(s) => s
+            .split(',')
+            .map(|x| x.parse().expect("bad frac"))
+            .collect(),
+        Err(_) => vec![0.25, 1.0, 4.0],
+    }
+}
+
+fn main() {
+    let cfg = scaled_config();
+    let panels = if std::env::var("CCACHE_FIG6_ALL").is_ok() {
+        BenchKind::fig6_panels()
+    } else {
+        vec![
+            BenchKind::KvAdd,
+            BenchKind::KMeans,
+            BenchKind::PageRank(GraphKind::Rmat),
+            BenchKind::Bfs(GraphKind::Rmat),
+            BenchKind::KvSat,
+            BenchKind::KvCmul,
+            BenchKind::KMeansApprox,
+        ]
+    };
+    let fracs = fracs();
+    for kind in panels {
+        eprintln!("== panel {} ==", kind.name());
+        let mut variants = vec![Variant::Fgl, Variant::Dup, Variant::CCache];
+        if matches!(kind, BenchKind::Bfs(_)) {
+            variants.push(Variant::Atomic);
+        }
+        let sweep = run_sweep(kind, &variants, &fracs, cfg, 42);
+        report::fig6_table(&sweep).print();
+        if matches!(kind, BenchKind::Bfs(_)) {
+            // atomics column (Section 6.2's BFS comparison)
+            for p in &sweep.points {
+                if let Some(s) = p.speedup_vs_fgl(Variant::Atomic) {
+                    println!("  ws {:.2}: atomics speedup vs FGL {s:.2}x", p.frac);
+                }
+            }
+        }
+        println!();
+    }
+}

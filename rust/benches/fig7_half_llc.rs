@@ -1,0 +1,46 @@
+//! Fig 7 — CCache with HALF the LLC vs DUP with the full LLC, input
+//! sized to match the (full) LLC capacity.
+//!
+//! Paper: CCache still wins — 1.1x (PageRank, KV-Store), 1.19x
+//! (K-Means), 1.91x (BFS) — because on-demand duplication uses LLC
+//! capacity better than static duplication.
+//!
+//!     cargo bench --bench fig7_half_llc
+
+use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::exec::Variant;
+use ccache::util::bench::Table;
+use ccache::workloads::graph::GraphKind;
+
+fn main() {
+    let full = scaled_config();
+    let mut half = full;
+    half.llc.size_bytes = full.llc.size_bytes / 2;
+
+    let mut t = Table::new(
+        "Fig 7 — CCache @ half LLC vs DUP @ full LLC (ws = full LLC)",
+        &["benchmark", "DUP(full) Mcyc", "CCACHE(half) Mcyc", "CCache adv", "paper"],
+    );
+    let panels = [
+        (BenchKind::KvAdd, "1.1x"),
+        (BenchKind::KMeans, "1.19x"),
+        (BenchKind::PageRank(GraphKind::Uniform), "1.1x"),
+        (BenchKind::Bfs(GraphKind::Rmat), "1.91x"),
+    ];
+    for (kind, paper) in panels {
+        let bench = sized_benchmark(kind, 1.0, full.llc.size_bytes, 42);
+        eprintln!("running {}...", bench.name());
+        let dup = bench.run(Variant::Dup, full);
+        dup.assert_verified();
+        let cc = bench.run(Variant::CCache, half);
+        cc.assert_verified();
+        t.row(&[
+            bench.name(),
+            format!("{:.1}", dup.cycles() as f64 / 1e6),
+            format!("{:.1}", cc.cycles() as f64 / 1e6),
+            format!("{:.2}x", dup.cycles() as f64 / cc.cycles() as f64),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,54 @@
+//! Fig 8 — characterization: the coherence/memory-system event rates
+//! that explain the Fig 6 speedups.
+//!
+//!  (a) PageRank (random graph): directory accesses per 1k cycles —
+//!      CCache far below FGL; DUP's grows with working set.
+//!  (b) KV store: L3 misses per 1k cycles — CCache 2.5-3x fewer at
+//!      ws = LLC.
+//!  (c) BFS: invalidations per 1k cycles — FGL/atomics high, DUP/CCache
+//!      low.
+//!  (d) K-Means: invalidations per 1k cycles — CCache < DUP < FGL.
+//!
+//!     cargo bench --bench fig8_characterization
+
+use ccache::coordinator::{report, run_sweep, scaled_config, BenchKind};
+use ccache::exec::Variant;
+use ccache::workloads::graph::GraphKind;
+
+fn main() {
+    let cfg = scaled_config();
+    let fracs = [0.25, 1.0, 4.0];
+    let main3 = [Variant::Fgl, Variant::Dup, Variant::CCache];
+
+    // (a) PageRank directory accesses
+    eprintln!("== fig 8a: pagerank-uniform ==");
+    let s = run_sweep(
+        BenchKind::PageRank(GraphKind::Uniform),
+        &main3,
+        &fracs,
+        cfg,
+        42,
+    );
+    report::fig8_table(&s, "directory accesses", |r| r.stats.dir_msgs_per_kc()).print();
+
+    // (b) KV store L3 misses
+    eprintln!("== fig 8b: kvstore ==");
+    let s = run_sweep(BenchKind::KvAdd, &main3, &fracs, cfg, 42);
+    report::fig8_table(&s, "L3 misses", |r| r.stats.llc_misses_per_kc()).print();
+
+    // (c) BFS invalidations (including the atomics variant)
+    eprintln!("== fig 8c: bfs-rmat ==");
+    let s = run_sweep(
+        BenchKind::Bfs(GraphKind::Rmat),
+        &[Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic],
+        &fracs,
+        cfg,
+        42,
+    );
+    report::fig8_table(&s, "invalidations", |r| r.stats.invalidations_per_kc()).print();
+
+    // (d) K-Means invalidations
+    eprintln!("== fig 8d: kmeans ==");
+    let s = run_sweep(BenchKind::KMeans, &main3, &fracs, cfg, 42);
+    report::fig8_table(&s, "invalidations", |r| r.stats.invalidations_per_kc()).print();
+}

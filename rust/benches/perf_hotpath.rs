@@ -1,0 +1,113 @@
+//! Simulator hot-path microbenchmarks (the EXPERIMENTS.md §Perf
+//! instrument): wall-clock throughput of the protocol engine and the
+//! machine interleaver, plus PJRT merge-batch dispatch cost.
+//!
+//!     cargo bench --bench perf_hotpath
+
+use std::time::Instant;
+
+use ccache::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
+use ccache::merge::MergeKind;
+use ccache::sim::addr::Addr;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::machine::{CoreCtx, Machine};
+use ccache::sim::memsys::MemSystem;
+
+fn ops_per_sec(n: u64, secs: f64) -> String {
+    format!("{:.2} Mops/s", n as f64 / secs / 1e6)
+}
+
+fn main() {
+    // 1. raw memsys: coherent read hit path
+    let mut cfg = MachineConfig::default();
+    cfg.cores = 8;
+    let mut s = MemSystem::new(cfg);
+    let a = s.alloc_lines(64 * 1024);
+    let n = 4_000_000u64;
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for i in 0..n {
+        let (v, c) = s.read(0, Addr(a.0 + (i % 1024) * 64));
+        acc = acc.wrapping_add(v as u64 + c);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("memsys read (L1-hit mix):        {}", ops_per_sec(n, dt));
+
+    // 2. raw memsys: COp + merge path
+    s.merge_init(0, 0, MergeKind::AddU32);
+    let t0 = Instant::now();
+    for i in 0..n / 4 {
+        let addr = Addr(a.0 + (i % 1024) * 64);
+        let (v, _) = s.c_read(0, addr, 0);
+        s.c_write(0, addr, v + 1, 0);
+        s.soft_merge(0);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("memsys COp update (+soft_merge): {}", ops_per_sec(n / 4 * 3, dt));
+    std::hint::black_box(acc);
+
+    // 3. machine interleaver: 8 threads, mixed ops
+    let cfg = MachineConfig::default();
+    let machine = Machine::new(cfg);
+    let region = machine.setup(|mem| mem.alloc_lines(64 * 8192));
+    let per_core = 250_000u64;
+    let t0 = Instant::now();
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..8)
+        .map(|core| {
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                let mut x = core as u64 + 1;
+                for _ in 0..per_core {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(97);
+                    let k = (x >> 33) % 8192;
+                    if x & 1 == 0 {
+                        ctx.read_u32(region.add(k * 64));
+                    } else {
+                        ctx.write_u32(region.add(k * 64), x as u32);
+                    }
+                }
+            });
+            f
+        })
+        .collect();
+    machine.run(programs);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("machine 8-core interleaved ops:  {}", ops_per_sec(8 * per_core, dt));
+
+    // 4. merge batch executors
+    let items: Vec<MergeItem> = (0..4096)
+        .map(|i| MergeItem {
+            src: [i as u32; 16],
+            upd: [(i + 7) as u32; 16],
+            mem: [1000; 16],
+            drop_update: false,
+        })
+        .collect();
+    let t0 = Instant::now();
+    let reps = 200;
+    for _ in 0..reps {
+        std::hint::black_box(NativeExecutor.execute(MergeKind::AddU32, &items));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "native merge batch (4096 lines):  {:.1} us/batch",
+        dt / reps as f64 * 1e6
+    );
+
+    if ccache::runtime::artifacts::artifacts_available() {
+        let mut pjrt = ccache::runtime::PjrtMergeExecutor::load_default().unwrap();
+        // warm-up compile
+        pjrt.execute(MergeKind::AddU32, &items[..256]);
+        let t0 = Instant::now();
+        let reps = 20;
+        for _ in 0..reps {
+            std::hint::black_box(pjrt.execute(MergeKind::AddU32, &items));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "pjrt merge batch (4096 lines):    {:.1} us/batch",
+            dt / reps as f64 * 1e6
+        );
+    } else {
+        println!("pjrt merge batch: skipped (run `make artifacts`)");
+    }
+}

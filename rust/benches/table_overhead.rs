@@ -1,0 +1,50 @@
+//! Section 4.7 — area/energy overhead of the CCache structures
+//! (structural bit-count model; CACTI is closed tooling — see DESIGN.md).
+//!
+//!     cargo bench --bench table_overhead
+
+use ccache::sim::config::MachineConfig;
+use ccache::sim::overhead::OverheadModel;
+use ccache::util::bench::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Section 4.7 — CCache structural overhead",
+        &["structure", "bits/core", "vs LLC bits"],
+    );
+    let cfg = MachineConfig::default();
+    let m = OverheadModel::for_config(&cfg);
+    t.row(&[
+        "L1 metadata (ccache+mergeable+type)".into(),
+        m.l1_extra_bits.to_string(),
+        format!("{:.4}%", m.l1_extra_bits as f64 / m.llc_bits as f64 * 100.0),
+    ]);
+    t.row(&[
+        "source buffer (8 entries)".into(),
+        m.src_buf_bits.to_string(),
+        format!("{:.4}%", m.src_buf_frac_of_llc() * 100.0),
+    ]);
+    let mut cfg32 = cfg;
+    cfg32.ccache.source_buffer_entries = 32;
+    let m32 = OverheadModel::for_config(&cfg32);
+    t.row(&[
+        "source buffer (32 entries, paper's CACTI point)".into(),
+        m32.src_buf_bits.to_string(),
+        format!("{:.4}% (paper: ~0.1%)", m32.src_buf_frac_of_llc() * 100.0),
+    ]);
+    t.row(&[
+        "MFRF (4 slots)".into(),
+        m.mfrf_bits.to_string(),
+        format!("{:.6}%", m.mfrf_bits as f64 / m.llc_bits as f64 * 100.0),
+    ]);
+    t.row(&[
+        "merge registers (3 x 64 B)".into(),
+        m.merge_reg_bits.to_string(),
+        format!("{:.6}%", m.merge_reg_bits as f64 / m.llc_bits as f64 * 100.0),
+    ]);
+    t.print();
+    println!(
+        "context-switch state bound (Section 4.6): {} B per core (paper: <= 1 KB)",
+        m.per_core_saved_state_bytes(&cfg)
+    );
+}

@@ -1,0 +1,10 @@
+//! Experiment coordination: benchmark sizing, working-set sweeps and
+//! paper-style reporting. Every figure/table bench target is a thin
+//! wrapper over this module.
+
+pub mod experiment;
+pub mod report;
+pub mod sweep;
+
+pub use experiment::{scaled_config, sized_benchmark, BenchKind, SCALED_LLC_BYTES};
+pub use sweep::{run_sweep, SweepPoint, SweepResult, WS_FRACTIONS};

@@ -1,0 +1,84 @@
+//! Paper-style report rendering for sweeps and characterization runs.
+
+use crate::exec::Variant;
+use crate::util::bench::Table;
+
+use super::sweep::SweepResult;
+
+/// Fig 6-style table: speedup of DUP and CCache relative to FGL per
+/// working-set fraction.
+pub fn fig6_table(sweep: &SweepResult) -> Table {
+    let mut t = Table::new(
+        format!("Fig 6 — {}: speedup vs FGL", sweep.kind.name()),
+        &["ws/LLC", "FGL", "DUP", "CCACHE"],
+    );
+    for p in &sweep.points {
+        let dup = p
+            .speedup_vs_fgl(Variant::Dup)
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "-".into());
+        let cc = p
+            .speedup_vs_fgl(Variant::CCache)
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[format!("{:.2}", p.frac), "1.00x".into(), dup, cc]);
+    }
+    t
+}
+
+/// Fig 8-style characterization table for a metric extractor.
+pub fn fig8_table(
+    sweep: &SweepResult,
+    metric_name: &str,
+    metric: impl Fn(&crate::exec::RunResult) -> f64,
+) -> Table {
+    let variants: Vec<Variant> = sweep
+        .points
+        .first()
+        .map(|p| p.results.iter().map(|r| r.variant).collect())
+        .unwrap_or_default();
+    let mut header: Vec<String> = vec!["ws/LLC".into()];
+    header.extend(variants.iter().map(|v| v.name().to_uppercase()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Fig 8 — {}: {metric_name} per 1k cycles", sweep.kind.name()),
+        &header_refs,
+    );
+    for p in &sweep.points {
+        let mut row = vec![format!("{:.2}", p.frac)];
+        for v in &variants {
+            row.push(
+                p.get(*v)
+                    .map(|r| format!("{:.3}", metric(r)))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::BenchKind;
+    use crate::coordinator::sweep::run_sweep;
+    use crate::sim::config::MachineConfig;
+
+    #[test]
+    fn tables_render_from_sweep() {
+        let mut cfg = MachineConfig::test_small();
+        cfg.cores = 2;
+        let sweep = run_sweep(
+            BenchKind::KvAdd,
+            &[Variant::Fgl, Variant::CCache],
+            &[0.5],
+            cfg,
+            1,
+        );
+        let t = fig6_table(&sweep);
+        assert!(t.render().contains("CCACHE"));
+        let t8 = fig8_table(&sweep, "LLC misses", |r| r.stats.llc_misses_per_kc());
+        assert!(t8.render().contains("LLC misses"));
+    }
+}

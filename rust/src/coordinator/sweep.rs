@@ -1,0 +1,94 @@
+//! Working-set sweeps: the x-axis of Fig 6 / Fig 8.
+
+use crate::exec::{RunResult, Variant};
+use crate::sim::config::MachineConfig;
+
+use super::experiment::{sized_benchmark, BenchKind};
+
+/// The paper's input sizes relative to LLC capacity (Section 6.1).
+pub const WS_FRACTIONS: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub frac: f64,
+    pub results: Vec<RunResult>,
+}
+
+impl SweepPoint {
+    pub fn get(&self, v: Variant) -> Option<&RunResult> {
+        self.results.iter().find(|r| r.variant == v)
+    }
+
+    /// Speedup of `v` relative to the FGL baseline at this point.
+    pub fn speedup_vs_fgl(&self, v: Variant) -> Option<f64> {
+        let base = self.get(Variant::Fgl)?;
+        let other = self.get(v)?;
+        Some(base.cycles() as f64 / other.cycles() as f64)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub kind: BenchKind,
+    pub points: Vec<SweepPoint>,
+}
+
+/// Run `variants` of `kind` at each working-set fraction.
+pub fn run_sweep(
+    kind: BenchKind,
+    variants: &[Variant],
+    fracs: &[f64],
+    cfg: MachineConfig,
+    seed: u64,
+) -> SweepResult {
+    let mut points = Vec::new();
+    for &frac in fracs {
+        let bench = sized_benchmark(kind, frac, cfg.llc.size_bytes, seed);
+        // variants are independent machines: run them on parallel host
+        // threads (results and their determinism are unaffected)
+        let results: Vec<RunResult> = std::thread::scope(|scope| {
+            let handles: Vec<_> = variants
+                .iter()
+                .map(|&v| {
+                    let bench = &bench;
+                    scope.spawn(move || bench.run(v, cfg))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &results {
+            assert!(
+                r.verified,
+                "{}/{} diverged at frac {frac}",
+                r.benchmark,
+                r.variant.name()
+            );
+        }
+        points.push(SweepPoint { frac, results });
+    }
+    SweepResult { kind, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::MachineConfig;
+
+    #[test]
+    fn tiny_sweep_produces_speedups() {
+        let mut cfg = MachineConfig::test_small();
+        cfg.cores = 2;
+        let sweep = run_sweep(
+            BenchKind::KvAdd,
+            &[Variant::Fgl, Variant::CCache],
+            &[0.5, 1.0],
+            cfg,
+            42,
+        );
+        assert_eq!(sweep.points.len(), 2);
+        for p in &sweep.points {
+            assert!(p.speedup_vs_fgl(Variant::CCache).unwrap() > 0.0);
+            assert_eq!(p.speedup_vs_fgl(Variant::Fgl).unwrap(), 1.0);
+        }
+    }
+}

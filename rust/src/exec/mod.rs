@@ -1,0 +1,120 @@
+//! Execution variants: the paper's comparison axes (Section 5.1).
+//!
+//! Every benchmark is implemented in up to five variants over the *same*
+//! simulated machine:
+//! * [`Variant::Cgl`] — coarse-grained locking (one lock for the shared
+//!   structure; Figure 1 baseline, used in ablations)
+//! * [`Variant::Fgl`] — fine-grained locking (lock per element/word)
+//! * [`Variant::Dup`] — static data duplication + reduction at phase end
+//! * [`Variant::CCache`] — the paper's system: COps + merge functions
+//! * [`Variant::Atomic`] — HW atomic RMW (BFS only in the paper)
+//!
+//! Each workload module exposes `run(params, variant, cfg) -> RunResult`;
+//! the result carries the stats and a verification verdict against a
+//! sequential golden run (the serializability check of Section 3).
+
+use crate::sim::stats::Stats;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Cgl,
+    Fgl,
+    Dup,
+    CCache,
+    Atomic,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Cgl => "cgl",
+            Variant::Fgl => "fgl",
+            Variant::Dup => "dup",
+            Variant::CCache => "ccache",
+            Variant::Atomic => "atomic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cgl" => Some(Variant::Cgl),
+            "fgl" => Some(Variant::Fgl),
+            "dup" => Some(Variant::Dup),
+            "ccache" => Some(Variant::CCache),
+            "atomic" | "atomics" => Some(Variant::Atomic),
+            _ => None,
+        }
+    }
+
+    /// The trio every figure compares.
+    pub const MAIN: [Variant; 3] = [Variant::Fgl, Variant::Dup, Variant::CCache];
+}
+
+/// Outcome of one benchmark run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub benchmark: String,
+    pub variant: Variant,
+    pub stats: Stats,
+    /// Did the final memory state match the sequential golden run?
+    pub verified: bool,
+    /// Optional quality metric (approximate K-Means reports intra-cluster
+    /// distance degradation here).
+    pub quality: Option<f64>,
+}
+
+impl RunResult {
+    pub fn cycles(&self) -> u64 {
+        self.stats.total_cycles()
+    }
+
+    pub fn assert_verified(&self) -> &Self {
+        assert!(
+            self.verified,
+            "{}/{}: final state diverged from sequential golden run",
+            self.benchmark,
+            self.variant.name()
+        );
+        self
+    }
+}
+
+/// Speedup of `other` relative to `base` (cycles ratio, >1 = faster).
+pub fn speedup(base: &RunResult, other: &RunResult) -> f64 {
+    base.cycles() as f64 / other.cycles() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in [
+            Variant::Cgl,
+            Variant::Fgl,
+            Variant::Dup,
+            Variant::CCache,
+            Variant::Atomic,
+        ] {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |cyc: u64| RunResult {
+            benchmark: "b".into(),
+            variant: Variant::Fgl,
+            stats: {
+                let mut s = Stats::new(1);
+                s.core_cycles = vec![cyc];
+                s
+            },
+            verified: true,
+            quality: None,
+        };
+        assert_eq!(speedup(&mk(200), &mk(100)), 2.0);
+    }
+}

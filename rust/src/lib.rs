@@ -1,0 +1,38 @@
+//! # ccache-rs
+//!
+//! Reproduction of *"Flexible Support for Fast Parallel Commutative
+//! Updates"* (Balaji, Tirumala, Lucia — CMU, 2017): **CCache**, an
+//! architecture for on-demand privatization of commutatively-updated data
+//! with programmer-defined software merge functions.
+//!
+//! The crate is the Layer-3 rust side of a three-layer stack:
+//!
+//! * [`sim`] — execution-driven multicore simulator: set-associative
+//!   caches, directory MESI coherence, and the paper's CCache hardware
+//!   extensions (CCache/mergeable bits, source buffer, MFRF, merge
+//!   registers, merge-on-evict and dirty-merge optimizations).
+//! * [`merge`] — the software-defined merge-function library (add,
+//!   saturating add, complex multiply, bitwise OR, min/max, approximate).
+//! * [`workloads`] — the paper's four benchmarks (key-value store,
+//!   K-Means, PageRank, BFS) plus the graph substrate and generators.
+//! * [`exec`] — the per-benchmark execution variants the paper compares:
+//!   coarse/fine-grained locking, static duplication, atomics, CCache.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   merge and compute kernels (`artifacts/*.hlo.txt`) and executes them
+//!   from the rust hot path (Python never runs at simulation time).
+//! * [`coordinator`] — experiment orchestration: sweeps, per-figure
+//!   drivers, report tables.
+//! * [`util`] — in-house RNG, CLI parsing, bench harness and
+//!   property-test driver (external crates are unavailable offline).
+
+pub mod coordinator;
+pub mod exec;
+pub mod merge;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+pub use sim::config::{CCacheConfig, MachineConfig};
+pub use sim::machine::Machine;
+pub use sim::stats::Stats;

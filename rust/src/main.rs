@@ -1,0 +1,179 @@
+//! ccache — CLI for the CCache reproduction.
+//!
+//! Subcommands:
+//!   run      — run one benchmark/variant, print stats + verification
+//!   sweep    — working-set sweep (Fig 6-style table) for one benchmark
+//!   overhead — Section 4.7 structural overhead report
+//!   runtime  — PJRT artifact smoke check (loads + executes merge_add)
+//!   list     — enumerate benchmarks and variants
+//!
+//! Examples:
+//!   ccache run --bench kvstore --variant ccache --keys 65536
+//!   ccache sweep --bench pagerank-rmat
+//!   ccache runtime
+
+use ccache::coordinator::{report, run_sweep, scaled_config, sized_benchmark, BenchKind, WS_FRACTIONS};
+use ccache::exec::Variant;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::overhead::OverheadModel;
+use ccache::util::cli::Args;
+use ccache::workloads::graph::GraphKind;
+
+fn parse_bench(name: &str) -> Option<BenchKind> {
+    match name {
+        "kvstore" | "kv" => Some(BenchKind::KvAdd),
+        "kvstore-sat" => Some(BenchKind::KvSat),
+        "kvstore-cmul" => Some(BenchKind::KvCmul),
+        "kmeans" => Some(BenchKind::KMeans),
+        "kmeans-approx" => Some(BenchKind::KMeansApprox),
+        _ => {
+            if let Some(g) = name.strip_prefix("pagerank-") {
+                GraphKind::parse(g).map(BenchKind::PageRank)
+            } else if let Some(g) = name.strip_prefix("bfs-") {
+                GraphKind::parse(g).map(BenchKind::Bfs)
+            } else if name == "pagerank" {
+                Some(BenchKind::PageRank(GraphKind::Uniform))
+            } else if name == "bfs" {
+                Some(BenchKind::Bfs(GraphKind::Rmat))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+fn main() {
+    let args = Args::new("ccache — CCache paper reproduction CLI")
+        .opt("bench", "kvstore", "benchmark: kvstore[-sat|-cmul], kmeans[-approx], pagerank-<rmat|ssca|uniform>, bfs-<rmat|uniform>")
+        .opt("variant", "ccache", "cgl|fgl|dup|ccache|atomic")
+        .opt("frac", "1.0", "working set as a fraction of LLC capacity")
+        .opt("seed", "42", "workload RNG seed")
+        .opt("cores", "0", "override core count (0 = config default)")
+        .flag("full-size", "use the paper's full Table 2 geometry")
+        .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
+        .flag("no-dirty-merge", "disable the dirty-merge optimization")
+        .flag("verbose", "print full stats")
+        .parse();
+
+    let cmd = args
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "run".to_string());
+
+    let mut cfg: MachineConfig = if args.has("full-size") {
+        MachineConfig::default()
+    } else {
+        scaled_config()
+    };
+    if args.has("no-merge-on-evict") {
+        cfg.ccache.merge_on_evict = false;
+    }
+    if args.has("no-dirty-merge") {
+        cfg.ccache.dirty_merge = false;
+    }
+    let cores = args.get_usize("cores");
+    if cores > 0 {
+        cfg.cores = cores;
+    }
+
+    match cmd.as_str() {
+        "run" => {
+            let kind = parse_bench(&args.get("bench"))
+                .unwrap_or_else(|| panic!("unknown benchmark {}", args.get("bench")));
+            let variant = Variant::parse(&args.get("variant"))
+                .unwrap_or_else(|| panic!("unknown variant {}", args.get("variant")));
+            let bench = sized_benchmark(
+                kind,
+                args.get_f64("frac"),
+                cfg.llc.size_bytes,
+                args.get_u64("seed"),
+            );
+            eprintln!(
+                "running {} / {} on {} cores (LLC {} KiB)...",
+                bench.name(),
+                variant.name(),
+                cfg.cores,
+                cfg.llc.size_bytes / 1024
+            );
+            let r = bench.run(variant, cfg);
+            println!(
+                "{}/{}: {} cycles, verified={}{}",
+                r.benchmark,
+                r.variant.name(),
+                r.cycles(),
+                r.verified,
+                r.quality
+                    .map(|q| format!(", quality degradation {:.1}%", q * 100.0))
+                    .unwrap_or_default()
+            );
+            if args.has("verbose") {
+                print!("{}", r.stats);
+            }
+            if !r.verified {
+                std::process::exit(1);
+            }
+        }
+        "sweep" => {
+            let kind = parse_bench(&args.get("bench"))
+                .unwrap_or_else(|| panic!("unknown benchmark {}", args.get("bench")));
+            let sweep = run_sweep(
+                kind,
+                &Variant::MAIN,
+                &WS_FRACTIONS,
+                cfg,
+                args.get_u64("seed"),
+            );
+            report::fig6_table(&sweep).print();
+        }
+        "overhead" => {
+            let m = OverheadModel::for_config(&cfg);
+            println!("CCache structural overhead (Section 4.7):");
+            println!("  L1 extra bits/line : {}", m.l1_extra_bits_per_line);
+            println!("  L1 extra bits total: {}", m.l1_extra_bits);
+            println!("  source buffer bits : {}", m.src_buf_bits);
+            println!("  MFRF bits          : {}", m.mfrf_bits);
+            println!("  merge reg bits     : {}", m.merge_reg_bits);
+            println!(
+                "  src buffer / LLC   : {:.4}% (paper: ~0.1% for 32 entries)",
+                m.src_buf_frac_of_llc() * 100.0
+            );
+            println!(
+                "  ctx-switch state   : {} B (paper: <= 1 KB)",
+                m.per_core_saved_state_bytes(&cfg)
+            );
+        }
+        "runtime" => match ccache::runtime::Engine::load_default() {
+            Ok(mut e) => {
+                println!("PJRT platform: {}", e.platform());
+                let entries: Vec<String> =
+                    e.manifest().entries.keys().cloned().collect();
+                for entry in entries {
+                    match e.executable(&entry) {
+                        Ok(_) => println!("  {entry}: compiled OK"),
+                        Err(err) => {
+                            println!("  {entry}: FAILED: {err:#}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                println!("all artifacts loadable");
+            }
+            Err(e) => {
+                eprintln!("runtime unavailable: {e:#}\n(run `make artifacts`)");
+                std::process::exit(1);
+            }
+        },
+        "list" => {
+            println!("benchmarks:");
+            for k in BenchKind::fig6_panels() {
+                println!("  {}", k.name());
+            }
+            println!("variants: cgl fgl dup ccache atomic");
+        }
+        other => {
+            eprintln!("unknown command {other}; use run|sweep|overhead|runtime|list");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Batched merge execution.
+//!
+//! The CCache hardware merges line-by-line through the merge registers;
+//! in software we batch pending line merges and hand the whole `[B, 16]`
+//! tile to one executor call. Two executors implement [`BatchExecutor`]:
+//! the native loop (here) and the PJRT/Pallas path
+//! (`runtime::merge_exec::PjrtMergeExecutor`). They must agree —
+//! integration tests cross-check them.
+
+use super::funcs::apply_line;
+use super::{LineData, MergeKind};
+
+/// One pending line merge.
+#[derive(Clone, Debug)]
+pub struct MergeItem {
+    pub src: LineData,
+    pub upd: LineData,
+    pub mem: LineData,
+    /// Approximate kinds: drop this line's update (sampled by the caller).
+    pub drop_update: bool,
+}
+
+/// Executes a homogeneous batch of line merges, returning the new memory
+/// values in order.
+pub trait BatchExecutor {
+    fn execute(&mut self, kind: MergeKind, items: &[MergeItem]) -> Vec<LineData>;
+
+    /// Executor label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Reference executor: native per-line loop.
+#[derive(Default)]
+pub struct NativeExecutor;
+
+impl BatchExecutor for NativeExecutor {
+    fn execute(&mut self, kind: MergeKind, items: &[MergeItem]) -> Vec<LineData> {
+        items
+            .iter()
+            .map(|it| apply_line(kind, &it.src, &it.upd, &it.mem, it.drop_update))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::funcs::line_from_f32;
+    use crate::merge::LINE_WORDS;
+
+    #[test]
+    fn native_executor_matches_apply_line() {
+        let items: Vec<MergeItem> = (0..5)
+            .map(|i| MergeItem {
+                src: [i as u32; LINE_WORDS],
+                upd: [(i + 3) as u32; LINE_WORDS],
+                mem: [100; LINE_WORDS],
+                drop_update: false,
+            })
+            .collect();
+        let out = NativeExecutor.execute(MergeKind::AddU32, &items);
+        for (i, line) in out.iter().enumerate() {
+            assert_eq!(line[0], 103, "item {i}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        assert!(NativeExecutor.execute(MergeKind::AddU32, &[]).is_empty());
+    }
+
+    #[test]
+    fn approx_batch_respects_per_item_drop() {
+        let mk = |drop| MergeItem {
+            src: line_from_f32(&[0.0; LINE_WORDS]),
+            upd: line_from_f32(&[2.0; LINE_WORDS]),
+            mem: line_from_f32(&[1.0; LINE_WORDS]),
+            drop_update: drop,
+        };
+        let out = NativeExecutor.execute(
+            MergeKind::ApproxAddF32 { drop_p: 0.5 },
+            &[mk(false), mk(true)],
+        );
+        assert_eq!(f32::from_bits(out[0][0]), 3.0);
+        assert_eq!(f32::from_bits(out[1][0]), 1.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Native reference implementations of the merge functions.
+//!
+//! These are the rust mirror of `python/compile/kernels/ref.py`; the PJRT
+//! batch path (`runtime::merge_exec`) must agree with them bit-for-bit on
+//! integers and to f32 tolerance on floats (covered by integration tests).
+
+use super::{bits_f32, f32_bits, LineData, MergeKind, LINE_WORDS};
+
+/// Apply `kind` to one line: returns the new memory value.
+///
+/// `drop_update` is consulted only by approximate kinds: when true the
+/// line's update is discarded (the caller samples the binomial, keeping
+/// the native and PJRT paths in agreement).
+pub fn apply_line(
+    kind: MergeKind,
+    src: &LineData,
+    upd: &LineData,
+    mem: &LineData,
+    drop_update: bool,
+) -> LineData {
+    let mut out = *mem;
+    match kind {
+        MergeKind::AddU32 => {
+            for i in 0..LINE_WORDS {
+                out[i] = mem[i]
+                    .wrapping_add(upd[i].wrapping_sub(src[i]));
+            }
+        }
+        MergeKind::AddF32 => {
+            for i in 0..LINE_WORDS {
+                out[i] = f32_bits(
+                    bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i])),
+                );
+            }
+        }
+        MergeKind::SatAddU32 { max } => {
+            for i in 0..LINE_WORDS {
+                let delta = upd[i].wrapping_sub(src[i]);
+                out[i] = mem[i].saturating_add(delta).min(max);
+            }
+        }
+        MergeKind::SatAddF32 { max } => {
+            for i in 0..LINE_WORDS {
+                let v = bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i]));
+                out[i] = f32_bits(v.min(max));
+            }
+        }
+        MergeKind::CmulF32 => {
+            for p in 0..LINE_WORDS / 2 {
+                let (sr, si) = (bits_f32(src[2 * p]), bits_f32(src[2 * p + 1]));
+                let (ur, ui) = (bits_f32(upd[2 * p]), bits_f32(upd[2 * p + 1]));
+                let (mr, mi) = (bits_f32(mem[2 * p]), bits_f32(mem[2 * p + 1]));
+                let den = sr * sr + si * si;
+                let fr = (ur * sr + ui * si) / den;
+                let fi = (ui * sr - ur * si) / den;
+                out[2 * p] = f32_bits(mr * fr - mi * fi);
+                out[2 * p + 1] = f32_bits(mr * fi + mi * fr);
+            }
+        }
+        MergeKind::BitOr => {
+            for i in 0..LINE_WORDS {
+                out[i] = mem[i] | upd[i];
+            }
+        }
+        MergeKind::MinF32 => {
+            for i in 0..LINE_WORDS {
+                out[i] = f32_bits(bits_f32(mem[i]).min(bits_f32(upd[i])));
+            }
+        }
+        MergeKind::MaxF32 => {
+            for i in 0..LINE_WORDS {
+                out[i] = f32_bits(bits_f32(mem[i]).max(bits_f32(upd[i])));
+            }
+        }
+        MergeKind::ApproxAddF32 { .. } => {
+            if !drop_update {
+                for i in 0..LINE_WORDS {
+                    out[i] = f32_bits(
+                        bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i])),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: line of f32 values.
+pub fn line_from_f32(vals: &[f32; LINE_WORDS]) -> LineData {
+    let mut out = [0u32; LINE_WORDS];
+    for i in 0..LINE_WORDS {
+        out[i] = f32_bits(vals[i]);
+    }
+    out
+}
+
+pub fn line_to_f32(line: &LineData) -> [f32; LINE_WORDS] {
+    let mut out = [0f32; LINE_WORDS];
+    for i in 0..LINE_WORDS {
+        out[i] = bits_f32(line[i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_line(rng: &mut Rng) -> LineData {
+        let mut l = [0u32; LINE_WORDS];
+        for w in l.iter_mut() {
+            *w = rng.next_u32();
+        }
+        l
+    }
+
+    fn rand_f32_line(rng: &mut Rng, lo: f32, hi: f32) -> LineData {
+        let mut l = [0f32; LINE_WORDS];
+        for w in l.iter_mut() {
+            *w = rng.f32_range(lo, hi);
+        }
+        line_from_f32(&l)
+    }
+
+    #[test]
+    fn add_u32_applies_delta() {
+        let src = [10u32; LINE_WORDS];
+        let upd = [17u32; LINE_WORDS];
+        let mem = [100u32; LINE_WORDS];
+        let out = apply_line(MergeKind::AddU32, &src, &upd, &mem, false);
+        assert_eq!(out, [107u32; LINE_WORDS]);
+    }
+
+    #[test]
+    fn add_u32_two_merges_commute() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let mem0 = rand_line(&mut rng);
+            let src = rand_line(&mut rng);
+            let (a, b) = (rand_line(&mut rng), rand_line(&mut rng));
+            let ab = apply_line(
+                MergeKind::AddU32,
+                &src,
+                &b,
+                &apply_line(MergeKind::AddU32, &src, &a, &mem0, false),
+                false,
+            );
+            let ba = apply_line(
+                MergeKind::AddU32,
+                &src,
+                &a,
+                &apply_line(MergeKind::AddU32, &src, &b, &mem0, false),
+                false,
+            );
+            assert_eq!(ab, ba);
+        }
+    }
+
+    #[test]
+    fn sat_add_clamps_at_max() {
+        let src = [0u32; LINE_WORDS];
+        let upd = [50u32; LINE_WORDS];
+        let mem = [80u32; LINE_WORDS];
+        let out = apply_line(MergeKind::SatAddU32 { max: 100 }, &src, &upd, &mem, false);
+        assert_eq!(out, [100u32; LINE_WORDS]);
+    }
+
+    #[test]
+    fn sat_add_observes_memory_not_update() {
+        // memory already at max; positive delta must not push past it
+        let src = [0u32; LINE_WORDS];
+        let upd = [5u32; LINE_WORDS];
+        let mem = [100u32; LINE_WORDS];
+        let out = apply_line(MergeKind::SatAddU32 { max: 100 }, &src, &upd, &mem, false);
+        assert_eq!(out, [100u32; LINE_WORDS]);
+    }
+
+    #[test]
+    fn bitor_merges_bits_idempotently() {
+        let src = [0u32; LINE_WORDS];
+        let upd = [0b1010u32; LINE_WORDS];
+        let mem = [0b0101u32; LINE_WORDS];
+        let once = apply_line(MergeKind::BitOr, &src, &upd, &mem, false);
+        assert_eq!(once, [0b1111u32; LINE_WORDS]);
+        let twice = apply_line(MergeKind::BitOr, &src, &upd, &once, false);
+        assert_eq!(twice, once);
+    }
+
+    #[test]
+    fn cmul_applies_multiplicative_factor() {
+        // src = 1+0i, upd = 2+0i (factor 2), mem = 3+4i -> 6+8i
+        let mut src = [0f32; LINE_WORDS];
+        let mut upd = [0f32; LINE_WORDS];
+        let mut mem = [0f32; LINE_WORDS];
+        for p in 0..LINE_WORDS / 2 {
+            src[2 * p] = 1.0;
+            upd[2 * p] = 2.0;
+            mem[2 * p] = 3.0;
+            mem[2 * p + 1] = 4.0;
+        }
+        let out = apply_line(
+            MergeKind::CmulF32,
+            &line_from_f32(&src),
+            &line_from_f32(&upd),
+            &line_from_f32(&mem),
+            false,
+        );
+        let o = line_to_f32(&out);
+        for p in 0..LINE_WORDS / 2 {
+            assert!((o[2 * p] - 6.0).abs() < 1e-5);
+            assert!((o[2 * p + 1] - 8.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cmul_merges_commute() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let mem0 = rand_f32_line(&mut rng, -4.0, 4.0);
+            let src = rand_f32_line(&mut rng, 1.0, 4.0); // away from zero
+            let a = rand_f32_line(&mut rng, 1.0, 4.0);
+            let b = rand_f32_line(&mut rng, 1.0, 4.0);
+            let ab = apply_line(
+                MergeKind::CmulF32,
+                &src,
+                &b,
+                &apply_line(MergeKind::CmulF32, &src, &a, &mem0, false),
+                false,
+            );
+            let ba = apply_line(
+                MergeKind::CmulF32,
+                &src,
+                &a,
+                &apply_line(MergeKind::CmulF32, &src, &b, &mem0, false),
+                false,
+            );
+            let (fab, fba) = (line_to_f32(&ab), line_to_f32(&ba));
+            for i in 0..LINE_WORDS {
+                assert!(
+                    (fab[i] - fba[i]).abs() <= 1e-3 * (1.0 + fab[i].abs()),
+                    "{} vs {}",
+                    fab[i],
+                    fba[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn min_max_idempotent() {
+        let mut rng = Rng::new(5);
+        let src = rand_f32_line(&mut rng, -10.0, 10.0);
+        let upd = rand_f32_line(&mut rng, -10.0, 10.0);
+        let mem = rand_f32_line(&mut rng, -10.0, 10.0);
+        for kind in [MergeKind::MinF32, MergeKind::MaxF32] {
+            let once = apply_line(kind, &src, &upd, &mem, false);
+            let twice = apply_line(kind, &src, &upd, &once, false);
+            assert_eq!(once, twice);
+        }
+    }
+
+    #[test]
+    fn approx_drops_update_when_told() {
+        let src = line_from_f32(&[0f32; LINE_WORDS]);
+        let upd = line_from_f32(&[5f32; LINE_WORDS]);
+        let mem = line_from_f32(&[1f32; LINE_WORDS]);
+        let kind = MergeKind::ApproxAddF32 { drop_p: 0.5 };
+        assert_eq!(apply_line(kind, &src, &upd, &mem, true), mem);
+        let kept = apply_line(kind, &src, &upd, &mem, false);
+        assert_eq!(line_to_f32(&kept)[0], 6.0);
+    }
+
+    #[test]
+    fn f32_add_matches_scalar_math() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let src = rand_f32_line(&mut rng, -100.0, 100.0);
+            let upd = rand_f32_line(&mut rng, -100.0, 100.0);
+            let mem = rand_f32_line(&mut rng, -100.0, 100.0);
+            let out = apply_line(MergeKind::AddF32, &src, &upd, &mem, false);
+            let (s, u, m, o) = (
+                line_to_f32(&src),
+                line_to_f32(&upd),
+                line_to_f32(&mem),
+                line_to_f32(&out),
+            );
+            for i in 0..LINE_WORDS {
+                assert_eq!(o[i], m[i] + (u[i] - s[i]));
+            }
+        }
+    }
+}

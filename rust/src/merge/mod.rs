@@ -1,0 +1,90 @@
+//! Software-defined merge functions (paper Sections 3.2, 4.5, 6.3).
+//!
+//! A merge function combines a core's preserved *source* copy and its
+//! *updated* copy with the *in-memory* copy of one 64-byte cache line,
+//! producing the new memory value. The paper's central claim is that
+//! keeping these functions in **software** (vs. COUP's fixed hardware set)
+//! makes commutative-update acceleration broadly applicable: saturating
+//! arithmetic, complex multiplication, bitwise logic, approximate merging.
+//!
+//! Two execution paths compute identical results:
+//! * [`funcs`] — native rust reference implementations, used per-merge on
+//!   the simulator's critical path;
+//! * [`crate::runtime`] — the AOT-compiled JAX/Pallas batch kernels,
+//!   executed via PJRT for array-scale reductions (DUP) and deferred
+//!   merge batches.
+
+pub mod batch;
+pub mod funcs;
+
+/// 64-byte cache line as 16 32-bit words — the merge-register granularity.
+pub const LINE_WORDS: usize = 16;
+pub type LineData = [u32; LINE_WORDS];
+
+pub const ZERO_LINE: LineData = [0u32; LINE_WORDS];
+
+/// The registered merge behaviours. `merge_init` installs one of these
+/// into a core's merge-function register file (MFRF) slot; each CData
+/// line carries the slot index in its merge-type field.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MergeKind {
+    /// `mem += upd - src` over u32 lanes (wrapping) — the key-value store.
+    AddU32,
+    /// `mem += upd - src` over f32 lanes — K-Means, PageRank.
+    AddF32,
+    /// Additive with saturation at `max` (u32 lanes). The clamp observes
+    /// the merged *memory* value (Section 4.5).
+    SatAddU32 { max: u32 },
+    /// Additive with saturation at `max` (f32 lanes).
+    SatAddF32 { max: f32 },
+    /// Complex multiply: lanes are 8 interleaved (re, im) f32 pairs;
+    /// `mem *= upd / src`.
+    CmulF32,
+    /// `mem |= upd` — BFS bitmaps. Idempotent.
+    BitOr,
+    /// `mem = min(mem, upd)` over f32 lanes. Idempotent.
+    MinF32,
+    /// `mem = max(mem, upd)` over f32 lanes. Idempotent.
+    MaxF32,
+    /// Additive over f32 lanes, but each line's update is dropped with
+    /// probability `drop_p` (loop-perforation-style approximate merge,
+    /// Section 6.3). The drop decision comes from the caller-provided
+    /// decision value so both execution paths agree.
+    ApproxAddF32 { drop_p: f32 },
+}
+
+impl MergeKind {
+    /// Stable name used by the CLI, reports and the artifact registry.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeKind::AddU32 => "add_u32",
+            MergeKind::AddF32 => "add_f32",
+            MergeKind::SatAddU32 { .. } => "sat_add_u32",
+            MergeKind::SatAddF32 { .. } => "sat_add_f32",
+            MergeKind::CmulF32 => "cmul_f32",
+            MergeKind::BitOr => "bitor",
+            MergeKind::MinF32 => "min_f32",
+            MergeKind::MaxF32 => "max_f32",
+            MergeKind::ApproxAddF32 { .. } => "approx_add_f32",
+        }
+    }
+
+    /// Whether repeated merging of the same updated copy is harmless.
+    /// (Idempotent merges need no source copy to be correct.)
+    pub fn idempotent(&self) -> bool {
+        matches!(
+            self,
+            MergeKind::BitOr | MergeKind::MinF32 | MergeKind::MaxF32
+        )
+    }
+}
+
+#[inline]
+pub fn f32_bits(v: f32) -> u32 {
+    v.to_bits()
+}
+
+#[inline]
+pub fn bits_f32(v: u32) -> f32 {
+    f32::from_bits(v)
+}

@@ -1,0 +1,165 @@
+//! Artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! aot.py writes `artifacts/manifest.txt`; this module parses it and
+//! checks the constants the rust wrappers are compiled against. A
+//! mismatch (e.g. someone re-exported with a different batch size) fails
+//! loudly at load time instead of producing shape errors deep in PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Rust-side copies of the aot.py shape contract.
+pub const MERGE_BATCH: usize = 256;
+pub const LINE_WORDS: usize = 16;
+pub const KMEANS_N: usize = 2048;
+pub const KMEANS_D: usize = 16;
+pub const KMEANS_K: usize = 16;
+pub const PAGERANK_V: usize = 1024;
+
+/// One entry's argument signature, e.g. `float32[256,16]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSig {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, Vec<ArgSig>>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt` and validate the shape contract.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        let mut entries = BTreeMap::new();
+        let mut kv: BTreeMap<String, String> = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            let (name, args) = line
+                .split_once(' ')
+                .with_context(|| format!("malformed manifest line: {line}"))?;
+            let sigs = args
+                .split(';')
+                .map(parse_sig)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(name.to_string(), sigs);
+        }
+        let m = Self {
+            dir: dir.to_path_buf(),
+            entries,
+        };
+        m.validate(&kv)?;
+        Ok(m)
+    }
+
+    fn validate(&self, kv: &BTreeMap<String, String>) -> Result<()> {
+        let expect = |key: &str, want: String| -> Result<()> {
+            match kv.get(key) {
+                Some(v) if *v == want => Ok(()),
+                Some(v) => bail!("manifest {key}={v}, rust expects {want}; re-run make artifacts"),
+                None => bail!("manifest missing {key}"),
+            }
+        };
+        expect("merge_batch", MERGE_BATCH.to_string())?;
+        expect("line_words", LINE_WORDS.to_string())?;
+        expect("kmeans", format!("{KMEANS_N},{KMEANS_D},{KMEANS_K}"))?;
+        expect("pagerank_v", PAGERANK_V.to_string())?;
+        for required in [
+            "merge_add",
+            "merge_sat",
+            "merge_cmul",
+            "merge_bitor",
+            "merge_min",
+            "merge_max",
+            "merge_approx",
+            "kmeans_step",
+            "pagerank_iter",
+        ] {
+            if !self.entries.contains_key(required) {
+                bail!("manifest missing entry {required}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> PathBuf {
+        self.dir.join(format!("{entry}.hlo.txt"))
+    }
+}
+
+fn parse_sig(s: &str) -> Result<ArgSig> {
+    let (dtype, rest) = s
+        .split_once('[')
+        .with_context(|| format!("malformed arg sig: {s}"))?;
+    let dims = rest
+        .trim_end_matches(']')
+        .split(',')
+        .filter(|d| !d.is_empty())
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArgSig {
+        dtype: dtype.to_string(),
+        dims,
+    })
+}
+
+/// Locate the artifacts directory: `$CCACHE_ARTIFACTS`, else
+/// `<manifest dir>/artifacts` (the repo layout), else `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CCACHE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if repo.exists() {
+        return repo;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True when `make artifacts` has been run (used by tests to skip
+/// gracefully when the AOT step hasn't happened).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sig_roundtrip() {
+        let s = parse_sig("float32[256,16]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.dims, vec![256, 16]);
+        let s = parse_sig("int32[2048]").unwrap();
+        assert_eq!(s.dims, vec![2048]);
+        assert!(parse_sig("garbage").is_err());
+    }
+
+    #[test]
+    fn manifest_loads_when_artifacts_present() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        assert_eq!(m.entries["merge_add"].len(), 3);
+        assert_eq!(m.entries["merge_add"][0].dims, vec![MERGE_BATCH, LINE_WORDS]);
+        assert_eq!(m.entries["merge_sat"].len(), 4);
+        assert!(m.hlo_path("merge_add").exists());
+    }
+}

@@ -1,0 +1,190 @@
+//! The PJRT engine: compiles each artifact once and exposes typed
+//! execution wrappers for the workload kernels.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{
+    Manifest, KMEANS_D, KMEANS_K, KMEANS_N, PAGERANK_V,
+};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client. Executables are
+    /// compiled lazily on first use and cached.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    /// Convenience: load from the default artifacts location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::artifacts::default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for an entry.
+    pub fn executable(&mut self, entry: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(entry) {
+            let path = self.manifest.hlo_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {entry}"))?;
+            self.exes.insert(entry.to_string(), exe);
+        }
+        Ok(&self.exes[entry])
+    }
+
+    /// Execute an entry with literal inputs; returns the decomposed
+    /// result tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, entry: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {entry}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    // ------------------------------------------------------------------
+    // typed workload kernels
+    // ------------------------------------------------------------------
+
+    /// One K-Means iteration of numeric work (Pallas assignment + one-hot
+    /// accumulation). Pads `points` up to the AOT shape with masked rows
+    /// and `centroids` with +inf sentinels (never nearest).
+    ///
+    /// Returns (assign, sums, counts) truncated to the real sizes.
+    pub fn kmeans_step(
+        &mut self,
+        points: &[[f32; KMEANS_D]],
+        centroids: &[[f32; KMEANS_D]],
+    ) -> Result<(Vec<i32>, Vec<[f32; KMEANS_D]>, Vec<f32>)> {
+        let n = points.len();
+        let k = centroids.len();
+        anyhow::ensure!(n <= KMEANS_N, "points {n} > AOT shape {KMEANS_N}");
+        anyhow::ensure!(k <= KMEANS_K, "clusters {k} > AOT shape {KMEANS_K}");
+
+        let mut flat_p = vec![0f32; KMEANS_N * KMEANS_D];
+        for (i, p) in points.iter().enumerate() {
+            flat_p[i * KMEANS_D..(i + 1) * KMEANS_D].copy_from_slice(p);
+        }
+        let mut flat_c = vec![1e30f32; KMEANS_K * KMEANS_D];
+        for (i, c) in centroids.iter().enumerate() {
+            flat_c[i * KMEANS_D..(i + 1) * KMEANS_D].copy_from_slice(c);
+        }
+        let mut mask = vec![0f32; KMEANS_N];
+        mask[..n].iter_mut().for_each(|m| *m = 1.0);
+
+        let p_lit = xla::Literal::vec1(&flat_p)
+            .reshape(&[KMEANS_N as i64, KMEANS_D as i64])?;
+        let c_lit = xla::Literal::vec1(&flat_c)
+            .reshape(&[KMEANS_K as i64, KMEANS_D as i64])?;
+        let m_lit = xla::Literal::vec1(&mask);
+
+        let out = self.execute("kmeans_step", &[p_lit, c_lit, m_lit])?;
+        anyhow::ensure!(out.len() == 3, "kmeans_step returned {} values", out.len());
+        let assign: Vec<i32> = out[0].to_vec::<i32>()?[..n].to_vec();
+        let sums_flat = out[1].to_vec::<f32>()?;
+        let counts: Vec<f32> = out[2].to_vec::<f32>()?[..k].to_vec();
+        let sums: Vec<[f32; KMEANS_D]> = (0..k)
+            .map(|c| {
+                let mut row = [0f32; KMEANS_D];
+                row.copy_from_slice(&sums_flat[c * KMEANS_D..(c + 1) * KMEANS_D]);
+                row
+            })
+            .collect();
+        Ok((assign, sums, counts))
+    }
+
+    /// One damped PageRank iteration on a dense normalized adjacency.
+    /// `adj[dst][src]` = 1.0 if edge src->dst. Sizes padded to the AOT V.
+    pub fn pagerank_iter(
+        &mut self,
+        adj: &[Vec<f32>],
+        rank: &[f32],
+        out_deg_inv: &[f32],
+    ) -> Result<Vec<f32>> {
+        let v = rank.len();
+        anyhow::ensure!(v <= PAGERANK_V, "V {v} > AOT shape {PAGERANK_V}");
+        let mut flat = vec![0f32; PAGERANK_V * PAGERANK_V];
+        for (d, row) in adj.iter().enumerate() {
+            for (s, &x) in row.iter().enumerate() {
+                flat[d * PAGERANK_V + s] = x;
+            }
+        }
+        let mut r = vec![0f32; PAGERANK_V];
+        r[..v].copy_from_slice(rank);
+        let mut inv = vec![0f32; PAGERANK_V];
+        inv[..v].copy_from_slice(out_deg_inv);
+
+        let a_lit = xla::Literal::vec1(&flat)
+            .reshape(&[PAGERANK_V as i64, PAGERANK_V as i64])?;
+        let r_lit = xla::Literal::vec1(&r);
+        let i_lit = xla::Literal::vec1(&inv);
+        let out = self.execute("pagerank_iter", &[a_lit, r_lit, i_lit])?;
+        anyhow::ensure!(out.len() == 1);
+        Ok(out[0].to_vec::<f32>()?[..v].to_vec())
+        // note: the (1-d)/V damping constant inside the kernel uses the
+        // padded V; callers compare against a reference computed the same
+        // way (see tests) or rescale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifacts::artifacts_available;
+    use super::*;
+
+    #[test]
+    fn engine_compiles_and_runs_merge_add() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut e = Engine::load_default().unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu")
+            || e.platform().to_lowercase().contains("host"));
+        let b = super::super::artifacts::MERGE_BATCH;
+        let w = super::super::artifacts::LINE_WORDS;
+        let src = xla::Literal::vec1(&vec![1f32; b * w])
+            .reshape(&[b as i64, w as i64])
+            .unwrap();
+        let upd = xla::Literal::vec1(&vec![4f32; b * w])
+            .reshape(&[b as i64, w as i64])
+            .unwrap();
+        let mem = xla::Literal::vec1(&vec![10f32; b * w])
+            .reshape(&[b as i64, w as i64])
+            .unwrap();
+        let out = e.execute("merge_add", &[src, upd, mem]).unwrap();
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert!(v.iter().all(|&x| x == 13.0));
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT-backed batch merge executor.
+//!
+//! Implements [`BatchExecutor`] over the Pallas merge kernels: batches
+//! are padded to the AOT batch size (rows are independent, padding
+//! outputs are discarded) and dispatched as one PJRT execution per
+//! chunk. Integer add/saturating kinds route through the f32 kernels —
+//! exact for values below 2^24, which covers every workload here (the
+//! native executor remains the reference; the integration tests
+//! cross-check the two).
+
+use anyhow::Result;
+
+use super::artifacts::{LINE_WORDS, MERGE_BATCH};
+use super::engine::Engine;
+use crate::merge::batch::{BatchExecutor, MergeItem};
+use crate::merge::{LineData, MergeKind};
+
+pub struct PjrtMergeExecutor {
+    engine: Engine,
+}
+
+enum Lane {
+    F32,
+    U32AsF32,
+    I32,
+}
+
+impl PjrtMergeExecutor {
+    pub fn new(engine: Engine) -> Self {
+        Self { engine }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Ok(Self::new(Engine::load_default()?))
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    fn entry_for(kind: MergeKind) -> (&'static str, Lane) {
+        match kind {
+            MergeKind::AddU32 => ("merge_add", Lane::U32AsF32),
+            MergeKind::AddF32 => ("merge_add", Lane::F32),
+            MergeKind::SatAddU32 { .. } => ("merge_sat", Lane::U32AsF32),
+            MergeKind::SatAddF32 { .. } => ("merge_sat", Lane::F32),
+            MergeKind::CmulF32 => ("merge_cmul", Lane::F32),
+            MergeKind::BitOr => ("merge_bitor", Lane::I32),
+            MergeKind::MinF32 => ("merge_min", Lane::F32),
+            MergeKind::MaxF32 => ("merge_max", Lane::F32),
+            MergeKind::ApproxAddF32 { .. } => ("merge_approx", Lane::F32),
+        }
+    }
+
+    fn run_chunk(
+        &mut self,
+        kind: MergeKind,
+        chunk: &[MergeItem],
+    ) -> Result<Vec<LineData>> {
+        let (entry, lane) = Self::entry_for(kind);
+        let b = MERGE_BATCH;
+        let w = LINE_WORDS;
+
+        fn field(it: &MergeItem, which: usize) -> &LineData {
+            match which {
+                0 => &it.src,
+                1 => &it.upd,
+                _ => &it.mem,
+            }
+        }
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(4);
+        for which in 0..3 {
+            match lane {
+                Lane::I32 => {
+                    let mut flat = vec![0i32; b * w];
+                    for (i, it) in chunk.iter().enumerate() {
+                        let line = field(it, which);
+                        for j in 0..w {
+                            flat[i * w + j] = line[j] as i32;
+                        }
+                    }
+                    args.push(
+                        xla::Literal::vec1(&flat).reshape(&[b as i64, w as i64])?,
+                    );
+                }
+                Lane::F32 | Lane::U32AsF32 => {
+                    let mut flat = vec![0f32; b * w];
+                    for (i, it) in chunk.iter().enumerate() {
+                        let line = field(it, which);
+                        for j in 0..w {
+                            flat[i * w + j] = match lane {
+                                Lane::F32 => f32::from_bits(line[j]),
+                                _ => line[j] as f32,
+                            };
+                        }
+                    }
+                    args.push(
+                        xla::Literal::vec1(&flat).reshape(&[b as i64, w as i64])?,
+                    );
+                }
+            }
+        }
+
+        // trailing operands: saturation threshold / drop mask
+        match kind {
+            MergeKind::SatAddU32 { max } => {
+                args.push(xla::Literal::vec1(&[max as f32]).reshape(&[1, 1])?);
+            }
+            MergeKind::SatAddF32 { max } => {
+                args.push(xla::Literal::vec1(&[max]).reshape(&[1, 1])?);
+            }
+            MergeKind::ApproxAddF32 { .. } => {
+                let mut mask = vec![1f32; b];
+                for (i, it) in chunk.iter().enumerate() {
+                    mask[i] = if it.drop_update { 0.0 } else { 1.0 };
+                }
+                args.push(xla::Literal::vec1(&mask).reshape(&[b as i64, 1])?);
+            }
+            _ => {}
+        }
+
+        let out = self.engine.execute(entry, &args)?;
+        anyhow::ensure!(out.len() == 1, "{entry}: expected 1 output");
+        let mut result = Vec::with_capacity(chunk.len());
+        match lane {
+            Lane::I32 => {
+                let flat = out[0].to_vec::<i32>()?;
+                for i in 0..chunk.len() {
+                    let mut line = [0u32; 16];
+                    for j in 0..w {
+                        line[j] = flat[i * w + j] as u32;
+                    }
+                    result.push(line);
+                }
+            }
+            Lane::U32AsF32 => {
+                let flat = out[0].to_vec::<f32>()?;
+                for i in 0..chunk.len() {
+                    let mut line = [0u32; 16];
+                    for j in 0..w {
+                        line[j] = flat[i * w + j].round() as u32;
+                    }
+                    result.push(line);
+                }
+            }
+            Lane::F32 => {
+                let flat = out[0].to_vec::<f32>()?;
+                for i in 0..chunk.len() {
+                    let mut line = [0u32; 16];
+                    for j in 0..w {
+                        line[j] = flat[i * w + j].to_bits();
+                    }
+                    result.push(line);
+                }
+            }
+        }
+        Ok(result)
+    }
+}
+
+impl BatchExecutor for PjrtMergeExecutor {
+    fn execute(&mut self, kind: MergeKind, items: &[MergeItem]) -> Vec<LineData> {
+        let mut out = Vec::with_capacity(items.len());
+        for chunk in items.chunks(MERGE_BATCH) {
+            match self.run_chunk(kind, chunk) {
+                Ok(mut lines) => out.append(&mut lines),
+                Err(e) => panic!("PJRT merge execution failed: {e:#}"),
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

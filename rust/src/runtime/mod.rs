@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas kernels and executes
+//! them from rust.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering every L2
+//! entry point to HLO **text** under `artifacts/` (text, not serialized
+//! proto — xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction
+//! ids). This module loads those files through the `xla` crate's PJRT
+//! CPU client, compiles them once, and exposes typed wrappers:
+//!
+//! * [`engine::Engine`] — artifact registry + compiled-executable cache
+//! * [`merge_exec::PjrtMergeExecutor`] — [`crate::merge::batch::BatchExecutor`]
+//!   backed by the Pallas merge kernels (pads batches to the AOT shape)
+//! * [`engine::Engine::kmeans_step`] / [`engine::Engine::pagerank_iter`] —
+//!   the workload compute kernels used by the examples and the
+//!   end-to-end driver
+//!
+//! Python never runs at simulation time: the rust binary is
+//! self-contained once `artifacts/` exists.
+
+pub mod artifacts;
+pub mod engine;
+pub mod merge_exec;
+
+pub use artifacts::{default_artifacts_dir, Manifest};
+pub use engine::Engine;
+pub use merge_exec::PjrtMergeExecutor;

@@ -1,0 +1,77 @@
+//! Byte/line address helpers. Lines are 64 bytes throughout (Table 2).
+
+/// Byte address in simulated memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Addr(pub u64);
+
+/// Cache-line address (byte address >> 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Line(pub u64);
+
+pub const LINE_BYTES: u64 = 64;
+pub const LINE_SHIFT: u32 = 6;
+
+impl Addr {
+    #[inline]
+    pub fn line(self) -> Line {
+        Line(self.0 >> LINE_SHIFT)
+    }
+
+    #[inline]
+    pub fn offset(self) -> u64 {
+        self.0 & (LINE_BYTES - 1)
+    }
+
+    /// Word index into the flat u32 functional memory.
+    #[inline]
+    pub fn word_index(self) -> usize {
+        debug_assert_eq!(self.0 % 4, 0, "unaligned word access at {:#x}", self.0);
+        (self.0 / 4) as usize
+    }
+
+    #[inline]
+    pub fn add(self, bytes: u64) -> Addr {
+        Addr(self.0 + bytes)
+    }
+}
+
+impl Line {
+    #[inline]
+    pub fn base(self) -> Addr {
+        Addr(self.0 << LINE_SHIFT)
+    }
+
+    /// First word index of this line in the flat u32 memory.
+    #[inline]
+    pub fn word_index(self) -> usize {
+        (self.0 << (LINE_SHIFT - 2)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_and_offset_roundtrip() {
+        let a = Addr(0x1234);
+        assert_eq!(a.line(), Line(0x48));
+        assert_eq!(a.offset(), 0x34);
+        assert_eq!(a.line().base().0, 0x1200);
+    }
+
+    #[test]
+    fn word_indices() {
+        assert_eq!(Addr(0).word_index(), 0);
+        assert_eq!(Addr(4).word_index(), 1);
+        assert_eq!(Addr(64).word_index(), 16);
+        assert_eq!(Line(1).word_index(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn unaligned_word_panics_in_debug() {
+        let _ = Addr(3).word_index();
+    }
+}

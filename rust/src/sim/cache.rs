@@ -1,0 +1,305 @@
+//! Set-associative cache model with per-line CCache metadata.
+//!
+//! Tag array only — functional data lives in the machine's flat memory
+//! (coherent lines) or the per-core private copies (CData). Each line
+//! carries the paper's extra state: the CCache bit, the mergeable bit and
+//! the merge-type field (Section 4.1, Figure 4).
+
+use super::addr::Line;
+
+/// Metadata for one cache line slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LineMeta {
+    pub line: Line,
+    pub valid: bool,
+    pub dirty: bool,
+    /// MESI ownership: this private cache holds the line E or M (the
+    /// directory's `Owned` state). Unused in the shared LLC.
+    pub owned: bool,
+    /// CCache bit: the line holds CData (set by c_read/c_write on fill).
+    pub ccache: bool,
+    /// Mergeable bit: soft_merge ran; the line may be merged-and-evicted.
+    pub mergeable: bool,
+    /// MFRF slot index identifying the line's merge function.
+    pub merge_type: u8,
+    lru: u64,
+}
+
+impl LineMeta {
+    fn empty() -> Self {
+        Self {
+            line: Line(0),
+            valid: false,
+            dirty: false,
+            owned: false,
+            ccache: false,
+            mergeable: false,
+            merge_type: 0,
+            lru: 0,
+        }
+    }
+
+    /// An eviction candidate: invalid, or a normal line, or a mergeable
+    /// CData line. Non-mergeable CData is pinned (Section 4.4).
+    pub fn evictable(&self) -> bool {
+        !self.valid || !self.ccache || self.mergeable
+    }
+}
+
+/// What `choose_victim` found for an insertion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Victim {
+    /// An invalid way — free slot.
+    Free { way: usize },
+    /// A valid line that must be evicted (caller handles writeback/merge).
+    Evict { way: usize, meta: LineMeta },
+    /// Every way is pinned CData — the w-1 rule was violated (Section 4.4).
+    Deadlock,
+}
+
+/// Set-associative tag array with true-LRU replacement.
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    set_mask: u64,
+    lines: Vec<LineMeta>,
+    tick: u64,
+}
+
+impl Cache {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        Self {
+            sets,
+            ways,
+            set_mask: (sets - 1) as u64,
+            lines: vec![LineMeta::empty(); sets * ways],
+            tick: 0,
+        }
+    }
+
+    #[inline]
+    pub fn set_index(&self, line: Line) -> usize {
+        (line.0 & self.set_mask) as usize
+    }
+
+    #[inline]
+    fn set_range(&self, line: Line) -> std::ops::Range<usize> {
+        let s = self.set_index(line) * self.ways;
+        s..s + self.ways
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    /// Find a line; returns its slot index without touching LRU.
+    #[inline]
+    pub fn probe(&self, line: Line) -> Option<usize> {
+        self.set_range(line)
+            .find(|&i| self.lines[i].valid && self.lines[i].line == line)
+    }
+
+    /// Find a line and mark it most-recently-used.
+    #[inline]
+    pub fn lookup(&mut self, line: Line) -> Option<usize> {
+        let idx = self.probe(line)?;
+        self.tick += 1;
+        self.lines[idx].lru = self.tick;
+        Some(idx)
+    }
+
+    #[inline]
+    pub fn meta(&self, idx: usize) -> &LineMeta {
+        &self.lines[idx]
+    }
+
+    #[inline]
+    pub fn meta_mut(&mut self, idx: usize) -> &mut LineMeta {
+        &mut self.lines[idx]
+    }
+
+    /// Pick a victim way for inserting `line`. Preference order:
+    /// free way > LRU non-CData > LRU mergeable CData > Deadlock.
+    pub fn choose_victim(&self, line: Line) -> Victim {
+        let mut best_normal: Option<usize> = None;
+        let mut best_mergeable: Option<usize> = None;
+        for i in self.set_range(line) {
+            let m = &self.lines[i];
+            if !m.valid {
+                return Victim::Free { way: i };
+            }
+            if !m.ccache {
+                if best_normal.map_or(true, |b| m.lru < self.lines[b].lru) {
+                    best_normal = Some(i);
+                }
+            } else if m.mergeable
+                && best_mergeable.map_or(true, |b| m.lru < self.lines[b].lru)
+            {
+                best_mergeable = Some(i);
+            }
+        }
+        if let Some(i) = best_normal {
+            return Victim::Evict {
+                way: i,
+                meta: self.lines[i],
+            };
+        }
+        if let Some(i) = best_mergeable {
+            return Victim::Evict {
+                way: i,
+                meta: self.lines[i],
+            };
+        }
+        Victim::Deadlock
+    }
+
+    /// Install `line` into slot `idx` (obtained from `choose_victim`).
+    pub fn install(&mut self, idx: usize, line: Line) -> &mut LineMeta {
+        self.tick += 1;
+        self.lines[idx] = LineMeta {
+            line,
+            valid: true,
+            dirty: false,
+            owned: false,
+            ccache: false,
+            mergeable: false,
+            merge_type: 0,
+            lru: self.tick,
+        };
+        &mut self.lines[idx]
+    }
+
+    /// Invalidate `line` if present; returns its metadata beforehand.
+    pub fn invalidate(&mut self, line: Line) -> Option<LineMeta> {
+        let idx = self.probe(line)?;
+        let meta = self.lines[idx];
+        self.lines[idx].valid = false;
+        Some(meta)
+    }
+
+    /// Slot indices of all valid lines in the cache (test/diagnostic use).
+    pub fn valid_slots(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.lines.len()).filter(|&i| self.lines[i].valid)
+    }
+
+    /// Count of pinned (non-mergeable) CData ways in `line`'s set.
+    pub fn pinned_cdata_in_set(&self, line: Line) -> usize {
+        self.set_range(line)
+            .filter(|&i| {
+                let m = &self.lines[i];
+                m.valid && m.ccache && !m.mergeable
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(v: u64) -> Line {
+        Line(v)
+    }
+
+    #[test]
+    fn hit_after_install() {
+        let mut c = Cache::new(4, 2);
+        let v = c.choose_victim(l(5));
+        let Victim::Free { way } = v else { panic!() };
+        c.install(way, l(5));
+        assert!(c.lookup(l(5)).is_some());
+        assert!(c.lookup(l(9)).is_none()); // same set (5 % 4 == 1, 9 % 4 == 1), different tag
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = Cache::new(1, 2);
+        let w0 = match c.choose_victim(l(0)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        c.install(w0, l(0));
+        let w1 = match c.choose_victim(l(1)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        c.install(w1, l(1));
+        // touch 0 so 1 becomes LRU
+        c.lookup(l(0));
+        match c.choose_victim(l(2)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
+            v => panic!("{v:?}"),
+        }
+    }
+
+    #[test]
+    fn pinned_cdata_never_chosen() {
+        let mut c = Cache::new(1, 2);
+        for i in 0..2 {
+            let w = match c.choose_victim(l(i)) {
+                Victim::Free { way } => way,
+                _ => panic!(),
+            };
+            let m = c.install(w, l(i));
+            m.ccache = true; // pinned: ccache bit set, not mergeable
+        }
+        assert_eq!(c.choose_victim(l(2)), Victim::Deadlock);
+        assert_eq!(c.pinned_cdata_in_set(l(2)), 2);
+    }
+
+    #[test]
+    fn mergeable_cdata_evictable_after_normals() {
+        let mut c = Cache::new(1, 3);
+        // way0: mergeable CData (oldest), way1: normal, way2: pinned CData
+        let w = match c.choose_victim(l(0)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        let m = c.install(w, l(0));
+        m.ccache = true;
+        m.mergeable = true;
+        let w = match c.choose_victim(l(1)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        c.install(w, l(1));
+        let w = match c.choose_victim(l(2)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        let m = c.install(w, l(2));
+        m.ccache = true;
+        // normal line evicted first even though the mergeable line is older
+        match c.choose_victim(l(3)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
+            v => panic!("{v:?}"),
+        }
+    }
+
+    #[test]
+    fn invalidate_removes_line() {
+        let mut c = Cache::new(2, 2);
+        let w = match c.choose_victim(l(0)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        c.install(w, l(0));
+        let meta = c.invalidate(l(0)).unwrap();
+        assert_eq!(meta.line, l(0));
+        assert!(c.lookup(l(0)).is_none());
+        assert!(c.invalidate(l(0)).is_none());
+    }
+
+    #[test]
+    fn set_mapping_respects_mask() {
+        let c = Cache::new(8, 1);
+        assert_eq!(c.set_index(l(0)), 0);
+        assert_eq!(c.set_index(l(8)), 0);
+        assert_eq!(c.set_index(l(9)), 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! Machine configuration — defaults reproduce the paper's Table 2.
+
+/// Cache geometry + latency for one level.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub hit_cycles: u64,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (64 * self.ways)
+    }
+}
+
+/// CCache-specific knobs (Section 4 + the Section 4.3 optimizations).
+#[derive(Clone, Copy, Debug)]
+pub struct CCacheConfig {
+    /// Source buffer entries per core (Table 2: 8 lines = 512 B).
+    pub source_buffer_entries: usize,
+    /// Source buffer hit latency (Table 2: 3 cycles).
+    pub source_buffer_hit_cycles: u64,
+    /// Merge latency per line including the LLC round trip (Table 2: 170).
+    /// Charged synchronously by the explicit `merge` instruction.
+    pub merge_latency: u64,
+    /// Eviction-triggered (merge-on-evict) merges run in a background
+    /// merge engine — victim-buffer semantics ("delays the merge and
+    /// write back for as long as possible", Section 4.3). The engine is
+    /// pipelined; one merge occupies it for this many cycles (LLC-port
+    /// bound: one round trip).
+    pub merge_engine_interval: u64,
+    /// Pending-merge queue depth; the core stalls when the engine backs
+    /// up beyond this many in-flight merges.
+    pub merge_engine_queue: u64,
+    /// MFRF slots (Section 4.2: four entries / two merge-type bits).
+    pub mfrf_slots: usize,
+    /// merge-on-evict: soft_merge defers merging to eviction (Section 4.3).
+    /// When disabled, soft_merge behaves like a full merge.
+    pub merge_on_evict: bool,
+    /// dirty-merge: silently drop clean mergeable lines (Section 4.3).
+    pub dirty_merge: bool,
+}
+
+impl Default for CCacheConfig {
+    fn default() -> Self {
+        Self {
+            source_buffer_entries: 8,
+            source_buffer_hit_cycles: 3,
+            merge_latency: 170,
+            merge_engine_interval: 70,
+            merge_engine_queue: 4,
+            mfrf_slots: 4,
+            merge_on_evict: true,
+            dirty_merge: true,
+        }
+    }
+}
+
+/// Whole-machine parameters (Table 2 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct MachineConfig {
+    pub cores: usize,
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    pub mem_cycles: u64,
+    pub ccache: CCacheConfig,
+    /// Deterministic interleave quantum in cycles: a core keeps its turn
+    /// until its clock exceeds the laggard's by this much. 0 = strict
+    /// laggard-first per operation.
+    pub quantum: u64,
+    /// Cycles charged per failed lock-acquire attempt before retrying
+    /// (spin backoff).
+    pub lock_backoff: u64,
+    /// Functional memory size in bytes.
+    pub mem_bytes: usize,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        Self {
+            cores: 8,
+            l1: CacheConfig {
+                size_bytes: 32 << 10,
+                ways: 8,
+                hit_cycles: 4,
+            },
+            l2: CacheConfig {
+                size_bytes: 512 << 10,
+                ways: 8,
+                hit_cycles: 10,
+            },
+            llc: CacheConfig {
+                size_bytes: 4 << 20,
+                ways: 16,
+                hit_cycles: 70,
+            },
+            mem_cycles: 300,
+            ccache: CCacheConfig::default(),
+            quantum: 256,
+            lock_backoff: 40,
+            mem_bytes: 256 << 20,
+        }
+    }
+}
+
+impl MachineConfig {
+    /// The paper's Fig 7 configuration: CCache runs with half the LLC.
+    pub fn with_llc_bytes(mut self, bytes: usize) -> Self {
+        self.llc.size_bytes = bytes;
+        self
+    }
+
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores;
+        self
+    }
+
+    /// Small machine for fast unit tests (geometry shrunk, same shape).
+    pub fn test_small() -> Self {
+        let mut cfg = Self::default();
+        cfg.cores = 2;
+        cfg.l1 = CacheConfig {
+            size_bytes: 1 << 10,
+            ways: 4,
+            hit_cycles: 4,
+        };
+        cfg.l2 = CacheConfig {
+            size_bytes: 4 << 10,
+            ways: 4,
+            hit_cycles: 10,
+        };
+        cfg.llc = CacheConfig {
+            size_bytes: 16 << 10,
+            ways: 8,
+            hit_cycles: 70,
+        };
+        cfg.mem_bytes = 8 << 20;
+        cfg.quantum = 0;
+        cfg
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, c) in [("l1", &self.l1), ("l2", &self.l2), ("llc", &self.llc)] {
+            if c.size_bytes % (64 * c.ways) != 0 {
+                return Err(format!("{name}: size not divisible by ways*64"));
+            }
+            if !c.sets().is_power_of_two() {
+                return Err(format!("{name}: sets ({}) not a power of two", c.sets()));
+            }
+        }
+        if self.cores == 0 || self.cores > 64 {
+            return Err("cores must be in 1..=64".into());
+        }
+        if self.ccache.mfrf_slots == 0 || self.ccache.mfrf_slots > 16 {
+            return Err("mfrf_slots must be in 1..=16".into());
+        }
+        if self.mem_bytes % 64 != 0 {
+            return Err("mem_bytes must be line-aligned".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let cfg = MachineConfig::default();
+        assert_eq!(cfg.cores, 8);
+        assert_eq!(cfg.l1.sets(), 64); // 32KB / (64B * 8)
+        assert_eq!(cfg.l2.sets(), 1024);
+        assert_eq!(cfg.llc.sets(), 4096); // 4MB / (64B * 16)
+        assert_eq!(cfg.l1.hit_cycles, 4);
+        assert_eq!(cfg.l2.hit_cycles, 10);
+        assert_eq!(cfg.llc.hit_cycles, 70);
+        assert_eq!(cfg.mem_cycles, 300);
+        assert_eq!(cfg.ccache.source_buffer_entries, 8);
+        assert_eq!(cfg.ccache.merge_latency, 170);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn half_llc_for_fig7() {
+        let cfg = MachineConfig::default().with_llc_bytes(2 << 20);
+        assert_eq!(cfg.llc.sets(), 2048);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        let mut cfg = MachineConfig::default();
+        cfg.l1.size_bytes = 1000; // not divisible
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn test_small_is_valid() {
+        MachineConfig::test_small().validate().unwrap();
+    }
+}

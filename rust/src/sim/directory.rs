@@ -1,0 +1,311 @@
+//! Full-map MESI directory, co-located with the (inclusive) LLC.
+//!
+//! A directory entry exists exactly for lines resident in the LLC. It
+//! tracks which private caches hold the line and whether one of them owns
+//! it exclusively (E/M). CData never appears here: c_read/c_write bypass
+//! coherence entirely (Section 4.4).
+
+use std::collections::HashMap;
+
+use super::addr::Line;
+
+/// Sharer bitmask (up to 64 cores).
+pub type SharerMask = u64;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DirState {
+    /// No private cache holds the line.
+    Uncached,
+    /// One or more private caches hold it read-only.
+    Shared,
+    /// Exactly one private cache holds it E or M (silent E->M upgrade
+    /// means the directory treats E and M identically: `owner` may have
+    /// a dirty copy).
+    Owned { owner: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DirEntry {
+    pub state: DirState,
+    pub sharers: SharerMask,
+}
+
+impl DirEntry {
+    fn new() -> Self {
+        Self {
+            state: DirState::Uncached,
+            sharers: 0,
+        }
+    }
+
+    pub fn sharer_count(&self) -> u32 {
+        self.sharers.count_ones()
+    }
+
+    pub fn is_sharer(&self, core: usize) -> bool {
+        self.sharers & (1 << core) != 0
+    }
+}
+
+/// Directory operations return what coherence actions the caller (memsys)
+/// must perform and account.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CoherenceActions {
+    /// Invalidation messages to send (count of private caches).
+    pub invalidations: u32,
+    /// Bitmask of cores whose private copies must be invalidated.
+    pub inv_mask: SharerMask,
+    /// A dirty owner must write its data back/through first.
+    pub owner_writeback: Option<usize>,
+    /// Directory messages exchanged for this transaction.
+    pub dir_msgs: u32,
+}
+
+pub struct Directory {
+    entries: HashMap<u64, DirEntry>,
+}
+
+impl Directory {
+    pub fn new() -> Self {
+        Self {
+            entries: HashMap::new(),
+        }
+    }
+
+    pub fn entry(&self, line: Line) -> Option<&DirEntry> {
+        self.entries.get(&line.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Core `c` requests read access (GetS).
+    pub fn get_s(&mut self, line: Line, c: usize) -> CoherenceActions {
+        let e = self.entries.entry(line.0).or_insert_with(DirEntry::new);
+        let mut act = CoherenceActions {
+            dir_msgs: 1, // the GetS itself
+            ..Default::default()
+        };
+        match e.state {
+            DirState::Uncached => {
+                e.state = DirState::Owned { owner: c }; // grant E
+                e.sharers = 1 << c;
+            }
+            DirState::Shared => {
+                e.sharers |= 1 << c;
+            }
+            DirState::Owned { owner } if owner == c => {
+                // already owner (e.g. refetch after L1 evict, L2 hit path)
+            }
+            DirState::Owned { owner } => {
+                // downgrade owner: fetch its (possibly dirty) data
+                act.owner_writeback = Some(owner);
+                act.dir_msgs += 2; // fwd + data
+                e.state = DirState::Shared;
+                e.sharers |= 1 << c;
+            }
+        }
+        act
+    }
+
+    /// Core `c` requests write access (GetM / upgrade).
+    pub fn get_m(&mut self, line: Line, c: usize) -> CoherenceActions {
+        let e = self.entries.entry(line.0).or_insert_with(DirEntry::new);
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        match e.state {
+            DirState::Uncached => {}
+            DirState::Shared => {
+                let others = e.sharers & !(1 << c);
+                act.invalidations = others.count_ones();
+                act.inv_mask = others;
+                act.dir_msgs += act.invalidations; // one inv per sharer
+            }
+            DirState::Owned { owner } if owner == c => {
+                e.sharers = 1 << c;
+                return act; // silent upgrade, nothing to do
+            }
+            DirState::Owned { owner } => {
+                act.owner_writeback = Some(owner);
+                act.invalidations = 1;
+                act.inv_mask = 1 << owner;
+                act.dir_msgs += 2;
+            }
+        }
+        e.state = DirState::Owned { owner: c };
+        e.sharers = 1 << c;
+        act
+    }
+
+    /// Core `c` evicted its private copy (PutS/PutM). `dirty` = had M.
+    pub fn put(&mut self, line: Line, c: usize, dirty: bool) -> CoherenceActions {
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        if let Some(e) = self.entries.get_mut(&line.0) {
+            e.sharers &= !(1 << c);
+            match e.state {
+                DirState::Owned { owner } if owner == c => {
+                    e.state = if e.sharers == 0 {
+                        DirState::Uncached
+                    } else {
+                        DirState::Shared
+                    };
+                }
+                DirState::Shared if e.sharers == 0 => {
+                    e.state = DirState::Uncached;
+                }
+                _ => {}
+            }
+            if dirty {
+                act.dir_msgs += 1; // data message with the writeback
+            }
+        }
+        act
+    }
+
+    /// LLC evicts the line (inclusive recall): every private copy must be
+    /// invalidated; returns the sharers to invalidate and removes the entry.
+    pub fn recall(&mut self, line: Line) -> (SharerMask, CoherenceActions) {
+        let Some(e) = self.entries.remove(&line.0) else {
+            return (0, CoherenceActions::default());
+        };
+        let act = CoherenceActions {
+            invalidations: e.sharer_count(),
+            inv_mask: e.sharers,
+            owner_writeback: match e.state {
+                DirState::Owned { owner } => Some(owner),
+                _ => None,
+            },
+            dir_msgs: 1 + e.sharer_count(),
+        };
+        (e.sharers, act)
+    }
+
+    /// Internal-consistency check used by the property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (&line, e) in &self.entries {
+            match e.state {
+                DirState::Uncached => {
+                    if e.sharers != 0 {
+                        return Err(format!("line {line:#x}: Uncached but sharers != 0"));
+                    }
+                }
+                DirState::Shared => {
+                    if e.sharers == 0 {
+                        return Err(format!("line {line:#x}: Shared but no sharers"));
+                    }
+                }
+                DirState::Owned { owner } => {
+                    if e.sharers != 1 << owner {
+                        return Err(format!(
+                            "line {line:#x}: Owned by {owner} but sharers {:#b}",
+                            e.sharers
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for Directory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(v: u64) -> Line {
+        Line(v)
+    }
+
+    #[test]
+    fn first_reader_gets_exclusive() {
+        let mut d = Directory::new();
+        let act = d.get_s(l(1), 0);
+        assert_eq!(act.invalidations, 0);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 0 });
+    }
+
+    #[test]
+    fn second_reader_downgrades_owner() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0);
+        let act = d.get_s(l(1), 1);
+        assert_eq!(act.owner_writeback, Some(0));
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Shared);
+        assert_eq!(d.entry(l(1)).unwrap().sharer_count(), 2);
+    }
+
+    #[test]
+    fn writer_invalidates_sharers() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0);
+        d.get_s(l(1), 1);
+        d.get_s(l(1), 2);
+        let act = d.get_m(l(1), 0);
+        assert_eq!(act.invalidations, 2); // cores 1, 2
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 0 });
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn writer_steals_from_dirty_owner() {
+        let mut d = Directory::new();
+        d.get_m(l(1), 0);
+        let act = d.get_m(l(1), 1);
+        assert_eq!(act.owner_writeback, Some(0));
+        assert_eq!(act.invalidations, 1);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 1 });
+    }
+
+    #[test]
+    fn silent_upgrade_costs_nothing_extra() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0); // granted E
+        let act = d.get_m(l(1), 0);
+        assert_eq!(act.invalidations, 0);
+        assert_eq!(act.owner_writeback, None);
+    }
+
+    #[test]
+    fn put_last_sharer_uncaches() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0);
+        d.put(l(1), 0, false);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Uncached);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn recall_reports_all_sharers() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0);
+        d.get_s(l(1), 1);
+        let (mask, act) = d.recall(l(1));
+        assert_eq!(mask, 0b11);
+        assert_eq!(act.invalidations, 2);
+        assert!(d.entry(l(1)).is_none());
+    }
+
+    #[test]
+    fn recall_absent_line_is_noop() {
+        let mut d = Directory::new();
+        let (mask, act) = d.recall(l(9));
+        assert_eq!(mask, 0);
+        assert_eq!(act, CoherenceActions::default());
+    }
+}

@@ -1,0 +1,86 @@
+//! Merge-Function Register File (Section 4.2).
+//!
+//! Holds the registered merge functions for one core. `merge_init`
+//! installs a [`MergeKind`] into a slot; each CData line's merge-type
+//! field names the slot to invoke at merge time. Four slots / two
+//! merge-type bits is the paper's suggested configuration.
+
+use crate::merge::MergeKind;
+
+pub struct Mfrf {
+    slots: Vec<Option<MergeKind>>,
+}
+
+impl Mfrf {
+    pub fn new(slots: usize) -> Self {
+        Self {
+            slots: vec![None; slots],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// `merge_init(&fn, i)` — register `kind` in slot `i`.
+    pub fn install(&mut self, slot: usize, kind: MergeKind) {
+        assert!(
+            slot < self.slots.len(),
+            "MFRF slot {slot} out of range (have {})",
+            self.slots.len()
+        );
+        self.slots[slot] = Some(kind);
+    }
+
+    /// The merge function for a line's merge-type field. Panics on an
+    /// uninitialized slot — using CData with no registered merge function
+    /// is a programming error the hardware would fault on.
+    pub fn get(&self, slot: u8) -> MergeKind {
+        self.slots
+            .get(slot as usize)
+            .copied()
+            .flatten()
+            .unwrap_or_else(|| panic!("MFRF slot {slot} not initialized"))
+    }
+
+    pub fn try_get(&self, slot: u8) -> Option<MergeKind> {
+        self.slots.get(slot as usize).copied().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_and_get() {
+        let mut m = Mfrf::new(4);
+        m.install(0, MergeKind::AddU32);
+        m.install(3, MergeKind::BitOr);
+        assert_eq!(m.get(0), MergeKind::AddU32);
+        assert_eq!(m.get(3), MergeKind::BitOr);
+        assert_eq!(m.try_get(1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not initialized")]
+    fn uninitialized_slot_faults() {
+        let m = Mfrf::new(4);
+        let _ = m.get(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_install_faults() {
+        let mut m = Mfrf::new(2);
+        m.install(5, MergeKind::AddU32);
+    }
+
+    #[test]
+    fn reinstall_overwrites() {
+        let mut m = Mfrf::new(4);
+        m.install(0, MergeKind::AddU32);
+        m.install(0, MergeKind::MinF32);
+        assert_eq!(m.get(0), MergeKind::MinF32);
+    }
+}

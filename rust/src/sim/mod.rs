@@ -1,0 +1,39 @@
+//! Execution-driven multicore simulator with CCache extensions.
+//!
+//! This is the substrate the paper built on PIN (Section 5): a multicore
+//! with per-core private L1/L2, a shared LLC, directory-based MESI
+//! coherence, and the CCache additions of Section 4 — per-line CCache and
+//! mergeable bits, a per-core source buffer, a merge-function register
+//! file, merge-register staging, LLC line locking during merges, and the
+//! merge-on-evict / dirty-merge optimizations.
+//!
+//! The simulator is *execution-driven*: workloads run on real data in a
+//! simulated flat memory while every access flows through the timing
+//! model. That split lets us check the paper's correctness claim (merged
+//! results equal a serialization) against sequential golden runs, not
+//! just count cycles.
+//!
+//! Module map:
+//! * [`config`] — Table 2 machine parameters + CCache knobs
+//! * [`addr`] — byte/line address helpers
+//! * [`cache`] — set-associative cache with per-line CCache metadata
+//! * [`directory`] — full-map MESI directory (LLC-inclusive)
+//! * [`source_buffer`] — the per-core source-copy buffer (Section 4.1)
+//! * [`mfrf`] — merge-function register file (Section 4.2)
+//! * [`memsys`] — the coherence + CCache protocol engine
+//! * [`machine`] — cores-as-threads deterministic interleaver, the
+//!   `CoreCtx` ISA surface (`c_read`/`c_write`/`merge`/...), locks and
+//!   barriers
+//! * [`stats`] — the counters behind every figure in Section 6
+//! * [`overhead`] — Section 4.7 area/energy analytical model
+
+pub mod addr;
+pub mod cache;
+pub mod config;
+pub mod directory;
+pub mod machine;
+pub mod memsys;
+pub mod mfrf;
+pub mod overhead;
+pub mod source_buffer;
+pub mod stats;

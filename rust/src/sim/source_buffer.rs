@@ -1,0 +1,191 @@
+//! The per-core source buffer (Section 4.1, Figure 4).
+//!
+//! A small, fully-associative, cache-line-granularity memory that
+//! preserves the *source copy* of every CData line the core has
+//! privatized. One entry corresponds 1:1 with a CData line in the core's
+//! L1. Entries are LRU-replaced; replacing a valid entry forces a merge
+//! of its line (counted as a source-buffer eviction — the Fig 9 metric).
+
+use super::addr::Line;
+use crate::merge::LineData;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SourceEntry {
+    pub line: Line,
+    pub data: LineData,
+    pub merge_type: u8,
+    lru: u64,
+    valid: bool,
+}
+
+pub struct SourceBuffer {
+    entries: Vec<SourceEntry>,
+    tick: u64,
+}
+
+impl SourceBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            entries: vec![
+                SourceEntry {
+                    line: Line(0),
+                    data: [0; 16],
+                    merge_type: 0,
+                    lru: 0,
+                    valid: false,
+                };
+                capacity
+            ],
+            tick: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() == self.capacity()
+    }
+
+    /// Look up the source copy for `line`, refreshing LRU.
+    pub fn get(&mut self, line: Line) -> Option<&SourceEntry> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries
+            .iter_mut()
+            .find(|e| e.valid && e.line == line)
+            .map(|e| {
+                e.lru = tick;
+                &*e
+            })
+    }
+
+    pub fn contains(&self, line: Line) -> bool {
+        self.entries.iter().any(|e| e.valid && e.line == line)
+    }
+
+    /// The LRU valid entry — the one a capacity eviction will merge.
+    pub fn lru_entry(&self) -> Option<&SourceEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.valid)
+            .min_by_key(|e| e.lru)
+    }
+
+    /// Insert a source copy. Precondition: `line` absent and not full
+    /// (memsys merges the LRU entry first when at capacity).
+    pub fn insert(&mut self, line: Line, data: LineData, merge_type: u8) {
+        debug_assert!(!self.contains(line), "duplicate source entry");
+        self.tick += 1;
+        let tick = self.tick;
+        let slot = self
+            .entries
+            .iter_mut()
+            .find(|e| !e.valid)
+            .expect("source buffer full; caller must evict first");
+        *slot = SourceEntry {
+            line,
+            data,
+            merge_type,
+            lru: tick,
+            valid: true,
+        };
+    }
+
+    /// Remove `line`'s entry, returning it.
+    pub fn remove(&mut self, line: Line) -> Option<SourceEntry> {
+        let e = self
+            .entries
+            .iter_mut()
+            .find(|e| e.valid && e.line == line)?;
+        e.valid = false;
+        Some(*e)
+    }
+
+    /// All valid entries, oldest first (merge walks the buffer in this
+    /// order, Table 1).
+    pub fn valid_entries(&self) -> Vec<SourceEntry> {
+        let mut v: Vec<SourceEntry> =
+            self.entries.iter().filter(|e| e.valid).copied().collect();
+        v.sort_by_key(|e| e.lru);
+        v
+    }
+
+    /// Flash-clear (end of a full merge, Table 1).
+    pub fn clear(&mut self) {
+        for e in &mut self.entries {
+            e.valid = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(v: u64) -> Line {
+        Line(v)
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut sb = SourceBuffer::new(4);
+        sb.insert(l(7), [7; 16], 2);
+        assert_eq!(sb.len(), 1);
+        let e = sb.get(l(7)).unwrap();
+        assert_eq!(e.data[0], 7);
+        assert_eq!(e.merge_type, 2);
+        let removed = sb.remove(l(7)).unwrap();
+        assert_eq!(removed.line, l(7));
+        assert!(sb.is_empty());
+    }
+
+    #[test]
+    fn lru_entry_is_least_recently_touched() {
+        let mut sb = SourceBuffer::new(3);
+        sb.insert(l(1), [1; 16], 0);
+        sb.insert(l(2), [2; 16], 0);
+        sb.insert(l(3), [3; 16], 0);
+        sb.get(l(1)); // refresh 1
+        assert_eq!(sb.lru_entry().unwrap().line, l(2));
+    }
+
+    #[test]
+    fn valid_entries_oldest_first() {
+        let mut sb = SourceBuffer::new(4);
+        sb.insert(l(5), [0; 16], 0);
+        sb.insert(l(6), [0; 16], 0);
+        sb.get(l(5));
+        let order: Vec<u64> = sb.valid_entries().iter().map(|e| e.line.0).collect();
+        assert_eq!(order, vec![6, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "source buffer full")]
+    fn overflow_panics_without_evict() {
+        let mut sb = SourceBuffer::new(2);
+        sb.insert(l(1), [0; 16], 0);
+        sb.insert(l(2), [0; 16], 0);
+        sb.insert(l(3), [0; 16], 0);
+    }
+
+    #[test]
+    fn clear_empties_buffer() {
+        let mut sb = SourceBuffer::new(2);
+        sb.insert(l(1), [0; 16], 0);
+        sb.insert(l(2), [0; 16], 0);
+        sb.clear();
+        assert!(sb.is_empty());
+        assert!(!sb.contains(l(1)));
+    }
+}

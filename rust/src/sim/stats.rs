@@ -1,0 +1,180 @@
+//! Simulation counters — one field per quantity a figure in Section 6
+//! reports, plus general cache statistics.
+
+use std::fmt;
+
+/// Per-level hit/miss counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LevelStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LevelStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses() as f64
+        }
+    }
+}
+
+/// All counters collected during a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    // -- time ---------------------------------------------------------
+    /// Final per-core cycle counts; the run's "execution time" is the max.
+    pub core_cycles: Vec<u64>,
+
+    // -- cache hierarchy ----------------------------------------------
+    pub l1: LevelStats,
+    pub l2: LevelStats,
+    pub llc: LevelStats,
+    pub mem_accesses: u64,
+
+    // -- coherence (Fig 8) ---------------------------------------------
+    /// Messages handled by the directory (GetS/GetM/upgrade/writeback/recall).
+    pub directory_msgs: u64,
+    /// Invalidation messages sent to private caches.
+    pub invalidations: u64,
+    /// Dirty-line writebacks L2 -> LLC and LLC -> memory.
+    pub writebacks: u64,
+
+    // -- CCache (Fig 9, Section 6.4) ------------------------------------
+    /// c_read/c_write operations executed.
+    pub cops: u64,
+    /// CData hits in L1.
+    pub ccache_l1_hits: u64,
+    /// CData fills (L1 miss on a COp).
+    pub ccache_fills: u64,
+    /// Merge-function executions (one per merged line).
+    pub merges: u64,
+    /// Source-buffer entries evicted to make room (capacity) — the Fig 9
+    /// quantity. Full-flush merges (no merge-on-evict) also count here.
+    pub src_buf_evictions: u64,
+    /// Clean mergeable lines silently dropped (dirty-merge optimization).
+    pub silent_drops: u64,
+    /// Approximate merges whose update was dropped.
+    pub approx_drops: u64,
+
+    // -- synchronization -------------------------------------------------
+    pub lock_acquires: u64,
+    pub lock_retries: u64,
+    pub atomic_rmws: u64,
+    pub barriers: u64,
+
+    // -- footprint --------------------------------------------------------
+    /// Bytes allocated by the workload (Table 3).
+    pub bytes_allocated: u64,
+}
+
+impl Stats {
+    pub fn new(cores: usize) -> Self {
+        Self {
+            core_cycles: vec![0; cores],
+            ..Default::default()
+        }
+    }
+
+    /// The run's execution time: the slowest core's clock.
+    pub fn total_cycles(&self) -> u64 {
+        self.core_cycles.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fig 8 normalization: events per 1000 cycles.
+    pub fn per_kilocycle(&self, count: u64) -> f64 {
+        let c = self.total_cycles();
+        if c == 0 {
+            0.0
+        } else {
+            count as f64 * 1000.0 / c as f64
+        }
+    }
+
+    pub fn dir_msgs_per_kc(&self) -> f64 {
+        self.per_kilocycle(self.directory_msgs)
+    }
+
+    pub fn invalidations_per_kc(&self) -> f64 {
+        self.per_kilocycle(self.invalidations)
+    }
+
+    pub fn llc_misses_per_kc(&self) -> f64 {
+        self.per_kilocycle(self.llc.misses)
+    }
+}
+
+impl fmt::Display for Stats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "cycles            {:>14}", self.total_cycles())?;
+        writeln!(
+            f,
+            "L1 h/m            {:>14}/{} ({:.1}% miss)",
+            self.l1.hits,
+            self.l1.misses,
+            self.l1.miss_rate() * 100.0
+        )?;
+        writeln!(
+            f,
+            "L2 h/m            {:>14}/{} ({:.1}% miss)",
+            self.l2.hits,
+            self.l2.misses,
+            self.l2.miss_rate() * 100.0
+        )?;
+        writeln!(
+            f,
+            "LLC h/m           {:>14}/{} ({:.1}% miss)",
+            self.llc.hits,
+            self.llc.misses,
+            self.llc.miss_rate() * 100.0
+        )?;
+        writeln!(f, "mem accesses      {:>14}", self.mem_accesses)?;
+        writeln!(f, "directory msgs    {:>14}", self.directory_msgs)?;
+        writeln!(f, "invalidations     {:>14}", self.invalidations)?;
+        writeln!(f, "writebacks        {:>14}", self.writebacks)?;
+        writeln!(f, "COps              {:>14}", self.cops)?;
+        writeln!(f, "merges            {:>14}", self.merges)?;
+        writeln!(f, "src-buf evictions {:>14}", self.src_buf_evictions)?;
+        writeln!(f, "silent drops      {:>14}", self.silent_drops)?;
+        writeln!(f, "lock acq/retry    {:>14}/{}", self.lock_acquires, self.lock_retries)?;
+        writeln!(f, "bytes allocated   {:>14}", self.bytes_allocated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_cycles_is_max_core() {
+        let mut s = Stats::new(4);
+        s.core_cycles = vec![10, 500, 30, 2];
+        assert_eq!(s.total_cycles(), 500);
+    }
+
+    #[test]
+    fn per_kilocycle_normalizes() {
+        let mut s = Stats::new(1);
+        s.core_cycles = vec![10_000];
+        assert_eq!(s.per_kilocycle(50), 5.0);
+    }
+
+    #[test]
+    fn zero_cycles_no_nan() {
+        let s = Stats::new(1);
+        assert_eq!(s.per_kilocycle(10), 0.0);
+        assert_eq!(s.l1.miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn display_renders() {
+        let s = Stats::new(2);
+        let text = format!("{s}");
+        assert!(text.contains("directory msgs"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Bench harness: wall-clock timing plus paper-style ASCII tables and
+//! series plots. Criterion is unavailable offline; every `[[bench]]`
+//! target is a `harness = false` binary built on this module.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run a closure `iters` times after `warmup` runs; report min/mean seconds.
+pub fn sample<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchSample {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let _ = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchSample {
+        min: times[0],
+        mean,
+        max: *times.last().unwrap(),
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSample {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// A simple right-aligned ASCII table with a title, matching the tabular
+/// presentation of the paper's figures.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line_w: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        let sep = "-".repeat(line_w);
+        let _ = writeln!(out, "{sep}");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:>w$} |", c, w = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Render a labeled series as an ASCII bar chart (one bar per point),
+/// used for figure-shaped outputs.
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64]) -> String {
+    assert_eq!(labels.len(), values.len());
+    let maxv = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    for (l, v) in labels.iter().zip(values) {
+        let n = ((v / maxv) * 50.0).round().max(0.0) as usize;
+        let _ = writeln!(out, "{:>w$} | {:<50} {:.3}", l, "#".repeat(n), v, w = label_w);
+    }
+    out
+}
+
+pub fn fmt_f(v: f64, digits: usize) -> String {
+    format!("{:.*}", digits, v)
+}
+
+pub fn fmt_ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("333"));
+        assert_eq!(s.matches('\n').count() >= 6, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn sample_orders_min_mean_max() {
+        let s = sample(1, 5, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert!(s.min > 0.0);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart(
+            "t",
+            &["x".into(), "y".into()],
+            &[1.0, 2.0],
+        );
+        assert!(s.contains('#'));
+        assert!(s.lines().count() == 3);
+    }
+}

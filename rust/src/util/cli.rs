@@ -1,0 +1,218 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A declared option (for usage text and validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments plus declared specs.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse from an explicit iterator (tests) or `std::env::args`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        mut self,
+        args: I,
+    ) -> Result<Self, String> {
+        let mut it = args.into_iter();
+        self.program = it.next().unwrap_or_else(|| "ccache".into());
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    self.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?,
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positional.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse(self) -> Self {
+        match self.parse_from(std::env::args()) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}\n", self.about);
+        let _ = writeln!(s, "usage: {} [options] [args...]", self.program);
+        for spec in &self.specs {
+            if spec.is_flag {
+                let _ = writeln!(s, "  --{:<24}{}", spec.name, spec.help);
+            } else {
+                let _ = writeln!(
+                    s,
+                    "  --{:<24}{} (default: {})",
+                    format!("{} <v>", spec.name),
+                    spec.help,
+                    spec.default.as_deref().unwrap_or("-")
+                );
+            }
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option {name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a float"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(list: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(list.iter().map(|s| s.to_string()))
+            .collect()
+    }
+
+    fn base() -> Args {
+        Args::new("test")
+            .opt("keys", "1000", "number of keys")
+            .opt("theta", "0.0", "zipf skew")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse_from(argv(&[])).unwrap();
+        assert_eq!(a.get_usize("keys"), 1000);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = base()
+            .parse_from(argv(&["--keys", "5", "--theta=0.9", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("keys"), 5);
+        assert_eq!(a.get_f64("theta"), 0.9);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(base().parse_from(argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(base().parse_from(argv(&["--keys"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = base().parse_from(argv(&["--help"])).unwrap_err();
+        assert!(err.contains("usage:"));
+        assert!(err.contains("--keys"));
+    }
+}

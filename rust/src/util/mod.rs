@@ -1,0 +1,9 @@
+//! In-house utilities: deterministic RNG, key-distribution samplers, a tiny
+//! CLI argument parser, a bench harness (timing + paper-style tables) and a
+//! minimal property-test driver. All of these exist in-crate because the
+//! offline environment only vendors the `xla` dependency closure.
+
+pub mod bench;
+pub mod cli;
+pub mod ptest;
+pub mod rng;

@@ -1,0 +1,169 @@
+//! Minimal property-test driver (proptest is unavailable offline).
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` generated inputs and,
+//! on failure, performs a bounded greedy shrink via the input's
+//! [`Shrink`] implementation before panicking with the minimal
+//! counterexample.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, roughly ordered smallest-first.
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        (*self as u64).shrinks().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // shrink one element
+        if let Some(first) = self.first() {
+            for s in first.shrinks() {
+                let mut v = self.clone();
+                v[0] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` on `cases` inputs drawn via `gen`; shrink on failure.
+///
+/// The RNG seed is fixed (per-callsite via `seed`) so failures reproduce.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &mut prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  input: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: FnMut(&T) -> PropResult>(
+    mut input: T,
+    mut msg: String,
+    prop: &mut P,
+) -> (T, String) {
+    // bounded greedy descent
+    for _ in 0..200 {
+        let mut improved = false;
+        for cand in input.shrinks() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 100, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                2,
+                100,
+                |r| r.below(1000),
+                |&x| {
+                    if x < 50 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 50"))
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving from any failing x >= 50 lands on exactly 50
+        assert!(msg.contains("input: 50"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinks_reduce_length_or_elements() {
+        let v = vec![5u64, 6, 7];
+        let shrinks = v.shrinks();
+        assert!(shrinks.iter().any(|s| s.len() < 3));
+        assert!(shrinks.iter().any(|s| s.len() == 3 && s[0] < 5));
+    }
+}

@@ -1,0 +1,301 @@
+//! Graph substrate: CSR representation and the paper's input generators.
+//!
+//! PageRank uses Graph500-generator inputs in RMAT, SSCA and Random
+//! configurations (Section 5.1); BFS uses GAP kronecker and uniform
+//! random graphs. We implement all of them from scratch with
+//! deterministic seeds:
+//! * [`GraphKind::Rmat`] — Graph500 Kronecker/R-MAT (a,b,c,d) =
+//!   (0.57, 0.19, 0.19, 0.05)
+//! * [`GraphKind::Ssca`] — SSCA#2-style clustered graph: vertices grouped
+//!   into cliquish clusters with sparse inter-cluster edges
+//! * [`GraphKind::Uniform`] — Erdős–Rényi-style uniform random
+
+use crate::util::rng::Rng;
+
+/// Compressed-sparse-row directed graph.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// offsets.len() == v + 1
+    pub offsets: Vec<u32>,
+    pub targets: Vec<u32>,
+}
+
+impl Csr {
+    pub fn vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.targets[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Build from an edge list (duplicates kept — multigraph semantics,
+    /// matching Graph500 generator output).
+    pub fn from_edges(v: usize, edges: &[(u32, u32)]) -> Self {
+        let mut degree = vec![0u32; v];
+        for &(s, _) in edges {
+            degree[s as usize] += 1;
+        }
+        let mut offsets = vec![0u32; v + 1];
+        for i in 0..v {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0u32; edges.len()];
+        for &(s, t) in edges {
+            let c = &mut cursor[s as usize];
+            targets[*c as usize] = t;
+            *c += 1;
+        }
+        Self { offsets, targets }
+    }
+
+    /// The transpose (in-edges), needed by pull-based PageRank (DUP).
+    pub fn transpose(&self) -> Csr {
+        let v = self.vertices();
+        let mut edges = Vec::with_capacity(self.edges());
+        for s in 0..v {
+            for &t in self.neighbors(s) {
+                edges.push((t, s as u32));
+            }
+        }
+        Csr::from_edges(v, &edges)
+    }
+
+    /// Sanity invariants for property tests.
+    pub fn check(&self) -> Result<(), String> {
+        let v = self.vertices() as u32;
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        for w in self.offsets.windows(2) {
+            if w[1] < w[0] {
+                return Err("offsets not monotone".into());
+            }
+        }
+        if *self.offsets.last().unwrap() as usize != self.targets.len() {
+            return Err("offsets tail != edge count".into());
+        }
+        if let Some(&t) = self.targets.iter().find(|&&t| t >= v) {
+            return Err(format!("target {t} out of range {v}"));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphKind {
+    Rmat,
+    Ssca,
+    Uniform,
+}
+
+impl GraphKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphKind::Rmat => "rmat",
+            GraphKind::Ssca => "ssca",
+            GraphKind::Uniform => "uniform",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rmat" | "kron" => Some(GraphKind::Rmat),
+            "ssca" => Some(GraphKind::Ssca),
+            "uniform" | "random" => Some(GraphKind::Uniform),
+            _ => None,
+        }
+    }
+}
+
+/// Generate a graph with `v` vertices (rounded up to a power of two for
+/// RMAT) and ~`v * avg_degree` directed edges.
+pub fn generate(kind: GraphKind, v: usize, avg_degree: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0x9A27);
+    match kind {
+        GraphKind::Rmat => rmat(v.next_power_of_two(), v * avg_degree, &mut rng),
+        GraphKind::Ssca => ssca(v, avg_degree, &mut rng),
+        GraphKind::Uniform => uniform(v, v * avg_degree, &mut rng),
+    }
+}
+
+fn uniform(v: usize, e: usize, rng: &mut Rng) -> Csr {
+    let edges: Vec<(u32, u32)> = (0..e)
+        .map(|_| {
+            (
+                rng.usize_below(v) as u32,
+                rng.usize_below(v) as u32,
+            )
+        })
+        .collect();
+    Csr::from_edges(v, &edges)
+}
+
+/// Graph500 R-MAT: recursive quadrant descent with (a,b,c,d) =
+/// (0.57, 0.19, 0.19, 0.05) and the standard noise on each level.
+fn rmat(v: usize, e: usize, rng: &mut Rng) -> Csr {
+    assert!(v.is_power_of_two());
+    let levels = v.trailing_zeros();
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let edges: Vec<(u32, u32)> = (0..e)
+        .map(|_| {
+            let (mut s, mut t) = (0usize, 0usize);
+            for _ in 0..levels {
+                s <<= 1;
+                t <<= 1;
+                let r = rng.f64();
+                if r < a {
+                    // top-left
+                } else if r < a + b {
+                    t |= 1;
+                } else if r < a + b + c {
+                    s |= 1;
+                } else {
+                    s |= 1;
+                    t |= 1;
+                }
+            }
+            (s as u32, t as u32)
+        })
+        .collect();
+    Csr::from_edges(v, &edges)
+}
+
+/// SSCA#2-flavoured clustered graph: vertices in contiguous clusters of
+/// size up to `max_cluster`; dense intra-cluster edges plus sparse
+/// inter-cluster links.
+fn ssca(v: usize, avg_degree: usize, rng: &mut Rng) -> Csr {
+    let max_cluster = (avg_degree * 2).max(2);
+    let mut edges = Vec::with_capacity(v * avg_degree);
+    let mut start = 0usize;
+    while start < v {
+        let size = 1 + rng.usize_below(max_cluster.min(v - start));
+        // intra-cluster: each vertex links to ~avg_degree/2 cluster peers
+        for i in 0..size {
+            let s = (start + i) as u32;
+            for _ in 0..avg_degree / 2 {
+                let t = (start + rng.usize_below(size)) as u32;
+                edges.push((s, t));
+            }
+            // inter-cluster long link(s)
+            for _ in 0..(avg_degree - avg_degree / 2) {
+                edges.push((s, rng.usize_below(v) as u32));
+            }
+        }
+        start += size;
+    }
+    Csr::from_edges(v, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn all_kinds_produce_valid_csr() {
+        for kind in [GraphKind::Rmat, GraphKind::Ssca, GraphKind::Uniform] {
+            let g = generate(kind, 512, 8, 42);
+            g.check().unwrap();
+            assert!(g.edges() >= 512 * 4, "{kind:?}: {} edges", g.edges());
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(GraphKind::Rmat, 256, 8, 7);
+        let b = generate(GraphKind::Rmat, 256, 8, 7);
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.targets, b.targets);
+        let c = generate(GraphKind::Rmat, 256, 8, 8);
+        assert_ne!(a.targets, c.targets);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = generate(GraphKind::Rmat, 1024, 16, 3);
+        let mut degs: Vec<usize> = (0..g.vertices()).map(|v| g.out_degree(v)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // heavy head: top 1% of vertices own a disproportionate share
+        let top: usize = degs[..10].iter().sum();
+        let mean = g.edges() / g.vertices();
+        assert!(
+            top > 10 * mean * 4,
+            "top10={top}, mean_deg={mean} — not skewed"
+        );
+    }
+
+    #[test]
+    fn uniform_is_not_skewed() {
+        let g = generate(GraphKind::Uniform, 1024, 16, 3);
+        let max_deg = (0..g.vertices()).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg < 16 * 4, "max degree {max_deg} too skewed for uniform");
+    }
+
+    #[test]
+    fn transpose_preserves_edge_count_and_reverses() {
+        let g = generate(GraphKind::Uniform, 128, 4, 9);
+        let t = g.transpose();
+        t.check().unwrap();
+        assert_eq!(g.edges(), t.edges());
+        // edge multiset reversal: (s,t) in g <=> (t,s) in t
+        let mut fwd: Vec<(u32, u32)> = Vec::new();
+        for s in 0..g.vertices() {
+            for &tgt in g.neighbors(s) {
+                fwd.push((s as u32, tgt));
+            }
+        }
+        let mut rev: Vec<(u32, u32)> = Vec::new();
+        for s in 0..t.vertices() {
+            for &tgt in t.neighbors(s) {
+                rev.push((tgt, s as u32));
+            }
+        }
+        fwd.sort_unstable();
+        rev.sort_unstable();
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn property_csr_from_random_edges_valid() {
+        ptest::check(
+            11,
+            50,
+            |rng| {
+                let v = 1 + rng.usize_below(64);
+                let e = rng.usize_below(256);
+                let edges: Vec<(u32, u32)> = (0..e)
+                    .map(|_| (rng.usize_below(v) as u32, rng.usize_below(v) as u32))
+                    .collect();
+                edges.iter().flat_map(|&(a, b)| [a as usize, b as usize]).collect::<Vec<usize>>()
+            },
+            |flat| {
+                if flat.len() % 2 != 0 {
+                    return Ok(());
+                }
+                let v = flat.iter().copied().max().map_or(1, |m| m + 1);
+                let edges: Vec<(u32, u32)> = flat
+                    .chunks(2)
+                    .map(|c| (c[0] as u32, c[1] as u32))
+                    .collect();
+                let g = Csr::from_edges(v, &edges);
+                g.check()?;
+                if g.edges() != edges.len() {
+                    return Err("edge count mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

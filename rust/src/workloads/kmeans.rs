@@ -1,0 +1,498 @@
+//! K-Means clustering benchmark (Section 5.1).
+//!
+//! Lloyd iterations with a fixed iteration count (as in the paper, to
+//! bound simulation time). Points are read-only and partitioned across
+//! cores; the shared, commutatively-updated state is the per-cluster
+//! accumulator (component-wise sums + counts) that every core hammers —
+//! the paper's motivating case for the soft-merge optimization, because
+//! cluster accumulators have high reuse in each core's L1.
+//!
+//! Variants:
+//! * FGL — one padded lock per cluster protecting its sums line + count
+//! * DUP — Rodinia-style per-thread copy of the accumulator, reduced at
+//!   the end of each iteration
+//! * CCache — sums lines are CData with an AddF32 merge; counts are f32
+//!   CData in their own line; soft_merge after every point
+//! * approx (Section 6.3) — CCache with an ApproxAddF32 merge dropping
+//!   ~10% of line merges; reports intra-cluster-distance degradation
+
+use crate::exec::{RunResult, Variant};
+use crate::merge::MergeKind;
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::{CoreCtx, Machine};
+use crate::util::rng::Rng;
+
+/// Dimensions fixed at 16 f32 = one cache line per point / per centroid
+/// row (the natural CCache granularity; see DESIGN.md §Hardware-Adaptation).
+pub const DIM: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct KmParams {
+    pub points: usize,
+    pub clusters: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// >0.0 selects the approximate-merge variant (CCache only).
+    pub approx_drop_p: f32,
+}
+
+impl Default for KmParams {
+    fn default() -> Self {
+        Self {
+            points: 4096,
+            clusters: 4,
+            iters: 3,
+            seed: 0x44EA,
+            approx_drop_p: 0.0,
+        }
+    }
+}
+
+impl KmParams {
+    pub fn with_points(mut self, n: usize) -> Self {
+        self.points = n;
+        self
+    }
+
+    pub fn working_set_bytes(&self) -> u64 {
+        (self.points * DIM * 4) as u64
+    }
+}
+
+/// Deterministic dataset: `clusters` well-separated Gaussian blobs,
+/// point order shuffled. Returns (points, true_centers).
+pub fn dataset(p: &KmParams) -> (Vec<[f32; DIM]>, Vec<[f32; DIM]>) {
+    let mut rng = Rng::new(p.seed);
+    let mut centers = Vec::with_capacity(p.clusters);
+    for _ in 0..p.clusters {
+        let mut c = [0f32; DIM];
+        for x in c.iter_mut() {
+            *x = rng.f32_range(-50.0, 50.0);
+        }
+        centers.push(c);
+    }
+    let mut pts = Vec::with_capacity(p.points);
+    for i in 0..p.points {
+        let c = &centers[i % p.clusters];
+        let mut v = [0f32; DIM];
+        for (j, x) in v.iter_mut().enumerate() {
+            *x = c[j] + rng.normal() as f32 * 2.0;
+        }
+        pts.push(v);
+    }
+    rng.shuffle(&mut pts);
+    (pts, centers)
+}
+
+fn nearest(point: &[f32; DIM], centroids: &[[f32; DIM]]) -> usize {
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for (c, cen) in centroids.iter().enumerate() {
+        let mut d = 0f32;
+        for j in 0..DIM {
+            let t = point[j] - cen[j];
+            d += t * t;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Sequential golden run: final centroids after `iters` Lloyd steps.
+pub fn golden(p: &KmParams) -> Vec<[f32; DIM]> {
+    let (pts, centers) = dataset(p);
+    let mut centroids = centers;
+    for _ in 0..p.iters {
+        let mut sums = vec![[0f32; DIM]; p.clusters];
+        let mut counts = vec![0f32; p.clusters];
+        for pt in &pts {
+            let c = nearest(pt, &centroids);
+            for j in 0..DIM {
+                sums[c][j] += pt[j];
+            }
+            counts[c] += 1.0;
+        }
+        for c in 0..p.clusters {
+            if counts[c] > 0.0 {
+                for j in 0..DIM {
+                    centroids[c][j] = sums[c][j] / counts[c];
+                }
+            }
+        }
+    }
+    centroids
+}
+
+/// Mean intra-cluster squared distance for a set of centroids.
+pub fn intra_cluster_distance(p: &KmParams, centroids: &[[f32; DIM]]) -> f64 {
+    let (pts, _) = dataset(p);
+    let mut total = 0f64;
+    for pt in &pts {
+        let c = nearest(pt, centroids);
+        for j in 0..DIM {
+            let t = (pt[j] - centroids[c][j]) as f64;
+            total += t * t;
+        }
+    }
+    total / pts.len() as f64
+}
+
+#[derive(Clone, Copy)]
+struct Layout {
+    points: Addr,
+    centroids: Addr,
+    sums: Addr,
+    counts: Addr,
+    locks: Addr,
+    copies: Addr,
+    copy_stride: u64,
+    /// Offset of the counts line inside a DUP copy block.
+    copy_counts_off: u64,
+}
+
+const SLOT_SUMS: usize = 0;
+const SLOT_COUNTS: usize = 1;
+
+pub fn run(p: &KmParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    assert!(
+        p.clusters * 4 <= 64,
+        "counts must fit one line (clusters <= 16)"
+    );
+    let cores = cfg.cores;
+    let machine = Machine::new(cfg);
+    let (pts, centers) = dataset(p);
+
+    let layout = machine.setup(|mem| {
+        let points = mem.alloc_lines((p.points * DIM * 4) as u64);
+        for (i, pt) in pts.iter().enumerate() {
+            for j in 0..DIM {
+                mem.poke_f32(points.add((i * DIM + j) as u64 * 4), pt[j]);
+            }
+        }
+        let centroids = mem.alloc_lines((p.clusters * DIM * 4) as u64);
+        for (c, cen) in centers.iter().enumerate() {
+            for j in 0..DIM {
+                mem.poke_f32(centroids.add((c * DIM + j) as u64 * 4), cen[j]);
+            }
+        }
+        let sums = mem.alloc_lines((p.clusters * DIM * 4) as u64);
+        let counts = mem.alloc_lines(64); // all counts in one line (f32)
+        let copy_counts_off = ((p.clusters * DIM * 4) as u64).next_multiple_of(64);
+        let mut l = Layout {
+            points,
+            centroids,
+            sums,
+            counts,
+            locks: Addr(0),
+            copies: Addr(0),
+            copy_stride: 0,
+            copy_counts_off,
+        };
+        match variant {
+            Variant::Fgl => {
+                l.locks = mem.alloc_lines(p.clusters as u64 * 64);
+            }
+            Variant::Dup => {
+                let stride = copy_counts_off + 64;
+                l.copies = mem.alloc_lines(stride * cores as u64);
+                l.copy_stride = stride;
+            }
+            _ => {}
+        }
+        l
+    });
+
+    let merge_sums = MergeKind::AddF32;
+
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let p = p.clone();
+            let l = layout;
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                if variant == Variant::CCache {
+                    ctx.merge_init(SLOT_SUMS, merge_sums);
+                    ctx.merge_init(SLOT_COUNTS, MergeKind::AddF32);
+                }
+                // approximate variant (Section 6.3): "discards updates
+                // for some points in a dataset" — each point's
+                // accumulation is dropped with probability drop_p. (At
+                // our merge cadence — merge-on-evict keeps K-Means
+                // merges rare and huge — dropping whole merges would
+                // discard a core's entire epoch, so the perforation is
+                // applied at the paper's stated granularity: points.)
+                let mut drop_rng =
+                    crate::util::rng::Rng::new(p.seed ^ (0xD0 + core as u64));
+                let lo = core * p.points / cores;
+                let hi = (core + 1) * p.points / cores;
+                let sums_w = |c: usize, j: usize| l.sums.add((c * DIM + j) as u64 * 4);
+                let counts_w = |c: usize| l.counts.add(c as u64 * 4);
+
+                for _iter in 0..p.iters {
+                    // -- read current centroids into "registers" (timed) --
+                    let mut cen = vec![[0f32; DIM]; p.clusters];
+                    for c in 0..p.clusters {
+                        for j in 0..DIM {
+                            cen[c][j] =
+                                ctx.read_f32(l.centroids.add((c * DIM + j) as u64 * 4));
+                        }
+                    }
+
+                    // -- assignment + accumulation over my points --
+                    for i in lo..hi {
+                        let mut pt = [0f32; DIM];
+                        for j in 0..DIM {
+                            pt[j] = ctx.read_f32(l.points.add((i * DIM + j) as u64 * 4));
+                        }
+                        // distance compute: clusters * DIM * 3 flops
+                        ctx.compute((p.clusters * DIM * 3) as u64);
+                        let c = nearest(&pt, &cen);
+
+                        if variant == Variant::CCache
+                            && p.approx_drop_p > 0.0
+                            && drop_rng.bernoulli(p.approx_drop_p as f64)
+                        {
+                            continue; // perforated update
+                        }
+
+                        match variant {
+                            Variant::Fgl => {
+                                ctx.lock(l.locks.add(c as u64 * 64));
+                                for j in 0..DIM {
+                                    let a = sums_w(c, j);
+                                    let v = ctx.read_f32(a);
+                                    ctx.write_f32(a, v + pt[j]);
+                                }
+                                let a = counts_w(c);
+                                let v = ctx.read_f32(a);
+                                ctx.write_f32(a, v + 1.0);
+                                ctx.unlock(l.locks.add(c as u64 * 64));
+                            }
+                            Variant::Dup => {
+                                let base = l.copies.add(core as u64 * l.copy_stride);
+                                for j in 0..DIM {
+                                    let a = base.add((c * DIM + j) as u64 * 4);
+                                    let v = ctx.read_f32(a);
+                                    ctx.write_f32(a, v + pt[j]);
+                                }
+                                let ca = base.add(l.copy_counts_off + c as u64 * 4);
+                                let v = ctx.read_f32(ca);
+                                ctx.write_f32(ca, v + 1.0);
+                            }
+                            Variant::CCache => {
+                                for j in 0..DIM {
+                                    let a = sums_w(c, j);
+                                    let v = ctx.c_read_f32(a, SLOT_SUMS as u8);
+                                    ctx.c_write_f32(a, v + pt[j], SLOT_SUMS as u8);
+                                }
+                                let a = counts_w(c);
+                                let v = ctx.c_read_f32(a, SLOT_COUNTS as u8);
+                                ctx.c_write_f32(a, v + 1.0, SLOT_COUNTS as u8);
+                                ctx.soft_merge();
+                            }
+                            _ => unimplemented!("variant for kmeans"),
+                        }
+                    }
+
+                    // -- merge boundary --
+                    if variant == Variant::CCache {
+                        ctx.merge();
+                    }
+                    ctx.barrier();
+
+                    // -- DUP reduction (partitioned by cluster) --
+                    if variant == Variant::Dup {
+                        for c in 0..p.clusters {
+                            if c % cores != core {
+                                continue;
+                            }
+                            for src in 0..cores as u64 {
+                                let base = l.copies.add(src * l.copy_stride);
+                                for j in 0..DIM {
+                                    let a = sums_w(c, j);
+                                    let v = ctx.read_f32(a);
+                                    let add =
+                                        ctx.read_f32(base.add((c * DIM + j) as u64 * 4));
+                                    ctx.write_f32(a, v + add);
+                                }
+                                let ca = base.add(l.copy_counts_off + c as u64 * 4);
+                                let v = ctx.read_f32(counts_w(c));
+                                let add = ctx.read_f32(ca);
+                                ctx.write_f32(counts_w(c), v + add);
+                            }
+                        }
+                        ctx.barrier();
+                    }
+
+                    // -- centroid recompute + accumulator reset (cluster-
+                    //    partitioned, coherent) --
+                    for c in 0..p.clusters {
+                        if c % cores != core {
+                            continue;
+                        }
+                        let count = ctx.read_f32(counts_w(c));
+                        for j in 0..DIM {
+                            let s = ctx.read_f32(sums_w(c, j));
+                            if count > 0.0 {
+                                ctx.write_f32(
+                                    l.centroids.add((c * DIM + j) as u64 * 4),
+                                    s / count,
+                                );
+                            }
+                            ctx.write_f32(sums_w(c, j), 0.0);
+                        }
+                        ctx.write_f32(counts_w(c), 0.0);
+                        // zero every core's DUP copy of this cluster
+                        if variant == Variant::Dup {
+                            for src in 0..cores as u64 {
+                                let base = l.copies.add(src * l.copy_stride);
+                                for j in 0..DIM {
+                                    ctx.write_f32(
+                                        base.add((c * DIM + j) as u64 * 4),
+                                        0.0,
+                                    );
+                                }
+                                ctx.write_f32(
+                                    base.add(l.copy_counts_off + c as u64 * 4),
+                                    0.0,
+                                );
+                            }
+                        }
+                    }
+                    ctx.barrier();
+                }
+            });
+            f
+        })
+        .collect();
+
+    let stats = machine.run(programs);
+
+    // ---- verification ----
+    let gold = golden(p);
+    let final_centroids: Vec<[f32; DIM]> = machine.setup(|mem| {
+        (0..p.clusters)
+            .map(|c| {
+                let mut v = [0f32; DIM];
+                for j in 0..DIM {
+                    v[j] = mem.peek_f32(layout.centroids.add((c * DIM + j) as u64 * 4));
+                }
+                v
+            })
+            .collect()
+    });
+
+    let (verified, quality) = if p.approx_drop_p > 0.0 {
+        // approximate variant: judge by clustering-quality degradation
+        let gold_q = intra_cluster_distance(p, &gold);
+        let got_q = intra_cluster_distance(p, &final_centroids);
+        let degradation = (got_q - gold_q) / gold_q;
+        // the paper reports ~20% degradation at 10% drops; accept the run
+        // as long as clustering hasn't collapsed
+        (degradation < 2.0, Some(degradation))
+    } else {
+        let ok = gold.iter().zip(&final_centroids).all(|(g, f)| {
+            g.iter()
+                .zip(f)
+                .all(|(a, b)| (a - b).abs() <= 1e-2 * (1.0 + a.abs()))
+        });
+        (ok, None)
+    };
+
+    RunResult {
+        benchmark: if p.approx_drop_p > 0.0 {
+            "kmeans-approx".into()
+        } else {
+            "kmeans".into()
+        },
+        variant,
+        stats,
+        verified,
+        quality,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> KmParams {
+        KmParams {
+            points: 512,
+            clusters: 4,
+            iters: 2,
+            seed: 3,
+            approx_drop_p: 0.0,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_variants_verify() {
+        for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged from golden");
+        }
+    }
+
+    #[test]
+    fn golden_recovers_separated_clusters() {
+        let p = small();
+        let (_, centers) = dataset(&p);
+        let gold = golden(&p);
+        for c in &centers {
+            let best = gold
+                .iter()
+                .map(|g| {
+                    c.iter()
+                        .zip(g)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f32>()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 4.0, "center not recovered: d2={best}");
+        }
+    }
+
+    #[test]
+    fn ccache_reuses_cdata_lines() {
+        let r = run(&small(), Variant::CCache, cfg());
+        // accumulators are few lines with huge reuse: hits >> fills
+        assert!(
+            r.stats.ccache_l1_hits > r.stats.ccache_fills * 4,
+            "hits {} fills {}",
+            r.stats.ccache_l1_hits,
+            r.stats.ccache_fills
+        );
+    }
+
+    #[test]
+    fn approx_variant_degrades_bounded() {
+        let p = KmParams {
+            approx_drop_p: 0.1,
+            ..small()
+        };
+        let r = run(&p, Variant::CCache, cfg());
+        assert!(r.verified);
+        let q = r.quality.unwrap();
+        assert!(q < 2.0, "degradation {q} too large");
+    }
+
+    #[test]
+    fn dataset_deterministic() {
+        let p = small();
+        let (a, _) = dataset(&p);
+        let (b, _) = dataset(&p);
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.iter().zip(y).all(|(u, v)| u == v)));
+    }
+}

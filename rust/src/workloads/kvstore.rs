@@ -1,0 +1,439 @@
+//! Key-value store benchmark (Section 5.1).
+//!
+//! A lookup table of integer (or complex) values indexed by key; cores
+//! apply commutative updates to uniformly random keys, `accesses_per_key`
+//! times the key count in total. Variants:
+//!
+//! * CGL — one global lock
+//! * FGL — one padded lock per key (locks get their own lines to avoid
+//!   lock false-sharing, which is what makes FGL's footprint balloon in
+//!   Table 3)
+//! * DUP — a per-core copy of the whole value array, merged at the end
+//!   (the paper: "it was reasonable to duplicate the table across all
+//!   cores" since any core may access any key)
+//! * CCache — COps + soft_merge; merges happen on-demand at source-buffer
+//!   or L1 pressure
+//!
+//! Merge-function variants (Section 6.3): plain add, saturating add,
+//! complex multiplication.
+
+use crate::exec::{RunResult, Variant};
+use crate::merge::MergeKind;
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::{CoreCtx, Machine};
+use crate::util::rng::{Rng, Zipf};
+
+/// Which commutative update / merge function the store uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KvMerge {
+    /// `v += 1`, merge `mem += upd - src`.
+    Add,
+    /// `v = v + 1` saturating at `max` (merge clamps at memory).
+    Sat { max: u32 },
+    /// `v *= e^{i*theta}` on complex values, merge `mem *= upd / src`.
+    Cmul,
+}
+
+impl KvMerge {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvMerge::Add => "add",
+            KvMerge::Sat { .. } => "sat",
+            KvMerge::Cmul => "cmul",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KvParams {
+    pub keys: usize,
+    /// Total accesses = keys * accesses_per_key (paper: 16).
+    pub accesses_per_key: usize,
+    pub seed: u64,
+    pub merge: KvMerge,
+    /// 0.0 = uniform keys (the paper); >0 = zipf-skewed ablation.
+    pub zipf_theta: f64,
+}
+
+impl Default for KvParams {
+    fn default() -> Self {
+        Self {
+            keys: 4096,
+            accesses_per_key: 16,
+            seed: 0xCC57,
+            merge: KvMerge::Add,
+            zipf_theta: 0.0,
+        }
+    }
+}
+
+impl KvParams {
+    pub fn with_keys(mut self, keys: usize) -> Self {
+        self.keys = keys;
+        self
+    }
+
+    pub fn with_merge(mut self, merge: KvMerge) -> Self {
+        self.merge = merge;
+        self
+    }
+
+    /// Bytes per key in the value array.
+    fn value_bytes(&self) -> u64 {
+        match self.merge {
+            KvMerge::Cmul => 8,
+            _ => 4,
+        }
+    }
+
+    /// Working-set bytes of the core data structure (the Fig 6 x-axis).
+    pub fn working_set_bytes(&self) -> u64 {
+        self.keys as u64 * self.value_bytes()
+    }
+}
+
+/// The per-core key stream — shared by programs and the golden run.
+fn key_stream(p: &KvParams, core: usize) -> impl FnMut() -> usize {
+    let mut rng = Rng::new(p.seed ^ (core as u64 + 1).wrapping_mul(0x9E37_79B9));
+    let zipf = if p.zipf_theta > 0.0 {
+        Some(Zipf::new(p.keys, p.zipf_theta))
+    } else {
+        None
+    };
+    let keys = p.keys;
+    move || match &zipf {
+        Some(z) => z.sample(&mut rng),
+        None => rng.usize_below(keys),
+    }
+}
+
+/// Sequential golden run: per-key access counts.
+pub fn golden_counts(p: &KvParams, cores: usize) -> Vec<u32> {
+    let per_core = p.keys * p.accesses_per_key / cores;
+    let mut counts = vec![0u32; p.keys];
+    for core in 0..cores {
+        let mut next = key_stream(p, core);
+        for _ in 0..per_core {
+            counts[next()] += 1;
+        }
+    }
+    counts
+}
+
+/// Per-key lock stride: a pthread-mutex-sized object (40 B), word-aligned.
+const LOCK_STRIDE: u64 = 40;
+
+#[derive(Clone, Copy)]
+struct Layout {
+    values: Addr,
+    locks: Addr,
+    global_lock: Addr,
+    copies: Addr,
+    copy_stride: u64,
+}
+
+pub fn run(p: &KvParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    let cores = cfg.cores;
+    let machine = Machine::new(cfg);
+    let vb = p.value_bytes();
+
+    let layout = machine.setup(|mem| {
+        let values = mem.alloc_lines(p.keys as u64 * vb);
+        if p.merge == KvMerge::Cmul {
+            for k in 0..p.keys as u64 {
+                mem.poke_f32(values.add(k * 8), 1.0);
+                mem.poke_f32(values.add(k * 8 + 4), 0.0);
+            }
+        }
+        let mut l = Layout {
+            values,
+            locks: Addr(0),
+            global_lock: Addr(0),
+            copies: Addr(0),
+            copy_stride: 0,
+        };
+        match variant {
+            Variant::Fgl => {
+                // one pthread-mutex-sized (40 B) lock per key: the
+                // Table 3 footprint (FGL ~12x the value array) with the
+                // residual false sharing of ~1.6 locks per line
+                l.locks = mem.alloc_lines(p.keys as u64 * LOCK_STRIDE);
+            }
+            Variant::Cgl => {
+                l.global_lock = mem.alloc_lines(64);
+            }
+            Variant::Dup => {
+                let stride = (p.keys as u64 * vb).next_multiple_of(64);
+                l.copies = mem.alloc_lines(stride * cores as u64);
+                l.copy_stride = stride;
+                if p.merge == KvMerge::Cmul {
+                    for c in 0..cores as u64 {
+                        for k in 0..p.keys as u64 {
+                            mem.poke_f32(l.copies.add(c * stride + k * 8), 1.0);
+                            mem.poke_f32(l.copies.add(c * stride + k * 8 + 4), 0.0);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        l
+    });
+
+    let per_core = p.keys * p.accesses_per_key / cores;
+    let merge_kind = match p.merge {
+        KvMerge::Add => MergeKind::AddU32,
+        KvMerge::Sat { max } => MergeKind::SatAddU32 { max },
+        KvMerge::Cmul => MergeKind::CmulF32,
+    };
+    // the rotation factor for cmul updates
+    let (fr, fi) = (0.01f32.cos(), 0.01f32.sin());
+
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let p = p.clone();
+            let l = layout;
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                let mut next = key_stream(&p, core);
+                match variant {
+                    Variant::Cgl | Variant::Fgl => {
+                        for _ in 0..per_core {
+                            let k = next() as u64;
+                            let lock = if variant == Variant::Fgl {
+                                l.locks.add(k * LOCK_STRIDE)
+                            } else {
+                                l.global_lock
+                            };
+                            ctx.lock(lock);
+                            update_coherent(ctx, &p, l.values, k, fr, fi);
+                            ctx.unlock(lock);
+                            ctx.compute(4);
+                        }
+                    }
+                    Variant::Dup => {
+                        let base = l.copies.add(core as u64 * l.copy_stride);
+                        for _ in 0..per_core {
+                            let k = next() as u64;
+                            update_coherent(ctx, &p, base, k, fr, fi);
+                            ctx.compute(4);
+                        }
+                        ctx.barrier();
+                        // reduction: this core merges its key range over
+                        // all copies into the master array
+                        let lo = (core * p.keys / cores) as u64;
+                        let hi = ((core + 1) * p.keys / cores) as u64;
+                        dup_reduce(ctx, &p, &l, cores, lo, hi);
+                        ctx.barrier();
+                    }
+                    Variant::CCache => {
+                        ctx.merge_init(0, merge_kind);
+                        for _ in 0..per_core {
+                            let k = next() as u64;
+                            update_ccache(ctx, &p, l.values, k, fr, fi);
+                            ctx.soft_merge();
+                            ctx.compute(4);
+                        }
+                        ctx.merge();
+                        ctx.barrier();
+                    }
+                    Variant::Atomic => unimplemented!("atomics KV not in the paper"),
+                }
+            });
+            f
+        })
+        .collect();
+
+    let stats = machine.run(programs);
+
+    // ---- verification against the sequential golden run ----
+    let counts = golden_counts(p, cores);
+    let verified = machine.setup(|mem| match p.merge {
+        KvMerge::Add => (0..p.keys)
+            .all(|k| mem.peek(layout.values.add(k as u64 * 4)) == counts[k]),
+        KvMerge::Sat { max } => (0..p.keys)
+            .all(|k| mem.peek(layout.values.add(k as u64 * 4)) == counts[k].min(max)),
+        KvMerge::Cmul => (0..p.keys).all(|k| {
+            let re = mem.peek_f32(layout.values.add(k as u64 * 8));
+            let im = mem.peek_f32(layout.values.add(k as u64 * 8 + 4));
+            // golden: factor^count
+            let theta = 0.01f64 * counts[k] as f64;
+            let (gr, gi) = (theta.cos() as f32, theta.sin() as f32);
+            (re - gr).abs() < 1e-2 && (im - gi).abs() < 1e-2
+        }),
+    });
+
+    RunResult {
+        benchmark: format!("kvstore-{}", p.merge.name()),
+        variant,
+        stats,
+        verified,
+        quality: None,
+    }
+}
+
+/// One coherent (locked or private-copy) update.
+fn update_coherent(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32, fi: f32) {
+    match p.merge {
+        KvMerge::Add => {
+            let a = base.add(k * 4);
+            let v = ctx.read_u32(a);
+            ctx.write_u32(a, v.wrapping_add(1));
+        }
+        KvMerge::Sat { max } => {
+            let a = base.add(k * 4);
+            let v = ctx.read_u32(a);
+            ctx.write_u32(a, (v + 1).min(max));
+        }
+        KvMerge::Cmul => {
+            let ar = base.add(k * 8);
+            let ai = base.add(k * 8 + 4);
+            let (re, im) = (ctx.read_f32(ar), ctx.read_f32(ai));
+            ctx.compute(6);
+            ctx.write_f32(ar, re * fr - im * fi);
+            ctx.write_f32(ai, re * fi + im * fr);
+        }
+    }
+}
+
+/// One CCache COp update.
+fn update_ccache(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32, fi: f32) {
+    match p.merge {
+        KvMerge::Add | KvMerge::Sat { .. } => {
+            let a = base.add(k * 4);
+            let v = ctx.c_read_u32(a, 0);
+            ctx.c_write_u32(a, v.wrapping_add(1), 0);
+        }
+        KvMerge::Cmul => {
+            let ar = base.add(k * 8);
+            let ai = base.add(k * 8 + 4);
+            let (re, im) = (ctx.c_read_f32(ar, 0), ctx.c_read_f32(ai, 0));
+            ctx.compute(6);
+            ctx.c_write_f32(ar, re * fr - im * fi, 0);
+            ctx.c_write_f32(ai, re * fi + im * fr, 0);
+        }
+    }
+}
+
+/// DUP reduction of key range [lo, hi) over all `cores` copies into the
+/// master array. Note for Sat: private copies hold raw counts; the clamp
+/// is applied against the master (the DUP merge function, same as
+/// CCache's — the paper uses the same merge for both).
+fn dup_reduce(ctx: &mut CoreCtx, p: &KvParams, l: &Layout, cores: usize, lo: u64, hi: u64) {
+    for k in lo..hi {
+        match p.merge {
+            KvMerge::Add | KvMerge::Sat { .. } => {
+                let master = l.values.add(k * 4);
+                let mut acc = ctx.read_u32(master);
+                for c in 0..cores as u64 {
+                    let v = ctx.read_u32(l.copies.add(c * l.copy_stride + k * 4));
+                    acc = acc.wrapping_add(v);
+                    ctx.compute(1);
+                }
+                if let KvMerge::Sat { max } = p.merge {
+                    acc = acc.min(max);
+                }
+                ctx.write_u32(master, acc);
+            }
+            KvMerge::Cmul => {
+                let ar = l.values.add(k * 8);
+                let ai = l.values.add(k * 8 + 4);
+                let (mut re, mut im) = (ctx.read_f32(ar), ctx.read_f32(ai));
+                for c in 0..cores as u64 {
+                    let cr = ctx.read_f32(l.copies.add(c * l.copy_stride + k * 8));
+                    let ci = ctx.read_f32(l.copies.add(c * l.copy_stride + k * 8 + 4));
+                    let nr = re * cr - im * ci;
+                    let ni = re * ci + im * cr;
+                    re = nr;
+                    im = ni;
+                    ctx.compute(6);
+                }
+                ctx.write_f32(ar, re);
+                ctx.write_f32(ai, im);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> KvParams {
+        KvParams {
+            keys: 256,
+            accesses_per_key: 8,
+            seed: 11,
+            merge: KvMerge::Add,
+            zipf_theta: 0.0,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_variants_verify_add() {
+        for v in [Variant::Cgl, Variant::Fgl, Variant::Dup, Variant::CCache] {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {:?} diverged", v);
+        }
+    }
+
+    #[test]
+    fn sat_variant_clamps() {
+        let p = small().with_merge(KvMerge::Sat { max: 3 });
+        for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {:?} diverged", v);
+        }
+    }
+
+    #[test]
+    fn cmul_variant_verifies() {
+        let p = KvParams {
+            keys: 64,
+            accesses_per_key: 8,
+            merge: KvMerge::Cmul,
+            ..small()
+        };
+        for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {:?} diverged", v);
+        }
+    }
+
+    #[test]
+    fn ccache_produces_merges_and_no_invalidations_on_values() {
+        let r = run(&small(), Variant::CCache, cfg());
+        assert!(r.stats.merges > 0);
+        assert!(r.stats.cops > 0);
+    }
+
+    #[test]
+    fn fgl_produces_lock_traffic() {
+        let r = run(&small(), Variant::Fgl, cfg());
+        assert!(r.stats.lock_acquires > 0);
+        assert!(r.stats.invalidations > 0);
+    }
+
+    #[test]
+    fn dup_allocates_more_memory_than_ccache() {
+        let d = run(&small(), Variant::Dup, cfg());
+        let c = run(&small(), Variant::CCache, cfg());
+        assert!(d.stats.bytes_allocated > c.stats.bytes_allocated);
+    }
+
+    #[test]
+    fn zipf_skew_also_verifies() {
+        let p = KvParams {
+            zipf_theta: 0.9,
+            ..small()
+        };
+        for v in [Variant::Fgl, Variant::CCache] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {:?} diverged", v);
+        }
+    }
+}

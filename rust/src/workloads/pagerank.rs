@@ -1,0 +1,385 @@
+//! PageRank benchmark (Section 5.1).
+//!
+//! Damped power iteration over a CSR graph, fixed iteration count.
+//! Variants:
+//! * FGL — push-based: each core pushes its vertices' contributions into
+//!   `rank_next[v]` under a per-vertex lock
+//! * DUP — the paper's *optimized* duplication: no locks, pull-based
+//!   double buffer. One read-only copy holds the previous iteration, the
+//!   other receives this iteration's values; copies switch each
+//!   iteration. Requires the transpose (in-edge) CSR.
+//! * CCache — push-based with `rank_next` as CData (AddF32 merges) and
+//!   soft_merge per source vertex
+//!
+//! Inputs: RMAT / SSCA / uniform graphs (Graph500 generator
+//! substitution, see workloads::graph).
+
+use crate::exec::{RunResult, Variant};
+use crate::merge::MergeKind;
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::{CoreCtx, Machine};
+use crate::workloads::graph::{generate, Csr, GraphKind};
+
+#[derive(Clone, Debug)]
+pub struct PrParams {
+    pub vertices: usize,
+    pub avg_degree: usize,
+    pub graph: GraphKind,
+    pub iters: usize,
+    pub damping: f32,
+    pub seed: u64,
+}
+
+impl Default for PrParams {
+    fn default() -> Self {
+        Self {
+            vertices: 4096,
+            avg_degree: 8,
+            graph: GraphKind::Uniform,
+            iters: 3,
+            damping: 0.85,
+            seed: 0x9A6E,
+        }
+    }
+}
+
+impl PrParams {
+    pub fn with_vertices(mut self, v: usize) -> Self {
+        self.vertices = v;
+        self
+    }
+
+    pub fn with_graph(mut self, g: GraphKind) -> Self {
+        self.graph = g;
+        self
+    }
+
+    /// Rank-structure working set (two f32 arrays) — the Fig 6 x-axis.
+    pub fn working_set_bytes(&self) -> u64 {
+        (self.vertices * 8) as u64
+    }
+
+    pub fn build_graph(&self) -> Csr {
+        generate(self.graph, self.vertices, self.avg_degree, self.seed)
+    }
+}
+
+/// Sequential golden run (push order, matching the parallel variants'
+/// arithmetic up to merge reordering).
+pub fn golden(p: &PrParams, g: &Csr) -> Vec<f32> {
+    let v = g.vertices();
+    let mut old = vec![1.0f32 / v as f32; v];
+    let mut new = vec![0.0f32; v];
+    for _ in 0..p.iters {
+        new.iter_mut().for_each(|x| *x = 0.0);
+        for u in 0..v {
+            let deg = g.out_degree(u);
+            if deg == 0 {
+                continue;
+            }
+            let contrib = old[u] / deg as f32;
+            for &t in g.neighbors(u) {
+                new[t as usize] += contrib;
+            }
+        }
+        for t in 0..v {
+            new[t] = (1.0 - p.damping) / v as f32 + p.damping * new[t];
+        }
+        std::mem::swap(&mut old, &mut new);
+    }
+    old
+}
+
+#[derive(Clone, Copy)]
+struct Layout {
+    offsets: Addr,
+    targets: Addr,
+    /// Transpose CSR (DUP only).
+    t_offsets: Addr,
+    t_targets: Addr,
+    /// Out-degree array (DUP pull needs source degrees).
+    out_deg: Addr,
+    rank: [Addr; 2], // double buffer: roles swap each iteration
+    locks: Addr,
+}
+
+const SLOT_RANK: usize = 0;
+
+pub fn run(p: &PrParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    let cores = cfg.cores;
+    let machine = Machine::new(cfg);
+    let g = p.build_graph();
+    let v = g.vertices();
+    // pull-based variants (DUP and CCache) work on the transpose; the
+    // push-based FGL works on the forward CSR. Each variant allocates
+    // only the direction it uses (Table 3 footprint).
+    let t = if matches!(variant, Variant::Dup | Variant::CCache) {
+        Some(g.transpose())
+    } else {
+        None
+    };
+
+    let layout = machine.setup(|mem| {
+        let (offsets, targets) = if t.is_none() {
+            let offsets = mem.alloc_lines((v as u64 + 1) * 4);
+            for (i, &o) in g.offsets.iter().enumerate() {
+                mem.poke(offsets.add(i as u64 * 4), o);
+            }
+            let targets = mem.alloc_lines(g.edges().max(1) as u64 * 4);
+            for (i, &tv) in g.targets.iter().enumerate() {
+                mem.poke(targets.add(i as u64 * 4), tv);
+            }
+            (offsets, targets)
+        } else {
+            (Addr(0), Addr(0))
+        };
+        let rank0 = mem.alloc_lines(v as u64 * 4);
+        let rank1 = mem.alloc_lines(v as u64 * 4);
+        let init = 1.0f32 / v as f32;
+        for i in 0..v as u64 {
+            mem.poke_f32(rank0.add(i * 4), init);
+            mem.poke_f32(rank1.add(i * 4), 0.0);
+        }
+        let mut l = Layout {
+            offsets,
+            targets,
+            t_offsets: Addr(0),
+            t_targets: Addr(0),
+            out_deg: Addr(0),
+            rank: [rank0, rank1],
+            locks: Addr(0),
+        };
+        if let Some(tg) = &t {
+            let t_offsets = mem.alloc_lines((v as u64 + 1) * 4);
+            for (i, &o) in tg.offsets.iter().enumerate() {
+                mem.poke(t_offsets.add(i as u64 * 4), o);
+            }
+            let t_targets = mem.alloc_lines(tg.edges().max(1) as u64 * 4);
+            for (i, &tv) in tg.targets.iter().enumerate() {
+                mem.poke(t_targets.add(i as u64 * 4), tv);
+            }
+            let out_deg = mem.alloc_lines(v as u64 * 4);
+            for i in 0..v {
+                mem.poke(out_deg.add(i as u64 * 4), g.out_degree(i) as u32);
+            }
+            l.t_offsets = t_offsets;
+            l.t_targets = t_targets;
+            l.out_deg = out_deg;
+        }
+        if variant == Variant::Fgl {
+            // per-vertex lock, unpadded (4 B each) — PageRank's FGL
+            // footprint in Table 3 is modest
+            l.locks = mem.alloc_lines(v as u64 * 4);
+        }
+        l
+    });
+
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let p = p.clone();
+            let l = layout;
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                if variant == Variant::CCache {
+                    ctx.merge_init(SLOT_RANK, MergeKind::AddF32);
+                }
+                let lo = core * v / cores;
+                let hi = (core + 1) * v / cores;
+
+                for iter in 0..p.iters {
+                    let old = l.rank[iter % 2];
+                    let new = l.rank[(iter + 1) % 2];
+
+                    match variant {
+                        Variant::Fgl => {
+                            // push: iterate my sources, scatter
+                            // contributions under per-vertex locks
+                            for u in lo..hi {
+                                let s = ctx.read_u32(l.offsets.add(u as u64 * 4));
+                                let e = ctx.read_u32(l.offsets.add((u as u64 + 1) * 4));
+                                let deg = e - s;
+                                if deg == 0 {
+                                    continue;
+                                }
+                                let r = ctx.read_f32(old.add(u as u64 * 4));
+                                let contrib = r / deg as f32;
+                                ctx.compute(2);
+                                for ei in s..e {
+                                    let tv =
+                                        ctx.read_u32(l.targets.add(ei as u64 * 4)) as u64;
+                                    let a = new.add(tv * 4);
+                                    let lock = l.locks.add(tv * 4);
+                                    ctx.lock(lock);
+                                    let cur = ctx.read_f32(a);
+                                    ctx.write_f32(a, cur + contrib);
+                                    ctx.unlock(lock);
+                                    ctx.compute(1);
+                                }
+                            }
+                            ctx.barrier();
+                            // damping pass over my destination range
+                            for dst in lo..hi {
+                                let a = new.add(dst as u64 * 4);
+                                let r = ctx.read_f32(a);
+                                ctx.write_f32(
+                                    a,
+                                    (1.0 - p.damping) / v as f32 + p.damping * r,
+                                );
+                                ctx.compute(2);
+                            }
+                            // reset the old buffer: it becomes the next
+                            // iteration's accumulator
+                            if iter + 1 < p.iters {
+                                for dst in lo..hi {
+                                    ctx.write_f32(old.add(dst as u64 * 4), 0.0);
+                                }
+                            }
+                            ctx.barrier();
+                        }
+                        Variant::Dup | Variant::CCache => {
+                            // pull: iterate my destinations, gather from
+                            // in-neighbors. DUP reads the shared old copy
+                            // coherently (the paper's optimized
+                            // double-buffer duplication); CCache marks
+                            // the whole rank structure CData — old-rank
+                            // reads privatize lines that stay clean and
+                            // are silently dropped under dirty-merge
+                            // (Section 6.4), new-rank writes carry the
+                            // AddF32 merge.
+                            for dst in lo..hi {
+                                let s = ctx.read_u32(l.t_offsets.add(dst as u64 * 4));
+                                let e =
+                                    ctx.read_u32(l.t_offsets.add((dst as u64 + 1) * 4));
+                                let mut acc = 0f32;
+                                for ei in s..e {
+                                    let u =
+                                        ctx.read_u32(l.t_targets.add(ei as u64 * 4))
+                                            as u64;
+                                    let deg = ctx.read_u32(l.out_deg.add(u * 4));
+                                    let r = if variant == Variant::CCache {
+                                        let r =
+                                            ctx.c_read_f32(old.add(u * 4), SLOT_RANK as u8);
+                                        ctx.soft_merge(); // w-1 discipline
+                                        r
+                                    } else {
+                                        ctx.read_f32(old.add(u * 4))
+                                    };
+                                    acc += r / deg as f32;
+                                    ctx.compute(2);
+                                }
+                                let val =
+                                    (1.0 - p.damping) / v as f32 + p.damping * acc;
+                                let a = new.add(dst as u64 * 4);
+                                if variant == Variant::CCache {
+                                    let cur = ctx.c_read_f32(a, SLOT_RANK as u8);
+                                    ctx.c_write_f32(a, cur + val, SLOT_RANK as u8);
+                                    ctx.soft_merge();
+                                } else {
+                                    ctx.write_f32(a, val);
+                                }
+                            }
+                            if variant == Variant::CCache {
+                                ctx.merge();
+                            }
+                            ctx.barrier();
+                            // CCache: reset the old buffer (next
+                            // iteration's merge-add accumulator starts
+                            // from zero); DUP overwrites, no reset needed
+                            if variant == Variant::CCache && iter + 1 < p.iters {
+                                for dst in lo..hi {
+                                    ctx.write_f32(old.add(dst as u64 * 4), 0.0);
+                                }
+                                ctx.barrier();
+                            }
+                        }
+                        _ => unimplemented!("variant for pagerank"),
+                    }
+                }
+            });
+            f
+        })
+        .collect();
+
+    let stats = machine.run(programs);
+
+    // ---- verification ----
+    let gold = golden(p, &g);
+    let final_buf = layout.rank[p.iters % 2];
+    let verified = machine.setup(|mem| {
+        (0..v).all(|i| {
+            let got = mem.peek_f32(final_buf.add(i as u64 * 4));
+            (got - gold[i]).abs() <= 1e-4 + 1e-3 * gold[i].abs()
+        })
+    });
+
+    RunResult {
+        benchmark: format!("pagerank-{}", p.graph.name()),
+        variant,
+        stats,
+        verified,
+        quality: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> PrParams {
+        PrParams {
+            vertices: 256,
+            avg_degree: 4,
+            graph: GraphKind::Uniform,
+            iters: 2,
+            damping: 0.85,
+            seed: 5,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_variants_verify_uniform() {
+        for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged from golden");
+        }
+    }
+
+    #[test]
+    fn rmat_and_ssca_inputs_verify() {
+        for kind in [GraphKind::Rmat, GraphKind::Ssca] {
+            let p = small().with_graph(kind);
+            for v in [Variant::Fgl, Variant::CCache] {
+                let r = run(&p, v, cfg());
+                assert!(r.verified, "{kind:?}/{v:?} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_ranks_form_distribution() {
+        let p = small();
+        let g = p.build_graph();
+        let gold = golden(&p, &g);
+        let sum: f32 = gold.iter().sum();
+        // dangling mass leaks, so <= 1; all entries positive
+        assert!(sum > 0.2 && sum <= 1.001, "sum={sum}");
+        assert!(gold.iter().all(|&r| r > 0.0));
+    }
+
+    #[test]
+    fn dup_variant_has_no_lock_traffic() {
+        let r = run(&small(), Variant::Dup, cfg());
+        assert_eq!(r.stats.lock_acquires, 0);
+    }
+
+    #[test]
+    fn ccache_merges_ranks() {
+        let r = run(&small(), Variant::CCache, cfg());
+        assert!(r.stats.merges > 0);
+        assert!(r.stats.cops > 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Cross-module integration tests: every benchmark x variant verifies
+//! against its sequential golden run on the full (small-scaled) machine,
+//! plus cross-cutting behaviours the paper claims.
+
+use ccache::coordinator::{sized_benchmark, BenchKind};
+use ccache::exec::Variant;
+use ccache::sim::config::MachineConfig;
+use ccache::workloads::graph::GraphKind;
+use ccache::workloads::Benchmark;
+
+fn cfg() -> MachineConfig {
+    // a small but fully-shaped machine: 4 cores, real hierarchy
+    let mut cfg = MachineConfig::default();
+    cfg.cores = 4;
+    cfg.l1.size_bytes = 4 << 10;
+    cfg.l2.size_bytes = 32 << 10;
+    cfg.llc.size_bytes = 256 << 10;
+    cfg
+}
+
+fn all_verify(bench: Benchmark) {
+    for v in bench.variants() {
+        if v == Variant::Cgl && !matches!(bench, Benchmark::Kv(_)) {
+            continue;
+        }
+        let r = bench.run(v, cfg());
+        assert!(
+            r.verified,
+            "{} / {} diverged from the sequential golden run",
+            r.benchmark,
+            v.name()
+        );
+    }
+}
+
+#[test]
+fn kvstore_all_variants_verify() {
+    all_verify(sized_benchmark(BenchKind::KvAdd, 0.5, cfg().llc.size_bytes, 3));
+}
+
+#[test]
+fn kvstore_sat_all_variants_verify() {
+    all_verify(sized_benchmark(BenchKind::KvSat, 0.5, cfg().llc.size_bytes, 3));
+}
+
+#[test]
+fn kvstore_cmul_all_variants_verify() {
+    all_verify(sized_benchmark(BenchKind::KvCmul, 0.25, cfg().llc.size_bytes, 3));
+}
+
+#[test]
+fn kmeans_all_variants_verify() {
+    all_verify(sized_benchmark(BenchKind::KMeans, 0.5, cfg().llc.size_bytes, 3));
+}
+
+#[test]
+fn kmeans_approx_verifies_with_bounded_quality() {
+    let b = sized_benchmark(BenchKind::KMeansApprox, 0.5, cfg().llc.size_bytes, 3);
+    let r = b.run(Variant::CCache, cfg());
+    assert!(r.verified);
+    assert!(r.quality.is_some());
+}
+
+#[test]
+fn pagerank_all_graphs_all_variants_verify() {
+    for g in [GraphKind::Rmat, GraphKind::Ssca, GraphKind::Uniform] {
+        all_verify(sized_benchmark(
+            BenchKind::PageRank(g),
+            0.5,
+            cfg().llc.size_bytes,
+            3,
+        ));
+    }
+}
+
+#[test]
+fn bfs_all_graphs_all_variants_verify() {
+    for g in [GraphKind::Rmat, GraphKind::Uniform] {
+        all_verify(sized_benchmark(
+            BenchKind::Bfs(g),
+            0.5,
+            cfg().llc.size_bytes,
+            3,
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------
+// cross-cutting claims
+// ---------------------------------------------------------------------
+
+#[test]
+fn ccache_generates_far_fewer_invalidations_than_fgl() {
+    let b = sized_benchmark(BenchKind::KvAdd, 0.5, cfg().llc.size_bytes, 9);
+    let cc = b.run(Variant::CCache, cfg());
+    let fgl = b.run(Variant::Fgl, cfg());
+    assert!(
+        cc.stats.invalidations * 10 < fgl.stats.invalidations.max(10),
+        "ccache invalidations {} vs fgl {}",
+        cc.stats.invalidations,
+        fgl.stats.invalidations
+    );
+}
+
+#[test]
+fn memory_footprint_ordering_matches_table3() {
+    // FGL > DUP > CCache for the KV store (Table 3: 12x / 8x / 1x)
+    let b = sized_benchmark(BenchKind::KvAdd, 0.5, cfg().llc.size_bytes, 9);
+    let fgl = b.run(Variant::Fgl, cfg()).stats.bytes_allocated;
+    let dup = b.run(Variant::Dup, cfg()).stats.bytes_allocated;
+    let cc = b.run(Variant::CCache, cfg()).stats.bytes_allocated;
+    assert!(fgl > dup, "FGL {fgl} <= DUP {dup}");
+    assert!(dup > cc, "DUP {dup} <= CCache {cc}");
+    let f = fgl as f64 / cc as f64;
+    assert!(f > 5.0 && f < 20.0, "FGL ratio {f}");
+}
+
+#[test]
+fn merge_on_evict_reduces_kmeans_evictions_dramatically() {
+    // Fig 9's key datapoint
+    let b = sized_benchmark(BenchKind::KMeans, 0.25, cfg().llc.size_bytes, 9);
+    let with = b.run(Variant::CCache, cfg());
+    let mut no = cfg();
+    no.ccache.merge_on_evict = false;
+    let without = b.run(Variant::CCache, no);
+    assert!(
+        without.stats.src_buf_evictions > with.stats.src_buf_evictions.max(1) * 50,
+        "no-opt {} vs opt {}",
+        without.stats.src_buf_evictions,
+        with.stats.src_buf_evictions
+    );
+}
+
+#[test]
+fn dirty_merge_cuts_pagerank_merges() {
+    // Section 6.4: PageRank reads much CData it never updates
+    let b = sized_benchmark(
+        BenchKind::PageRank(GraphKind::Uniform),
+        0.5,
+        cfg().llc.size_bytes,
+        9,
+    );
+    let with = b.run(Variant::CCache, cfg());
+    let mut no = cfg();
+    no.ccache.dirty_merge = false;
+    let without = b.run(Variant::CCache, no);
+    assert!(
+        without.stats.merges >= with.stats.merges,
+        "dirty-merge increased merges?!"
+    );
+}
+
+#[test]
+fn deterministic_stats_across_runs() {
+    let b = sized_benchmark(BenchKind::KvAdd, 0.25, cfg().llc.size_bytes, 5);
+    let a = b.run(Variant::CCache, cfg());
+    let c = b.run(Variant::CCache, cfg());
+    assert_eq!(a.cycles(), c.cycles());
+    assert_eq!(a.stats.merges, c.stats.merges);
+    assert_eq!(a.stats.llc.misses, c.stats.llc.misses);
+}

@@ -1,0 +1,304 @@
+//! Property-based tests (in-house driver, rust/src/util/ptest.rs) on the
+//! simulator's coordinator invariants: protocol-state legality, merge
+//! serializability, LRU/inclusion behaviour and merge-function algebra.
+
+use ccache::merge::funcs::apply_line;
+use ccache::merge::{LineData, MergeKind, LINE_WORDS};
+use ccache::sim::addr::{Addr, Line};
+use ccache::sim::cache::{Cache, Victim};
+use ccache::sim::config::MachineConfig;
+use ccache::sim::directory::Directory;
+use ccache::sim::memsys::MemSystem;
+use ccache::util::ptest::{check, PropResult};
+use ccache::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// directory protocol legality under random op sequences
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_directory_invariants_under_random_traffic() {
+    check(
+        0xD1,
+        100,
+        |rng| {
+            let n = 20 + rng.usize_below(200);
+            (0..n)
+                .map(|_| rng.below(4) * 100 + rng.below(4) * 10 + rng.below(8))
+                .collect::<Vec<u64>>()
+        },
+        |ops| -> PropResult {
+            let mut d = Directory::new();
+            for &op in ops {
+                let kind = op / 100;
+                let line = Line((op / 10) % 10);
+                let core = (op % 10) as usize;
+                match kind {
+                    0 => {
+                        d.get_s(line, core);
+                    }
+                    1 => {
+                        d.get_m(line, core);
+                    }
+                    2 => {
+                        d.put(line, core, core % 2 == 0);
+                    }
+                    _ => {
+                        d.recall(line);
+                    }
+                }
+                d.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// LRU cache: no duplicate tags, bounded occupancy
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_cache_never_duplicates_tags() {
+    check(
+        0xCA,
+        60,
+        |rng| {
+            let n = 50 + rng.usize_below(400);
+            (0..n).map(|_| rng.below(64)).collect::<Vec<u64>>()
+        },
+        |lines| -> PropResult {
+            let mut c = Cache::new(8, 4);
+            for &l in lines {
+                let line = Line(l);
+                if c.lookup(line).is_some() {
+                    continue;
+                }
+                match c.choose_victim(line) {
+                    Victim::Free { way } => {
+                        c.install(way, line);
+                    }
+                    Victim::Evict { way, meta } => {
+                        c.invalidate(meta.line);
+                        c.install(way, line);
+                    }
+                    Victim::Deadlock => return Err("deadlock without CData".into()),
+                }
+                // no duplicate tags
+                let mut seen = std::collections::HashSet::new();
+                for slot in c.valid_slots() {
+                    if !seen.insert(c.meta(slot).line.0) {
+                        return Err(format!("duplicate tag {:#x}", c.meta(slot).line.0));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// merge serializability: N cores' commutative updates through the full
+// machine equal the sequential sum regardless of interleaving
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_cop_increments_serialize() {
+    check(
+        0x5E,
+        25,
+        |rng| {
+            // (lines, increments per core) — both shrinkable
+            (1 + rng.usize_below(32), 1 + rng.usize_below(200))
+        },
+        |&(nlines, incs)| -> PropResult {
+            let mut cfg = MachineConfig::test_small();
+            cfg.cores = 1;
+            let mut s = MemSystem::new(cfg);
+            s.merge_init(0, 0, MergeKind::AddU32);
+            let base = s.alloc_lines(64 * nlines as u64);
+            let mut rng = Rng::new(42);
+            let mut expected = vec![0u32; nlines];
+            for _ in 0..incs {
+                let k = rng.usize_below(nlines);
+                let a = Addr(base.0 + (k as u64) * 64);
+                let (v, _) = s.c_read(0, a, 0);
+                s.c_write(0, a, v + 1, 0);
+                s.soft_merge(0);
+                expected[k] += 1;
+            }
+            s.merge_all(0);
+            s.check_invariants()?;
+            for k in 0..nlines {
+                let got = s.peek(Addr(base.0 + k as u64 * 64));
+                if got != expected[k] {
+                    return Err(format!("line {k}: got {got}, want {}", expected[k]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// merge-function algebra: order independence (the paper's Section 3
+// correctness condition) for every registered kind
+// ---------------------------------------------------------------------
+
+fn rand_line(rng: &mut Rng, lo: f32, hi: f32) -> LineData {
+    let mut l = [0u32; LINE_WORDS];
+    for w in l.iter_mut() {
+        *w = rng.f32_range(lo, hi).to_bits();
+    }
+    l
+}
+
+#[test]
+fn property_merge_kinds_order_independent() {
+    let kinds = [
+        MergeKind::AddF32,
+        MergeKind::MinF32,
+        MergeKind::MaxF32,
+        MergeKind::BitOr,
+        MergeKind::CmulF32,
+    ];
+    check(
+        0xA1,
+        40,
+        |rng| rng.below(u64::MAX),
+        |&seed| -> PropResult {
+            let mut rng = Rng::new(seed);
+            for kind in kinds {
+                let (mem0, src, a, b) = match kind {
+                    MergeKind::BitOr => {
+                        let mut mk = || {
+                            let mut l = [0u32; LINE_WORDS];
+                            for w in l.iter_mut() {
+                                *w = rng.next_u32();
+                            }
+                            l
+                        };
+                        (mk(), [0u32; LINE_WORDS], mk(), mk())
+                    }
+                    MergeKind::CmulF32 => (
+                        rand_line(&mut rng, -2.0, 2.0),
+                        rand_line(&mut rng, 1.0, 3.0),
+                        rand_line(&mut rng, 1.0, 3.0),
+                        rand_line(&mut rng, 1.0, 3.0),
+                    ),
+                    _ => (
+                        rand_line(&mut rng, -100.0, 100.0),
+                        rand_line(&mut rng, -100.0, 100.0),
+                        rand_line(&mut rng, -100.0, 100.0),
+                        rand_line(&mut rng, -100.0, 100.0),
+                    ),
+                };
+                let ab = apply_line(kind, &src, &b, &apply_line(kind, &src, &a, &mem0, false), false);
+                let ba = apply_line(kind, &src, &a, &apply_line(kind, &src, &b, &mem0, false), false);
+                for i in 0..LINE_WORDS {
+                    let (x, y) = (f32::from_bits(ab[i]), f32::from_bits(ba[i]));
+                    let exact = matches!(kind, MergeKind::BitOr | MergeKind::MinF32 | MergeKind::MaxF32);
+                    let ok = if exact {
+                        ab[i] == ba[i]
+                    } else {
+                        (x - y).abs() <= 1e-3 * (1.0 + x.abs().max(y.abs()))
+                    };
+                    if !ok {
+                        return Err(format!("{kind:?}: lane {i}: {x} vs {y}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// memsys invariants under random legal COp/coherent phases (multi-core)
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_memsys_invariants_random_phases() {
+    check(
+        0x3C,
+        15,
+        |rng| (rng.below(u64::MAX), 2 + rng.usize_below(3)),
+        |&(seed, cores)| -> PropResult {
+            let mut cfg = MachineConfig::test_small();
+            cfg.cores = cores;
+            let mut s = MemSystem::new(cfg);
+            for c in 0..cores {
+                s.merge_init(c, 0, MergeKind::AddU32);
+            }
+            let cdata = s.alloc_lines(64 * 128);
+            let coh = s.alloc_lines(64 * 128);
+            let mut rng = Rng::new(seed);
+            for _phase in 0..4 {
+                for _ in 0..500 {
+                    let core = rng.usize_below(cores);
+                    let k = rng.below(128);
+                    match rng.below(4) {
+                        0 | 1 => {
+                            let a = Addr(cdata.0 + k * 64);
+                            let (v, _) = s.c_read(core, a, 0);
+                            s.c_write(core, a, v.wrapping_add(1), 0);
+                            s.soft_merge(core);
+                        }
+                        2 => {
+                            let _ = s.read(core, Addr(coh.0 + k * 64));
+                        }
+                        _ => {
+                            s.write(core, Addr(coh.0 + k * 64), k as u32);
+                        }
+                    }
+                }
+                for c in 0..cores {
+                    s.merge_all(c);
+                }
+                s.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// failure injection: the w-1 rule faults loudly instead of corrupting
+// ---------------------------------------------------------------------
+
+#[test]
+fn pinned_overflow_panics_with_w1_message() {
+    let result = std::panic::catch_unwind(|| {
+        let mut cfg = MachineConfig::test_small();
+        cfg.ccache.source_buffer_entries = 64;
+        let mut s = MemSystem::new(cfg);
+        s.merge_init(0, 0, MergeKind::AddU32);
+        let sets = s.cfg.l1.sets() as u64;
+        let base = s.alloc_lines(64 * sets * 8);
+        for i in 0..5u64 {
+            // same set, never soft_merged -> pinned
+            s.c_read(0, Addr(base.0 + i * sets * 64), 0);
+        }
+    });
+    let msg = match result.unwrap_err().downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => *p.downcast::<&str>().map(|s| Box::new(s.to_string())).unwrap(),
+    };
+    assert!(msg.contains("w-1"), "unexpected panic message: {msg}");
+}
+
+#[test]
+fn uninitialized_merge_type_faults() {
+    let result = std::panic::catch_unwind(|| {
+        let mut cfg = MachineConfig::test_small();
+        cfg.ccache.dirty_merge = false;
+        let mut s = MemSystem::new(cfg);
+        s.merge_init(0, 0, MergeKind::AddU32);
+        let a = s.alloc_lines(64);
+        // merge type 2 was never installed
+        let (v, _) = s.c_read(0, a, 2);
+        s.c_write(0, a, v + 1, 2);
+        s.merge_all(0);
+    });
+    assert!(result.is_err(), "uninitialized MFRF slot must fault");
+}

@@ -1,0 +1,237 @@
+//! Three-layer round-trip tests: AOT artifacts (JAX/Pallas -> HLO text)
+//! loaded and executed from rust via PJRT, cross-checked against the
+//! native merge implementations and the simulator's recorded merges.
+//!
+//! All tests skip gracefully when `make artifacts` hasn't run; the
+//! Makefile's `test` target builds artifacts first, so CI-style runs
+//! always exercise them.
+
+use ccache::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
+use ccache::merge::{LineData, MergeKind, LINE_WORDS};
+use ccache::runtime::artifacts::artifacts_available;
+use ccache::runtime::{Engine, PjrtMergeExecutor};
+use ccache::util::rng::Rng;
+
+fn rand_items(rng: &mut Rng, n: usize, float: bool) -> Vec<MergeItem> {
+    (0..n)
+        .map(|_| {
+            let mut mk = || {
+                let mut l: LineData = [0; LINE_WORDS];
+                for w in l.iter_mut() {
+                    *w = if float {
+                        rng.f32_range(-100.0, 100.0).to_bits()
+                    } else {
+                        rng.next_u32() >> 8 // keep u32 adds < 2^24 for f32 path
+                    };
+                }
+                l
+            };
+            MergeItem {
+                src: mk(),
+                upd: mk(),
+                mem: mk(),
+                drop_update: rng.bernoulli(0.3),
+            }
+        })
+        .collect()
+}
+
+fn close(a: &LineData, b: &LineData, tol: f32) -> bool {
+    a.iter().zip(b).all(|(&x, &y)| {
+        let (fx, fy) = (f32::from_bits(x), f32::from_bits(y));
+        (fx - fy).abs() <= tol * (1.0 + fx.abs().max(fy.abs()))
+    })
+}
+
+#[test]
+fn pjrt_matches_native_for_all_float_kinds() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut pjrt = PjrtMergeExecutor::load_default().unwrap();
+    let mut rng = Rng::new(0xF00D);
+    for kind in [
+        MergeKind::AddF32,
+        MergeKind::SatAddF32 { max: 37.0 },
+        MergeKind::MinF32,
+        MergeKind::MaxF32,
+        MergeKind::ApproxAddF32 { drop_p: 0.3 },
+    ] {
+        // batch sizes exercising padding and chunking
+        for n in [1usize, 7, 256, 300, 700] {
+            let items = rand_items(&mut rng, n, true);
+            let native = NativeExecutor.execute(kind, &items);
+            let via = pjrt.execute(kind, &items);
+            assert_eq!(native.len(), via.len());
+            for (i, (a, b)) in native.iter().zip(&via).enumerate() {
+                assert!(
+                    close(a, b, 1e-5),
+                    "{kind:?} n={n} item {i}: native {:?} pjrt {:?}",
+                    a[0],
+                    b[0]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_cmul() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut pjrt = PjrtMergeExecutor::load_default().unwrap();
+    let mut rng = Rng::new(0xCA11);
+    let items: Vec<MergeItem> = (0..300)
+        .map(|_| {
+            let mut mk = |lo: f32, hi: f32| {
+                let mut l: LineData = [0; LINE_WORDS];
+                for w in l.iter_mut() {
+                    *w = rng.f32_range(lo, hi).to_bits();
+                }
+                l
+            };
+            MergeItem {
+                src: mk(1.0, 4.0), // away from zero
+                upd: mk(1.0, 4.0),
+                mem: mk(-4.0, 4.0),
+                drop_update: false,
+            }
+        })
+        .collect();
+    let native = NativeExecutor.execute(MergeKind::CmulF32, &items);
+    let via = pjrt.execute(MergeKind::CmulF32, &items);
+    for (i, (a, b)) in native.iter().zip(&via).enumerate() {
+        assert!(close(a, b, 1e-3), "cmul item {i}");
+    }
+}
+
+#[test]
+fn pjrt_matches_native_bitor_exactly() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut pjrt = PjrtMergeExecutor::load_default().unwrap();
+    let mut rng = Rng::new(0xB17);
+    let items: Vec<MergeItem> = (0..513)
+        .map(|_| {
+            let mut mk = || {
+                let mut l: LineData = [0; LINE_WORDS];
+                for w in l.iter_mut() {
+                    *w = rng.next_u32() & 0x7FFF_FFFF; // i32-safe lanes
+                }
+                l
+            };
+            MergeItem {
+                src: mk(),
+                upd: mk(),
+                mem: mk(),
+                drop_update: false,
+            }
+        })
+        .collect();
+    let native = NativeExecutor.execute(MergeKind::BitOr, &items);
+    let via = pjrt.execute(MergeKind::BitOr, &items);
+    assert_eq!(native, via, "bitor must be bit-exact");
+}
+
+#[test]
+fn pjrt_u32_add_exact_below_2_24() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut pjrt = PjrtMergeExecutor::load_default().unwrap();
+    let mut rng = Rng::new(0xADD);
+    let items: Vec<MergeItem> = (0..256)
+        .map(|_| {
+            let mut src: LineData = [0; LINE_WORDS];
+            let mut mem: LineData = [0; LINE_WORDS];
+            for w in src.iter_mut() {
+                *w = (rng.next_u32() >> 12) % 1_000_000;
+            }
+            for w in mem.iter_mut() {
+                *w = (rng.next_u32() >> 12) % 1_000_000;
+            }
+            // ensure upd >= src so the delta is positive (counts)
+            let mut upd = src;
+            for w in upd.iter_mut() {
+                *w += (rng.next_u32() >> 20) % 1000;
+            }
+            MergeItem {
+                src,
+                upd,
+                mem,
+                drop_update: false,
+            }
+        })
+        .collect();
+    let native = NativeExecutor.execute(MergeKind::AddU32, &items);
+    let via = pjrt.execute(MergeKind::AddU32, &items);
+    assert_eq!(native, via, "u32 adds below 2^24 must round-trip exactly");
+}
+
+#[test]
+fn kmeans_step_kernel_matches_host_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut e = Engine::load_default().unwrap();
+    let mut rng = Rng::new(0x6E);
+    let n = 500;
+    let k = 5;
+    let points: Vec<[f32; 16]> = (0..n)
+        .map(|_| {
+            let mut p = [0f32; 16];
+            for x in p.iter_mut() {
+                *x = rng.f32_range(-10.0, 10.0);
+            }
+            p
+        })
+        .collect();
+    let centroids: Vec<[f32; 16]> = (0..k)
+        .map(|_| {
+            let mut c = [0f32; 16];
+            for x in c.iter_mut() {
+                *x = rng.f32_range(-10.0, 10.0);
+            }
+            c
+        })
+        .collect();
+    let (assign, sums, counts) = e.kmeans_step(&points, &centroids).unwrap();
+
+    // host reference
+    let mut want_assign = vec![0i32; n];
+    let mut want_sums = vec![[0f32; 16]; k];
+    let mut want_counts = vec![0f32; k];
+    for (i, p) in points.iter().enumerate() {
+        let mut best = 0;
+        let mut bd = f32::INFINITY;
+        for (c, cen) in centroids.iter().enumerate() {
+            let d: f32 = p.iter().zip(cen).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        want_assign[i] = best as i32;
+        for j in 0..16 {
+            want_sums[best][j] += p[j];
+        }
+        want_counts[best] += 1.0;
+    }
+    assert_eq!(assign, want_assign);
+    assert_eq!(counts, want_counts);
+    for c in 0..k {
+        for j in 0..16 {
+            assert!(
+                (sums[c][j] - want_sums[c][j]).abs() < 1e-2,
+                "sums[{c}][{j}]"
+            );
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Randomized stress of the COp / coherent-access protocol engine,
+//! checking the cross-structure invariants continuously.
+//!
+//! Legality discipline (the paper's Section 4.4 rule): while a region is
+//! being manipulated with COps, no coherent access touches it; phase
+//! boundaries (merge_all) separate the two access modes. The stress
+//! driver alternates phases to exercise both transition directions, and
+//! a multi-core variant checks that coherence actions never corrupt
+//! another core's CData.
+
+use ccache::merge::MergeKind;
+use ccache::sim::addr::Addr;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::memsys::MemSystem;
+
+fn lcg(x: &mut u64) -> u64 {
+    *x = x
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    *x >> 16
+}
+
+#[test]
+fn random_cop_coherent_phases_keep_invariants() {
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = 1;
+    let mut s = MemSystem::new(cfg);
+    s.merge_init(0, 0, MergeKind::AddU32);
+    let cdata = s.alloc_lines(64 * 2048);
+    let coh = s.alloc_lines(64 * 2048);
+    let mut x: u64 = 12345;
+    for phase in 0..40 {
+        // COp phase on the cdata region + coherent ops elsewhere
+        for _ in 0..2_000 {
+            let k = lcg(&mut x) % 2048;
+            match lcg(&mut x) % 5 {
+                0 | 1 => {
+                    let a = Addr(cdata.0 + k * 64);
+                    let (v, _) = s.c_read(0, a, 0);
+                    s.c_write(0, a, v + 1, 0);
+                    // w-1 discipline: keep CData evictable
+                    s.soft_merge(0);
+                }
+                2 => {
+                    s.soft_merge(0);
+                }
+                3 => {
+                    let _ = s.read(0, Addr(coh.0 + k * 64));
+                }
+                _ => {
+                    s.write(0, Addr(coh.0 + k * 64), 7);
+                }
+            }
+        }
+        s.merge_all(0);
+        s.check_invariants()
+            .unwrap_or_else(|e| panic!("phase {phase} post-merge: {e}"));
+        // transition phase: coherent sweep over part of the cdata region
+        for i in 0..256u64 {
+            let a = Addr(cdata.0 + i * 64);
+            let v = s.peek(a);
+            s.write(0, a, v);
+        }
+        s.check_invariants()
+            .unwrap_or_else(|e| panic!("phase {phase} post-sweep: {e}"));
+    }
+}
+
+#[test]
+fn multicore_cop_with_cross_core_coherent_traffic() {
+    // Core 0 runs COps on a region it previously touched coherently;
+    // core 1 hammers coherent lines in the same region's second half.
+    // Regression test for the stale-directory-registration bug: a CData
+    // line must never be invalidated by an incoming coherence message.
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = 2;
+    let mut s = MemSystem::new(cfg);
+    s.merge_init(0, 0, MergeKind::AddU32);
+    let region = s.alloc_lines(64 * 512);
+    let mut x = 99u64;
+    // step 1: core 0 reads region coherently (directory registers it)
+    for i in 0..512u64 {
+        let _ = s.read(0, Addr(region.0 + i * 64));
+    }
+    // step 2: core 0 privatizes random lines in the first half; core 1
+    // reads lines in the second half (invalidation-free but directory-
+    // visible traffic)
+    let mut expected = vec![0u32; 256];
+    for _ in 0..20_000 {
+        let k = lcg(&mut x) % 256;
+        let a = Addr(region.0 + k * 64);
+        match lcg(&mut x) % 4 {
+            0 | 1 => {
+                let (v, _) = s.c_read(0, a, 0);
+                s.c_write(0, a, v + 1, 0);
+                s.soft_merge(0);
+                expected[k as usize] += 1;
+            }
+            _ => {
+                let k2 = 256 + (k % 256);
+                let _ = s.read(1, Addr(region.0 + k2 * 64));
+            }
+        }
+    }
+    s.merge_all(0);
+    s.check_invariants().unwrap();
+    // all of core 0's increments must have survived
+    for k in 0..256u64 {
+        let got = s.peek(Addr(region.0 + k * 64));
+        assert_eq!(got, expected[k as usize], "line {k}");
+    }
+}
+
+#[test]
+fn cdata_survives_other_cores_writes_to_stale_registrations() {
+    // The exact bug scenario: read coherently, privatize, then have
+    // another core RFO the line while it sits in the source buffer.
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = 2;
+    let mut s = MemSystem::new(cfg);
+    s.merge_init(0, 0, MergeKind::AddU32);
+    let a = s.alloc_lines(64);
+    s.poke(a, 10);
+    // core 0: coherent read (dir registers, granted E)
+    let _ = s.read(0, a);
+    // core 0: privatize + update (transition cleans the registration)
+    let (v, _) = s.c_read(0, a, 0);
+    s.c_write(0, a, v + 5, 0);
+    // core 1: write the same line — must not destroy core 0's CData
+    s.write(1, a, 100);
+    s.check_invariants().unwrap();
+    // core 0's merge applies its delta on top of core 1's write
+    s.merge_all(0);
+    assert_eq!(s.peek(a), 105);
+}
