@@ -7,15 +7,14 @@
 //!      turn-taking distort the measured contention?
 //!  (3) lock backoff — FGL's spin-retry interval.
 //!  (4) zipf-skewed keys — contention concentration vs the paper's
-//!      uniform keys.
+//!      uniform keys, for both kvstore and the histogram workload.
 //!
 //!     cargo bench --bench ablation_design
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{run_verified, scaled_config, sized_workload};
+use ccache::exec::registry::{self, SizeSpec};
 use ccache::exec::Variant;
 use ccache::util::bench::Table;
-use ccache::workloads::kvstore::{KvMerge, KvParams};
-use ccache::workloads::Benchmark;
 
 fn main() {
     let base = scaled_config();
@@ -28,12 +27,16 @@ fn main() {
     for entries in [4usize, 8, 16, 32] {
         let mut cfg = base;
         cfg.ccache.source_buffer_entries = entries;
-        let kv = sized_benchmark(BenchKind::KvAdd, 1.0, cfg.llc.size_bytes, 42)
-            .run(Variant::CCache, cfg);
-        kv.assert_verified();
-        let km = sized_benchmark(BenchKind::KMeans, 1.0, cfg.llc.size_bytes, 42)
-            .run(Variant::CCache, cfg);
-        km.assert_verified();
+        let kv = run_verified(
+            &sized_workload("kvstore", 1.0, cfg.llc.size_bytes, 42),
+            Variant::CCache,
+            cfg,
+        );
+        let km = run_verified(
+            &sized_workload("kmeans", 1.0, cfg.llc.size_bytes, 42),
+            Variant::CCache,
+            cfg,
+        );
         t.row(&[
             entries.to_string(),
             format!("{:.1}", kv.cycles() as f64 / 1e6),
@@ -50,11 +53,9 @@ fn main() {
     for quantum in [0u64, 64, 256, 1024, 4096] {
         let mut cfg = base;
         cfg.quantum = quantum;
-        let bench = sized_benchmark(BenchKind::KvAdd, 0.5, cfg.llc.size_bytes, 42);
-        let fgl = bench.run(Variant::Fgl, cfg);
-        fgl.assert_verified();
-        let cc = bench.run(Variant::CCache, cfg);
-        cc.assert_verified();
+        let bench = sized_workload("kvstore", 0.5, cfg.llc.size_bytes, 42);
+        let fgl = run_verified(&bench, Variant::Fgl, cfg);
+        let cc = run_verified(&bench, Variant::CCache, cfg);
         t.row(&[
             quantum.to_string(),
             format!("{:.1}", fgl.cycles() as f64 / 1e6),
@@ -72,9 +73,8 @@ fn main() {
     for backoff in [10u64, 40, 160, 640] {
         let mut cfg = base;
         cfg.lock_backoff = backoff;
-        let bench = sized_benchmark(BenchKind::KvAdd, 0.5, cfg.llc.size_bytes, 42);
-        let fgl = bench.run(Variant::Fgl, cfg);
-        fgl.assert_verified();
+        let bench = sized_workload("kvstore", 0.5, cfg.llc.size_bytes, 42);
+        let fgl = run_verified(&bench, Variant::Fgl, cfg);
         t.row(&[
             backoff.to_string(),
             format!("{:.1}", fgl.cycles() as f64 / 1e6),
@@ -85,28 +85,23 @@ fn main() {
 
     // ---- (4) key skew ----
     let mut t = Table::new(
-        "ablation: zipf key skew (kvstore, ws = 0.5 LLC)",
-        &["theta", "FGL Mcyc", "CCACHE Mcyc", "speedup"],
+        "ablation: zipf key skew (ws = 0.5 LLC)",
+        &["benchmark", "theta", "FGL Mcyc", "CCACHE Mcyc", "speedup"],
     );
-    for theta in [0.0f64, 0.6, 0.9, 0.99] {
-        let p = KvParams {
-            keys: base.llc.size_bytes / 8,
-            accesses_per_key: 16,
-            seed: 42,
-            merge: KvMerge::Add,
-            zipf_theta: theta,
-        };
-        let bench = Benchmark::Kv(p);
-        let fgl = bench.run(Variant::Fgl, base);
-        fgl.assert_verified();
-        let cc = bench.run(Variant::CCache, base);
-        cc.assert_verified();
-        t.row(&[
-            format!("{theta:.2}"),
-            format!("{:.1}", fgl.cycles() as f64 / 1e6),
-            format!("{:.1}", cc.cycles() as f64 / 1e6),
-            format!("{:.2}x", fgl.cycles() as f64 / cc.cycles() as f64),
-        ]);
+    for name in ["kvstore", "histogram"] {
+        for theta in [0.0f64, 0.6, 0.9, 0.99] {
+            let size = SizeSpec::new(0.5, base.llc.size_bytes, 42).with_zipf(theta);
+            let bench = registry::build(name, &size).expect("registered");
+            let fgl = run_verified(&bench, Variant::Fgl, base);
+            let cc = run_verified(&bench, Variant::CCache, base);
+            t.row(&[
+                name.to_string(),
+                format!("{theta:.2}"),
+                format!("{:.1}", fgl.cycles() as f64 / 1e6),
+                format!("{:.1}", cc.cycles() as f64 / 1e6),
+                format!("{:.2}x", fgl.cycles() as f64 / cc.cycles() as f64),
+            ]);
+        }
     }
     t.print();
     println!(

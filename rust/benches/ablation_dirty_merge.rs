@@ -7,10 +7,9 @@
 //!
 //!     cargo bench --bench ablation_dirty_merge
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{run_verified, scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::util::bench::Table;
-use ccache::workloads::graph::GraphKind;
 
 fn main() {
     let base = scaled_config();
@@ -21,21 +20,14 @@ fn main() {
         "dirty-merge ablation — merges executed: no-opt / opt",
         &["benchmark", "merges (no opt)", "merges (opt)", "silent drops", "reduction"],
     );
-    for kind in [
-        BenchKind::KvAdd,
-        BenchKind::KMeans,
-        BenchKind::PageRank(GraphKind::Uniform),
-        BenchKind::Bfs(GraphKind::Rmat),
-    ] {
-        let bench = sized_benchmark(kind, 1.0, base.llc.size_bytes, 42);
+    for name in ["kvstore", "kmeans", "pagerank-uniform", "bfs-rmat"] {
+        let bench = sized_workload(name, 1.0, base.llc.size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let with = bench.run(Variant::CCache, base);
-        with.assert_verified();
-        let without = bench.run(Variant::CCache, no_dirty);
-        without.assert_verified();
+        let with = run_verified(&bench, Variant::CCache, base);
+        let without = run_verified(&bench, Variant::CCache, no_dirty);
         let ratio = without.stats.merges as f64 / with.stats.merges.max(1) as f64;
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             without.stats.merges.to_string(),
             with.stats.merges.to_string(),
             with.stats.silent_drops.to_string(),

@@ -10,9 +10,9 @@
 //!     CCACHE_FIG6_ALL=1 cargo bench --bench fig6_speedup   # all panels
 //!     CCACHE_FIG6_FRACS=0.25,0.5,1,2,4 ...                 # full x-axis
 
-use ccache::coordinator::{report, run_sweep, scaled_config, BenchKind};
+use ccache::coordinator::{report, run_sweep, scaled_config};
+use ccache::exec::registry;
 use ccache::exec::Variant;
-use ccache::workloads::graph::GraphKind;
 
 fn fracs() -> Vec<f64> {
     match std::env::var("CCACHE_FIG6_FRACS") {
@@ -26,34 +26,31 @@ fn fracs() -> Vec<f64> {
 
 fn main() {
     let cfg = scaled_config();
-    let panels = if std::env::var("CCACHE_FIG6_ALL").is_ok() {
-        BenchKind::fig6_panels()
+    let panels: Vec<&str> = if std::env::var("CCACHE_FIG6_ALL").is_ok() {
+        registry::fig6_panels().iter().map(|s| s.name).collect()
     } else {
         vec![
-            BenchKind::KvAdd,
-            BenchKind::KMeans,
-            BenchKind::PageRank(GraphKind::Rmat),
-            BenchKind::Bfs(GraphKind::Rmat),
-            BenchKind::KvSat,
-            BenchKind::KvCmul,
-            BenchKind::KMeansApprox,
+            "kvstore",
+            "kmeans",
+            "pagerank-rmat",
+            "bfs-rmat",
+            "kvstore-sat",
+            "kvstore-cmul",
+            "kmeans-approx",
         ]
     };
     let fracs = fracs();
-    for kind in panels {
-        eprintln!("== panel {} ==", kind.name());
-        let mut variants = vec![Variant::Fgl, Variant::Dup, Variant::CCache];
-        if matches!(kind, BenchKind::Bfs(_)) {
-            variants.push(Variant::Atomic);
-        }
-        let sweep = run_sweep(kind, &variants, &fracs, cfg, 42);
+    for name in panels {
+        eprintln!("== panel {name} ==");
+        // atomics cells only materialize where the workload supports
+        // them (BFS, histogram) — the sweep skips the rest
+        let variants = [Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic];
+        let sweep = run_sweep(name, &variants, &fracs, cfg, 42);
         report::fig6_table(&sweep).print();
-        if matches!(kind, BenchKind::Bfs(_)) {
-            // atomics column (Section 6.2's BFS comparison)
-            for p in &sweep.points {
-                if let Some(s) = p.speedup_vs_fgl(Variant::Atomic) {
-                    println!("  ws {:.2}: atomics speedup vs FGL {s:.2}x", p.frac);
-                }
+        // atomics column (Section 6.2's BFS comparison)
+        for p in &sweep.points {
+            if let Some(s) = p.speedup_vs_fgl(Variant::Atomic) {
+                println!("  ws {:.2}: atomics speedup vs FGL {s:.2}x", p.frac);
             }
         }
         println!();

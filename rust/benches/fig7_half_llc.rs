@@ -7,10 +7,9 @@
 //!
 //!     cargo bench --bench fig7_half_llc
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{run_verified, scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::util::bench::Table;
-use ccache::workloads::graph::GraphKind;
 
 fn main() {
     let full = scaled_config();
@@ -22,20 +21,18 @@ fn main() {
         &["benchmark", "DUP(full) Mcyc", "CCACHE(half) Mcyc", "CCache adv", "paper"],
     );
     let panels = [
-        (BenchKind::KvAdd, "1.1x"),
-        (BenchKind::KMeans, "1.19x"),
-        (BenchKind::PageRank(GraphKind::Uniform), "1.1x"),
-        (BenchKind::Bfs(GraphKind::Rmat), "1.91x"),
+        ("kvstore", "1.1x"),
+        ("kmeans", "1.19x"),
+        ("pagerank-uniform", "1.1x"),
+        ("bfs-rmat", "1.91x"),
     ];
-    for (kind, paper) in panels {
-        let bench = sized_benchmark(kind, 1.0, full.llc.size_bytes, 42);
+    for (name, paper) in panels {
+        let bench = sized_workload(name, 1.0, full.llc.size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let dup = bench.run(Variant::Dup, full);
-        dup.assert_verified();
-        let cc = bench.run(Variant::CCache, half);
-        cc.assert_verified();
+        let dup = run_verified(&bench, Variant::Dup, full);
+        let cc = run_verified(&bench, Variant::CCache, half);
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             format!("{:.1}", dup.cycles() as f64 / 1e6),
             format!("{:.1}", cc.cycles() as f64 / 1e6),
             format!("{:.2}x", dup.cycles() as f64 / cc.cycles() as f64),

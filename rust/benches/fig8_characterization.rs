@@ -11,9 +11,8 @@
 //!
 //!     cargo bench --bench fig8_characterization
 
-use ccache::coordinator::{report, run_sweep, scaled_config, BenchKind};
+use ccache::coordinator::{report, run_sweep, scaled_config};
 use ccache::exec::Variant;
-use ccache::workloads::graph::GraphKind;
 
 fn main() {
     let cfg = scaled_config();
@@ -22,24 +21,18 @@ fn main() {
 
     // (a) PageRank directory accesses
     eprintln!("== fig 8a: pagerank-uniform ==");
-    let s = run_sweep(
-        BenchKind::PageRank(GraphKind::Uniform),
-        &main3,
-        &fracs,
-        cfg,
-        42,
-    );
+    let s = run_sweep("pagerank-uniform", &main3, &fracs, cfg, 42);
     report::fig8_table(&s, "directory accesses", |r| r.stats.dir_msgs_per_kc()).print();
 
     // (b) KV store L3 misses
     eprintln!("== fig 8b: kvstore ==");
-    let s = run_sweep(BenchKind::KvAdd, &main3, &fracs, cfg, 42);
+    let s = run_sweep("kvstore", &main3, &fracs, cfg, 42);
     report::fig8_table(&s, "L3 misses", |r| r.stats.llc_misses_per_kc()).print();
 
     // (c) BFS invalidations (including the atomics variant)
     eprintln!("== fig 8c: bfs-rmat ==");
     let s = run_sweep(
-        BenchKind::Bfs(GraphKind::Rmat),
+        "bfs-rmat",
         &[Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic],
         &fracs,
         cfg,
@@ -49,6 +42,6 @@ fn main() {
 
     // (d) K-Means invalidations
     eprintln!("== fig 8d: kmeans ==");
-    let s = run_sweep(BenchKind::KMeans, &main3, &fracs, cfg, 42);
+    let s = run_sweep("kmeans", &main3, &fracs, cfg, 42);
     report::fig8_table(&s, "invalidations", |r| r.stats.invalidations_per_kc()).print();
 }

@@ -7,10 +7,9 @@
 //!
 //!     cargo bench --bench fig9_merge_on_evict
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{run_verified, scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::util::bench::Table;
-use ccache::workloads::graph::GraphKind;
 
 fn main() {
     let base = scaled_config();
@@ -22,22 +21,20 @@ fn main() {
         &["benchmark", "evictions (no opt)", "evictions (opt)", "reduction", "paper"],
     );
     let panels = [
-        (BenchKind::KvAdd, "~1x"),
-        (BenchKind::KMeans, "409.9x"),
-        (BenchKind::PageRank(GraphKind::Uniform), "-"),
-        (BenchKind::Bfs(GraphKind::Rmat), "2.2x"),
+        ("kvstore", "~1x"),
+        ("kmeans", "409.9x"),
+        ("pagerank-uniform", "-"),
+        ("bfs-rmat", "2.2x"),
     ];
-    for (kind, paper) in panels {
-        let bench = sized_benchmark(kind, 1.0, base.llc.size_bytes, 42);
+    for (name, paper) in panels {
+        let bench = sized_workload(name, 1.0, base.llc.size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let with = bench.run(Variant::CCache, base);
-        with.assert_verified();
-        let without = bench.run(Variant::CCache, no_opt);
-        without.assert_verified();
+        let with = run_verified(&bench, Variant::CCache, base);
+        let without = run_verified(&bench, Variant::CCache, no_opt);
         let ratio = without.stats.src_buf_evictions as f64
             / with.stats.src_buf_evictions.max(1) as f64;
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             without.stats.src_buf_evictions.to_string(),
             with.stats.src_buf_evictions.to_string(),
             format!("{ratio:.1}x"),

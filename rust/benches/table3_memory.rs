@@ -7,10 +7,9 @@
 //!
 //!     cargo bench --bench table3_memory
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{run_verified, scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::util::bench::Table;
-use ccache::workloads::graph::GraphKind;
 
 fn main() {
     let cfg = scaled_config();
@@ -19,24 +18,21 @@ fn main() {
         &["benchmark", "FGL", "DUP", "CCACHE", "paper FGL/DUP"],
     );
     let panels = [
-        (BenchKind::KvAdd, "12x / 8x"),
-        (BenchKind::PageRank(GraphKind::Uniform), "1.91x / 1.09x"),
-        (BenchKind::KMeans, "1x / 1x"),
-        (BenchKind::Bfs(GraphKind::Rmat), "5.2x / 4.9x"),
+        ("kvstore", "12x / 8x"),
+        ("pagerank-uniform", "1.91x / 1.09x"),
+        ("kmeans", "1x / 1x"),
+        ("bfs-rmat", "5.2x / 4.9x"),
     ];
-    for (kind, paper) in panels {
-        let bench = sized_benchmark(kind, 1.0, cfg.llc.size_bytes, 42);
+    for (name, paper) in panels {
+        let bench = sized_workload(name, 1.0, cfg.llc.size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let get_bytes = |v: Variant| {
-            let r = bench.run(v, cfg);
-            r.assert_verified();
-            r.stats.bytes_allocated as f64
-        };
+        let get_bytes =
+            |v: Variant| run_verified(&bench, v, cfg).stats.bytes_allocated as f64;
         let cc = get_bytes(Variant::CCache);
         let fgl = get_bytes(Variant::Fgl);
         let dup = get_bytes(Variant::Dup);
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             format!("{:.2}x", fgl / cc),
             format!("{:.2}x", dup / cc),
             "1x".into(),

@@ -5,10 +5,9 @@
 //!     cargo run --release --example approx_kmeans
 
 use ccache::coordinator::scaled_config;
-use ccache::exec::Variant;
+use ccache::exec::{Variant, WorkloadHandle};
 use ccache::util::bench::Table;
-use ccache::workloads::kmeans::KmParams;
-use ccache::workloads::Benchmark;
+use ccache::workloads::kmeans::{KmParams, KmWorkload};
 
 fn main() {
     let cfg = scaled_config();
@@ -27,7 +26,9 @@ fn main() {
             approx_drop_p: drop_p,
         };
         eprintln!("running drop_p={drop_p}...");
-        let r = Benchmark::KMeans(p).run(Variant::CCache, cfg);
+        let r = WorkloadHandle::new(KmWorkload::new(p))
+            .run(Variant::CCache, cfg)
+            .expect("ccache variant is supported");
         assert!(r.verified, "clustering collapsed at drop_p={drop_p}");
         if drop_p == 0.0 {
             base_cycles = r.cycles();

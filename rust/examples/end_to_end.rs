@@ -3,10 +3,10 @@
 //! speedup over FGL and DUP — plus a cross-layer merge validation.
 //!
 //! What runs:
-//!  1. All four paper benchmarks (KV store, K-Means, PageRank, BFS) in
-//!     FGL / DUP / CCache (+atomics for BFS) at a working set matching
-//!     the LLC, on the simulated 8-core Table 2 machine (scaled). Every
-//!     run is verified against its sequential golden run.
+//!  1. The registered benchmark suite (KV store, K-Means, PageRank, BFS,
+//!     histogram) in FGL / DUP / CCache at a working set matching the
+//!     LLC, on the simulated 8-core Table 2 machine (scaled). Every run
+//!     is verified against its sequential golden run.
 //!  2. Merge-path validation: a CCache run with merge recording on; the
 //!     recorded (src, upd, mem) line triples are re-executed through the
 //!     AOT-compiled Pallas merge kernels via PJRT and compared with the
@@ -14,14 +14,13 @@
 //!
 //!     cargo run --release --example end_to_end
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::merge::batch::{BatchExecutor, NativeExecutor};
 use ccache::merge::MergeKind;
 use ccache::runtime;
 use ccache::sim::machine::{CoreCtx, Machine};
 use ccache::util::bench::Table;
-use ccache::workloads::graph::GraphKind;
 
 fn main() {
     let cfg = scaled_config();
@@ -39,24 +38,26 @@ fn main() {
         &["benchmark", "FGL Mcycles", "DUP", "CCACHE", "verified"],
     );
     let panels = [
-        BenchKind::KvAdd,
-        BenchKind::KMeans,
-        BenchKind::PageRank(GraphKind::Uniform),
-        BenchKind::PageRank(GraphKind::Rmat),
-        BenchKind::Bfs(GraphKind::Rmat),
+        "kvstore",
+        "kmeans",
+        "pagerank-uniform",
+        "pagerank-rmat",
+        "bfs-rmat",
+        "histogram",
     ];
     let mut ccache_speedups = Vec::new();
-    for kind in panels {
-        let bench = sized_benchmark(kind, 1.0, cfg.llc.size_bytes, 77);
+    for name in panels {
+        let bench = sized_workload(name, 1.0, cfg.llc.size_bytes, 77);
         eprintln!("running {}...", bench.name());
-        let fgl = bench.run(Variant::Fgl, cfg);
-        let dup = bench.run(Variant::Dup, cfg);
-        let cc = bench.run(Variant::CCache, cfg);
+        let run = |v: Variant| bench.run(v, cfg).expect("supported variant");
+        let fgl = run(Variant::Fgl);
+        let dup = run(Variant::Dup);
+        let cc = run(Variant::CCache);
         let all_ok = fgl.verified && dup.verified && cc.verified;
         let s_cc = fgl.cycles() as f64 / cc.cycles() as f64;
         ccache_speedups.push(s_cc);
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             format!("{:.1}", fgl.cycles() as f64 / 1e6),
             format!("{:.2}x", fgl.cycles() as f64 / dup.cycles() as f64),
             format!("{s_cc:.2}x"),

@@ -9,13 +9,13 @@
 //!
 //!     cargo run --release --example graph_analytics
 
-use ccache::coordinator::scaled_config;
-use ccache::exec::Variant;
+use ccache::coordinator::{run_verified, scaled_config};
+use ccache::exec::{Variant, WorkloadHandle};
 use ccache::runtime;
 use ccache::util::bench::Table;
+use ccache::workloads::bfs::{BfsParams, BfsWorkload};
 use ccache::workloads::graph::GraphKind;
-use ccache::workloads::pagerank::{self, PrParams};
-use ccache::workloads::{bfs, Benchmark};
+use ccache::workloads::pagerank::{PrParams, PrWorkload};
 
 fn main() {
     let cfg = scaled_config();
@@ -34,16 +34,13 @@ fn main() {
             damping: 0.85,
             seed: 11,
         };
-        let bench = Benchmark::PageRank(p);
+        let bench = WorkloadHandle::new(PrWorkload::new(p));
         eprintln!("running {}...", bench.name());
-        let fgl = bench.run(Variant::Fgl, cfg);
-        fgl.assert_verified();
-        let dup = bench.run(Variant::Dup, cfg);
-        dup.assert_verified();
-        let cc = bench.run(Variant::CCache, cfg);
-        cc.assert_verified();
+        let fgl = run_verified(&bench, Variant::Fgl, cfg);
+        let dup = run_verified(&bench, Variant::Dup, cfg);
+        let cc = run_verified(&bench, Variant::CCache, cfg);
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             fgl.cycles().to_string(),
             format!("{:.2}x", fgl.cycles() as f64 / dup.cycles() as f64),
             format!("{:.2}x", fgl.cycles() as f64 / cc.cycles() as f64),
@@ -51,25 +48,21 @@ fn main() {
         ]);
     }
     for kind in [GraphKind::Rmat, GraphKind::Uniform] {
-        let p = bfs::BfsParams {
+        let p = BfsParams {
             vertices: cfg.llc.size_bytes / 48,
             avg_degree: 8,
             graph: kind,
             seed: 13,
             source: 0,
         };
-        let bench = Benchmark::Bfs(p);
+        let bench = WorkloadHandle::new(BfsWorkload::new(p));
         eprintln!("running {}...", bench.name());
-        let fgl = bench.run(Variant::Fgl, cfg);
-        fgl.assert_verified();
-        let dup = bench.run(Variant::Dup, cfg);
-        dup.assert_verified();
-        let cc = bench.run(Variant::CCache, cfg);
-        cc.assert_verified();
-        let at = bench.run(Variant::Atomic, cfg);
-        at.assert_verified();
+        let fgl = run_verified(&bench, Variant::Fgl, cfg);
+        let dup = run_verified(&bench, Variant::Dup, cfg);
+        let cc = run_verified(&bench, Variant::CCache, cfg);
+        let at = run_verified(&bench, Variant::Atomic, cfg);
         t.row(&[
-            bench.name(),
+            bench.name().to_string(),
             fgl.cycles().to_string(),
             format!("{:.2}x", fgl.cycles() as f64 / dup.cycles() as f64),
             format!("{:.2}x", fgl.cycles() as f64 / cc.cycles() as f64),

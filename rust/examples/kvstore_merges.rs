@@ -3,15 +3,15 @@
 //! Runs the key-value store with three different merge functions (plain
 //! add, saturating add, complex multiplication) and shows that CCache's
 //! advantage holds across all of them — the paper's core argument
-//! against fixed-function hardware (COUP).
+//! against fixed-function hardware (COUP). Custom parameters go through
+//! the same [`Workload`] trait + driver as the registry benchmarks.
 //!
 //!     cargo run --release --example kvstore_merges
 
-use ccache::coordinator::scaled_config;
-use ccache::exec::Variant;
+use ccache::coordinator::{run_verified, scaled_config};
+use ccache::exec::{Variant, WorkloadHandle};
 use ccache::util::bench::Table;
-use ccache::workloads::kvstore::{KvMerge, KvParams};
-use ccache::workloads::Benchmark;
+use ccache::workloads::kvstore::{KvMerge, KvParams, KvWorkload};
 
 fn main() {
     let cfg = scaled_config();
@@ -28,14 +28,11 @@ fn main() {
             merge,
             zipf_theta: 0.0,
         };
-        let bench = Benchmark::Kv(p);
+        let bench = WorkloadHandle::new(KvWorkload::new(p));
         eprintln!("running {}...", bench.name());
-        let fgl = bench.run(Variant::Fgl, cfg);
-        fgl.assert_verified();
-        let dup = bench.run(Variant::Dup, cfg);
-        dup.assert_verified();
-        let cc = bench.run(Variant::CCache, cfg);
-        cc.assert_verified();
+        let fgl = run_verified(&bench, Variant::Fgl, cfg);
+        let dup = run_verified(&bench, Variant::Dup, cfg);
+        let cc = run_verified(&bench, Variant::CCache, cfg);
         t.row(&[
             merge.name().to_string(),
             fgl.cycles().to_string(),

@@ -4,14 +4,14 @@
 //!
 //!     cargo run --release --example quickstart
 
-use ccache::coordinator::{scaled_config, sized_benchmark, BenchKind};
+use ccache::coordinator::{run_verified, scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::util::bench::Table;
 
 fn main() {
     let cfg = scaled_config();
     // a working set matching LLC capacity — the paper's sweet spot
-    let bench = sized_benchmark(BenchKind::KvAdd, 1.0, cfg.llc.size_bytes, 42);
+    let bench = sized_workload("kvstore", 1.0, cfg.llc.size_bytes, 42);
     println!(
         "benchmark: {} ({} cores, {} KiB LLC)\n",
         bench.name(),
@@ -22,9 +22,7 @@ fn main() {
     let mut results = Vec::new();
     for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
         eprintln!("running {}...", v.name());
-        let r = bench.run(v, cfg);
-        r.assert_verified();
-        results.push(r);
+        results.push(run_verified(&bench, v, cfg));
     }
 
     let fgl = results[0].cycles() as f64;

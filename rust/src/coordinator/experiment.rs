@@ -1,6 +1,9 @@
-//! Benchmark sizing: map a working-set fraction of the LLC to concrete
-//! benchmark parameters, exactly how the paper sweeps inputs "from 25%
-//! of the L3 cache size up to 400% of the L3 size" (Section 6.1).
+//! Experiment configuration: the scaled bench machine and verified-run
+//! helpers. Benchmark sizing lives with each workload
+//! (`Workload::sized` constructors, driven by
+//! [`SizeSpec`](crate::exec::SizeSpec)) and enumeration lives in
+//! [`exec::registry`](crate::exec::registry) — this module no longer
+//! keeps a parallel benchmark list.
 //!
 //! Simulation-scale note: the paper's Table 2 machine (4 MB LLC) with
 //! 16 accesses/key at 4 M keys means hundreds of millions of simulated
@@ -10,65 +13,11 @@
 //! is relative to LLC capacity, which the scaling preserves. Set
 //! `CCACHE_FULL_SIZE=1` to run the paper's exact Table 2 geometry.
 
-use crate::exec::{RunResult, Variant};
+use crate::exec::{RunResult, SizeSpec, Variant, WorkloadHandle};
 use crate::sim::config::MachineConfig;
-use crate::workloads::graph::GraphKind;
-use crate::workloads::{bfs, kmeans, kvstore, pagerank, Benchmark};
 
 /// LLC size of the scaled bench machine (1 MB; the paper's is 4 MB).
 pub const SCALED_LLC_BYTES: usize = 1 << 20;
-
-/// The benchmark axis of Fig 6 (panels) and Fig 8.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum BenchKind {
-    KvAdd,
-    KvSat,
-    KvCmul,
-    KMeans,
-    KMeansApprox,
-    PageRank(GraphKind),
-    Bfs(GraphKind),
-}
-
-impl BenchKind {
-    pub fn name(&self) -> String {
-        match self {
-            BenchKind::KvAdd => "kvstore".into(),
-            BenchKind::KvSat => "kvstore-sat".into(),
-            BenchKind::KvCmul => "kvstore-cmul".into(),
-            BenchKind::KMeans => "kmeans".into(),
-            BenchKind::KMeansApprox => "kmeans-approx".into(),
-            BenchKind::PageRank(g) => format!("pagerank-{}", g.name()),
-            BenchKind::Bfs(g) => format!("bfs-{}", g.name()),
-        }
-    }
-
-    /// All panels of Fig 6 (baselines + Section 6.3 merge variants).
-    pub fn fig6_panels() -> Vec<BenchKind> {
-        vec![
-            BenchKind::KvAdd,
-            BenchKind::KMeans,
-            BenchKind::PageRank(GraphKind::Rmat),
-            BenchKind::PageRank(GraphKind::Ssca),
-            BenchKind::PageRank(GraphKind::Uniform),
-            BenchKind::Bfs(GraphKind::Rmat),
-            BenchKind::Bfs(GraphKind::Uniform),
-            BenchKind::KvSat,
-            BenchKind::KvCmul,
-            BenchKind::KMeansApprox,
-        ]
-    }
-
-    /// The four core benchmarks.
-    pub fn core_four() -> Vec<BenchKind> {
-        vec![
-            BenchKind::KvAdd,
-            BenchKind::KMeans,
-            BenchKind::PageRank(GraphKind::Uniform),
-            BenchKind::Bfs(GraphKind::Rmat),
-        ]
-    }
-}
 
 /// The scaled bench machine: Table 2 shape at 1/4 linear size.
 pub fn scaled_config() -> MachineConfig {
@@ -82,79 +31,19 @@ pub fn scaled_config() -> MachineConfig {
     cfg
 }
 
-/// Build a benchmark whose primary working set is `frac` x the LLC.
-///
-/// Working-set definitions per benchmark (matching Section 6.1's sweep
-/// of the *shared, contended* structure):
-/// * KV store — the value table
-/// * K-Means — the point set (accumulators are tiny by design)
-/// * PageRank — rank arrays + CSR
-/// * BFS — CSR + bitmaps
-pub fn sized_benchmark(kind: BenchKind, frac: f64, llc_bytes: usize, seed: u64) -> Benchmark {
-    let target = (frac * llc_bytes as f64) as u64;
-    match kind {
-        BenchKind::KvAdd | BenchKind::KvSat | BenchKind::KvCmul => {
-            let merge = match kind {
-                BenchKind::KvSat => kvstore::KvMerge::Sat { max: 12 },
-                BenchKind::KvCmul => kvstore::KvMerge::Cmul,
-                _ => kvstore::KvMerge::Add,
-            };
-            let bytes_per_key = if matches!(merge, kvstore::KvMerge::Cmul) {
-                8
-            } else {
-                4
-            };
-            let keys = (target / bytes_per_key).max(256) as usize;
-            Benchmark::Kv(kvstore::KvParams {
-                keys,
-                accesses_per_key: 16, // the paper's ratio (Section 5.1)
-                seed,
-                merge,
-                zipf_theta: 0.0,
-            })
-        }
-        BenchKind::KMeans | BenchKind::KMeansApprox => {
-            let points = (target / (kmeans::DIM as u64 * 4)).max(256) as usize;
-            Benchmark::KMeans(kmeans::KmParams {
-                points,
-                clusters: 4,
-                iters: 2,
-                seed,
-                approx_drop_p: if kind == BenchKind::KMeansApprox {
-                    0.1
-                } else {
-                    0.0
-                },
-            })
-        }
-        BenchKind::PageRank(g) => {
-            // rank arrays (8 B/v) + CSR ((1+deg)*4 B/v), deg=8 -> 44 B/v
-            let vertices = (target / 44).max(256) as usize;
-            Benchmark::PageRank(pagerank::PrParams {
-                vertices,
-                avg_degree: 8,
-                graph: g,
-                iters: 2,
-                damping: 0.85,
-                seed,
-            })
-        }
-        BenchKind::Bfs(g) => {
-            let vertices = (target / 40).max(256) as usize;
-            Benchmark::Bfs(bfs::BfsParams {
-                vertices,
-                avg_degree: 8,
-                graph: g,
-                seed,
-                source: 0,
-            })
-        }
-    }
+/// Build a registered benchmark whose primary working set is `frac` x
+/// the LLC (working-set definitions per benchmark match Section 6.1's
+/// sweep of the *shared, contended* structure — see each workload's
+/// `sized` constructor). Panics on unknown names; use
+/// `exec::registry::build` for the fallible form.
+pub fn sized_workload(name: &str, frac: f64, llc_bytes: usize, seed: u64) -> WorkloadHandle {
+    crate::exec::registry::build(name, &SizeSpec::new(frac, llc_bytes, seed))
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Run one benchmark/variant on a config, asserting verification.
-pub fn run_verified(bench: &Benchmark, variant: Variant, cfg: MachineConfig) -> RunResult {
-    let r = bench.run(variant, cfg);
+pub fn run_verified(bench: &WorkloadHandle, variant: Variant, cfg: MachineConfig) -> RunResult {
+    let r = bench.run(variant, cfg).unwrap_or_else(|e| panic!("{e}"));
     r.assert_verified();
     r
 }
@@ -162,17 +51,15 @@ pub fn run_verified(bench: &Benchmark, variant: Variant, cfg: MachineConfig) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::registry;
 
     #[test]
     fn sizing_tracks_fraction() {
         let llc = 1 << 20;
-        let small = sized_benchmark(BenchKind::KvAdd, 0.25, llc, 1);
-        let large = sized_benchmark(BenchKind::KvAdd, 4.0, llc, 1);
-        let (Benchmark::Kv(s), Benchmark::Kv(l)) = (&small, &large) else {
-            panic!()
-        };
-        assert_eq!(s.keys * 16, l.keys);
-        assert_eq!(s.working_set_bytes(), llc as u64 / 4);
+        let small = sized_workload("kvstore", 0.25, llc, 1);
+        let large = sized_workload("kvstore", 4.0, llc, 1);
+        assert_eq!(small.footprint() * 16, large.footprint());
+        assert_eq!(small.footprint(), llc as u64 / 4);
     }
 
     #[test]
@@ -187,8 +74,8 @@ mod tests {
 
     #[test]
     fn all_fig6_panels_buildable() {
-        for kind in BenchKind::fig6_panels() {
-            let b = sized_benchmark(kind, 0.25, 1 << 18, 7);
+        for spec in registry::fig6_panels() {
+            let b = sized_workload(spec.name, 0.25, 1 << 18, 7);
             assert!(!b.name().is_empty());
         }
     }

@@ -1,10 +1,11 @@
-//! Experiment coordination: benchmark sizing, working-set sweeps and
-//! paper-style reporting. Every figure/table bench target is a thin
-//! wrapper over this module.
+//! Experiment coordination: the scaled bench machine, registry-driven
+//! working-set sweeps and paper-style reporting. Every figure/table
+//! bench target is a thin wrapper over this module; benchmark
+//! enumeration and sizing live in [`exec::registry`](crate::exec::registry).
 
 pub mod experiment;
 pub mod report;
 pub mod sweep;
 
-pub use experiment::{scaled_config, sized_benchmark, BenchKind, SCALED_LLC_BYTES};
-pub use sweep::{run_sweep, SweepPoint, SweepResult, WS_FRACTIONS};
+pub use experiment::{run_verified, scaled_config, sized_workload, SCALED_LLC_BYTES};
+pub use sweep::{run_sweep, run_sweep_skewed, SweepPoint, SweepResult, WS_FRACTIONS};

@@ -9,7 +9,7 @@ use super::sweep::SweepResult;
 /// working-set fraction.
 pub fn fig6_table(sweep: &SweepResult) -> Table {
     let mut t = Table::new(
-        format!("Fig 6 — {}: speedup vs FGL", sweep.kind.name()),
+        format!("Fig 6 — {}: speedup vs FGL", sweep.name),
         &["ws/LLC", "FGL", "DUP", "CCACHE"],
     );
     for p in &sweep.points {
@@ -41,7 +41,7 @@ pub fn fig8_table(
     header.extend(variants.iter().map(|v| v.name().to_uppercase()));
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(
-        format!("Fig 8 — {}: {metric_name} per 1k cycles", sweep.kind.name()),
+        format!("Fig 8 — {}: {metric_name} per 1k cycles", sweep.name),
         &header_refs,
     );
     for p in &sweep.points {
@@ -61,7 +61,6 @@ pub fn fig8_table(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::experiment::BenchKind;
     use crate::coordinator::sweep::run_sweep;
     use crate::sim::config::MachineConfig;
 
@@ -69,13 +68,7 @@ mod tests {
     fn tables_render_from_sweep() {
         let mut cfg = MachineConfig::test_small();
         cfg.cores = 2;
-        let sweep = run_sweep(
-            BenchKind::KvAdd,
-            &[Variant::Fgl, Variant::CCache],
-            &[0.5],
-            cfg,
-            1,
-        );
+        let sweep = run_sweep("kvstore", &[Variant::Fgl, Variant::CCache], &[0.5], cfg, 1);
         let t = fig6_table(&sweep);
         assert!(t.render().contains("CCACHE"));
         let t8 = fig8_table(&sweep, "LLC misses", |r| r.stats.llc_misses_per_kc());

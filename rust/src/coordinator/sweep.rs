@@ -1,9 +1,11 @@
-//! Working-set sweeps: the x-axis of Fig 6 / Fig 8.
+//! Working-set sweeps: the x-axis of Fig 6 / Fig 8. Registry-driven:
+//! a sweep takes a registered workload name, rebuilds the sized instance
+//! at each fraction, and runs every *supported* requested variant —
+//! unsupported variants skip their cell instead of aborting the sweep.
 
+use crate::exec::registry::{self, SizeSpec};
 use crate::exec::{RunResult, Variant};
 use crate::sim::config::MachineConfig;
-
-use super::experiment::{sized_benchmark, BenchKind};
 
 /// The paper's input sizes relative to LLC capacity (Section 6.1).
 pub const WS_FRACTIONS: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
@@ -29,29 +31,60 @@ impl SweepPoint {
 
 #[derive(Clone, Debug)]
 pub struct SweepResult {
-    pub kind: BenchKind,
+    /// Registry name of the swept benchmark.
+    pub name: String,
     pub points: Vec<SweepPoint>,
 }
 
-/// Run `variants` of `kind` at each working-set fraction.
+/// Run `variants` of the registered benchmark `name` at each working-set
+/// fraction. Variants the benchmark does not support are skipped (their
+/// cells render as "-"); divergence from the golden run still panics.
+/// Panics on unknown benchmark names.
 pub fn run_sweep(
-    kind: BenchKind,
+    name: &str,
     variants: &[Variant],
     fracs: &[f64],
     cfg: MachineConfig,
     seed: u64,
 ) -> SweepResult {
+    run_sweep_skewed(name, variants, fracs, cfg, seed, 0.0)
+}
+
+/// [`run_sweep`] with a zipf key-skew theta for the workloads that have
+/// a key distribution (kvstore, histogram).
+pub fn run_sweep_skewed(
+    name: &str,
+    variants: &[Variant],
+    fracs: &[f64],
+    cfg: MachineConfig,
+    seed: u64,
+    zipf_theta: f64,
+) -> SweepResult {
+    let spec = registry::lookup(name).unwrap_or_else(|e| panic!("{e}"));
+    assert!(
+        zipf_theta == 0.0 || spec.key_skew,
+        "{} has no key distribution; zipf_theta {zipf_theta} would be silently ignored",
+        spec.name
+    );
     let mut points = Vec::new();
     for &frac in fracs {
-        let bench = sized_benchmark(kind, frac, cfg.llc.size_bytes, seed);
+        let size = SizeSpec::new(frac, cfg.llc.size_bytes, seed).with_zipf(zipf_theta);
+        let bench = spec.build(&size);
+        let supported: Vec<Variant> = variants
+            .iter()
+            .copied()
+            .filter(|&v| bench.supports(v))
+            .collect();
         // variants are independent machines: run them on parallel host
         // threads (results and their determinism are unaffected)
         let results: Vec<RunResult> = std::thread::scope(|scope| {
-            let handles: Vec<_> = variants
+            let handles: Vec<_> = supported
                 .iter()
                 .map(|&v| {
                     let bench = &bench;
-                    scope.spawn(move || bench.run(v, cfg))
+                    scope.spawn(move || {
+                        bench.run(v, cfg).unwrap_or_else(|e| panic!("{e}"))
+                    })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -66,7 +99,10 @@ pub fn run_sweep(
         }
         points.push(SweepPoint { frac, results });
     }
-    SweepResult { kind, points }
+    SweepResult {
+        name: spec.name.to_string(),
+        points,
+    }
 }
 
 #[cfg(test)]
@@ -79,7 +115,7 @@ mod tests {
         let mut cfg = MachineConfig::test_small();
         cfg.cores = 2;
         let sweep = run_sweep(
-            BenchKind::KvAdd,
+            "kvstore",
             &[Variant::Fgl, Variant::CCache],
             &[0.5, 1.0],
             cfg,
@@ -90,5 +126,23 @@ mod tests {
             assert!(p.speedup_vs_fgl(Variant::CCache).unwrap() > 0.0);
             assert_eq!(p.speedup_vs_fgl(Variant::Fgl).unwrap(), 1.0);
         }
+    }
+
+    #[test]
+    fn unsupported_variants_skip_cells_instead_of_aborting() {
+        let mut cfg = MachineConfig::test_small();
+        cfg.cores = 2;
+        // kmeans has no atomics variant: the cell is skipped, the sweep
+        // still completes with the supported variants present
+        let sweep = run_sweep(
+            "kmeans",
+            &[Variant::CCache, Variant::Atomic],
+            &[0.05],
+            cfg,
+            42,
+        );
+        assert_eq!(sweep.points.len(), 1);
+        assert!(sweep.points[0].get(Variant::CCache).is_some());
+        assert!(sweep.points[0].get(Variant::Atomic).is_none());
     }
 }

@@ -1,0 +1,63 @@
+//! The generic execution driver: one code path from a [`Workload`] impl
+//! to a verified [`RunResult`], shared by all benchmarks.
+//!
+//! Owns the skeleton every benchmark used to hand-roll: variant
+//! gating, machine construction, memory setup, CCache merge-region
+//! registration (`merge_init` per MFRF slot), spawning one program per
+//! core, stats collection, and golden-run verification.
+
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::{CoreCtx, Machine};
+
+use super::error::ExecError;
+use super::workload::Workload;
+use super::{RunResult, Variant};
+
+pub fn run<W: Workload>(
+    workload: &W,
+    variant: Variant,
+    cfg: MachineConfig,
+) -> Result<RunResult, ExecError> {
+    let supported = workload.supported_variants();
+    if !supported.contains(&variant) {
+        return Err(ExecError::UnsupportedVariant {
+            benchmark: workload.name(),
+            variant,
+            supported,
+        });
+    }
+
+    let cores = cfg.cores;
+    let machine = Machine::new(cfg);
+    let layout = machine.setup(|mem| workload.setup(mem, variant, cores));
+    let merge_slots = workload.merge_slots();
+
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let layout = layout.clone();
+            let merge_slots = merge_slots.clone();
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                if variant == Variant::CCache {
+                    for &(slot, kind) in &merge_slots {
+                        ctx.merge_init(slot, kind);
+                    }
+                }
+                workload.program(ctx, core, cores, variant, &layout);
+            });
+            f
+        })
+        .collect();
+    let stats = machine.run(programs);
+
+    let golden = workload.golden(cores);
+    let (verified, quality) =
+        machine.setup(|mem| workload.verify(mem, &layout, &golden, cores));
+
+    Ok(RunResult {
+        benchmark: workload.name(),
+        variant,
+        stats,
+        verified,
+        quality,
+    })
+}

@@ -1,0 +1,79 @@
+//! Typed execution errors: the driver and registry report unsupported
+//! variants and unknown benchmark names as values instead of panicking,
+//! so the CLI can print a clean message and sweeps can skip a cell.
+
+use std::fmt;
+
+use super::Variant;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// The benchmark does not implement this execution variant (e.g. the
+    /// paper only evaluates atomics for BFS).
+    UnsupportedVariant {
+        benchmark: String,
+        variant: Variant,
+        supported: Vec<Variant>,
+    },
+    /// No registered workload matches this name or alias.
+    UnknownBenchmark { name: String, known: Vec<String> },
+    /// Not one of [`Variant::ALL`].
+    UnknownVariant { name: String },
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::UnsupportedVariant {
+                benchmark,
+                variant,
+                supported,
+            } => {
+                let names: Vec<&str> = supported.iter().map(|v| v.name()).collect();
+                write!(
+                    f,
+                    "{benchmark} does not support variant '{}' (supported: {})",
+                    variant.name(),
+                    names.join(" ")
+                )
+            }
+            ExecError::UnknownBenchmark { name, known } => {
+                write!(
+                    f,
+                    "unknown benchmark '{name}' (known: {})",
+                    known.join(" ")
+                )
+            }
+            ExecError::UnknownVariant { name } => {
+                let names: Vec<&str> = Variant::ALL.iter().map(|v| v.name()).collect();
+                write!(f, "unknown variant '{name}' (use {})", names.join("|"))
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_actionable() {
+        let e = ExecError::UnsupportedVariant {
+            benchmark: "kmeans".into(),
+            variant: Variant::Atomic,
+            supported: vec![Variant::Fgl, Variant::Dup, Variant::CCache],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("kmeans"));
+        assert!(msg.contains("atomic"));
+        assert!(msg.contains("fgl dup ccache"));
+
+        let e = ExecError::UnknownBenchmark {
+            name: "nope".into(),
+            known: vec!["kvstore".into(), "histogram".into()],
+        };
+        assert!(e.to_string().contains("kvstore histogram"));
+    }
+}

@@ -1,4 +1,5 @@
-//! Execution variants: the paper's comparison axes (Section 5.1).
+//! The execution layer: variants, the [`Workload`] trait, the generic
+//! [`driver`], and the workload [`registry`].
 //!
 //! Every benchmark is implemented in up to five variants over the *same*
 //! simulated machine:
@@ -7,11 +8,25 @@
 //! * [`Variant::Fgl`] — fine-grained locking (lock per element/word)
 //! * [`Variant::Dup`] — static data duplication + reduction at phase end
 //! * [`Variant::CCache`] — the paper's system: COps + merge functions
-//! * [`Variant::Atomic`] — HW atomic RMW (BFS only in the paper)
+//! * [`Variant::Atomic`] — HW atomic RMW (BFS + histogram)
 //!
-//! Each workload module exposes `run(params, variant, cfg) -> RunResult`;
-//! the result carries the stats and a verification verdict against a
-//! sequential golden run (the serializability check of Section 3).
+//! Each workload implements the [`Workload`] trait (setup / program /
+//! golden / verify); [`driver::run`] owns the rest of the skeleton —
+//! machine construction, merge-region registration, stats collection and
+//! golden verification — and returns a [`RunResult`] whose `verified`
+//! flag is the paper's Section 3 serializability check. Variants a
+//! workload doesn't implement surface as
+//! [`ExecError::UnsupportedVariant`] instead of panicking.
+
+pub mod driver;
+pub mod error;
+pub mod registry;
+pub mod scaffold;
+pub mod workload;
+
+pub use error::ExecError;
+pub use registry::{SizeSpec, WorkloadSpec};
+pub use workload::{Workload, WorkloadHandle};
 
 use crate::sim::stats::Stats;
 
@@ -48,6 +63,15 @@ impl Variant {
 
     /// The trio every figure compares.
     pub const MAIN: [Variant; 3] = [Variant::Fgl, Variant::Dup, Variant::CCache];
+
+    /// Every variant, in display order.
+    pub const ALL: [Variant; 5] = [
+        Variant::Cgl,
+        Variant::Fgl,
+        Variant::Dup,
+        Variant::CCache,
+        Variant::Atomic,
+    ];
 }
 
 /// Outcome of one benchmark run.

@@ -1,0 +1,331 @@
+//! The workload registry: the single enumeration of every benchmark the
+//! crate knows, replacing the old triplicated `BenchKind` /
+//! `Benchmark` / `parse_bench` lists. The CLI (`list`/`run`/`sweep`),
+//! the coordinator and the figure benches all resolve names here and
+//! run through [`WorkloadHandle`]s, so adding a benchmark is one
+//! [`Workload`](super::workload::Workload) impl plus one [`WorkloadSpec`]
+//! row.
+
+use crate::workloads::graph::GraphKind;
+use crate::workloads::kvstore::KvMerge;
+use crate::workloads::{bfs, histogram, kmeans, kvstore, pagerank};
+
+use super::error::ExecError;
+use super::workload::WorkloadHandle;
+use super::Variant;
+
+/// How to size a workload instance: the working set of its contended
+/// structure targets `frac` x the LLC capacity (the paper's Section 6.1
+/// sweep axis), plus the RNG seed and the key-skew ablation knob.
+#[derive(Clone, Copy, Debug)]
+pub struct SizeSpec {
+    pub frac: f64,
+    pub llc_bytes: usize,
+    pub seed: u64,
+    /// 0.0 = uniform keys (the paper); >0 = zipf-skewed keys for the
+    /// workloads with a key distribution (kvstore, histogram).
+    pub zipf_theta: f64,
+}
+
+impl SizeSpec {
+    pub fn new(frac: f64, llc_bytes: usize, seed: u64) -> Self {
+        Self {
+            frac,
+            llc_bytes,
+            seed,
+            zipf_theta: 0.0,
+        }
+    }
+
+    pub fn with_zipf(mut self, theta: f64) -> Self {
+        self.zipf_theta = theta;
+        self
+    }
+
+    /// Target working-set bytes.
+    pub fn target_bytes(&self) -> u64 {
+        (self.frac * self.llc_bytes as f64) as u64
+    }
+}
+
+/// One registry row: name, CLI aliases, and how to build a sized
+/// instance.
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    /// Variants the workload implements (mirrors the trait impl's
+    /// `supported_variants`, kept static so `list` needs no build).
+    pub variants: &'static [Variant],
+    /// Has a key distribution the `SizeSpec::zipf_theta` knob skews
+    /// (kvstore, histogram); others reject a non-zero theta at the CLI.
+    pub key_skew: bool,
+    /// Member of the paper's Fig 6 panel set.
+    pub fig6: bool,
+    /// One of the four core paper benchmarks.
+    pub core: bool,
+    pub build: fn(&SizeSpec) -> WorkloadHandle,
+}
+
+impl WorkloadSpec {
+    pub fn build(&self, spec: &SizeSpec) -> WorkloadHandle {
+        (self.build)(spec)
+    }
+}
+
+fn build_kv_add(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(kvstore::KvWorkload::sized(KvMerge::Add, s))
+}
+
+fn build_kv_sat(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(kvstore::KvWorkload::sized(KvMerge::Sat { max: 12 }, s))
+}
+
+fn build_kv_cmul(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(kvstore::KvWorkload::sized(KvMerge::Cmul, s))
+}
+
+fn build_kmeans(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(kmeans::KmWorkload::sized(false, s))
+}
+
+fn build_kmeans_approx(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(kmeans::KmWorkload::sized(true, s))
+}
+
+fn build_pagerank_rmat(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(pagerank::PrWorkload::sized(GraphKind::Rmat, s))
+}
+
+fn build_pagerank_ssca(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(pagerank::PrWorkload::sized(GraphKind::Ssca, s))
+}
+
+fn build_pagerank_uniform(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(pagerank::PrWorkload::sized(GraphKind::Uniform, s))
+}
+
+fn build_bfs_rmat(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(bfs::BfsWorkload::sized(GraphKind::Rmat, s))
+}
+
+fn build_bfs_ssca(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(bfs::BfsWorkload::sized(GraphKind::Ssca, s))
+}
+
+fn build_bfs_uniform(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(bfs::BfsWorkload::sized(GraphKind::Uniform, s))
+}
+
+fn build_histogram(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(histogram::HgWorkload::sized(s))
+}
+
+static REGISTRY: &[WorkloadSpec] = &[
+    WorkloadSpec {
+        name: "kvstore",
+        aliases: &["kv", "kvstore-add"],
+        summary: "random-access KV store, commutative increments",
+        variants: &kvstore::VARIANTS,
+        key_skew: true,
+        fig6: true,
+        core: true,
+        build: build_kv_add,
+    },
+    WorkloadSpec {
+        name: "kvstore-sat",
+        aliases: &[],
+        summary: "KV store with saturating-add merge (Section 6.3)",
+        variants: &kvstore::VARIANTS,
+        key_skew: true,
+        fig6: true,
+        core: false,
+        build: build_kv_sat,
+    },
+    WorkloadSpec {
+        name: "kvstore-cmul",
+        aliases: &[],
+        summary: "KV store with complex-multiply merge (Section 6.3)",
+        variants: &kvstore::VARIANTS,
+        key_skew: true,
+        fig6: true,
+        core: false,
+        build: build_kv_cmul,
+    },
+    WorkloadSpec {
+        name: "kmeans",
+        aliases: &[],
+        summary: "Lloyd's K-Means, CData cluster accumulators",
+        variants: &kmeans::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: true,
+        build: build_kmeans,
+    },
+    WorkloadSpec {
+        name: "kmeans-approx",
+        aliases: &[],
+        summary: "K-Means with approximate (update-dropping) merge",
+        variants: &kmeans::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: false,
+        build: build_kmeans_approx,
+    },
+    WorkloadSpec {
+        name: "pagerank-rmat",
+        aliases: &["pagerank-kron"],
+        summary: "push/pull PageRank on an RMAT graph",
+        variants: &pagerank::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: false,
+        build: build_pagerank_rmat,
+    },
+    WorkloadSpec {
+        name: "pagerank-ssca",
+        aliases: &[],
+        summary: "push/pull PageRank on an SSCA graph",
+        variants: &pagerank::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: false,
+        build: build_pagerank_ssca,
+    },
+    WorkloadSpec {
+        name: "pagerank-uniform",
+        aliases: &["pagerank", "pagerank-random"],
+        summary: "push/pull PageRank on a uniform random graph",
+        variants: &pagerank::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: true,
+        build: build_pagerank_uniform,
+    },
+    WorkloadSpec {
+        name: "bfs-rmat",
+        aliases: &["bfs", "bfs-kron"],
+        summary: "level-synchronous bitmap BFS on an RMAT graph",
+        variants: &bfs::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: true,
+        build: build_bfs_rmat,
+    },
+    WorkloadSpec {
+        name: "bfs-ssca",
+        aliases: &[],
+        summary: "level-synchronous bitmap BFS on an SSCA graph",
+        variants: &bfs::VARIANTS,
+        key_skew: false,
+        fig6: false,
+        core: false,
+        build: build_bfs_ssca,
+    },
+    WorkloadSpec {
+        name: "bfs-uniform",
+        aliases: &["bfs-random"],
+        summary: "level-synchronous bitmap BFS on a uniform graph",
+        variants: &bfs::VARIANTS,
+        key_skew: false,
+        fig6: true,
+        core: false,
+        build: build_bfs_uniform,
+    },
+    WorkloadSpec {
+        name: "histogram",
+        aliases: &["hist"],
+        summary: "streaming binned counts — the classic privatization workload",
+        variants: &histogram::VARIANTS,
+        key_skew: true,
+        fig6: false,
+        core: false,
+        build: build_histogram,
+    },
+];
+
+/// Every registered workload, in display order.
+pub fn registry() -> &'static [WorkloadSpec] {
+    REGISTRY
+}
+
+/// The paper's Fig 6 panel set (baselines + Section 6.3 merge variants).
+pub fn fig6_panels() -> Vec<&'static WorkloadSpec> {
+    REGISTRY.iter().filter(|s| s.fig6).collect()
+}
+
+/// The four core paper benchmarks.
+pub fn core_panels() -> Vec<&'static WorkloadSpec> {
+    REGISTRY.iter().filter(|s| s.core).collect()
+}
+
+/// Resolve a benchmark name or alias.
+pub fn lookup(name: &str) -> Result<&'static WorkloadSpec, ExecError> {
+    let lower = name.to_ascii_lowercase();
+    REGISTRY
+        .iter()
+        .find(|s| s.name == lower || s.aliases.contains(&lower.as_str()))
+        .ok_or_else(|| ExecError::UnknownBenchmark {
+            name: name.to_string(),
+            known: REGISTRY.iter().map(|s| s.name.to_string()).collect(),
+        })
+}
+
+/// Resolve and build in one step.
+pub fn build(name: &str, spec: &SizeSpec) -> Result<WorkloadHandle, ExecError> {
+    Ok(lookup(name)?.build(spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_aliases_resolve() {
+        let mut seen = std::collections::HashSet::new();
+        for s in registry() {
+            assert!(seen.insert(s.name), "duplicate name {}", s.name);
+            for &a in s.aliases {
+                assert!(seen.insert(a), "alias {a} collides");
+            }
+        }
+        assert_eq!(lookup("kv").unwrap().name, "kvstore");
+        assert_eq!(lookup("BFS").unwrap().name, "bfs-rmat");
+        assert_eq!(lookup("pagerank").unwrap().name, "pagerank-uniform");
+        assert_eq!(lookup("hist").unwrap().name, "histogram");
+        assert!(matches!(
+            lookup("nope"),
+            Err(ExecError::UnknownBenchmark { .. })
+        ));
+    }
+
+    #[test]
+    fn key_skew_marks_exactly_the_keyed_workloads() {
+        for s in registry() {
+            let expect = s.name.starts_with("kvstore") || s.name == "histogram";
+            assert_eq!(s.key_skew, expect, "{}: key_skew flag wrong", s.name);
+        }
+    }
+
+    #[test]
+    fn panel_sets() {
+        assert_eq!(fig6_panels().len(), 10);
+        assert_eq!(core_panels().len(), 4);
+        assert!(registry().len() >= 12, "histogram must be registered");
+    }
+
+    #[test]
+    fn handles_report_spec_variants() {
+        let spec = SizeSpec::new(0.01, 1 << 16, 1);
+        for s in registry() {
+            let h = s.build(&spec);
+            assert_eq!(
+                h.supported_variants(),
+                s.variants,
+                "{}: spec/impl variant mismatch",
+                s.name
+            );
+            assert!(h.footprint() > 0, "{}: zero footprint", s.name);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-variant memory scaffolding shared by all workloads: lock arrays
+//! for CGL/FGL and per-core private copies for DUP. Keeping the layout
+//! math here (padded strides, line alignment) means every workload's
+//! Table 3 footprint comes from the same rules.
+
+use crate::sim::addr::Addr;
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
+
+/// A pthread-mutex-sized lock object (40 B), the FGL footprint unit the
+/// paper's Table 3 measures for the KV store.
+pub const PTHREAD_LOCK_BYTES: u64 = 40;
+
+/// An array of `n` spin locks at a fixed byte stride. Stride choices:
+/// [`PTHREAD_LOCK_BYTES`] for mutex-sized locks, 64 for one padded lock
+/// per line, 4 for packed word locks.
+#[derive(Clone, Copy, Debug)]
+pub struct LockArray {
+    base: Addr,
+    stride: u64,
+}
+
+impl LockArray {
+    pub fn alloc(mem: &mut MemSystem, n: u64, stride: u64) -> Self {
+        Self {
+            base: mem.alloc_lines(n * stride),
+            stride,
+        }
+    }
+
+    /// Placeholder for variants that allocate no locks.
+    pub fn none() -> Self {
+        Self {
+            base: Addr(0),
+            stride: 0,
+        }
+    }
+
+    pub fn addr(&self, i: u64) -> Addr {
+        self.base.add(i * self.stride)
+    }
+
+    pub fn lock(&self, ctx: &mut CoreCtx, i: u64) {
+        ctx.lock(self.addr(i));
+    }
+
+    pub fn unlock(&self, ctx: &mut CoreCtx, i: u64) {
+        ctx.unlock(self.addr(i));
+    }
+}
+
+/// Per-core private copies of a structure (the DUP variant): `cores`
+/// copies of `bytes` each, strides padded to whole cache lines so
+/// copies never false-share.
+#[derive(Clone, Copy, Debug)]
+pub struct DupSpace {
+    base: Addr,
+    stride: u64,
+}
+
+impl DupSpace {
+    pub fn alloc(mem: &mut MemSystem, bytes_per_copy: u64, cores: usize) -> Self {
+        let stride = bytes_per_copy.next_multiple_of(64);
+        Self {
+            base: mem.alloc_lines(stride * cores as u64),
+            stride,
+        }
+    }
+
+    /// Placeholder for variants that duplicate nothing.
+    pub fn none() -> Self {
+        Self {
+            base: Addr(0),
+            stride: 0,
+        }
+    }
+
+    /// Base address of `core`'s private copy.
+    pub fn copy_base(&self, core: usize) -> Addr {
+        self.base.add(core as u64 * self.stride)
+    }
+
+    /// Byte stride between consecutive copies.
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// End-of-phase reduction for u32 add: fold word range `[lo, hi)` of
+    /// every core's copy into the master array (both arrays indexed by
+    /// 4-byte words). The caller partitions ranges across cores and
+    /// places barriers.
+    pub fn reduce_add_u32(
+        &self,
+        ctx: &mut CoreCtx,
+        master: Addr,
+        cores: usize,
+        lo: u64,
+        hi: u64,
+    ) {
+        for k in lo..hi {
+            let a = master.add(k * 4);
+            let mut acc = ctx.read_u32(a);
+            for c in 0..cores {
+                let v = ctx.read_u32(self.copy_base(c).add(k * 4));
+                acc = acc.wrapping_add(v);
+                ctx.compute(1);
+            }
+            ctx.write_u32(a, acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::MachineConfig;
+
+    #[test]
+    fn lock_array_strides() {
+        let mut mem = MemSystem::new(MachineConfig::test_small());
+        let locks = LockArray::alloc(&mut mem, 8, PTHREAD_LOCK_BYTES);
+        assert_eq!(locks.addr(0).0 % 64, 0, "array starts line-aligned");
+        assert_eq!(locks.addr(3).0 - locks.addr(0).0, 3 * PTHREAD_LOCK_BYTES);
+    }
+
+    #[test]
+    fn dup_space_pads_copies_to_lines() {
+        let mut mem = MemSystem::new(MachineConfig::test_small());
+        let dup = DupSpace::alloc(&mut mem, 100, 4);
+        assert_eq!(dup.stride(), 128);
+        assert_eq!(dup.copy_base(2).0 - dup.copy_base(0).0, 256);
+        assert_eq!(dup.copy_base(0).0 % 64, 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! The [`Workload`] trait: the one interface every benchmark implements.
+//!
+//! A workload owns its parameters and (host-side) input data and
+//! describes four things to the generic driver:
+//! memory [`setup`](Workload::setup), the per-core
+//! [`program`](Workload::program), the sequential
+//! [`golden`](Workload::golden) reference, and final-state
+//! [`verify`](Workload::verify)cation. Everything else — machine
+//! construction, merge-region registration (`merge_init`), running one
+//! program per core, stats collection — lives in
+//! [`driver::run`](super::driver::run), so a new benchmark is a single
+//! trait impl (see `workloads::histogram` for the template).
+
+use std::sync::Arc;
+
+use crate::merge::MergeKind;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
+
+use super::error::ExecError;
+use super::{RunResult, Variant};
+
+pub trait Workload: Send + Sync {
+    /// Simulated-memory layout produced by [`Workload::setup`] and handed
+    /// to every core's program; cheap to clone (addresses and strides).
+    type Layout: Clone + Send + Sync;
+    /// Result of the sequential golden run, consumed by verification.
+    type Golden: Send + Sync;
+
+    /// Display name; becomes [`RunResult::benchmark`].
+    fn name(&self) -> String;
+
+    /// The execution variants this benchmark implements. The driver
+    /// rejects anything else with [`ExecError::UnsupportedVariant`]
+    /// before touching the machine.
+    fn supported_variants(&self) -> Vec<Variant>;
+
+    /// Working-set bytes of the contended structure (the Fig 6 x-axis).
+    fn footprint(&self) -> u64;
+
+    /// Merge functions to install in each core's MFRF under the CCache
+    /// variant: `(slot, kind)` pairs. The driver issues the
+    /// `merge_init` COps so programs never have to.
+    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+        Vec::new()
+    }
+
+    /// Allocate and initialize simulated memory, including per-variant
+    /// scaffolding (lock arrays, DUP copies — see
+    /// [`super::scaffold`]).
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> Self::Layout;
+
+    /// The program core `core` of `cores` executes.
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        layout: &Self::Layout,
+    );
+
+    /// Sequential golden run (host-side, untimed).
+    fn golden(&self, cores: usize) -> Self::Golden;
+
+    /// Compare the final simulated-memory state against the golden run;
+    /// returns `(verified, quality)` where `quality` is an optional
+    /// degradation metric for approximate variants.
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        layout: &Self::Layout,
+        golden: &Self::Golden,
+        cores: usize,
+    ) -> (bool, Option<f64>);
+}
+
+/// A type-erased, ready-to-run workload: what the registry hands to the
+/// CLI, the coordinator and the sweep machinery. Construction captures a
+/// concrete [`Workload`] impl; every run goes through
+/// [`driver::run`](super::driver::run).
+pub struct WorkloadHandle {
+    name: String,
+    variants: Vec<Variant>,
+    footprint: u64,
+    runner: Box<dyn Fn(Variant, MachineConfig) -> Result<RunResult, ExecError> + Send + Sync>,
+}
+
+impl WorkloadHandle {
+    pub fn new<W: Workload + 'static>(workload: W) -> Self {
+        let name = workload.name();
+        let variants = workload.supported_variants();
+        let footprint = workload.footprint();
+        let workload = Arc::new(workload);
+        Self {
+            name,
+            variants,
+            footprint,
+            runner: Box::new(move |variant, cfg| super::driver::run(&*workload, variant, cfg)),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn supported_variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    pub fn supports(&self, variant: Variant) -> bool {
+        self.variants.contains(&variant)
+    }
+
+    /// Working-set bytes of the contended structure.
+    pub fn footprint(&self) -> u64 {
+        self.footprint
+    }
+
+    pub fn run(&self, variant: Variant, cfg: MachineConfig) -> Result<RunResult, ExecError> {
+        (self.runner)(variant, cfg)
+    }
+}

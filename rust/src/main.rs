@@ -5,50 +5,56 @@
 //!   sweep    — working-set sweep (Fig 6-style table) for one benchmark
 //!   overhead — Section 4.7 structural overhead report
 //!   runtime  — PJRT artifact smoke check (loads + executes merge_add)
-//!   list     — enumerate benchmarks and variants
+//!   list     — enumerate registered benchmarks and their variants
+//!
+//! Benchmarks resolve through the workload registry
+//! (`exec::registry`); there is no per-benchmark dispatch here.
 //!
 //! Examples:
-//!   ccache run --bench kvstore --variant ccache --keys 65536
+//!   ccache run --bench kvstore --variant ccache
+//!   ccache run --bench histogram --variant ccache --zipf 0.9
 //!   ccache sweep --bench pagerank-rmat
 //!   ccache runtime
 
-use ccache::coordinator::{report, run_sweep, scaled_config, sized_benchmark, BenchKind, WS_FRACTIONS};
-use ccache::exec::Variant;
+use ccache::coordinator::{report, run_sweep_skewed, scaled_config, WS_FRACTIONS};
+use ccache::exec::registry::{self, SizeSpec};
+use ccache::exec::{ExecError, Variant, WorkloadSpec};
 use ccache::sim::config::MachineConfig;
 use ccache::sim::overhead::OverheadModel;
 use ccache::util::cli::Args;
-use ccache::workloads::graph::GraphKind;
 
-fn parse_bench(name: &str) -> Option<BenchKind> {
-    match name {
-        "kvstore" | "kv" => Some(BenchKind::KvAdd),
-        "kvstore-sat" => Some(BenchKind::KvSat),
-        "kvstore-cmul" => Some(BenchKind::KvCmul),
-        "kmeans" => Some(BenchKind::KMeans),
-        "kmeans-approx" => Some(BenchKind::KMeansApprox),
-        _ => {
-            if let Some(g) = name.strip_prefix("pagerank-") {
-                GraphKind::parse(g).map(BenchKind::PageRank)
-            } else if let Some(g) = name.strip_prefix("bfs-") {
-                GraphKind::parse(g).map(BenchKind::Bfs)
-            } else if name == "pagerank" {
-                Some(BenchKind::PageRank(GraphKind::Uniform))
-            } else if name == "bfs" {
-                Some(BenchKind::Bfs(GraphKind::Rmat))
-            } else {
-                None
-            }
-        }
+fn fail(msg: impl std::fmt::Display) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+/// Reject a --zipf theta the benchmark would ignore or the sampler
+/// cannot handle (Zipf requires theta > 0 and != 1).
+fn check_zipf(spec: &WorkloadSpec, theta: f64) {
+    if theta == 0.0 {
+        return;
+    }
+    if !spec.key_skew {
+        fail(format!(
+            "--zipf only applies to workloads with a key distribution; {} has none",
+            spec.name
+        ));
+    }
+    if theta < 0.0 || theta == 1.0 {
+        fail(format!(
+            "--zipf must be > 0 and != 1 (theta=1 is unsupported; use 0.99), got {theta}"
+        ));
     }
 }
 
 fn main() {
     let args = Args::new("ccache — CCache paper reproduction CLI")
-        .opt("bench", "kvstore", "benchmark: kvstore[-sat|-cmul], kmeans[-approx], pagerank-<rmat|ssca|uniform>, bfs-<rmat|uniform>")
+        .opt("bench", "kvstore", "benchmark name or alias (see `ccache list`)")
         .opt("variant", "ccache", "cgl|fgl|dup|ccache|atomic")
         .opt("frac", "1.0", "working set as a fraction of LLC capacity")
         .opt("seed", "42", "workload RNG seed")
         .opt("cores", "0", "override core count (0 = config default)")
+        .opt("zipf", "0.0", "zipf key-skew theta for kvstore/histogram (0 = uniform)")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
         .flag("no-dirty-merge", "disable the dirty-merge optimization")
@@ -76,19 +82,24 @@ fn main() {
     if cores > 0 {
         cfg.cores = cores;
     }
+    let zipf_theta = args.get_f64("zipf");
 
     match cmd.as_str() {
         "run" => {
-            let kind = parse_bench(&args.get("bench"))
-                .unwrap_or_else(|| panic!("unknown benchmark {}", args.get("bench")));
-            let variant = Variant::parse(&args.get("variant"))
-                .unwrap_or_else(|| panic!("unknown variant {}", args.get("variant")));
-            let bench = sized_benchmark(
-                kind,
-                args.get_f64("frac"),
-                cfg.llc.size_bytes,
-                args.get_u64("seed"),
-            );
+            let variant = match Variant::parse(&args.get("variant")) {
+                Some(v) => v,
+                None => fail(ExecError::UnknownVariant {
+                    name: args.get("variant"),
+                }),
+            };
+            let spec = match registry::lookup(&args.get("bench")) {
+                Ok(s) => s,
+                Err(e) => fail(e),
+            };
+            check_zipf(spec, zipf_theta);
+            let size = SizeSpec::new(args.get_f64("frac"), cfg.llc.size_bytes, args.get_u64("seed"))
+                .with_zipf(zipf_theta);
+            let bench = spec.build(&size);
             eprintln!(
                 "running {} / {} on {} cores (LLC {} KiB)...",
                 bench.name(),
@@ -96,7 +107,10 @@ fn main() {
                 cfg.cores,
                 cfg.llc.size_bytes / 1024
             );
-            let r = bench.run(variant, cfg);
+            let r = match bench.run(variant, cfg) {
+                Ok(r) => r,
+                Err(e) => fail(e),
+            };
             println!(
                 "{}/{}: {} cycles, verified={}{}",
                 r.benchmark,
@@ -115,14 +129,18 @@ fn main() {
             }
         }
         "sweep" => {
-            let kind = parse_bench(&args.get("bench"))
-                .unwrap_or_else(|| panic!("unknown benchmark {}", args.get("bench")));
-            let sweep = run_sweep(
-                kind,
+            let spec = match registry::lookup(&args.get("bench")) {
+                Ok(s) => s,
+                Err(e) => fail(e),
+            };
+            check_zipf(spec, zipf_theta);
+            let sweep = run_sweep_skewed(
+                spec.name,
                 &Variant::MAIN,
                 &WS_FRACTIONS,
                 cfg,
                 args.get_u64("seed"),
+                zipf_theta,
             );
             report::fig6_table(&sweep).print();
         }
@@ -146,8 +164,7 @@ fn main() {
         "runtime" => match ccache::runtime::Engine::load_default() {
             Ok(mut e) => {
                 println!("PJRT platform: {}", e.platform());
-                let entries: Vec<String> =
-                    e.manifest().entries.keys().cloned().collect();
+                let entries: Vec<String> = e.manifest().entries.keys().cloned().collect();
                 for entry in entries {
                     match e.executable(&entry) {
                         Ok(_) => println!("  {entry}: compiled OK"),
@@ -165,11 +182,21 @@ fn main() {
             }
         },
         "list" => {
-            println!("benchmarks:");
-            for k in BenchKind::fig6_panels() {
-                println!("  {}", k.name());
+            println!("benchmarks (name [aliases] — variants):");
+            for spec in registry::registry() {
+                let variants: Vec<&str> = spec.variants.iter().map(|v| v.name()).collect();
+                let aliases = if spec.aliases.is_empty() {
+                    String::new()
+                } else {
+                    format!(" [{}]", spec.aliases.join(", "))
+                };
+                println!(
+                    "  {:<18}{aliases:<24} {:<28} {}",
+                    spec.name,
+                    variants.join(" "),
+                    spec.summary
+                );
             }
-            println!("variants: cgl fgl dup ccache atomic");
         }
         other => {
             eprintln!("unknown command {other}; use run|sweep|overhead|runtime|list");

@@ -16,11 +16,14 @@
 //!   level-end merge (the paper's memory-frugal DUP for BFS)
 //! * CCache — `next` words are CData with a BitOr merge
 
-use crate::exec::{RunResult, Variant};
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray};
+use crate::exec::{driver, RunResult, Variant, Workload};
 use crate::merge::MergeKind;
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::{CoreCtx, Machine};
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
 use crate::workloads::graph::{generate, Csr, GraphKind};
 
 #[derive(Clone, Debug)]
@@ -62,8 +65,7 @@ impl BfsParams {
     }
 
     pub fn build_graph(&self) -> Csr {
-        let g = generate(self.graph, self.vertices, self.avg_degree, self.seed);
-        g
+        generate(self.graph, self.vertices, self.avg_degree, self.seed)
     }
 
     /// Pick a source with non-zero degree (deterministic).
@@ -100,16 +102,15 @@ pub fn golden(g: &Csr, source: usize) -> Vec<u32> {
 }
 
 #[derive(Clone, Copy)]
-struct Layout {
+pub struct BfsLayout {
     offsets: Addr,
     targets: Addr,
     visited: Addr,
     next: Addr,
-    locks: Addr,
+    locks: LockArray,
     /// DUP: per-core update lists (u32 vertex ids) + per-core list length
     /// words.
-    lists: Addr,
-    list_stride: u64,
+    lists: DupSpace,
     list_len: Addr,
     /// Per-core "discovered anything this level" flags.
     flags: Addr,
@@ -118,15 +119,71 @@ struct Layout {
 
 const SLOT_BITOR: usize = 0;
 
-pub fn run(p: &BfsParams, variant: Variant, cfg: MachineConfig) -> RunResult {
-    let cores = cfg.cores;
-    let machine = Machine::new(cfg);
-    let g = p.build_graph();
-    let v = g.vertices();
-    let words = v.div_ceil(32);
-    let source = p.effective_source(&g);
+/// The variants BFS implements (the paper's Section 6.2 four-way
+/// comparison; CGL is not modeled).
+pub const VARIANTS: [Variant; 4] = [
+    Variant::Fgl,
+    Variant::Dup,
+    Variant::CCache,
+    Variant::Atomic,
+];
 
-    let layout = machine.setup(|mem| {
+/// BFS as a [`Workload`]: owns the generated graph and the effective
+/// source so setup, golden and verification agree.
+pub struct BfsWorkload {
+    p: BfsParams,
+    g: Csr,
+    source: usize,
+}
+
+impl BfsWorkload {
+    pub fn new(p: BfsParams) -> Self {
+        let g = p.build_graph();
+        let source = p.effective_source(&g);
+        Self { p, g, source }
+    }
+
+    /// Size CSR + bitmaps to `frac` x LLC (~40 B/vertex at deg 8).
+    pub fn sized(graph: GraphKind, s: &SizeSpec) -> Self {
+        let vertices = (s.target_bytes() / 40).max(256) as usize;
+        Self::new(BfsParams {
+            vertices,
+            avg_degree: 8,
+            graph,
+            seed: s.seed,
+            source: 0,
+        })
+    }
+
+    pub fn params(&self) -> &BfsParams {
+        &self.p
+    }
+}
+
+impl Workload for BfsWorkload {
+    type Layout = BfsLayout;
+    type Golden = Vec<u32>;
+
+    fn name(&self) -> String {
+        format!("bfs-{}", self.p.graph.name())
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+        vec![(SLOT_BITOR, MergeKind::BitOr)]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> BfsLayout {
+        let g = &self.g;
+        let v = g.vertices();
+        let words = v.div_ceil(32);
         let offsets = mem.alloc_lines((v as u64 + 1) * 4);
         for (i, &o) in g.offsets.iter().enumerate() {
             mem.poke(offsets.add(i as u64 * 4), o);
@@ -137,18 +194,19 @@ pub fn run(p: &BfsParams, variant: Variant, cfg: MachineConfig) -> RunResult {
         }
         let visited = mem.alloc_lines(words as u64 * 4);
         let next = mem.alloc_lines(words as u64 * 4);
-        // seed: source visited and in the current frontier (encoded by
-        // `next` at level -1 folded below — simpler: pre-set visited and
-        // use an explicit first frontier via next)
-        mem.poke(visited.add((source / 32) as u64 * 4), 1 << (source % 32));
-        let mut l = Layout {
+        // seed: source visited; the level-0 frontier is the source,
+        // handled by core 0's program directly
+        mem.poke(
+            visited.add((self.source / 32) as u64 * 4),
+            1 << (self.source % 32),
+        );
+        let mut l = BfsLayout {
             offsets,
             targets,
             visited,
             next,
-            locks: Addr(0),
-            lists: Addr(0),
-            list_stride: 0,
+            locks: LockArray::none(),
+            lists: DupSpace::none(),
             list_len: Addr(0),
             flags: Addr(0),
             words,
@@ -157,175 +215,175 @@ pub fn run(p: &BfsParams, variant: Variant, cfg: MachineConfig) -> RunResult {
             Variant::Fgl => {
                 // one padded lock per bitmap word (Table 3: FGL's big
                 // footprint for BFS)
-                l.locks = mem.alloc_lines(words as u64 * 64);
+                l.locks = LockArray::alloc(mem, words as u64, 64);
             }
             Variant::Dup => {
                 // thread-local update containers: v/4 entries per core,
                 // spilling to direct atomic application on overflow
-                let stride = ((v as u64 / 4).max(64) * 4).next_multiple_of(64);
-                l.lists = mem.alloc_lines(stride * cores as u64);
-                l.list_stride = stride;
+                l.lists = DupSpace::alloc(mem, (v as u64 / 4).max(64) * 4, cores);
                 l.list_len = mem.alloc_lines(cores as u64 * 64);
             }
             _ => {}
         }
         l.flags = mem.alloc_lines(cores as u64 * 64);
         l
-    });
-
-    // current frontier is represented by a per-level bitmap `cur` that we
-    // rebuild from `next`; level 0's frontier is just the source.
-    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
-        .map(|core| {
-            let l = layout;
-            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                if variant == Variant::CCache {
-                    ctx.merge_init(SLOT_BITOR, MergeKind::BitOr);
-                }
-                let wlo = core * l.words / cores;
-                let whi = (core + 1) * l.words / cores;
-                // level-0 frontier: the source only, handled by core 0
-                let mut frontier: Vec<u32> = if core == 0 { vec![source as u32] } else { vec![] };
-
-                for _level in 0..v {
-                    // -- expand my frontier into `next` --
-                    let mut discovered = false;
-                    for &u in &frontier {
-                        let s = ctx.read_u32(l.offsets.add(u as u64 * 4));
-                        let e = ctx.read_u32(l.offsets.add((u as u64 + 1) * 4));
-                        for ei in s..e {
-                            let t = ctx.read_u32(l.targets.add(ei as u64 * 4));
-                            let (w, b) = ((t / 32) as u64, t % 32);
-                            let bit = 1u32 << b;
-                            // visited is stable within a level
-                            let seen = ctx.read_u32(l.visited.add(w * 4));
-                            if seen & bit != 0 {
-                                continue;
-                            }
-                            discovered = true;
-                            match variant {
-                                Variant::Atomic => {
-                                    ctx.fetch_or_u32(l.next.add(w * 4), bit);
-                                }
-                                Variant::Fgl => {
-                                    let lock = l.locks.add(w * 64);
-                                    ctx.lock(lock);
-                                    let cur = ctx.read_u32(l.next.add(w * 4));
-                                    ctx.write_u32(l.next.add(w * 4), cur | bit);
-                                    ctx.unlock(lock);
-                                }
-                                Variant::Dup => {
-                                    // append to my container; spill = apply
-                                    let len_a = l.list_len.add(core as u64 * 64);
-                                    let len = ctx.read_u32(len_a);
-                                    if (len as u64 + 1) * 4 < l.list_stride {
-                                        ctx.write_u32(
-                                            l.lists.add(
-                                                core as u64 * l.list_stride
-                                                    + len as u64 * 4,
-                                            ),
-                                            t,
-                                        );
-                                        ctx.write_u32(len_a, len + 1);
-                                    } else {
-                                        ctx.fetch_or_u32(l.next.add(w * 4), bit);
-                                    }
-                                }
-                                Variant::CCache => {
-                                    let a = l.next.add(w * 4);
-                                    let cur = ctx.c_read_u32(a, SLOT_BITOR as u8);
-                                    ctx.c_write_u32(a, cur | bit, SLOT_BITOR as u8);
-                                    // per-COp soft_merge: w-1 discipline
-                                    // for arbitrary-degree vertices
-                                    ctx.soft_merge();
-                                }
-                                Variant::Cgl => unimplemented!("CGL BFS not modeled"),
-                            }
-                            ctx.compute(2);
-                        }
-                    }
-
-                    // -- level-end merge --
-                    if variant == Variant::CCache {
-                        ctx.merge();
-                    }
-                    ctx.barrier();
-                    if variant == Variant::Dup {
-                        // apply my container with atomics (paper's scheme)
-                        let len_a = l.list_len.add(core as u64 * 64);
-                        let len = ctx.read_u32(len_a);
-                        for i in 0..len as u64 {
-                            let t = ctx
-                                .read_u32(l.lists.add(core as u64 * l.list_stride + i * 4));
-                            let (w, b) = ((t / 32) as u64, t % 32);
-                            ctx.fetch_or_u32(l.next.add(w * 4), 1 << b);
-                        }
-                        ctx.write_u32(len_a, 0);
-                        ctx.barrier();
-                    }
-
-                    // -- fold next into visited, build the new frontier --
-                    frontier.clear();
-                    for w in wlo..whi {
-                        let nw = ctx.read_u32(l.next.add(w as u64 * 4));
-                        if nw == 0 {
-                            continue;
-                        }
-                        let seen = ctx.read_u32(l.visited.add(w as u64 * 4));
-                        let fresh = nw & !seen;
-                        if fresh != 0 {
-                            ctx.write_u32(l.visited.add(w as u64 * 4), seen | fresh);
-                            let mut bits = fresh;
-                            while bits != 0 {
-                                let b = bits.trailing_zeros();
-                                bits &= bits - 1;
-                                frontier.push((w * 32) as u32 + b);
-                            }
-                        }
-                        ctx.write_u32(l.next.add(w as u64 * 4), 0);
-                    }
-                    ctx.compute(frontier.len() as u64);
-
-                    // -- global termination check --
-                    ctx.write_u32(
-                        l.flags.add(core as u64 * 64),
-                        (discovered || !frontier.is_empty()) as u32,
-                    );
-                    ctx.barrier();
-                    let mut any = 0;
-                    for c in 0..cores as u64 {
-                        any |= ctx.read_u32(l.flags.add(c * 64));
-                    }
-                    ctx.barrier();
-                    if any == 0 {
-                        break;
-                    }
-                }
-            });
-            f
-        })
-        .collect();
-
-    let stats = machine.run(programs);
-
-    // ---- verification ----
-    let gold = golden(&g, source);
-    let verified = machine.setup(|mem| {
-        (0..words).all(|w| mem.peek(layout.visited.add(w as u64 * 4)) == gold[w])
-    });
-
-    RunResult {
-        benchmark: format!("bfs-{}", p.graph.name()),
-        variant,
-        stats,
-        verified,
-        quality: None,
     }
+
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &BfsLayout,
+    ) {
+        let v = self.g.vertices();
+        let source = self.source;
+        let wlo = core * l.words / cores;
+        let whi = (core + 1) * l.words / cores;
+        // level-0 frontier: the source only, handled by core 0
+        let mut frontier: Vec<u32> = if core == 0 {
+            vec![source as u32]
+        } else {
+            vec![]
+        };
+
+        for _level in 0..v {
+            // -- expand my frontier into `next` --
+            let mut discovered = false;
+            for &u in &frontier {
+                let s = ctx.read_u32(l.offsets.add(u as u64 * 4));
+                let e = ctx.read_u32(l.offsets.add((u as u64 + 1) * 4));
+                for ei in s..e {
+                    let t = ctx.read_u32(l.targets.add(ei as u64 * 4));
+                    let (w, b) = ((t / 32) as u64, t % 32);
+                    let bit = 1u32 << b;
+                    // visited is stable within a level
+                    let seen = ctx.read_u32(l.visited.add(w * 4));
+                    if seen & bit != 0 {
+                        continue;
+                    }
+                    discovered = true;
+                    match variant {
+                        Variant::Atomic => {
+                            ctx.fetch_or_u32(l.next.add(w * 4), bit);
+                        }
+                        Variant::Fgl => {
+                            l.locks.lock(ctx, w);
+                            let cur = ctx.read_u32(l.next.add(w * 4));
+                            ctx.write_u32(l.next.add(w * 4), cur | bit);
+                            l.locks.unlock(ctx, w);
+                        }
+                        Variant::Dup => {
+                            // append to my container; spill = apply
+                            let len_a = l.list_len.add(core as u64 * 64);
+                            let len = ctx.read_u32(len_a);
+                            if (len as u64 + 1) * 4 < l.lists.stride() {
+                                ctx.write_u32(
+                                    l.lists.copy_base(core).add(len as u64 * 4),
+                                    t,
+                                );
+                                ctx.write_u32(len_a, len + 1);
+                            } else {
+                                ctx.fetch_or_u32(l.next.add(w * 4), bit);
+                            }
+                        }
+                        Variant::CCache => {
+                            let a = l.next.add(w * 4);
+                            let cur = ctx.c_read_u32(a, SLOT_BITOR as u8);
+                            ctx.c_write_u32(a, cur | bit, SLOT_BITOR as u8);
+                            // per-COp soft_merge: w-1 discipline
+                            // for arbitrary-degree vertices
+                            ctx.soft_merge();
+                        }
+                        Variant::Cgl => unreachable!("driver rejects unsupported variants"),
+                    }
+                    ctx.compute(2);
+                }
+            }
+
+            // -- level-end merge --
+            if variant == Variant::CCache {
+                ctx.merge();
+            }
+            ctx.barrier();
+            if variant == Variant::Dup {
+                // apply my container with atomics (paper's scheme)
+                let len_a = l.list_len.add(core as u64 * 64);
+                let len = ctx.read_u32(len_a);
+                for i in 0..len as u64 {
+                    let t = ctx.read_u32(l.lists.copy_base(core).add(i * 4));
+                    let (w, b) = ((t / 32) as u64, t % 32);
+                    ctx.fetch_or_u32(l.next.add(w * 4), 1 << b);
+                }
+                ctx.write_u32(len_a, 0);
+                ctx.barrier();
+            }
+
+            // -- fold next into visited, build the new frontier --
+            frontier.clear();
+            for w in wlo..whi {
+                let nw = ctx.read_u32(l.next.add(w as u64 * 4));
+                if nw == 0 {
+                    continue;
+                }
+                let seen = ctx.read_u32(l.visited.add(w as u64 * 4));
+                let fresh = nw & !seen;
+                if fresh != 0 {
+                    ctx.write_u32(l.visited.add(w as u64 * 4), seen | fresh);
+                    let mut bits = fresh;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros();
+                        bits &= bits - 1;
+                        frontier.push((w * 32) as u32 + b);
+                    }
+                }
+                ctx.write_u32(l.next.add(w as u64 * 4), 0);
+            }
+            ctx.compute(frontier.len() as u64);
+
+            // -- global termination check --
+            ctx.write_u32(
+                l.flags.add(core as u64 * 64),
+                (discovered || !frontier.is_empty()) as u32,
+            );
+            ctx.barrier();
+            let mut any = 0;
+            for c in 0..cores as u64 {
+                any |= ctx.read_u32(l.flags.add(c * 64));
+            }
+            ctx.barrier();
+            if any == 0 {
+                break;
+            }
+        }
+    }
+
+    fn golden(&self, _cores: usize) -> Vec<u32> {
+        golden(&self.g, self.source)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &BfsLayout,
+        gold: &Vec<u32>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let ok = (0..l.words).all(|w| mem.peek(l.visited.add(w as u64 * 4)) == gold[w]);
+        (ok, None)
+    }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &BfsParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&BfsWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::ExecError;
 
     fn small() -> BfsParams {
         BfsParams {
@@ -356,6 +414,15 @@ mod tests {
             let r = run(&p, v, cfg());
             assert!(r.verified, "variant {v:?} diverged");
         }
+    }
+
+    #[test]
+    fn cgl_is_a_typed_error() {
+        let r = driver::run(&BfsWorkload::new(small()), Variant::Cgl, cfg());
+        assert!(matches!(
+            r,
+            Err(ExecError::UnsupportedVariant { variant: Variant::Cgl, .. })
+        ));
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Histogram benchmark — the classic privatization workload: cores
+//! stream a shared read-only input array and apply commutative `+1`
+//! updates to a small, hot array of bins. Uniform or zipf-skewed bin
+//! choice (the skew knob concentrates contention the way the paper's
+//! uniform keys do not).
+//!
+//! This is the registry's "fifth benchmark": one [`Workload`] impl, no
+//! bespoke driver code — the template for adding new scenarios.
+
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
+use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::merge::MergeKind;
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct HgParams {
+    /// Input elements streamed (each one increments one bin).
+    pub items: usize,
+    pub bins: usize,
+    pub seed: u64,
+    /// 0.0 = uniform bins; >0 = zipf-skewed hot bins.
+    pub zipf_theta: f64,
+}
+
+impl Default for HgParams {
+    fn default() -> Self {
+        Self {
+            items: 65536,
+            bins: 1024,
+            seed: 0x4157,
+            zipf_theta: 0.0,
+        }
+    }
+}
+
+impl HgParams {
+    /// Input stream + bins (the input dominates; bins stay hot in L1).
+    pub fn working_set_bytes(&self) -> u64 {
+        (self.items * 4 + self.bins * 4) as u64
+    }
+}
+
+/// Host-side input stream: the bin index of each element.
+fn bin_stream(p: &HgParams) -> Vec<u32> {
+    let mut rng = Rng::new(p.seed ^ 0x8157_0000);
+    let zipf = (p.zipf_theta > 0.0).then(|| Zipf::new(p.bins, p.zipf_theta));
+    (0..p.items)
+        .map(|_| match &zipf {
+            Some(z) => z.sample(&mut rng) as u32,
+            None => rng.usize_below(p.bins) as u32,
+        })
+        .collect()
+}
+
+/// Sequential golden run: per-bin counts.
+pub fn golden_counts(p: &HgParams) -> Vec<u32> {
+    let mut counts = vec![0u32; p.bins];
+    for b in bin_stream(p) {
+        counts[b as usize] += 1;
+    }
+    counts
+}
+
+#[derive(Clone, Copy)]
+pub struct HgLayout {
+    input: Addr,
+    bins: Addr,
+    global_lock: Addr,
+    locks: LockArray,
+    copies: DupSpace,
+}
+
+/// Histogram implements every variant, including atomics (CAS-loop
+/// increment) and the CGL baseline.
+pub const VARIANTS: [Variant; 5] = [
+    Variant::Cgl,
+    Variant::Fgl,
+    Variant::Dup,
+    Variant::CCache,
+    Variant::Atomic,
+];
+
+pub struct HgWorkload {
+    p: HgParams,
+}
+
+impl HgWorkload {
+    pub fn new(p: HgParams) -> Self {
+        Self { p }
+    }
+
+    /// Size the input stream to `frac` x LLC; bins stay small and hot.
+    pub fn sized(s: &SizeSpec) -> Self {
+        Self::new(HgParams {
+            items: (s.target_bytes() / 4).max(1024) as usize,
+            bins: 1024,
+            seed: s.seed,
+            zipf_theta: s.zipf_theta,
+        })
+    }
+
+    pub fn params(&self) -> &HgParams {
+        &self.p
+    }
+}
+
+impl Workload for HgWorkload {
+    type Layout = HgLayout;
+    type Golden = Vec<u32>;
+
+    fn name(&self) -> String {
+        "histogram".into()
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+        vec![(0, MergeKind::AddU32)]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> HgLayout {
+        let p = &self.p;
+        let input = mem.alloc_lines(p.items as u64 * 4);
+        for (i, b) in bin_stream(p).into_iter().enumerate() {
+            mem.poke(input.add(i as u64 * 4), b);
+        }
+        let bins = mem.alloc_lines(p.bins as u64 * 4);
+        let mut l = HgLayout {
+            input,
+            bins,
+            global_lock: Addr(0),
+            locks: LockArray::none(),
+            copies: DupSpace::none(),
+        };
+        match variant {
+            Variant::Cgl => l.global_lock = mem.alloc_lines(64),
+            Variant::Fgl => {
+                l.locks = LockArray::alloc(mem, p.bins as u64, PTHREAD_LOCK_BYTES)
+            }
+            Variant::Dup => l.copies = DupSpace::alloc(mem, p.bins as u64 * 4, cores),
+            _ => {}
+        }
+        l
+    }
+
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &HgLayout,
+    ) {
+        let p = &self.p;
+        let lo = core * p.items / cores;
+        let hi = (core + 1) * p.items / cores;
+        for i in lo..hi {
+            let b = ctx.read_u32(l.input.add(i as u64 * 4)) as u64;
+            let a = l.bins.add(b * 4);
+            match variant {
+                Variant::Cgl | Variant::Fgl => {
+                    let lock = if variant == Variant::Fgl {
+                        l.locks.addr(b)
+                    } else {
+                        l.global_lock
+                    };
+                    ctx.lock(lock);
+                    let v = ctx.read_u32(a);
+                    ctx.write_u32(a, v.wrapping_add(1));
+                    ctx.unlock(lock);
+                }
+                Variant::Dup => {
+                    let pa = l.copies.copy_base(core).add(b * 4);
+                    let v = ctx.read_u32(pa);
+                    ctx.write_u32(pa, v.wrapping_add(1));
+                }
+                Variant::CCache => {
+                    let v = ctx.c_read_u32(a, 0);
+                    ctx.c_write_u32(a, v.wrapping_add(1), 0);
+                    ctx.soft_merge();
+                }
+                Variant::Atomic => loop {
+                    // fetch-add via CAS loop (the ISA has no fetch-add)
+                    let v = ctx.read_u32(a);
+                    if ctx.cas_u32(a, v, v.wrapping_add(1)) {
+                        break;
+                    }
+                },
+            }
+            ctx.compute(2);
+        }
+        if variant == Variant::CCache {
+            ctx.merge();
+        }
+        ctx.barrier();
+        if variant == Variant::Dup {
+            // end-of-phase reduction, bin range partitioned across cores
+            let lo = (core * p.bins / cores) as u64;
+            let hi = ((core + 1) * p.bins / cores) as u64;
+            l.copies.reduce_add_u32(ctx, l.bins, cores, lo, hi);
+            ctx.barrier();
+        }
+    }
+
+    fn golden(&self, _cores: usize) -> Vec<u32> {
+        golden_counts(&self.p)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &HgLayout,
+        gold: &Vec<u32>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let ok = (0..self.p.bins).all(|b| mem.peek(l.bins.add(b as u64 * 4)) == gold[b]);
+        (ok, None)
+    }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &HgParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&HgWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> HgParams {
+        HgParams {
+            items: 4096,
+            bins: 128,
+            seed: 13,
+            zipf_theta: 0.0,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_five_variants_verify() {
+        for v in VARIANTS {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged from golden");
+        }
+    }
+
+    #[test]
+    fn zipf_skew_verifies_and_concentrates_mass() {
+        let p = HgParams {
+            zipf_theta: 0.9,
+            ..small()
+        };
+        for v in [Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {v:?} diverged");
+        }
+        let counts = golden_counts(&p);
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = p.items as f64 / p.bins as f64;
+        assert!(max > 4.0 * mean, "zipf should concentrate: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn golden_counts_sum_to_items() {
+        let p = small();
+        let total: u64 = golden_counts(&p).iter().map(|&c| c as u64).sum();
+        assert_eq!(total, p.items as u64);
+    }
+
+    #[test]
+    fn atomic_variant_counts_rmws() {
+        let r = run(&small(), Variant::Atomic, cfg());
+        assert!(r.stats.atomic_rmws as usize >= small().items / 2);
+    }
+
+    #[test]
+    fn dup_allocates_more_than_ccache() {
+        let d = run(&small(), Variant::Dup, cfg());
+        let c = run(&small(), Variant::CCache, cfg());
+        assert!(d.stats.bytes_allocated > c.stats.bytes_allocated);
+    }
+
+    #[test]
+    fn ccache_merges_bins() {
+        let r = run(&small(), Variant::CCache, cfg());
+        assert!(r.stats.merges > 0);
+        assert!(r.stats.cops > 0);
+    }
+}

@@ -13,14 +13,17 @@
 //!   the end of each iteration
 //! * CCache — sums lines are CData with an AddF32 merge; counts are f32
 //!   CData in their own line; soft_merge after every point
-//! * approx (Section 6.3) — CCache with an ApproxAddF32 merge dropping
-//!   ~10% of line merges; reports intra-cluster-distance degradation
+//! * approx (Section 6.3) — CCache with point-level update dropping;
+//!   reports intra-cluster-distance degradation
 
-use crate::exec::{RunResult, Variant};
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray};
+use crate::exec::{driver, RunResult, Variant, Workload};
 use crate::merge::MergeKind;
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::{CoreCtx, Machine};
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
 use crate::util::rng::Rng;
 
 /// Dimensions fixed at 16 f32 = one cache line per point / per centroid
@@ -142,14 +145,13 @@ pub fn intra_cluster_distance(p: &KmParams, centroids: &[[f32; DIM]]) -> f64 {
 }
 
 #[derive(Clone, Copy)]
-struct Layout {
+pub struct KmLayout {
     points: Addr,
     centroids: Addr,
     sums: Addr,
     counts: Addr,
-    locks: Addr,
-    copies: Addr,
-    copy_stride: u64,
+    locks: LockArray,
+    copies: DupSpace,
     /// Offset of the counts line inside a DUP copy block.
     copy_counts_off: u64,
 }
@@ -157,16 +159,71 @@ struct Layout {
 const SLOT_SUMS: usize = 0;
 const SLOT_COUNTS: usize = 1;
 
-pub fn run(p: &KmParams, variant: Variant, cfg: MachineConfig) -> RunResult {
-    assert!(
-        p.clusters * 4 <= 64,
-        "counts must fit one line (clusters <= 16)"
-    );
-    let cores = cfg.cores;
-    let machine = Machine::new(cfg);
-    let (pts, centers) = dataset(p);
+/// The variants K-Means implements.
+pub const VARIANTS: [Variant; 3] = [Variant::Fgl, Variant::Dup, Variant::CCache];
 
-    let layout = machine.setup(|mem| {
+/// K-Means as a [`Workload`].
+pub struct KmWorkload {
+    p: KmParams,
+}
+
+impl KmWorkload {
+    pub fn new(p: KmParams) -> Self {
+        assert!(
+            p.clusters * 4 <= 64,
+            "counts must fit one line (clusters <= 16)"
+        );
+        Self { p }
+    }
+
+    /// Size the point set to `frac` x LLC (accumulators are tiny by
+    /// design).
+    pub fn sized(approx: bool, s: &SizeSpec) -> Self {
+        let points = (s.target_bytes() / (DIM as u64 * 4)).max(256) as usize;
+        Self::new(KmParams {
+            points,
+            clusters: 4,
+            iters: 2,
+            seed: s.seed,
+            approx_drop_p: if approx { 0.1 } else { 0.0 },
+        })
+    }
+
+    pub fn params(&self) -> &KmParams {
+        &self.p
+    }
+}
+
+impl Workload for KmWorkload {
+    type Layout = KmLayout;
+    type Golden = Vec<[f32; DIM]>;
+
+    fn name(&self) -> String {
+        if self.p.approx_drop_p > 0.0 {
+            "kmeans-approx".into()
+        } else {
+            "kmeans".into()
+        }
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+        vec![
+            (SLOT_SUMS, MergeKind::AddF32),
+            (SLOT_COUNTS, MergeKind::AddF32),
+        ]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> KmLayout {
+        let p = &self.p;
+        let (pts, centers) = dataset(p);
         let points = mem.alloc_lines((p.points * DIM * 4) as u64);
         for (i, pt) in pts.iter().enumerate() {
             for j in 0..DIM {
@@ -182,237 +239,218 @@ pub fn run(p: &KmParams, variant: Variant, cfg: MachineConfig) -> RunResult {
         let sums = mem.alloc_lines((p.clusters * DIM * 4) as u64);
         let counts = mem.alloc_lines(64); // all counts in one line (f32)
         let copy_counts_off = ((p.clusters * DIM * 4) as u64).next_multiple_of(64);
-        let mut l = Layout {
+        let mut l = KmLayout {
             points,
             centroids,
             sums,
             counts,
-            locks: Addr(0),
-            copies: Addr(0),
-            copy_stride: 0,
+            locks: LockArray::none(),
+            copies: DupSpace::none(),
             copy_counts_off,
         };
         match variant {
             Variant::Fgl => {
-                l.locks = mem.alloc_lines(p.clusters as u64 * 64);
+                // one padded lock (own line) per cluster
+                l.locks = LockArray::alloc(mem, p.clusters as u64, 64);
             }
             Variant::Dup => {
-                let stride = copy_counts_off + 64;
-                l.copies = mem.alloc_lines(stride * cores as u64);
-                l.copy_stride = stride;
+                l.copies = DupSpace::alloc(mem, copy_counts_off + 64, cores);
             }
             _ => {}
         }
         l
-    });
+    }
 
-    let merge_sums = MergeKind::AddF32;
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &KmLayout,
+    ) {
+        let p = &self.p;
+        // approximate variant (Section 6.3): "discards updates
+        // for some points in a dataset" — each point's
+        // accumulation is dropped with probability drop_p. (At
+        // our merge cadence — merge-on-evict keeps K-Means
+        // merges rare and huge — dropping whole merges would
+        // discard a core's entire epoch, so the perforation is
+        // applied at the paper's stated granularity: points.)
+        let mut drop_rng = Rng::new(p.seed ^ (0xD0 + core as u64));
+        let lo = core * p.points / cores;
+        let hi = (core + 1) * p.points / cores;
+        let sums_w = |c: usize, j: usize| l.sums.add((c * DIM + j) as u64 * 4);
+        let counts_w = |c: usize| l.counts.add(c as u64 * 4);
 
-    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
-        .map(|core| {
-            let p = p.clone();
-            let l = layout;
-            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                if variant == Variant::CCache {
-                    ctx.merge_init(SLOT_SUMS, merge_sums);
-                    ctx.merge_init(SLOT_COUNTS, MergeKind::AddF32);
+        for _iter in 0..p.iters {
+            // -- read current centroids into "registers" (timed) --
+            let mut cen = vec![[0f32; DIM]; p.clusters];
+            for c in 0..p.clusters {
+                for j in 0..DIM {
+                    cen[c][j] = ctx.read_f32(l.centroids.add((c * DIM + j) as u64 * 4));
                 }
-                // approximate variant (Section 6.3): "discards updates
-                // for some points in a dataset" — each point's
-                // accumulation is dropped with probability drop_p. (At
-                // our merge cadence — merge-on-evict keeps K-Means
-                // merges rare and huge — dropping whole merges would
-                // discard a core's entire epoch, so the perforation is
-                // applied at the paper's stated granularity: points.)
-                let mut drop_rng =
-                    crate::util::rng::Rng::new(p.seed ^ (0xD0 + core as u64));
-                let lo = core * p.points / cores;
-                let hi = (core + 1) * p.points / cores;
-                let sums_w = |c: usize, j: usize| l.sums.add((c * DIM + j) as u64 * 4);
-                let counts_w = |c: usize| l.counts.add(c as u64 * 4);
+            }
 
-                for _iter in 0..p.iters {
-                    // -- read current centroids into "registers" (timed) --
-                    let mut cen = vec![[0f32; DIM]; p.clusters];
-                    for c in 0..p.clusters {
-                        for j in 0..DIM {
-                            cen[c][j] =
-                                ctx.read_f32(l.centroids.add((c * DIM + j) as u64 * 4));
-                        }
-                    }
-
-                    // -- assignment + accumulation over my points --
-                    for i in lo..hi {
-                        let mut pt = [0f32; DIM];
-                        for j in 0..DIM {
-                            pt[j] = ctx.read_f32(l.points.add((i * DIM + j) as u64 * 4));
-                        }
-                        // distance compute: clusters * DIM * 3 flops
-                        ctx.compute((p.clusters * DIM * 3) as u64);
-                        let c = nearest(&pt, &cen);
-
-                        if variant == Variant::CCache
-                            && p.approx_drop_p > 0.0
-                            && drop_rng.bernoulli(p.approx_drop_p as f64)
-                        {
-                            continue; // perforated update
-                        }
-
-                        match variant {
-                            Variant::Fgl => {
-                                ctx.lock(l.locks.add(c as u64 * 64));
-                                for j in 0..DIM {
-                                    let a = sums_w(c, j);
-                                    let v = ctx.read_f32(a);
-                                    ctx.write_f32(a, v + pt[j]);
-                                }
-                                let a = counts_w(c);
-                                let v = ctx.read_f32(a);
-                                ctx.write_f32(a, v + 1.0);
-                                ctx.unlock(l.locks.add(c as u64 * 64));
-                            }
-                            Variant::Dup => {
-                                let base = l.copies.add(core as u64 * l.copy_stride);
-                                for j in 0..DIM {
-                                    let a = base.add((c * DIM + j) as u64 * 4);
-                                    let v = ctx.read_f32(a);
-                                    ctx.write_f32(a, v + pt[j]);
-                                }
-                                let ca = base.add(l.copy_counts_off + c as u64 * 4);
-                                let v = ctx.read_f32(ca);
-                                ctx.write_f32(ca, v + 1.0);
-                            }
-                            Variant::CCache => {
-                                for j in 0..DIM {
-                                    let a = sums_w(c, j);
-                                    let v = ctx.c_read_f32(a, SLOT_SUMS as u8);
-                                    ctx.c_write_f32(a, v + pt[j], SLOT_SUMS as u8);
-                                }
-                                let a = counts_w(c);
-                                let v = ctx.c_read_f32(a, SLOT_COUNTS as u8);
-                                ctx.c_write_f32(a, v + 1.0, SLOT_COUNTS as u8);
-                                ctx.soft_merge();
-                            }
-                            _ => unimplemented!("variant for kmeans"),
-                        }
-                    }
-
-                    // -- merge boundary --
-                    if variant == Variant::CCache {
-                        ctx.merge();
-                    }
-                    ctx.barrier();
-
-                    // -- DUP reduction (partitioned by cluster) --
-                    if variant == Variant::Dup {
-                        for c in 0..p.clusters {
-                            if c % cores != core {
-                                continue;
-                            }
-                            for src in 0..cores as u64 {
-                                let base = l.copies.add(src * l.copy_stride);
-                                for j in 0..DIM {
-                                    let a = sums_w(c, j);
-                                    let v = ctx.read_f32(a);
-                                    let add =
-                                        ctx.read_f32(base.add((c * DIM + j) as u64 * 4));
-                                    ctx.write_f32(a, v + add);
-                                }
-                                let ca = base.add(l.copy_counts_off + c as u64 * 4);
-                                let v = ctx.read_f32(counts_w(c));
-                                let add = ctx.read_f32(ca);
-                                ctx.write_f32(counts_w(c), v + add);
-                            }
-                        }
-                        ctx.barrier();
-                    }
-
-                    // -- centroid recompute + accumulator reset (cluster-
-                    //    partitioned, coherent) --
-                    for c in 0..p.clusters {
-                        if c % cores != core {
-                            continue;
-                        }
-                        let count = ctx.read_f32(counts_w(c));
-                        for j in 0..DIM {
-                            let s = ctx.read_f32(sums_w(c, j));
-                            if count > 0.0 {
-                                ctx.write_f32(
-                                    l.centroids.add((c * DIM + j) as u64 * 4),
-                                    s / count,
-                                );
-                            }
-                            ctx.write_f32(sums_w(c, j), 0.0);
-                        }
-                        ctx.write_f32(counts_w(c), 0.0);
-                        // zero every core's DUP copy of this cluster
-                        if variant == Variant::Dup {
-                            for src in 0..cores as u64 {
-                                let base = l.copies.add(src * l.copy_stride);
-                                for j in 0..DIM {
-                                    ctx.write_f32(
-                                        base.add((c * DIM + j) as u64 * 4),
-                                        0.0,
-                                    );
-                                }
-                                ctx.write_f32(
-                                    base.add(l.copy_counts_off + c as u64 * 4),
-                                    0.0,
-                                );
-                            }
-                        }
-                    }
-                    ctx.barrier();
+            // -- assignment + accumulation over my points --
+            for i in lo..hi {
+                let mut pt = [0f32; DIM];
+                for j in 0..DIM {
+                    pt[j] = ctx.read_f32(l.points.add((i * DIM + j) as u64 * 4));
                 }
-            });
-            f
-        })
-        .collect();
+                // distance compute: clusters * DIM * 3 flops
+                ctx.compute((p.clusters * DIM * 3) as u64);
+                let c = nearest(&pt, &cen);
 
-    let stats = machine.run(programs);
+                if variant == Variant::CCache
+                    && p.approx_drop_p > 0.0
+                    && drop_rng.bernoulli(p.approx_drop_p as f64)
+                {
+                    continue; // perforated update
+                }
 
-    // ---- verification ----
-    let gold = golden(p);
-    let final_centroids: Vec<[f32; DIM]> = machine.setup(|mem| {
-        (0..p.clusters)
+                match variant {
+                    Variant::Fgl => {
+                        l.locks.lock(ctx, c as u64);
+                        for j in 0..DIM {
+                            let a = sums_w(c, j);
+                            let v = ctx.read_f32(a);
+                            ctx.write_f32(a, v + pt[j]);
+                        }
+                        let a = counts_w(c);
+                        let v = ctx.read_f32(a);
+                        ctx.write_f32(a, v + 1.0);
+                        l.locks.unlock(ctx, c as u64);
+                    }
+                    Variant::Dup => {
+                        let base = l.copies.copy_base(core);
+                        for j in 0..DIM {
+                            let a = base.add((c * DIM + j) as u64 * 4);
+                            let v = ctx.read_f32(a);
+                            ctx.write_f32(a, v + pt[j]);
+                        }
+                        let ca = base.add(l.copy_counts_off + c as u64 * 4);
+                        let v = ctx.read_f32(ca);
+                        ctx.write_f32(ca, v + 1.0);
+                    }
+                    Variant::CCache => {
+                        for j in 0..DIM {
+                            let a = sums_w(c, j);
+                            let v = ctx.c_read_f32(a, SLOT_SUMS as u8);
+                            ctx.c_write_f32(a, v + pt[j], SLOT_SUMS as u8);
+                        }
+                        let a = counts_w(c);
+                        let v = ctx.c_read_f32(a, SLOT_COUNTS as u8);
+                        ctx.c_write_f32(a, v + 1.0, SLOT_COUNTS as u8);
+                        ctx.soft_merge();
+                    }
+                    _ => unreachable!("driver rejects unsupported variants"),
+                }
+            }
+
+            // -- merge boundary --
+            if variant == Variant::CCache {
+                ctx.merge();
+            }
+            ctx.barrier();
+
+            // -- DUP reduction (partitioned by cluster) --
+            if variant == Variant::Dup {
+                for c in 0..p.clusters {
+                    if c % cores != core {
+                        continue;
+                    }
+                    for src in 0..cores {
+                        let base = l.copies.copy_base(src);
+                        for j in 0..DIM {
+                            let a = sums_w(c, j);
+                            let v = ctx.read_f32(a);
+                            let add = ctx.read_f32(base.add((c * DIM + j) as u64 * 4));
+                            ctx.write_f32(a, v + add);
+                        }
+                        let ca = base.add(l.copy_counts_off + c as u64 * 4);
+                        let v = ctx.read_f32(counts_w(c));
+                        let add = ctx.read_f32(ca);
+                        ctx.write_f32(counts_w(c), v + add);
+                    }
+                }
+                ctx.barrier();
+            }
+
+            // -- centroid recompute + accumulator reset (cluster-
+            //    partitioned, coherent) --
+            for c in 0..p.clusters {
+                if c % cores != core {
+                    continue;
+                }
+                let count = ctx.read_f32(counts_w(c));
+                for j in 0..DIM {
+                    let s = ctx.read_f32(sums_w(c, j));
+                    if count > 0.0 {
+                        ctx.write_f32(l.centroids.add((c * DIM + j) as u64 * 4), s / count);
+                    }
+                    ctx.write_f32(sums_w(c, j), 0.0);
+                }
+                ctx.write_f32(counts_w(c), 0.0);
+                // zero every core's DUP copy of this cluster
+                if variant == Variant::Dup {
+                    for src in 0..cores {
+                        let base = l.copies.copy_base(src);
+                        for j in 0..DIM {
+                            ctx.write_f32(base.add((c * DIM + j) as u64 * 4), 0.0);
+                        }
+                        ctx.write_f32(base.add(l.copy_counts_off + c as u64 * 4), 0.0);
+                    }
+                }
+            }
+            ctx.barrier();
+        }
+    }
+
+    fn golden(&self, _cores: usize) -> Vec<[f32; DIM]> {
+        golden(&self.p)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &KmLayout,
+        gold: &Vec<[f32; DIM]>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let p = &self.p;
+        let final_centroids: Vec<[f32; DIM]> = (0..p.clusters)
             .map(|c| {
                 let mut v = [0f32; DIM];
-                for j in 0..DIM {
-                    v[j] = mem.peek_f32(layout.centroids.add((c * DIM + j) as u64 * 4));
+                for (j, x) in v.iter_mut().enumerate() {
+                    *x = mem.peek_f32(l.centroids.add((c * DIM + j) as u64 * 4));
                 }
                 v
             })
-            .collect()
-    });
+            .collect();
 
-    let (verified, quality) = if p.approx_drop_p > 0.0 {
-        // approximate variant: judge by clustering-quality degradation
-        let gold_q = intra_cluster_distance(p, &gold);
-        let got_q = intra_cluster_distance(p, &final_centroids);
-        let degradation = (got_q - gold_q) / gold_q;
-        // the paper reports ~20% degradation at 10% drops; accept the run
-        // as long as clustering hasn't collapsed
-        (degradation < 2.0, Some(degradation))
-    } else {
-        let ok = gold.iter().zip(&final_centroids).all(|(g, f)| {
-            g.iter()
-                .zip(f)
-                .all(|(a, b)| (a - b).abs() <= 1e-2 * (1.0 + a.abs()))
-        });
-        (ok, None)
-    };
-
-    RunResult {
-        benchmark: if p.approx_drop_p > 0.0 {
-            "kmeans-approx".into()
+        if p.approx_drop_p > 0.0 {
+            // approximate variant: judge by clustering-quality degradation
+            let gold_q = intra_cluster_distance(p, gold);
+            let got_q = intra_cluster_distance(p, &final_centroids);
+            let degradation = (got_q - gold_q) / gold_q;
+            // the paper reports ~20% degradation at 10% drops; accept the run
+            // as long as clustering hasn't collapsed
+            (degradation < 2.0, Some(degradation))
         } else {
-            "kmeans".into()
-        },
-        variant,
-        stats,
-        verified,
-        quality,
+            let ok = gold.iter().zip(&final_centroids).all(|(g, f)| {
+                g.iter()
+                    .zip(f)
+                    .all(|(a, b)| (a - b).abs() <= 1e-2 * (1.0 + a.abs()))
+            });
+            (ok, None)
+        }
     }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &KmParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&KmWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]

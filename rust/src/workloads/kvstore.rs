@@ -17,11 +17,14 @@
 //! Merge-function variants (Section 6.3): plain add, saturating add,
 //! complex multiplication.
 
-use crate::exec::{RunResult, Variant};
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
+use crate::exec::{driver, RunResult, Variant, Workload};
 use crate::merge::MergeKind;
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::{CoreCtx, Machine};
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
 use crate::util::rng::{Rng, Zipf};
 
 /// Which commutative update / merge function the store uses.
@@ -121,24 +124,75 @@ pub fn golden_counts(p: &KvParams, cores: usize) -> Vec<u32> {
     counts
 }
 
-/// Per-key lock stride: a pthread-mutex-sized object (40 B), word-aligned.
-const LOCK_STRIDE: u64 = 40;
-
 #[derive(Clone, Copy)]
-struct Layout {
+pub struct KvLayout {
     values: Addr,
-    locks: Addr,
+    locks: LockArray,
     global_lock: Addr,
-    copies: Addr,
-    copy_stride: u64,
+    copies: DupSpace,
 }
 
-pub fn run(p: &KvParams, variant: Variant, cfg: MachineConfig) -> RunResult {
-    let cores = cfg.cores;
-    let machine = Machine::new(cfg);
-    let vb = p.value_bytes();
+/// The variants the KV store implements (atomics are BFS/histogram-only
+/// in the paper's comparison).
+pub const VARIANTS: [Variant; 4] = [Variant::Cgl, Variant::Fgl, Variant::Dup, Variant::CCache];
 
-    let layout = machine.setup(|mem| {
+/// The KV store as a [`Workload`]: all variant scaffolding, programs and
+/// verification behind the one trait the driver consumes.
+pub struct KvWorkload {
+    p: KvParams,
+}
+
+impl KvWorkload {
+    pub fn new(p: KvParams) -> Self {
+        Self { p }
+    }
+
+    /// Size the value table to `frac` x LLC (Section 6.1's sweep).
+    pub fn sized(merge: KvMerge, s: &SizeSpec) -> Self {
+        let bytes_per_key = if matches!(merge, KvMerge::Cmul) { 8 } else { 4 };
+        let keys = (s.target_bytes() / bytes_per_key).max(256) as usize;
+        Self::new(KvParams {
+            keys,
+            accesses_per_key: 16, // the paper's ratio (Section 5.1)
+            seed: s.seed,
+            merge,
+            zipf_theta: s.zipf_theta,
+        })
+    }
+
+    pub fn params(&self) -> &KvParams {
+        &self.p
+    }
+}
+
+impl Workload for KvWorkload {
+    type Layout = KvLayout;
+    type Golden = Vec<u32>;
+
+    fn name(&self) -> String {
+        format!("kvstore-{}", self.p.merge.name())
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+        let kind = match self.p.merge {
+            KvMerge::Add => MergeKind::AddU32,
+            KvMerge::Sat { max } => MergeKind::SatAddU32 { max },
+            KvMerge::Cmul => MergeKind::CmulF32,
+        };
+        vec![(0, kind)]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> KvLayout {
+        let p = &self.p;
+        let vb = p.value_bytes();
         let values = mem.alloc_lines(p.keys as u64 * vb);
         if p.merge == KvMerge::Cmul {
             for k in 0..p.keys as u64 {
@@ -146,32 +200,30 @@ pub fn run(p: &KvParams, variant: Variant, cfg: MachineConfig) -> RunResult {
                 mem.poke_f32(values.add(k * 8 + 4), 0.0);
             }
         }
-        let mut l = Layout {
+        let mut l = KvLayout {
             values,
-            locks: Addr(0),
+            locks: LockArray::none(),
             global_lock: Addr(0),
-            copies: Addr(0),
-            copy_stride: 0,
+            copies: DupSpace::none(),
         };
         match variant {
             Variant::Fgl => {
                 // one pthread-mutex-sized (40 B) lock per key: the
                 // Table 3 footprint (FGL ~12x the value array) with the
                 // residual false sharing of ~1.6 locks per line
-                l.locks = mem.alloc_lines(p.keys as u64 * LOCK_STRIDE);
+                l.locks = LockArray::alloc(mem, p.keys as u64, PTHREAD_LOCK_BYTES);
             }
             Variant::Cgl => {
                 l.global_lock = mem.alloc_lines(64);
             }
             Variant::Dup => {
-                let stride = (p.keys as u64 * vb).next_multiple_of(64);
-                l.copies = mem.alloc_lines(stride * cores as u64);
-                l.copy_stride = stride;
+                l.copies = DupSpace::alloc(mem, p.keys as u64 * vb, cores);
                 if p.merge == KvMerge::Cmul {
-                    for c in 0..cores as u64 {
+                    for c in 0..cores {
+                        let base = l.copies.copy_base(c);
                         for k in 0..p.keys as u64 {
-                            mem.poke_f32(l.copies.add(c * stride + k * 8), 1.0);
-                            mem.poke_f32(l.copies.add(c * stride + k * 8 + 4), 0.0);
+                            mem.poke_f32(base.add(k * 8), 1.0);
+                            mem.poke_f32(base.add(k * 8 + 4), 0.0);
                         }
                     }
                 }
@@ -179,97 +231,100 @@ pub fn run(p: &KvParams, variant: Variant, cfg: MachineConfig) -> RunResult {
             _ => {}
         }
         l
-    });
-
-    let per_core = p.keys * p.accesses_per_key / cores;
-    let merge_kind = match p.merge {
-        KvMerge::Add => MergeKind::AddU32,
-        KvMerge::Sat { max } => MergeKind::SatAddU32 { max },
-        KvMerge::Cmul => MergeKind::CmulF32,
-    };
-    // the rotation factor for cmul updates
-    let (fr, fi) = (0.01f32.cos(), 0.01f32.sin());
-
-    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
-        .map(|core| {
-            let p = p.clone();
-            let l = layout;
-            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                let mut next = key_stream(&p, core);
-                match variant {
-                    Variant::Cgl | Variant::Fgl => {
-                        for _ in 0..per_core {
-                            let k = next() as u64;
-                            let lock = if variant == Variant::Fgl {
-                                l.locks.add(k * LOCK_STRIDE)
-                            } else {
-                                l.global_lock
-                            };
-                            ctx.lock(lock);
-                            update_coherent(ctx, &p, l.values, k, fr, fi);
-                            ctx.unlock(lock);
-                            ctx.compute(4);
-                        }
-                    }
-                    Variant::Dup => {
-                        let base = l.copies.add(core as u64 * l.copy_stride);
-                        for _ in 0..per_core {
-                            let k = next() as u64;
-                            update_coherent(ctx, &p, base, k, fr, fi);
-                            ctx.compute(4);
-                        }
-                        ctx.barrier();
-                        // reduction: this core merges its key range over
-                        // all copies into the master array
-                        let lo = (core * p.keys / cores) as u64;
-                        let hi = ((core + 1) * p.keys / cores) as u64;
-                        dup_reduce(ctx, &p, &l, cores, lo, hi);
-                        ctx.barrier();
-                    }
-                    Variant::CCache => {
-                        ctx.merge_init(0, merge_kind);
-                        for _ in 0..per_core {
-                            let k = next() as u64;
-                            update_ccache(ctx, &p, l.values, k, fr, fi);
-                            ctx.soft_merge();
-                            ctx.compute(4);
-                        }
-                        ctx.merge();
-                        ctx.barrier();
-                    }
-                    Variant::Atomic => unimplemented!("atomics KV not in the paper"),
-                }
-            });
-            f
-        })
-        .collect();
-
-    let stats = machine.run(programs);
-
-    // ---- verification against the sequential golden run ----
-    let counts = golden_counts(p, cores);
-    let verified = machine.setup(|mem| match p.merge {
-        KvMerge::Add => (0..p.keys)
-            .all(|k| mem.peek(layout.values.add(k as u64 * 4)) == counts[k]),
-        KvMerge::Sat { max } => (0..p.keys)
-            .all(|k| mem.peek(layout.values.add(k as u64 * 4)) == counts[k].min(max)),
-        KvMerge::Cmul => (0..p.keys).all(|k| {
-            let re = mem.peek_f32(layout.values.add(k as u64 * 8));
-            let im = mem.peek_f32(layout.values.add(k as u64 * 8 + 4));
-            // golden: factor^count
-            let theta = 0.01f64 * counts[k] as f64;
-            let (gr, gi) = (theta.cos() as f32, theta.sin() as f32);
-            (re - gr).abs() < 1e-2 && (im - gi).abs() < 1e-2
-        }),
-    });
-
-    RunResult {
-        benchmark: format!("kvstore-{}", p.merge.name()),
-        variant,
-        stats,
-        verified,
-        quality: None,
     }
+
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &KvLayout,
+    ) {
+        let p = &self.p;
+        let per_core = p.keys * p.accesses_per_key / cores;
+        // the rotation factor for cmul updates
+        let (fr, fi) = (0.01f32.cos(), 0.01f32.sin());
+        let mut next = key_stream(p, core);
+        match variant {
+            Variant::Cgl | Variant::Fgl => {
+                for _ in 0..per_core {
+                    let k = next() as u64;
+                    let lock = if variant == Variant::Fgl {
+                        l.locks.addr(k)
+                    } else {
+                        l.global_lock
+                    };
+                    ctx.lock(lock);
+                    update_coherent(ctx, p, l.values, k, fr, fi);
+                    ctx.unlock(lock);
+                    ctx.compute(4);
+                }
+            }
+            Variant::Dup => {
+                let base = l.copies.copy_base(core);
+                for _ in 0..per_core {
+                    let k = next() as u64;
+                    update_coherent(ctx, p, base, k, fr, fi);
+                    ctx.compute(4);
+                }
+                ctx.barrier();
+                // reduction: this core merges its key range over
+                // all copies into the master array
+                let lo = (core * p.keys / cores) as u64;
+                let hi = ((core + 1) * p.keys / cores) as u64;
+                dup_reduce(ctx, p, l, cores, lo, hi);
+                ctx.barrier();
+            }
+            Variant::CCache => {
+                for _ in 0..per_core {
+                    let k = next() as u64;
+                    update_ccache(ctx, p, l.values, k, fr, fi);
+                    ctx.soft_merge();
+                    ctx.compute(4);
+                }
+                ctx.merge();
+                ctx.barrier();
+            }
+            Variant::Atomic => unreachable!("driver rejects unsupported variants"),
+        }
+    }
+
+    fn golden(&self, cores: usize) -> Vec<u32> {
+        golden_counts(&self.p, cores)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &KvLayout,
+        counts: &Vec<u32>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let p = &self.p;
+        let ok = match p.merge {
+            KvMerge::Add => {
+                (0..p.keys).all(|k| mem.peek(l.values.add(k as u64 * 4)) == counts[k])
+            }
+            KvMerge::Sat { max } => (0..p.keys)
+                .all(|k| mem.peek(l.values.add(k as u64 * 4)) == counts[k].min(max)),
+            KvMerge::Cmul => (0..p.keys).all(|k| {
+                let re = mem.peek_f32(l.values.add(k as u64 * 8));
+                let im = mem.peek_f32(l.values.add(k as u64 * 8 + 4));
+                // golden: factor^count
+                let theta = 0.01f64 * counts[k] as f64;
+                let (gr, gi) = (theta.cos() as f32, theta.sin() as f32);
+                (re - gr).abs() < 1e-2 && (im - gi).abs() < 1e-2
+            }),
+        };
+        (ok, None)
+    }
+}
+
+/// Run through the generic driver, panicking on unsupported variants
+/// (ergonomic entry point for unit tests and custom-parameter callers).
+pub fn run(p: &KvParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&KvWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// One coherent (locked or private-copy) update.
@@ -319,29 +374,30 @@ fn update_ccache(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32, f
 /// master array. Note for Sat: private copies hold raw counts; the clamp
 /// is applied against the master (the DUP merge function, same as
 /// CCache's — the paper uses the same merge for both).
-fn dup_reduce(ctx: &mut CoreCtx, p: &KvParams, l: &Layout, cores: usize, lo: u64, hi: u64) {
-    for k in lo..hi {
-        match p.merge {
-            KvMerge::Add | KvMerge::Sat { .. } => {
+fn dup_reduce(ctx: &mut CoreCtx, p: &KvParams, l: &KvLayout, cores: usize, lo: u64, hi: u64) {
+    match p.merge {
+        KvMerge::Add => l.copies.reduce_add_u32(ctx, l.values, cores, lo, hi),
+        KvMerge::Sat { max } => {
+            for k in lo..hi {
                 let master = l.values.add(k * 4);
                 let mut acc = ctx.read_u32(master);
-                for c in 0..cores as u64 {
-                    let v = ctx.read_u32(l.copies.add(c * l.copy_stride + k * 4));
+                for c in 0..cores {
+                    let v = ctx.read_u32(l.copies.copy_base(c).add(k * 4));
                     acc = acc.wrapping_add(v);
                     ctx.compute(1);
                 }
-                if let KvMerge::Sat { max } = p.merge {
-                    acc = acc.min(max);
-                }
-                ctx.write_u32(master, acc);
+                ctx.write_u32(master, acc.min(max));
             }
-            KvMerge::Cmul => {
+        }
+        KvMerge::Cmul => {
+            for k in lo..hi {
                 let ar = l.values.add(k * 8);
                 let ai = l.values.add(k * 8 + 4);
                 let (mut re, mut im) = (ctx.read_f32(ar), ctx.read_f32(ai));
-                for c in 0..cores as u64 {
-                    let cr = ctx.read_f32(l.copies.add(c * l.copy_stride + k * 8));
-                    let ci = ctx.read_f32(l.copies.add(c * l.copy_stride + k * 8 + 4));
+                for c in 0..cores {
+                    let base = l.copies.copy_base(c);
+                    let cr = ctx.read_f32(base.add(k * 8));
+                    let ci = ctx.read_f32(base.add(k * 8 + 4));
                     let nr = re * cr - im * ci;
                     let ni = re * ci + im * cr;
                     re = nr;
@@ -358,6 +414,7 @@ fn dup_reduce(ctx: &mut CoreCtx, p: &KvParams, l: &Layout, cores: usize, lo: u64
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::ExecError;
 
     fn small() -> KvParams {
         KvParams {
@@ -402,6 +459,15 @@ mod tests {
             let r = run(&p, v, cfg());
             assert!(r.verified, "variant {:?} diverged", v);
         }
+    }
+
+    #[test]
+    fn atomics_variant_is_a_typed_error() {
+        let r = driver::run(&KvWorkload::new(small()), Variant::Atomic, cfg());
+        assert!(matches!(
+            r,
+            Err(ExecError::UnsupportedVariant { variant: Variant::Atomic, .. })
+        ));
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! The paper's four benchmarks (Section 5.1), each in FGL / DUP / CCache
-//! (plus CGL and atomics where meaningful) over the simulated machine:
+//! The benchmark suite: the paper's four workloads (Section 5.1) plus
+//! the histogram privatization workload, each implemented as one
+//! [`Workload`](crate::exec::Workload) trait impl over the simulated
+//! machine:
 //!
 //! * [`kvstore`] — random-access key-value store with commutative
 //!   increments; merge-function variants: saturating add and complex
@@ -10,73 +12,21 @@
 //!   optimized double-buffer DUP (the paper's Section 5.1 scheme)
 //! * [`bfs`] — level-synchronous BFS over a bitmap frontier (GAP-style),
 //!   with an additional atomics variant (Section 6.2)
+//! * [`histogram`] — streaming binned counts with uniform/zipf skew: the
+//!   classic privatization workload, and the template for new scenarios
 //! * [`graph`] — CSR + RMAT / SSCA / uniform generators (Graph500/GAP
 //!   input substitution)
 //!
 //! Every workload verifies its final simulated-memory state against a
 //! sequential golden run — the paper's Section 3 serializability claim is
-//! *checked*, not assumed, on every benchmark execution.
+//! *checked*, not assumed, on every benchmark execution. Instances are
+//! built and dispatched through
+//! [`exec::registry`](crate::exec::registry); there is no per-benchmark
+//! enumeration here anymore.
 
 pub mod bfs;
 pub mod graph;
+pub mod histogram;
 pub mod kmeans;
 pub mod kvstore;
 pub mod pagerank;
-
-use crate::exec::{RunResult, Variant};
-use crate::sim::config::MachineConfig;
-
-/// Uniform handle over all benchmarks for the coordinator / CLI.
-#[derive(Clone, Debug)]
-pub enum Benchmark {
-    Kv(kvstore::KvParams),
-    KMeans(kmeans::KmParams),
-    PageRank(pagerank::PrParams),
-    Bfs(bfs::BfsParams),
-}
-
-impl Benchmark {
-    pub fn name(&self) -> String {
-        match self {
-            Benchmark::Kv(p) => format!("kvstore-{}", p.merge.name()),
-            Benchmark::KMeans(p) => {
-                if p.approx_drop_p > 0.0 {
-                    "kmeans-approx".to_string()
-                } else {
-                    "kmeans".to_string()
-                }
-            }
-            Benchmark::PageRank(p) => format!("pagerank-{}", p.graph.name()),
-            Benchmark::Bfs(p) => format!("bfs-{}", p.graph.name()),
-        }
-    }
-
-    pub fn run(&self, variant: Variant, cfg: MachineConfig) -> RunResult {
-        match self {
-            Benchmark::Kv(p) => kvstore::run(p, variant, cfg),
-            Benchmark::KMeans(p) => kmeans::run(p, variant, cfg),
-            Benchmark::PageRank(p) => pagerank::run(p, variant, cfg),
-            Benchmark::Bfs(p) => bfs::run(p, variant, cfg),
-        }
-    }
-
-    /// Variants this benchmark supports.
-    pub fn variants(&self) -> Vec<Variant> {
-        match self {
-            Benchmark::Kv(_) => vec![
-                Variant::Cgl,
-                Variant::Fgl,
-                Variant::Dup,
-                Variant::CCache,
-            ],
-            Benchmark::KMeans(_) => vec![Variant::Fgl, Variant::Dup, Variant::CCache],
-            Benchmark::PageRank(_) => vec![Variant::Fgl, Variant::Dup, Variant::CCache],
-            Benchmark::Bfs(_) => vec![
-                Variant::Fgl,
-                Variant::Dup,
-                Variant::CCache,
-                Variant::Atomic,
-            ],
-        }
-    }
-}

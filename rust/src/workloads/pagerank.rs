@@ -14,11 +14,14 @@
 //! Inputs: RMAT / SSCA / uniform graphs (Graph500 generator
 //! substitution, see workloads::graph).
 
-use crate::exec::{RunResult, Variant};
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::LockArray;
+use crate::exec::{driver, RunResult, Variant, Workload};
 use crate::merge::MergeKind;
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::{CoreCtx, Machine};
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
 use crate::workloads::graph::{generate, Csr, GraphKind};
 
 #[derive(Clone, Debug)]
@@ -92,36 +95,83 @@ pub fn golden(p: &PrParams, g: &Csr) -> Vec<f32> {
 }
 
 #[derive(Clone, Copy)]
-struct Layout {
+pub struct PrLayout {
     offsets: Addr,
     targets: Addr,
-    /// Transpose CSR (DUP only).
+    /// Transpose CSR (pull-based variants only).
     t_offsets: Addr,
     t_targets: Addr,
     /// Out-degree array (DUP pull needs source degrees).
     out_deg: Addr,
     rank: [Addr; 2], // double buffer: roles swap each iteration
-    locks: Addr,
+    locks: LockArray,
 }
 
 const SLOT_RANK: usize = 0;
 
-pub fn run(p: &PrParams, variant: Variant, cfg: MachineConfig) -> RunResult {
-    let cores = cfg.cores;
-    let machine = Machine::new(cfg);
-    let g = p.build_graph();
-    let v = g.vertices();
-    // pull-based variants (DUP and CCache) work on the transpose; the
-    // push-based FGL works on the forward CSR. Each variant allocates
-    // only the direction it uses (Table 3 footprint).
-    let t = if matches!(variant, Variant::Dup | Variant::CCache) {
-        Some(g.transpose())
-    } else {
-        None
-    };
+/// The variants PageRank implements.
+pub const VARIANTS: [Variant; 3] = [Variant::Fgl, Variant::Dup, Variant::CCache];
 
-    let layout = machine.setup(|mem| {
-        let (offsets, targets) = if t.is_none() {
+/// PageRank as a [`Workload`]: owns the generated graph so setup,
+/// golden and verification share one CSR.
+pub struct PrWorkload {
+    p: PrParams,
+    g: Csr,
+}
+
+impl PrWorkload {
+    pub fn new(p: PrParams) -> Self {
+        let g = p.build_graph();
+        Self { p, g }
+    }
+
+    /// Size rank arrays + CSR to `frac` x LLC:
+    /// rank (8 B/v) + CSR ((1+deg)*4 B/v), deg=8 -> 44 B/v.
+    pub fn sized(graph: GraphKind, s: &SizeSpec) -> Self {
+        let vertices = (s.target_bytes() / 44).max(256) as usize;
+        Self::new(PrParams {
+            vertices,
+            avg_degree: 8,
+            graph,
+            iters: 2,
+            damping: 0.85,
+            seed: s.seed,
+        })
+    }
+
+    pub fn params(&self) -> &PrParams {
+        &self.p
+    }
+}
+
+impl Workload for PrWorkload {
+    type Layout = PrLayout;
+    type Golden = Vec<f32>;
+
+    fn name(&self) -> String {
+        format!("pagerank-{}", self.p.graph.name())
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+        vec![(SLOT_RANK, MergeKind::AddF32)]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, _cores: usize) -> PrLayout {
+        let g = &self.g;
+        let v = g.vertices();
+        // pull-based variants (DUP and CCache) work on the transpose; the
+        // push-based FGL works on the forward CSR. Each variant allocates
+        // only the direction it uses (Table 3 footprint).
+        let pull = matches!(variant, Variant::Dup | Variant::CCache);
+        let (offsets, targets) = if !pull {
             let offsets = mem.alloc_lines((v as u64 + 1) * 4);
             for (i, &o) in g.offsets.iter().enumerate() {
                 mem.poke(offsets.add(i as u64 * 4), o);
@@ -141,16 +191,17 @@ pub fn run(p: &PrParams, variant: Variant, cfg: MachineConfig) -> RunResult {
             mem.poke_f32(rank0.add(i * 4), init);
             mem.poke_f32(rank1.add(i * 4), 0.0);
         }
-        let mut l = Layout {
+        let mut l = PrLayout {
             offsets,
             targets,
             t_offsets: Addr(0),
             t_targets: Addr(0),
             out_deg: Addr(0),
             rank: [rank0, rank1],
-            locks: Addr(0),
+            locks: LockArray::none(),
         };
-        if let Some(tg) = &t {
+        if pull {
+            let tg = g.transpose();
             let t_offsets = mem.alloc_lines((v as u64 + 1) * 4);
             for (i, &o) in tg.offsets.iter().enumerate() {
                 mem.poke(t_offsets.add(i as u64 * 4), o);
@@ -170,155 +221,149 @@ pub fn run(p: &PrParams, variant: Variant, cfg: MachineConfig) -> RunResult {
         if variant == Variant::Fgl {
             // per-vertex lock, unpadded (4 B each) — PageRank's FGL
             // footprint in Table 3 is modest
-            l.locks = mem.alloc_lines(v as u64 * 4);
+            l.locks = LockArray::alloc(mem, v as u64, 4);
         }
         l
-    });
+    }
 
-    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
-        .map(|core| {
-            let p = p.clone();
-            let l = layout;
-            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                if variant == Variant::CCache {
-                    ctx.merge_init(SLOT_RANK, MergeKind::AddF32);
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &PrLayout,
+    ) {
+        let p = &self.p;
+        let v = self.g.vertices();
+        let lo = core * v / cores;
+        let hi = (core + 1) * v / cores;
+
+        for iter in 0..p.iters {
+            let old = l.rank[iter % 2];
+            let new = l.rank[(iter + 1) % 2];
+
+            match variant {
+                Variant::Fgl => {
+                    // push: iterate my sources, scatter
+                    // contributions under per-vertex locks
+                    for u in lo..hi {
+                        let s = ctx.read_u32(l.offsets.add(u as u64 * 4));
+                        let e = ctx.read_u32(l.offsets.add((u as u64 + 1) * 4));
+                        let deg = e - s;
+                        if deg == 0 {
+                            continue;
+                        }
+                        let r = ctx.read_f32(old.add(u as u64 * 4));
+                        let contrib = r / deg as f32;
+                        ctx.compute(2);
+                        for ei in s..e {
+                            let tv = ctx.read_u32(l.targets.add(ei as u64 * 4)) as u64;
+                            let a = new.add(tv * 4);
+                            l.locks.lock(ctx, tv);
+                            let cur = ctx.read_f32(a);
+                            ctx.write_f32(a, cur + contrib);
+                            l.locks.unlock(ctx, tv);
+                            ctx.compute(1);
+                        }
+                    }
+                    ctx.barrier();
+                    // damping pass over my destination range
+                    for dst in lo..hi {
+                        let a = new.add(dst as u64 * 4);
+                        let r = ctx.read_f32(a);
+                        ctx.write_f32(a, (1.0 - p.damping) / v as f32 + p.damping * r);
+                        ctx.compute(2);
+                    }
+                    // reset the old buffer: it becomes the next
+                    // iteration's accumulator
+                    if iter + 1 < p.iters {
+                        for dst in lo..hi {
+                            ctx.write_f32(old.add(dst as u64 * 4), 0.0);
+                        }
+                    }
+                    ctx.barrier();
                 }
-                let lo = core * v / cores;
-                let hi = (core + 1) * v / cores;
-
-                for iter in 0..p.iters {
-                    let old = l.rank[iter % 2];
-                    let new = l.rank[(iter + 1) % 2];
-
-                    match variant {
-                        Variant::Fgl => {
-                            // push: iterate my sources, scatter
-                            // contributions under per-vertex locks
-                            for u in lo..hi {
-                                let s = ctx.read_u32(l.offsets.add(u as u64 * 4));
-                                let e = ctx.read_u32(l.offsets.add((u as u64 + 1) * 4));
-                                let deg = e - s;
-                                if deg == 0 {
-                                    continue;
-                                }
-                                let r = ctx.read_f32(old.add(u as u64 * 4));
-                                let contrib = r / deg as f32;
-                                ctx.compute(2);
-                                for ei in s..e {
-                                    let tv =
-                                        ctx.read_u32(l.targets.add(ei as u64 * 4)) as u64;
-                                    let a = new.add(tv * 4);
-                                    let lock = l.locks.add(tv * 4);
-                                    ctx.lock(lock);
-                                    let cur = ctx.read_f32(a);
-                                    ctx.write_f32(a, cur + contrib);
-                                    ctx.unlock(lock);
-                                    ctx.compute(1);
-                                }
-                            }
-                            ctx.barrier();
-                            // damping pass over my destination range
-                            for dst in lo..hi {
-                                let a = new.add(dst as u64 * 4);
-                                let r = ctx.read_f32(a);
-                                ctx.write_f32(
-                                    a,
-                                    (1.0 - p.damping) / v as f32 + p.damping * r,
-                                );
-                                ctx.compute(2);
-                            }
-                            // reset the old buffer: it becomes the next
-                            // iteration's accumulator
-                            if iter + 1 < p.iters {
-                                for dst in lo..hi {
-                                    ctx.write_f32(old.add(dst as u64 * 4), 0.0);
-                                }
-                            }
-                            ctx.barrier();
+                Variant::Dup | Variant::CCache => {
+                    // pull: iterate my destinations, gather from
+                    // in-neighbors. DUP reads the shared old copy
+                    // coherently (the paper's optimized
+                    // double-buffer duplication); CCache marks
+                    // the whole rank structure CData — old-rank
+                    // reads privatize lines that stay clean and
+                    // are silently dropped under dirty-merge
+                    // (Section 6.4), new-rank writes carry the
+                    // AddF32 merge.
+                    for dst in lo..hi {
+                        let s = ctx.read_u32(l.t_offsets.add(dst as u64 * 4));
+                        let e = ctx.read_u32(l.t_offsets.add((dst as u64 + 1) * 4));
+                        let mut acc = 0f32;
+                        for ei in s..e {
+                            let u = ctx.read_u32(l.t_targets.add(ei as u64 * 4)) as u64;
+                            let deg = ctx.read_u32(l.out_deg.add(u * 4));
+                            let r = if variant == Variant::CCache {
+                                let r = ctx.c_read_f32(old.add(u * 4), SLOT_RANK as u8);
+                                ctx.soft_merge(); // w-1 discipline
+                                r
+                            } else {
+                                ctx.read_f32(old.add(u * 4))
+                            };
+                            acc += r / deg as f32;
+                            ctx.compute(2);
                         }
-                        Variant::Dup | Variant::CCache => {
-                            // pull: iterate my destinations, gather from
-                            // in-neighbors. DUP reads the shared old copy
-                            // coherently (the paper's optimized
-                            // double-buffer duplication); CCache marks
-                            // the whole rank structure CData — old-rank
-                            // reads privatize lines that stay clean and
-                            // are silently dropped under dirty-merge
-                            // (Section 6.4), new-rank writes carry the
-                            // AddF32 merge.
-                            for dst in lo..hi {
-                                let s = ctx.read_u32(l.t_offsets.add(dst as u64 * 4));
-                                let e =
-                                    ctx.read_u32(l.t_offsets.add((dst as u64 + 1) * 4));
-                                let mut acc = 0f32;
-                                for ei in s..e {
-                                    let u =
-                                        ctx.read_u32(l.t_targets.add(ei as u64 * 4))
-                                            as u64;
-                                    let deg = ctx.read_u32(l.out_deg.add(u * 4));
-                                    let r = if variant == Variant::CCache {
-                                        let r =
-                                            ctx.c_read_f32(old.add(u * 4), SLOT_RANK as u8);
-                                        ctx.soft_merge(); // w-1 discipline
-                                        r
-                                    } else {
-                                        ctx.read_f32(old.add(u * 4))
-                                    };
-                                    acc += r / deg as f32;
-                                    ctx.compute(2);
-                                }
-                                let val =
-                                    (1.0 - p.damping) / v as f32 + p.damping * acc;
-                                let a = new.add(dst as u64 * 4);
-                                if variant == Variant::CCache {
-                                    let cur = ctx.c_read_f32(a, SLOT_RANK as u8);
-                                    ctx.c_write_f32(a, cur + val, SLOT_RANK as u8);
-                                    ctx.soft_merge();
-                                } else {
-                                    ctx.write_f32(a, val);
-                                }
-                            }
-                            if variant == Variant::CCache {
-                                ctx.merge();
-                            }
-                            ctx.barrier();
-                            // CCache: reset the old buffer (next
-                            // iteration's merge-add accumulator starts
-                            // from zero); DUP overwrites, no reset needed
-                            if variant == Variant::CCache && iter + 1 < p.iters {
-                                for dst in lo..hi {
-                                    ctx.write_f32(old.add(dst as u64 * 4), 0.0);
-                                }
-                                ctx.barrier();
-                            }
+                        let val = (1.0 - p.damping) / v as f32 + p.damping * acc;
+                        let a = new.add(dst as u64 * 4);
+                        if variant == Variant::CCache {
+                            let cur = ctx.c_read_f32(a, SLOT_RANK as u8);
+                            ctx.c_write_f32(a, cur + val, SLOT_RANK as u8);
+                            ctx.soft_merge();
+                        } else {
+                            ctx.write_f32(a, val);
                         }
-                        _ => unimplemented!("variant for pagerank"),
+                    }
+                    if variant == Variant::CCache {
+                        ctx.merge();
+                    }
+                    ctx.barrier();
+                    // CCache: reset the old buffer (next
+                    // iteration's merge-add accumulator starts
+                    // from zero); DUP overwrites, no reset needed
+                    if variant == Variant::CCache && iter + 1 < p.iters {
+                        for dst in lo..hi {
+                            ctx.write_f32(old.add(dst as u64 * 4), 0.0);
+                        }
+                        ctx.barrier();
                     }
                 }
-            });
-            f
-        })
-        .collect();
+                _ => unreachable!("driver rejects unsupported variants"),
+            }
+        }
+    }
 
-    let stats = machine.run(programs);
+    fn golden(&self, _cores: usize) -> Vec<f32> {
+        golden(&self.p, &self.g)
+    }
 
-    // ---- verification ----
-    let gold = golden(p, &g);
-    let final_buf = layout.rank[p.iters % 2];
-    let verified = machine.setup(|mem| {
-        (0..v).all(|i| {
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &PrLayout,
+        gold: &Vec<f32>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let v = self.g.vertices();
+        let final_buf = l.rank[self.p.iters % 2];
+        let ok = (0..v).all(|i| {
             let got = mem.peek_f32(final_buf.add(i as u64 * 4));
             (got - gold[i]).abs() <= 1e-4 + 1e-3 * gold[i].abs()
-        })
-    });
-
-    RunResult {
-        benchmark: format!("pagerank-{}", p.graph.name()),
-        variant,
-        stats,
-        verified,
-        quality: None,
+        });
+        (ok, None)
     }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &PrParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&PrWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]

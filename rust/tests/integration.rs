@@ -1,12 +1,11 @@
-//! Cross-module integration tests: every benchmark x variant verifies
-//! against its sequential golden run on the full (small-scaled) machine,
-//! plus cross-cutting behaviours the paper claims.
+//! Cross-module integration tests on the full (small-scaled) machine:
+//! the cross-cutting behaviours the paper claims. Per-benchmark
+//! "every variant verifies" coverage is registry-driven and lives in
+//! `tests/registry.rs`.
 
-use ccache::coordinator::{sized_benchmark, BenchKind};
-use ccache::exec::Variant;
+use ccache::coordinator::sized_workload;
+use ccache::exec::{RunResult, Variant, WorkloadHandle};
 use ccache::sim::config::MachineConfig;
-use ccache::workloads::graph::GraphKind;
-use ccache::workloads::Benchmark;
 
 fn cfg() -> MachineConfig {
     // a small but fully-shaped machine: 4 cores, real hierarchy
@@ -18,70 +17,42 @@ fn cfg() -> MachineConfig {
     cfg
 }
 
-fn all_verify(bench: Benchmark) {
-    for v in bench.variants() {
-        if v == Variant::Cgl && !matches!(bench, Benchmark::Kv(_)) {
-            continue;
+fn run(bench: &WorkloadHandle, v: Variant) -> RunResult {
+    run_on(bench, v, cfg())
+}
+
+fn run_on(bench: &WorkloadHandle, v: Variant, cfg: MachineConfig) -> RunResult {
+    let r = bench.run(v, cfg).expect("variant supported");
+    assert!(
+        r.verified,
+        "{} / {} diverged from the sequential golden run",
+        r.benchmark,
+        v.name()
+    );
+    r
+}
+
+#[test]
+fn full_shape_machine_verifies_every_benchmark_and_variant() {
+    // the same registry matrix as tests/registry.rs, but on the 4-core
+    // fully-shaped hierarchy: catches core-count-dependent regressions
+    // (reduction partitioning, frontier hand-off, termination flags)
+    // that a 2-core machine cannot
+    for spec in ccache::exec::registry::registry() {
+        let bench = sized_workload(spec.name, 0.125, cfg().llc.size_bytes, 3);
+        for &v in bench.supported_variants() {
+            run(&bench, v);
         }
-        let r = bench.run(v, cfg());
-        assert!(
-            r.verified,
-            "{} / {} diverged from the sequential golden run",
-            r.benchmark,
-            v.name()
-        );
     }
 }
 
 #[test]
-fn kvstore_all_variants_verify() {
-    all_verify(sized_benchmark(BenchKind::KvAdd, 0.5, cfg().llc.size_bytes, 3));
-}
-
-#[test]
-fn kvstore_sat_all_variants_verify() {
-    all_verify(sized_benchmark(BenchKind::KvSat, 0.5, cfg().llc.size_bytes, 3));
-}
-
-#[test]
-fn kvstore_cmul_all_variants_verify() {
-    all_verify(sized_benchmark(BenchKind::KvCmul, 0.25, cfg().llc.size_bytes, 3));
-}
-
-#[test]
-fn kmeans_all_variants_verify() {
-    all_verify(sized_benchmark(BenchKind::KMeans, 0.5, cfg().llc.size_bytes, 3));
-}
-
-#[test]
-fn kmeans_approx_verifies_with_bounded_quality() {
-    let b = sized_benchmark(BenchKind::KMeansApprox, 0.5, cfg().llc.size_bytes, 3);
-    let r = b.run(Variant::CCache, cfg());
-    assert!(r.verified);
-    assert!(r.quality.is_some());
-}
-
-#[test]
-fn pagerank_all_graphs_all_variants_verify() {
-    for g in [GraphKind::Rmat, GraphKind::Ssca, GraphKind::Uniform] {
-        all_verify(sized_benchmark(
-            BenchKind::PageRank(g),
-            0.5,
-            cfg().llc.size_bytes,
-            3,
-        ));
-    }
-}
-
-#[test]
-fn bfs_all_graphs_all_variants_verify() {
-    for g in [GraphKind::Rmat, GraphKind::Uniform] {
-        all_verify(sized_benchmark(
-            BenchKind::Bfs(g),
-            0.5,
-            cfg().llc.size_bytes,
-            3,
-        ));
+fn histogram_skew_verifies_on_full_shape_machine() {
+    use ccache::exec::registry::{self, SizeSpec};
+    let size = SizeSpec::new(0.125, cfg().llc.size_bytes, 3).with_zipf(0.9);
+    let bench = registry::build("histogram", &size).unwrap();
+    for v in [Variant::Fgl, Variant::CCache, Variant::Atomic] {
+        run(&bench, v);
     }
 }
 
@@ -91,9 +62,9 @@ fn bfs_all_graphs_all_variants_verify() {
 
 #[test]
 fn ccache_generates_far_fewer_invalidations_than_fgl() {
-    let b = sized_benchmark(BenchKind::KvAdd, 0.5, cfg().llc.size_bytes, 9);
-    let cc = b.run(Variant::CCache, cfg());
-    let fgl = b.run(Variant::Fgl, cfg());
+    let b = sized_workload("kvstore", 0.5, cfg().llc.size_bytes, 9);
+    let cc = run(&b, Variant::CCache);
+    let fgl = run(&b, Variant::Fgl);
     assert!(
         cc.stats.invalidations * 10 < fgl.stats.invalidations.max(10),
         "ccache invalidations {} vs fgl {}",
@@ -105,10 +76,10 @@ fn ccache_generates_far_fewer_invalidations_than_fgl() {
 #[test]
 fn memory_footprint_ordering_matches_table3() {
     // FGL > DUP > CCache for the KV store (Table 3: 12x / 8x / 1x)
-    let b = sized_benchmark(BenchKind::KvAdd, 0.5, cfg().llc.size_bytes, 9);
-    let fgl = b.run(Variant::Fgl, cfg()).stats.bytes_allocated;
-    let dup = b.run(Variant::Dup, cfg()).stats.bytes_allocated;
-    let cc = b.run(Variant::CCache, cfg()).stats.bytes_allocated;
+    let b = sized_workload("kvstore", 0.5, cfg().llc.size_bytes, 9);
+    let fgl = run(&b, Variant::Fgl).stats.bytes_allocated;
+    let dup = run(&b, Variant::Dup).stats.bytes_allocated;
+    let cc = run(&b, Variant::CCache).stats.bytes_allocated;
     assert!(fgl > dup, "FGL {fgl} <= DUP {dup}");
     assert!(dup > cc, "DUP {dup} <= CCache {cc}");
     let f = fgl as f64 / cc as f64;
@@ -118,11 +89,11 @@ fn memory_footprint_ordering_matches_table3() {
 #[test]
 fn merge_on_evict_reduces_kmeans_evictions_dramatically() {
     // Fig 9's key datapoint
-    let b = sized_benchmark(BenchKind::KMeans, 0.25, cfg().llc.size_bytes, 9);
-    let with = b.run(Variant::CCache, cfg());
+    let b = sized_workload("kmeans", 0.25, cfg().llc.size_bytes, 9);
+    let with = run(&b, Variant::CCache);
     let mut no = cfg();
     no.ccache.merge_on_evict = false;
-    let without = b.run(Variant::CCache, no);
+    let without = run_on(&b, Variant::CCache, no);
     assert!(
         without.stats.src_buf_evictions > with.stats.src_buf_evictions.max(1) * 50,
         "no-opt {} vs opt {}",
@@ -134,16 +105,11 @@ fn merge_on_evict_reduces_kmeans_evictions_dramatically() {
 #[test]
 fn dirty_merge_cuts_pagerank_merges() {
     // Section 6.4: PageRank reads much CData it never updates
-    let b = sized_benchmark(
-        BenchKind::PageRank(GraphKind::Uniform),
-        0.5,
-        cfg().llc.size_bytes,
-        9,
-    );
-    let with = b.run(Variant::CCache, cfg());
+    let b = sized_workload("pagerank-uniform", 0.5, cfg().llc.size_bytes, 9);
+    let with = run(&b, Variant::CCache);
     let mut no = cfg();
     no.ccache.dirty_merge = false;
-    let without = b.run(Variant::CCache, no);
+    let without = run_on(&b, Variant::CCache, no);
     assert!(
         without.stats.merges >= with.stats.merges,
         "dirty-merge increased merges?!"
@@ -152,9 +118,9 @@ fn dirty_merge_cuts_pagerank_merges() {
 
 #[test]
 fn deterministic_stats_across_runs() {
-    let b = sized_benchmark(BenchKind::KvAdd, 0.25, cfg().llc.size_bytes, 5);
-    let a = b.run(Variant::CCache, cfg());
-    let c = b.run(Variant::CCache, cfg());
+    let b = sized_workload("kvstore", 0.25, cfg().llc.size_bytes, 5);
+    let a = run(&b, Variant::CCache);
+    let c = run(&b, Variant::CCache);
     assert_eq!(a.cycles(), c.cycles());
     assert_eq!(a.stats.merges, c.stats.merges);
     assert_eq!(a.stats.llc.misses, c.stats.llc.misses);

@@ -1,0 +1,107 @@
+//! Registry-driven coverage: every registered benchmark x every
+//! supported variant runs through the one generic driver and verifies
+//! against its sequential golden run — replacing the per-workload copies
+//! of this loop that each benchmark used to hand-roll. Unsupported
+//! variants must surface as typed errors, never panics.
+
+use ccache::exec::registry::{self, SizeSpec};
+use ccache::exec::{ExecError, Variant};
+use ccache::sim::config::MachineConfig;
+
+const ALL_VARIANTS: [Variant; 5] = Variant::ALL;
+
+fn cfg() -> MachineConfig {
+    MachineConfig::test_small().with_cores(2)
+}
+
+/// Small but non-trivial instances: 25% of a 64 KiB "LLC".
+fn size() -> SizeSpec {
+    SizeSpec::new(0.25, 1 << 16, 3)
+}
+
+#[test]
+fn every_registered_benchmark_verifies_on_every_supported_variant() {
+    for spec in registry::registry() {
+        let bench = spec.build(&size());
+        for &v in bench.supported_variants() {
+            let r = bench
+                .run(v, cfg())
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert!(
+                r.verified,
+                "{}/{} diverged from the sequential golden run",
+                spec.name,
+                v.name()
+            );
+            assert_eq!(r.variant, v);
+            assert!(r.cycles() > 0, "{}/{}: no cycles", spec.name, v.name());
+        }
+    }
+}
+
+#[test]
+fn unsupported_variants_surface_typed_errors() {
+    for spec in registry::registry() {
+        let bench = spec.build(&SizeSpec::new(0.05, 1 << 16, 3));
+        for v in ALL_VARIANTS {
+            if bench.supports(v) {
+                continue;
+            }
+            match bench.run(v, cfg()) {
+                Err(ExecError::UnsupportedVariant {
+                    benchmark,
+                    variant,
+                    supported,
+                }) => {
+                    assert_eq!(variant, v);
+                    assert_eq!(benchmark, bench.name());
+                    assert!(!supported.is_empty());
+                }
+                Ok(_) => panic!(
+                    "{}: variant {} ran despite not being advertised",
+                    spec.name,
+                    v.name()
+                ),
+                Err(e) => panic!("{}: wrong error kind: {e}", spec.name),
+            }
+        }
+    }
+}
+
+#[test]
+fn histogram_runs_all_five_variants_through_the_driver() {
+    let bench = registry::build("histogram", &size()).unwrap();
+    assert_eq!(bench.supported_variants().len(), 5);
+    for v in ALL_VARIANTS {
+        let r = bench.run(v, cfg()).unwrap();
+        assert!(r.verified, "histogram/{} diverged", v.name());
+    }
+}
+
+#[test]
+fn zipf_spec_flows_into_key_distributions() {
+    for name in ["kvstore", "histogram"] {
+        let bench = registry::build(name, &size().with_zipf(0.9)).unwrap();
+        let r = bench.run(Variant::CCache, cfg()).unwrap();
+        assert!(r.verified, "{name} with zipf skew diverged");
+    }
+}
+
+#[test]
+fn lookup_resolves_aliases_and_rejects_unknown_names() {
+    assert_eq!(registry::lookup("kv").unwrap().name, "kvstore");
+    assert_eq!(registry::lookup("bfs").unwrap().name, "bfs-rmat");
+    assert_eq!(registry::lookup("hist").unwrap().name, "histogram");
+    let err = registry::build("no-such-bench", &size()).unwrap_err();
+    assert!(matches!(err, ExecError::UnknownBenchmark { .. }));
+    assert!(err.to_string().contains("histogram"), "error lists known names");
+}
+
+#[test]
+fn results_are_deterministic_across_identical_runs() {
+    let bench = registry::build("histogram", &size()).unwrap();
+    let a = bench.run(Variant::CCache, cfg()).unwrap();
+    let b = bench.run(Variant::CCache, cfg()).unwrap();
+    assert_eq!(a.cycles(), b.cycles());
+    assert_eq!(a.stats.merges, b.stats.merges);
+}

@@ -1,0 +1,115 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The build environment has no registry access and no `xla_extension`
+//! shared library, so this stub provides the exact API surface the
+//! `ccache::runtime` layer uses — enough to *compile* it — while every
+//! entry point that would touch PJRT returns an error at runtime.
+//! Callers already gate on `artifacts_available()` / `Engine::load`
+//! results, so the simulator, workloads and native merge path are fully
+//! functional; only the optional PJRT cross-check is disabled. Replace
+//! this path dependency with the real `xla` crate to enable it.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT/XLA is not available in this build (offline `xla` stub; \
+         replace rust/vendor/xla with the real xla crate to enable)"
+    )))
+}
+
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation {}
+    }
+}
+
+pub struct Literal {}
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal {}
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let lit = Literal::vec1(&[1f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = HloModuleProto::from_text_file("x").unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
