@@ -25,17 +25,17 @@ fn main() {
         &["entries", "kvstore CCache Mcyc", "kmeans CCache Mcyc"],
     );
     for entries in [4usize, 8, 16, 32] {
-        let mut cfg = base;
+        let mut cfg = base.clone();
         cfg.ccache.source_buffer_entries = entries;
         let kv = run_verified(
-            &sized_workload("kvstore", 1.0, cfg.llc.size_bytes, 42),
+            &sized_workload("kvstore", 1.0, cfg.llc().size_bytes, 42),
             Variant::CCache,
-            cfg,
+            &cfg,
         );
         let km = run_verified(
-            &sized_workload("kmeans", 1.0, cfg.llc.size_bytes, 42),
+            &sized_workload("kmeans", 1.0, cfg.llc().size_bytes, 42),
             Variant::CCache,
-            cfg,
+            &cfg,
         );
         t.row(&[
             entries.to_string(),
@@ -51,11 +51,11 @@ fn main() {
         &["quantum", "FGL Mcyc", "CCACHE Mcyc", "speedup"],
     );
     for quantum in [0u64, 64, 256, 1024, 4096] {
-        let mut cfg = base;
-        cfg.quantum = quantum;
-        let bench = sized_workload("kvstore", 0.5, cfg.llc.size_bytes, 42);
-        let fgl = run_verified(&bench, Variant::Fgl, cfg);
-        let cc = run_verified(&bench, Variant::CCache, cfg);
+        let mut cfg = base.clone();
+        cfg.timing.quantum = quantum;
+        let bench = sized_workload("kvstore", 0.5, cfg.llc().size_bytes, 42);
+        let fgl = run_verified(&bench, Variant::Fgl, &cfg);
+        let cc = run_verified(&bench, Variant::CCache, &cfg);
         t.row(&[
             quantum.to_string(),
             format!("{:.1}", fgl.cycles() as f64 / 1e6),
@@ -71,10 +71,10 @@ fn main() {
         &["backoff cyc", "FGL Mcyc", "lock retries"],
     );
     for backoff in [10u64, 40, 160, 640] {
-        let mut cfg = base;
-        cfg.lock_backoff = backoff;
-        let bench = sized_workload("kvstore", 0.5, cfg.llc.size_bytes, 42);
-        let fgl = run_verified(&bench, Variant::Fgl, cfg);
+        let mut cfg = base.clone();
+        cfg.timing.lock_backoff = backoff;
+        let bench = sized_workload("kvstore", 0.5, cfg.llc().size_bytes, 42);
+        let fgl = run_verified(&bench, Variant::Fgl, &cfg);
         t.row(&[
             backoff.to_string(),
             format!("{:.1}", fgl.cycles() as f64 / 1e6),
@@ -90,10 +90,10 @@ fn main() {
     );
     for name in ["kvstore", "histogram"] {
         for theta in [0.0f64, 0.6, 0.9, 0.99] {
-            let size = SizeSpec::new(0.5, base.llc.size_bytes, 42).with_zipf(theta);
+            let size = SizeSpec::new(0.5, base.llc().size_bytes, 42).with_zipf(theta);
             let bench = registry::build(name, &size).expect("registered");
-            let fgl = run_verified(&bench, Variant::Fgl, base);
-            let cc = run_verified(&bench, Variant::CCache, base);
+            let fgl = run_verified(&bench, Variant::Fgl, &base);
+            let cc = run_verified(&bench, Variant::CCache, &base);
             t.row(&[
                 name.to_string(),
                 format!("{theta:.2}"),

@@ -13,7 +13,7 @@ use ccache::util::bench::Table;
 
 fn main() {
     let base = scaled_config();
-    let mut no_dirty = base;
+    let mut no_dirty = base.clone();
     no_dirty.ccache.dirty_merge = false;
 
     let mut t = Table::new(
@@ -21,10 +21,10 @@ fn main() {
         &["benchmark", "merges (no opt)", "merges (opt)", "silent drops", "reduction"],
     );
     for name in ["kvstore", "kmeans", "pagerank-uniform", "bfs-rmat"] {
-        let bench = sized_workload(name, 1.0, base.llc.size_bytes, 42);
+        let bench = sized_workload(name, 1.0, base.llc().size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let with = run_verified(&bench, Variant::CCache, base);
-        let without = run_verified(&bench, Variant::CCache, no_dirty);
+        let with = run_verified(&bench, Variant::CCache, &base);
+        let without = run_verified(&bench, Variant::CCache, &no_dirty);
         let ratio = without.stats.merges as f64 / with.stats.merges.max(1) as f64;
         t.row(&[
             bench.name().to_string(),

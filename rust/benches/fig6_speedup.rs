@@ -45,7 +45,7 @@ fn main() {
         // atomics cells only materialize where the workload supports
         // them (BFS, histogram) — the sweep skips the rest
         let variants = [Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic];
-        let sweep = run_sweep(name, &variants, &fracs, cfg, 42);
+        let sweep = run_sweep(name, &variants, &fracs, cfg.clone(), 42);
         report::fig6_table(&sweep).print();
         // atomics column (Section 6.2's BFS comparison)
         for p in &sweep.points {

@@ -13,8 +13,8 @@ use ccache::util::bench::Table;
 
 fn main() {
     let full = scaled_config();
-    let mut half = full;
-    half.llc.size_bytes = full.llc.size_bytes / 2;
+    let mut half = full.clone();
+    half.llc_mut().size_bytes = full.llc().size_bytes / 2;
 
     let mut t = Table::new(
         "Fig 7 — CCache @ half LLC vs DUP @ full LLC (ws = full LLC)",
@@ -27,10 +27,10 @@ fn main() {
         ("bfs-rmat", "1.91x"),
     ];
     for (name, paper) in panels {
-        let bench = sized_workload(name, 1.0, full.llc.size_bytes, 42);
+        let bench = sized_workload(name, 1.0, full.llc().size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let dup = run_verified(&bench, Variant::Dup, full);
-        let cc = run_verified(&bench, Variant::CCache, half);
+        let dup = run_verified(&bench, Variant::Dup, &full);
+        let cc = run_verified(&bench, Variant::CCache, &half);
         t.row(&[
             bench.name().to_string(),
             format!("{:.1}", dup.cycles() as f64 / 1e6),

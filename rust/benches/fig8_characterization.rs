@@ -21,12 +21,12 @@ fn main() {
 
     // (a) PageRank directory accesses
     eprintln!("== fig 8a: pagerank-uniform ==");
-    let s = run_sweep("pagerank-uniform", &main3, &fracs, cfg, 42);
+    let s = run_sweep("pagerank-uniform", &main3, &fracs, cfg.clone(), 42);
     report::fig8_table(&s, "directory accesses", |r| r.stats.dir_msgs_per_kc()).print();
 
     // (b) KV store L3 misses
     eprintln!("== fig 8b: kvstore ==");
-    let s = run_sweep("kvstore", &main3, &fracs, cfg, 42);
+    let s = run_sweep("kvstore", &main3, &fracs, cfg.clone(), 42);
     report::fig8_table(&s, "L3 misses", |r| r.stats.llc_misses_per_kc()).print();
 
     // (c) BFS invalidations (including the atomics variant)
@@ -35,7 +35,7 @@ fn main() {
         "bfs-rmat",
         &[Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic],
         &fracs,
-        cfg,
+        cfg.clone(),
         42,
     );
     report::fig8_table(&s, "invalidations", |r| r.stats.invalidations_per_kc()).print();

@@ -13,7 +13,7 @@ use ccache::util::bench::Table;
 
 fn main() {
     let base = scaled_config();
-    let mut no_opt = base;
+    let mut no_opt = base.clone();
     no_opt.ccache.merge_on_evict = false;
 
     let mut t = Table::new(
@@ -27,10 +27,10 @@ fn main() {
         ("bfs-rmat", "2.2x"),
     ];
     for (name, paper) in panels {
-        let bench = sized_workload(name, 1.0, base.llc.size_bytes, 42);
+        let bench = sized_workload(name, 1.0, base.llc().size_bytes, 42);
         eprintln!("running {}...", bench.name());
-        let with = run_verified(&bench, Variant::CCache, base);
-        let without = run_verified(&bench, Variant::CCache, no_opt);
+        let with = run_verified(&bench, Variant::CCache, &base);
+        let without = run_verified(&bench, Variant::CCache, &no_opt);
         let ratio = without.stats.src_buf_evictions as f64
             / with.stats.src_buf_evictions.max(1) as f64;
         t.row(&[

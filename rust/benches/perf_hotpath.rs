@@ -21,7 +21,7 @@ fn main() {
     // 1. raw memsys: coherent read hit path
     let mut cfg = MachineConfig::default();
     cfg.cores = 8;
-    let mut s = MemSystem::new(cfg);
+    let mut s = MemSystem::new(cfg).expect("valid config");
     let a = s.alloc_lines(64 * 1024);
     let n = 4_000_000u64;
     let t0 = Instant::now();
@@ -48,7 +48,7 @@ fn main() {
 
     // 3. machine interleaver: 8 threads, mixed ops
     let cfg = MachineConfig::default();
-    let machine = Machine::new(cfg);
+    let machine = Machine::new(cfg).expect("valid config");
     let region = machine.setup(|mem| mem.alloc_lines(64 * 8192));
     let per_core = 250_000u64;
     let t0 = Instant::now();

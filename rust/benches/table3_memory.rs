@@ -24,10 +24,10 @@ fn main() {
         ("bfs-rmat", "5.2x / 4.9x"),
     ];
     for (name, paper) in panels {
-        let bench = sized_workload(name, 1.0, cfg.llc.size_bytes, 42);
+        let bench = sized_workload(name, 1.0, cfg.llc().size_bytes, 42);
         eprintln!("running {}...", bench.name());
         let get_bytes =
-            |v: Variant| run_verified(&bench, v, cfg).stats.bytes_allocated as f64;
+            |v: Variant| run_verified(&bench, v, &cfg).stats.bytes_allocated as f64;
         let cc = get_bytes(Variant::CCache);
         let fgl = get_bytes(Variant::Fgl);
         let dup = get_bytes(Variant::Dup);

@@ -24,7 +24,7 @@ fn main() {
         m.src_buf_bits.to_string(),
         format!("{:.4}%", m.src_buf_frac_of_llc() * 100.0),
     ]);
-    let mut cfg32 = cfg;
+    let mut cfg32 = cfg.clone();
     cfg32.ccache.source_buffer_entries = 32;
     let m32 = OverheadModel::for_config(&cfg32);
     t.row(&[

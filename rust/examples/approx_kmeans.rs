@@ -11,7 +11,7 @@ use ccache::workloads::kmeans::{KmParams, KmWorkload};
 
 fn main() {
     let cfg = scaled_config();
-    let points = cfg.llc.size_bytes / (16 * 4); // WS ~ LLC
+    let points = cfg.llc().size_bytes / (16 * 4); // WS ~ LLC
     let mut t = Table::new(
         "approximate K-Means: drop probability vs quality/performance",
         &["drop_p", "cycles", "speedup", "quality degradation"],
@@ -27,7 +27,7 @@ fn main() {
         };
         eprintln!("running drop_p={drop_p}...");
         let r = WorkloadHandle::new(KmWorkload::new(p))
-            .run(Variant::CCache, cfg)
+            .run(Variant::CCache, cfg.clone())
             .expect("ccache variant is supported");
         assert!(r.verified, "clustering collapsed at drop_p={drop_p}");
         if drop_p == 0.0 {

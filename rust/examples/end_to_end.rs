@@ -24,13 +24,7 @@ use ccache::util::bench::Table;
 
 fn main() {
     let cfg = scaled_config();
-    println!(
-        "== end-to-end: {} cores, L1 {} KiB, L2 {} KiB, LLC {} KiB ==\n",
-        cfg.cores,
-        cfg.l1.size_bytes / 1024,
-        cfg.l2.size_bytes / 1024,
-        cfg.llc.size_bytes / 1024
-    );
+    println!("== end-to-end: {} ==\n", cfg.describe());
 
     // ---- 1. the benchmark suite ----
     let mut t = Table::new(
@@ -47,9 +41,9 @@ fn main() {
     ];
     let mut ccache_speedups = Vec::new();
     for name in panels {
-        let bench = sized_workload(name, 1.0, cfg.llc.size_bytes, 77);
+        let bench = sized_workload(name, 1.0, cfg.llc().size_bytes, 77);
         eprintln!("running {}...", bench.name());
-        let run = |v: Variant| bench.run(v, cfg).expect("supported variant");
+        let run = |v: Variant| bench.run(v, cfg.clone()).expect("supported variant");
         let fgl = run(Variant::Fgl);
         let dup = run(Variant::Dup);
         let cc = run(Variant::CCache);
@@ -77,7 +71,8 @@ fn main() {
         return;
     }
     println!("merge-path validation: native vs AOT Pallas kernels (PJRT)");
-    let machine = Machine::new(cfg);
+    let cores = cfg.cores;
+    let machine = Machine::new(cfg).expect("valid config");
     let region = machine.setup(|mem| {
         mem.record_merges = true;
         let r = mem.alloc_lines(64 * 4096);
@@ -86,7 +81,6 @@ fn main() {
         }
         r
     });
-    let cores = cfg.cores;
     let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
         .map(|core| {
             let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {

@@ -27,7 +27,7 @@ fn main() {
     );
     for kind in [GraphKind::Rmat, GraphKind::Ssca, GraphKind::Uniform] {
         let p = PrParams {
-            vertices: cfg.llc.size_bytes / 64,
+            vertices: cfg.llc().size_bytes / 64,
             avg_degree: 8,
             graph: kind,
             iters: 2,
@@ -36,9 +36,9 @@ fn main() {
         };
         let bench = WorkloadHandle::new(PrWorkload::new(p));
         eprintln!("running {}...", bench.name());
-        let fgl = run_verified(&bench, Variant::Fgl, cfg);
-        let dup = run_verified(&bench, Variant::Dup, cfg);
-        let cc = run_verified(&bench, Variant::CCache, cfg);
+        let fgl = run_verified(&bench, Variant::Fgl, &cfg);
+        let dup = run_verified(&bench, Variant::Dup, &cfg);
+        let cc = run_verified(&bench, Variant::CCache, &cfg);
         t.row(&[
             bench.name().to_string(),
             fgl.cycles().to_string(),
@@ -49,7 +49,7 @@ fn main() {
     }
     for kind in [GraphKind::Rmat, GraphKind::Uniform] {
         let p = BfsParams {
-            vertices: cfg.llc.size_bytes / 48,
+            vertices: cfg.llc().size_bytes / 48,
             avg_degree: 8,
             graph: kind,
             seed: 13,
@@ -57,10 +57,10 @@ fn main() {
         };
         let bench = WorkloadHandle::new(BfsWorkload::new(p));
         eprintln!("running {}...", bench.name());
-        let fgl = run_verified(&bench, Variant::Fgl, cfg);
-        let dup = run_verified(&bench, Variant::Dup, cfg);
-        let cc = run_verified(&bench, Variant::CCache, cfg);
-        let at = run_verified(&bench, Variant::Atomic, cfg);
+        let fgl = run_verified(&bench, Variant::Fgl, &cfg);
+        let dup = run_verified(&bench, Variant::Dup, &cfg);
+        let cc = run_verified(&bench, Variant::CCache, &cfg);
+        let at = run_verified(&bench, Variant::Atomic, &cfg);
         t.row(&[
             bench.name().to_string(),
             fgl.cycles().to_string(),

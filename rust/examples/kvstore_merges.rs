@@ -15,7 +15,7 @@ use ccache::workloads::kvstore::{KvMerge, KvParams, KvWorkload};
 
 fn main() {
     let cfg = scaled_config();
-    let keys = cfg.llc.size_bytes / 8; // WS ~ half the LLC
+    let keys = cfg.llc().size_bytes / 8; // WS ~ half the LLC
     let mut t = Table::new(
         "KV store: speedup vs FGL per merge function",
         &["merge fn", "FGL cycles", "DUP", "CCACHE"],
@@ -30,9 +30,9 @@ fn main() {
         };
         let bench = WorkloadHandle::new(KvWorkload::new(p));
         eprintln!("running {}...", bench.name());
-        let fgl = run_verified(&bench, Variant::Fgl, cfg);
-        let dup = run_verified(&bench, Variant::Dup, cfg);
-        let cc = run_verified(&bench, Variant::CCache, cfg);
+        let fgl = run_verified(&bench, Variant::Fgl, &cfg);
+        let dup = run_verified(&bench, Variant::Dup, &cfg);
+        let cc = run_verified(&bench, Variant::CCache, &cfg);
         t.row(&[
             merge.name().to_string(),
             fgl.cycles().to_string(),

@@ -11,18 +11,18 @@ use ccache::util::bench::Table;
 fn main() {
     let cfg = scaled_config();
     // a working set matching LLC capacity — the paper's sweet spot
-    let bench = sized_workload("kvstore", 1.0, cfg.llc.size_bytes, 42);
+    let bench = sized_workload("kvstore", 1.0, cfg.llc().size_bytes, 42);
     println!(
         "benchmark: {} ({} cores, {} KiB LLC)\n",
         bench.name(),
         cfg.cores,
-        cfg.llc.size_bytes / 1024
+        cfg.llc().size_bytes / 1024
     );
 
     let mut results = Vec::new();
     for v in [Variant::Fgl, Variant::Dup, Variant::CCache] {
         eprintln!("running {}...", v.name());
-        results.push(run_verified(&bench, v, cfg));
+        results.push(run_verified(&bench, v, &cfg));
     }
 
     let fgl = results[0].cycles() as f64;
@@ -35,7 +35,7 @@ fn main() {
             r.variant.name().to_string(),
             r.cycles().to_string(),
             format!("{:.2}x", fgl / r.cycles() as f64),
-            format!("{:.1}", r.stats.llc.miss_rate() * 100.0),
+            format!("{:.1}", r.stats.llc().miss_rate() * 100.0),
             r.stats.merges.to_string(),
         ]);
     }

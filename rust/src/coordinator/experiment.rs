@@ -25,9 +25,9 @@ pub fn scaled_config() -> MachineConfig {
         return MachineConfig::default();
     }
     let mut cfg = MachineConfig::default();
-    cfg.l1.size_bytes = 8 << 10; // 16 sets x 8 ways
-    cfg.l2.size_bytes = 128 << 10;
-    cfg.llc.size_bytes = SCALED_LLC_BYTES;
+    cfg.l1_mut().size_bytes = 8 << 10; // 16 sets x 8 ways
+    cfg.level_mut(1).size_bytes = 128 << 10; // the L2
+    cfg.llc_mut().size_bytes = SCALED_LLC_BYTES;
     cfg
 }
 
@@ -42,8 +42,10 @@ pub fn sized_workload(name: &str, frac: f64, llc_bytes: usize, seed: u64) -> Wor
 }
 
 /// Run one benchmark/variant on a config, asserting verification.
-pub fn run_verified(bench: &WorkloadHandle, variant: Variant, cfg: MachineConfig) -> RunResult {
-    let r = bench.run(variant, cfg).unwrap_or_else(|e| panic!("{e}"));
+pub fn run_verified(bench: &WorkloadHandle, variant: Variant, cfg: &MachineConfig) -> RunResult {
+    let r = bench
+        .run(variant, cfg.clone())
+        .unwrap_or_else(|e| panic!("{e}"));
     r.assert_verified();
     r
 }
@@ -65,10 +67,11 @@ mod tests {
     #[test]
     fn scaled_config_keeps_table2_shape() {
         let cfg = scaled_config();
-        assert_eq!(cfg.l1.ways, 8);
-        assert_eq!(cfg.llc.ways, 16);
-        assert_eq!(cfg.l1.hit_cycles, 4);
-        assert_eq!(cfg.mem_cycles, 300);
+        assert_eq!(cfg.depth(), 3);
+        assert_eq!(cfg.l1().ways, 8);
+        assert_eq!(cfg.llc().ways, 16);
+        assert_eq!(cfg.l1().hit_cycles, 4);
+        assert_eq!(cfg.timing.mem_cycles, 300);
         cfg.validate().unwrap();
     }
 

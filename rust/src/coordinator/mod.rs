@@ -8,4 +8,7 @@ pub mod report;
 pub mod sweep;
 
 pub use experiment::{run_verified, scaled_config, sized_workload, SCALED_LLC_BYTES};
-pub use sweep::{run_sweep, run_sweep_skewed, SweepPoint, SweepResult, WS_FRACTIONS};
+pub use sweep::{
+    run_sweep, run_sweep_skewed, run_sweep_with, SweepOptions, SweepPoint, SweepResult,
+    WS_FRACTIONS,
+};

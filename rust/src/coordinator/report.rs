@@ -1,6 +1,8 @@
-//! Paper-style report rendering for sweeps and characterization runs.
+//! Paper-style report rendering for sweeps and characterization runs,
+//! plus the machine-readable JSON record (`sweep --json`).
 
 use crate::exec::Variant;
+use crate::sim::config::MachineConfig;
 use crate::util::bench::Table;
 
 use super::sweep::SweepResult;
@@ -58,6 +60,87 @@ pub fn fig8_table(
     t
 }
 
+/// Machine-readable sweep record: the per-cell cycles and merge/miss
+/// stats plus the run's wall-clock, so the perf trajectory of the sweep
+/// itself is recorded. Hand-rolled JSON — serde is unavailable offline.
+pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str("{\n");
+    out.push_str(&format!("  \"benchmark\": {},\n", json_str(&sweep.name)));
+    out.push_str(&format!("  \"cores\": {},\n", cfg.cores));
+    out.push_str("  \"levels\": [");
+    for (i, lv) in cfg.levels.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"name\": {}, \"size_bytes\": {}, \"ways\": {}, \"hit_cycles\": {}, \"shared\": {}}}",
+            json_str(&cfg.level_name(i)),
+            lv.size_bytes,
+            lv.ways,
+            lv.hit_cycles,
+            lv.shared
+        ));
+    }
+    out.push_str("],\n");
+    out.push_str(&format!("  \"mem_cycles\": {},\n", cfg.timing.mem_cycles));
+    out.push_str(&format!("  \"jobs\": {},\n", sweep.jobs));
+    out.push_str(&format!(
+        "  \"wall_clock_ms\": {:.3},\n",
+        sweep.wall_clock_ms
+    ));
+    out.push_str("  \"cells\": [\n");
+    let mut first = true;
+    for p in &sweep.points {
+        for r in &p.results {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            let speedup = p
+                .speedup_vs_fgl(r.variant)
+                .map(|s| format!("{s:.4}"))
+                .unwrap_or_else(|| "null".into());
+            out.push_str(&format!(
+                "    {{\"frac\": {}, \"variant\": {}, \"cycles\": {}, \
+                 \"verified\": {}, \"merges\": {}, \"silent_drops\": {}, \
+                 \"src_buf_evictions\": {}, \"llc_misses\": {}, \
+                 \"directory_msgs\": {}, \"invalidations\": {}, \
+                 \"speedup_vs_fgl\": {}}}",
+                p.frac,
+                json_str(r.variant.name()),
+                r.cycles(),
+                r.verified,
+                r.stats.merges,
+                r.stats.silent_drops,
+                r.stats.src_buf_evictions,
+                r.stats.llc().misses,
+                r.stats.directory_msgs,
+                r.stats.invalidations,
+                speedup
+            ));
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +156,32 @@ mod tests {
         assert!(t.render().contains("CCACHE"));
         let t8 = fig8_table(&sweep, "LLC misses", |r| r.stats.llc_misses_per_kc());
         assert!(t8.render().contains("LLC misses"));
+    }
+
+    #[test]
+    fn json_record_has_cells_and_machine_shape() {
+        let cfg = MachineConfig::test_small().with_cores(2);
+        let sweep = run_sweep(
+            "kvstore",
+            &[Variant::Fgl, Variant::CCache],
+            &[0.5],
+            cfg.clone(),
+            1,
+        );
+        let j = sweep_json(&sweep, &cfg);
+        assert!(j.contains("\"benchmark\": \"kvstore\""), "{j}");
+        assert!(j.contains("\"variant\": \"ccache\""), "{j}");
+        assert!(j.contains("\"wall_clock_ms\""), "{j}");
+        assert!(j.contains("\"levels\""), "{j}");
+        assert!(j.contains("\"LLC\""), "{j}");
+        // the FGL baseline cell reports speedup 1.0
+        assert!(j.contains("\"speedup_vs_fgl\": 1.0000"), "{j}");
+        // crude structural sanity: balanced braces/brackets
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced JSON"
+        );
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

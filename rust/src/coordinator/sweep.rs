@@ -2,13 +2,48 @@
 //! a sweep takes a registered workload name, rebuilds the sized instance
 //! at each fraction, and runs every *supported* requested variant —
 //! unsupported variants skip their cell instead of aborting the sweep.
+//!
+//! Every (fraction, variant) cell is an independent
+//! [`Machine`](crate::sim::machine::Machine) run, so
+//! the sweep fans the whole cell grid out over a scoped worker pool
+//! ([`SweepOptions::jobs`], default: all host cores). Cell results are
+//! bit-identical to serial execution — each cell builds its own machine
+//! and the deterministic interleaver never observes the host schedule —
+//! and are reassembled in cell order, so `--jobs N` changes wall-clock
+//! only. The elapsed time is recorded in [`SweepResult::wall_clock_ms`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::exec::registry::{self, SizeSpec};
+use crate::exec::workload::WorkloadHandle;
 use crate::exec::{RunResult, Variant};
 use crate::sim::config::MachineConfig;
 
 /// The paper's input sizes relative to LLC capacity (Section 6.1).
 pub const WS_FRACTIONS: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+
+/// Knobs for one sweep run.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    pub seed: u64,
+    /// 0.0 = uniform keys; >0 = zipf skew for workloads with a key
+    /// distribution.
+    pub zipf_theta: f64,
+    /// Worker threads for the cell grid; 0 = all host cores.
+    pub jobs: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            zipf_theta: 0.0,
+            jobs: 0,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
@@ -34,12 +69,17 @@ pub struct SweepResult {
     /// Registry name of the swept benchmark.
     pub name: String,
     pub points: Vec<SweepPoint>,
+    /// Host wall-clock the cell grid took, in milliseconds.
+    pub wall_clock_ms: f64,
+    /// Worker threads the grid ran on.
+    pub jobs: usize,
 }
 
 /// Run `variants` of the registered benchmark `name` at each working-set
-/// fraction. Variants the benchmark does not support are skipped (their
-/// cells render as "-"); divergence from the golden run still panics.
-/// Panics on unknown benchmark names.
+/// fraction (serial-equivalent parallel execution, auto job count).
+/// Variants the benchmark does not support are skipped (their cells
+/// render as "-"); divergence from the golden run still panics. Panics
+/// on unknown benchmark names or an invalid machine config.
 pub fn run_sweep(
     name: &str,
     variants: &[Variant],
@@ -47,7 +87,16 @@ pub fn run_sweep(
     cfg: MachineConfig,
     seed: u64,
 ) -> SweepResult {
-    run_sweep_skewed(name, variants, fracs, cfg, seed, 0.0)
+    run_sweep_with(
+        name,
+        variants,
+        fracs,
+        cfg,
+        SweepOptions {
+            seed,
+            ..Default::default()
+        },
+    )
 }
 
 /// [`run_sweep`] with a zipf key-skew theta for the workloads that have
@@ -60,49 +109,126 @@ pub fn run_sweep_skewed(
     seed: u64,
     zipf_theta: f64,
 ) -> SweepResult {
+    run_sweep_with(
+        name,
+        variants,
+        fracs,
+        cfg,
+        SweepOptions {
+            seed,
+            zipf_theta,
+            jobs: 0,
+        },
+    )
+}
+
+/// The general form: every option explicit.
+pub fn run_sweep_with(
+    name: &str,
+    variants: &[Variant],
+    fracs: &[f64],
+    cfg: MachineConfig,
+    opts: SweepOptions,
+) -> SweepResult {
     let spec = registry::lookup(name).unwrap_or_else(|e| panic!("{e}"));
     assert!(
-        zipf_theta == 0.0 || spec.key_skew,
-        "{} has no key distribution; zipf_theta {zipf_theta} would be silently ignored",
-        spec.name
+        opts.zipf_theta == 0.0 || spec.key_skew,
+        "{} has no key distribution; zipf_theta {} would be silently ignored",
+        spec.name,
+        opts.zipf_theta
     );
-    let mut points = Vec::new();
-    for &frac in fracs {
-        let size = SizeSpec::new(frac, cfg.llc.size_bytes, seed).with_zipf(zipf_theta);
-        let bench = spec.build(&size);
-        let supported: Vec<Variant> = variants
-            .iter()
-            .copied()
-            .filter(|&v| bench.supports(v))
-            .collect();
-        // variants are independent machines: run them on parallel host
-        // threads (results and their determinism are unaffected)
-        let results: Vec<RunResult> = std::thread::scope(|scope| {
-            let handles: Vec<_> = supported
+    cfg.validate().unwrap_or_else(|e| panic!("{e}"));
+    let t0 = Instant::now();
+
+    // one sized instance per fraction, shared by its variants
+    let benches: Vec<(f64, WorkloadHandle)> = fracs
+        .iter()
+        .map(|&frac| {
+            let size = SizeSpec::new(frac, cfg.llc().size_bytes, opts.seed)
+                .with_zipf(opts.zipf_theta);
+            (frac, spec.build(&size))
+        })
+        .collect();
+
+    // the independent cell grid: (point index, bench, variant)
+    let cells: Vec<(usize, &WorkloadHandle, Variant)> = benches
+        .iter()
+        .enumerate()
+        .flat_map(|(pi, (_, bench))| {
+            variants
                 .iter()
-                .map(|&v| {
-                    let bench = &bench;
-                    scope.spawn(move || {
-                        bench.run(v, cfg).unwrap_or_else(|e| panic!("{e}"))
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+                .copied()
+                .filter(|&v| bench.supports(v))
+                .map(move |v| (pi, bench, v))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    let jobs = effective_jobs(opts.jobs, cells.len());
+    let results: Vec<RunResult> = if jobs <= 1 {
+        cells
+            .iter()
+            .map(|&(_, bench, v)| {
+                bench.run(v, cfg.clone()).unwrap_or_else(|e| panic!("{e}"))
+            })
+            .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<RunResult>>> = Mutex::new(vec![None; cells.len()]);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let (_, bench, v) = cells[i];
+                    let r = bench.run(v, cfg.clone()).unwrap_or_else(|e| panic!("{e}"));
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+            }
         });
-        for r in &results {
-            assert!(
-                r.verified,
-                "{}/{} diverged at frac {frac}",
-                r.benchmark,
-                r.variant.name()
-            );
-        }
-        points.push(SweepPoint { frac, results });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every cell completed"))
+            .collect()
+    };
+
+    // reassemble in cell order (frac-major, then requested variant
+    // order) — independent of which worker ran which cell
+    let mut points: Vec<SweepPoint> = benches
+        .iter()
+        .map(|&(frac, _)| SweepPoint {
+            frac,
+            results: Vec::new(),
+        })
+        .collect();
+    for (&(pi, _, _), r) in cells.iter().zip(results) {
+        assert!(
+            r.verified,
+            "{}/{} diverged at frac {}",
+            r.benchmark,
+            r.variant.name(),
+            points[pi].frac
+        );
+        points[pi].results.push(r);
     }
     SweepResult {
         name: spec.name.to_string(),
         points,
+        wall_clock_ms: t0.elapsed().as_secs_f64() * 1e3,
+        jobs,
     }
+}
+
+fn effective_jobs(requested: usize, cells: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = if requested == 0 { auto } else { requested };
+    j.clamp(1, cells.max(1))
 }
 
 #[cfg(test)]
@@ -122,6 +248,8 @@ mod tests {
             42,
         );
         assert_eq!(sweep.points.len(), 2);
+        assert!(sweep.jobs >= 1);
+        assert!(sweep.wall_clock_ms > 0.0);
         for p in &sweep.points {
             assert!(p.speedup_vs_fgl(Variant::CCache).unwrap() > 0.0);
             assert_eq!(p.speedup_vs_fgl(Variant::Fgl).unwrap(), 1.0);
@@ -144,5 +272,46 @@ mod tests {
         assert_eq!(sweep.points.len(), 1);
         assert!(sweep.points[0].get(Variant::CCache).is_some());
         assert!(sweep.points[0].get(Variant::Atomic).is_none());
+    }
+
+    #[test]
+    fn parallel_jobs_match_serial_cell_for_cell() {
+        let cfg = MachineConfig::test_small().with_cores(2);
+        let mk = |jobs: usize| {
+            run_sweep_with(
+                "kvstore",
+                &[Variant::Fgl, Variant::CCache],
+                &[0.25, 0.5],
+                cfg.clone(),
+                SweepOptions {
+                    seed: 7,
+                    zipf_theta: 0.0,
+                    jobs,
+                },
+            )
+        };
+        let serial = mk(1);
+        let parallel = mk(4);
+        assert_eq!(serial.jobs, 1);
+        assert_eq!(serial.points.len(), parallel.points.len());
+        for (ps, pp) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(ps.frac, pp.frac);
+            assert_eq!(ps.results.len(), pp.results.len());
+            for (rs, rp) in ps.results.iter().zip(&pp.results) {
+                assert_eq!(rs.variant, rp.variant);
+                assert_eq!(rs.cycles(), rp.cycles(), "cycles diverged under --jobs");
+                assert_eq!(rs.stats.merges, rp.stats.merges);
+                assert_eq!(rs.stats.llc().misses, rp.stats.llc().misses);
+                assert_eq!(rs.stats.directory_msgs, rp.stats.directory_msgs);
+            }
+        }
+    }
+
+    #[test]
+    fn sweeps_run_on_a_2_level_hierarchy() {
+        let cfg = MachineConfig::test_small_2level().with_cores(2);
+        let sweep = run_sweep("kvstore", &[Variant::Fgl, Variant::CCache], &[0.25], cfg, 3);
+        assert_eq!(sweep.points.len(), 1);
+        assert!(sweep.points[0].speedup_vs_fgl(Variant::CCache).is_some());
     }
 }

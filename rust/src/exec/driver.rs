@@ -28,7 +28,8 @@ pub fn run<W: Workload>(
     }
 
     let cores = cfg.cores;
-    let machine = Machine::new(cfg);
+    // a malformed machine config surfaces as a typed error, not a panic
+    let machine = Machine::new(cfg).map_err(ExecError::from)?;
     let layout = machine.setup(|mem| workload.setup(mem, variant, cores));
     let merge_slots = workload.merge_slots();
 

@@ -4,6 +4,8 @@
 
 use std::fmt;
 
+use crate::sim::config::ConfigError;
+
 use super::Variant;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -19,6 +21,16 @@ pub enum ExecError {
     UnknownBenchmark { name: String, known: Vec<String> },
     /// Not one of [`Variant::ALL`].
     UnknownVariant { name: String },
+    /// The machine configuration failed validation (bad geometry,
+    /// malformed hierarchy, ...). Carries the simulator's typed error so
+    /// the CLI prints the diagnostic and exits instead of panicking.
+    InvalidConfig(ConfigError),
+}
+
+impl From<ConfigError> for ExecError {
+    fn from(e: ConfigError) -> Self {
+        ExecError::InvalidConfig(e)
+    }
 }
 
 impl fmt::Display for ExecError {
@@ -48,6 +60,7 @@ impl fmt::Display for ExecError {
                 let names: Vec<&str> = Variant::ALL.iter().map(|v| v.name()).collect();
                 write!(f, "unknown variant '{name}' (use {})", names.join("|"))
             }
+            ExecError::InvalidConfig(e) => write!(f, "{e}"),
         }
     }
 }
@@ -75,5 +88,15 @@ mod tests {
             known: vec!["kvstore".into(), "histogram".into()],
         };
         assert!(e.to_string().contains("kvstore histogram"));
+    }
+
+    #[test]
+    fn invalid_config_wraps_the_sim_diagnostic() {
+        let mut cfg = crate::sim::config::MachineConfig::default();
+        cfg.l1_mut().size_bytes = 1000;
+        let sim_err = cfg.validate().unwrap_err();
+        let e: ExecError = sim_err.clone().into();
+        assert_eq!(e, ExecError::InvalidConfig(sim_err.clone()));
+        assert_eq!(e.to_string(), sim_err.to_string());
     }
 }

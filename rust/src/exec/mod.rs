@@ -132,7 +132,7 @@ mod tests {
             benchmark: "b".into(),
             variant: Variant::Fgl,
             stats: {
-                let mut s = Stats::new(1);
+                let mut s = Stats::new(1, 3);
                 s.core_cycles = vec![cyc];
                 s
             },

@@ -117,7 +117,7 @@ mod tests {
 
     #[test]
     fn lock_array_strides() {
-        let mut mem = MemSystem::new(MachineConfig::test_small());
+        let mut mem = MemSystem::new(MachineConfig::test_small()).unwrap();
         let locks = LockArray::alloc(&mut mem, 8, PTHREAD_LOCK_BYTES);
         assert_eq!(locks.addr(0).0 % 64, 0, "array starts line-aligned");
         assert_eq!(locks.addr(3).0 - locks.addr(0).0, 3 * PTHREAD_LOCK_BYTES);
@@ -125,7 +125,7 @@ mod tests {
 
     #[test]
     fn dup_space_pads_copies_to_lines() {
-        let mut mem = MemSystem::new(MachineConfig::test_small());
+        let mut mem = MemSystem::new(MachineConfig::test_small()).unwrap();
         let dup = DupSpace::alloc(&mut mem, 100, 4);
         assert_eq!(dup.stride(), 128);
         assert_eq!(dup.copy_base(2).0 - dup.copy_base(0).0, 256);

@@ -8,9 +8,11 @@
 //! The crate is the Layer-3 rust side of a three-layer stack:
 //!
 //! * [`sim`] — execution-driven multicore simulator: set-associative
-//!   caches, directory MESI coherence, and the paper's CCache hardware
-//!   extensions (CCache/mergeable bits, source buffer, MFRF, merge
-//!   registers, merge-on-evict and dirty-merge optimizations).
+//!   caches, directory MESI coherence over a *configurable* hierarchy
+//!   ([`sim::hierarchy`]: levels, access path, timing and merge policy
+//!   as data), and the paper's CCache hardware extensions
+//!   (CCache/mergeable bits, source buffer, MFRF, merge registers,
+//!   merge-on-evict and dirty-merge optimizations).
 //! * [`merge`] — the software-defined merge-function library (add,
 //!   saturating add, complex multiply, bitwise OR, min/max, approximate).
 //! * [`workloads`] — the benchmark suite (key-value store, K-Means,
@@ -48,6 +50,7 @@ pub mod sim;
 pub mod util;
 pub mod workloads;
 
-pub use sim::config::{CCacheConfig, MachineConfig};
+pub use sim::config::{CCacheConfig, ConfigError, MachineConfig};
+pub use sim::hierarchy::{LevelConfig, MergePolicy, Timing};
 pub use sim::machine::Machine;
 pub use sim::stats::Stats;

@@ -9,14 +9,19 @@
 //!
 //! Benchmarks resolve through the workload registry
 //! (`exec::registry`); there is no per-benchmark dispatch here.
+//! The machine is configurable: `--levels` picks the hierarchy depth
+//! (2 = L1+LLC, 3 = the Table 2 shape, 4 = adds an L3) and
+//! `--llc-kb`/`--l2-kb` resize levels; an illegal geometry prints a
+//! diagnostic and exits 2 instead of panicking.
 //!
 //! Examples:
 //!   ccache run --bench kvstore --variant ccache
 //!   ccache run --bench histogram --variant ccache --zipf 0.9
-//!   ccache sweep --bench pagerank-rmat
+//!   ccache run --bench kvstore --variant ccache --levels 2 --llc-kb 512
+//!   ccache sweep --bench pagerank-rmat --jobs 8 --json pagerank_sweep.json
 //!   ccache runtime
 
-use ccache::coordinator::{report, run_sweep_skewed, scaled_config, WS_FRACTIONS};
+use ccache::coordinator::{report, run_sweep_with, scaled_config, SweepOptions, WS_FRACTIONS};
 use ccache::exec::registry::{self, SizeSpec};
 use ccache::exec::{ExecError, Variant, WorkloadSpec};
 use ccache::sim::config::MachineConfig;
@@ -55,6 +60,11 @@ fn main() {
         .opt("seed", "42", "workload RNG seed")
         .opt("cores", "0", "override core count (0 = config default)")
         .opt("zipf", "0.0", "zipf key-skew theta for kvstore/histogram (0 = uniform)")
+        .opt("levels", "3", "hierarchy depth: 2 (L1+LLC), 3 (Table 2), 4 (adds an L3)")
+        .opt("llc-kb", "0", "override shared LLC size in KiB (0 = config default)")
+        .opt("l2-kb", "0", "override L2 size in KiB (0 = default; needs --levels >= 3)")
+        .opt("jobs", "0", "sweep: parallel worker threads (0 = all host cores)")
+        .opt("json", "", "sweep: also write machine-readable results to this path")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
         .flag("no-dirty-merge", "disable the dirty-merge optimization")
@@ -82,6 +92,24 @@ fn main() {
     if cores > 0 {
         cfg.cores = cores;
     }
+    let levels = args.get_usize("levels");
+    if levels != cfg.depth() {
+        cfg = match cfg.with_depth(levels) {
+            Ok(c) => c,
+            Err(e) => fail(e),
+        };
+    }
+    let llc_kb = args.get_usize("llc-kb");
+    if llc_kb > 0 {
+        cfg.llc_mut().size_bytes = llc_kb << 10;
+    }
+    let l2_kb = args.get_usize("l2-kb");
+    if l2_kb > 0 {
+        if cfg.depth() < 3 {
+            fail("--l2-kb needs a hierarchy with an L2 (--levels 3 or 4)");
+        }
+        cfg.level_mut(1).size_bytes = l2_kb << 10;
+    }
     let zipf_theta = args.get_f64("zipf");
 
     match cmd.as_str() {
@@ -97,19 +125,19 @@ fn main() {
                 Err(e) => fail(e),
             };
             check_zipf(spec, zipf_theta);
-            let size = SizeSpec::new(args.get_f64("frac"), cfg.llc.size_bytes, args.get_u64("seed"))
-                .with_zipf(zipf_theta);
+            let size =
+                SizeSpec::new(args.get_f64("frac"), cfg.llc().size_bytes, args.get_u64("seed"))
+                    .with_zipf(zipf_theta);
             let bench = spec.build(&size);
             eprintln!(
-                "running {} / {} on {} cores (LLC {} KiB)...",
+                "running {} / {} on {}...",
                 bench.name(),
                 variant.name(),
-                cfg.cores,
-                cfg.llc.size_bytes / 1024
+                cfg.describe()
             );
-            let r = match bench.run(variant, cfg) {
+            let r = match bench.run(variant, cfg.clone()) {
                 Ok(r) => r,
-                Err(e) => fail(e),
+                Err(e) => fail(e), // unsupported variant / invalid config -> exit 2
             };
             println!(
                 "{}/{}: {} cycles, verified={}{}",
@@ -134,19 +162,40 @@ fn main() {
                 Err(e) => fail(e),
             };
             check_zipf(spec, zipf_theta);
-            let sweep = run_sweep_skewed(
+            if let Err(e) = cfg.validate() {
+                fail(e);
+            }
+            let sweep = run_sweep_with(
                 spec.name,
                 &Variant::MAIN,
                 &WS_FRACTIONS,
-                cfg,
-                args.get_u64("seed"),
-                zipf_theta,
+                cfg.clone(),
+                SweepOptions {
+                    seed: args.get_u64("seed"),
+                    zipf_theta,
+                    jobs: args.get_usize("jobs"),
+                },
             );
             report::fig6_table(&sweep).print();
+            println!(
+                "({} cells in {:.0} ms on {} jobs)",
+                sweep.points.iter().map(|p| p.results.len()).sum::<usize>(),
+                sweep.wall_clock_ms,
+                sweep.jobs
+            );
+            let json_path = args.get("json");
+            if !json_path.is_empty() {
+                let payload = report::sweep_json(&sweep, &cfg);
+                match std::fs::write(&json_path, payload) {
+                    Ok(()) => eprintln!("wrote {json_path}"),
+                    Err(e) => fail(format!("writing {json_path}: {e}")),
+                }
+            }
         }
         "overhead" => {
             let m = OverheadModel::for_config(&cfg);
             println!("CCache structural overhead (Section 4.7):");
+            println!("  machine            : {}", cfg.describe());
             println!("  L1 extra bits/line : {}", m.l1_extra_bits_per_line);
             println!("  L1 extra bits total: {}", m.l1_extra_bits);
             println!("  source buffer bits : {}", m.src_buf_bits);

@@ -302,4 +302,86 @@ mod tests {
         assert_eq!(c.set_index(l(8)), 0);
         assert_eq!(c.set_index(l(9)), 1);
     }
+
+    #[test]
+    fn install_resets_all_mesi_and_ccache_metadata() {
+        let mut c = Cache::new(1, 1);
+        let w = match c.choose_victim(l(0)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        let m = c.install(w, l(0));
+        m.owned = true;
+        m.dirty = true;
+        m.ccache = true;
+        m.mergeable = true;
+        m.merge_type = 3;
+        // re-installing the slot (new line) must not inherit stale state
+        let m = c.install(w, l(9));
+        assert_eq!(m.line, l(9));
+        assert!(!m.owned && !m.dirty && !m.ccache && !m.mergeable);
+        assert_eq!(m.merge_type, 0);
+    }
+
+    #[test]
+    fn mergeable_bit_unpins_a_cdata_line() {
+        let mut c = Cache::new(1, 1);
+        let w = match c.choose_victim(l(0)) {
+            Victim::Free { way } => way,
+            _ => panic!(),
+        };
+        let m = c.install(w, l(0));
+        m.ccache = true;
+        assert_eq!(c.choose_victim(l(1)), Victim::Deadlock);
+        let idx = c.probe(l(0)).unwrap();
+        c.meta_mut(idx).mergeable = true;
+        match c.choose_victim(l(1)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(0)),
+            v => panic!("{v:?}"),
+        }
+        assert_eq!(c.pinned_cdata_in_set(l(1)), 0);
+    }
+
+    #[test]
+    fn invalidated_way_is_reused_before_evicting() {
+        let mut c = Cache::new(1, 2);
+        for i in 0..2 {
+            let w = match c.choose_victim(l(i)) {
+                Victim::Free { way } => way,
+                _ => panic!(),
+            };
+            c.install(w, l(i));
+        }
+        c.invalidate(l(0));
+        // the freed way is preferred over evicting line 1
+        match c.choose_victim(l(7)) {
+            Victim::Free { .. } => {}
+            v => panic!("expected free way, got {v:?}"),
+        }
+        assert!(c.probe(l(1)).is_some());
+    }
+
+    #[test]
+    fn probe_does_not_touch_lru_but_lookup_does() {
+        let mut c = Cache::new(1, 2);
+        for i in 0..2 {
+            let w = match c.choose_victim(l(i)) {
+                Victim::Free { way } => way,
+                _ => panic!(),
+            };
+            c.install(w, l(i));
+        }
+        // probe line 0 only: line 0 stays LRU and gets evicted
+        c.probe(l(0));
+        match c.choose_victim(l(9)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(0)),
+            v => panic!("{v:?}"),
+        }
+        // lookup line 0: line 1 becomes the victim
+        c.lookup(l(0));
+        match c.choose_victim(l(9)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
+            v => panic!("{v:?}"),
+        }
+    }
 }

@@ -1,18 +1,55 @@
-//! Machine configuration — defaults reproduce the paper's Table 2.
+//! Machine configuration — a declarative hierarchy description plus the
+//! CCache knobs. Defaults reproduce the paper's Table 2.
+//!
+//! The hierarchy is data: [`MachineConfig::levels`] lists every cache
+//! level innermost-first (the last entry is the single shared level the
+//! directory lives at), so topology ablations — a 2-level embedded
+//! shape, a half-size LLC, deeper stacks — are config rows, not forks of
+//! the protocol engine. [`MachineConfig::validate`] returns a typed
+//! [`ConfigError`] the execution layer surfaces as a CLI diagnostic.
 
-/// Cache geometry + latency for one level.
-#[derive(Clone, Copy, Debug)]
-pub struct CacheConfig {
-    pub size_bytes: usize,
-    pub ways: usize,
-    pub hit_cycles: u64,
+use std::fmt;
+
+use super::hierarchy::level::LevelConfig;
+use super::hierarchy::timing::Timing;
+
+/// Why a machine configuration is illegal. Produced by
+/// [`MachineConfig::validate`] and propagated through the execution
+/// layer as [`ExecError::InvalidConfig`](crate::exec::ExecError).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// One level's geometry is broken (size/ways/sets).
+    Level { level: String, reason: String },
+    /// The level stack itself is malformed.
+    Hierarchy { reason: String },
+    Cores { cores: usize },
+    MfrfSlots { slots: usize },
+    MemBytes { bytes: usize },
 }
 
-impl CacheConfig {
-    pub fn sets(&self) -> usize {
-        self.size_bytes / (64 * self.ways)
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Level { level, reason } => {
+                write!(f, "invalid machine config: {level}: {reason}")
+            }
+            ConfigError::Hierarchy { reason } => {
+                write!(f, "invalid machine config: hierarchy: {reason}")
+            }
+            ConfigError::Cores { cores } => {
+                write!(f, "invalid machine config: cores must be in 1..=64, got {cores}")
+            }
+            ConfigError::MfrfSlots { slots } => {
+                write!(f, "invalid machine config: mfrf_slots must be in 1..=16, got {slots}")
+            }
+            ConfigError::MemBytes { bytes } => {
+                write!(f, "invalid machine config: mem_bytes must be line-aligned, got {bytes}")
+            }
+        }
     }
 }
+
+impl std::error::Error for ConfigError {}
 
 /// CCache-specific knobs (Section 4 + the Section 4.3 optimizations).
 #[derive(Clone, Copy, Debug)]
@@ -57,22 +94,20 @@ impl Default for CCacheConfig {
     }
 }
 
-/// Whole-machine parameters (Table 2 defaults).
-#[derive(Clone, Copy, Debug)]
+/// Whole-machine parameters. The default is the paper's Table 2
+/// machine: 8 cores, L1 32 KiB/8w/4cyc + L2 512 KiB/8w/10cyc private,
+/// LLC 4 MiB/16w/70cyc shared, 300-cycle memory.
+#[derive(Clone, Debug)]
 pub struct MachineConfig {
     pub cores: usize,
-    pub l1: CacheConfig,
-    pub l2: CacheConfig,
-    pub llc: CacheConfig,
-    pub mem_cycles: u64,
+    /// The hierarchy, innermost (L1) first. Every level but the last is
+    /// private (one cache per core); the last is the single shared level
+    /// the directory is co-located with.
+    pub levels: Vec<LevelConfig>,
+    /// Machine-wide timing (memory latency, interleaver quantum, lock
+    /// backoff).
+    pub timing: Timing,
     pub ccache: CCacheConfig,
-    /// Deterministic interleave quantum in cycles: a core keeps its turn
-    /// until its clock exceeds the laggard's by this much. 0 = strict
-    /// laggard-first per operation.
-    pub quantum: u64,
-    /// Cycles charged per failed lock-acquire attempt before retrying
-    /// (spin backoff).
-    pub lock_backoff: u64,
     /// Functional memory size in bytes.
     pub mem_bytes: usize,
 }
@@ -81,34 +116,86 @@ impl Default for MachineConfig {
     fn default() -> Self {
         Self {
             cores: 8,
-            l1: CacheConfig {
-                size_bytes: 32 << 10,
-                ways: 8,
-                hit_cycles: 4,
-            },
-            l2: CacheConfig {
-                size_bytes: 512 << 10,
-                ways: 8,
-                hit_cycles: 10,
-            },
-            llc: CacheConfig {
-                size_bytes: 4 << 20,
-                ways: 16,
-                hit_cycles: 70,
-            },
-            mem_cycles: 300,
+            levels: vec![
+                LevelConfig::new(32 << 10, 8, 4, false),
+                LevelConfig::new(512 << 10, 8, 10, false),
+                LevelConfig::new(4 << 20, 16, 70, true),
+            ],
+            timing: Timing::table2(),
             ccache: CCacheConfig::default(),
-            quantum: 256,
-            lock_backoff: 40,
             mem_bytes: 256 << 20,
         }
     }
 }
 
 impl MachineConfig {
-    /// The paper's Fig 7 configuration: CCache runs with half the LLC.
+    // ---- hierarchy accessors -----------------------------------------
+
+    /// Number of cache levels (private levels + the shared level).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn level(&self, i: usize) -> &LevelConfig {
+        &self.levels[i]
+    }
+
+    pub fn level_mut(&mut self, i: usize) -> &mut LevelConfig {
+        &mut self.levels[i]
+    }
+
+    /// The innermost private level.
+    pub fn l1(&self) -> &LevelConfig {
+        &self.levels[0]
+    }
+
+    pub fn l1_mut(&mut self) -> &mut LevelConfig {
+        &mut self.levels[0]
+    }
+
+    /// The shared last level.
+    pub fn llc(&self) -> &LevelConfig {
+        self.levels.last().expect("hierarchy has levels")
+    }
+
+    pub fn llc_mut(&mut self) -> &mut LevelConfig {
+        self.levels.last_mut().expect("hierarchy has levels")
+    }
+
+    /// Display name of level `i`: "L1", "L2", ..., "LLC" for the last.
+    pub fn level_name(&self, i: usize) -> String {
+        if i + 1 == self.levels.len() {
+            "LLC".to_string()
+        } else {
+            format!("L{}", i + 1)
+        }
+    }
+
+    /// One-line human summary ("8 cores, L1 32 KiB + L2 512 KiB + LLC
+    /// 4096 KiB (shared)").
+    pub fn describe(&self) -> String {
+        let levels = self
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(i, lv)| {
+                format!(
+                    "{} {} KiB{}",
+                    self.level_name(i),
+                    lv.size_bytes >> 10,
+                    if lv.shared { " (shared)" } else { "" }
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" + ");
+        format!("{} cores, {}", self.cores, levels)
+    }
+
+    // ---- builders ----------------------------------------------------
+
+    /// The paper's Fig 7 configuration: CCache runs with a resized LLC.
     pub fn with_llc_bytes(mut self, bytes: usize) -> Self {
-        self.llc.size_bytes = bytes;
+        self.llc_mut().size_bytes = bytes;
         self
     }
 
@@ -117,47 +204,102 @@ impl MachineConfig {
         self
     }
 
-    /// Small machine for fast unit tests (geometry shrunk, same shape).
+    /// Reshape the hierarchy to `depth` levels, keeping the current
+    /// innermost and shared levels:
+    /// * 2 — L1 + shared LLC (embedded shape)
+    /// * 3 — L1 + L2 + LLC (the Table 2 shape); a missing L2 is
+    ///   synthesized at LLC/8 capacity, 8 ways, 10 cycles
+    /// * 4 — additionally inserts an L3 at LLC/2 capacity, LLC
+    ///   associativity, 40 cycles
+    pub fn with_depth(mut self, depth: usize) -> Result<Self, ConfigError> {
+        if !(2..=4).contains(&depth) {
+            return Err(ConfigError::Hierarchy {
+                reason: format!("supported depths are 2..=4, got {depth}"),
+            });
+        }
+        let first = self.levels[0];
+        let last = *self.llc();
+        let mid = if self.levels.len() >= 3 {
+            self.levels[1]
+        } else {
+            LevelConfig::new(last.size_bytes / 8, 8, 10, false)
+        };
+        self.levels = match depth {
+            2 => vec![first, last],
+            3 => vec![first, mid, last],
+            _ => vec![
+                first,
+                mid,
+                LevelConfig::new(last.size_bytes / 2, last.ways, 40, false),
+                last,
+            ],
+        };
+        Ok(self)
+    }
+
+    /// Small machine for fast unit tests (geometry shrunk, same 3-level
+    /// shape).
     pub fn test_small() -> Self {
         let mut cfg = Self::default();
         cfg.cores = 2;
-        cfg.l1 = CacheConfig {
-            size_bytes: 1 << 10,
-            ways: 4,
-            hit_cycles: 4,
-        };
-        cfg.l2 = CacheConfig {
-            size_bytes: 4 << 10,
-            ways: 4,
-            hit_cycles: 10,
-        };
-        cfg.llc = CacheConfig {
-            size_bytes: 16 << 10,
-            ways: 8,
-            hit_cycles: 70,
-        };
+        cfg.levels = vec![
+            LevelConfig::new(1 << 10, 4, 4, false),
+            LevelConfig::new(4 << 10, 4, 10, false),
+            LevelConfig::new(16 << 10, 8, 70, true),
+        ];
         cfg.mem_bytes = 8 << 20;
-        cfg.quantum = 0;
+        cfg.timing.quantum = 0;
         cfg
     }
 
-    pub fn validate(&self) -> Result<(), String> {
-        for (name, c) in [("l1", &self.l1), ("l2", &self.l2), ("llc", &self.llc)] {
-            if c.size_bytes % (64 * c.ways) != 0 {
-                return Err(format!("{name}: size not divisible by ways*64"));
-            }
-            if !c.sets().is_power_of_two() {
-                return Err(format!("{name}: sets ({}) not a power of two", c.sets()));
+    /// Small 2-level machine (L1 + shared LLC) for shape-sensitivity
+    /// tests.
+    pub fn test_small_2level() -> Self {
+        let mut cfg = Self::test_small();
+        cfg.levels = vec![
+            LevelConfig::new(1 << 10, 4, 4, false),
+            LevelConfig::new(16 << 10, 8, 70, true),
+        ];
+        cfg
+    }
+
+    // ---- validation --------------------------------------------------
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.levels.len() < 2 {
+            return Err(ConfigError::Hierarchy {
+                reason: format!(
+                    "need at least a private L1 and a shared last level, got {} level(s)",
+                    self.levels.len()
+                ),
+            });
+        }
+        for (i, lv) in self.levels.iter().enumerate() {
+            let name = self.level_name(i);
+            lv.validate(&name)?;
+            let is_last = i + 1 == self.levels.len();
+            if lv.shared != is_last {
+                return Err(ConfigError::Hierarchy {
+                    reason: if is_last {
+                        format!("the last level ({name}) must be shared")
+                    } else {
+                        format!("{name} is shared but only the last level may be")
+                    },
+                });
             }
         }
         if self.cores == 0 || self.cores > 64 {
-            return Err("cores must be in 1..=64".into());
+            return Err(ConfigError::Cores { cores: self.cores });
         }
         if self.ccache.mfrf_slots == 0 || self.ccache.mfrf_slots > 16 {
-            return Err("mfrf_slots must be in 1..=16".into());
+            return Err(ConfigError::MfrfSlots {
+                slots: self.ccache.mfrf_slots,
+            });
         }
         if self.mem_bytes % 64 != 0 {
-            return Err("mem_bytes must be line-aligned".into());
+            return Err(ConfigError::MemBytes {
+                bytes: self.mem_bytes,
+            });
         }
         Ok(())
     }
@@ -171,34 +313,89 @@ mod tests {
     fn table2_defaults() {
         let cfg = MachineConfig::default();
         assert_eq!(cfg.cores, 8);
-        assert_eq!(cfg.l1.sets(), 64); // 32KB / (64B * 8)
-        assert_eq!(cfg.l2.sets(), 1024);
-        assert_eq!(cfg.llc.sets(), 4096); // 4MB / (64B * 16)
-        assert_eq!(cfg.l1.hit_cycles, 4);
-        assert_eq!(cfg.l2.hit_cycles, 10);
-        assert_eq!(cfg.llc.hit_cycles, 70);
-        assert_eq!(cfg.mem_cycles, 300);
+        assert_eq!(cfg.depth(), 3);
+        assert_eq!(cfg.l1().sets(), 64); // 32KB / (64B * 8)
+        assert_eq!(cfg.level(1).sets(), 1024);
+        assert_eq!(cfg.llc().sets(), 4096); // 4MB / (64B * 16)
+        assert_eq!(cfg.l1().hit_cycles, 4);
+        assert_eq!(cfg.level(1).hit_cycles, 10);
+        assert_eq!(cfg.llc().hit_cycles, 70);
+        assert_eq!(cfg.timing.mem_cycles, 300);
         assert_eq!(cfg.ccache.source_buffer_entries, 8);
         assert_eq!(cfg.ccache.merge_latency, 170);
+        assert!(cfg.llc().shared && !cfg.l1().shared);
         cfg.validate().unwrap();
     }
 
     #[test]
     fn half_llc_for_fig7() {
         let cfg = MachineConfig::default().with_llc_bytes(2 << 20);
-        assert_eq!(cfg.llc.sets(), 2048);
+        assert_eq!(cfg.llc().sets(), 2048);
         cfg.validate().unwrap();
     }
 
     #[test]
     fn invalid_geometry_rejected() {
         let mut cfg = MachineConfig::default();
-        cfg.l1.size_bytes = 1000; // not divisible
-        assert!(cfg.validate().is_err());
+        cfg.l1_mut().size_bytes = 1000; // not divisible
+        assert!(matches!(cfg.validate(), Err(ConfigError::Level { .. })));
     }
 
     #[test]
-    fn test_small_is_valid() {
+    fn shared_level_must_be_last_and_only_last() {
+        let mut cfg = MachineConfig::default();
+        cfg.level_mut(1).shared = true;
+        assert!(matches!(cfg.validate(), Err(ConfigError::Hierarchy { .. })));
+        let mut cfg = MachineConfig::default();
+        cfg.llc_mut().shared = false;
+        assert!(matches!(cfg.validate(), Err(ConfigError::Hierarchy { .. })));
+    }
+
+    #[test]
+    fn test_small_shapes_are_valid() {
         MachineConfig::test_small().validate().unwrap();
+        let two = MachineConfig::test_small_2level();
+        assert_eq!(two.depth(), 2);
+        two.validate().unwrap();
+    }
+
+    #[test]
+    fn with_depth_reshapes_and_validates() {
+        let two = MachineConfig::default().with_depth(2).unwrap();
+        assert_eq!(two.depth(), 2);
+        assert_eq!(two.l1().size_bytes, 32 << 10);
+        assert_eq!(two.llc().size_bytes, 4 << 20);
+        two.validate().unwrap();
+
+        let three = two.clone().with_depth(3).unwrap();
+        assert_eq!(three.depth(), 3);
+        assert_eq!(three.level(1).size_bytes, (4 << 20) / 8); // synthesized L2
+        three.validate().unwrap();
+
+        let four = MachineConfig::default().with_depth(4).unwrap();
+        assert_eq!(four.depth(), 4);
+        assert_eq!(four.level(2).size_bytes, 2 << 20);
+        four.validate().unwrap();
+
+        assert!(MachineConfig::default().with_depth(1).is_err());
+        assert!(MachineConfig::default().with_depth(5).is_err());
+    }
+
+    #[test]
+    fn errors_render_actionable_messages() {
+        let mut cfg = MachineConfig::default();
+        cfg.llc_mut().size_bytes = 3 << 10;
+        let msg = cfg.validate().unwrap_err().to_string();
+        assert!(msg.contains("LLC"), "{msg}");
+        let msg = ConfigError::Cores { cores: 99 }.to_string();
+        assert!(msg.contains("99"), "{msg}");
+    }
+
+    #[test]
+    fn describe_names_every_level() {
+        let s = MachineConfig::default().describe();
+        assert!(s.contains("L1 32 KiB"), "{s}");
+        assert!(s.contains("L2 512 KiB"), "{s}");
+        assert!(s.contains("LLC 4096 KiB (shared)"), "{s}");
     }
 }

@@ -1,0 +1,322 @@
+//! [`CoreCtx`] — the software-visible ISA surface one simulated core
+//! programs against: every method is one "instruction" that advances the
+//! core's clock through the timing model, cooperating with the
+//! [`Machine`](super::machine::Machine)'s deterministic laggard-first
+//! interleaver (turn management, locks, barriers).
+
+use std::sync::MutexGuard;
+
+use super::addr::Addr;
+use super::machine::{MachState, Machine};
+use crate::merge::MergeKind;
+
+/// The per-core execution context: every method is one "instruction" that
+/// advances the core's clock through the timing model.
+pub struct CoreCtx<'m> {
+    machine: &'m Machine,
+    core: usize,
+    guard: Option<MutexGuard<'m, MachState>>,
+}
+
+impl<'m> CoreCtx<'m> {
+    pub(crate) fn new(machine: &'m Machine, core: usize) -> Self {
+        Self {
+            machine,
+            core,
+            guard: None,
+        }
+    }
+
+    pub fn core_id(&self) -> usize {
+        self.core
+    }
+
+    /// Current simulated cycle count of this core.
+    pub fn cycles(&mut self) -> u64 {
+        let core = self.core;
+        self.state().clocks[core]
+    }
+
+    // ---- turn management -------------------------------------------------
+
+    /// Acquire the machine state, waiting until it is this core's turn.
+    fn state(&mut self) -> &mut MachState {
+        if self.guard.is_none() {
+            let mut g = self.machine.lock_state();
+            while !g.aborted && g.turn != self.core {
+                g = match self.machine.cvs[self.core].wait(g) {
+                    Ok(g) => g,
+                    Err(poison) => poison.into_inner(),
+                };
+            }
+            if g.aborted {
+                panic!("sibling core panicked; aborting core {}", self.core);
+            }
+            self.guard = Some(g);
+        }
+        self.guard.as_mut().unwrap()
+    }
+
+    /// After an operation: hand the turn over if we ran past the laggard.
+    fn maybe_yield(&mut self) {
+        let quantum = self.machine.quantum;
+        let core = self.core;
+        let g = match self.guard.as_mut() {
+            Some(g) => g,
+            None => return,
+        };
+        // fast path: still within the cached bound — no scan, no notify
+        if g.clocks[core] <= g.yield_at {
+            return;
+        }
+        if let Some(next) = g.laggard() {
+            if next != core && g.clocks[next] + quantum < g.clocks[core] {
+                g.grant_turn(next, quantum);
+                self.guard = None; // drop the guard
+                self.machine.notify_core(next);
+                return;
+            }
+        }
+        // we remain the laggard: refresh the bound
+        g.grant_turn(core, quantum);
+    }
+
+    /// Unconditionally pass the turn (lock spins, barriers).
+    fn yield_turn(&mut self) {
+        let core = self.core;
+        let g = match self.guard.as_mut() {
+            Some(g) => g,
+            None => return,
+        };
+        if let Some(next) = g.laggard() {
+            if next != core {
+                let q = self.machine.quantum;
+                g.grant_turn(next, q);
+                self.guard = None;
+                self.machine.notify_core(next);
+                return;
+            }
+        }
+        // we remain the laggard: keep the turn
+    }
+
+    pub(crate) fn finish(&mut self) {
+        let core = self.core;
+        let quantum = self.machine.quantum;
+        let g = self.state();
+        g.finished[core] = true;
+        // if every remaining active core is blocked at a barrier, this
+        // finish is what releases it
+        let all_waiting = (0..g.clocks.len()).all(|c| g.finished[c] || g.waiting[c]);
+        let any_waiting = (0..g.clocks.len()).any(|c| g.waiting[c]);
+        if all_waiting && any_waiting {
+            let maxc = (0..g.clocks.len())
+                .filter(|&c| g.waiting[c])
+                .map(|c| g.clocks[c])
+                .max()
+                .unwrap_or(0);
+            for c in 0..g.clocks.len() {
+                if g.waiting[c] {
+                    g.clocks[c] = g.clocks[c].max(maxc);
+                    g.waiting[c] = false;
+                }
+            }
+            g.barrier_gen += 1;
+            if let Some(next) = g.laggard() {
+                g.grant_turn(next, quantum);
+            }
+            self.guard = None;
+            self.machine.notify_everyone();
+            return;
+        }
+        if let Some(next) = g.laggard() {
+            g.grant_turn(next, quantum);
+        }
+        self.guard = None;
+        self.machine.notify_everyone();
+    }
+
+    // ---- timed operations -------------------------------------------------
+
+    fn charge(&mut self, cycles: u64) {
+        let core = self.core;
+        self.state().clocks[core] += cycles;
+        self.maybe_yield();
+    }
+
+    /// Non-memory work: `n` instructions at 1 cycle each (Table 2).
+    pub fn compute(&mut self, n: u64) {
+        self.charge(n);
+    }
+
+    pub fn read_u32(&mut self, addr: Addr) -> u32 {
+        let core = self.core;
+        let (v, c) = self.state().mem.read(core, addr);
+        self.charge(c);
+        v
+    }
+
+    pub fn write_u32(&mut self, addr: Addr, val: u32) {
+        let core = self.core;
+        let c = self.state().mem.write(core, addr, val);
+        self.charge(c);
+    }
+
+    pub fn read_f32(&mut self, addr: Addr) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    pub fn write_f32(&mut self, addr: Addr, val: f32) {
+        self.write_u32(addr, val.to_bits());
+    }
+
+    pub fn cas_u32(&mut self, addr: Addr, expected: u32, new: u32) -> bool {
+        let core = self.core;
+        let (ok, c) = self.state().mem.cas(core, addr, expected, new);
+        self.charge(c);
+        ok
+    }
+
+    pub fn fetch_or_u32(&mut self, addr: Addr, bits: u32) -> u32 {
+        let core = self.core;
+        let (old, c) = self.state().mem.fetch_or(core, addr, bits);
+        self.charge(c);
+        old
+    }
+
+    // ---- CCache ISA (Table 1) ----------------------------------------------
+
+    /// `merge_init(&fn, i)`.
+    pub fn merge_init(&mut self, slot: usize, kind: MergeKind) {
+        let core = self.core;
+        self.state().mem.merge_init(core, slot, kind);
+        self.charge(1);
+    }
+
+    /// `c_read(CData, i)`.
+    pub fn c_read_u32(&mut self, addr: Addr, ty: u8) -> u32 {
+        let core = self.core;
+        let (v, c) = self.state().mem.c_read(core, addr, ty);
+        self.charge(c);
+        v
+    }
+
+    /// `c_write(CData, v, i)`.
+    pub fn c_write_u32(&mut self, addr: Addr, val: u32, ty: u8) {
+        let core = self.core;
+        let c = self.state().mem.c_write(core, addr, val, ty);
+        self.charge(c);
+    }
+
+    pub fn c_read_f32(&mut self, addr: Addr, ty: u8) -> f32 {
+        f32::from_bits(self.c_read_u32(addr, ty))
+    }
+
+    pub fn c_write_f32(&mut self, addr: Addr, val: f32, ty: u8) {
+        self.c_write_u32(addr, val.to_bits(), ty);
+    }
+
+    /// `soft_merge` — mark CData mergeable (merge-on-evict).
+    pub fn soft_merge(&mut self) {
+        let core = self.core;
+        let c = self.state().mem.soft_merge(core);
+        self.charge(c);
+    }
+
+    /// `merge` — merge all of this core's CData now.
+    pub fn merge(&mut self) {
+        let core = self.core;
+        let c = self.state().mem.merge_all(core);
+        self.charge(c);
+    }
+
+    // ---- synchronization ----------------------------------------------------
+
+    /// Spin lock acquire: CAS loop with backoff; the turn is handed to the
+    /// laggard between attempts so the owner can make progress.
+    pub fn lock(&mut self, addr: Addr) {
+        let backoff = self.machine.lock_backoff;
+        let core = self.core;
+        loop {
+            let (ok, c) = self.state().mem.cas(core, addr, 0, 1);
+            {
+                let g = self.guard.as_mut().unwrap();
+                g.clocks[core] += c;
+                if ok {
+                    g.mem.stats.lock_acquires += 1;
+                } else {
+                    g.mem.stats.lock_retries += 1;
+                    g.clocks[core] += backoff;
+                }
+            }
+            if ok {
+                self.maybe_yield();
+                return;
+            }
+            self.yield_turn();
+        }
+    }
+
+    /// Spin lock release: coherent store of 0.
+    pub fn unlock(&mut self, addr: Addr) {
+        self.write_u32(addr, 0);
+    }
+
+    /// Merge boundary barrier (Section 3.2.1): all cores must arrive;
+    /// clocks synchronize to the latest arrival.
+    pub fn barrier(&mut self) {
+        let core = self.core;
+        let quantum = self.machine.quantum;
+        let gen = {
+            let g = self.state();
+            g.mem.stats.barriers += 1;
+            g.waiting[core] = true;
+            let gen = g.barrier_gen;
+            let all_waiting = (0..g.clocks.len()).all(|c| g.finished[c] || g.waiting[c]);
+            if all_waiting {
+                let maxc = (0..g.clocks.len())
+                    .filter(|&c| g.waiting[c])
+                    .map(|c| g.clocks[c])
+                    .max()
+                    .unwrap_or(0);
+                for c in 0..g.clocks.len() {
+                    if g.waiting[c] {
+                        g.clocks[c] = g.clocks[c].max(maxc);
+                        g.waiting[c] = false;
+                    }
+                }
+                g.barrier_gen += 1;
+                if let Some(next) = g.laggard() {
+                    g.grant_turn(next, quantum);
+                }
+                self.guard = None;
+                self.machine.notify_everyone();
+                return;
+            }
+            // others still running: hand over the turn and sleep
+            if let Some(next) = g.laggard() {
+                g.grant_turn(next, quantum);
+            } else {
+                panic!("barrier deadlock: no runnable core");
+            }
+            gen
+        };
+        let next_after = {
+            let g = self.guard.as_ref().unwrap();
+            g.turn
+        };
+        self.guard = None;
+        self.machine.notify_core(next_after);
+        let mut g = self.machine.lock_state();
+        while !g.aborted && g.barrier_gen == gen {
+            g = match self.machine.cvs[core].wait(g) {
+                Ok(g) => g,
+                Err(poison) => poison.into_inner(),
+            };
+        }
+        if g.aborted {
+            panic!("sibling core panicked during barrier");
+        }
+        drop(g);
+    }
+}

@@ -308,4 +308,60 @@ mod tests {
         assert_eq!(mask, 0);
         assert_eq!(act, CoherenceActions::default());
     }
+
+    #[test]
+    fn rfo_from_uncached_grants_m_without_invalidations() {
+        let mut d = Directory::new();
+        let act = d.get_m(l(1), 3);
+        assert_eq!(act.invalidations, 0);
+        assert_eq!(act.owner_writeback, None);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 3 });
+        assert!(d.entry(l(1)).unwrap().is_sharer(3));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn put_of_unregistered_line_is_harmless() {
+        let mut d = Directory::new();
+        let act = d.put(l(5), 0, false);
+        assert_eq!(act.invalidations, 0);
+        assert!(d.entry(l(5)).is_none());
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn put_of_a_non_owner_sharer_keeps_the_line_shared() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0);
+        d.get_s(l(1), 1); // downgrades 0 -> Shared {0,1}
+        d.put(l(1), 1, false);
+        let e = d.entry(l(1)).unwrap();
+        assert_eq!(e.state, DirState::Shared);
+        assert!(e.is_sharer(0));
+        assert!(!e.is_sharer(1));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reacquire_after_recall_regrants_exclusive() {
+        let mut d = Directory::new();
+        d.get_s(l(1), 0);
+        d.get_s(l(1), 1);
+        d.recall(l(1));
+        // the entry is gone; the next reader is alone again -> E
+        let act = d.get_s(l(1), 1);
+        assert_eq!(act.owner_writeback, None);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 1 });
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dirty_put_costs_an_extra_data_message() {
+        let mut d = Directory::new();
+        d.get_m(l(1), 0);
+        let clean = d.put(l(1), 0, false);
+        d.get_m(l(1), 0);
+        let dirty = d.put(l(1), 0, true);
+        assert_eq!(dirty.dir_msgs, clean.dir_msgs + 1);
+    }
 }

@@ -1,0 +1,149 @@
+//! One level of the cache hierarchy: geometry + hit latency as data
+//! ([`LevelConfig`]) and the instantiated tag arrays ([`Level`]).
+//!
+//! A level is either *private* (one [`Cache`] per core — L1, L2, ...)
+//! or *shared* (a single cache all cores reach — the LLC). The
+//! [`AccessPath`](super::path::AccessPath) composes a stack of these;
+//! nothing in the protocol engine hard-codes how many there are.
+
+use crate::sim::cache::Cache;
+use crate::sim::config::ConfigError;
+
+/// Declarative description of one hierarchy level (the rows of a
+/// Table 2-style machine spec). Part of
+/// [`MachineConfig::levels`](crate::sim::config::MachineConfig::levels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    /// Cycles charged for reaching (and hitting in) this level.
+    pub hit_cycles: u64,
+    /// Shared by all cores (one cache) vs private (one cache per core).
+    /// Exactly the last level of a hierarchy is shared; the directory
+    /// lives there.
+    pub shared: bool,
+}
+
+impl LevelConfig {
+    pub const fn new(size_bytes: usize, ways: usize, hit_cycles: u64, shared: bool) -> Self {
+        Self {
+            size_bytes,
+            ways,
+            hit_cycles,
+            shared,
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (64 * self.ways)
+    }
+
+    /// Geometry legality for one level; `name` labels the diagnostic
+    /// ("L1", "LLC", ...).
+    pub fn validate(&self, name: &str) -> Result<(), ConfigError> {
+        if self.ways == 0 {
+            return Err(ConfigError::Level {
+                level: name.to_string(),
+                reason: "ways must be >= 1".to_string(),
+            });
+        }
+        if self.size_bytes == 0 || self.size_bytes % (64 * self.ways) != 0 {
+            return Err(ConfigError::Level {
+                level: name.to_string(),
+                reason: format!(
+                    "size ({} B) not divisible by ways*64 ({} B)",
+                    self.size_bytes,
+                    64 * self.ways
+                ),
+            });
+        }
+        if !self.sets().is_power_of_two() {
+            return Err(ConfigError::Level {
+                level: name.to_string(),
+                reason: format!("sets ({}) not a power of two", self.sets()),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// An instantiated hierarchy level: the tag arrays behind one
+/// [`LevelConfig`].
+pub struct Level {
+    pub cfg: LevelConfig,
+    caches: Vec<Cache>,
+}
+
+impl Level {
+    pub fn new(cfg: LevelConfig, cores: usize) -> Self {
+        let n = if cfg.shared { 1 } else { cores };
+        Self {
+            caches: (0..n)
+                .map(|_| Cache::new(cfg.sets(), cfg.ways))
+                .collect(),
+            cfg,
+        }
+    }
+
+    /// The cache `core` reaches at this level (the single shared cache
+    /// regardless of `core` when the level is shared).
+    #[inline]
+    pub fn cache(&self, core: usize) -> &Cache {
+        let i = if self.cfg.shared { 0 } else { core };
+        &self.caches[i]
+    }
+
+    #[inline]
+    pub fn cache_mut(&mut self, core: usize) -> &mut Cache {
+        let i = if self.cfg.shared { 0 } else { core };
+        &mut self.caches[i]
+    }
+
+    pub fn is_shared(&self) -> bool {
+        self.cfg.shared
+    }
+
+    pub fn hit_cycles(&self) -> u64 {
+        self.cfg.hit_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::addr::Line;
+
+    #[test]
+    fn private_level_has_one_cache_per_core() {
+        let lc = LevelConfig::new(1 << 10, 4, 4, false);
+        let mut lv = Level::new(lc, 3);
+        // distinct caches: filling core 0 leaves core 2 empty
+        let way = match lv.cache(0).choose_victim(Line(1)) {
+            crate::sim::cache::Victim::Free { way } => way,
+            v => panic!("{v:?}"),
+        };
+        lv.cache_mut(0).install(way, Line(1));
+        assert!(lv.cache_mut(0).lookup(Line(1)).is_some());
+        assert!(lv.cache_mut(2).lookup(Line(1)).is_none());
+    }
+
+    #[test]
+    fn shared_level_is_one_cache_for_all_cores() {
+        let lc = LevelConfig::new(1 << 10, 4, 70, true);
+        let mut lv = Level::new(lc, 4);
+        let way = match lv.cache(1).choose_victim(Line(9)) {
+            crate::sim::cache::Victim::Free { way } => way,
+            v => panic!("{v:?}"),
+        };
+        lv.cache_mut(1).install(way, Line(9));
+        assert!(lv.cache_mut(3).lookup(Line(9)).is_some());
+    }
+
+    #[test]
+    fn geometry_validation() {
+        assert!(LevelConfig::new(32 << 10, 8, 4, false).validate("l1").is_ok());
+        assert!(LevelConfig::new(1000, 8, 4, false).validate("l1").is_err());
+        assert!(LevelConfig::new(3 * 64 * 8, 8, 4, false).validate("l1").is_err()); // 3 sets
+        assert!(LevelConfig::new(0, 8, 4, false).validate("l1").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! [`MergePolicy`]: the CData merge decisions as a trait, extracted from
+//! the branches that used to be inlined in the protocol engine.
+//!
+//! The policy answers three questions the engine asks on every merge
+//! event (Section 4.3):
+//! 1. does `soft_merge` defer merging to eviction (merge-on-evict), or
+//!    flush the source buffer immediately?
+//! 2. what happens to an evicted CData line — run the merge function, or
+//!    silently drop it because it is clean (dirty-merge)?
+//! 3. how many cycles does one executed merge charge the core — the
+//!    synchronous `merge` instruction drains the background engine and
+//!    pays the full latency; eviction-triggered merges are queued on the
+//!    pipelined engine and stall the core only when its queue backs up.
+//!
+//! [`PaperMergePolicy`] reproduces the paper's behaviour, parameterized
+//! by the Table 2 latencies and the two optimization switches; the trait
+//! is the seam for alternative policies (always-eager, batched, ...).
+
+use crate::sim::config::CCacheConfig;
+
+/// Disposition of an evicted CData line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeDecision {
+    /// Run the merge function and update memory.
+    Execute,
+    /// Silently drop the line (dirty-merge optimization, clean line).
+    SilentDrop,
+}
+
+/// When/what/how-long decisions for CData merges. Implementations must
+/// be `Send + Sync`: the memory system lives inside the machine mutex
+/// shared by the core threads.
+pub trait MergePolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `soft_merge` semantics: `true` marks lines mergeable and defers
+    /// the merge to eviction (merge-on-evict); `false` makes
+    /// `soft_merge` a full flush (the Fig 9 baseline).
+    fn defers_soft_merge(&self) -> bool;
+
+    /// Decide what happens to an evicted CData line with the given dirty
+    /// state.
+    fn on_evict(&self, dirty: bool) -> MergeDecision;
+
+    /// Cycles charged to the core for one executed merge. `sync` is true
+    /// for the explicit `merge` instruction, false for
+    /// eviction-triggered merges. `backlog` is the core's background
+    /// merge-engine backlog in cycles; the policy updates it.
+    fn charge(&self, sync: bool, backlog: &mut u64) -> u64;
+}
+
+/// The paper's policy (Sections 4.1 + 4.3): merge-on-evict and
+/// dirty-merge switches over the Table 2 latencies, with a pipelined
+/// background merge engine for eviction-triggered merges.
+#[derive(Clone, Copy, Debug)]
+pub struct PaperMergePolicy {
+    pub merge_on_evict: bool,
+    pub dirty_merge: bool,
+    /// Synchronous merge latency per line, LLC round trip included
+    /// (Table 2: 170).
+    pub merge_latency: u64,
+    /// Background engine occupancy per merge (LLC-port bound).
+    pub engine_interval: u64,
+    /// Pending-merge queue depth before the core stalls.
+    pub engine_queue: u64,
+    /// Cycles to hand a line to the engine (source-buffer hit latency).
+    pub source_buffer_hit_cycles: u64,
+}
+
+impl PaperMergePolicy {
+    pub fn from_config(c: &CCacheConfig) -> Self {
+        Self {
+            merge_on_evict: c.merge_on_evict,
+            dirty_merge: c.dirty_merge,
+            merge_latency: c.merge_latency,
+            engine_interval: c.merge_engine_interval,
+            engine_queue: c.merge_engine_queue,
+            source_buffer_hit_cycles: c.source_buffer_hit_cycles,
+        }
+    }
+}
+
+impl MergePolicy for PaperMergePolicy {
+    fn name(&self) -> &'static str {
+        "paper"
+    }
+
+    fn defers_soft_merge(&self) -> bool {
+        self.merge_on_evict
+    }
+
+    fn on_evict(&self, dirty: bool) -> MergeDecision {
+        if self.dirty_merge && !dirty {
+            MergeDecision::SilentDrop
+        } else {
+            MergeDecision::Execute
+        }
+    }
+
+    fn charge(&self, sync: bool, backlog: &mut u64) -> u64 {
+        if sync {
+            let drain = *backlog;
+            *backlog = 0;
+            drain + self.merge_latency
+        } else {
+            let cap = self.engine_queue * self.engine_interval;
+            *backlog += self.engine_interval;
+            if *backlog > cap {
+                let stall = *backlog - cap;
+                *backlog = cap;
+                self.source_buffer_hit_cycles + stall
+            } else {
+                self.source_buffer_hit_cycles
+            }
+        }
+    }
+}
+
+/// Build the merge policy a machine configuration describes.
+pub fn from_config(c: &CCacheConfig) -> Box<dyn MergePolicy> {
+    Box::new(PaperMergePolicy::from_config(c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> PaperMergePolicy {
+        PaperMergePolicy::from_config(&CCacheConfig::default())
+    }
+
+    #[test]
+    fn dirty_merge_drops_clean_only() {
+        let p = policy();
+        assert_eq!(p.on_evict(false), MergeDecision::SilentDrop);
+        assert_eq!(p.on_evict(true), MergeDecision::Execute);
+        let mut p2 = policy();
+        p2.dirty_merge = false;
+        assert_eq!(p2.on_evict(false), MergeDecision::Execute);
+    }
+
+    #[test]
+    fn sync_merge_drains_backlog_and_pays_full_latency() {
+        let p = policy();
+        let mut backlog = 50;
+        assert_eq!(p.charge(true, &mut backlog), 50 + p.merge_latency);
+        assert_eq!(backlog, 0);
+    }
+
+    #[test]
+    fn background_merges_stall_only_past_queue_capacity() {
+        let p = policy();
+        let cap = p.engine_queue * p.engine_interval;
+        let mut backlog = 0;
+        // fill the queue: each enqueue costs only the source-buffer hit
+        for _ in 0..p.engine_queue {
+            assert_eq!(p.charge(false, &mut backlog), p.source_buffer_hit_cycles);
+        }
+        assert_eq!(backlog, cap);
+        // one more backs the engine up: the overflow stalls the core
+        let c = p.charge(false, &mut backlog);
+        assert_eq!(c, p.source_buffer_hit_cycles + p.engine_interval);
+        assert_eq!(backlog, cap);
+    }
+
+    #[test]
+    fn soft_merge_deferral_follows_switch() {
+        let mut p = policy();
+        assert!(p.defers_soft_merge());
+        p.merge_on_evict = false;
+        assert!(!p.defers_soft_merge());
+    }
+}

@@ -1,0 +1,34 @@
+//! The composable protocol stack: hierarchy shape, timing and merge
+//! policy as *data*, not code.
+//!
+//! The memory system used to bake one fixed 3-level shape and the
+//! Table 2 latency constants into the protocol engine; this module is
+//! the decomposition that makes topology a configuration row:
+//!
+//! * [`level`] — [`LevelConfig`](level::LevelConfig) (size / ways /
+//!   latency / shared-vs-private) and the instantiated
+//!   [`Level`](level::Level) tag arrays
+//! * [`path`] — [`AccessPath`](path::AccessPath): the MESI walk over an
+//!   arbitrary stack of private levels + one shared level, with the
+//!   directory co-located at the shared level
+//! * [`timing`] — [`Timing`](timing::Timing): machine-wide latencies
+//!   (memory, interleaver quantum, lock backoff) replacing the
+//!   hard-coded Table 2 constants
+//! * [`merge_policy`] — [`MergePolicy`](merge_policy::MergePolicy): the
+//!   merge / merge-on-evict / dirty-merge decisions behind a trait, with
+//!   the paper's policy as the default implementation
+//!
+//! The CCache machinery itself (source buffer, MFRF, private updated
+//! copies, merge execution) stays in
+//! [`memsys`](crate::sim::memsys) — it is per-core engine state, not
+//! hierarchy structure. Only the innermost level holds CData.
+
+pub mod level;
+pub mod merge_policy;
+pub mod path;
+pub mod timing;
+
+pub use level::{Level, LevelConfig};
+pub use merge_policy::{MergeDecision, MergePolicy, PaperMergePolicy};
+pub use path::{AccessPath, CoherentWalk, FillReq};
+pub use timing::Timing;

@@ -1,0 +1,470 @@
+//! [`AccessPath`]: the walk of a coherent access through an arbitrary
+//! stack of private levels and one shared level, plus the structural
+//! operations (fills, evictions, invalidations, inclusive recalls) the
+//! protocol engine composes.
+//!
+//! The path owns the instantiated [`Level`]s and the MESI [`Directory`]
+//! (co-located with the shared level). It is shape-agnostic: the same
+//! walk serves the paper's 3-level machine, a 2-level embedded shape, or
+//! deeper hierarchies — the stack is data from
+//! [`MachineConfig::levels`](crate::sim::config::MachineConfig::levels).
+//!
+//! Division of labour with [`MemSystem`](crate::sim::memsys::MemSystem):
+//! the path performs every structural step of an access *except*
+//! executing CData merges — when a fill must displace a mergeable CData
+//! line, the path hands the victim line back (`Err(line)`) and the
+//! engine merges it (source buffer, MFRF and merge functions live
+//! there), then retries. Inclusion invariants maintained here:
+//! every line in private level `i` is present in level `i+1` (CData
+//! excepted — it exists only innermost), and the shared level is
+//! inclusive of all private levels.
+
+use crate::sim::addr::Line;
+use crate::sim::cache::{Cache, LineMeta, Victim};
+use crate::sim::config::MachineConfig;
+use crate::sim::directory::{CoherenceActions, Directory, DirState};
+use crate::sim::stats::Stats;
+
+use super::level::Level;
+
+/// Result of the shared portion of a coherent walk: cycles charged plus
+/// the pending innermost-level fill (absent when the access hit
+/// innermost).
+pub struct CoherentWalk {
+    pub cycles: u64,
+    pub fill: Option<FillReq>,
+}
+
+/// A pending innermost-level fill the engine must perform (it may
+/// require CData merge-evictions the path cannot execute).
+#[derive(Clone, Copy, Debug)]
+pub struct FillReq {
+    pub owned: bool,
+    pub dirty: bool,
+}
+
+pub struct AccessPath {
+    /// Innermost (L1) first; the last entry is the single shared level.
+    levels: Vec<Level>,
+    dir: Directory,
+    mem_cycles: u64,
+}
+
+impl AccessPath {
+    /// Instantiate the stack a (validated) machine config describes.
+    pub fn new(cfg: &MachineConfig) -> Self {
+        Self {
+            levels: cfg
+                .levels
+                .iter()
+                .map(|lc| Level::new(*lc, cfg.cores))
+                .collect(),
+            dir: Directory::new(),
+            mem_cycles: cfg.timing.mem_cycles,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of private levels (everything below the shared level).
+    pub fn private_depth(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    #[inline]
+    fn shared_index(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    pub fn level(&self, i: usize) -> &Level {
+        &self.levels[i]
+    }
+
+    pub fn directory(&self) -> &Directory {
+        &self.dir
+    }
+
+    /// The innermost (CData-bearing) cache of `core`.
+    #[inline]
+    pub fn innermost(&self, core: usize) -> &Cache {
+        self.levels[0].cache(core)
+    }
+
+    #[inline]
+    pub fn innermost_mut(&mut self, core: usize) -> &mut Cache {
+        self.levels[0].cache_mut(core)
+    }
+
+    // ------------------------------------------------------------------
+    // the coherent MESI walk
+    // ------------------------------------------------------------------
+
+    /// Walk a coherent access through the stack: private levels innermost
+    /// outward, then the shared level + directory. Performs all fills
+    /// except the innermost one, which is returned for the engine to
+    /// execute (it may displace CData).
+    pub fn coherent_walk(
+        &mut self,
+        core: usize,
+        line: Line,
+        write: bool,
+        stats: &mut Stats,
+    ) -> CoherentWalk {
+        let n_priv = self.private_depth();
+        let mut cycles = 0;
+
+        // ---- private levels ----
+        for lvl in 0..n_priv {
+            cycles += self.levels[lvl].cfg.hit_cycles;
+            let Some(idx) = self.levels[lvl].cache_mut(core).lookup(line) else {
+                stats.levels[lvl].misses += 1;
+                continue;
+            };
+            let meta = *self.levels[lvl].cache(core).meta(idx);
+            if lvl == 0 {
+                assert!(
+                    !meta.ccache,
+                    "coherent access to CData line {:#x} (paper forbids mixing; pad CData)",
+                    line.0
+                );
+            }
+            stats.levels[lvl].hits += 1;
+            let mut owned = meta.owned;
+            if write {
+                if !owned {
+                    cycles += self.upgrade(core, line, stats);
+                    owned = true;
+                }
+                // mark dirty/owned here and at every outer private level
+                // holding the line (inclusion bookkeeping)
+                {
+                    let m = self.levels[lvl].cache_mut(core).meta_mut(idx);
+                    m.dirty = true;
+                    m.owned = true;
+                }
+                for outer in lvl + 1..n_priv {
+                    if let Some(i2) = self.levels[outer].cache_mut(core).lookup(line) {
+                        let m2 = self.levels[outer].cache_mut(core).meta_mut(i2);
+                        m2.dirty = true;
+                        m2.owned = true;
+                    }
+                }
+            }
+            // fill the levels inside the hit level (inclusion), outermost
+            // first; innermost is the engine's job
+            for inner in (1..lvl).rev() {
+                self.fill_private(core, inner, line, owned, write, stats);
+            }
+            let fill = if lvl == 0 {
+                None
+            } else {
+                Some(FillReq {
+                    owned,
+                    dirty: write,
+                })
+            };
+            return CoherentWalk { cycles, fill };
+        }
+
+        // ---- shared level + directory ----
+        let sh = self.shared_index();
+        cycles += self.levels[sh].cfg.hit_cycles;
+        let act = if write {
+            self.dir.get_m(line, core)
+        } else {
+            self.dir.get_s(line, core)
+        };
+        // remote dirty owner: the directory must forward the request and
+        // wait for the owner's data — one extra shared-level round trip
+        if act.owner_writeback.map_or(false, |o| o != core) {
+            cycles += self.levels[sh].cfg.hit_cycles;
+        }
+        self.apply_actions(core, line, &act, stats);
+
+        if !self.fetch_shared(line, stats) {
+            cycles += self.mem_cycles;
+        }
+
+        // owned iff the directory granted exclusivity (E on first read,
+        // M on any write)
+        let owned = write
+            || matches!(
+                self.dir.entry(line).map(|e| e.state),
+                Some(DirState::Owned { .. })
+            );
+        for lvl in (1..n_priv).rev() {
+            self.fill_private(core, lvl, line, owned, write, stats);
+        }
+        CoherentWalk {
+            cycles,
+            fill: Some(FillReq {
+                owned,
+                dirty: write,
+            }),
+        }
+    }
+
+    /// S->M upgrade: directory transaction + invalidations. Returns the
+    /// cycles charged (one shared-level round trip, two when a remote
+    /// owner's data must be forwarded).
+    pub fn upgrade(&mut self, core: usize, line: Line, stats: &mut Stats) -> u64 {
+        let sh_hit = self.levels[self.shared_index()].cfg.hit_cycles;
+        let act = self.dir.get_m(line, core);
+        let mut cycles = sh_hit;
+        if act.owner_writeback.map_or(false, |o| o != core) {
+            cycles += sh_hit;
+        }
+        self.apply_actions(core, line, &act, stats);
+        cycles
+    }
+
+    /// Apply a directory transaction's side effects to the other cores'
+    /// private levels and the stats.
+    fn apply_actions(
+        &mut self,
+        me: usize,
+        line: Line,
+        act: &CoherenceActions,
+        stats: &mut Stats,
+    ) {
+        stats.directory_msgs += act.dir_msgs as u64;
+        stats.invalidations += act.invalidations as u64;
+        if let Some(owner) = act.owner_writeback {
+            if owner != me {
+                stats.writebacks += 1;
+            }
+        }
+        let n_priv = self.private_depth();
+        let mut mask = act.inv_mask;
+        while mask != 0 {
+            let c = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            if c == me {
+                continue;
+            }
+            // CData lines never match an incoming coherence message
+            // (Section 4.4): leave them untouched even if the directory
+            // has a stale registration for this core.
+            if let Some(idx) = self.levels[0].cache(c).probe(line) {
+                if !self.levels[0].cache(c).meta(idx).ccache {
+                    self.levels[0].cache_mut(c).invalidate(line);
+                }
+            }
+            for lvl in 1..n_priv {
+                self.levels[lvl].cache_mut(c).invalidate(line);
+            }
+        }
+        // a pure downgrade (GetS hitting an owner) leaves the owner's copy
+        // in place but clears its ownership
+        if act.inv_mask == 0 {
+            if let Some(owner) = act.owner_writeback {
+                if owner != me {
+                    for lvl in 0..n_priv {
+                        if let Some(idx) = self.levels[lvl].cache(owner).probe(line) {
+                            let m = self.levels[lvl].cache_mut(owner).meta_mut(idx);
+                            m.owned = false;
+                            m.dirty = false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // fills + evictions
+    // ------------------------------------------------------------------
+
+    /// Attempt to install `line` into the innermost level. `Err(victim)`
+    /// means a mergeable CData line must be merged by the engine first;
+    /// retry after merging. Panics on the w-1 deadlock (Section 4.4).
+    pub fn try_fill_innermost(
+        &mut self,
+        core: usize,
+        line: Line,
+        owned: bool,
+        dirty: bool,
+        stats: &mut Stats,
+    ) -> Result<(), Line> {
+        if self.levels[0].cache(core).probe(line).is_some() {
+            return Ok(());
+        }
+        let way = self.try_cdata_way(core, line, stats)?;
+        let m = self.levels[0].cache_mut(core).install(way, line);
+        m.owned = owned;
+        m.dirty = dirty;
+        Ok(())
+    }
+
+    /// Choose (and clear) an innermost-level way for `line`, evicting a
+    /// coherent victim if needed. `Err(victim)` = a mergeable CData line
+    /// the engine must merge first. Panics on the w-1 deadlock.
+    pub fn try_cdata_way(
+        &mut self,
+        core: usize,
+        line: Line,
+        stats: &mut Stats,
+    ) -> Result<usize, Line> {
+        match self.levels[0].cache(core).choose_victim(line) {
+            Victim::Free { way } => Ok(way),
+            Victim::Evict { way, meta } => {
+                if meta.ccache {
+                    return Err(meta.line);
+                }
+                self.evict_private(core, 0, meta, stats);
+                Ok(way)
+            }
+            Victim::Deadlock => panic!(
+                "CCache deadlock: all L1 ways in set {} hold pinned CData \
+                 (w-1 rule violated, Section 4.4); insert soft_merge/merge",
+                self.levels[0].cache(core).set_index(line)
+            ),
+        }
+    }
+
+    /// Fill `line` into private level `lvl` (1..private_depth), evicting
+    /// as needed. Only the innermost level holds CData, so victims here
+    /// are always coherent lines.
+    fn fill_private(
+        &mut self,
+        core: usize,
+        lvl: usize,
+        line: Line,
+        owned: bool,
+        dirty: bool,
+        stats: &mut Stats,
+    ) {
+        if let Some(idx) = self.levels[lvl].cache_mut(core).lookup(line) {
+            let m = self.levels[lvl].cache_mut(core).meta_mut(idx);
+            m.owned = owned;
+            m.dirty |= dirty;
+            return;
+        }
+        let way = match self.levels[lvl].cache(core).choose_victim(line) {
+            Victim::Free { way } => way,
+            Victim::Evict { way, meta } => {
+                debug_assert!(!meta.ccache, "CData never resides outside the innermost level");
+                self.evict_private(core, lvl, meta, stats);
+                way
+            }
+            Victim::Deadlock => unreachable!("only the innermost level holds CData"),
+        };
+        let m = self.levels[lvl].cache_mut(core).install(way, line);
+        m.owned = owned;
+        m.dirty = dirty;
+    }
+
+    /// Evict a coherent line from private level `lvl`: back-invalidate
+    /// every inner level (inclusion), then write back — into the next
+    /// private level, or to the directory + shared level when `lvl` is
+    /// the outermost private level.
+    fn evict_private(&mut self, core: usize, lvl: usize, meta: LineMeta, stats: &mut Stats) {
+        let mut dirty = meta.dirty;
+        for inner in 0..lvl {
+            if let Some(m) = self.levels[inner].cache_mut(core).invalidate(meta.line) {
+                dirty |= m.dirty;
+            }
+        }
+        self.levels[lvl].cache_mut(core).invalidate(meta.line);
+        if lvl + 1 == self.shared_index() {
+            // outermost private level: the directory must be told
+            let act = self.dir.put(meta.line, core, dirty);
+            stats.directory_msgs += act.dir_msgs as u64;
+            if dirty {
+                stats.writebacks += 1;
+                let sh = self.shared_index();
+                if let Some(i) = self.levels[sh].cache(0).probe(meta.line) {
+                    self.levels[sh].cache_mut(0).meta_mut(i).dirty = true;
+                }
+            }
+        } else if dirty {
+            // write back into the next private level (inclusion
+            // guarantees presence)
+            if let Some(i) = self.levels[lvl + 1].cache(core).probe(meta.line) {
+                self.levels[lvl + 1].cache_mut(core).meta_mut(i).dirty = true;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // shared level
+    // ------------------------------------------------------------------
+
+    /// Look `line` up in the shared level, installing it (with an
+    /// inclusive recall of any victim) on a miss. Returns whether it hit;
+    /// the caller charges memory latency on a miss.
+    pub fn fetch_shared(&mut self, line: Line, stats: &mut Stats) -> bool {
+        let sh = self.shared_index();
+        if self.levels[sh].cache_mut(0).lookup(line).is_some() {
+            stats.levels[sh].hits += 1;
+            true
+        } else {
+            stats.levels[sh].misses += 1;
+            stats.mem_accesses += 1;
+            self.install_shared(line, stats);
+            false
+        }
+    }
+
+    /// Install `line` into the shared level; an evicted victim triggers
+    /// an inclusive recall killing every private copy.
+    fn install_shared(&mut self, line: Line, stats: &mut Stats) {
+        let sh = self.shared_index();
+        if self.levels[sh].cache(0).probe(line).is_some() {
+            return;
+        }
+        let way = match self.levels[sh].cache(0).choose_victim(line) {
+            Victim::Free { way } => way,
+            Victim::Evict { way, meta } => {
+                let (_, act) = self.dir.recall(meta.line);
+                stats.directory_msgs += act.dir_msgs as u64;
+                stats.invalidations += act.invalidations as u64;
+                let mut dirty = meta.dirty;
+                let mut mask = act.inv_mask;
+                while mask != 0 {
+                    let c = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    for lvl in 0..sh {
+                        if let Some(m) = self.levels[lvl].cache_mut(c).invalidate(meta.line) {
+                            dirty |= m.dirty;
+                        }
+                    }
+                }
+                if dirty {
+                    stats.writebacks += 1; // shared level -> memory
+                }
+                way
+            }
+            Victim::Deadlock => unreachable!("the shared level holds no pinned CData"),
+        };
+        self.levels[sh].cache_mut(0).install(way, line);
+    }
+
+    /// Drop any coherent copies of `line` held by `core`'s private levels
+    /// (phase transition into CData, Section 4.4): the directory
+    /// registration is released as if the core had evicted the line.
+    pub fn drop_coherent(&mut self, core: usize, line: Line, stats: &mut Stats) {
+        let n_priv = self.private_depth();
+        let mut dirty = false;
+        let mut present = false;
+        for lvl in 0..n_priv {
+            if let Some(m) = self.levels[lvl].cache_mut(core).invalidate(line) {
+                dirty |= m.dirty;
+                present = true;
+            }
+        }
+        if present {
+            let act = self.dir.put(line, core, dirty);
+            stats.directory_msgs += act.dir_msgs as u64;
+            if dirty {
+                stats.writebacks += 1;
+            }
+        }
+    }
+}
+
+// Walk-level unit tests live in `rust/tests/hierarchy.rs` (the walk,
+// fills and directory hand-off are all public API); `rust/tests/{protocol,
+// mesi}.rs` cover the composed engine on multiple shapes.

@@ -1,0 +1,64 @@
+//! Machine-wide timing parameters, replacing the Table 2 constants that
+//! used to be hard-coded across the protocol engine.
+//!
+//! Per-level hit latencies live with the hierarchy description
+//! ([`LevelConfig::hit_cycles`](super::level::LevelConfig)); this struct
+//! holds everything that is not a property of one cache level. The
+//! defaults reproduce the paper's Table 2:
+//!
+//! | quantity           | Table 2 | field          |
+//! |--------------------|---------|----------------|
+//! | L1 hit             | 4 cyc   | `levels[0].hit_cycles` |
+//! | L2 hit             | 10 cyc  | `levels[1].hit_cycles` |
+//! | LLC hit            | 70 cyc  | `levels[last].hit_cycles` |
+//! | memory             | 300 cyc | [`Timing::mem_cycles`] |
+//!
+//! `quantum` and `lock_backoff` are simulator knobs (deterministic
+//! interleaver granularity and spin-retry interval), not paper
+//! constants; their defaults match the seed configuration.
+
+/// Whole-machine timing knobs (everything not per-level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Timing {
+    /// Main-memory access latency beyond the shared level (Table 2: 300).
+    pub mem_cycles: u64,
+    /// Deterministic interleave quantum in cycles: a core keeps its turn
+    /// until its clock exceeds the laggard's by this much. 0 = strict
+    /// laggard-first per operation.
+    pub quantum: u64,
+    /// Cycles charged per failed lock-acquire attempt before retrying
+    /// (spin backoff).
+    pub lock_backoff: u64,
+}
+
+impl Timing {
+    /// The paper's Table 2 memory latency with the seed's interleaver
+    /// settings.
+    pub const fn table2() -> Self {
+        Self {
+            mem_cycles: 300,
+            quantum: 256,
+            lock_backoff: 40,
+        }
+    }
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Self::table2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let t = Timing::default();
+        assert_eq!(t.mem_cycles, 300);
+        assert_eq!(t.quantum, 256);
+        assert_eq!(t.lock_backoff, 40);
+        assert_eq!(t, Timing::table2());
+    }
+}

@@ -4,41 +4,42 @@
 //! Each simulated core runs as an OS thread executing real workload code
 //! against a [`CoreCtx`] — the software-visible ISA surface (`read`,
 //! `write`, `c_read`, `c_write`, `merge`, `soft_merge`, `merge_init`,
-//! `cas`, locks, barriers, `compute`). A single mutex-protected machine
-//! state serializes cores; the *turn* always belongs to the core with the
-//! smallest cycle clock (ties to the lowest id), and a core keeps its
-//! turn until it runs `quantum` cycles ahead of the laggard. The
-//! interleaving is therefore deterministic for a fixed config and seed,
-//! while still exhibiting realistic contention (lock hand-offs,
-//! invalidation storms, merge serialization).
+//! `cas`, locks, barriers, `compute`), defined in
+//! [`core_ctx`](super::core_ctx) and re-exported here. A single
+//! mutex-protected machine state serializes cores; the *turn* always
+//! belongs to the core with the smallest cycle clock (ties to the lowest
+//! id), and a core keeps its turn until it runs `quantum` cycles ahead
+//! of the laggard. The interleaving is therefore deterministic for a
+//! fixed config and seed, while still exhibiting realistic contention
+//! (lock hand-offs, invalidation storms, merge serialization).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex, MutexGuard};
 
-use super::addr::Addr;
-use super::config::MachineConfig;
+pub use super::core_ctx::CoreCtx;
+
+use super::config::{ConfigError, MachineConfig};
 use super::memsys::MemSystem;
 use super::stats::Stats;
-use crate::merge::MergeKind;
 
-struct MachState {
-    mem: MemSystem,
-    clocks: Vec<u64>,
-    turn: usize,
-    finished: Vec<bool>,
-    waiting: Vec<bool>,
-    barrier_gen: u64,
-    aborted: bool,
+pub(crate) struct MachState {
+    pub(crate) mem: MemSystem,
+    pub(crate) clocks: Vec<u64>,
+    pub(crate) turn: usize,
+    pub(crate) finished: Vec<bool>,
+    pub(crate) waiting: Vec<bool>,
+    pub(crate) barrier_gen: u64,
+    pub(crate) aborted: bool,
     /// Cached clock bound for the current turn: the turn holder yields
     /// once its clock exceeds this (laggard clock + quantum at the time
     /// the turn was granted). Recomputed on every turn change — turns a
     /// per-op O(cores) scan into one comparison.
-    yield_at: u64,
+    pub(crate) yield_at: u64,
 }
 
 impl MachState {
     /// Grant the turn to `next` and cache its yield bound.
-    fn grant_turn(&mut self, next: usize, quantum: u64) {
+    pub(crate) fn grant_turn(&mut self, next: usize, quantum: u64) {
         self.turn = next;
         // bound = min clock among *other* eligible cores + quantum
         let mut min_other = u64::MAX;
@@ -52,7 +53,7 @@ impl MachState {
     }
 
     /// The eligible core with the smallest clock (ties to lowest id).
-    fn laggard(&self) -> Option<usize> {
+    pub(crate) fn laggard(&self) -> Option<usize> {
         let mut best: Option<usize> = None;
         for c in 0..self.clocks.len() {
             if self.finished[c] || self.waiting[c] {
@@ -73,20 +74,23 @@ pub struct Machine {
     /// One condvar per core: turn hand-offs wake exactly the next core
     /// instead of thundering every sibling (the dominant interleaver
     /// cost before this change — see EXPERIMENTS.md §Perf).
-    cvs: Vec<Condvar>,
-    quantum: u64,
-    lock_backoff: u64,
+    pub(crate) cvs: Vec<Condvar>,
+    pub(crate) quantum: u64,
+    pub(crate) lock_backoff: u64,
     cores: usize,
 }
 
 impl Machine {
-    pub fn new(cfg: MachineConfig) -> Self {
+    /// Build the machine a configuration describes; a malformed
+    /// configuration is a typed [`ConfigError`].
+    pub fn new(cfg: MachineConfig) -> Result<Self, ConfigError> {
         let cores = cfg.cores;
-        let quantum = cfg.quantum;
-        let lock_backoff = cfg.lock_backoff;
-        Self {
+        let quantum = cfg.timing.quantum;
+        let lock_backoff = cfg.timing.lock_backoff;
+        let mem = MemSystem::new(cfg)?;
+        Ok(Self {
             state: Mutex::new(MachState {
-                mem: MemSystem::new(cfg),
+                mem,
                 clocks: vec![0; cores],
                 turn: 0,
                 finished: vec![false; cores],
@@ -99,7 +103,7 @@ impl Machine {
             quantum,
             lock_backoff,
             cores,
-        }
+        })
     }
 
     pub fn cores(&self) -> usize {
@@ -134,11 +138,7 @@ impl Machine {
                 handles.push_back(scope.spawn(move || {
                     let result = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            let mut ctx = CoreCtx {
-                                machine,
-                                core,
-                                guard: None,
-                            };
+                            let mut ctx = CoreCtx::new(machine, core);
                             prog(&mut ctx);
                             ctx.finish();
                         }),
@@ -181,512 +181,20 @@ impl Machine {
     }
 
     #[inline]
-    fn notify_core(&self, core: usize) {
+    pub(crate) fn notify_core(&self, core: usize) {
         self.cvs[core].notify_one();
     }
 
-    fn notify_everyone(&self) {
+    pub(crate) fn notify_everyone(&self) {
         for cv in &self.cvs {
             cv.notify_all();
         }
     }
 
-    fn lock_state(&self) -> MutexGuard<'_, MachState> {
+    pub(crate) fn lock_state(&self) -> MutexGuard<'_, MachState> {
         match self.state.lock() {
             Ok(g) => g,
             Err(poison) => poison.into_inner(),
         }
-    }
-}
-
-/// The per-core execution context: every method is one "instruction" that
-/// advances the core's clock through the timing model.
-pub struct CoreCtx<'m> {
-    machine: &'m Machine,
-    core: usize,
-    guard: Option<MutexGuard<'m, MachState>>,
-}
-
-impl<'m> CoreCtx<'m> {
-    pub fn core_id(&self) -> usize {
-        self.core
-    }
-
-    /// Current simulated cycle count of this core.
-    pub fn cycles(&mut self) -> u64 {
-        let core = self.core;
-        self.state().clocks[core]
-    }
-
-    // ---- turn management -------------------------------------------------
-
-    /// Acquire the machine state, waiting until it is this core's turn.
-    fn state(&mut self) -> &mut MachState {
-        if self.guard.is_none() {
-            let mut g = self.machine.lock_state();
-            while !g.aborted && g.turn != self.core {
-                g = match self.machine.cvs[self.core].wait(g) {
-                    Ok(g) => g,
-                    Err(poison) => poison.into_inner(),
-                };
-            }
-            if g.aborted {
-                panic!("sibling core panicked; aborting core {}", self.core);
-            }
-            self.guard = Some(g);
-        }
-        self.guard.as_mut().unwrap()
-    }
-
-    /// After an operation: hand the turn over if we ran past the laggard.
-    fn maybe_yield(&mut self) {
-        let quantum = self.machine.quantum;
-        let core = self.core;
-        let g = match self.guard.as_mut() {
-            Some(g) => g,
-            None => return,
-        };
-        // fast path: still within the cached bound — no scan, no notify
-        if g.clocks[core] <= g.yield_at {
-            return;
-        }
-        if let Some(next) = g.laggard() {
-            if next != core && g.clocks[next] + quantum < g.clocks[core] {
-                g.grant_turn(next, quantum);
-                self.guard = None; // drop the guard
-                self.machine.notify_core(next);
-                return;
-            }
-        }
-        // we remain the laggard: refresh the bound
-        g.grant_turn(core, quantum);
-    }
-
-    /// Unconditionally pass the turn (lock spins, barriers).
-    fn yield_turn(&mut self) {
-        let core = self.core;
-        let g = match self.guard.as_mut() {
-            Some(g) => g,
-            None => return,
-        };
-        if let Some(next) = g.laggard() {
-            if next != core {
-                let q = self.machine.quantum;
-                g.grant_turn(next, q);
-                self.guard = None;
-                self.machine.notify_core(next);
-                return;
-            }
-        }
-        // we remain the laggard: keep the turn
-    }
-
-    fn finish(&mut self) {
-        let core = self.core;
-        let quantum = self.machine.quantum;
-        let g = self.state();
-        g.finished[core] = true;
-        // if every remaining active core is blocked at a barrier, this
-        // finish is what releases it
-        let all_waiting = (0..g.clocks.len()).all(|c| g.finished[c] || g.waiting[c]);
-        let any_waiting = (0..g.clocks.len()).any(|c| g.waiting[c]);
-        if all_waiting && any_waiting {
-            let maxc = (0..g.clocks.len())
-                .filter(|&c| g.waiting[c])
-                .map(|c| g.clocks[c])
-                .max()
-                .unwrap_or(0);
-            for c in 0..g.clocks.len() {
-                if g.waiting[c] {
-                    g.clocks[c] = g.clocks[c].max(maxc);
-                    g.waiting[c] = false;
-                }
-            }
-            g.barrier_gen += 1;
-            if let Some(next) = g.laggard() {
-                g.grant_turn(next, quantum);
-            }
-            self.guard = None;
-            self.machine.notify_everyone();
-            return;
-        }
-        if let Some(next) = g.laggard() {
-            g.grant_turn(next, quantum);
-        }
-        self.guard = None;
-        self.machine.notify_everyone();
-    }
-
-    // ---- timed operations -------------------------------------------------
-
-    fn charge(&mut self, cycles: u64) {
-        let core = self.core;
-        self.state().clocks[core] += cycles;
-        self.maybe_yield();
-    }
-
-    /// Non-memory work: `n` instructions at 1 cycle each (Table 2).
-    pub fn compute(&mut self, n: u64) {
-        self.charge(n);
-    }
-
-    pub fn read_u32(&mut self, addr: Addr) -> u32 {
-        let core = self.core;
-        let (v, c) = self.state().mem.read(core, addr);
-        self.charge(c);
-        v
-    }
-
-    pub fn write_u32(&mut self, addr: Addr, val: u32) {
-        let core = self.core;
-        let c = self.state().mem.write(core, addr, val);
-        self.charge(c);
-    }
-
-    pub fn read_f32(&mut self, addr: Addr) -> f32 {
-        f32::from_bits(self.read_u32(addr))
-    }
-
-    pub fn write_f32(&mut self, addr: Addr, val: f32) {
-        self.write_u32(addr, val.to_bits());
-    }
-
-    pub fn cas_u32(&mut self, addr: Addr, expected: u32, new: u32) -> bool {
-        let core = self.core;
-        let (ok, c) = self.state().mem.cas(core, addr, expected, new);
-        self.charge(c);
-        ok
-    }
-
-    pub fn fetch_or_u32(&mut self, addr: Addr, bits: u32) -> u32 {
-        let core = self.core;
-        let (old, c) = self.state().mem.fetch_or(core, addr, bits);
-        self.charge(c);
-        old
-    }
-
-    // ---- CCache ISA (Table 1) ----------------------------------------------
-
-    /// `merge_init(&fn, i)`.
-    pub fn merge_init(&mut self, slot: usize, kind: MergeKind) {
-        let core = self.core;
-        self.state().mem.merge_init(core, slot, kind);
-        self.charge(1);
-    }
-
-    /// `c_read(CData, i)`.
-    pub fn c_read_u32(&mut self, addr: Addr, ty: u8) -> u32 {
-        let core = self.core;
-        let (v, c) = self.state().mem.c_read(core, addr, ty);
-        self.charge(c);
-        v
-    }
-
-    /// `c_write(CData, v, i)`.
-    pub fn c_write_u32(&mut self, addr: Addr, val: u32, ty: u8) {
-        let core = self.core;
-        let c = self.state().mem.c_write(core, addr, val, ty);
-        self.charge(c);
-    }
-
-    pub fn c_read_f32(&mut self, addr: Addr, ty: u8) -> f32 {
-        f32::from_bits(self.c_read_u32(addr, ty))
-    }
-
-    pub fn c_write_f32(&mut self, addr: Addr, val: f32, ty: u8) {
-        self.c_write_u32(addr, val.to_bits(), ty);
-    }
-
-    /// `soft_merge` — mark CData mergeable (merge-on-evict).
-    pub fn soft_merge(&mut self) {
-        let core = self.core;
-        let c = self.state().mem.soft_merge(core);
-        self.charge(c);
-    }
-
-    /// `merge` — merge all of this core's CData now.
-    pub fn merge(&mut self) {
-        let core = self.core;
-        let c = self.state().mem.merge_all(core);
-        self.charge(c);
-    }
-
-    // ---- synchronization ----------------------------------------------------
-
-    /// Spin lock acquire: CAS loop with backoff; the turn is handed to the
-    /// laggard between attempts so the owner can make progress.
-    pub fn lock(&mut self, addr: Addr) {
-        let backoff = self.machine.lock_backoff;
-        let core = self.core;
-        loop {
-            let (ok, c) = self.state().mem.cas(core, addr, 0, 1);
-            {
-                let g = self.guard.as_mut().unwrap();
-                g.clocks[core] += c;
-                if ok {
-                    g.mem.stats.lock_acquires += 1;
-                } else {
-                    g.mem.stats.lock_retries += 1;
-                    g.clocks[core] += backoff;
-                }
-            }
-            if ok {
-                self.maybe_yield();
-                return;
-            }
-            self.yield_turn();
-        }
-    }
-
-    /// Spin lock release: coherent store of 0.
-    pub fn unlock(&mut self, addr: Addr) {
-        self.write_u32(addr, 0);
-    }
-
-    /// Merge boundary barrier (Section 3.2.1): all cores must arrive;
-    /// clocks synchronize to the latest arrival.
-    pub fn barrier(&mut self) {
-        let core = self.core;
-        let quantum = self.machine.quantum;
-        let gen = {
-            let g = self.state();
-            g.mem.stats.barriers += 1;
-            g.waiting[core] = true;
-            let gen = g.barrier_gen;
-            let all_waiting = (0..g.clocks.len()).all(|c| g.finished[c] || g.waiting[c]);
-            if all_waiting {
-                let maxc = (0..g.clocks.len())
-                    .filter(|&c| g.waiting[c])
-                    .map(|c| g.clocks[c])
-                    .max()
-                    .unwrap_or(0);
-                for c in 0..g.clocks.len() {
-                    if g.waiting[c] {
-                        g.clocks[c] = g.clocks[c].max(maxc);
-                        g.waiting[c] = false;
-                    }
-                }
-                g.barrier_gen += 1;
-                if let Some(next) = g.laggard() {
-                    g.grant_turn(next, quantum);
-                }
-                self.guard = None;
-                self.machine.notify_everyone();
-                return;
-            }
-            // others still running: hand over the turn and sleep
-            if let Some(next) = g.laggard() {
-                g.grant_turn(next, quantum);
-            } else {
-                panic!("barrier deadlock: no runnable core");
-            }
-            gen
-        };
-        let next_after = {
-            let g = self.guard.as_ref().unwrap();
-            g.turn
-        };
-        self.guard = None;
-        self.machine.notify_core(next_after);
-        let mut g = self.machine.lock_state();
-        while !g.aborted && g.barrier_gen == gen {
-            g = match self.machine.cvs[core].wait(g) {
-                Ok(g) => g,
-                Err(poison) => poison.into_inner(),
-            };
-        }
-        if g.aborted {
-            panic!("sibling core panicked during barrier");
-        }
-        drop(g);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::sim::addr::Addr;
-
-    fn machine() -> Machine {
-        Machine::new(MachineConfig::test_small())
-    }
-
-    #[test]
-    fn single_core_reads_writes() {
-        let m = Machine::new(MachineConfig::test_small().with_cores(1));
-        let a = m.setup(|mem| mem.alloc_lines(64));
-        let stats = m.run(vec![Box::new(move |ctx: &mut CoreCtx| {
-            ctx.write_u32(a, 5);
-            let v = ctx.read_u32(a);
-            assert_eq!(v, 5);
-            ctx.compute(10);
-        })]);
-        assert!(stats.total_cycles() > 10);
-    }
-
-    #[test]
-    fn two_cores_interleave_deterministically() {
-        let run_once = || {
-            let m = machine();
-            let a = m.setup(|mem| mem.alloc_lines(64));
-            let stats = m.run(vec![
-                Box::new(move |ctx: &mut CoreCtx| {
-                    for _ in 0..100 {
-                        ctx.read_u32(a);
-                        ctx.compute(3);
-                    }
-                }),
-                Box::new(move |ctx: &mut CoreCtx| {
-                    for _ in 0..100 {
-                        ctx.read_u32(a.add(64));
-                        ctx.compute(7);
-                    }
-                }),
-            ]);
-            (stats.total_cycles(), stats.l1.hits, stats.directory_msgs)
-        };
-        assert_eq!(run_once(), run_once());
-    }
-
-    #[test]
-    fn lock_serializes_increments() {
-        let m = machine();
-        let (lock, data) = m.setup(|mem| (mem.alloc_lines(64), mem.alloc_lines(64)));
-        let n = 200u32;
-        let mk = |_id: usize| -> Box<dyn FnOnce(&mut CoreCtx) + Send + '_> {
-            Box::new(move |ctx: &mut CoreCtx| {
-                for _ in 0..n {
-                    ctx.lock(lock);
-                    let v = ctx.read_u32(data);
-                    ctx.write_u32(data, v + 1);
-                    ctx.unlock(lock);
-                }
-            })
-        };
-        let stats = m.run(vec![mk(0), mk(1)]);
-        let total = m.setup(|mem| mem.peek(data));
-        assert_eq!(total, 2 * n, "lost updates under lock");
-        assert_eq!(stats.lock_acquires, 2 * n as u64);
-    }
-
-    #[test]
-    fn unsynchronized_ccache_increments_merge_correctly() {
-        let m = machine();
-        let a = m.setup(|mem| {
-            let a = mem.alloc_lines(64);
-            mem.poke(a, 1000);
-            a
-        });
-        let n = 50u32;
-        let mk = |_| -> Box<dyn FnOnce(&mut CoreCtx) + Send + '_> {
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.merge_init(0, MergeKind::AddU32);
-                for _ in 0..n {
-                    let v = ctx.c_read_u32(a, 0);
-                    ctx.c_write_u32(a, v + 1, 0);
-                }
-                ctx.merge();
-            })
-        };
-        m.run(vec![mk(0), mk(1)]);
-        let v = m.setup(|mem| mem.peek(a));
-        assert_eq!(v, 1000 + 2 * n);
-    }
-
-    #[test]
-    fn barrier_synchronizes_clocks() {
-        let m = machine();
-        let a = m.setup(|mem| mem.alloc_lines(128));
-        let stats = m.run(vec![
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.compute(10_000); // slow phase 1
-                ctx.barrier();
-                ctx.write_u32(a, ctx.core_id() as u32 + 1);
-            }),
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.compute(10); // fast phase 1
-                ctx.barrier();
-                ctx.write_u32(a.add(64), ctx.core_id() as u32 + 1);
-            }),
-        ]);
-        // both cores' final clocks must be >= the barrier sync point
-        assert!(stats.core_cycles.iter().all(|&c| c >= 10_000));
-        assert_eq!(stats.barriers, 2);
-    }
-
-    #[test]
-    fn barrier_orders_phases() {
-        // phase 1: core 0 writes; phase 2: core 1 reads the value
-        let m = machine();
-        let a = m.setup(|mem| mem.alloc_lines(64));
-        m.run(vec![
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.write_u32(a, 77);
-                ctx.barrier();
-            }),
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.barrier();
-                assert_eq!(ctx.read_u32(a), 77);
-            }),
-        ]);
-    }
-
-    #[test]
-    fn merge_boundary_pattern_makes_data_visible() {
-        // the paper's merge boundary: merge + barrier, then read
-        let m = machine();
-        let a = m.setup(|mem| mem.alloc_lines(64));
-        m.run(vec![
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.merge_init(0, MergeKind::AddU32);
-                let v = ctx.c_read_u32(a, 0);
-                ctx.c_write_u32(a, v + 5, 0);
-                ctx.merge();
-                ctx.barrier();
-            }),
-            Box::new(move |ctx: &mut CoreCtx| {
-                ctx.merge_init(0, MergeKind::AddU32);
-                let v = ctx.c_read_u32(a, 0);
-                ctx.c_write_u32(a, v + 7, 0);
-                ctx.merge();
-                ctx.barrier();
-                assert_eq!(ctx.read_u32(a), 12);
-            }),
-        ]);
-    }
-
-    #[test]
-    #[should_panic]
-    fn core_panic_propagates() {
-        let m = machine();
-        m.run(vec![
-            Box::new(|_ctx: &mut CoreCtx| panic!("boom")),
-            Box::new(|ctx: &mut CoreCtx| {
-                for _ in 0..1000 {
-                    ctx.compute(100);
-                }
-            }),
-        ]);
-    }
-
-    #[test]
-    fn quantum_zero_still_completes() {
-        let mut cfg = MachineConfig::test_small();
-        cfg.quantum = 0;
-        let m = Machine::new(cfg);
-        let a = m.setup(|mem| mem.alloc_lines(64));
-        let stats = m.run(vec![
-            Box::new(move |ctx: &mut CoreCtx| {
-                for i in 0..50 {
-                    ctx.write_u32(a, i);
-                }
-            }),
-            Box::new(move |ctx: &mut CoreCtx| {
-                for _ in 0..50 {
-                    ctx.read_u32(a);
-                }
-            }),
-        ]);
-        assert!(stats.total_cycles() > 0);
     }
 }

@@ -1,12 +1,21 @@
-//! The memory-system protocol engine: coherent MESI accesses through the
-//! three-level hierarchy, plus the CCache commutative-access path.
+//! The memory-system protocol engine: coherent MESI accesses through a
+//! configurable hierarchy, plus the CCache commutative-access path.
 //!
-//! Timing model (Table 2): an access is charged the hit latency of every
-//! level it touches (L1 4, +L2 10, +LLC 70, +memory 300); any coherence
-//! transaction (upgrade, remote fetch, RFO) charges one extra LLC round
-//! trip because the directory lives at the LLC. Merges charge the paper's
-//! flat 170 cycles per line (includes the LLC round trip). Waiting on
+//! Timing model (Table 2 defaults): an access is charged the hit latency
+//! of every level it touches (L1 4, +L2 10, +LLC 70, +memory 300); any
+//! coherence transaction (upgrade, remote fetch, RFO) charges one extra
+//! shared-level round trip because the directory lives at the shared
+//! level. Merges charge the paper's flat 170 cycles per line. Waiting on
 //! locked LLC lines is not modeled, exactly as in the paper (Section 5).
+//!
+//! Structure: the hierarchy walk, fills and recalls live in
+//! [`AccessPath`](super::hierarchy::path::AccessPath) — an arbitrary
+//! stack of private levels plus one shared level, built from
+//! [`MachineConfig::levels`]. This file keeps the CCache engine state
+//! (source buffers, MFRF, private updated copies, the background merge
+//! engine) and the merge execution, with the merge/merge-on-evict/
+//! dirty-merge decisions behind the
+//! [`MergePolicy`](super::hierarchy::merge_policy::MergePolicy) trait.
 //!
 //! Functional model: one flat `u32` memory is authoritative for coherent
 //! data (the workloads synchronize their racy accesses, so a single copy
@@ -19,9 +28,11 @@
 use std::collections::HashMap;
 
 use super::addr::{Addr, Line};
-use super::cache::{Cache, Victim};
-use super::config::MachineConfig;
-use super::directory::{CoherenceActions, Directory};
+use super::cache::Cache;
+use super::config::{ConfigError, MachineConfig};
+use super::directory::Directory;
+use super::hierarchy::merge_policy::{self, MergeDecision, MergePolicy};
+use super::hierarchy::path::AccessPath;
 use super::mfrf::Mfrf;
 use super::source_buffer::SourceBuffer;
 use super::stats::Stats;
@@ -29,15 +40,6 @@ use crate::merge::batch::MergeItem;
 use crate::merge::funcs::apply_line;
 use crate::merge::{LineData, MergeKind, LINE_WORDS};
 use crate::util::rng::Rng;
-
-/// Outcome of a CData-line merge (Fig 9 / Section 6.4 accounting).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum MergeOutcome {
-    /// Merge function executed and memory updated.
-    Merged,
-    /// Clean line silently dropped (dirty-merge optimization).
-    SilentDrop,
-}
 
 /// A recorded merge (for PJRT batch validation / deferred execution).
 #[derive(Clone, Debug)]
@@ -49,10 +51,8 @@ pub struct MergeRecord {
 
 pub struct MemSystem {
     pub cfg: MachineConfig,
-    l1: Vec<Cache>,
-    l2: Vec<Cache>,
-    llc: Cache,
-    dir: Directory,
+    /// The cache hierarchy + directory (structure); see module docs.
+    path: AccessPath,
     /// Flat functional memory (word-addressed).
     mem: Vec<u32>,
     /// Per-core CData updated copies (the L1 data array for CData lines).
@@ -62,6 +62,8 @@ pub struct MemSystem {
     /// Background merge-engine backlog per core, in cycles of queued
     /// merge work (victim-buffer model; see CCacheConfig::merge_engine_*).
     engine_backlog: Vec<u64>,
+    /// Merge timing/disposition decisions (Section 4.3) as data.
+    policy: Box<dyn MergePolicy>,
     pub stats: Stats,
     alloc_cursor: u64,
     /// Deterministic stream for approximate-merge drop decisions.
@@ -73,18 +75,14 @@ pub struct MemSystem {
 }
 
 impl MemSystem {
-    pub fn new(cfg: MachineConfig) -> Self {
-        cfg.validate().expect("invalid machine config");
+    /// Build the memory system a configuration describes; a malformed
+    /// configuration is a typed [`ConfigError`] (the execution layer
+    /// turns it into a CLI diagnostic instead of a panic).
+    pub fn new(cfg: MachineConfig) -> Result<Self, ConfigError> {
+        cfg.validate()?;
         let cores = cfg.cores;
-        Self {
-            l1: (0..cores)
-                .map(|_| Cache::new(cfg.l1.sets(), cfg.l1.ways))
-                .collect(),
-            l2: (0..cores)
-                .map(|_| Cache::new(cfg.l2.sets(), cfg.l2.ways))
-                .collect(),
-            llc: Cache::new(cfg.llc.sets(), cfg.llc.ways),
-            dir: Directory::new(),
+        Ok(Self {
+            path: AccessPath::new(&cfg),
             mem: vec![0u32; cfg.mem_bytes / 4],
             priv_data: (0..cores).map(|_| HashMap::new()).collect(),
             src_buf: (0..cores)
@@ -92,13 +90,14 @@ impl MemSystem {
                 .collect(),
             engine_backlog: vec![0; cores],
             mfrf: (0..cores).map(|_| Mfrf::new(cfg.ccache.mfrf_slots)).collect(),
-            stats: Stats::new(cores),
+            policy: merge_policy::from_config(&cfg.ccache),
+            stats: Stats::new(cores, cfg.depth()),
             alloc_cursor: 64, // keep address 0 unused
             approx_rng: Rng::new(0xA990_05ED),
             record_merges: false,
             merge_log: Vec::new(),
             cfg,
-        }
+        })
     }
 
     // ------------------------------------------------------------------
@@ -201,246 +200,28 @@ impl MemSystem {
         (old, cycles)
     }
 
-    /// The MESI walk for a coherent access.
+    /// The MESI walk for a coherent access: the path performs the walk
+    /// and all outer fills; the innermost fill loops here because it may
+    /// displace mergeable CData that only the engine can merge.
     fn coherent_access(&mut self, core: usize, line: Line, write: bool) -> u64 {
-        let mut cycles = self.cfg.l1.hit_cycles;
-
-        // ---- L1 ----
-        if let Some(idx) = self.l1[core].lookup(line) {
-            let meta = *self.l1[core].meta(idx);
-            assert!(
-                !meta.ccache,
-                "coherent access to CData line {:#x} (paper forbids mixing; pad CData)",
-                line.0
-            );
-            self.stats.l1.hits += 1;
-            if write {
-                if !meta.owned {
-                    cycles += self.upgrade(core, line);
-                }
-                let m = self.l1[core].meta_mut(idx);
-                m.dirty = true;
-                m.owned = true;
-                if let Some(i2) = self.l2[core].lookup(line) {
-                    let m2 = self.l2[core].meta_mut(i2);
-                    m2.dirty = true;
-                    m2.owned = true;
-                }
-            }
-            return cycles;
-        }
-        self.stats.l1.misses += 1;
-
-        // ---- L2 ----
-        cycles += self.cfg.l2.hit_cycles;
-        if let Some(idx) = self.l2[core].lookup(line) {
-            self.stats.l2.hits += 1;
-            let mut meta = *self.l2[core].meta(idx);
-            if write && !meta.owned {
-                cycles += self.upgrade(core, line);
-                meta.owned = true;
-            }
-            if write {
-                meta.dirty = true;
-            }
-            {
-                let m2 = self.l2[core].meta_mut(idx);
-                m2.owned = meta.owned;
-                m2.dirty = meta.dirty;
-            }
-            self.fill_l1(core, line, meta.owned, meta.dirty && write);
-            return cycles;
-        }
-        self.stats.l2.misses += 1;
-
-        // ---- LLC + directory ----
-        cycles += self.cfg.llc.hit_cycles;
-        let act = if write {
-            self.dir.get_m(line, core)
-        } else {
-            self.dir.get_s(line, core)
-        };
-        // remote dirty owner: the directory must forward the request and
-        // wait for the owner's data — one extra LLC-class round trip
-        if act.owner_writeback.map_or(false, |o| o != core) {
-            cycles += self.cfg.llc.hit_cycles;
-        }
-        self.apply_actions(core, line, &act);
-
-        if self.llc.lookup(line).is_some() {
-            self.stats.llc.hits += 1;
-        } else {
-            self.stats.llc.misses += 1;
-            self.stats.mem_accesses += 1;
-            cycles += self.cfg.mem_cycles;
-            self.install_llc(line);
-        }
-
-        // owned iff the directory granted exclusivity (E on first read,
-        // M on any write)
-        let owned = write
-            || matches!(
-                self.dir.entry(line).map(|e| e.state),
-                Some(super::directory::DirState::Owned { .. })
-            );
-        self.fill_l2(core, line, owned, write);
-        self.fill_l1(core, line, owned, write);
-        cycles
-    }
-
-    /// S->M upgrade: directory transaction + invalidations.
-    fn upgrade(&mut self, core: usize, line: Line) -> u64 {
-        let act = self.dir.get_m(line, core);
-        let mut cycles = self.cfg.llc.hit_cycles;
-        if act.owner_writeback.map_or(false, |o| o != core) {
-            cycles += self.cfg.llc.hit_cycles;
-        }
-        self.apply_actions(core, line, &act);
-        cycles
-    }
-
-    /// Apply a directory transaction's side effects to the other cores'
-    /// private caches and the stats.
-    fn apply_actions(&mut self, me: usize, line: Line, act: &CoherenceActions) {
-        self.stats.directory_msgs += act.dir_msgs as u64;
-        self.stats.invalidations += act.invalidations as u64;
-        if let Some(owner) = act.owner_writeback {
-            if owner != me {
-                self.stats.writebacks += 1;
-            }
-        }
-        let mut mask = act.inv_mask;
-        while mask != 0 {
-            let c = mask.trailing_zeros() as usize;
-            mask &= mask - 1;
-            if c == me {
-                continue;
-            }
-            // CData lines never match an incoming coherence message
-            // (Section 4.4): leave them untouched even if the directory
-            // has a stale registration for this core.
-            if let Some(idx) = self.l1[c].probe(line) {
-                if !self.l1[c].meta(idx).ccache {
-                    self.l1[c].invalidate(line);
-                }
-            }
-            self.l2[c].invalidate(line);
-        }
-        // a pure downgrade (GetS hitting an owner) leaves the owner's copy
-        // in place but clears its ownership
-        if act.inv_mask == 0 {
-            if let Some(owner) = act.owner_writeback {
-                if owner != me {
-                    for cache in [&mut self.l1[owner], &mut self.l2[owner]] {
-                        if let Some(idx) = cache.probe(line) {
-                            let m = cache.meta_mut(idx);
-                            m.owned = false;
-                            m.dirty = false;
-                        }
+        let walk = self.path.coherent_walk(core, line, write, &mut self.stats);
+        if let Some(req) = walk.fill {
+            loop {
+                match self
+                    .path
+                    .try_fill_innermost(core, line, req.owned, req.dirty, &mut self.stats)
+                {
+                    Ok(()) => break,
+                    Err(victim) => {
+                        // mergeable CData chosen under pressure: merge
+                        // first, then re-choose (cycles hidden behind the
+                        // miss being serviced)
+                        self.evict_cdata_line(core, victim, false);
                     }
                 }
             }
         }
-    }
-
-    fn fill_l1(&mut self, core: usize, line: Line, owned: bool, dirty: bool) {
-        if self.l1[core].probe(line).is_some() {
-            return;
-        }
-        let way = loop {
-            match self.l1[core].choose_victim(line) {
-                Victim::Free { way } => break way,
-                Victim::Evict { way, meta } => {
-                    if meta.ccache {
-                        // mergeable CData chosen under pressure: merge first
-                        self.evict_cdata_line(core, meta.line, false);
-                        // the way is now invalid; loop re-chooses
-                        continue;
-                    } else {
-                        if meta.dirty {
-                            // write back into L2 (inclusion guarantees presence)
-                            if let Some(i2) = self.l2[core].probe(meta.line) {
-                                self.l2[core].meta_mut(i2).dirty = true;
-                            }
-                        }
-                        self.l1[core].invalidate(meta.line);
-                        break way;
-                    }
-                }
-                Victim::Deadlock => panic!(
-                    "CCache deadlock: all L1 ways in set {} hold pinned CData \
-                     (w-1 rule violated, Section 4.4); insert soft_merge/merge",
-                    self.l1[core].set_index(line)
-                ),
-            }
-        };
-        let m = self.l1[core].install(way, line);
-        m.owned = owned;
-        m.dirty = dirty;
-    }
-
-    fn fill_l2(&mut self, core: usize, line: Line, owned: bool, dirty: bool) {
-        if let Some(idx) = self.l2[core].lookup(line) {
-            let m = self.l2[core].meta_mut(idx);
-            m.owned = owned;
-            m.dirty |= dirty;
-            return;
-        }
-        let way = match self.l2[core].choose_victim(line) {
-            Victim::Free { way } => way,
-            Victim::Evict { way, meta } => {
-                debug_assert!(!meta.ccache, "CData never resides in L2");
-                // inclusion: back-invalidate L1
-                let l1_meta = self.l1[core].invalidate(meta.line);
-                let dirty = meta.dirty || l1_meta.map_or(false, |m| m.dirty);
-                let act = self.dir.put(meta.line, core, dirty);
-                self.stats.directory_msgs += act.dir_msgs as u64;
-                if dirty {
-                    self.stats.writebacks += 1;
-                    if let Some(i) = self.llc.probe(meta.line) {
-                        self.llc.meta_mut(i).dirty = true;
-                    }
-                }
-                way
-            }
-            Victim::Deadlock => unreachable!("L2 holds no CData"),
-        };
-        let m = self.l2[core].install(way, line);
-        m.owned = owned;
-        m.dirty = dirty;
-    }
-
-    fn install_llc(&mut self, line: Line) {
-        if self.llc.probe(line).is_some() {
-            return;
-        }
-        let way = match self.llc.choose_victim(line) {
-            Victim::Free { way } => way,
-            Victim::Evict { way, meta } => {
-                // inclusive recall: kill every private copy
-                let (_, act) = self.dir.recall(meta.line);
-                self.stats.directory_msgs += act.dir_msgs as u64;
-                self.stats.invalidations += act.invalidations as u64;
-                let mut dirty = meta.dirty;
-                let mut mask = act.inv_mask;
-                while mask != 0 {
-                    let c = mask.trailing_zeros() as usize;
-                    mask &= mask - 1;
-                    if let Some(m) = self.l1[c].invalidate(meta.line) {
-                        dirty |= m.dirty;
-                    }
-                    if let Some(m) = self.l2[c].invalidate(meta.line) {
-                        dirty |= m.dirty;
-                    }
-                }
-                if dirty {
-                    self.stats.writebacks += 1; // LLC -> memory
-                }
-                way
-            }
-            Victim::Deadlock => unreachable!("LLC holds no pinned CData"),
-        };
-        self.llc.install(way, line);
+        walk.cycles
     }
 
     // ------------------------------------------------------------------
@@ -471,7 +252,7 @@ impl MemSystem {
         cycles
     }
 
-    /// Common path for c_read/c_write: hit in L1 or privatize the line.
+    /// Common path for c_read/c_write: hit innermost or privatize the line.
     fn cop_access(&mut self, core: usize, line: Line, ty: u8, write: bool) -> u64 {
         self.stats.cops += 1;
         debug_assert!(
@@ -479,51 +260,37 @@ impl MemSystem {
             "COp with uninitialized merge type {ty}"
         );
 
-        if let Some(idx) = self.l1[core].lookup(line) {
-            let m = self.l1[core].meta_mut(idx);
-            if m.ccache {
+        if let Some(idx) = self.path.innermost_mut(core).lookup(line) {
+            if self.path.innermost(core).meta(idx).ccache {
+                self.stats.ccache_l1_hits += 1;
+                let m = self.path.innermost_mut(core).meta_mut(idx);
                 // a COp to a mergeable line resets the mergeable bit (4.3)
                 m.mergeable = false;
                 if write {
                     m.dirty = true;
                 }
                 m.merge_type = ty;
-                self.stats.ccache_l1_hits += 1;
-                return self.cfg.l1.hit_cycles;
+                return self.cfg.l1().hit_cycles;
             }
             // fall through: phase transition handled below
         }
 
         // Phase transition: the line may still be held *coherently* in
-        // this core's L1/L2 from a previous phase (e.g. a reset pass
-        // before a merge boundary). Drop the coherent copy and its
+        // this core's private levels from a previous phase (e.g. a reset
+        // pass before a merge boundary). Drop the coherent copies and the
         // directory registration before privatizing — the paper requires
         // CData lines to be exclusively COp-accessed, which holds per
         // phase; across barriers the hardware analog is a flush.
-        {
-            let d1 = self.l1[core].invalidate(line).map_or(false, |m| m.dirty);
-            if let Some(m2) = self.l2[core].invalidate(line) {
-                let dirty = d1 || m2.dirty;
-                let act = self.dir.put(line, core, dirty);
-                self.stats.directory_msgs += act.dir_msgs as u64;
-                if dirty {
-                    self.stats.writebacks += 1;
-                }
-            }
-        }
+        self.path.drop_coherent(core, line, &mut self.stats);
 
         // ---- privatizing fill ----
         self.stats.ccache_fills += 1;
-        let mut cycles = self.cfg.l1.hit_cycles + self.cfg.llc.hit_cycles;
+        let mut cycles = self.cfg.l1().hit_cycles + self.cfg.llc().hit_cycles;
 
-        // fetch current shared value (LLC or memory), no coherence actions
-        if self.llc.lookup(line).is_some() {
-            self.stats.llc.hits += 1;
-        } else {
-            self.stats.llc.misses += 1;
-            self.stats.mem_accesses += 1;
-            cycles += self.cfg.mem_cycles;
-            self.install_llc(line);
+        // fetch current shared value (shared level or memory), no
+        // coherence actions
+        if !self.path.fetch_shared(line, &mut self.stats) {
+            cycles += self.cfg.timing.mem_cycles;
         }
 
         // source buffer capacity: merge the LRU entry first (Fig 9 metric)
@@ -533,38 +300,23 @@ impl MemSystem {
             cycles += self.evict_cdata_line(core, victim, false);
         }
 
-        // L1 way: may itself merge-evict a mergeable CData line
+        // innermost way: may itself merge-evict a mergeable CData line
         let way = loop {
-            match self.l1[core].choose_victim(line) {
-                Victim::Free { way } => break way,
-                Victim::Evict { way, meta } => {
-                    if meta.ccache {
-                        self.stats.src_buf_evictions += 1;
-                        cycles += self.evict_cdata_line(core, meta.line, false);
-                        continue;
-                    }
-                    if meta.dirty {
-                        if let Some(i2) = self.l2[core].probe(meta.line) {
-                            self.l2[core].meta_mut(i2).dirty = true;
-                        }
-                    }
-                    self.l1[core].invalidate(meta.line);
-                    break way;
+            match self.path.try_cdata_way(core, line, &mut self.stats) {
+                Ok(way) => break way,
+                Err(victim) => {
+                    self.stats.src_buf_evictions += 1;
+                    cycles += self.evict_cdata_line(core, victim, false);
                 }
-                Victim::Deadlock => panic!(
-                    "CCache deadlock filling CData line {:#x}: all ways pinned \
-                     (w-1 rule, Section 4.4)",
-                    line.0
-                ),
             }
         };
 
-        // copy into L1 (updated copy) and source buffer (source copy),
-        // in parallel (Section 4.1) — one latency charged
+        // copy into the innermost level (updated copy) and source buffer
+        // (source copy), in parallel (Section 4.1) — one latency charged
         let value = self.mem_line(line);
         self.priv_data[core].insert(line.0, value);
         self.src_buf[core].insert(line, value, ty);
-        let m = self.l1[core].install(way, line);
+        let m = self.path.innermost_mut(core).install(way, line);
         m.ccache = true;
         m.merge_type = ty;
         m.dirty = write;
@@ -573,9 +325,9 @@ impl MemSystem {
 
     /// `soft_merge` — mark every valid source-buffer entry's line
     /// mergeable (merge-on-evict). Without the optimization this is a
-    /// full merge (the Fig 9 baseline).
+    /// full merge (the Fig 9 baseline) — the policy decides.
     pub fn soft_merge(&mut self, core: usize) -> u64 {
-        if !self.cfg.ccache.merge_on_evict {
+        if !self.policy.defers_soft_merge() {
             let entries = self.src_buf[core].valid_entries();
             let mut cycles = 0;
             for e in entries {
@@ -584,10 +336,10 @@ impl MemSystem {
             }
             return cycles;
         }
-        let mut marked = 0;
+        let mut marked: u64 = 0;
         for e in self.src_buf[core].valid_entries() {
-            if let Some(idx) = self.l1[core].probe(e.line) {
-                self.l1[core].meta_mut(idx).mergeable = true;
+            if let Some(idx) = self.path.innermost(core).probe(e.line) {
+                self.path.innermost_mut(core).meta_mut(idx).mergeable = true;
                 marked += 1;
             }
         }
@@ -613,11 +365,11 @@ impl MemSystem {
         *b = b.saturating_sub(cycles);
     }
 
-    /// Merge one CData line and remove it from the core's L1 + source
-    /// buffer. Returns the cycles charged to the core.
+    /// Merge one CData line and remove it from the core's innermost
+    /// level + source buffer. Returns the cycles charged to the core.
     ///
-    /// `sync` selects the timing path: the explicit `merge` instruction
-    /// (Table 1) drains the engine and pays the full 170-cycle latency
+    /// `sync` selects the policy's timing path: the explicit `merge`
+    /// instruction (Table 1) drains the engine and pays the full latency
     /// per line; eviction-triggered merges (merge-on-evict, Section 4.3)
     /// are handed to the pipelined background engine — the core stalls
     /// only when the engine's queue backs up.
@@ -625,32 +377,18 @@ impl MemSystem {
         let Some(entry) = self.src_buf[core].remove(line) else {
             return 0;
         };
-        let l1_meta = self.l1[core].invalidate(line);
+        let l1_meta = self.path.innermost_mut(core).invalidate(line);
         let dirty = l1_meta.map_or(true, |m| m.dirty);
         let upd = self.priv_data[core].remove(&line.0).expect("priv copy");
 
-        // dirty-merge optimization: clean lines merge to a no-op
-        if self.cfg.ccache.dirty_merge && !dirty {
-            self.stats.silent_drops += 1;
-            return 1;
-        }
-        let cost = if sync {
-            let drain = self.engine_backlog[core];
-            self.engine_backlog[core] = 0;
-            drain + self.cfg.ccache.merge_latency
-        } else {
-            let ii = self.cfg.ccache.merge_engine_interval;
-            let cap = self.cfg.ccache.merge_engine_queue * ii;
-            let b = &mut self.engine_backlog[core];
-            *b += ii;
-            if *b > cap {
-                let stall = *b - cap;
-                *b = cap;
-                self.cfg.ccache.source_buffer_hit_cycles + stall
-            } else {
-                self.cfg.ccache.source_buffer_hit_cycles
+        match self.policy.on_evict(dirty) {
+            MergeDecision::SilentDrop => {
+                self.stats.silent_drops += 1;
+                return 1;
             }
-        };
+            MergeDecision::Execute => {}
+        }
+        let cost = self.policy.charge(sync, &mut self.engine_backlog[core]);
 
         let kind = self.mfrf[core].get(entry.merge_type);
         let mem_val = self.mem_line(line);
@@ -687,37 +425,45 @@ impl MemSystem {
     // ------------------------------------------------------------------
 
     pub fn directory(&self) -> &Directory {
-        &self.dir
+        self.path.directory()
     }
 
     pub fn source_buffer(&self, core: usize) -> &SourceBuffer {
         &self.src_buf[core]
     }
 
+    /// The innermost (CData-bearing) cache of `core`.
     pub fn l1_cache(&self, core: usize) -> &Cache {
-        &self.l1[core]
+        self.path.innermost(core)
+    }
+
+    /// The hierarchy this system was built with.
+    pub fn hierarchy(&self) -> &AccessPath {
+        &self.path
     }
 
     /// Cross-structure invariants (used by property tests):
-    /// 1. every valid source-buffer entry has a CData line in L1;
-    /// 2. every CData L1 line has a source-buffer entry and a private copy;
-    /// 3. CData lines never appear in L2;
+    /// 1. every valid source-buffer entry has a CData line innermost;
+    /// 2. every CData line has a source-buffer entry and a private copy;
+    /// 3. CData lines never appear outside the innermost level;
     /// 4. the directory's internal state is consistent.
     pub fn check_invariants(&self) -> Result<(), String> {
         for core in 0..self.cfg.cores {
             for e in self.src_buf[core].valid_entries() {
-                let idx = self.l1[core]
+                let idx = self
+                    .path
+                    .innermost(core)
                     .probe(e.line)
                     .ok_or(format!("core {core}: src-buf line {:#x} not in L1", e.line.0))?;
-                if !self.l1[core].meta(idx).ccache {
+                if !self.path.innermost(core).meta(idx).ccache {
                     return Err(format!(
                         "core {core}: src-buf line {:#x} in L1 without CCache bit",
                         e.line.0
                     ));
                 }
             }
-            for slot in self.l1[core].valid_slots() {
-                let m = self.l1[core].meta(slot);
+            for slot in self.path.innermost(core).valid_slots() {
+                let m = self.path.innermost(core).meta(slot);
                 if m.ccache {
                     if !self.src_buf[core].contains(m.line) {
                         return Err(format!(
@@ -731,277 +477,22 @@ impl MemSystem {
                             m.line.0
                         ));
                     }
-                    if self.l2[core].probe(m.line).is_some() {
-                        return Err(format!(
-                            "core {core}: CData line {:#x} leaked into L2",
-                            m.line.0
-                        ));
+                    for lvl in 1..self.path.private_depth() {
+                        if self.path.level(lvl).cache(core).probe(m.line).is_some() {
+                            return Err(format!(
+                                "core {core}: CData line {:#x} leaked into L{}",
+                                m.line.0,
+                                lvl + 1
+                            ));
+                        }
                     }
                 }
             }
         }
-        self.dir.check_invariants()
+        self.path.directory().check_invariants()
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn sys() -> MemSystem {
-        MemSystem::new(MachineConfig::test_small())
-    }
-
-    #[test]
-    fn read_miss_then_hit_latencies() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        // cold: L1(4) + L2(10) + LLC(70) + mem(300)
-        let (_, c1) = s.read(0, a);
-        assert_eq!(c1, 4 + 10 + 70 + 300);
-        // hot: L1 hit
-        let (_, c2) = s.read(0, a);
-        assert_eq!(c2, 4);
-        assert_eq!(s.stats.l1.hits, 1);
-        assert_eq!(s.stats.llc.misses, 1);
-    }
-
-    #[test]
-    fn write_read_roundtrip() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.write(0, a, 42);
-        let (v, _) = s.read(0, a);
-        assert_eq!(v, 42);
-        let (v, _) = s.read(1, a.add(0), );
-        assert_eq!(v, 42);
-    }
-
-    #[test]
-    fn write_invalidates_readers() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.read(0, a);
-        s.read(1, a);
-        let inv_before = s.stats.invalidations;
-        s.write(0, a, 7);
-        assert!(s.stats.invalidations > inv_before);
-        // core 1 must now miss in L1
-        let l1_misses = s.stats.l1.misses;
-        s.read(1, a);
-        assert_eq!(s.stats.l1.misses, l1_misses + 1);
-        s.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn silent_upgrade_on_exclusive() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.read(0, a); // granted E (only reader)
-        let msgs = s.stats.directory_msgs;
-        let c = s.write(0, a, 1); // silent E->M, L1 hit, owned
-        assert_eq!(c, 4);
-        assert_eq!(s.stats.directory_msgs, msgs);
-    }
-
-    #[test]
-    fn shared_write_pays_upgrade() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.read(0, a);
-        s.read(1, a); // both sharers now
-        let c = s.write(0, a, 1); // L1 hit + upgrade round trip
-        assert_eq!(c, 4 + 70);
-    }
-
-    #[test]
-    fn cas_swaps_and_fails_correctly() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.poke(a, 0);
-        let (ok, _) = s.cas(0, a, 0, 1);
-        assert!(ok);
-        let (ok, _) = s.cas(1, a, 0, 1);
-        assert!(!ok);
-        assert_eq!(s.peek(a), 1);
-    }
-
-    #[test]
-    fn cop_privatizes_and_merges_adds() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.poke(a, 100);
-        for core in 0..2 {
-            s.merge_init(core, 0, MergeKind::AddU32);
-        }
-        // both cores increment the same word privately
-        let (v0, _) = s.c_read(0, a, 0);
-        s.c_write(0, a, v0 + 1, 0);
-        let (v1, _) = s.c_read(1, a, 0);
-        s.c_write(1, a, v1 + 1, 0);
-        assert_eq!(v0, 100);
-        assert_eq!(v1, 100); // private copies, no interference
-        assert_eq!(s.peek(a), 100); // memory untouched before merges
-        s.merge_all(0);
-        assert_eq!(s.peek(a), 101);
-        s.merge_all(1);
-        assert_eq!(s.peek(a), 102); // serialization of both updates
-        assert_eq!(s.stats.merges, 2);
-        s.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn cop_generates_no_coherence_traffic() {
-        let mut s = sys();
-        let a = s.alloc_lines(64);
-        s.merge_init(0, 0, MergeKind::AddU32);
-        s.merge_init(1, 0, MergeKind::AddU32);
-        let msgs = s.stats.directory_msgs;
-        let invs = s.stats.invalidations;
-        for _ in 0..10 {
-            let (v, _) = s.c_read(0, a, 0);
-            s.c_write(0, a, v + 1, 0);
-            let (v, _) = s.c_read(1, a, 0);
-            s.c_write(1, a, v + 1, 0);
-        }
-        assert_eq!(s.stats.directory_msgs, msgs, "COps must not touch the directory");
-        assert_eq!(s.stats.invalidations, invs);
-    }
-
-    #[test]
-    fn source_buffer_capacity_forces_merge() {
-        let mut s = sys();
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let cap = s.cfg.ccache.source_buffer_entries;
-        let base = s.alloc_lines(64 * (cap as u64 + 1));
-        // touch cap+1 distinct lines; mark mergeable so L1 pressure is legal
-        for i in 0..=cap as u64 {
-            let addr = base.add(i * 64);
-            let (v, _) = s.c_read(0, addr, 0);
-            s.c_write(0, addr, v + 1, 0);
-            s.soft_merge(0);
-        }
-        assert!(s.stats.src_buf_evictions >= 1);
-        assert!(s.stats.merges >= 1);
-        s.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn dirty_merge_drops_clean_lines() {
-        let mut s = sys();
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let a = s.alloc_lines(64);
-        s.poke(a, 5);
-        s.c_read(0, a, 0); // read-only privatization
-        s.merge_all(0);
-        assert_eq!(s.stats.silent_drops, 1);
-        assert_eq!(s.stats.merges, 0);
-        assert_eq!(s.peek(a), 5);
-    }
-
-    #[test]
-    fn no_dirty_merge_merges_clean_lines_too() {
-        let mut cfg = MachineConfig::test_small();
-        cfg.ccache.dirty_merge = false;
-        let mut s = MemSystem::new(cfg);
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let a = s.alloc_lines(64);
-        s.c_read(0, a, 0);
-        s.merge_all(0);
-        assert_eq!(s.stats.silent_drops, 0);
-        assert_eq!(s.stats.merges, 1);
-    }
-
-    #[test]
-    fn soft_merge_without_opt_flushes() {
-        let mut cfg = MachineConfig::test_small();
-        cfg.ccache.merge_on_evict = false;
-        let mut s = MemSystem::new(cfg);
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let a = s.alloc_lines(64);
-        let (v, _) = s.c_read(0, a, 0);
-        s.c_write(0, a, v + 3, 0);
-        s.soft_merge(0);
-        assert_eq!(s.peek(a), 3);
-        assert_eq!(s.stats.src_buf_evictions, 1);
-        assert!(s.source_buffer(0).is_empty());
-    }
-
-    #[test]
-    fn soft_merge_with_opt_defers() {
-        let mut s = sys();
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let a = s.alloc_lines(64);
-        let (v, _) = s.c_read(0, a, 0);
-        s.c_write(0, a, v + 3, 0);
-        s.soft_merge(0);
-        assert_eq!(s.peek(a), 0, "merge deferred");
-        assert!(!s.source_buffer(0).is_empty());
-        // re-access resets the mergeable bit
-        let (v, _) = s.c_read(0, a, 0);
-        assert_eq!(v, 3);
-        s.merge_all(0);
-        assert_eq!(s.peek(a), 3);
-    }
-
-    #[test]
-    #[should_panic(expected = "w-1 rule")]
-    fn pinned_cdata_overflow_deadlocks() {
-        let mut cfg = MachineConfig::test_small();
-        cfg.ccache.source_buffer_entries = 64; // don't trip SB capacity first
-        let mut s = MemSystem::new(cfg);
-        s.merge_init(0, 0, MergeKind::AddU32);
-        // L1 test_small: 1KB, 4 ways, 4 sets; fill one set with 5 pinned lines
-        let sets = s.cfg.l1.sets() as u64;
-        let base = s.alloc_lines(64 * sets * 8);
-        for i in 0..5u64 {
-            let addr = Addr(base.0 + i * sets * 64); // same set
-            s.c_read(0, addr, 0); // never soft_merged -> pinned
-        }
-    }
-
-    #[test]
-    fn approx_merge_drops_some_updates() {
-        let mut cfg = MachineConfig::test_small();
-        cfg.ccache.dirty_merge = true;
-        let mut s = MemSystem::new(cfg);
-        s.merge_init(0, 0, MergeKind::ApproxAddF32 { drop_p: 0.5 });
-        let base = s.alloc_lines(64 * 64);
-        for i in 0..64u64 {
-            let a = base.add(i * 64);
-            let (v, _) = s.c_read(0, a, 0);
-            s.c_write(0, a, (f32::from_bits(v) + 1.0).to_bits(), 0);
-            s.merge_all(0);
-        }
-        assert!(s.stats.approx_drops > 5, "drops: {}", s.stats.approx_drops);
-        assert!(s.stats.approx_drops < 60);
-        // memory reflects kept updates only
-        let kept: f32 = (0..64u64).map(|i| s.peek_f32(base.add(i * 64))).sum();
-        assert_eq!(kept as u64, 64 - s.stats.approx_drops);
-    }
-
-    #[test]
-    fn merge_log_records_when_enabled() {
-        let mut s = sys();
-        s.record_merges = true;
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let a = s.alloc_lines(64);
-        let (v, _) = s.c_read(0, a, 0);
-        s.c_write(0, a, v + 1, 0);
-        s.merge_all(0);
-        assert_eq!(s.merge_log.len(), 1);
-        assert_eq!(s.merge_log[0].kind, MergeKind::AddU32);
-        assert_eq!(s.merge_log[0].item.upd[0], 1);
-    }
-
-    #[test]
-    fn alloc_tracks_footprint_and_aligns() {
-        let mut s = sys();
-        let a = s.alloc(100, 64);
-        assert_eq!(a.0 % 64, 0);
-        let b = s.alloc_lines(100);
-        assert_eq!(b.0 % 64, 0);
-        assert!(b.0 >= a.0 + 100);
-        assert_eq!(s.stats.bytes_allocated, 100 + 128);
-    }
-}
+// The protocol test suite lives in `rust/tests/protocol.rs` and
+// `rust/tests/mesi.rs`: both exercise the 3-level and 2-level shapes
+// through this public API.

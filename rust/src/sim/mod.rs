@@ -1,11 +1,12 @@
 //! Execution-driven multicore simulator with CCache extensions.
 //!
 //! This is the substrate the paper built on PIN (Section 5): a multicore
-//! with per-core private L1/L2, a shared LLC, directory-based MESI
-//! coherence, and the CCache additions of Section 4 — per-line CCache and
-//! mergeable bits, a per-core source buffer, a merge-function register
-//! file, merge-register staging, LLC line locking during merges, and the
-//! merge-on-evict / dirty-merge optimizations.
+//! with a *configurable* cache hierarchy — an arbitrary stack of private
+//! levels under one shared level with directory-based MESI coherence —
+//! and the CCache additions of Section 4: per-line CCache and mergeable
+//! bits, a per-core source buffer, a merge-function register file,
+//! merge-register staging, and the merge-on-evict / dirty-merge
+//! optimizations behind a pluggable merge policy.
 //!
 //! The simulator is *execution-driven*: workloads run on real data in a
 //! simulated flat memory while every access flows through the timing
@@ -14,23 +15,32 @@
 //! just count cycles.
 //!
 //! Module map:
-//! * [`config`] — Table 2 machine parameters + CCache knobs
+//! * [`config`] — the declarative machine description (per-level
+//!   geometry/latency, Table 2 defaults, typed [`config::ConfigError`])
+//! * [`hierarchy`] — the composable protocol stack:
+//!   [`hierarchy::level`] (one cache level as data),
+//!   [`hierarchy::path`] (the MESI walk over an arbitrary stack),
+//!   [`hierarchy::timing`] (machine-wide latencies) and
+//!   [`hierarchy::merge_policy`] (merge decisions as a trait)
 //! * [`addr`] — byte/line address helpers
 //! * [`cache`] — set-associative cache with per-line CCache metadata
-//! * [`directory`] — full-map MESI directory (LLC-inclusive)
+//! * [`directory`] — full-map MESI directory (shared-level-inclusive)
 //! * [`source_buffer`] — the per-core source-copy buffer (Section 4.1)
 //! * [`mfrf`] — merge-function register file (Section 4.2)
-//! * [`memsys`] — the coherence + CCache protocol engine
-//! * [`machine`] — cores-as-threads deterministic interleaver, the
-//!   `CoreCtx` ISA surface (`c_read`/`c_write`/`merge`/...), locks and
-//!   barriers
-//! * [`stats`] — the counters behind every figure in Section 6
+//! * [`memsys`] — the CCache engine over the hierarchy
+//! * [`machine`] — cores-as-threads deterministic interleaver
+//! * [`core_ctx`] — the `CoreCtx` ISA surface
+//!   (`c_read`/`c_write`/`merge`/...), locks and barriers
+//! * [`stats`] — the counters behind every figure in Section 6,
+//!   per-level vectors following the configured hierarchy depth
 //! * [`overhead`] — Section 4.7 area/energy analytical model
 
 pub mod addr;
 pub mod cache;
 pub mod config;
+pub mod core_ctx;
 pub mod directory;
+pub mod hierarchy;
 pub mod machine;
 pub mod memsys;
 pub mod mfrf;

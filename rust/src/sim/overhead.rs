@@ -35,7 +35,7 @@ impl OverheadModel {
     pub fn for_config(cfg: &MachineConfig) -> Self {
         let merge_type_bits = (cfg.ccache.mfrf_slots as f64).log2().ceil() as u32;
         let l1_extra_bits_per_line = 2 + merge_type_bits; // ccache + mergeable + type
-        let l1_lines = (cfg.l1.size_bytes / 64) as u64;
+        let l1_lines = (cfg.l1().size_bytes / 64) as u64;
 
         // source buffer: per entry, a 58-bit line tag + 512 data bits + valid
         let sb_entry_bits = 58 + 512 + 1;
@@ -48,7 +48,7 @@ impl OverheadModel {
         let merge_reg_bits = 3 * 512;
 
         // LLC: data + ~(tag 40b + state 8b) per line
-        let llc_lines = (cfg.llc.size_bytes / 64) as u64;
+        let llc_lines = (cfg.llc().size_bytes / 64) as u64;
         let llc_bits = llc_lines * (512 + 48);
 
         Self {

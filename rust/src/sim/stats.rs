@@ -1,5 +1,11 @@
 //! Simulation counters — one field per quantity a figure in Section 6
 //! reports, plus general cache statistics.
+//!
+//! Cache-level counters are a vector indexed like
+//! [`MachineConfig::levels`](super::config::MachineConfig::levels)
+//! (innermost first, shared level last), so they follow whatever
+//! hierarchy shape the machine was configured with. [`Stats::l1`] and
+//! [`Stats::llc`] are convenience views of the first/last entries.
 
 use std::fmt;
 
@@ -32,9 +38,9 @@ pub struct Stats {
     pub core_cycles: Vec<u64>,
 
     // -- cache hierarchy ----------------------------------------------
-    pub l1: LevelStats,
-    pub l2: LevelStats,
-    pub llc: LevelStats,
+    /// Hit/miss counters per hierarchy level, innermost first; the last
+    /// entry is the shared level.
+    pub levels: Vec<LevelStats>,
     pub mem_accesses: u64,
 
     // -- coherence (Fig 8) ---------------------------------------------
@@ -42,15 +48,15 @@ pub struct Stats {
     pub directory_msgs: u64,
     /// Invalidation messages sent to private caches.
     pub invalidations: u64,
-    /// Dirty-line writebacks L2 -> LLC and LLC -> memory.
+    /// Dirty-line writebacks between levels and to memory.
     pub writebacks: u64,
 
     // -- CCache (Fig 9, Section 6.4) ------------------------------------
     /// c_read/c_write operations executed.
     pub cops: u64,
-    /// CData hits in L1.
+    /// CData hits in the innermost level.
     pub ccache_l1_hits: u64,
-    /// CData fills (L1 miss on a COp).
+    /// CData fills (innermost miss on a COp).
     pub ccache_fills: u64,
     /// Merge-function executions (one per merged line).
     pub merges: u64,
@@ -74,11 +80,32 @@ pub struct Stats {
 }
 
 impl Stats {
-    pub fn new(cores: usize) -> Self {
+    pub fn new(cores: usize, depth: usize) -> Self {
         Self {
             core_cycles: vec![0; cores],
+            levels: vec![LevelStats::default(); depth],
             ..Default::default()
         }
+    }
+
+    /// Hierarchy depth these stats were collected on.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Counters for level `i` (zeros if the level does not exist).
+    pub fn level(&self, i: usize) -> LevelStats {
+        self.levels.get(i).copied().unwrap_or_default()
+    }
+
+    /// The innermost level's counters.
+    pub fn l1(&self) -> LevelStats {
+        self.level(0)
+    }
+
+    /// The shared (last) level's counters.
+    pub fn llc(&self) -> LevelStats {
+        self.levels.last().copied().unwrap_or_default()
     }
 
     /// The run's execution time: the slowest core's clock.
@@ -105,34 +132,28 @@ impl Stats {
     }
 
     pub fn llc_misses_per_kc(&self) -> f64 {
-        self.per_kilocycle(self.llc.misses)
+        self.per_kilocycle(self.llc().misses)
     }
 }
 
 impl fmt::Display for Stats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "cycles            {:>14}", self.total_cycles())?;
-        writeln!(
-            f,
-            "L1 h/m            {:>14}/{} ({:.1}% miss)",
-            self.l1.hits,
-            self.l1.misses,
-            self.l1.miss_rate() * 100.0
-        )?;
-        writeln!(
-            f,
-            "L2 h/m            {:>14}/{} ({:.1}% miss)",
-            self.l2.hits,
-            self.l2.misses,
-            self.l2.miss_rate() * 100.0
-        )?;
-        writeln!(
-            f,
-            "LLC h/m           {:>14}/{} ({:.1}% miss)",
-            self.llc.hits,
-            self.llc.misses,
-            self.llc.miss_rate() * 100.0
-        )?;
+        for (i, lv) in self.levels.iter().enumerate() {
+            let name = if i + 1 == self.levels.len() {
+                "LLC".to_string()
+            } else {
+                format!("L{}", i + 1)
+            };
+            writeln!(
+                f,
+                "{:<4}h/m           {:>14}/{} ({:.1}% miss)",
+                name,
+                lv.hits,
+                lv.misses,
+                lv.miss_rate() * 100.0
+            )?;
+        }
         writeln!(f, "mem accesses      {:>14}", self.mem_accesses)?;
         writeln!(f, "directory msgs    {:>14}", self.directory_msgs)?;
         writeln!(f, "invalidations     {:>14}", self.invalidations)?;
@@ -152,29 +173,43 @@ mod tests {
 
     #[test]
     fn total_cycles_is_max_core() {
-        let mut s = Stats::new(4);
+        let mut s = Stats::new(4, 3);
         s.core_cycles = vec![10, 500, 30, 2];
         assert_eq!(s.total_cycles(), 500);
     }
 
     #[test]
     fn per_kilocycle_normalizes() {
-        let mut s = Stats::new(1);
+        let mut s = Stats::new(1, 3);
         s.core_cycles = vec![10_000];
         assert_eq!(s.per_kilocycle(50), 5.0);
     }
 
     #[test]
     fn zero_cycles_no_nan() {
-        let s = Stats::new(1);
+        let s = Stats::new(1, 3);
         assert_eq!(s.per_kilocycle(10), 0.0);
-        assert_eq!(s.l1.miss_rate(), 0.0);
+        assert_eq!(s.l1().miss_rate(), 0.0);
     }
 
     #[test]
-    fn display_renders() {
-        let s = Stats::new(2);
+    fn level_views_track_shape() {
+        let mut s = Stats::new(1, 2);
+        s.levels[0].hits = 3;
+        s.levels[1].misses = 7;
+        assert_eq!(s.l1().hits, 3);
+        assert_eq!(s.llc().misses, 7);
+        assert_eq!(s.depth(), 2);
+        // out-of-range levels read as zero
+        assert_eq!(s.level(9).accesses(), 0);
+    }
+
+    #[test]
+    fn display_renders_every_level() {
+        let s = Stats::new(2, 4);
         let text = format!("{s}");
         assert!(text.contains("directory msgs"));
+        assert!(text.contains("L3"));
+        assert!(text.contains("LLC"));
     }
 }

@@ -1,0 +1,118 @@
+//! The composable hierarchy walk ([`AccessPath`]) exercised directly:
+//! per-level latency accounting, innermost-fill hand-off, and the
+//! outermost-private-level directory discipline that distinguishes the
+//! 2-level shape from the 3-level one. Engine-level behaviour is in
+//! `tests/protocol.rs` / `tests/mesi.rs`.
+
+use ccache::sim::addr::Line;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::hierarchy::path::AccessPath;
+use ccache::sim::hierarchy::{LevelConfig, Timing};
+use ccache::sim::stats::Stats;
+
+fn path(cfg: &MachineConfig) -> (AccessPath, Stats) {
+    (AccessPath::new(cfg), Stats::new(cfg.cores, cfg.depth()))
+}
+
+#[test]
+fn three_level_walk_charges_every_level() {
+    let cfg = MachineConfig::test_small();
+    let (mut p, mut stats) = path(&cfg);
+    let w = p.coherent_walk(0, Line(4), false, &mut stats);
+    assert_eq!(w.cycles, 4 + 10 + 70 + 300);
+    assert!(w.fill.is_some());
+    assert_eq!(stats.levels[0].misses, 1);
+    assert_eq!(stats.levels[1].misses, 1);
+    assert_eq!(stats.levels[2].misses, 1);
+    assert_eq!(stats.mem_accesses, 1);
+}
+
+#[test]
+fn two_level_walk_skips_the_middle() {
+    let cfg = MachineConfig::test_small_2level();
+    let (mut p, mut stats) = path(&cfg);
+    assert_eq!(p.private_depth(), 1);
+    let w = p.coherent_walk(0, Line(4), false, &mut stats);
+    assert_eq!(w.cycles, 4 + 70 + 300);
+    assert_eq!(stats.levels.len(), 2);
+    assert_eq!(stats.levels[1].misses, 1);
+}
+
+#[test]
+fn four_level_walk_charges_the_synthesized_l3() {
+    let mut cfg = MachineConfig::test_small().with_depth(4).unwrap();
+    cfg.mem_bytes = 8 << 20;
+    cfg.validate().unwrap();
+    let (mut p, mut stats) = path(&cfg);
+    assert_eq!(p.depth(), 4);
+    let l3_hit = cfg.level(2).hit_cycles;
+    let w = p.coherent_walk(0, Line(4), false, &mut stats);
+    assert_eq!(w.cycles, 4 + 10 + l3_hit + 70 + 300);
+    assert_eq!(stats.levels.len(), 4);
+    assert_eq!(stats.levels[2].misses, 1);
+}
+
+#[test]
+fn innermost_fill_completes_the_walk() {
+    let cfg = MachineConfig::test_small();
+    let (mut p, mut stats) = path(&cfg);
+    let w = p.coherent_walk(0, Line(4), false, &mut stats);
+    let req = w.fill.unwrap();
+    p.try_fill_innermost(0, Line(4), req.owned, req.dirty, &mut stats)
+        .unwrap();
+    // hot: innermost hit, no fill needed
+    let w2 = p.coherent_walk(0, Line(4), false, &mut stats);
+    assert_eq!(w2.cycles, 4);
+    assert!(w2.fill.is_none());
+    assert_eq!(stats.levels[0].hits, 1);
+}
+
+#[test]
+fn outermost_private_eviction_notifies_directory_in_2_level() {
+    // 2-level: evicting a line from L1 (the outermost private level)
+    // must issue a directory put, unlike the 3-level machine where
+    // the L2 keeps the registration alive.
+    let cfg = MachineConfig::test_small_2level();
+    let (mut p, mut stats) = path(&cfg);
+    let sets = cfg.l1().sets() as u64;
+    let ways = cfg.l1().ways as u64;
+    // fill one L1 set past capacity with same-set lines
+    for i in 0..=ways {
+        let line = Line(i * sets);
+        let w = p.coherent_walk(0, line, false, &mut stats);
+        if let Some(req) = w.fill {
+            p.try_fill_innermost(0, line, req.owned, req.dirty, &mut stats)
+                .unwrap();
+        }
+    }
+    // the first line was evicted and its registration released:
+    // the directory no longer tracks core 0 for it
+    let e = p.directory().entry(Line(0));
+    assert!(
+        e.map_or(true, |e| !e.is_sharer(0)),
+        "directory still registers the evicted line"
+    );
+}
+
+#[test]
+fn custom_level_stacks_validate_and_build() {
+    // a hand-built asymmetric stack: tiny L1, big shared level
+    let cfg = MachineConfig {
+        cores: 2,
+        levels: vec![
+            LevelConfig::new(512, 2, 2, false),
+            LevelConfig::new(32 << 10, 8, 50, true),
+        ],
+        timing: Timing {
+            mem_cycles: 150,
+            quantum: 0,
+            lock_backoff: 40,
+        },
+        ccache: Default::default(),
+        mem_bytes: 1 << 20,
+    };
+    cfg.validate().unwrap();
+    let (mut p, mut stats) = path(&cfg);
+    let w = p.coherent_walk(0, Line(4), false, &mut stats);
+    assert_eq!(w.cycles, 2 + 50 + 150);
+}

@@ -11,9 +11,9 @@ fn cfg() -> MachineConfig {
     // a small but fully-shaped machine: 4 cores, real hierarchy
     let mut cfg = MachineConfig::default();
     cfg.cores = 4;
-    cfg.l1.size_bytes = 4 << 10;
-    cfg.l2.size_bytes = 32 << 10;
-    cfg.llc.size_bytes = 256 << 10;
+    cfg.l1_mut().size_bytes = 4 << 10;
+    cfg.level_mut(1).size_bytes = 32 << 10;
+    cfg.llc_mut().size_bytes = 256 << 10;
     cfg
 }
 
@@ -39,7 +39,7 @@ fn full_shape_machine_verifies_every_benchmark_and_variant() {
     // (reduction partitioning, frontier hand-off, termination flags)
     // that a 2-core machine cannot
     for spec in ccache::exec::registry::registry() {
-        let bench = sized_workload(spec.name, 0.125, cfg().llc.size_bytes, 3);
+        let bench = sized_workload(spec.name, 0.125, cfg().llc().size_bytes, 3);
         for &v in bench.supported_variants() {
             run(&bench, v);
         }
@@ -49,7 +49,7 @@ fn full_shape_machine_verifies_every_benchmark_and_variant() {
 #[test]
 fn histogram_skew_verifies_on_full_shape_machine() {
     use ccache::exec::registry::{self, SizeSpec};
-    let size = SizeSpec::new(0.125, cfg().llc.size_bytes, 3).with_zipf(0.9);
+    let size = SizeSpec::new(0.125, cfg().llc().size_bytes, 3).with_zipf(0.9);
     let bench = registry::build("histogram", &size).unwrap();
     for v in [Variant::Fgl, Variant::CCache, Variant::Atomic] {
         run(&bench, v);
@@ -62,7 +62,7 @@ fn histogram_skew_verifies_on_full_shape_machine() {
 
 #[test]
 fn ccache_generates_far_fewer_invalidations_than_fgl() {
-    let b = sized_workload("kvstore", 0.5, cfg().llc.size_bytes, 9);
+    let b = sized_workload("kvstore", 0.5, cfg().llc().size_bytes, 9);
     let cc = run(&b, Variant::CCache);
     let fgl = run(&b, Variant::Fgl);
     assert!(
@@ -76,7 +76,7 @@ fn ccache_generates_far_fewer_invalidations_than_fgl() {
 #[test]
 fn memory_footprint_ordering_matches_table3() {
     // FGL > DUP > CCache for the KV store (Table 3: 12x / 8x / 1x)
-    let b = sized_workload("kvstore", 0.5, cfg().llc.size_bytes, 9);
+    let b = sized_workload("kvstore", 0.5, cfg().llc().size_bytes, 9);
     let fgl = run(&b, Variant::Fgl).stats.bytes_allocated;
     let dup = run(&b, Variant::Dup).stats.bytes_allocated;
     let cc = run(&b, Variant::CCache).stats.bytes_allocated;
@@ -89,7 +89,7 @@ fn memory_footprint_ordering_matches_table3() {
 #[test]
 fn merge_on_evict_reduces_kmeans_evictions_dramatically() {
     // Fig 9's key datapoint
-    let b = sized_workload("kmeans", 0.25, cfg().llc.size_bytes, 9);
+    let b = sized_workload("kmeans", 0.25, cfg().llc().size_bytes, 9);
     let with = run(&b, Variant::CCache);
     let mut no = cfg();
     no.ccache.merge_on_evict = false;
@@ -105,7 +105,7 @@ fn merge_on_evict_reduces_kmeans_evictions_dramatically() {
 #[test]
 fn dirty_merge_cuts_pagerank_merges() {
     // Section 6.4: PageRank reads much CData it never updates
-    let b = sized_workload("pagerank-uniform", 0.5, cfg().llc.size_bytes, 9);
+    let b = sized_workload("pagerank-uniform", 0.5, cfg().llc().size_bytes, 9);
     let with = run(&b, Variant::CCache);
     let mut no = cfg();
     no.ccache.dirty_merge = false;
@@ -118,10 +118,10 @@ fn dirty_merge_cuts_pagerank_merges() {
 
 #[test]
 fn deterministic_stats_across_runs() {
-    let b = sized_workload("kvstore", 0.25, cfg().llc.size_bytes, 5);
+    let b = sized_workload("kvstore", 0.25, cfg().llc().size_bytes, 5);
     let a = run(&b, Variant::CCache);
     let c = run(&b, Variant::CCache);
     assert_eq!(a.cycles(), c.cycles());
     assert_eq!(a.stats.merges, c.stats.merges);
-    assert_eq!(a.stats.llc.misses, c.stats.llc.misses);
+    assert_eq!(a.stats.llc().misses, c.stats.llc().misses);
 }

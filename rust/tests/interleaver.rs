@@ -1,0 +1,216 @@
+//! The deterministic laggard-first interleaver, exercised through the
+//! public `Machine` / `CoreCtx` API (moved out of `sim/machine.rs` when
+//! the module was split; the behaviour under test is unchanged).
+
+use ccache::merge::MergeKind;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::machine::{CoreCtx, Machine};
+
+fn machine() -> Machine {
+    Machine::new(MachineConfig::test_small()).unwrap()
+}
+
+#[test]
+fn single_core_reads_writes() {
+    let m = Machine::new(MachineConfig::test_small().with_cores(1)).unwrap();
+    let a = m.setup(|mem| mem.alloc_lines(64));
+    let stats = m.run(vec![Box::new(move |ctx: &mut CoreCtx| {
+        ctx.write_u32(a, 5);
+        let v = ctx.read_u32(a);
+        assert_eq!(v, 5);
+        ctx.compute(10);
+    })]);
+    assert!(stats.total_cycles() > 10);
+}
+
+#[test]
+fn two_cores_interleave_deterministically() {
+    let run_once = || {
+        let m = machine();
+        let a = m.setup(|mem| mem.alloc_lines(64));
+        let stats = m.run(vec![
+            Box::new(move |ctx: &mut CoreCtx| {
+                for _ in 0..100 {
+                    ctx.read_u32(a);
+                    ctx.compute(3);
+                }
+            }),
+            Box::new(move |ctx: &mut CoreCtx| {
+                for _ in 0..100 {
+                    ctx.read_u32(a.add(64));
+                    ctx.compute(7);
+                }
+            }),
+        ]);
+        (stats.total_cycles(), stats.l1().hits, stats.directory_msgs)
+    };
+    assert_eq!(run_once(), run_once());
+}
+
+#[test]
+fn lock_serializes_increments() {
+    let m = machine();
+    let (lock, data) = m.setup(|mem| (mem.alloc_lines(64), mem.alloc_lines(64)));
+    let n = 200u32;
+    let mk = |_id: usize| -> Box<dyn FnOnce(&mut CoreCtx) + Send + '_> {
+        Box::new(move |ctx: &mut CoreCtx| {
+            for _ in 0..n {
+                ctx.lock(lock);
+                let v = ctx.read_u32(data);
+                ctx.write_u32(data, v + 1);
+                ctx.unlock(lock);
+            }
+        })
+    };
+    let stats = m.run(vec![mk(0), mk(1)]);
+    let total = m.setup(|mem| mem.peek(data));
+    assert_eq!(total, 2 * n, "lost updates under lock");
+    assert_eq!(stats.lock_acquires, 2 * n as u64);
+}
+
+#[test]
+fn unsynchronized_ccache_increments_merge_correctly() {
+    let m = machine();
+    let a = m.setup(|mem| {
+        let a = mem.alloc_lines(64);
+        mem.poke(a, 1000);
+        a
+    });
+    let n = 50u32;
+    let mk = |_| -> Box<dyn FnOnce(&mut CoreCtx) + Send + '_> {
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.merge_init(0, MergeKind::AddU32);
+            for _ in 0..n {
+                let v = ctx.c_read_u32(a, 0);
+                ctx.c_write_u32(a, v + 1, 0);
+            }
+            ctx.merge();
+        })
+    };
+    m.run(vec![mk(0), mk(1)]);
+    let v = m.setup(|mem| mem.peek(a));
+    assert_eq!(v, 1000 + 2 * n);
+}
+
+#[test]
+fn barrier_synchronizes_clocks() {
+    let m = machine();
+    let a = m.setup(|mem| mem.alloc_lines(128));
+    let stats = m.run(vec![
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.compute(10_000); // slow phase 1
+            ctx.barrier();
+            ctx.write_u32(a, ctx.core_id() as u32 + 1);
+        }),
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.compute(10); // fast phase 1
+            ctx.barrier();
+            ctx.write_u32(a.add(64), ctx.core_id() as u32 + 1);
+        }),
+    ]);
+    // both cores' final clocks must be >= the barrier sync point
+    assert!(stats.core_cycles.iter().all(|&c| c >= 10_000));
+    assert_eq!(stats.barriers, 2);
+}
+
+#[test]
+fn barrier_orders_phases() {
+    // phase 1: core 0 writes; phase 2: core 1 reads the value
+    let m = machine();
+    let a = m.setup(|mem| mem.alloc_lines(64));
+    m.run(vec![
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.write_u32(a, 77);
+            ctx.barrier();
+        }),
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.barrier();
+            assert_eq!(ctx.read_u32(a), 77);
+        }),
+    ]);
+}
+
+#[test]
+fn merge_boundary_pattern_makes_data_visible() {
+    // the paper's merge boundary: merge + barrier, then read
+    let m = machine();
+    let a = m.setup(|mem| mem.alloc_lines(64));
+    m.run(vec![
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.merge_init(0, MergeKind::AddU32);
+            let v = ctx.c_read_u32(a, 0);
+            ctx.c_write_u32(a, v + 5, 0);
+            ctx.merge();
+            ctx.barrier();
+        }),
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.merge_init(0, MergeKind::AddU32);
+            let v = ctx.c_read_u32(a, 0);
+            ctx.c_write_u32(a, v + 7, 0);
+            ctx.merge();
+            ctx.barrier();
+            assert_eq!(ctx.read_u32(a), 12);
+        }),
+    ]);
+}
+
+#[test]
+#[should_panic]
+fn core_panic_propagates() {
+    let m = machine();
+    m.run(vec![
+        Box::new(|_ctx: &mut CoreCtx| panic!("boom")),
+        Box::new(|ctx: &mut CoreCtx| {
+            for _ in 0..1000 {
+                ctx.compute(100);
+            }
+        }),
+    ]);
+}
+
+#[test]
+fn quantum_zero_still_completes() {
+    let mut cfg = MachineConfig::test_small();
+    cfg.timing.quantum = 0;
+    let m = Machine::new(cfg).unwrap();
+    let a = m.setup(|mem| mem.alloc_lines(64));
+    let stats = m.run(vec![
+        Box::new(move |ctx: &mut CoreCtx| {
+            for i in 0..50 {
+                ctx.write_u32(a, i);
+            }
+        }),
+        Box::new(move |ctx: &mut CoreCtx| {
+            for _ in 0..50 {
+                ctx.read_u32(a);
+            }
+        }),
+    ]);
+    assert!(stats.total_cycles() > 0);
+}
+
+#[test]
+fn machine_runs_on_a_2_level_hierarchy() {
+    let m = Machine::new(MachineConfig::test_small_2level()).unwrap();
+    let a = m.setup(|mem| mem.alloc_lines(64));
+    let stats = m.run(vec![
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.merge_init(0, MergeKind::AddU32);
+            let v = ctx.c_read_u32(a, 0);
+            ctx.c_write_u32(a, v + 3, 0);
+            ctx.merge();
+        }),
+        Box::new(move |ctx: &mut CoreCtx| {
+            ctx.compute(5);
+        }),
+    ]);
+    assert_eq!(m.setup(|mem| mem.peek(a)), 3);
+    assert_eq!(stats.levels.len(), 2, "stats follow the hierarchy depth");
+}
+
+#[test]
+fn invalid_config_is_rejected_at_machine_construction() {
+    let mut cfg = MachineConfig::test_small();
+    cfg.llc_mut().size_bytes = 3 << 10; // 3 KiB -> non-power-of-two sets
+    assert!(Machine::new(cfg).is_err());
+}

@@ -114,7 +114,7 @@ fn property_cop_increments_serialize() {
         |&(nlines, incs)| -> PropResult {
             let mut cfg = MachineConfig::test_small();
             cfg.cores = 1;
-            let mut s = MemSystem::new(cfg);
+            let mut s = MemSystem::new(cfg).unwrap();
             s.merge_init(0, 0, MergeKind::AddU32);
             let base = s.alloc_lines(64 * nlines as u64);
             let mut rng = Rng::new(42);
@@ -226,7 +226,7 @@ fn property_memsys_invariants_random_phases() {
         |&(seed, cores)| -> PropResult {
             let mut cfg = MachineConfig::test_small();
             cfg.cores = cores;
-            let mut s = MemSystem::new(cfg);
+            let mut s = MemSystem::new(cfg).unwrap();
             for c in 0..cores {
                 s.merge_init(c, 0, MergeKind::AddU32);
             }
@@ -271,9 +271,9 @@ fn pinned_overflow_panics_with_w1_message() {
     let result = std::panic::catch_unwind(|| {
         let mut cfg = MachineConfig::test_small();
         cfg.ccache.source_buffer_entries = 64;
-        let mut s = MemSystem::new(cfg);
+        let mut s = MemSystem::new(cfg).unwrap();
         s.merge_init(0, 0, MergeKind::AddU32);
-        let sets = s.cfg.l1.sets() as u64;
+        let sets = s.cfg.l1().sets() as u64;
         let base = s.alloc_lines(64 * sets * 8);
         for i in 0..5u64 {
             // same set, never soft_merged -> pinned
@@ -292,7 +292,7 @@ fn uninitialized_merge_type_faults() {
     let result = std::panic::catch_unwind(|| {
         let mut cfg = MachineConfig::test_small();
         cfg.ccache.dirty_merge = false;
-        let mut s = MemSystem::new(cfg);
+        let mut s = MemSystem::new(cfg).unwrap();
         s.merge_init(0, 0, MergeKind::AddU32);
         let a = s.alloc_lines(64);
         // merge type 2 was never installed

@@ -3,6 +3,11 @@
 //! against its sequential golden run — replacing the per-workload copies
 //! of this loop that each benchmark used to hand-roll. Unsupported
 //! variants must surface as typed errors, never panics.
+//!
+//! The matrix runs on two distinct hierarchy shapes — the 3-level
+//! Table 2 machine and a 2-level (L1 + shared LLC) variant — so shape
+//! is exercised as a first-class configuration axis, with golden
+//! verification intact on both.
 
 use ccache::exec::registry::{self, SizeSpec};
 use ccache::exec::{ExecError, Variant};
@@ -14,6 +19,14 @@ fn cfg() -> MachineConfig {
     MachineConfig::test_small().with_cores(2)
 }
 
+/// The hierarchy shapes the matrix runs on.
+fn shapes() -> Vec<(&'static str, MachineConfig)> {
+    vec![
+        ("3-level", cfg()),
+        ("2-level", MachineConfig::test_small_2level().with_cores(2)),
+    ]
+}
+
 /// Small but non-trivial instances: 25% of a 64 KiB "LLC".
 fn size() -> SizeSpec {
     SizeSpec::new(0.25, 1 << 16, 3)
@@ -21,20 +34,32 @@ fn size() -> SizeSpec {
 
 #[test]
 fn every_registered_benchmark_verifies_on_every_supported_variant() {
-    for spec in registry::registry() {
-        let bench = spec.build(&size());
-        for &v in bench.supported_variants() {
-            let r = bench
-                .run(v, cfg())
-                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
-            assert!(
-                r.verified,
-                "{}/{} diverged from the sequential golden run",
-                spec.name,
-                v.name()
-            );
-            assert_eq!(r.variant, v);
-            assert!(r.cycles() > 0, "{}/{}: no cycles", spec.name, v.name());
+    for (shape, shape_cfg) in shapes() {
+        for spec in registry::registry() {
+            let bench = spec.build(&size());
+            for &v in bench.supported_variants() {
+                let r = bench
+                    .run(v, shape_cfg.clone())
+                    .unwrap_or_else(|e| panic!("{} [{shape}]: {e}", spec.name));
+                assert!(
+                    r.verified,
+                    "{}/{} [{shape}] diverged from the sequential golden run",
+                    spec.name,
+                    v.name()
+                );
+                assert_eq!(r.variant, v);
+                assert!(
+                    r.cycles() > 0,
+                    "{}/{} [{shape}]: no cycles",
+                    spec.name,
+                    v.name()
+                );
+                assert_eq!(
+                    r.stats.depth(),
+                    shape_cfg.depth(),
+                    "stats must follow the configured hierarchy depth"
+                );
+            }
         }
     }
 }
@@ -75,6 +100,17 @@ fn histogram_runs_all_five_variants_through_the_driver() {
     for v in ALL_VARIANTS {
         let r = bench.run(v, cfg()).unwrap();
         assert!(r.verified, "histogram/{} diverged", v.name());
+    }
+}
+
+#[test]
+fn invalid_config_surfaces_as_typed_exec_error() {
+    let bench = registry::build("kvstore", &size()).unwrap();
+    let mut bad = cfg();
+    bad.l1_mut().size_bytes = 1000; // geometry broken
+    match bench.run(Variant::CCache, bad) {
+        Err(ExecError::InvalidConfig(_)) => {}
+        other => panic!("expected InvalidConfig, got {other:?}"),
     }
 }
 

@@ -24,7 +24,7 @@ fn lcg(x: &mut u64) -> u64 {
 fn random_cop_coherent_phases_keep_invariants() {
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 1;
-    let mut s = MemSystem::new(cfg);
+    let mut s = MemSystem::new(cfg).unwrap();
     s.merge_init(0, 0, MergeKind::AddU32);
     let cdata = s.alloc_lines(64 * 2048);
     let coh = s.alloc_lines(64 * 2048);
@@ -74,7 +74,7 @@ fn multicore_cop_with_cross_core_coherent_traffic() {
     // line must never be invalidated by an incoming coherence message.
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 2;
-    let mut s = MemSystem::new(cfg);
+    let mut s = MemSystem::new(cfg).unwrap();
     s.merge_init(0, 0, MergeKind::AddU32);
     let region = s.alloc_lines(64 * 512);
     let mut x = 99u64;
@@ -117,7 +117,7 @@ fn cdata_survives_other_cores_writes_to_stale_registrations() {
     // another core RFO the line while it sits in the source buffer.
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 2;
-    let mut s = MemSystem::new(cfg);
+    let mut s = MemSystem::new(cfg).unwrap();
     s.merge_init(0, 0, MergeKind::AddU32);
     let a = s.alloc_lines(64);
     s.poke(a, 10);
