@@ -87,8 +87,12 @@ def _cmul_kernel(src_ref, upd_ref, mem_ref, out_ref):
     ur, ui = upd[:, 0::2], upd[:, 1::2]
     mr, mi = mem[:, 0::2], mem[:, 1::2]
     den = sr * sr + si * si
-    fr = (ur * sr + ui * si) / den
-    fi = (ui * sr - ur * si) / den
+    # zero source -> undefined factor: apply the identity instead of
+    # poisoning the line with NaN (mirrors rust merge/funcs.rs CmulF32)
+    zero = den == 0.0
+    safe_den = jnp.where(zero, 1.0, den)
+    fr = jnp.where(zero, 1.0, (ur * sr + ui * si) / safe_den)
+    fi = jnp.where(zero, 0.0, (ui * sr - ur * si) / safe_den)
     outr = mr * fr - mi * fi
     outi = mr * fi + mi * fr
     out_ref[...] = jnp.stack([outr, outi], axis=-1).reshape(mem.shape)

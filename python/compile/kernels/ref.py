@@ -47,10 +47,13 @@ def merge_cmul(src, upd, mem):
     sr, si = src[:, 0::2], src[:, 1::2]
     ur, ui = upd[:, 0::2], upd[:, 1::2]
     mr, mi = mem[:, 0::2], mem[:, 1::2]
-    # factor = upd / src
+    # factor = upd / src; a zero source makes it undefined -> identity
+    # (mirrors rust merge/funcs.rs CmulF32's zero-denominator guard)
     den = sr * sr + si * si
-    fr = (ur * sr + ui * si) / den
-    fi = (ui * sr - ur * si) / den
+    zero = den == 0.0
+    safe_den = jnp.where(zero, 1.0, den)
+    fr = jnp.where(zero, 1.0, (ur * sr + ui * si) / safe_den)
+    fi = jnp.where(zero, 0.0, (ui * sr - ur * si) / safe_den)
     # out = mem * factor
     outr = mr * fr - mi * fi
     outi = mr * fi + mi * fr

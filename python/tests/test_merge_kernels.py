@@ -68,6 +68,17 @@ def test_cmul_matches_ref(rng, b):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
 
 
+def test_cmul_zero_source_applies_identity(rng):
+    # regression: src = 0+0i used to divide by zero and emit NaN; both
+    # paths now apply the identity factor (matches rust CmulF32's guard)
+    src = jnp.zeros((4, LINE), dtype=jnp.float32)
+    upd, mem = rand_lines(rng, 4), rand_lines(rng, 4)
+    for fn in (mk.merge_cmul, ref.merge_cmul):
+        out = fn(src, upd, mem)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(out, mem, rtol=1e-6)
+
+
 @pytest.mark.parametrize("b", BATCHES)
 def test_bitor_matches_ref(rng, b):
     src, upd, mem = (rand_int_lines(rng, b) for _ in range(3))

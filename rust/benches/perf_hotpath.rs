@@ -7,7 +7,8 @@
 use std::time::Instant;
 
 use ccache::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
-use ccache::merge::MergeKind;
+use ccache::merge::funcs::AddU32;
+use ccache::merge::handle;
 use ccache::sim::addr::Addr;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::machine::{CoreCtx, Machine};
@@ -27,20 +28,20 @@ fn main() {
     let t0 = Instant::now();
     let mut acc = 0u64;
     for i in 0..n {
-        let (v, c) = s.read(0, Addr(a.0 + (i % 1024) * 64));
+        let (v, c) = s.read(0, Addr(a.0 + (i % 1024) * 64)).unwrap();
         acc = acc.wrapping_add(v as u64 + c);
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("memsys read (L1-hit mix):        {}", ops_per_sec(n, dt));
 
     // 2. raw memsys: COp + merge path
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let t0 = Instant::now();
     for i in 0..n / 4 {
         let addr = Addr(a.0 + (i % 1024) * 64);
-        let (v, _) = s.c_read(0, addr, 0);
-        s.c_write(0, addr, v + 1, 0);
-        s.soft_merge(0);
+        let (v, _) = s.c_read(0, addr, 0).unwrap();
+        s.c_write(0, addr, v + 1, 0).unwrap();
+        s.soft_merge(0).unwrap();
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("memsys COp update (+soft_merge): {}", ops_per_sec(n / 4 * 3, dt));
@@ -85,7 +86,7 @@ fn main() {
     let t0 = Instant::now();
     let reps = 200;
     for _ in 0..reps {
-        std::hint::black_box(NativeExecutor.execute(MergeKind::AddU32, &items));
+        std::hint::black_box(NativeExecutor.execute(&AddU32, &items));
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
@@ -96,11 +97,11 @@ fn main() {
     if ccache::runtime::artifacts::artifacts_available() {
         let mut pjrt = ccache::runtime::PjrtMergeExecutor::load_default().unwrap();
         // warm-up compile
-        pjrt.execute(MergeKind::AddU32, &items[..256]);
+        pjrt.execute(&AddU32, &items[..256]);
         let t0 = Instant::now();
         let reps = 20;
         for _ in 0..reps {
-            std::hint::black_box(pjrt.execute(MergeKind::AddU32, &items));
+            std::hint::black_box(pjrt.execute(&AddU32, &items));
         }
         let dt = t0.elapsed().as_secs_f64();
         println!(

@@ -17,7 +17,8 @@
 use ccache::coordinator::{scaled_config, sized_workload};
 use ccache::exec::Variant;
 use ccache::merge::batch::{BatchExecutor, NativeExecutor};
-use ccache::merge::MergeKind;
+use ccache::merge::funcs::AddU32;
+use ccache::merge::handle;
 use ccache::runtime;
 use ccache::sim::machine::{CoreCtx, Machine};
 use ccache::util::bench::Table;
@@ -84,7 +85,7 @@ fn main() {
     let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
         .map(|core| {
             let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                ctx.merge_init(0, MergeKind::AddU32);
+                ctx.merge_init(0, handle(AddU32));
                 let mut x = core as u64 + 1;
                 for _ in 0..20_000 {
                     x = x.wrapping_mul(6364136223846793005).wrapping_add(97);
@@ -104,10 +105,10 @@ fn main() {
     let log = machine.setup(|mem| std::mem::take(&mut mem.merge_log));
     println!("  recorded {} line merges from the CCache run", log.len());
     let items: Vec<_> = log.iter().map(|r| r.item.clone()).collect();
-    let native = NativeExecutor.execute(MergeKind::AddU32, &items);
+    let native = NativeExecutor.execute(&AddU32, &items);
     let mut pjrt =
         runtime::PjrtMergeExecutor::load_default().expect("PJRT executor");
-    let via_pjrt = pjrt.execute(MergeKind::AddU32, &items);
+    let via_pjrt = pjrt.execute(&AddU32, &items);
     assert_eq!(native.len(), via_pjrt.len());
     let mismatches = native
         .iter()

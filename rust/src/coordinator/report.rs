@@ -8,12 +8,20 @@ use crate::util::bench::Table;
 use super::sweep::SweepResult;
 
 /// Fig 6-style table: speedup of DUP and CCache relative to FGL per
-/// working-set fraction.
+/// working-set fraction. The title names the merge functions actually
+/// installed so the merge identity is visible in text reports.
 pub fn fig6_table(sweep: &SweepResult) -> Table {
-    let mut t = Table::new(
-        format!("Fig 6 — {}: speedup vs FGL", sweep.name),
-        &["ws/LLC", "FGL", "DUP", "CCACHE"],
-    );
+    let merges = sweep.merge_fns();
+    let title = if merges.is_empty() {
+        format!("Fig 6 — {}: speedup vs FGL", sweep.name)
+    } else {
+        format!(
+            "Fig 6 — {} [merge: {}]: speedup vs FGL",
+            sweep.name,
+            merges.join(", ")
+        )
+    };
+    let mut t = Table::new(title, &["ws/LLC", "FGL", "DUP", "CCACHE"]);
     for p in &sweep.points {
         let dup = p
             .speedup_vs_fgl(Variant::Dup)
@@ -101,14 +109,22 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                 .speedup_vs_fgl(r.variant)
                 .map(|s| format!("{s:.4}"))
                 .unwrap_or_else(|| "null".into());
+            let merge_fns = r
+                .merge_fns
+                .iter()
+                .map(|n| json_str(n))
+                .collect::<Vec<_>>()
+                .join(", ");
             out.push_str(&format!(
-                "    {{\"frac\": {}, \"variant\": {}, \"cycles\": {}, \
+                "    {{\"frac\": {}, \"variant\": {}, \"merge_fns\": [{}], \
+                 \"cycles\": {}, \
                  \"verified\": {}, \"merges\": {}, \"silent_drops\": {}, \
                  \"src_buf_evictions\": {}, \"llc_misses\": {}, \
                  \"directory_msgs\": {}, \"invalidations\": {}, \
                  \"speedup_vs_fgl\": {}}}",
                 p.frac,
                 json_str(r.variant.name()),
+                merge_fns,
                 r.cycles(),
                 r.verified,
                 r.stats.merges,
@@ -154,6 +170,11 @@ mod tests {
         let sweep = run_sweep("kvstore", &[Variant::Fgl, Variant::CCache], &[0.5], cfg, 1);
         let t = fig6_table(&sweep);
         assert!(t.render().contains("CCACHE"));
+        assert!(
+            t.render().contains("merge: add_u32"),
+            "merge identity missing from the text report: {}",
+            t.render()
+        );
         let t8 = fig8_table(&sweep, "LLC misses", |r| r.stats.llc_misses_per_kc());
         assert!(t8.render().contains("LLC misses"));
     }
@@ -171,6 +192,10 @@ mod tests {
         let j = sweep_json(&sweep, &cfg);
         assert!(j.contains("\"benchmark\": \"kvstore\""), "{j}");
         assert!(j.contains("\"variant\": \"ccache\""), "{j}");
+        // CCache cells name their installed merge function; FGL cells
+        // carry an empty list
+        assert!(j.contains("\"merge_fns\": [\"add_u32\"]"), "{j}");
+        assert!(j.contains("\"merge_fns\": []"), "{j}");
         assert!(j.contains("\"wall_clock_ms\""), "{j}");
         assert!(j.contains("\"levels\""), "{j}");
         assert!(j.contains("\"LLC\""), "{j}");

@@ -75,6 +75,23 @@ pub struct SweepResult {
     pub jobs: usize,
 }
 
+impl SweepResult {
+    /// Sorted, deduplicated names of the merge functions installed
+    /// across the sweep's cells (CCache cells carry them; lock/dup
+    /// cells install none) — the merge identity reports print.
+    pub fn merge_fns(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .points
+            .iter()
+            .flat_map(|p| p.results.iter())
+            .flat_map(|r| r.merge_fns.iter().cloned())
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
 /// Run `variants` of the registered benchmark `name` at each working-set
 /// fraction (serial-equivalent parallel execution, auto job count).
 /// Variants the benchmark does not support are skipped (their cells
@@ -254,6 +271,8 @@ mod tests {
             assert!(p.speedup_vs_fgl(Variant::CCache).unwrap() > 0.0);
             assert_eq!(p.speedup_vs_fgl(Variant::Fgl).unwrap(), 1.0);
         }
+        // the installed merge identity is visible on the sweep
+        assert_eq!(sweep.merge_fns(), vec!["add_u32".to_string()]);
     }
 
     #[test]

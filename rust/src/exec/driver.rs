@@ -3,9 +3,13 @@
 //!
 //! Owns the skeleton every benchmark used to hand-roll: variant
 //! gating, machine construction, memory setup, CCache merge-region
-//! registration (`merge_init` per MFRF slot), spawning one program per
-//! core, stats collection, and golden-run verification.
+//! registration (`merge_init` per MFRF slot, optionally overridden with
+//! a registry-built or user-defined merge function), spawning one
+//! program per core, stats collection, golden-run verification, and
+//! machine-fault recovery (a COp on an uninitialized MFRF slot surfaces
+//! as [`ExecError::MergeFault`], not a panic).
 
+use crate::merge::MergeHandle;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::{CoreCtx, Machine};
 
@@ -17,6 +21,18 @@ pub fn run<W: Workload>(
     workload: &W,
     variant: Variant,
     cfg: MachineConfig,
+) -> Result<RunResult, ExecError> {
+    run_with_merge(workload, variant, cfg, None)
+}
+
+/// [`run`] with the workload's merge functions optionally replaced by
+/// `merge_override` in every MFRF slot (CCache variant only; other
+/// variants never install merge functions).
+pub fn run_with_merge<W: Workload>(
+    workload: &W,
+    variant: Variant,
+    cfg: MachineConfig,
+    merge_override: Option<MergeHandle>,
 ) -> Result<RunResult, ExecError> {
     let supported = workload.supported_variants();
     if !supported.contains(&variant) {
@@ -31,7 +47,19 @@ pub fn run<W: Workload>(
     // a malformed machine config surfaces as a typed error, not a panic
     let machine = Machine::new(cfg).map_err(ExecError::from)?;
     let layout = machine.setup(|mem| workload.setup(mem, variant, cores));
-    let merge_slots = workload.merge_slots();
+    let mut merge_slots = workload.merge_slots();
+    if let Some(m) = merge_override {
+        for (_, slot_fn) in merge_slots.iter_mut() {
+            *slot_fn = m.clone();
+        }
+    }
+    // the merge identity of this run, for reports (installed only under
+    // the CCache variant; other variants merge in software, if at all)
+    let merge_fns: Vec<String> = if variant == Variant::CCache {
+        merge_slots.iter().map(|(_, f)| f.name().to_string()).collect()
+    } else {
+        Vec::new()
+    };
 
     let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
         .map(|core| {
@@ -39,8 +67,8 @@ pub fn run<W: Workload>(
             let merge_slots = merge_slots.clone();
             let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
                 if variant == Variant::CCache {
-                    for &(slot, kind) in &merge_slots {
-                        ctx.merge_init(slot, kind);
+                    for (slot, f) in merge_slots {
+                        ctx.merge_init(slot, f);
                     }
                 }
                 workload.program(ctx, core, cores, variant, &layout);
@@ -48,7 +76,21 @@ pub fn run<W: Workload>(
             f
         })
         .collect();
-    let stats = machine.run(programs);
+    let stats = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        machine.run(programs)
+    })) {
+        Ok(stats) => stats,
+        Err(payload) => {
+            // machine-fault recovery: the memory system records the
+            // typed fault before the core thread unwinds, so it is
+            // authoritative even when a sibling core's panic is the one
+            // that propagated
+            if let Some(fault) = machine.setup(|mem| mem.take_fault()) {
+                return Err(ExecError::MergeFault(fault));
+            }
+            std::panic::resume_unwind(payload);
+        }
+    };
 
     let golden = workload.golden(cores);
     let (verified, quality) =
@@ -60,5 +102,6 @@ pub fn run<W: Workload>(
         stats,
         verified,
         quality,
+        merge_fns,
     })
 }

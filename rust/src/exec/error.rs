@@ -5,6 +5,7 @@
 use std::fmt;
 
 use crate::sim::config::ConfigError;
+use crate::sim::mfrf::MergeFault;
 
 use super::Variant;
 
@@ -25,11 +26,21 @@ pub enum ExecError {
     /// malformed hierarchy, ...). Carries the simulator's typed error so
     /// the CLI prints the diagnostic and exits instead of panicking.
     InvalidConfig(ConfigError),
+    /// A core used a merge type whose MFRF slot holds no merge function
+    /// — the simulated machine faulted. Carries the typed fault so the
+    /// CLI prints the diagnostic and exits 2 instead of panicking.
+    MergeFault(MergeFault),
 }
 
 impl From<ConfigError> for ExecError {
     fn from(e: ConfigError) -> Self {
         ExecError::InvalidConfig(e)
+    }
+}
+
+impl From<MergeFault> for ExecError {
+    fn from(f: MergeFault) -> Self {
+        ExecError::MergeFault(f)
     }
 }
 
@@ -61,6 +72,7 @@ impl fmt::Display for ExecError {
                 write!(f, "unknown variant '{name}' (use {})", names.join("|"))
             }
             ExecError::InvalidConfig(e) => write!(f, "{e}"),
+            ExecError::MergeFault(fault) => write!(f, "{fault}"),
         }
     }
 }
@@ -88,6 +100,19 @@ mod tests {
             known: vec!["kvstore".into(), "histogram".into()],
         };
         assert!(e.to_string().contains("kvstore histogram"));
+    }
+
+    #[test]
+    fn merge_fault_wraps_the_machine_diagnostic() {
+        let fault = MergeFault {
+            core: 3,
+            slot: 2,
+            slots: 4,
+        };
+        let e: ExecError = fault.clone().into();
+        assert_eq!(e, ExecError::MergeFault(fault.clone()));
+        assert_eq!(e.to_string(), fault.to_string());
+        assert!(e.to_string().contains("merge_init"));
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub struct RunResult {
     /// Optional quality metric (approximate K-Means reports intra-cluster
     /// distance degradation here).
     pub quality: Option<f64>,
+    /// Stable names of the merge functions actually installed in the
+    /// MFRF for this run (CCache variant; empty otherwise) — the merge
+    /// identity reports and `sweep --json` emit.
+    pub merge_fns: Vec<String>,
 }
 
 impl RunResult {
@@ -138,6 +142,7 @@ mod tests {
             },
             verified: true,
             quality: None,
+            merge_fns: Vec::new(),
         };
         assert_eq!(speedup(&mk(200), &mk(100)), 2.0);
     }

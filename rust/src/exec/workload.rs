@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use crate::merge::MergeKind;
+use crate::merge::MergeHandle;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
@@ -40,9 +40,11 @@ pub trait Workload: Send + Sync {
     fn footprint(&self) -> u64;
 
     /// Merge functions to install in each core's MFRF under the CCache
-    /// variant: `(slot, kind)` pairs. The driver issues the
-    /// `merge_init` COps so programs never have to.
-    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
+    /// variant: `(slot, handle)` pairs. The driver issues the
+    /// `merge_init` COps so programs never have to. Any
+    /// [`MergeHandle`] works here — built-in, registry-built, or a
+    /// user-defined [`MergeFn`](crate::merge::MergeFn) impl.
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
         Vec::new()
     }
 
@@ -84,7 +86,11 @@ pub struct WorkloadHandle {
     name: String,
     variants: Vec<Variant>,
     footprint: u64,
-    runner: Box<dyn Fn(Variant, MachineConfig) -> Result<RunResult, ExecError> + Send + Sync>,
+    runner: Box<
+        dyn Fn(Variant, MachineConfig, Option<MergeHandle>) -> Result<RunResult, ExecError>
+            + Send
+            + Sync,
+    >,
 }
 
 impl WorkloadHandle {
@@ -97,7 +103,9 @@ impl WorkloadHandle {
             name,
             variants,
             footprint,
-            runner: Box::new(move |variant, cfg| super::driver::run(&*workload, variant, cfg)),
+            runner: Box::new(move |variant, cfg, merge| {
+                super::driver::run_with_merge(&*workload, variant, cfg, merge)
+            }),
         }
     }
 
@@ -119,6 +127,20 @@ impl WorkloadHandle {
     }
 
     pub fn run(&self, variant: Variant, cfg: MachineConfig) -> Result<RunResult, ExecError> {
-        (self.runner)(variant, cfg)
+        (self.runner)(variant, cfg, None)
+    }
+
+    /// Run with every MFRF slot's merge function replaced by `merge`
+    /// (the CLI's `--merge name[:param]` override and the extension
+    /// path of `examples/custom_merge.rs`). The caller vouches that the
+    /// override is compatible with the workload's update semantics —
+    /// golden verification still runs and reports divergence.
+    pub fn run_with_merge(
+        &self,
+        variant: Variant,
+        cfg: MachineConfig,
+        merge: Option<MergeHandle>,
+    ) -> Result<RunResult, ExecError> {
+        (self.runner)(variant, cfg, merge)
     }
 }

@@ -13,8 +13,13 @@
 //!   as data), and the paper's CCache hardware extensions
 //!   (CCache/mergeable bits, source buffer, MFRF, merge registers,
 //!   merge-on-evict and dirty-merge optimizations).
-//! * [`merge`] — the software-defined merge-function library (add,
-//!   saturating add, complex multiply, bitwise OR, min/max, approximate).
+//! * [`merge`] — the **open** software-defined merge-function API: the
+//!   [`merge::MergeFn`] trait, the name→constructor
+//!   [`merge::MergeRegistry`], the nine paper built-ins
+//!   ([`merge::funcs`]: add, saturating add, complex multiply, bitwise
+//!   OR, min/max, approximate) and extension functions
+//!   ([`merge::ext`]: XOR, log-sum-exp) registered through the same
+//!   public API any user function uses.
 //! * [`workloads`] — the benchmark suite (key-value store, K-Means,
 //!   PageRank, BFS, histogram) plus the graph substrate and generators;
 //!   each benchmark is one [`exec::Workload`] trait impl.
@@ -50,7 +55,9 @@ pub mod sim;
 pub mod util;
 pub mod workloads;
 
+pub use merge::{MergeFn, MergeHandle, MergeRegistry};
 pub use sim::config::{CCacheConfig, ConfigError, MachineConfig};
 pub use sim::hierarchy::{LevelConfig, MergePolicy, Timing};
 pub use sim::machine::Machine;
+pub use sim::mfrf::MergeFault;
 pub use sim::stats::Stats;

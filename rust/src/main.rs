@@ -8,22 +8,31 @@
 //!   list     — enumerate registered benchmarks and their variants
 //!
 //! Benchmarks resolve through the workload registry
-//! (`exec::registry`); there is no per-benchmark dispatch here.
+//! (`exec::registry`); merge functions resolve through the open merge
+//! registry (`merge::registry`): `--list-merges` enumerates what is
+//! installed, and `--merge name[:param]` overrides the merge function a
+//! `run` installs in every MFRF slot (the caller vouches the override
+//! matches the workload's update semantics — golden verification still
+//! runs). There is no per-benchmark or per-merge dispatch here.
 //! The machine is configurable: `--levels` picks the hierarchy depth
 //! (2 = L1+LLC, 3 = the Table 2 shape, 4 = adds an L3) and
-//! `--llc-kb`/`--l2-kb` resize levels; an illegal geometry prints a
-//! diagnostic and exits 2 instead of panicking.
+//! `--llc-kb`/`--l2-kb` resize levels; an illegal geometry — or a merge
+//! fault raised by the simulated machine — prints a diagnostic and
+//! exits 2 instead of panicking.
 //!
 //! Examples:
 //!   ccache run --bench kvstore --variant ccache
+//!   ccache run --bench kvstore --variant ccache --merge sat_add_u32:100
 //!   ccache run --bench histogram --variant ccache --zipf 0.9
 //!   ccache run --bench kvstore --variant ccache --levels 2 --llc-kb 512
 //!   ccache sweep --bench pagerank-rmat --jobs 8 --json pagerank_sweep.json
+//!   ccache --list-merges
 //!   ccache runtime
 
 use ccache::coordinator::{report, run_sweep_with, scaled_config, SweepOptions, WS_FRACTIONS};
 use ccache::exec::registry::{self, SizeSpec};
 use ccache::exec::{ExecError, Variant, WorkloadSpec};
+use ccache::merge;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::overhead::OverheadModel;
 use ccache::util::cli::Args;
@@ -65,11 +74,26 @@ fn main() {
         .opt("l2-kb", "0", "override L2 size in KiB (0 = default; needs --levels >= 3)")
         .opt("jobs", "0", "sweep: parallel worker threads (0 = all host cores)")
         .opt("json", "", "sweep: also write machine-readable results to this path")
+        .opt("merge", "", "override the installed merge function: name[:param]")
+        .flag("list-merges", "list registered merge functions and exit")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
         .flag("no-dirty-merge", "disable the dirty-merge optimization")
         .flag("verbose", "print full stats")
         .parse();
+
+    if args.has("list-merges") {
+        println!("merge functions (name — idempotent — summary):");
+        for spec in merge::default_registry().iter() {
+            let idem = spec
+                .build(None)
+                .map(|f| if f.idempotent() { "yes" } else { "no " })
+                .unwrap_or("?  ");
+            println!("  {:<18} {idem}  {}", spec.name, spec.summary);
+        }
+        println!("(select with --merge name[:param]; extend via merge::MergeRegistry)");
+        return;
+    }
 
     let cmd = args
         .positional()
@@ -125,6 +149,23 @@ fn main() {
                 Err(e) => fail(e),
             };
             check_zipf(spec, zipf_theta);
+            let merge_override = match args.get("merge").as_str() {
+                "" => None,
+                spec_str => {
+                    if variant != Variant::CCache {
+                        // only the CCache variant installs merge functions;
+                        // silently ignoring the override would misreport
+                        fail(format!(
+                            "--merge only applies to the ccache variant (got '{}')",
+                            variant.name()
+                        ));
+                    }
+                    match merge::default_registry().build(spec_str) {
+                        Ok(f) => Some(f),
+                        Err(e) => fail(e), // unknown merge / bad param -> exit 2
+                    }
+                }
+            };
             let size =
                 SizeSpec::new(args.get_f64("frac"), cfg.llc().size_bytes, args.get_u64("seed"))
                     .with_zipf(zipf_theta);
@@ -135,16 +176,22 @@ fn main() {
                 variant.name(),
                 cfg.describe()
             );
-            let r = match bench.run(variant, cfg.clone()) {
+            let r = match bench.run_with_merge(variant, cfg.clone(), merge_override) {
                 Ok(r) => r,
-                Err(e) => fail(e), // unsupported variant / invalid config -> exit 2
+                // unsupported variant / invalid config / merge fault -> exit 2
+                Err(e) => fail(e),
             };
             println!(
-                "{}/{}: {} cycles, verified={}{}",
+                "{}/{}: {} cycles, verified={}{}{}",
                 r.benchmark,
                 r.variant.name(),
                 r.cycles(),
                 r.verified,
+                if r.merge_fns.is_empty() {
+                    String::new()
+                } else {
+                    format!(", merges=[{}]", r.merge_fns.join(", "))
+                },
                 r.quality
                     .map(|q| format!(", quality degradation {:.1}%", q * 100.0))
                     .unwrap_or_default()
@@ -162,6 +209,9 @@ fn main() {
                 Err(e) => fail(e),
             };
             check_zipf(spec, zipf_theta);
+            if !args.get("merge").is_empty() {
+                fail("--merge applies to `run` only (sweeps install each workload's own merges)");
+            }
             if let Err(e) = cfg.validate() {
                 fail(e);
             }

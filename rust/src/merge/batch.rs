@@ -6,9 +6,13 @@
 //! the native loop (here) and the PJRT/Pallas path
 //! (`runtime::merge_exec::PjrtMergeExecutor`). They must agree —
 //! integration tests cross-check them.
+//!
+//! Executors take the merge function as a `&dyn` [`MergeFn`], so batches
+//! of user-registered functions run through the same interface as the
+//! built-ins; functions without an AOT [`BatchKernel`](super::BatchKernel)
+//! execute natively on either path.
 
-use super::funcs::apply_line;
-use super::{LineData, MergeKind};
+use super::{LineData, MergeFn};
 
 /// One pending line merge.
 #[derive(Clone, Debug)]
@@ -23,21 +27,21 @@ pub struct MergeItem {
 /// Executes a homogeneous batch of line merges, returning the new memory
 /// values in order.
 pub trait BatchExecutor {
-    fn execute(&mut self, kind: MergeKind, items: &[MergeItem]) -> Vec<LineData>;
+    fn execute(&mut self, f: &dyn MergeFn, items: &[MergeItem]) -> Vec<LineData>;
 
     /// Executor label for reports.
     fn name(&self) -> &'static str;
 }
 
-/// Reference executor: native per-line loop.
+/// Reference executor: native per-line loop over [`MergeFn::apply`].
 #[derive(Default)]
 pub struct NativeExecutor;
 
 impl BatchExecutor for NativeExecutor {
-    fn execute(&mut self, kind: MergeKind, items: &[MergeItem]) -> Vec<LineData> {
+    fn execute(&mut self, f: &dyn MergeFn, items: &[MergeItem]) -> Vec<LineData> {
         items
             .iter()
-            .map(|it| apply_line(kind, &it.src, &it.upd, &it.mem, it.drop_update))
+            .map(|it| f.apply(&it.src, &it.upd, &it.mem, it.drop_update))
             .collect()
     }
 
@@ -49,11 +53,11 @@ impl BatchExecutor for NativeExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::merge::funcs::line_from_f32;
+    use crate::merge::funcs::{line_from_f32, AddU32, ApproxAddF32};
     use crate::merge::LINE_WORDS;
 
     #[test]
-    fn native_executor_matches_apply_line() {
+    fn native_executor_matches_apply() {
         let items: Vec<MergeItem> = (0..5)
             .map(|i| MergeItem {
                 src: [i as u32; LINE_WORDS],
@@ -62,7 +66,7 @@ mod tests {
                 drop_update: false,
             })
             .collect();
-        let out = NativeExecutor.execute(MergeKind::AddU32, &items);
+        let out = NativeExecutor.execute(&AddU32, &items);
         for (i, line) in out.iter().enumerate() {
             assert_eq!(line[0], 103, "item {i}");
         }
@@ -70,7 +74,7 @@ mod tests {
 
     #[test]
     fn empty_batch_is_fine() {
-        assert!(NativeExecutor.execute(MergeKind::AddU32, &[]).is_empty());
+        assert!(NativeExecutor.execute(&AddU32, &[]).is_empty());
     }
 
     #[test]
@@ -81,10 +85,7 @@ mod tests {
             mem: line_from_f32(&[1.0; LINE_WORDS]),
             drop_update: drop,
         };
-        let out = NativeExecutor.execute(
-            MergeKind::ApproxAddF32 { drop_p: 0.5 },
-            &[mk(false), mk(true)],
-        );
+        let out = NativeExecutor.execute(&ApproxAddF32 { drop_p: 0.5 }, &[mk(false), mk(true)]);
         assert_eq!(f32::from_bits(out[0][0]), 3.0);
         assert_eq!(f32::from_bits(out[1][0]), 1.0);
     }

@@ -1,0 +1,139 @@
+//! Extension merge functions beyond the paper's set, registered *only*
+//! through the public [`MergeRegistry`](super::MergeRegistry) API — no
+//! match arm anywhere in the crate names these types, which is the
+//! openness property the redesign exists to provide (Sections 3.2/4.5:
+//! software merge functions make the acceleration broadly applicable).
+//!
+//! Neither function has an AOT batch kernel; the PJRT batch executor
+//! transparently falls back to the native [`MergeFn::apply`] loop.
+
+use super::registry::MergeRegistry;
+use super::{bits_f32, f32_bits, handle, LineData, MergeFn, MergeOperand, LINE_WORDS};
+use crate::util::rng::Rng;
+
+/// `mem ^= upd ^ src` over u32 lanes: XOR-accumulation (parity sets,
+/// Bloom-filter-style sketches, reversible tagging). XOR deltas form an
+/// abelian group, so merges commute bit-exactly.
+pub struct XorU32;
+
+impl MergeFn for XorU32 {
+    fn name(&self) -> &str {
+        "xor_u32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = mem[i] ^ (upd[i] ^ src[i]);
+        }
+        out
+    }
+}
+
+/// Log-space accumulation over f32 lanes:
+/// `mem = ln(e^mem + e^upd - e^src)` — streaming log-sum-exp, the merge
+/// rule for probabilistic accumulators kept in log space. Commutative up
+/// to float rounding; the argument is clamped to stay positive so a
+/// pathological (upd < src with tiny mem) delta degrades gracefully
+/// instead of producing NaN.
+pub struct LogSumExpF32;
+
+impl MergeFn for LogSumExpF32 {
+    fn name(&self) -> &str {
+        "logsumexp_f32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            let sum = bits_f32(mem[i]).exp() + bits_f32(upd[i]).exp() - bits_f32(src[i]).exp();
+            out[i] = f32_bits(sum.max(f32::MIN_POSITIVE).ln());
+        }
+        out
+    }
+
+    fn sample_line(&self, rng: &mut Rng, role: MergeOperand) -> LineData {
+        // keep e^upd >= e^src so the accumulated mass stays positive
+        let (lo, hi) = match role {
+            MergeOperand::Src => (-4.0, 0.0),
+            MergeOperand::Upd => (0.0, 4.0),
+            MergeOperand::Mem => (-4.0, 4.0),
+        };
+        super::funcs::f32_line(rng, lo, hi)
+    }
+
+    fn law_tolerance(&self) -> f32 {
+        1e-3
+    }
+}
+
+/// Register the extension functions. Called by
+/// [`registry::default_registry`](super::registry::default_registry);
+/// exactly what third-party code does for its own functions.
+pub fn register_extras(reg: &mut MergeRegistry) {
+    reg.register("xor_u32", "XOR-accumulate (parity/sketches)", |p| {
+        super::registry::no_param("xor_u32", p)?;
+        Ok(handle(XorU32))
+    });
+    reg.register("logsumexp_f32", "log-space accumulation", |p| {
+        super::registry::no_param("logsumexp_f32", p)?;
+        Ok(handle(LogSumExpF32))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_merges_commute_exactly() {
+        let mut rng = Rng::new(0x10);
+        let mk = |rng: &mut Rng| {
+            let mut l = [0u32; LINE_WORDS];
+            for w in l.iter_mut() {
+                *w = rng.next_u32();
+            }
+            l
+        };
+        for _ in 0..50 {
+            let (mem, src, a, b) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let ab = XorU32.apply(&src, &b, &XorU32.apply(&src, &a, &mem, false), false);
+            let ba = XorU32.apply(&src, &a, &XorU32.apply(&src, &b, &mem, false), false);
+            assert_eq!(ab, ba);
+        }
+    }
+
+    #[test]
+    fn xor_delta_roundtrips() {
+        // applying the same delta twice cancels (XOR group inverse)
+        let mem = [0xDEAD_BEEFu32; LINE_WORDS];
+        let src = [3u32; LINE_WORDS];
+        let upd = [12u32; LINE_WORDS];
+        let once = XorU32.apply(&src, &upd, &mem, false);
+        assert_ne!(once, mem);
+        let twice = XorU32.apply(&src, &upd, &once, false);
+        assert_eq!(twice, mem);
+    }
+
+    #[test]
+    fn logsumexp_accumulates_mass() {
+        // mem = ln(1), upd = ln(2), src = ln(1) -> ln(1 + 2 - 1) = ln(2)
+        let mem = [f32_bits(0.0); LINE_WORDS];
+        let src = [f32_bits(0.0); LINE_WORDS];
+        let upd = [f32_bits(2f32.ln()); LINE_WORDS];
+        let out = LogSumExpF32.apply(&src, &upd, &mem, false);
+        for w in out {
+            assert!((bits_f32(w) - 2f32.ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn logsumexp_never_produces_nan() {
+        // adversarial: upd far below src drains more mass than exists
+        let mem = [f32_bits(-10.0); LINE_WORDS];
+        let src = [f32_bits(5.0); LINE_WORDS];
+        let upd = [f32_bits(-5.0); LINE_WORDS];
+        let out = LogSumExpF32.apply(&src, &upd, &mem, false);
+        assert!(out.iter().all(|&w| bits_f32(w).is_finite()));
+    }
+}

@@ -1,88 +1,313 @@
-//! Native reference implementations of the merge functions.
+//! The nine built-in merge functions, as [`MergeFn`] implementations.
 //!
 //! These are the rust mirror of `python/compile/kernels/ref.py`; the PJRT
 //! batch path (`runtime::merge_exec`) must agree with them bit-for-bit on
 //! integers and to f32 tolerance on floats (covered by integration tests).
+//! Each struct registers in [`super::registry::MergeRegistry::with_builtins`]
+//! through the same public [`register`](super::registry::MergeRegistry::register)
+//! call a user extension would use — there is no privileged dispatch.
 
-use super::{bits_f32, f32_bits, LineData, MergeKind, LINE_WORDS};
+use super::{
+    bits_f32, f32_bits, BatchKernel, KernelLane, LineData, MergeFn, MergeOperand,
+    LINE_WORDS,
+};
+use crate::util::rng::Rng;
 
-/// Apply `kind` to one line: returns the new memory value.
-///
-/// `drop_update` is consulted only by approximate kinds: when true the
-/// line's update is discarded (the caller samples the binomial, keeping
-/// the native and PJRT paths in agreement).
-pub fn apply_line(
-    kind: MergeKind,
-    src: &LineData,
-    upd: &LineData,
-    mem: &LineData,
-    drop_update: bool,
-) -> LineData {
-    let mut out = *mem;
-    match kind {
-        MergeKind::AddU32 => {
-            for i in 0..LINE_WORDS {
-                out[i] = mem[i]
-                    .wrapping_add(upd[i].wrapping_sub(src[i]));
-            }
+/// Random line of u32 lane values in `[lo, hi)` — shared sampler for
+/// law-suite input domains (use from `MergeFn::sample_line` overrides).
+pub fn int_line(rng: &mut Rng, lo: u32, hi: u32) -> LineData {
+    let mut l = [0u32; LINE_WORDS];
+    for w in l.iter_mut() {
+        *w = lo + rng.next_u32() % (hi - lo);
+    }
+    l
+}
+
+/// Random line of f32 lane values in `[lo, hi)` — shared sampler for
+/// law-suite input domains (use from `MergeFn::sample_line` overrides).
+pub fn f32_line(rng: &mut Rng, lo: f32, hi: f32) -> LineData {
+    let mut l = [0u32; LINE_WORDS];
+    for w in l.iter_mut() {
+        *w = rng.f32_range(lo, hi).to_bits();
+    }
+    l
+}
+
+/// `mem += upd - src` over u32 lanes (wrapping) — the key-value store.
+pub struct AddU32;
+
+impl MergeFn for AddU32 {
+    fn name(&self) -> &str {
+        "add_u32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = mem[i].wrapping_add(upd[i].wrapping_sub(src[i]));
         }
-        MergeKind::AddF32 => {
-            for i in 0..LINE_WORDS {
-                out[i] = f32_bits(
-                    bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i])),
-                );
-            }
+        out
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_add", KernelLane::U32AsF32))
+    }
+}
+
+/// `mem += upd - src` over f32 lanes — K-Means, PageRank.
+pub struct AddF32;
+
+impl MergeFn for AddF32 {
+    fn name(&self) -> &str {
+        "add_f32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = f32_bits(bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i])));
         }
-        MergeKind::SatAddU32 { max } => {
-            for i in 0..LINE_WORDS {
-                let delta = upd[i].wrapping_sub(src[i]);
-                out[i] = mem[i].saturating_add(delta).min(max);
-            }
+        out
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_add", KernelLane::F32))
+    }
+
+    fn law_tolerance(&self) -> f32 {
+        1e-3
+    }
+}
+
+/// Additive with saturation at `max` (u32 lanes). The clamp observes the
+/// merged *memory* value (Section 4.5). Commutative for non-negative
+/// deltas (counts), which is its contract.
+pub struct SatAddU32 {
+    pub max: u32,
+}
+
+impl MergeFn for SatAddU32 {
+    fn name(&self) -> &str {
+        "sat_add_u32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            let delta = upd[i].wrapping_sub(src[i]);
+            out[i] = mem[i].saturating_add(delta).min(self.max);
         }
-        MergeKind::SatAddF32 { max } => {
-            for i in 0..LINE_WORDS {
-                let v = bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i]));
-                out[i] = f32_bits(v.min(max));
-            }
-        }
-        MergeKind::CmulF32 => {
-            for p in 0..LINE_WORDS / 2 {
-                let (sr, si) = (bits_f32(src[2 * p]), bits_f32(src[2 * p + 1]));
-                let (ur, ui) = (bits_f32(upd[2 * p]), bits_f32(upd[2 * p + 1]));
-                let (mr, mi) = (bits_f32(mem[2 * p]), bits_f32(mem[2 * p + 1]));
-                let den = sr * sr + si * si;
-                let fr = (ur * sr + ui * si) / den;
-                let fi = (ui * sr - ur * si) / den;
-                out[2 * p] = f32_bits(mr * fr - mi * fi);
-                out[2 * p + 1] = f32_bits(mr * fi + mi * fr);
-            }
-        }
-        MergeKind::BitOr => {
-            for i in 0..LINE_WORDS {
-                out[i] = mem[i] | upd[i];
-            }
-        }
-        MergeKind::MinF32 => {
-            for i in 0..LINE_WORDS {
-                out[i] = f32_bits(bits_f32(mem[i]).min(bits_f32(upd[i])));
-            }
-        }
-        MergeKind::MaxF32 => {
-            for i in 0..LINE_WORDS {
-                out[i] = f32_bits(bits_f32(mem[i]).max(bits_f32(upd[i])));
-            }
-        }
-        MergeKind::ApproxAddF32 { .. } => {
-            if !drop_update {
-                for i in 0..LINE_WORDS {
-                    out[i] = f32_bits(
-                        bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i])),
-                    );
-                }
-            }
+        out
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_sat", KernelLane::U32AsF32).with_scalar(self.max as f32))
+    }
+
+    fn sample_line(&self, rng: &mut Rng, role: MergeOperand) -> LineData {
+        // commutativity holds for non-negative deltas: draw upd >= src
+        match role {
+            MergeOperand::Src => int_line(rng, 0, 1_000),
+            MergeOperand::Upd => int_line(rng, 1_000, 1_000_000),
+            MergeOperand::Mem => int_line(rng, 0, 1_000_000),
         }
     }
-    out
+}
+
+/// Additive with saturation at `max` (f32 lanes).
+pub struct SatAddF32 {
+    pub max: f32,
+}
+
+impl MergeFn for SatAddF32 {
+    fn name(&self) -> &str {
+        "sat_add_f32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            let v = bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i]));
+            out[i] = f32_bits(v.min(self.max));
+        }
+        out
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_sat", KernelLane::F32).with_scalar(self.max))
+    }
+
+    fn sample_line(&self, rng: &mut Rng, role: MergeOperand) -> LineData {
+        match role {
+            MergeOperand::Src => f32_line(rng, 0.0, 10.0),
+            MergeOperand::Upd => f32_line(rng, 10.0, 100.0),
+            MergeOperand::Mem => f32_line(rng, 0.0, 100.0),
+        }
+    }
+
+    fn law_tolerance(&self) -> f32 {
+        1e-3
+    }
+}
+
+/// Complex multiply: lanes are 8 interleaved (re, im) f32 pairs;
+/// `mem *= upd / src`. A zero source (|src|² == 0) would make the
+/// factor undefined — the update is skipped for that pair instead of
+/// poisoning memory with NaN.
+pub struct CmulF32;
+
+impl MergeFn for CmulF32 {
+    fn name(&self) -> &str {
+        "cmul_f32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for p in 0..LINE_WORDS / 2 {
+            let (sr, si) = (bits_f32(src[2 * p]), bits_f32(src[2 * p + 1]));
+            let (ur, ui) = (bits_f32(upd[2 * p]), bits_f32(upd[2 * p + 1]));
+            let (mr, mi) = (bits_f32(mem[2 * p]), bits_f32(mem[2 * p + 1]));
+            let den = sr * sr + si * si;
+            // zero-denominator hazard: upd/src is undefined for src == 0;
+            // apply the identity factor (drop this pair's update)
+            let (fr, fi) = if den == 0.0 {
+                (1.0, 0.0)
+            } else {
+                ((ur * sr + ui * si) / den, (ui * sr - ur * si) / den)
+            };
+            out[2 * p] = f32_bits(mr * fr - mi * fi);
+            out[2 * p + 1] = f32_bits(mr * fi + mi * fr);
+        }
+        out
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_cmul", KernelLane::F32))
+    }
+
+    fn sample_line(&self, rng: &mut Rng, role: MergeOperand) -> LineData {
+        match role {
+            // source values away from zero keep the factor well-defined
+            MergeOperand::Src | MergeOperand::Upd => f32_line(rng, 1.0, 4.0),
+            MergeOperand::Mem => f32_line(rng, -4.0, 4.0),
+        }
+    }
+
+    fn law_tolerance(&self) -> f32 {
+        1e-3
+    }
+}
+
+/// `mem |= upd` — BFS bitmaps. Idempotent.
+pub struct BitOr;
+
+impl MergeFn for BitOr {
+    fn name(&self) -> &str {
+        "bitor"
+    }
+
+    fn apply(&self, _src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = mem[i] | upd[i];
+        }
+        out
+    }
+
+    fn idempotent(&self) -> bool {
+        true
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_bitor", KernelLane::I32))
+    }
+}
+
+/// `mem = min(mem, upd)` over f32 lanes. Idempotent.
+pub struct MinF32;
+
+impl MergeFn for MinF32 {
+    fn name(&self) -> &str {
+        "min_f32"
+    }
+
+    fn apply(&self, _src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = f32_bits(bits_f32(mem[i]).min(bits_f32(upd[i])));
+        }
+        out
+    }
+
+    fn idempotent(&self) -> bool {
+        true
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_min", KernelLane::F32))
+    }
+}
+
+/// `mem = max(mem, upd)` over f32 lanes. Idempotent.
+pub struct MaxF32;
+
+impl MergeFn for MaxF32 {
+    fn name(&self) -> &str {
+        "max_f32"
+    }
+
+    fn apply(&self, _src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = f32_bits(bits_f32(mem[i]).max(bits_f32(upd[i])));
+        }
+        out
+    }
+
+    fn idempotent(&self) -> bool {
+        true
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_max", KernelLane::F32))
+    }
+}
+
+/// Additive over f32 lanes, but each line's update is dropped with
+/// probability `drop_p` (loop-perforation-style approximate merge,
+/// Section 6.3). The drop decision comes from the caller-provided
+/// decision value so both execution paths agree.
+pub struct ApproxAddF32 {
+    pub drop_p: f32,
+}
+
+impl MergeFn for ApproxAddF32 {
+    fn name(&self) -> &str {
+        "approx_add_f32"
+    }
+
+    fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, drop: bool) -> LineData {
+        if drop {
+            return *mem;
+        }
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = f32_bits(bits_f32(mem[i]) + (bits_f32(upd[i]) - bits_f32(src[i])));
+        }
+        out
+    }
+
+    fn drop_probability(&self) -> f32 {
+        self.drop_p
+    }
+
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        Some(BatchKernel::new("merge_approx", KernelLane::F32).with_keep_mask())
+    }
+
+    fn law_tolerance(&self) -> f32 {
+        1e-3
+    }
 }
 
 /// Convenience: line of f32 values.
@@ -128,7 +353,7 @@ mod tests {
         let src = [10u32; LINE_WORDS];
         let upd = [17u32; LINE_WORDS];
         let mem = [100u32; LINE_WORDS];
-        let out = apply_line(MergeKind::AddU32, &src, &upd, &mem, false);
+        let out = AddU32.apply(&src, &upd, &mem, false);
         assert_eq!(out, [107u32; LINE_WORDS]);
     }
 
@@ -139,20 +364,8 @@ mod tests {
             let mem0 = rand_line(&mut rng);
             let src = rand_line(&mut rng);
             let (a, b) = (rand_line(&mut rng), rand_line(&mut rng));
-            let ab = apply_line(
-                MergeKind::AddU32,
-                &src,
-                &b,
-                &apply_line(MergeKind::AddU32, &src, &a, &mem0, false),
-                false,
-            );
-            let ba = apply_line(
-                MergeKind::AddU32,
-                &src,
-                &a,
-                &apply_line(MergeKind::AddU32, &src, &b, &mem0, false),
-                false,
-            );
+            let ab = AddU32.apply(&src, &b, &AddU32.apply(&src, &a, &mem0, false), false);
+            let ba = AddU32.apply(&src, &a, &AddU32.apply(&src, &b, &mem0, false), false);
             assert_eq!(ab, ba);
         }
     }
@@ -162,7 +375,7 @@ mod tests {
         let src = [0u32; LINE_WORDS];
         let upd = [50u32; LINE_WORDS];
         let mem = [80u32; LINE_WORDS];
-        let out = apply_line(MergeKind::SatAddU32 { max: 100 }, &src, &upd, &mem, false);
+        let out = SatAddU32 { max: 100 }.apply(&src, &upd, &mem, false);
         assert_eq!(out, [100u32; LINE_WORDS]);
     }
 
@@ -172,7 +385,7 @@ mod tests {
         let src = [0u32; LINE_WORDS];
         let upd = [5u32; LINE_WORDS];
         let mem = [100u32; LINE_WORDS];
-        let out = apply_line(MergeKind::SatAddU32 { max: 100 }, &src, &upd, &mem, false);
+        let out = SatAddU32 { max: 100 }.apply(&src, &upd, &mem, false);
         assert_eq!(out, [100u32; LINE_WORDS]);
     }
 
@@ -181,9 +394,9 @@ mod tests {
         let src = [0u32; LINE_WORDS];
         let upd = [0b1010u32; LINE_WORDS];
         let mem = [0b0101u32; LINE_WORDS];
-        let once = apply_line(MergeKind::BitOr, &src, &upd, &mem, false);
+        let once = BitOr.apply(&src, &upd, &mem, false);
         assert_eq!(once, [0b1111u32; LINE_WORDS]);
-        let twice = apply_line(MergeKind::BitOr, &src, &upd, &once, false);
+        let twice = BitOr.apply(&src, &upd, &once, false);
         assert_eq!(twice, once);
     }
 
@@ -199,8 +412,7 @@ mod tests {
             mem[2 * p] = 3.0;
             mem[2 * p + 1] = 4.0;
         }
-        let out = apply_line(
-            MergeKind::CmulF32,
+        let out = CmulF32.apply(
             &line_from_f32(&src),
             &line_from_f32(&upd),
             &line_from_f32(&mem),
@@ -214,6 +426,24 @@ mod tests {
     }
 
     #[test]
+    fn cmul_zero_source_keeps_memory_finite() {
+        // regression: src = 0+0i used to divide by zero and poison the
+        // whole line with NaN; the guard skips the undefined update
+        let src = line_from_f32(&[0f32; LINE_WORDS]);
+        let upd = rand_f32_line(&mut Rng::new(9), 1.0, 4.0);
+        let mut mem = [0f32; LINE_WORDS];
+        for p in 0..LINE_WORDS / 2 {
+            mem[2 * p] = 3.0;
+            mem[2 * p + 1] = -2.0;
+        }
+        let mem = line_from_f32(&mem);
+        let out = CmulF32.apply(&src, &upd, &mem, false);
+        assert_eq!(out, mem, "zero source must leave memory unchanged");
+        let o = line_to_f32(&out);
+        assert!(o.iter().all(|v| v.is_finite()), "NaN leaked: {o:?}");
+    }
+
+    #[test]
     fn cmul_merges_commute() {
         let mut rng = Rng::new(3);
         for _ in 0..50 {
@@ -221,20 +451,8 @@ mod tests {
             let src = rand_f32_line(&mut rng, 1.0, 4.0); // away from zero
             let a = rand_f32_line(&mut rng, 1.0, 4.0);
             let b = rand_f32_line(&mut rng, 1.0, 4.0);
-            let ab = apply_line(
-                MergeKind::CmulF32,
-                &src,
-                &b,
-                &apply_line(MergeKind::CmulF32, &src, &a, &mem0, false),
-                false,
-            );
-            let ba = apply_line(
-                MergeKind::CmulF32,
-                &src,
-                &a,
-                &apply_line(MergeKind::CmulF32, &src, &b, &mem0, false),
-                false,
-            );
+            let ab = CmulF32.apply(&src, &b, &CmulF32.apply(&src, &a, &mem0, false), false);
+            let ba = CmulF32.apply(&src, &a, &CmulF32.apply(&src, &b, &mem0, false), false);
             let (fab, fba) = (line_to_f32(&ab), line_to_f32(&ba));
             for i in 0..LINE_WORDS {
                 assert!(
@@ -253,10 +471,12 @@ mod tests {
         let src = rand_f32_line(&mut rng, -10.0, 10.0);
         let upd = rand_f32_line(&mut rng, -10.0, 10.0);
         let mem = rand_f32_line(&mut rng, -10.0, 10.0);
-        for kind in [MergeKind::MinF32, MergeKind::MaxF32] {
-            let once = apply_line(kind, &src, &upd, &mem, false);
-            let twice = apply_line(kind, &src, &upd, &once, false);
+        let fns: [&dyn MergeFn; 2] = [&MinF32, &MaxF32];
+        for f in fns {
+            let once = f.apply(&src, &upd, &mem, false);
+            let twice = f.apply(&src, &upd, &once, false);
             assert_eq!(once, twice);
+            assert!(f.idempotent());
         }
     }
 
@@ -265,10 +485,11 @@ mod tests {
         let src = line_from_f32(&[0f32; LINE_WORDS]);
         let upd = line_from_f32(&[5f32; LINE_WORDS]);
         let mem = line_from_f32(&[1f32; LINE_WORDS]);
-        let kind = MergeKind::ApproxAddF32 { drop_p: 0.5 };
-        assert_eq!(apply_line(kind, &src, &upd, &mem, true), mem);
-        let kept = apply_line(kind, &src, &upd, &mem, false);
+        let f = ApproxAddF32 { drop_p: 0.5 };
+        assert_eq!(f.apply(&src, &upd, &mem, true), mem);
+        let kept = f.apply(&src, &upd, &mem, false);
         assert_eq!(line_to_f32(&kept)[0], 6.0);
+        assert_eq!(f.drop_probability(), 0.5);
     }
 
     #[test]
@@ -278,7 +499,7 @@ mod tests {
             let src = rand_f32_line(&mut rng, -100.0, 100.0);
             let upd = rand_f32_line(&mut rng, -100.0, 100.0);
             let mem = rand_f32_line(&mut rng, -100.0, 100.0);
-            let out = apply_line(MergeKind::AddF32, &src, &upd, &mem, false);
+            let out = AddF32.apply(&src, &upd, &mem, false);
             let (s, u, m, o) = (
                 line_to_f32(&src),
                 line_to_f32(&upd),
@@ -289,5 +510,17 @@ mod tests {
                 assert_eq!(o[i], m[i] + (u[i] - s[i]));
             }
         }
+    }
+
+    #[test]
+    fn kernel_descriptors_name_the_aot_entries() {
+        assert_eq!(AddU32.batch_kernel().unwrap().entry, "merge_add");
+        assert_eq!(AddU32.batch_kernel().unwrap().lane, KernelLane::U32AsF32);
+        assert_eq!(
+            SatAddF32 { max: 9.0 }.batch_kernel().unwrap().scalar,
+            Some(9.0)
+        );
+        assert!(ApproxAddF32 { drop_p: 0.1 }.batch_kernel().unwrap().keep_mask);
+        assert_eq!(BitOr.batch_kernel().unwrap().lane, KernelLane::I32);
     }
 }

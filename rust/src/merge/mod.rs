@@ -7,15 +7,33 @@
 //! makes commutative-update acceleration broadly applicable: saturating
 //! arithmetic, complex multiplication, bitwise logic, approximate merging.
 //!
+//! The merge layer is an **open API**: any type implementing [`MergeFn`]
+//! can be installed into a core's merge-function register file and driven
+//! by the simulator — the nine paper behaviours in [`funcs`] and the
+//! extension functions in [`ext`] register through the exact same
+//! [`registry::MergeRegistry`] surface a downstream user would use (see
+//! `examples/custom_merge.rs` for a user-defined merge function that
+//! never touches this module).
+//!
 //! Two execution paths compute identical results:
 //! * [`funcs`] — native rust reference implementations, used per-merge on
 //!   the simulator's critical path;
 //! * [`crate::runtime`] — the AOT-compiled JAX/Pallas batch kernels,
 //!   executed via PJRT for array-scale reductions (DUP) and deferred
-//!   merge batches.
+//!   merge batches. A [`MergeFn`] opts in by returning a [`BatchKernel`]
+//!   descriptor; functions without one transparently fall back to their
+//!   native [`MergeFn::apply`].
 
 pub mod batch;
+pub mod ext;
 pub mod funcs;
+pub mod registry;
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+pub use registry::{default_registry, MergeError, MergeRegistry, MergeSpec};
 
 /// 64-byte cache line as 16 32-bit words — the merge-register granularity.
 pub const LINE_WORDS: usize = 16;
@@ -23,59 +41,143 @@ pub type LineData = [u32; LINE_WORDS];
 
 pub const ZERO_LINE: LineData = [0u32; LINE_WORDS];
 
-/// The registered merge behaviours. `merge_init` installs one of these
-/// into a core's merge-function register file (MFRF) slot; each CData
-/// line carries the slot index in its merge-type field.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum MergeKind {
-    /// `mem += upd - src` over u32 lanes (wrapping) — the key-value store.
-    AddU32,
-    /// `mem += upd - src` over f32 lanes — K-Means, PageRank.
-    AddF32,
-    /// Additive with saturation at `max` (u32 lanes). The clamp observes
-    /// the merged *memory* value (Section 4.5).
-    SatAddU32 { max: u32 },
-    /// Additive with saturation at `max` (f32 lanes).
-    SatAddF32 { max: f32 },
-    /// Complex multiply: lanes are 8 interleaved (re, im) f32 pairs;
-    /// `mem *= upd / src`.
-    CmulF32,
-    /// `mem |= upd` — BFS bitmaps. Idempotent.
-    BitOr,
-    /// `mem = min(mem, upd)` over f32 lanes. Idempotent.
-    MinF32,
-    /// `mem = max(mem, upd)` over f32 lanes. Idempotent.
-    MaxF32,
-    /// Additive over f32 lanes, but each line's update is dropped with
-    /// probability `drop_p` (loop-perforation-style approximate merge,
-    /// Section 6.3). The drop decision comes from the caller-provided
-    /// decision value so both execution paths agree.
-    ApproxAddF32 { drop_p: f32 },
+/// A shared, installable merge function. `merge_init` installs one of
+/// these into a core's merge-function register file (MFRF) slot; each
+/// CData line carries the slot index in its merge-type field.
+pub type MergeHandle = Arc<dyn MergeFn>;
+
+/// Wrap a concrete merge function into an installable [`MergeHandle`].
+pub fn handle<F: MergeFn + 'static>(f: F) -> MergeHandle {
+    Arc::new(f)
 }
 
-impl MergeKind {
-    /// Stable name used by the CLI, reports and the artifact registry.
-    pub fn name(&self) -> &'static str {
-        match self {
-            MergeKind::AddU32 => "add_u32",
-            MergeKind::AddF32 => "add_f32",
-            MergeKind::SatAddU32 { .. } => "sat_add_u32",
-            MergeKind::SatAddF32 { .. } => "sat_add_f32",
-            MergeKind::CmulF32 => "cmul_f32",
-            MergeKind::BitOr => "bitor",
-            MergeKind::MinF32 => "min_f32",
-            MergeKind::MaxF32 => "max_f32",
-            MergeKind::ApproxAddF32 { .. } => "approx_add_f32",
+/// Which operand of a merge a randomly generated line will play, for
+/// the auto-generated law suite ([`crate::util::ptest::check_merge_laws`]).
+/// Functions with a restricted input domain (e.g. complex multiply needs
+/// source values away from zero) override [`MergeFn::sample_line`] per
+/// role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeOperand {
+    /// The preserved source copy.
+    Src,
+    /// A core's updated copy.
+    Upd,
+    /// The in-memory value merges accumulate into.
+    Mem,
+}
+
+/// Numeric lane interpretation of a line on the PJRT batch path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelLane {
+    /// Words are f32 bit patterns.
+    F32,
+    /// Words are u32 values routed through the f32 kernels — exact for
+    /// values below 2^24 (covers every counting workload here).
+    U32AsF32,
+    /// Words are routed as i32 (bitwise kernels).
+    I32,
+}
+
+/// Descriptor of an AOT-compiled batch kernel implementing a merge
+/// function on the PJRT path (see `runtime::merge_exec`). The kernel
+/// receives `src`, `upd`, `mem` tiles of shape `[B, 16]` in `lane`
+/// representation, then `scalar` (as a `[1, 1]` operand) and, when
+/// `keep_mask` is set, a per-row `[B, 1]` keep/drop mask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchKernel {
+    /// Artifact entry name (`artifacts/<entry>.hlo.txt`).
+    pub entry: String,
+    pub lane: KernelLane,
+    /// Trailing scalar operand (e.g. a saturation threshold).
+    pub scalar: Option<f32>,
+    /// Append the per-item keep mask (approximate kinds).
+    pub keep_mask: bool,
+}
+
+impl BatchKernel {
+    pub fn new(entry: &str, lane: KernelLane) -> Self {
+        Self {
+            entry: entry.to_string(),
+            lane,
+            scalar: None,
+            keep_mask: false,
         }
     }
 
+    pub fn with_scalar(mut self, scalar: f32) -> Self {
+        self.scalar = Some(scalar);
+        self
+    }
+
+    pub fn with_keep_mask(mut self) -> Self {
+        self.keep_mask = true;
+        self
+    }
+}
+
+/// A software-defined merge function: the open extension point of the
+/// whole system.
+///
+/// Implementations must be commutative in the sense of the paper's
+/// Section 3 correctness condition: applying two cores' updates in
+/// either order must produce the same memory value (to
+/// [`MergeFn::law_tolerance`]). Every function registered in a
+/// [`MergeRegistry`] is checked against this law (and idempotence, where
+/// declared) by the auto-generated property suite — new registrations
+/// get law-checked for free.
+pub trait MergeFn: Send + Sync {
+    /// Stable name used by the CLI (`--merge`), reports and the artifact
+    /// registry.
+    fn name(&self) -> &str;
+
+    /// Apply the merge to one line: returns the new memory value.
+    ///
+    /// `drop_update` is consulted only by approximate functions: when
+    /// true the line's update is discarded (the caller samples the
+    /// binomial with [`MergeFn::drop_probability`], keeping the native
+    /// and PJRT paths in agreement).
+    fn apply(
+        &self,
+        src: &LineData,
+        upd: &LineData,
+        mem: &LineData,
+        drop_update: bool,
+    ) -> LineData;
+
     /// Whether repeated merging of the same updated copy is harmless.
     /// (Idempotent merges need no source copy to be correct.)
-    pub fn idempotent(&self) -> bool {
-        matches!(
-            self,
-            MergeKind::BitOr | MergeKind::MinF32 | MergeKind::MaxF32
-        )
+    fn idempotent(&self) -> bool {
+        false
+    }
+
+    /// Probability that one line's update is dropped (approximate,
+    /// loop-perforation-style merges, Section 6.3). The simulator
+    /// samples this per merged line and passes the decision to
+    /// [`MergeFn::apply`] as `drop_update`.
+    fn drop_probability(&self) -> f32 {
+        0.0
+    }
+
+    /// The AOT batch kernel computing this function on the PJRT path,
+    /// if one exists. `None` (the default) makes batch executors fall
+    /// back to the native [`MergeFn::apply`] loop.
+    fn batch_kernel(&self) -> Option<BatchKernel> {
+        None
+    }
+
+    /// Generate a random line in this function's input domain for the
+    /// law suite. The default draws f32 values in ±100 — valid for
+    /// float adds and for every bit-exact integer function (which is
+    /// insensitive to the bit patterns used).
+    fn sample_line(&self, rng: &mut Rng, _role: MergeOperand) -> LineData {
+        funcs::f32_line(rng, -100.0, 100.0)
+    }
+
+    /// Relative tolerance for the commutativity/idempotence law check:
+    /// `0.0` (the default) demands bit equality; floating-point
+    /// functions return their rounding slack.
+    fn law_tolerance(&self) -> f32 {
+        0.0
     }
 }
 

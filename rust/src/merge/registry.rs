@@ -1,0 +1,360 @@
+//! The open merge-function registry: stable names → constructors.
+//!
+//! The registry is the seam that makes the merge layer extensible
+//! without editing this crate: the nine paper built-ins register through
+//! [`MergeRegistry::register`] exactly like a downstream user's function
+//! does, the CLI resolves `--merge name[:param]` here, and the
+//! auto-generated law suite ([`crate::util::ptest::check_merge_laws`])
+//! iterates whatever is registered — so a new function is law-checked,
+//! listable and CLI-selectable the moment it is registered.
+//!
+//! ```
+//! use ccache::merge::{handle, LineData, MergeFn, MergeRegistry, LINE_WORDS};
+//!
+//! /// A user-defined merge: XOR the update delta into memory.
+//! struct XorDelta;
+//!
+//! impl MergeFn for XorDelta {
+//!     fn name(&self) -> &str {
+//!         "xor_delta"
+//!     }
+//!     fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _d: bool) -> LineData {
+//!         let mut out = *mem;
+//!         for i in 0..LINE_WORDS {
+//!             out[i] = mem[i] ^ upd[i] ^ src[i];
+//!         }
+//!         out
+//!     }
+//! }
+//!
+//! let mut reg = MergeRegistry::with_builtins();
+//! reg.register("xor_delta", "XOR-accumulate", |_param| Ok(handle(XorDelta)));
+//! let f = reg.build("xor_delta").unwrap();
+//! assert_eq!(f.name(), "xor_delta");
+//! assert!(reg.build("add_u32").is_ok()); // built-ins resolve the same way
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::funcs;
+use super::{ext, handle, MergeHandle};
+
+/// Typed merge-resolution errors (CLI prints the diagnostic and exits,
+/// mirroring `ExecError`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MergeError {
+    /// No registered merge function has this name.
+    UnknownMerge { name: String, known: Vec<String> },
+    /// The `name:param` parameter failed to parse (or the function takes
+    /// no parameter).
+    BadParam {
+        name: String,
+        param: String,
+        expected: &'static str,
+    },
+}
+
+impl fmt::Display for MergeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MergeError::UnknownMerge { name, known } => {
+                write!(
+                    f,
+                    "unknown merge function '{name}' (known: {})",
+                    known.join(" ")
+                )
+            }
+            MergeError::BadParam {
+                name,
+                param,
+                expected,
+            } => {
+                write!(f, "merge function '{name}': bad parameter '{param}' (expected {expected})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+/// One registry row: a stable name, a human summary, and the constructor
+/// taking the optional `name:param` parameter string.
+pub struct MergeSpec {
+    pub name: String,
+    pub summary: String,
+    ctor: Box<dyn Fn(Option<&str>) -> Result<MergeHandle, MergeError> + Send + Sync>,
+}
+
+impl MergeSpec {
+    /// Construct an instance; `None` uses the function's default
+    /// parameters.
+    pub fn build(&self, param: Option<&str>) -> Result<MergeHandle, MergeError> {
+        (self.ctor)(param)
+    }
+}
+
+/// Registry of installable merge functions, keyed by stable name.
+pub struct MergeRegistry {
+    entries: Vec<MergeSpec>,
+}
+
+impl MergeRegistry {
+    /// An empty registry (no built-ins).
+    pub fn new() -> Self {
+        Self {
+            entries: Vec::new(),
+        }
+    }
+
+    /// A registry pre-populated with the nine paper merge functions,
+    /// registered through the public [`MergeRegistry::register`] path.
+    ///
+    /// Parameterized functions take a `name:param` argument with these
+    /// defaults: `sat_add_u32` (max, default `1000000`), `sat_add_f32`
+    /// (max, default `100.0`), `approx_add_f32` (drop probability,
+    /// default `0.1`).
+    pub fn with_builtins() -> Self {
+        let mut r = Self::new();
+        r.register("add_u32", "wrapping u32 add (mem += upd - src)", |p| {
+            no_param("add_u32", p)?;
+            Ok(handle(funcs::AddU32))
+        });
+        r.register("add_f32", "f32 add (mem += upd - src)", |p| {
+            no_param("add_f32", p)?;
+            Ok(handle(funcs::AddF32))
+        });
+        r.register("sat_add_u32", "u32 add saturating at :max", |p| {
+            let max = parse_or("sat_add_u32", p, 1_000_000u32, "a u32 maximum")?;
+            Ok(handle(funcs::SatAddU32 { max }))
+        });
+        r.register("sat_add_f32", "f32 add saturating at :max", |p| {
+            let max = parse_or("sat_add_f32", p, 100.0f32, "an f32 maximum")?;
+            Ok(handle(funcs::SatAddF32 { max }))
+        });
+        r.register("cmul_f32", "complex multiply (mem *= upd / src)", |p| {
+            no_param("cmul_f32", p)?;
+            Ok(handle(funcs::CmulF32))
+        });
+        r.register("bitor", "bitwise OR (idempotent)", |p| {
+            no_param("bitor", p)?;
+            Ok(handle(funcs::BitOr))
+        });
+        r.register("min_f32", "f32 minimum (idempotent)", |p| {
+            no_param("min_f32", p)?;
+            Ok(handle(funcs::MinF32))
+        });
+        r.register("max_f32", "f32 maximum (idempotent)", |p| {
+            no_param("max_f32", p)?;
+            Ok(handle(funcs::MaxF32))
+        });
+        r.register("approx_add_f32", "f32 add dropping updates at :p", |p| {
+            let drop_p = parse_or("approx_add_f32", p, 0.1f32, "a drop probability")?;
+            if !(0.0..=1.0).contains(&drop_p) {
+                return Err(MergeError::BadParam {
+                    name: "approx_add_f32".into(),
+                    param: p.unwrap_or_default().into(),
+                    expected: "a drop probability in [0, 1]",
+                });
+            }
+            Ok(handle(funcs::ApproxAddF32 { drop_p }))
+        });
+        r
+    }
+
+    /// Register a merge-function constructor under a stable name.
+    /// The constructor receives the optional `name:param` parameter.
+    ///
+    /// Panics on a duplicate name — registration is setup-time
+    /// configuration, and a silent override would make `--merge`
+    /// ambiguous.
+    pub fn register<C>(&mut self, name: &str, summary: &str, ctor: C) -> &mut Self
+    where
+        C: Fn(Option<&str>) -> Result<MergeHandle, MergeError> + Send + Sync + 'static,
+    {
+        assert!(
+            self.lookup(name).is_none(),
+            "merge function '{name}' is already registered"
+        );
+        self.entries.push(MergeSpec {
+            name: name.to_string(),
+            summary: summary.to_string(),
+            ctor: Box::new(ctor),
+        });
+        self
+    }
+
+    /// Resolve a `name` or `name:param` spec string to an instance.
+    pub fn build(&self, spec: &str) -> Result<MergeHandle, MergeError> {
+        let (name, param) = match spec.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (spec, None),
+        };
+        let entry = self.lookup(name).ok_or_else(|| MergeError::UnknownMerge {
+            name: name.to_string(),
+            known: self.names(),
+        })?;
+        entry.build(param)
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<&MergeSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &MergeSpec> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for MergeRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The registry the CLI and tests use: the nine paper built-ins plus the
+/// [`ext`] extension functions (which register through the public API,
+/// proving the extension path).
+pub fn default_registry() -> MergeRegistry {
+    let mut r = MergeRegistry::with_builtins();
+    ext::register_extras(&mut r);
+    r
+}
+
+/// Constructor helper: reject a `name:param` parameter for functions
+/// that take none (shared by the built-ins and extension registrations).
+pub fn no_param(name: &'static str, p: Option<&str>) -> Result<(), MergeError> {
+    match p {
+        None => Ok(()),
+        Some(p) => Err(MergeError::BadParam {
+            name: name.into(),
+            param: p.into(),
+            expected: "no parameter",
+        }),
+    }
+}
+
+/// Constructor helper: parse an optional `name:param` parameter, falling
+/// back to `default` when absent.
+pub fn parse_or<T: FromStr + Copy>(
+    name: &'static str,
+    p: Option<&str>,
+    default: T,
+    expected: &'static str,
+) -> Result<T, MergeError> {
+    match p {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| MergeError::BadParam {
+            name: name.into(),
+            param: s.into(),
+            expected,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::{LineData, MergeFn, LINE_WORDS};
+
+    #[test]
+    fn builtins_resolve_by_name() {
+        let reg = MergeRegistry::with_builtins();
+        for name in [
+            "add_u32",
+            "add_f32",
+            "sat_add_u32",
+            "sat_add_f32",
+            "cmul_f32",
+            "bitor",
+            "min_f32",
+            "max_f32",
+            "approx_add_f32",
+        ] {
+            let f = reg.build(name).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(f.name(), name);
+        }
+        assert_eq!(reg.len(), 9);
+    }
+
+    #[test]
+    fn default_registry_includes_extension_functions() {
+        let reg = default_registry();
+        assert!(reg.build("xor_u32").is_ok());
+        assert!(reg.build("logsumexp_f32").is_ok());
+        assert!(reg.len() > 9);
+    }
+
+    #[test]
+    fn params_parse_and_default() {
+        let reg = MergeRegistry::with_builtins();
+        let f = reg.build("sat_add_u32:12").unwrap();
+        // clamp at 12: mem 10 + delta 5 -> 12
+        let src = [0u32; LINE_WORDS];
+        let upd = [5u32; LINE_WORDS];
+        let mem = [10u32; LINE_WORDS];
+        assert_eq!(f.apply(&src, &upd, &mem, false), [12u32; LINE_WORDS]);
+        assert!(reg.build("sat_add_u32").is_ok(), "default param");
+        assert!(matches!(
+            reg.build("sat_add_u32:notanumber"),
+            Err(MergeError::BadParam { .. })
+        ));
+        assert!(matches!(
+            reg.build("add_u32:5"),
+            Err(MergeError::BadParam { .. })
+        ));
+        assert!(matches!(
+            reg.build("approx_add_f32:1.5"),
+            Err(MergeError::BadParam { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_name_lists_known() {
+        let reg = MergeRegistry::with_builtins();
+        let err = reg.build("nope").unwrap_err();
+        assert!(matches!(err, MergeError::UnknownMerge { .. }));
+        assert!(err.to_string().contains("add_u32"));
+    }
+
+    #[test]
+    fn user_registration_resolves_like_a_builtin() {
+        struct Keep;
+        impl MergeFn for Keep {
+            fn name(&self) -> &str {
+                "keep"
+            }
+            fn apply(&self, _s: &LineData, _u: &LineData, m: &LineData, _d: bool) -> LineData {
+                *m
+            }
+            fn idempotent(&self) -> bool {
+                true
+            }
+        }
+        let mut reg = MergeRegistry::with_builtins();
+        reg.register("keep", "discard updates", |_| Ok(handle(Keep)));
+        let f = reg.build("keep").unwrap();
+        assert!(f.idempotent());
+        assert!(reg.names().contains(&"keep".to_string()));
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn duplicate_registration_panics() {
+        let mut reg = MergeRegistry::with_builtins();
+        reg.register("add_u32", "dup", |_| Ok(handle(funcs::AddU32)));
+    }
+}

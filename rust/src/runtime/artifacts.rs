@@ -6,7 +6,7 @@
 //! mismatch (e.g. someone re-exported with a different batch size) fails
 //! loudly at load time instead of producing shape errors deep in PJRT.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -78,18 +78,8 @@ impl Manifest {
         expect("line_words", LINE_WORDS.to_string())?;
         expect("kmeans", format!("{KMEANS_N},{KMEANS_D},{KMEANS_K}"))?;
         expect("pagerank_v", PAGERANK_V.to_string())?;
-        for required in [
-            "merge_add",
-            "merge_sat",
-            "merge_cmul",
-            "merge_bitor",
-            "merge_min",
-            "merge_max",
-            "merge_approx",
-            "kmeans_step",
-            "pagerank_iter",
-        ] {
-            if !self.entries.contains_key(required) {
+        for required in required_entries()? {
+            if !self.entries.contains_key(&required) {
                 bail!("manifest missing entry {required}");
             }
         }
@@ -99,6 +89,36 @@ impl Manifest {
     pub fn hlo_path(&self, entry: &str) -> PathBuf {
         self.dir.join(format!("{entry}.hlo.txt"))
     }
+}
+
+/// The artifact entries the rust side requires: the compute kernels plus
+/// every batch-kernel id declared by a registered merge function
+/// ([`MergeFn::batch_kernel`](crate::merge::MergeFn::batch_kernel)) — so
+/// the manifest contract follows the open merge registry instead of a
+/// hard-coded list. Functions without an AOT kernel (user extensions,
+/// `xor_u32`, `logsumexp_f32`) require nothing: they execute natively.
+///
+/// A registered function whose default construction fails is an error,
+/// not a skip: silently dropping it would drop its (unknowable) kernel
+/// entry from the contract and turn a missing artifact into a late
+/// PJRT failure at merge time — the exact failure mode load-time
+/// validation exists to prevent.
+pub fn required_entries() -> Result<BTreeSet<String>> {
+    let mut required: BTreeSet<String> =
+        ["kmeans_step", "pagerank_iter"].iter().map(|s| s.to_string()).collect();
+    for spec in crate::merge::default_registry().iter() {
+        let f = spec.build(None).map_err(|e| {
+            anyhow::anyhow!(
+                "merge function '{}' has no default construction ({e}); \
+                 its artifact requirements cannot be derived",
+                spec.name
+            )
+        })?;
+        if let Some(kernel) = f.batch_kernel() {
+            required.insert(kernel.entry);
+        }
+    }
+    Ok(required)
 }
 
 fn parse_sig(s: &str) -> Result<ArgSig> {
@@ -148,6 +168,26 @@ mod tests {
         let s = parse_sig("int32[2048]").unwrap();
         assert_eq!(s.dims, vec![2048]);
         assert!(parse_sig("garbage").is_err());
+    }
+
+    #[test]
+    fn required_entries_follow_the_merge_registry() {
+        let req = required_entries().unwrap();
+        for entry in [
+            "merge_add",
+            "merge_sat",
+            "merge_cmul",
+            "merge_bitor",
+            "merge_min",
+            "merge_max",
+            "merge_approx",
+            "kmeans_step",
+            "pagerank_iter",
+        ] {
+            assert!(req.contains(entry), "missing {entry}");
+        }
+        // kernel-less extension functions must not inflate the contract
+        assert_eq!(req.len(), 9);
     }
 
     #[test]

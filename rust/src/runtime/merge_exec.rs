@@ -7,22 +7,23 @@
 //! exact for values below 2^24, which covers every workload here (the
 //! native executor remains the reference; the integration tests
 //! cross-check the two).
+//!
+//! Kernel selection is driven entirely by the merge function's own
+//! [`BatchKernel`] descriptor ([`MergeFn::batch_kernel`]) — this module
+//! names no merge function. A function without an AOT kernel (e.g. a
+//! user-registered extension) transparently executes through the native
+//! per-line path, so the batch interface stays total over the open
+//! registry.
 
 use anyhow::Result;
 
-use super::artifacts::{LINE_WORDS, MERGE_BATCH};
+use super::artifacts::MERGE_BATCH;
 use super::engine::Engine;
-use crate::merge::batch::{BatchExecutor, MergeItem};
-use crate::merge::{LineData, MergeKind};
+use crate::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
+use crate::merge::{BatchKernel, KernelLane, LineData, MergeFn};
 
 pub struct PjrtMergeExecutor {
     engine: Engine,
-}
-
-enum Lane {
-    F32,
-    U32AsF32,
-    I32,
 }
 
 impl PjrtMergeExecutor {
@@ -38,28 +39,13 @@ impl PjrtMergeExecutor {
         &mut self.engine
     }
 
-    fn entry_for(kind: MergeKind) -> (&'static str, Lane) {
-        match kind {
-            MergeKind::AddU32 => ("merge_add", Lane::U32AsF32),
-            MergeKind::AddF32 => ("merge_add", Lane::F32),
-            MergeKind::SatAddU32 { .. } => ("merge_sat", Lane::U32AsF32),
-            MergeKind::SatAddF32 { .. } => ("merge_sat", Lane::F32),
-            MergeKind::CmulF32 => ("merge_cmul", Lane::F32),
-            MergeKind::BitOr => ("merge_bitor", Lane::I32),
-            MergeKind::MinF32 => ("merge_min", Lane::F32),
-            MergeKind::MaxF32 => ("merge_max", Lane::F32),
-            MergeKind::ApproxAddF32 { .. } => ("merge_approx", Lane::F32),
-        }
-    }
-
     fn run_chunk(
         &mut self,
-        kind: MergeKind,
+        kernel: &BatchKernel,
         chunk: &[MergeItem],
     ) -> Result<Vec<LineData>> {
-        let (entry, lane) = Self::entry_for(kind);
         let b = MERGE_BATCH;
-        let w = LINE_WORDS;
+        let w = crate::merge::LINE_WORDS;
 
         fn field(it: &MergeItem, which: usize) -> &LineData {
             match which {
@@ -71,8 +57,8 @@ impl PjrtMergeExecutor {
 
         let mut args: Vec<xla::Literal> = Vec::with_capacity(4);
         for which in 0..3 {
-            match lane {
-                Lane::I32 => {
+            match kernel.lane {
+                KernelLane::I32 => {
                     let mut flat = vec![0i32; b * w];
                     for (i, it) in chunk.iter().enumerate() {
                         let line = field(it, which);
@@ -84,13 +70,13 @@ impl PjrtMergeExecutor {
                         xla::Literal::vec1(&flat).reshape(&[b as i64, w as i64])?,
                     );
                 }
-                Lane::F32 | Lane::U32AsF32 => {
+                KernelLane::F32 | KernelLane::U32AsF32 => {
                     let mut flat = vec![0f32; b * w];
                     for (i, it) in chunk.iter().enumerate() {
                         let line = field(it, which);
                         for j in 0..w {
-                            flat[i * w + j] = match lane {
-                                Lane::F32 => f32::from_bits(line[j]),
+                            flat[i * w + j] = match kernel.lane {
+                                KernelLane::F32 => f32::from_bits(line[j]),
                                 _ => line[j] as f32,
                             };
                         }
@@ -102,29 +88,23 @@ impl PjrtMergeExecutor {
             }
         }
 
-        // trailing operands: saturation threshold / drop mask
-        match kind {
-            MergeKind::SatAddU32 { max } => {
-                args.push(xla::Literal::vec1(&[max as f32]).reshape(&[1, 1])?);
+        // trailing operands: scalar (saturation threshold) / drop mask
+        if let Some(scalar) = kernel.scalar {
+            args.push(xla::Literal::vec1(&[scalar]).reshape(&[1, 1])?);
+        }
+        if kernel.keep_mask {
+            let mut mask = vec![1f32; b];
+            for (i, it) in chunk.iter().enumerate() {
+                mask[i] = if it.drop_update { 0.0 } else { 1.0 };
             }
-            MergeKind::SatAddF32 { max } => {
-                args.push(xla::Literal::vec1(&[max]).reshape(&[1, 1])?);
-            }
-            MergeKind::ApproxAddF32 { .. } => {
-                let mut mask = vec![1f32; b];
-                for (i, it) in chunk.iter().enumerate() {
-                    mask[i] = if it.drop_update { 0.0 } else { 1.0 };
-                }
-                args.push(xla::Literal::vec1(&mask).reshape(&[b as i64, 1])?);
-            }
-            _ => {}
+            args.push(xla::Literal::vec1(&mask).reshape(&[b as i64, 1])?);
         }
 
-        let out = self.engine.execute(entry, &args)?;
-        anyhow::ensure!(out.len() == 1, "{entry}: expected 1 output");
+        let out = self.engine.execute(&kernel.entry, &args)?;
+        anyhow::ensure!(out.len() == 1, "{}: expected 1 output", kernel.entry);
         let mut result = Vec::with_capacity(chunk.len());
-        match lane {
-            Lane::I32 => {
+        match kernel.lane {
+            KernelLane::I32 => {
                 let flat = out[0].to_vec::<i32>()?;
                 for i in 0..chunk.len() {
                     let mut line = [0u32; 16];
@@ -134,7 +114,7 @@ impl PjrtMergeExecutor {
                     result.push(line);
                 }
             }
-            Lane::U32AsF32 => {
+            KernelLane::U32AsF32 => {
                 let flat = out[0].to_vec::<f32>()?;
                 for i in 0..chunk.len() {
                     let mut line = [0u32; 16];
@@ -144,7 +124,7 @@ impl PjrtMergeExecutor {
                     result.push(line);
                 }
             }
-            Lane::F32 => {
+            KernelLane::F32 => {
                 let flat = out[0].to_vec::<f32>()?;
                 for i in 0..chunk.len() {
                     let mut line = [0u32; 16];
@@ -160,12 +140,17 @@ impl PjrtMergeExecutor {
 }
 
 impl BatchExecutor for PjrtMergeExecutor {
-    fn execute(&mut self, kind: MergeKind, items: &[MergeItem]) -> Vec<LineData> {
+    fn execute(&mut self, f: &dyn MergeFn, items: &[MergeItem]) -> Vec<LineData> {
+        let Some(kernel) = f.batch_kernel() else {
+            // no AOT kernel for this function: the software definition
+            // *is* the function — run it natively
+            return NativeExecutor.execute(f, items);
+        };
         let mut out = Vec::with_capacity(items.len());
         for chunk in items.chunks(MERGE_BATCH) {
-            match self.run_chunk(kind, chunk) {
+            match self.run_chunk(&kernel, chunk) {
                 Ok(mut lines) => out.append(&mut lines),
-                Err(e) => panic!("PJRT merge execution failed: {e:#}"),
+                Err(e) => panic!("PJRT merge execution failed ({}): {e:#}", f.name()),
             }
         }
         out

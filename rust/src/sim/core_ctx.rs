@@ -8,7 +8,8 @@ use std::sync::MutexGuard;
 
 use super::addr::Addr;
 use super::machine::{MachState, Machine};
-use crate::merge::MergeKind;
+use super::mfrf::MergeFault;
+use crate::merge::MergeHandle;
 
 /// The per-core execution context: every method is one "instruction" that
 /// advances the core's clock through the timing model.
@@ -16,6 +17,18 @@ pub struct CoreCtx<'m> {
     machine: &'m Machine,
     core: usize,
     guard: Option<MutexGuard<'m, MachState>>,
+}
+
+/// A [`MergeFault`] is the hardware trapping mid-program: core programs
+/// have no error channel (real code wouldn't either), so the fault
+/// unwinds the core thread with the typed fault as payload. The machine
+/// records it in the memory system first, and the execution driver
+/// recovers it as `ExecError::MergeFault`.
+fn ok_or_fault<T>(r: Result<T, MergeFault>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(fault) => std::panic::panic_any(fault),
+    }
 }
 
 impl<'m> CoreCtx<'m> {
@@ -151,14 +164,14 @@ impl<'m> CoreCtx<'m> {
 
     pub fn read_u32(&mut self, addr: Addr) -> u32 {
         let core = self.core;
-        let (v, c) = self.state().mem.read(core, addr);
+        let (v, c) = ok_or_fault(self.state().mem.read(core, addr));
         self.charge(c);
         v
     }
 
     pub fn write_u32(&mut self, addr: Addr, val: u32) {
         let core = self.core;
-        let c = self.state().mem.write(core, addr, val);
+        let c = ok_or_fault(self.state().mem.write(core, addr, val));
         self.charge(c);
     }
 
@@ -172,31 +185,32 @@ impl<'m> CoreCtx<'m> {
 
     pub fn cas_u32(&mut self, addr: Addr, expected: u32, new: u32) -> bool {
         let core = self.core;
-        let (ok, c) = self.state().mem.cas(core, addr, expected, new);
+        let (ok, c) = ok_or_fault(self.state().mem.cas(core, addr, expected, new));
         self.charge(c);
         ok
     }
 
     pub fn fetch_or_u32(&mut self, addr: Addr, bits: u32) -> u32 {
         let core = self.core;
-        let (old, c) = self.state().mem.fetch_or(core, addr, bits);
+        let (old, c) = ok_or_fault(self.state().mem.fetch_or(core, addr, bits));
         self.charge(c);
         old
     }
 
     // ---- CCache ISA (Table 1) ----------------------------------------------
 
-    /// `merge_init(&fn, i)`.
-    pub fn merge_init(&mut self, slot: usize, kind: MergeKind) {
+    /// `merge_init(&fn, i)` — install any [`MergeHandle`], built-in or
+    /// user-defined, into MFRF slot `i`.
+    pub fn merge_init(&mut self, slot: usize, f: MergeHandle) {
         let core = self.core;
-        self.state().mem.merge_init(core, slot, kind);
+        self.state().mem.merge_init(core, slot, f);
         self.charge(1);
     }
 
     /// `c_read(CData, i)`.
     pub fn c_read_u32(&mut self, addr: Addr, ty: u8) -> u32 {
         let core = self.core;
-        let (v, c) = self.state().mem.c_read(core, addr, ty);
+        let (v, c) = ok_or_fault(self.state().mem.c_read(core, addr, ty));
         self.charge(c);
         v
     }
@@ -204,7 +218,7 @@ impl<'m> CoreCtx<'m> {
     /// `c_write(CData, v, i)`.
     pub fn c_write_u32(&mut self, addr: Addr, val: u32, ty: u8) {
         let core = self.core;
-        let c = self.state().mem.c_write(core, addr, val, ty);
+        let c = ok_or_fault(self.state().mem.c_write(core, addr, val, ty));
         self.charge(c);
     }
 
@@ -219,14 +233,14 @@ impl<'m> CoreCtx<'m> {
     /// `soft_merge` — mark CData mergeable (merge-on-evict).
     pub fn soft_merge(&mut self) {
         let core = self.core;
-        let c = self.state().mem.soft_merge(core);
+        let c = ok_or_fault(self.state().mem.soft_merge(core));
         self.charge(c);
     }
 
     /// `merge` — merge all of this core's CData now.
     pub fn merge(&mut self) {
         let core = self.core;
-        let c = self.state().mem.merge_all(core);
+        let c = ok_or_fault(self.state().mem.merge_all(core));
         self.charge(c);
     }
 
@@ -238,7 +252,7 @@ impl<'m> CoreCtx<'m> {
         let backoff = self.machine.lock_backoff;
         let core = self.core;
         loop {
-            let (ok, c) = self.state().mem.cas(core, addr, 0, 1);
+            let (ok, c) = ok_or_fault(self.state().mem.cas(core, addr, 0, 1));
             {
                 let g = self.guard.as_mut().unwrap();
                 g.clocks[core] += c;

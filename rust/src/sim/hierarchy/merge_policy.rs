@@ -16,6 +16,7 @@
 //! by the Table 2 latencies and the two optimization switches; the trait
 //! is the seam for alternative policies (always-eager, batched, ...).
 
+use crate::merge::MergeFn;
 use crate::sim::config::CCacheConfig;
 
 /// Disposition of an evicted CData line.
@@ -39,8 +40,11 @@ pub trait MergePolicy: Send + Sync {
     fn defers_soft_merge(&self) -> bool;
 
     /// Decide what happens to an evicted CData line with the given dirty
-    /// state.
-    fn on_evict(&self, dirty: bool) -> MergeDecision;
+    /// state. The line's installed merge function is passed so policies
+    /// can consult its metadata (e.g. idempotent functions tolerate
+    /// re-execution of clean lines); the paper's policy looks only at
+    /// the dirty bit.
+    fn on_evict(&self, dirty: bool, merge: &dyn MergeFn) -> MergeDecision;
 
     /// Cycles charged to the core for one executed merge. `sync` is true
     /// for the explicit `merge` instruction, false for
@@ -89,7 +93,7 @@ impl MergePolicy for PaperMergePolicy {
         self.merge_on_evict
     }
 
-    fn on_evict(&self, dirty: bool) -> MergeDecision {
+    fn on_evict(&self, dirty: bool, _merge: &dyn MergeFn) -> MergeDecision {
         if self.dirty_merge && !dirty {
             MergeDecision::SilentDrop
         } else {
@@ -131,12 +135,13 @@ mod tests {
 
     #[test]
     fn dirty_merge_drops_clean_only() {
+        let f = crate::merge::funcs::AddU32;
         let p = policy();
-        assert_eq!(p.on_evict(false), MergeDecision::SilentDrop);
-        assert_eq!(p.on_evict(true), MergeDecision::Execute);
+        assert_eq!(p.on_evict(false, &f), MergeDecision::SilentDrop);
+        assert_eq!(p.on_evict(true, &f), MergeDecision::Execute);
         let mut p2 = policy();
         p2.dirty_merge = false;
-        assert_eq!(p2.on_evict(false), MergeDecision::Execute);
+        assert_eq!(p2.on_evict(false, &f), MergeDecision::Execute);
     }
 
     #[test]

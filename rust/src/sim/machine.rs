@@ -20,7 +20,33 @@ pub use super::core_ctx::CoreCtx;
 
 use super::config::{ConfigError, MachineConfig};
 use super::memsys::MemSystem;
+use super::mfrf::MergeFault;
 use super::stats::Stats;
+
+/// Machine faults are delivered by unwinding the faulting core thread
+/// with the typed [`MergeFault`] as payload, and sibling cores unwind
+/// with a "sibling core panicked" notice; both are expected, recovered
+/// control flow — not crashes. Filter them out of the process panic
+/// hook (once, first Machine construction) so the execution layer's
+/// clean diagnostic is not buried under raw panic spew; every other
+/// panic still reaches the previous hook untouched.
+fn install_quiet_fault_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<MergeFault>().is_some() {
+                return;
+            }
+            if let Some(s) = info.payload().downcast_ref::<String>() {
+                if s.starts_with("sibling core panicked") {
+                    return;
+                }
+            }
+            prev(info);
+        }));
+    });
+}
 
 pub(crate) struct MachState {
     pub(crate) mem: MemSystem,
@@ -84,6 +110,7 @@ impl Machine {
     /// Build the machine a configuration describes; a malformed
     /// configuration is a typed [`ConfigError`].
     pub fn new(cfg: MachineConfig) -> Result<Self, ConfigError> {
+        install_quiet_fault_hook();
         let cores = cfg.cores;
         let quantum = cfg.timing.quantum;
         let lock_backoff = cfg.timing.lock_backoff;
@@ -111,9 +138,12 @@ impl Machine {
     }
 
     /// Untimed access to the memory system (allocation, initialization,
-    /// final-state verification).
+    /// final-state verification, machine-fault recovery). Tolerates a
+    /// poisoned state mutex so the fault path — a core thread unwinding
+    /// on a [`MergeFault`](super::mfrf::MergeFault) — can still read the
+    /// recorded fault afterwards.
     pub fn setup<R>(&self, f: impl FnOnce(&mut MemSystem) -> R) -> R {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.lock_state();
         f(&mut g.mem)
     }
 

@@ -33,18 +33,17 @@ use super::config::{ConfigError, MachineConfig};
 use super::directory::Directory;
 use super::hierarchy::merge_policy::{self, MergeDecision, MergePolicy};
 use super::hierarchy::path::AccessPath;
-use super::mfrf::Mfrf;
+use super::mfrf::{MergeFault, Mfrf};
 use super::source_buffer::SourceBuffer;
 use super::stats::Stats;
 use crate::merge::batch::MergeItem;
-use crate::merge::funcs::apply_line;
-use crate::merge::{LineData, MergeKind, LINE_WORDS};
+use crate::merge::{LineData, MergeHandle, LINE_WORDS};
 use crate::util::rng::Rng;
 
 /// A recorded merge (for PJRT batch validation / deferred execution).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct MergeRecord {
-    pub kind: MergeKind,
+    pub merge: MergeHandle,
     pub line: Line,
     pub item: MergeItem,
 }
@@ -72,6 +71,11 @@ pub struct MemSystem {
     /// validation through the PJRT executor.
     pub record_merges: bool,
     pub merge_log: Vec<MergeRecord>,
+    /// The first machine fault this system raised (COp on an
+    /// uninitialized MFRF slot). Recorded here so the execution layer
+    /// can recover the typed fault even when the raising core thread
+    /// unwinds; see [`MemSystem::take_fault`].
+    fault: Option<MergeFault>,
 }
 
 impl MemSystem {
@@ -96,8 +100,22 @@ impl MemSystem {
             approx_rng: Rng::new(0xA990_05ED),
             record_merges: false,
             merge_log: Vec::new(),
+            fault: None,
             cfg,
         })
+    }
+
+    /// Take the recorded machine fault, if any (execution-layer recovery
+    /// path after a core thread unwound on a [`MergeFault`]).
+    pub fn take_fault(&mut self) -> Option<MergeFault> {
+        self.fault.take()
+    }
+
+    /// Record and return a merge fault for `core`/`slot`.
+    fn merge_fault(&mut self, core: usize, slot: u8) -> MergeFault {
+        let f = self.mfrf[core].fault(core, slot);
+        self.fault.get_or_insert_with(|| f.clone());
+        f
     }
 
     // ------------------------------------------------------------------
@@ -160,50 +178,56 @@ impl MemSystem {
     // ------------------------------------------------------------------
 
     /// Coherent read of one word. Returns (value, cycles).
-    pub fn read(&mut self, core: usize, addr: Addr) -> (u32, u64) {
-        let cycles = self.coherent_access(core, addr.line(), false);
+    pub fn read(&mut self, core: usize, addr: Addr) -> Result<(u32, u64), MergeFault> {
+        let cycles = self.coherent_access(core, addr.line(), false)?;
         self.drain_engine(core, cycles);
-        (self.mem[addr.word_index()], cycles)
+        Ok((self.mem[addr.word_index()], cycles))
     }
 
     /// Coherent write of one word. Returns cycles.
-    pub fn write(&mut self, core: usize, addr: Addr, val: u32) -> u64 {
-        let cycles = self.coherent_access(core, addr.line(), true);
+    pub fn write(&mut self, core: usize, addr: Addr, val: u32) -> Result<u64, MergeFault> {
+        let cycles = self.coherent_access(core, addr.line(), true)?;
         self.drain_engine(core, cycles);
         let i = addr.word_index();
         self.mem[i] = val;
-        cycles
+        Ok(cycles)
     }
 
     /// Atomic compare-and-swap (RFO + RMW). Returns (swapped, cycles).
-    pub fn cas(&mut self, core: usize, addr: Addr, expected: u32, new: u32) -> (bool, u64) {
-        let cycles = self.coherent_access(core, addr.line(), true);
+    pub fn cas(
+        &mut self,
+        core: usize,
+        addr: Addr,
+        expected: u32,
+        new: u32,
+    ) -> Result<(bool, u64), MergeFault> {
+        let cycles = self.coherent_access(core, addr.line(), true)?;
         self.drain_engine(core, cycles);
         self.stats.atomic_rmws += 1;
         let i = addr.word_index();
         if self.mem[i] == expected {
             self.mem[i] = new;
-            (true, cycles)
+            Ok((true, cycles))
         } else {
-            (false, cycles)
+            Ok((false, cycles))
         }
     }
 
     /// Atomic fetch-or on a word (BFS atomics variant).
-    pub fn fetch_or(&mut self, core: usize, addr: Addr, bits: u32) -> (u32, u64) {
-        let cycles = self.coherent_access(core, addr.line(), true);
+    pub fn fetch_or(&mut self, core: usize, addr: Addr, bits: u32) -> Result<(u32, u64), MergeFault> {
+        let cycles = self.coherent_access(core, addr.line(), true)?;
         self.drain_engine(core, cycles);
         self.stats.atomic_rmws += 1;
         let i = addr.word_index();
         let old = self.mem[i];
         self.mem[i] = old | bits;
-        (old, cycles)
+        Ok((old, cycles))
     }
 
     /// The MESI walk for a coherent access: the path performs the walk
     /// and all outer fills; the innermost fill loops here because it may
     /// displace mergeable CData that only the engine can merge.
-    fn coherent_access(&mut self, core: usize, line: Line, write: bool) -> u64 {
+    fn coherent_access(&mut self, core: usize, line: Line, write: bool) -> Result<u64, MergeFault> {
         let walk = self.path.coherent_walk(core, line, write, &mut self.stats);
         if let Some(req) = walk.fill {
             loop {
@@ -216,12 +240,12 @@ impl MemSystem {
                         // mergeable CData chosen under pressure: merge
                         // first, then re-choose (cycles hidden behind the
                         // miss being serviced)
-                        self.evict_cdata_line(core, victim, false);
+                        self.evict_cdata_line(core, victim, false)?;
                     }
                 }
             }
         }
-        walk.cycles
+        Ok(walk.cycles)
     }
 
     // ------------------------------------------------------------------
@@ -229,36 +253,45 @@ impl MemSystem {
     // ------------------------------------------------------------------
 
     /// `merge_init(&fn, i)` — register a merge function.
-    pub fn merge_init(&mut self, core: usize, slot: usize, kind: MergeKind) {
-        self.mfrf[core].install(slot, kind);
+    pub fn merge_init(&mut self, core: usize, slot: usize, f: MergeHandle) {
+        self.mfrf[core].install(slot, f);
     }
 
     /// `c_read(CData, i)` — commutative read of one word.
-    pub fn c_read(&mut self, core: usize, addr: Addr, ty: u8) -> (u32, u64) {
+    pub fn c_read(&mut self, core: usize, addr: Addr, ty: u8) -> Result<(u32, u64), MergeFault> {
         let line = addr.line();
-        let cycles = self.cop_access(core, line, ty, false);
+        let cycles = self.cop_access(core, line, ty, false)?;
         self.drain_engine(core, cycles);
         let data = &self.priv_data[core][&line.0];
-        (data[(addr.offset() / 4) as usize], cycles)
+        Ok((data[(addr.offset() / 4) as usize], cycles))
     }
 
     /// `c_write(CData, v, i)` — commutative write of one word.
-    pub fn c_write(&mut self, core: usize, addr: Addr, val: u32, ty: u8) -> u64 {
+    pub fn c_write(
+        &mut self,
+        core: usize,
+        addr: Addr,
+        val: u32,
+        ty: u8,
+    ) -> Result<u64, MergeFault> {
         let line = addr.line();
-        let cycles = self.cop_access(core, line, ty, true);
+        let cycles = self.cop_access(core, line, ty, true)?;
         self.drain_engine(core, cycles);
         let data = self.priv_data[core].get_mut(&line.0).unwrap();
         data[(addr.offset() / 4) as usize] = val;
-        cycles
+        Ok(cycles)
     }
 
     /// Common path for c_read/c_write: hit innermost or privatize the line.
-    fn cop_access(&mut self, core: usize, line: Line, ty: u8, write: bool) -> u64 {
+    ///
+    /// A COp naming a merge type whose MFRF slot was never initialized is
+    /// the hardware's undefined-instruction case: it raises a typed
+    /// [`MergeFault`] before touching any structure.
+    fn cop_access(&mut self, core: usize, line: Line, ty: u8, write: bool) -> Result<u64, MergeFault> {
+        if self.mfrf[core].get(ty).is_none() {
+            return Err(self.merge_fault(core, ty));
+        }
         self.stats.cops += 1;
-        debug_assert!(
-            self.mfrf[core].try_get(ty).is_some(),
-            "COp with uninitialized merge type {ty}"
-        );
 
         if let Some(idx) = self.path.innermost_mut(core).lookup(line) {
             if self.path.innermost(core).meta(idx).ccache {
@@ -270,7 +303,7 @@ impl MemSystem {
                     m.dirty = true;
                 }
                 m.merge_type = ty;
-                return self.cfg.l1().hit_cycles;
+                return Ok(self.cfg.l1().hit_cycles);
             }
             // fall through: phase transition handled below
         }
@@ -297,7 +330,7 @@ impl MemSystem {
         if self.src_buf[core].is_full() {
             let victim = self.src_buf[core].lru_entry().unwrap().line;
             self.stats.src_buf_evictions += 1;
-            cycles += self.evict_cdata_line(core, victim, false);
+            cycles += self.evict_cdata_line(core, victim, false)?;
         }
 
         // innermost way: may itself merge-evict a mergeable CData line
@@ -306,7 +339,7 @@ impl MemSystem {
                 Ok(way) => break way,
                 Err(victim) => {
                     self.stats.src_buf_evictions += 1;
-                    cycles += self.evict_cdata_line(core, victim, false);
+                    cycles += self.evict_cdata_line(core, victim, false)?;
                 }
             }
         };
@@ -320,21 +353,21 @@ impl MemSystem {
         m.ccache = true;
         m.merge_type = ty;
         m.dirty = write;
-        cycles
+        Ok(cycles)
     }
 
     /// `soft_merge` — mark every valid source-buffer entry's line
     /// mergeable (merge-on-evict). Without the optimization this is a
     /// full merge (the Fig 9 baseline) — the policy decides.
-    pub fn soft_merge(&mut self, core: usize) -> u64 {
+    pub fn soft_merge(&mut self, core: usize) -> Result<u64, MergeFault> {
         if !self.policy.defers_soft_merge() {
             let entries = self.src_buf[core].valid_entries();
             let mut cycles = 0;
             for e in entries {
                 self.stats.src_buf_evictions += 1;
-                cycles += self.evict_cdata_line(core, e.line, false);
+                cycles += self.evict_cdata_line(core, e.line, false)?;
             }
-            return cycles;
+            return Ok(cycles);
         }
         let mut marked: u64 = 0;
         for e in self.src_buf[core].valid_entries() {
@@ -344,17 +377,17 @@ impl MemSystem {
             }
         }
         // setting bits is a local L1 operation
-        marked.max(1)
+        Ok(marked.max(1))
     }
 
     /// `merge` — merge every valid source-buffer entry now (Table 1).
-    pub fn merge_all(&mut self, core: usize) -> u64 {
+    pub fn merge_all(&mut self, core: usize) -> Result<u64, MergeFault> {
         let entries = self.src_buf[core].valid_entries();
         let mut cycles = 0;
         for e in entries {
-            cycles += self.evict_cdata_line(core, e.line, true);
+            cycles += self.evict_cdata_line(core, e.line, true)?;
         }
-        cycles
+        Ok(cycles)
     }
 
     /// The core ran `cycles` of other work: the background merge engine
@@ -373,40 +406,47 @@ impl MemSystem {
     /// per line; eviction-triggered merges (merge-on-evict, Section 4.3)
     /// are handed to the pipelined background engine — the core stalls
     /// only when the engine's queue backs up.
-    fn evict_cdata_line(&mut self, core: usize, line: Line, sync: bool) -> u64 {
+    fn evict_cdata_line(&mut self, core: usize, line: Line, sync: bool) -> Result<u64, MergeFault> {
         let Some(entry) = self.src_buf[core].remove(line) else {
-            return 0;
+            return Ok(0);
         };
         let l1_meta = self.path.innermost_mut(core).invalidate(line);
         let dirty = l1_meta.map_or(true, |m| m.dirty);
         let upd = self.priv_data[core].remove(&line.0).expect("priv copy");
 
-        match self.policy.on_evict(dirty) {
+        // cop_access validated the slot at privatization time and
+        // merge_init never uninstalls, so this holds in every reachable
+        // state — but an uninitialized slot here is still a typed fault,
+        // never a rust panic.
+        let Some(merge) = self.mfrf[core].get(entry.merge_type).cloned() else {
+            return Err(self.merge_fault(core, entry.merge_type));
+        };
+
+        match self.policy.on_evict(dirty, merge.as_ref()) {
             MergeDecision::SilentDrop => {
                 self.stats.silent_drops += 1;
-                return 1;
+                return Ok(1);
             }
             MergeDecision::Execute => {}
         }
         let cost = self.policy.charge(sync, &mut self.engine_backlog[core]);
 
-        let kind = self.mfrf[core].get(entry.merge_type);
         let mem_val = self.mem_line(line);
-        let drop_update = match kind {
-            MergeKind::ApproxAddF32 { drop_p } => {
-                let drop = self.approx_rng.bernoulli(drop_p as f64);
-                if drop {
-                    self.stats.approx_drops += 1;
-                }
-                drop
+        let drop_p = merge.drop_probability();
+        let drop_update = if drop_p > 0.0 {
+            let drop = self.approx_rng.bernoulli(drop_p as f64);
+            if drop {
+                self.stats.approx_drops += 1;
             }
-            _ => false,
+            drop
+        } else {
+            false
         };
-        let new = apply_line(kind, &entry.data, &upd, &mem_val, drop_update);
+        let new = merge.apply(&entry.data, &upd, &mem_val, drop_update);
         self.set_mem_line(line, &new);
         if self.record_merges {
             self.merge_log.push(MergeRecord {
-                kind,
+                merge: merge.clone(),
                 line,
                 item: MergeItem {
                     src: entry.data,
@@ -417,7 +457,7 @@ impl MemSystem {
             });
         }
         self.stats.merges += 1;
-        cost
+        Ok(cost)
     }
 
     // ------------------------------------------------------------------

@@ -1,14 +1,45 @@
 //! Merge-Function Register File (Section 4.2).
 //!
 //! Holds the registered merge functions for one core. `merge_init`
-//! installs a [`MergeKind`] into a slot; each CData line's merge-type
+//! installs a [`MergeHandle`] into a slot; each CData line's merge-type
 //! field names the slot to invoke at merge time. Four slots / two
 //! merge-type bits is the paper's suggested configuration.
+//!
+//! Using a merge type whose slot was never initialized is a *machine
+//! fault*, not a rust panic: the protocol engine surfaces it as a typed
+//! [`MergeFault`] that the execution layer converts into
+//! `ExecError::MergeFault` (CLI diagnostic + exit 2).
 
-use crate::merge::MergeKind;
+use std::fmt;
+
+use crate::merge::MergeHandle;
+
+/// The machine fault raised when a COp or merge names an MFRF slot with
+/// no installed merge function (the hardware analog of an undefined-
+/// instruction trap).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergeFault {
+    pub core: usize,
+    pub slot: u8,
+    /// MFRF capacity, for the diagnostic.
+    pub slots: usize,
+}
+
+impl fmt::Display for MergeFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "merge fault: core {} used merge type {} but MFRF slot {} holds no \
+             merge function ({} slots; issue merge_init first)",
+            self.core, self.slot, self.slot, self.slots
+        )
+    }
+}
+
+impl std::error::Error for MergeFault {}
 
 pub struct Mfrf {
-    slots: Vec<Option<MergeKind>>,
+    slots: Vec<Option<MergeHandle>>,
 }
 
 impl Mfrf {
@@ -22,65 +53,72 @@ impl Mfrf {
         self.slots.len()
     }
 
-    /// `merge_init(&fn, i)` — register `kind` in slot `i`.
-    pub fn install(&mut self, slot: usize, kind: MergeKind) {
+    /// `merge_init(&fn, i)` — register `f` in slot `i`.
+    pub fn install(&mut self, slot: usize, f: MergeHandle) {
         assert!(
             slot < self.slots.len(),
             "MFRF slot {slot} out of range (have {})",
             self.slots.len()
         );
-        self.slots[slot] = Some(kind);
+        self.slots[slot] = Some(f);
     }
 
-    /// The merge function for a line's merge-type field. Panics on an
-    /// uninitialized slot — using CData with no registered merge function
-    /// is a programming error the hardware would fault on.
-    pub fn get(&self, slot: u8) -> MergeKind {
-        self.slots
-            .get(slot as usize)
-            .copied()
-            .flatten()
-            .unwrap_or_else(|| panic!("MFRF slot {slot} not initialized"))
+    /// The merge function for a line's merge-type field; `None` when the
+    /// slot was never initialized (the caller raises a [`MergeFault`]).
+    pub fn get(&self, slot: u8) -> Option<&MergeHandle> {
+        self.slots.get(slot as usize).and_then(|s| s.as_ref())
     }
 
-    pub fn try_get(&self, slot: u8) -> Option<MergeKind> {
-        self.slots.get(slot as usize).copied().flatten()
+    /// The fault describing an access to `slot` on `core`.
+    pub fn fault(&self, core: usize, slot: u8) -> MergeFault {
+        MergeFault {
+            core,
+            slot,
+            slots: self.slots.len(),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::merge::funcs::{AddU32, BitOr, MinF32};
+    use crate::merge::handle;
 
     #[test]
     fn install_and_get() {
         let mut m = Mfrf::new(4);
-        m.install(0, MergeKind::AddU32);
-        m.install(3, MergeKind::BitOr);
-        assert_eq!(m.get(0), MergeKind::AddU32);
-        assert_eq!(m.get(3), MergeKind::BitOr);
-        assert_eq!(m.try_get(1), None);
+        m.install(0, handle(AddU32));
+        m.install(3, handle(BitOr));
+        assert_eq!(m.get(0).unwrap().name(), "add_u32");
+        assert_eq!(m.get(3).unwrap().name(), "bitor");
+        assert!(m.get(1).is_none());
     }
 
     #[test]
-    #[should_panic(expected = "not initialized")]
-    fn uninitialized_slot_faults() {
+    fn uninitialized_slot_is_a_typed_fault() {
         let m = Mfrf::new(4);
-        let _ = m.get(2);
+        assert!(m.get(2).is_none());
+        let fault = m.fault(1, 2);
+        assert_eq!(fault.core, 1);
+        assert_eq!(fault.slot, 2);
+        let msg = fault.to_string();
+        assert!(msg.contains("merge fault"), "{msg}");
+        assert!(msg.contains("merge_init"), "{msg}");
     }
 
     #[test]
     #[should_panic(expected = "out of range")]
     fn out_of_range_install_faults() {
         let mut m = Mfrf::new(2);
-        m.install(5, MergeKind::AddU32);
+        m.install(5, handle(AddU32));
     }
 
     #[test]
     fn reinstall_overwrites() {
         let mut m = Mfrf::new(4);
-        m.install(0, MergeKind::AddU32);
-        m.install(0, MergeKind::MinF32);
-        assert_eq!(m.get(0), MergeKind::MinF32);
+        m.install(0, handle(AddU32));
+        m.install(0, handle(MinF32));
+        assert_eq!(m.get(0).unwrap().name(), "min_f32");
     }
 }

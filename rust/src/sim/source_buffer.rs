@@ -13,6 +13,11 @@ use crate::merge::LineData;
 pub struct SourceEntry {
     pub line: Line,
     pub data: LineData,
+    /// MFRF slot index of the line's merge function — the buffer stores
+    /// the *slot*, not the function: `merge_init` may rebind a slot, and
+    /// the MFRF ([`crate::sim::mfrf::Mfrf`]) resolves the installed
+    /// [`MergeHandle`](crate::merge::MergeHandle) at merge time, exactly
+    /// as the hardware would read the register file.
     pub merge_type: u8,
     lru: u64,
     valid: bool,

@@ -4,7 +4,14 @@
 //! on failure, performs a bounded greedy shrink via the input's
 //! [`Shrink`] implementation before panicking with the minimal
 //! counterexample.
+//!
+//! [`check_merge_laws`] is the auto-generated suite over a
+//! [`MergeRegistry`]: every registered merge function — built-in or
+//! user-registered — is checked against the paper's Section 3
+//! commutativity condition (and idempotence, where declared), so new
+//! registrations are law-checked for free.
 
+use crate::merge::{MergeFn, MergeOperand, MergeRegistry, LINE_WORDS};
 use crate::util::rng::Rng;
 
 /// Types that can propose smaller versions of themselves.
@@ -123,6 +130,84 @@ fn shrink_loop<T: Shrink, P: FnMut(&T) -> PropResult>(
     (input, msg)
 }
 
+// ---------------------------------------------------------------------
+// merge-function law suite
+// ---------------------------------------------------------------------
+
+/// Compare two lines lane-by-lane: bit equality when `tol == 0.0`,
+/// otherwise relative f32 tolerance.
+fn lanes_match(a: &[u32; LINE_WORDS], b: &[u32; LINE_WORDS], tol: f32) -> Result<(), String> {
+    for i in 0..LINE_WORDS {
+        let ok = if tol == 0.0 {
+            a[i] == b[i]
+        } else {
+            let (x, y) = (f32::from_bits(a[i]), f32::from_bits(b[i]));
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs()))
+        };
+        if !ok {
+            return Err(format!(
+                "lane {i}: {} vs {} (bits {:#x} vs {:#x})",
+                f32::from_bits(a[i]),
+                f32::from_bits(b[i]),
+                a[i],
+                b[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Check one merge function's algebraic laws on `cases` random inputs
+/// drawn from its own [`MergeFn::sample_line`] domain:
+/// * **commutativity** — two updates applied in either order produce
+///   the same memory value (to [`MergeFn::law_tolerance`]);
+/// * **idempotence** — when declared, re-merging the same updated copy
+///   is a no-op.
+pub fn check_merge_fn_laws(f: &dyn MergeFn, seed: u64, cases: usize) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let src = f.sample_line(&mut rng, MergeOperand::Src);
+        let a = f.sample_line(&mut rng, MergeOperand::Upd);
+        let b = f.sample_line(&mut rng, MergeOperand::Upd);
+        let mem = f.sample_line(&mut rng, MergeOperand::Mem);
+        let tol = f.law_tolerance();
+
+        let ab = f.apply(&src, &b, &f.apply(&src, &a, &mem, false), false);
+        let ba = f.apply(&src, &a, &f.apply(&src, &b, &mem, false), false);
+        if let Err(msg) = lanes_match(&ab, &ba, tol) {
+            panic!(
+                "merge function '{}' is not commutative (case {case}/{cases}, seed {seed}): {msg}",
+                f.name()
+            );
+        }
+
+        if f.idempotent() {
+            let once = f.apply(&src, &a, &mem, false);
+            let twice = f.apply(&src, &a, &once, false);
+            if let Err(msg) = lanes_match(&once, &twice, tol) {
+                panic!(
+                    "merge function '{}' declares idempotence but re-merging changed memory \
+                     (case {case}/{cases}, seed {seed}): {msg}",
+                    f.name()
+                );
+            }
+        }
+    }
+}
+
+/// Run [`check_merge_fn_laws`] over *every* function in `reg` (built
+/// with default parameters). Registering a function is all it takes to
+/// be law-checked.
+pub fn check_merge_laws(reg: &MergeRegistry, seed: u64, cases: usize) {
+    assert!(!reg.is_empty(), "empty merge registry");
+    for spec in reg.iter() {
+        let f = spec
+            .build(None)
+            .unwrap_or_else(|e| panic!("'{}': default construction failed: {e}", spec.name));
+        check_merge_fn_laws(f.as_ref(), seed, cases);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +250,50 @@ mod tests {
         let shrinks = v.shrinks();
         assert!(shrinks.iter().any(|s| s.len() < 3));
         assert!(shrinks.iter().any(|s| s.len() == 3 && s[0] < 5));
+    }
+
+    #[test]
+    fn law_suite_passes_on_builtins() {
+        check_merge_laws(&MergeRegistry::with_builtins(), 0xA1, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "not commutative")]
+    fn law_suite_catches_a_non_commutative_function() {
+        use crate::merge::LineData;
+        // overwrite-with-update is order-dependent: the suite must flag it
+        struct Overwrite;
+        impl MergeFn for Overwrite {
+            fn name(&self) -> &str {
+                "overwrite"
+            }
+            fn apply(&self, _s: &LineData, u: &LineData, _m: &LineData, _d: bool) -> LineData {
+                *u
+            }
+        }
+        check_merge_fn_laws(&Overwrite, 0xBAD, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "declares idempotence")]
+    fn law_suite_catches_a_false_idempotence_claim() {
+        use crate::merge::LineData;
+        struct BadClaim;
+        impl MergeFn for BadClaim {
+            fn name(&self) -> &str {
+                "bad_claim"
+            }
+            fn apply(&self, s: &LineData, u: &LineData, m: &LineData, _d: bool) -> LineData {
+                let mut out = *m;
+                for i in 0..LINE_WORDS {
+                    out[i] = m[i].wrapping_add(u[i].wrapping_sub(s[i]));
+                }
+                out
+            }
+            fn idempotent(&self) -> bool {
+                true // adds are not idempotent
+            }
+        }
+        check_merge_fn_laws(&BadClaim, 0xBAD, 25);
     }
 }

@@ -19,7 +19,8 @@
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray};
 use crate::exec::{driver, RunResult, Variant, Workload};
-use crate::merge::MergeKind;
+use crate::merge::funcs::BitOr;
+use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::CoreCtx;
@@ -176,8 +177,8 @@ impl Workload for BfsWorkload {
         self.p.working_set_bytes()
     }
 
-    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
-        vec![(SLOT_BITOR, MergeKind::BitOr)]
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(SLOT_BITOR, handle(BitOr))]
     }
 
     fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> BfsLayout {

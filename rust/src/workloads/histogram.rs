@@ -10,7 +10,8 @@
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
 use crate::exec::{driver, RunResult, Variant, Workload};
-use crate::merge::MergeKind;
+use crate::merge::funcs::AddU32;
+use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::CoreCtx;
@@ -125,8 +126,8 @@ impl Workload for HgWorkload {
         self.p.working_set_bytes()
     }
 
-    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
-        vec![(0, MergeKind::AddU32)]
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(0, handle(AddU32))]
     }
 
     fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> HgLayout {

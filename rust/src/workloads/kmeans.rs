@@ -19,7 +19,8 @@
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray};
 use crate::exec::{driver, RunResult, Variant, Workload};
-use crate::merge::MergeKind;
+use crate::merge::funcs::AddF32;
+use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::CoreCtx;
@@ -214,11 +215,8 @@ impl Workload for KmWorkload {
         self.p.working_set_bytes()
     }
 
-    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
-        vec![
-            (SLOT_SUMS, MergeKind::AddF32),
-            (SLOT_COUNTS, MergeKind::AddF32),
-        ]
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(SLOT_SUMS, handle(AddF32)), (SLOT_COUNTS, handle(AddF32))]
     }
 
     fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> KmLayout {

@@ -20,7 +20,8 @@
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
 use crate::exec::{driver, RunResult, Variant, Workload};
-use crate::merge::MergeKind;
+use crate::merge::funcs::{AddU32, CmulF32, SatAddU32};
+use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::CoreCtx;
@@ -181,13 +182,13 @@ impl Workload for KvWorkload {
         self.p.working_set_bytes()
     }
 
-    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
-        let kind = match self.p.merge {
-            KvMerge::Add => MergeKind::AddU32,
-            KvMerge::Sat { max } => MergeKind::SatAddU32 { max },
-            KvMerge::Cmul => MergeKind::CmulF32,
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        let f: MergeHandle = match self.p.merge {
+            KvMerge::Add => handle(AddU32),
+            KvMerge::Sat { max } => handle(SatAddU32 { max }),
+            KvMerge::Cmul => handle(CmulF32),
         };
-        vec![(0, kind)]
+        vec![(0, f)]
     }
 
     fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> KvLayout {

@@ -17,7 +17,8 @@
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::LockArray;
 use crate::exec::{driver, RunResult, Variant, Workload};
-use crate::merge::MergeKind;
+use crate::merge::funcs::AddF32;
+use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::CoreCtx;
@@ -160,8 +161,8 @@ impl Workload for PrWorkload {
         self.p.working_set_bytes()
     }
 
-    fn merge_slots(&self) -> Vec<(usize, MergeKind)> {
-        vec![(SLOT_RANK, MergeKind::AddF32)]
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(SLOT_RANK, handle(AddF32))]
     }
 
     fn setup(&self, mem: &mut MemSystem, variant: Variant, _cores: usize) -> PrLayout {

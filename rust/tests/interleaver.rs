@@ -2,7 +2,8 @@
 //! public `Machine` / `CoreCtx` API (moved out of `sim/machine.rs` when
 //! the module was split; the behaviour under test is unchanged).
 
-use ccache::merge::MergeKind;
+use ccache::merge::funcs::AddU32;
+use ccache::merge::handle;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::machine::{CoreCtx, Machine};
 
@@ -79,7 +80,7 @@ fn unsynchronized_ccache_increments_merge_correctly() {
     let n = 50u32;
     let mk = |_| -> Box<dyn FnOnce(&mut CoreCtx) + Send + '_> {
         Box::new(move |ctx: &mut CoreCtx| {
-            ctx.merge_init(0, MergeKind::AddU32);
+            ctx.merge_init(0, handle(AddU32));
             for _ in 0..n {
                 let v = ctx.c_read_u32(a, 0);
                 ctx.c_write_u32(a, v + 1, 0);
@@ -137,14 +138,14 @@ fn merge_boundary_pattern_makes_data_visible() {
     let a = m.setup(|mem| mem.alloc_lines(64));
     m.run(vec![
         Box::new(move |ctx: &mut CoreCtx| {
-            ctx.merge_init(0, MergeKind::AddU32);
+            ctx.merge_init(0, handle(AddU32));
             let v = ctx.c_read_u32(a, 0);
             ctx.c_write_u32(a, v + 5, 0);
             ctx.merge();
             ctx.barrier();
         }),
         Box::new(move |ctx: &mut CoreCtx| {
-            ctx.merge_init(0, MergeKind::AddU32);
+            ctx.merge_init(0, handle(AddU32));
             let v = ctx.c_read_u32(a, 0);
             ctx.c_write_u32(a, v + 7, 0);
             ctx.merge();
@@ -195,7 +196,7 @@ fn machine_runs_on_a_2_level_hierarchy() {
     let a = m.setup(|mem| mem.alloc_lines(64));
     let stats = m.run(vec![
         Box::new(move |ctx: &mut CoreCtx| {
-            ctx.merge_init(0, MergeKind::AddU32);
+            ctx.merge_init(0, handle(AddU32));
             let v = ctx.c_read_u32(a, 0);
             ctx.c_write_u32(a, v + 3, 0);
             ctx.merge();

@@ -23,10 +23,10 @@ fn upgrade_invalidates_every_sharer_and_takes_ownership() {
     let mut s = sys3(4);
     let a = s.alloc_lines(64);
     for core in 0..4 {
-        s.read(core, a);
+        s.read(core, a).unwrap();
     }
     let inv_before = s.stats.invalidations;
-    let c = s.write(0, a, 1);
+    let c = s.write(0, a, 1).unwrap();
     // L1 hit + one LLC-class directory round trip for the upgrade
     assert_eq!(c, 4 + 70);
     assert_eq!(s.stats.invalidations, inv_before + 3, "three sharers invalidated");
@@ -43,10 +43,10 @@ fn remote_fetch_from_dirty_owner_pays_forwarding_round_trip() {
     // dirty owner: 4+10+70 plus one extra LLC round trip
     let mut s = sys3(2);
     let a = s.alloc_lines(64);
-    let c_w = s.write(0, a, 9);
+    let c_w = s.write(0, a, 9).unwrap();
     assert_eq!(c_w, 4 + 10 + 70 + 300);
     let wb_before = s.stats.writebacks;
-    let (v, c_r) = s.read(1, a);
+    let (v, c_r) = s.read(1, a).unwrap();
     assert_eq!(v, 9);
     assert_eq!(c_r, 4 + 10 + 70 + 70);
     assert_eq!(s.stats.writebacks, wb_before + 1, "owner forwarded dirty data");
@@ -55,8 +55,8 @@ fn remote_fetch_from_dirty_owner_pays_forwarding_round_trip() {
     // 2-level: same transition without the L2 latency
     let mut s = sys2(2);
     let a = s.alloc_lines(64);
-    assert_eq!(s.write(0, a, 9), 4 + 70 + 300);
-    let (_, c_r) = s.read(1, a);
+    assert_eq!(s.write(0, a, 9).unwrap(), 4 + 70 + 300);
+    let (_, c_r) = s.read(1, a).unwrap();
     assert_eq!(c_r, 4 + 70 + 70);
 }
 
@@ -64,10 +64,10 @@ fn remote_fetch_from_dirty_owner_pays_forwarding_round_trip() {
 fn rfo_steals_the_line_from_a_dirty_owner() {
     let mut s = sys3(2);
     let a = s.alloc_lines(64);
-    s.write(0, a, 1); // core 0 owns M
+    s.write(0, a, 1).unwrap(); // core 0 owns M
     let inv_before = s.stats.invalidations;
     let wb_before = s.stats.writebacks;
-    let c = s.write(1, a, 2); // RFO: invalidate + fetch from owner
+    let c = s.write(1, a, 2).unwrap(); // RFO: invalidate + fetch from owner
     assert_eq!(c, 4 + 10 + 70 + 70);
     assert_eq!(s.stats.invalidations, inv_before + 1);
     assert_eq!(s.stats.writebacks, wb_before + 1);
@@ -77,7 +77,7 @@ fn rfo_steals_the_line_from_a_dirty_owner() {
     );
     // core 0's copy is dead: the next read misses
     let misses = s.stats.l1().misses;
-    let (v, _) = s.read(0, a);
+    let (v, _) = s.read(0, a).unwrap();
     assert_eq!(v, 2);
     assert_eq!(s.stats.l1().misses, misses + 1);
     s.check_invariants().unwrap();
@@ -95,7 +95,7 @@ fn evicting_a_shared_line_releases_the_registration_3_level() {
     let stride = l2_sets * 64; // same L2 set every `stride` bytes
     let addrs: Vec<Addr> = (0..=l2_ways).map(|i| Addr(base.0 + i * stride)).collect();
     for &a in &addrs {
-        s.read(0, a);
+        s.read(0, a).unwrap();
     }
     // the first line no longer lists core 0 as a sharer
     let first = addrs[0].line();
@@ -106,7 +106,7 @@ fn evicting_a_shared_line_releases_the_registration_3_level() {
     assert!(deregistered, "PutS did not deregister the evicted sharer");
     // and a write from the other core needs no invalidations for it
     let inv_before = s.stats.invalidations;
-    s.write(1, addrs[0], 5);
+    s.write(1, addrs[0], 5).unwrap();
     assert_eq!(s.stats.invalidations, inv_before);
     s.check_invariants().unwrap();
 }
@@ -123,7 +123,7 @@ fn evicting_a_shared_line_releases_the_registration_2_level() {
     let stride = l1_sets * 64;
     let addrs: Vec<Addr> = (0..=l1_ways).map(|i| Addr(base.0 + i * stride)).collect();
     for &a in &addrs {
-        s.read(0, a);
+        s.read(0, a).unwrap();
     }
     let first = addrs[0].line();
     let deregistered = s
@@ -132,7 +132,7 @@ fn evicting_a_shared_line_releases_the_registration_2_level() {
         .map_or(true, |e| !e.is_sharer(0));
     assert!(deregistered, "2-level L1 eviction must issue the put");
     let inv_before = s.stats.invalidations;
-    s.write(1, addrs[0], 5);
+    s.write(1, addrs[0], 5).unwrap();
     assert_eq!(s.stats.invalidations, inv_before);
     s.check_invariants().unwrap();
 }
@@ -144,15 +144,15 @@ fn dirty_eviction_writes_back_through_the_hierarchy() {
     let l1_ways = s.cfg.l1().ways as u64;
     let base = s.alloc_lines(64 * l1_sets * (l1_ways + 2));
     let stride = l1_sets * 64;
-    s.write(0, Addr(base.0), 77); // dirty in L1
+    s.write(0, Addr(base.0), 77).unwrap(); // dirty in L1
     let wb_before = s.stats.writebacks;
     for i in 1..=l1_ways {
-        s.read(0, Addr(base.0 + i * stride)); // force the dirty line out
+        s.read(0, Addr(base.0 + i * stride)).unwrap(); // force the dirty line out
     }
     assert!(s.stats.writebacks > wb_before, "dirty eviction must write back");
     // the data survives: it was always authoritative in flat memory, but
     // the protocol state must still be consistent
-    let (v, _) = s.read(0, Addr(base.0));
+    let (v, _) = s.read(0, Addr(base.0)).unwrap();
     assert_eq!(v, 77);
     s.check_invariants().unwrap();
 }

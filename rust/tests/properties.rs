@@ -2,14 +2,14 @@
 //! simulator's coordinator invariants: protocol-state legality, merge
 //! serializability, LRU/inclusion behaviour and merge-function algebra.
 
-use ccache::merge::funcs::apply_line;
-use ccache::merge::{LineData, MergeKind, LINE_WORDS};
+use ccache::merge::funcs::AddU32;
+use ccache::merge::{default_registry, handle, MergeRegistry};
 use ccache::sim::addr::{Addr, Line};
 use ccache::sim::cache::{Cache, Victim};
 use ccache::sim::config::MachineConfig;
 use ccache::sim::directory::Directory;
 use ccache::sim::memsys::MemSystem;
-use ccache::util::ptest::{check, PropResult};
+use ccache::util::ptest::{check, check_merge_laws, PropResult};
 use ccache::util::rng::Rng;
 
 // ---------------------------------------------------------------------
@@ -115,19 +115,19 @@ fn property_cop_increments_serialize() {
             let mut cfg = MachineConfig::test_small();
             cfg.cores = 1;
             let mut s = MemSystem::new(cfg).unwrap();
-            s.merge_init(0, 0, MergeKind::AddU32);
+            s.merge_init(0, 0, handle(AddU32));
             let base = s.alloc_lines(64 * nlines as u64);
             let mut rng = Rng::new(42);
             let mut expected = vec![0u32; nlines];
             for _ in 0..incs {
                 let k = rng.usize_below(nlines);
                 let a = Addr(base.0 + (k as u64) * 64);
-                let (v, _) = s.c_read(0, a, 0);
-                s.c_write(0, a, v + 1, 0);
-                s.soft_merge(0);
+                let (v, _) = s.c_read(0, a, 0).unwrap();
+                s.c_write(0, a, v + 1, 0).unwrap();
+                s.soft_merge(0).unwrap();
                 expected[k] += 1;
             }
-            s.merge_all(0);
+            s.merge_all(0).unwrap();
             s.check_invariants()?;
             for k in 0..nlines {
                 let got = s.peek(Addr(base.0 + k as u64 * 64));
@@ -142,75 +142,53 @@ fn property_cop_increments_serialize() {
 
 // ---------------------------------------------------------------------
 // merge-function algebra: order independence (the paper's Section 3
-// correctness condition) for every registered kind
+// correctness condition), auto-generated over the merge registry —
+// every registered function (built-in, extension or user-registered)
+// is checked without this file naming it
 // ---------------------------------------------------------------------
 
-fn rand_line(rng: &mut Rng, lo: f32, hi: f32) -> LineData {
-    let mut l = [0u32; LINE_WORDS];
-    for w in l.iter_mut() {
-        *w = rng.f32_range(lo, hi).to_bits();
-    }
-    l
+#[test]
+fn property_every_registered_merge_obeys_the_laws() {
+    check_merge_laws(&default_registry(), 0xA1, 40);
 }
 
 #[test]
-fn property_merge_kinds_order_independent() {
-    let kinds = [
-        MergeKind::AddF32,
-        MergeKind::MinF32,
-        MergeKind::MaxF32,
-        MergeKind::BitOr,
-        MergeKind::CmulF32,
-    ];
-    check(
-        0xA1,
-        40,
-        |rng| rng.below(u64::MAX),
-        |&seed| -> PropResult {
-            let mut rng = Rng::new(seed);
-            for kind in kinds {
-                let (mem0, src, a, b) = match kind {
-                    MergeKind::BitOr => {
-                        let mut mk = || {
-                            let mut l = [0u32; LINE_WORDS];
-                            for w in l.iter_mut() {
-                                *w = rng.next_u32();
-                            }
-                            l
-                        };
-                        (mk(), [0u32; LINE_WORDS], mk(), mk())
-                    }
-                    MergeKind::CmulF32 => (
-                        rand_line(&mut rng, -2.0, 2.0),
-                        rand_line(&mut rng, 1.0, 3.0),
-                        rand_line(&mut rng, 1.0, 3.0),
-                        rand_line(&mut rng, 1.0, 3.0),
-                    ),
-                    _ => (
-                        rand_line(&mut rng, -100.0, 100.0),
-                        rand_line(&mut rng, -100.0, 100.0),
-                        rand_line(&mut rng, -100.0, 100.0),
-                        rand_line(&mut rng, -100.0, 100.0),
-                    ),
-                };
-                let ab = apply_line(kind, &src, &b, &apply_line(kind, &src, &a, &mem0, false), false);
-                let ba = apply_line(kind, &src, &a, &apply_line(kind, &src, &b, &mem0, false), false);
-                for i in 0..LINE_WORDS {
-                    let (x, y) = (f32::from_bits(ab[i]), f32::from_bits(ba[i]));
-                    let exact = matches!(kind, MergeKind::BitOr | MergeKind::MinF32 | MergeKind::MaxF32);
-                    let ok = if exact {
-                        ab[i] == ba[i]
-                    } else {
-                        (x - y).abs() <= 1e-3 * (1.0 + x.abs().max(y.abs()))
-                    };
-                    if !ok {
-                        return Err(format!("{kind:?}: lane {i}: {x} vs {y}"));
-                    }
-                }
+fn property_user_registered_merge_is_law_checked_for_free() {
+    use ccache::merge::{LineData, MergeFn, LINE_WORDS};
+
+    // a brand-new function registered through the public API only
+    struct MulF32;
+    impl MergeFn for MulF32 {
+        fn name(&self) -> &str {
+            "mul_f32"
+        }
+        fn apply(&self, src: &LineData, upd: &LineData, mem: &LineData, _d: bool) -> LineData {
+            let mut out = *mem;
+            for i in 0..LINE_WORDS {
+                let (s, u, m) = (
+                    f32::from_bits(src[i]),
+                    f32::from_bits(upd[i]),
+                    f32::from_bits(mem[i]),
+                );
+                out[i] = (m * (u / s)).to_bits();
             }
-            Ok(())
-        },
-    );
+            out
+        }
+        fn sample_line(
+            &self,
+            rng: &mut ccache::util::rng::Rng,
+            _role: ccache::merge::MergeOperand,
+        ) -> LineData {
+            ccache::merge::funcs::f32_line(rng, 1.0, 4.0)
+        }
+        fn law_tolerance(&self) -> f32 {
+            1e-3
+        }
+    }
+
+    let mut reg = MergeRegistry::with_builtins();
+    reg.register("mul_f32", "multiplicative accumulation", |_| Ok(handle(MulF32)));
+    check_merge_laws(&reg, 0xA2, 40);
 }
 
 // ---------------------------------------------------------------------
@@ -228,7 +206,7 @@ fn property_memsys_invariants_random_phases() {
             cfg.cores = cores;
             let mut s = MemSystem::new(cfg).unwrap();
             for c in 0..cores {
-                s.merge_init(c, 0, MergeKind::AddU32);
+                s.merge_init(c, 0, handle(AddU32));
             }
             let cdata = s.alloc_lines(64 * 128);
             let coh = s.alloc_lines(64 * 128);
@@ -240,20 +218,20 @@ fn property_memsys_invariants_random_phases() {
                     match rng.below(4) {
                         0 | 1 => {
                             let a = Addr(cdata.0 + k * 64);
-                            let (v, _) = s.c_read(core, a, 0);
-                            s.c_write(core, a, v.wrapping_add(1), 0);
-                            s.soft_merge(core);
+                            let (v, _) = s.c_read(core, a, 0).unwrap();
+                            s.c_write(core, a, v.wrapping_add(1), 0).unwrap();
+                            s.soft_merge(core).unwrap();
                         }
                         2 => {
-                            let _ = s.read(core, Addr(coh.0 + k * 64));
+                            let _ = s.read(core, Addr(coh.0 + k * 64)).unwrap();
                         }
                         _ => {
-                            s.write(core, Addr(coh.0 + k * 64), k as u32);
+                            s.write(core, Addr(coh.0 + k * 64), k as u32).unwrap();
                         }
                     }
                 }
                 for c in 0..cores {
-                    s.merge_all(c);
+                    s.merge_all(c).unwrap();
                 }
                 s.check_invariants()?;
             }
@@ -272,12 +250,12 @@ fn pinned_overflow_panics_with_w1_message() {
         let mut cfg = MachineConfig::test_small();
         cfg.ccache.source_buffer_entries = 64;
         let mut s = MemSystem::new(cfg).unwrap();
-        s.merge_init(0, 0, MergeKind::AddU32);
+        s.merge_init(0, 0, handle(AddU32));
         let sets = s.cfg.l1().sets() as u64;
         let base = s.alloc_lines(64 * sets * 8);
         for i in 0..5u64 {
             // same set, never soft_merged -> pinned
-            s.c_read(0, Addr(base.0 + i * sets * 64), 0);
+            s.c_read(0, Addr(base.0 + i * sets * 64), 0).unwrap();
         }
     });
     let msg = match result.unwrap_err().downcast::<String>() {
@@ -288,17 +266,25 @@ fn pinned_overflow_panics_with_w1_message() {
 }
 
 #[test]
-fn uninitialized_merge_type_faults() {
-    let result = std::panic::catch_unwind(|| {
-        let mut cfg = MachineConfig::test_small();
-        cfg.ccache.dirty_merge = false;
-        let mut s = MemSystem::new(cfg).unwrap();
-        s.merge_init(0, 0, MergeKind::AddU32);
-        let a = s.alloc_lines(64);
-        // merge type 2 was never installed
-        let (v, _) = s.c_read(0, a, 2);
-        s.c_write(0, a, v + 1, 2);
-        s.merge_all(0);
-    });
-    assert!(result.is_err(), "uninitialized MFRF slot must fault");
+fn uninitialized_merge_type_is_a_typed_machine_fault() {
+    let mut cfg = MachineConfig::test_small();
+    cfg.ccache.dirty_merge = false;
+    let mut s = MemSystem::new(cfg).unwrap();
+    s.merge_init(0, 0, handle(AddU32));
+    let a = s.alloc_lines(64);
+    // merge type 2 was never installed: the COp traps with a typed
+    // fault (no panic, no state corruption)
+    let fault = s.c_read(0, a, 2).unwrap_err();
+    assert_eq!(fault.core, 0);
+    assert_eq!(fault.slot, 2);
+    assert!(fault.to_string().contains("merge_init"));
+    // the fault is recorded for execution-layer recovery
+    let recorded = s.take_fault().expect("fault recorded");
+    assert_eq!(recorded, fault);
+    // the machine stays usable on the initialized slot
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    s.c_write(0, a, v + 1, 0).unwrap();
+    s.merge_all(0).unwrap();
+    assert_eq!(s.peek(a), 1);
+    s.check_invariants().unwrap();
 }

@@ -5,7 +5,8 @@
 //! 3-level machine is unchanged, and the 2-level shape is covered
 //! alongside).
 
-use ccache::merge::MergeKind;
+use ccache::merge::funcs::{AddU32, ApproxAddF32};
+use ccache::merge::handle;
 use ccache::sim::addr::Addr;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::memsys::MemSystem;
@@ -23,10 +24,10 @@ fn read_miss_then_hit_latencies() {
     let mut s = sys();
     let a = s.alloc_lines(64);
     // cold: L1(4) + L2(10) + LLC(70) + mem(300)
-    let (_, c1) = s.read(0, a);
+    let (_, c1) = s.read(0, a).unwrap();
     assert_eq!(c1, 4 + 10 + 70 + 300);
     // hot: L1 hit
-    let (_, c2) = s.read(0, a);
+    let (_, c2) = s.read(0, a).unwrap();
     assert_eq!(c2, 4);
     assert_eq!(s.stats.l1().hits, 1);
     assert_eq!(s.stats.llc().misses, 1);
@@ -37,9 +38,9 @@ fn two_level_read_skips_the_middle_latency() {
     let mut s = sys2();
     let a = s.alloc_lines(64);
     // cold: L1(4) + LLC(70) + mem(300) — no L2 in the stack
-    let (_, c1) = s.read(0, a);
+    let (_, c1) = s.read(0, a).unwrap();
     assert_eq!(c1, 4 + 70 + 300);
-    let (_, c2) = s.read(0, a);
+    let (_, c2) = s.read(0, a).unwrap();
     assert_eq!(c2, 4);
     assert_eq!(s.stats.levels.len(), 2);
 }
@@ -48,10 +49,10 @@ fn two_level_read_skips_the_middle_latency() {
 fn write_read_roundtrip() {
     let mut s = sys();
     let a = s.alloc_lines(64);
-    s.write(0, a, 42);
-    let (v, _) = s.read(0, a);
+    s.write(0, a, 42).unwrap();
+    let (v, _) = s.read(0, a).unwrap();
     assert_eq!(v, 42);
-    let (v, _) = s.read(1, a.add(0));
+    let (v, _) = s.read(1, a.add(0)).unwrap();
     assert_eq!(v, 42);
 }
 
@@ -59,14 +60,14 @@ fn write_read_roundtrip() {
 fn write_invalidates_readers() {
     for mut s in [sys(), sys2()] {
         let a = s.alloc_lines(64);
-        s.read(0, a);
-        s.read(1, a);
+        s.read(0, a).unwrap();
+        s.read(1, a).unwrap();
         let inv_before = s.stats.invalidations;
-        s.write(0, a, 7);
+        s.write(0, a, 7).unwrap();
         assert!(s.stats.invalidations > inv_before);
         // core 1 must now miss in L1
         let l1_misses = s.stats.l1().misses;
-        s.read(1, a);
+        s.read(1, a).unwrap();
         assert_eq!(s.stats.l1().misses, l1_misses + 1);
         s.check_invariants().unwrap();
     }
@@ -76,9 +77,9 @@ fn write_invalidates_readers() {
 fn silent_upgrade_on_exclusive() {
     let mut s = sys();
     let a = s.alloc_lines(64);
-    s.read(0, a); // granted E (only reader)
+    s.read(0, a).unwrap(); // granted E (only reader)
     let msgs = s.stats.directory_msgs;
-    let c = s.write(0, a, 1); // silent E->M, L1 hit, owned
+    let c = s.write(0, a, 1).unwrap(); // silent E->M, L1 hit, owned
     assert_eq!(c, 4);
     assert_eq!(s.stats.directory_msgs, msgs);
 }
@@ -87,9 +88,9 @@ fn silent_upgrade_on_exclusive() {
 fn shared_write_pays_upgrade() {
     let mut s = sys();
     let a = s.alloc_lines(64);
-    s.read(0, a);
-    s.read(1, a); // both sharers now
-    let c = s.write(0, a, 1); // L1 hit + upgrade round trip
+    s.read(0, a).unwrap();
+    s.read(1, a).unwrap(); // both sharers now
+    let c = s.write(0, a, 1).unwrap(); // L1 hit + upgrade round trip
     assert_eq!(c, 4 + 70);
 }
 
@@ -98,9 +99,9 @@ fn cas_swaps_and_fails_correctly() {
     let mut s = sys();
     let a = s.alloc_lines(64);
     s.poke(a, 0);
-    let (ok, _) = s.cas(0, a, 0, 1);
+    let (ok, _) = s.cas(0, a, 0, 1).unwrap();
     assert!(ok);
-    let (ok, _) = s.cas(1, a, 0, 1);
+    let (ok, _) = s.cas(1, a, 0, 1).unwrap();
     assert!(!ok);
     assert_eq!(s.peek(a), 1);
 }
@@ -111,19 +112,19 @@ fn cop_privatizes_and_merges_adds() {
         let a = s.alloc_lines(64);
         s.poke(a, 100);
         for core in 0..2 {
-            s.merge_init(core, 0, MergeKind::AddU32);
+            s.merge_init(core, 0, handle(AddU32));
         }
         // both cores increment the same word privately
-        let (v0, _) = s.c_read(0, a, 0);
-        s.c_write(0, a, v0 + 1, 0);
-        let (v1, _) = s.c_read(1, a, 0);
-        s.c_write(1, a, v1 + 1, 0);
+        let (v0, _) = s.c_read(0, a, 0).unwrap();
+        s.c_write(0, a, v0 + 1, 0).unwrap();
+        let (v1, _) = s.c_read(1, a, 0).unwrap();
+        s.c_write(1, a, v1 + 1, 0).unwrap();
         assert_eq!(v0, 100);
         assert_eq!(v1, 100); // private copies, no interference
         assert_eq!(s.peek(a), 100); // memory untouched before merges
-        s.merge_all(0);
+        s.merge_all(0).unwrap();
         assert_eq!(s.peek(a), 101);
-        s.merge_all(1);
+        s.merge_all(1).unwrap();
         assert_eq!(s.peek(a), 102); // serialization of both updates
         assert_eq!(s.stats.merges, 2);
         s.check_invariants().unwrap();
@@ -134,15 +135,15 @@ fn cop_privatizes_and_merges_adds() {
 fn cop_generates_no_coherence_traffic() {
     for mut s in [sys(), sys2()] {
         let a = s.alloc_lines(64);
-        s.merge_init(0, 0, MergeKind::AddU32);
-        s.merge_init(1, 0, MergeKind::AddU32);
+        s.merge_init(0, 0, handle(AddU32));
+        s.merge_init(1, 0, handle(AddU32));
         let msgs = s.stats.directory_msgs;
         let invs = s.stats.invalidations;
         for _ in 0..10 {
-            let (v, _) = s.c_read(0, a, 0);
-            s.c_write(0, a, v + 1, 0);
-            let (v, _) = s.c_read(1, a, 0);
-            s.c_write(1, a, v + 1, 0);
+            let (v, _) = s.c_read(0, a, 0).unwrap();
+            s.c_write(0, a, v + 1, 0).unwrap();
+            let (v, _) = s.c_read(1, a, 0).unwrap();
+            s.c_write(1, a, v + 1, 0).unwrap();
         }
         assert_eq!(s.stats.directory_msgs, msgs, "COps must not touch the directory");
         assert_eq!(s.stats.invalidations, invs);
@@ -152,15 +153,15 @@ fn cop_generates_no_coherence_traffic() {
 #[test]
 fn source_buffer_capacity_forces_merge() {
     let mut s = sys();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let cap = s.cfg.ccache.source_buffer_entries;
     let base = s.alloc_lines(64 * (cap as u64 + 1));
     // touch cap+1 distinct lines; mark mergeable so L1 pressure is legal
     for i in 0..=cap as u64 {
         let addr = base.add(i * 64);
-        let (v, _) = s.c_read(0, addr, 0);
-        s.c_write(0, addr, v + 1, 0);
-        s.soft_merge(0);
+        let (v, _) = s.c_read(0, addr, 0).unwrap();
+        s.c_write(0, addr, v + 1, 0).unwrap();
+        s.soft_merge(0).unwrap();
     }
     assert!(s.stats.src_buf_evictions >= 1);
     assert!(s.stats.merges >= 1);
@@ -170,11 +171,11 @@ fn source_buffer_capacity_forces_merge() {
 #[test]
 fn dirty_merge_drops_clean_lines() {
     let mut s = sys();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let a = s.alloc_lines(64);
     s.poke(a, 5);
-    s.c_read(0, a, 0); // read-only privatization
-    s.merge_all(0);
+    s.c_read(0, a, 0).unwrap(); // read-only privatization
+    s.merge_all(0).unwrap();
     assert_eq!(s.stats.silent_drops, 1);
     assert_eq!(s.stats.merges, 0);
     assert_eq!(s.peek(a), 5);
@@ -185,10 +186,10 @@ fn no_dirty_merge_merges_clean_lines_too() {
     let mut cfg = MachineConfig::test_small();
     cfg.ccache.dirty_merge = false;
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let a = s.alloc_lines(64);
-    s.c_read(0, a, 0);
-    s.merge_all(0);
+    s.c_read(0, a, 0).unwrap();
+    s.merge_all(0).unwrap();
     assert_eq!(s.stats.silent_drops, 0);
     assert_eq!(s.stats.merges, 1);
 }
@@ -198,11 +199,11 @@ fn soft_merge_without_opt_flushes() {
     let mut cfg = MachineConfig::test_small();
     cfg.ccache.merge_on_evict = false;
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let a = s.alloc_lines(64);
-    let (v, _) = s.c_read(0, a, 0);
-    s.c_write(0, a, v + 3, 0);
-    s.soft_merge(0);
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    s.c_write(0, a, v + 3, 0).unwrap();
+    s.soft_merge(0).unwrap();
     assert_eq!(s.peek(a), 3);
     assert_eq!(s.stats.src_buf_evictions, 1);
     assert!(s.source_buffer(0).is_empty());
@@ -211,17 +212,17 @@ fn soft_merge_without_opt_flushes() {
 #[test]
 fn soft_merge_with_opt_defers() {
     let mut s = sys();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let a = s.alloc_lines(64);
-    let (v, _) = s.c_read(0, a, 0);
-    s.c_write(0, a, v + 3, 0);
-    s.soft_merge(0);
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    s.c_write(0, a, v + 3, 0).unwrap();
+    s.soft_merge(0).unwrap();
     assert_eq!(s.peek(a), 0, "merge deferred");
     assert!(!s.source_buffer(0).is_empty());
     // re-access resets the mergeable bit
-    let (v, _) = s.c_read(0, a, 0);
+    let (v, _) = s.c_read(0, a, 0).unwrap();
     assert_eq!(v, 3);
-    s.merge_all(0);
+    s.merge_all(0).unwrap();
     assert_eq!(s.peek(a), 3);
 }
 
@@ -231,13 +232,13 @@ fn pinned_cdata_overflow_deadlocks() {
     let mut cfg = MachineConfig::test_small();
     cfg.ccache.source_buffer_entries = 64; // don't trip SB capacity first
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     // L1 test_small: 1KB, 4 ways, 4 sets; fill one set with 5 pinned lines
     let sets = s.cfg.l1().sets() as u64;
     let base = s.alloc_lines(64 * sets * 8);
     for i in 0..5u64 {
         let addr = Addr(base.0 + i * sets * 64); // same set
-        s.c_read(0, addr, 0); // never soft_merged -> pinned
+        s.c_read(0, addr, 0).unwrap(); // never soft_merged -> pinned
     }
 }
 
@@ -246,13 +247,13 @@ fn approx_merge_drops_some_updates() {
     let mut cfg = MachineConfig::test_small();
     cfg.ccache.dirty_merge = true;
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::ApproxAddF32 { drop_p: 0.5 });
+    s.merge_init(0, 0, handle(ApproxAddF32 { drop_p: 0.5 }));
     let base = s.alloc_lines(64 * 64);
     for i in 0..64u64 {
         let a = base.add(i * 64);
-        let (v, _) = s.c_read(0, a, 0);
-        s.c_write(0, a, (f32::from_bits(v) + 1.0).to_bits(), 0);
-        s.merge_all(0);
+        let (v, _) = s.c_read(0, a, 0).unwrap();
+        s.c_write(0, a, (f32::from_bits(v) + 1.0).to_bits(), 0).unwrap();
+        s.merge_all(0).unwrap();
     }
     assert!(s.stats.approx_drops > 5, "drops: {}", s.stats.approx_drops);
     assert!(s.stats.approx_drops < 60);
@@ -265,13 +266,13 @@ fn approx_merge_drops_some_updates() {
 fn merge_log_records_when_enabled() {
     let mut s = sys();
     s.record_merges = true;
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let a = s.alloc_lines(64);
-    let (v, _) = s.c_read(0, a, 0);
-    s.c_write(0, a, v + 1, 0);
-    s.merge_all(0);
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    s.c_write(0, a, v + 1, 0).unwrap();
+    s.merge_all(0).unwrap();
     assert_eq!(s.merge_log.len(), 1);
-    assert_eq!(s.merge_log[0].kind, MergeKind::AddU32);
+    assert_eq!(s.merge_log[0].merge.name(), "add_u32");
     assert_eq!(s.merge_log[0].item.upd[0], 1);
 }
 

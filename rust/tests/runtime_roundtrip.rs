@@ -7,7 +7,10 @@
 //! always exercise them.
 
 use ccache::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
-use ccache::merge::{LineData, MergeKind, LINE_WORDS};
+use ccache::merge::funcs::{
+    AddF32, AddU32, ApproxAddF32, BitOr, CmulF32, MaxF32, MinF32, SatAddF32,
+};
+use ccache::merge::{LineData, MergeFn, LINE_WORDS};
 use ccache::runtime::artifacts::artifacts_available;
 use ccache::runtime::{Engine, PjrtMergeExecutor};
 use ccache::util::rng::Rng;
@@ -51,13 +54,14 @@ fn pjrt_matches_native_for_all_float_kinds() {
     }
     let mut pjrt = PjrtMergeExecutor::load_default().unwrap();
     let mut rng = Rng::new(0xF00D);
-    for kind in [
-        MergeKind::AddF32,
-        MergeKind::SatAddF32 { max: 37.0 },
-        MergeKind::MinF32,
-        MergeKind::MaxF32,
-        MergeKind::ApproxAddF32 { drop_p: 0.3 },
-    ] {
+    let kinds: [&dyn MergeFn; 5] = [
+        &AddF32,
+        &SatAddF32 { max: 37.0 },
+        &MinF32,
+        &MaxF32,
+        &ApproxAddF32 { drop_p: 0.3 },
+    ];
+    for kind in kinds {
         // batch sizes exercising padding and chunking
         for n in [1usize, 7, 256, 300, 700] {
             let items = rand_items(&mut rng, n, true);
@@ -67,7 +71,8 @@ fn pjrt_matches_native_for_all_float_kinds() {
             for (i, (a, b)) in native.iter().zip(&via).enumerate() {
                 assert!(
                     close(a, b, 1e-5),
-                    "{kind:?} n={n} item {i}: native {:?} pjrt {:?}",
+                    "{} n={n} item {i}: native {:?} pjrt {:?}",
+                    kind.name(),
                     a[0],
                     b[0]
                 );
@@ -101,8 +106,8 @@ fn pjrt_matches_native_cmul() {
             }
         })
         .collect();
-    let native = NativeExecutor.execute(MergeKind::CmulF32, &items);
-    let via = pjrt.execute(MergeKind::CmulF32, &items);
+    let native = NativeExecutor.execute(&CmulF32, &items);
+    let via = pjrt.execute(&CmulF32, &items);
     for (i, (a, b)) in native.iter().zip(&via).enumerate() {
         assert!(close(a, b, 1e-3), "cmul item {i}");
     }
@@ -133,8 +138,8 @@ fn pjrt_matches_native_bitor_exactly() {
             }
         })
         .collect();
-    let native = NativeExecutor.execute(MergeKind::BitOr, &items);
-    let via = pjrt.execute(MergeKind::BitOr, &items);
+    let native = NativeExecutor.execute(&BitOr, &items);
+    let via = pjrt.execute(&BitOr, &items);
     assert_eq!(native, via, "bitor must be bit-exact");
 }
 
@@ -169,8 +174,8 @@ fn pjrt_u32_add_exact_below_2_24() {
             }
         })
         .collect();
-    let native = NativeExecutor.execute(MergeKind::AddU32, &items);
-    let via = pjrt.execute(MergeKind::AddU32, &items);
+    let native = NativeExecutor.execute(&AddU32, &items);
+    let via = pjrt.execute(&AddU32, &items);
     assert_eq!(native, via, "u32 adds below 2^24 must round-trip exactly");
 }
 

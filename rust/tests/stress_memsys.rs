@@ -8,7 +8,8 @@
 //! a multi-core variant checks that coherence actions never corrupt
 //! another core's CData.
 
-use ccache::merge::MergeKind;
+use ccache::merge::funcs::AddU32;
+use ccache::merge::handle;
 use ccache::sim::addr::Addr;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::memsys::MemSystem;
@@ -25,7 +26,7 @@ fn random_cop_coherent_phases_keep_invariants() {
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 1;
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let cdata = s.alloc_lines(64 * 2048);
     let coh = s.alloc_lines(64 * 2048);
     let mut x: u64 = 12345;
@@ -36,30 +37,30 @@ fn random_cop_coherent_phases_keep_invariants() {
             match lcg(&mut x) % 5 {
                 0 | 1 => {
                     let a = Addr(cdata.0 + k * 64);
-                    let (v, _) = s.c_read(0, a, 0);
-                    s.c_write(0, a, v + 1, 0);
+                    let (v, _) = s.c_read(0, a, 0).unwrap();
+                    s.c_write(0, a, v + 1, 0).unwrap();
                     // w-1 discipline: keep CData evictable
-                    s.soft_merge(0);
+                    s.soft_merge(0).unwrap();
                 }
                 2 => {
-                    s.soft_merge(0);
+                    s.soft_merge(0).unwrap();
                 }
                 3 => {
-                    let _ = s.read(0, Addr(coh.0 + k * 64));
+                    let _ = s.read(0, Addr(coh.0 + k * 64)).unwrap();
                 }
                 _ => {
-                    s.write(0, Addr(coh.0 + k * 64), 7);
+                    s.write(0, Addr(coh.0 + k * 64), 7).unwrap();
                 }
             }
         }
-        s.merge_all(0);
+        s.merge_all(0).unwrap();
         s.check_invariants()
             .unwrap_or_else(|e| panic!("phase {phase} post-merge: {e}"));
         // transition phase: coherent sweep over part of the cdata region
         for i in 0..256u64 {
             let a = Addr(cdata.0 + i * 64);
             let v = s.peek(a);
-            s.write(0, a, v);
+            s.write(0, a, v).unwrap();
         }
         s.check_invariants()
             .unwrap_or_else(|e| panic!("phase {phase} post-sweep: {e}"));
@@ -75,12 +76,12 @@ fn multicore_cop_with_cross_core_coherent_traffic() {
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 2;
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let region = s.alloc_lines(64 * 512);
     let mut x = 99u64;
     // step 1: core 0 reads region coherently (directory registers it)
     for i in 0..512u64 {
-        let _ = s.read(0, Addr(region.0 + i * 64));
+        let _ = s.read(0, Addr(region.0 + i * 64)).unwrap();
     }
     // step 2: core 0 privatizes random lines in the first half; core 1
     // reads lines in the second half (invalidation-free but directory-
@@ -91,18 +92,18 @@ fn multicore_cop_with_cross_core_coherent_traffic() {
         let a = Addr(region.0 + k * 64);
         match lcg(&mut x) % 4 {
             0 | 1 => {
-                let (v, _) = s.c_read(0, a, 0);
-                s.c_write(0, a, v + 1, 0);
-                s.soft_merge(0);
+                let (v, _) = s.c_read(0, a, 0).unwrap();
+                s.c_write(0, a, v + 1, 0).unwrap();
+                s.soft_merge(0).unwrap();
                 expected[k as usize] += 1;
             }
             _ => {
                 let k2 = 256 + (k % 256);
-                let _ = s.read(1, Addr(region.0 + k2 * 64));
+                let _ = s.read(1, Addr(region.0 + k2 * 64)).unwrap();
             }
         }
     }
-    s.merge_all(0);
+    s.merge_all(0).unwrap();
     s.check_invariants().unwrap();
     // all of core 0's increments must have survived
     for k in 0..256u64 {
@@ -118,18 +119,18 @@ fn cdata_survives_other_cores_writes_to_stale_registrations() {
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 2;
     let mut s = MemSystem::new(cfg).unwrap();
-    s.merge_init(0, 0, MergeKind::AddU32);
+    s.merge_init(0, 0, handle(AddU32));
     let a = s.alloc_lines(64);
     s.poke(a, 10);
     // core 0: coherent read (dir registers, granted E)
-    let _ = s.read(0, a);
+    let _ = s.read(0, a).unwrap();
     // core 0: privatize + update (transition cleans the registration)
-    let (v, _) = s.c_read(0, a, 0);
-    s.c_write(0, a, v + 5, 0);
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    s.c_write(0, a, v + 5, 0).unwrap();
     // core 1: write the same line — must not destroy core 0's CData
-    s.write(1, a, 100);
+    s.write(1, a, 100).unwrap();
     s.check_invariants().unwrap();
     // core 0's merge applies its delta on top of core 1's write
-    s.merge_all(0);
+    s.merge_all(0).unwrap();
     assert_eq!(s.peek(a), 105);
 }
