@@ -1,0 +1,40 @@
+//! Streaming-sketch panels — count-min / Bloom / HyperLogLog working-set
+//! sweeps, the scenario-diversity counterpart of the Fig 6 panels: the
+//! sketches' merges are natively commutative (saturating add / bitwise
+//! OR / lane max), so CCache's advantage over FGL and DUP should persist
+//! on aggregation structures the paper never measured.
+//!
+//!     cargo bench --bench sketches
+//!     CCACHE_SKETCH_ZIPF=0.99 cargo bench --bench sketches   # hot keys
+
+use ccache::coordinator::{report, run_sweep_with, scaled_config, SweepOptions};
+use ccache::exec::Variant;
+
+fn main() {
+    let cfg = scaled_config();
+    let zipf: f64 = std::env::var("CCACHE_SKETCH_ZIPF")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.0);
+    for name in ["cms", "bloom", "hll"] {
+        eprintln!("== sketch {name} ==");
+        let sweep = run_sweep_with(
+            name,
+            &[Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic],
+            &[0.25, 1.0, 4.0],
+            cfg.clone(),
+            SweepOptions {
+                seed: 42,
+                zipf_theta: zipf,
+                ..Default::default()
+            },
+        );
+        report::fig6_table(&sweep).print();
+        for p in &sweep.points {
+            if let Some(s) = p.speedup_vs_fgl(Variant::Atomic) {
+                println!("  ws {:.2}: atomics speedup vs FGL {s:.2}x", p.frac);
+            }
+        }
+        println!();
+    }
+}

@@ -119,7 +119,9 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                 "    {{\"frac\": {}, \"variant\": {}, \"merge_fns\": [{}], \
                  \"cycles\": {}, \
                  \"verified\": {}, \"merges\": {}, \"silent_drops\": {}, \
-                 \"src_buf_evictions\": {}, \"llc_misses\": {}, \
+                 \"src_buf_evictions\": {}, \"ccache_l1_hits\": {}, \
+                 \"ccache_fills\": {}, \"approx_drops\": {}, \
+                 \"atomic_rmws\": {}, \"barriers\": {}, \"llc_misses\": {}, \
                  \"directory_msgs\": {}, \"invalidations\": {}, \
                  \"speedup_vs_fgl\": {}}}",
                 p.frac,
@@ -130,6 +132,11 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                 r.stats.merges,
                 r.stats.silent_drops,
                 r.stats.src_buf_evictions,
+                r.stats.ccache_l1_hits,
+                r.stats.ccache_fills,
+                r.stats.approx_drops,
+                r.stats.atomic_rmws,
+                r.stats.barriers,
                 r.stats.llc().misses,
                 r.stats.directory_msgs,
                 r.stats.invalidations,
@@ -196,6 +203,17 @@ mod tests {
         // carry an empty list
         assert!(j.contains("\"merge_fns\": [\"add_u32\"]"), "{j}");
         assert!(j.contains("\"merge_fns\": []"), "{j}");
+        // the full CCache + synchronization counter set is part of every
+        // cell record (regression: these five used to be omitted)
+        for key in [
+            "\"ccache_l1_hits\"",
+            "\"ccache_fills\"",
+            "\"approx_drops\"",
+            "\"atomic_rmws\"",
+            "\"barriers\"",
+        ] {
+            assert!(j.contains(key), "cell record missing {key}: {j}");
+        }
         assert!(j.contains("\"wall_clock_ms\""), "{j}");
         assert!(j.contains("\"levels\""), "{j}");
         assert!(j.contains("\"LLC\""), "{j}");

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::exec::registry::{self, SizeSpec};
+use crate::exec::registry::{self, SizeSpec, SketchSpec};
 use crate::exec::workload::WorkloadHandle;
 use crate::exec::{RunResult, Variant};
 use crate::sim::config::MachineConfig;
@@ -33,6 +33,8 @@ pub struct SweepOptions {
     pub zipf_theta: f64,
     /// Worker threads for the cell grid; 0 = all host cores.
     pub jobs: usize,
+    /// Sketch geometry knobs (ignored by non-sketch workloads).
+    pub sketch: SketchSpec,
 }
 
 impl Default for SweepOptions {
@@ -41,6 +43,7 @@ impl Default for SweepOptions {
             seed: 42,
             zipf_theta: 0.0,
             jobs: 0,
+            sketch: SketchSpec::default(),
         }
     }
 }
@@ -57,9 +60,15 @@ impl SweepPoint {
     }
 
     /// Speedup of `v` relative to the FGL baseline at this point.
+    /// `None` when either cell is missing *or* reports zero cycles — a
+    /// zero-cycle cell is a degenerate (empty-program) run, and dividing
+    /// by it would leak `inf`/`NaN` into tables and `sweep --json`.
     pub fn speedup_vs_fgl(&self, v: Variant) -> Option<f64> {
         let base = self.get(Variant::Fgl)?;
         let other = self.get(v)?;
+        if base.cycles() == 0 || other.cycles() == 0 {
+            return None;
+        }
         Some(base.cycles() as f64 / other.cycles() as f64)
     }
 }
@@ -134,7 +143,7 @@ pub fn run_sweep_skewed(
         SweepOptions {
             seed,
             zipf_theta,
-            jobs: 0,
+            ..Default::default()
         },
     )
 }
@@ -162,7 +171,8 @@ pub fn run_sweep_with(
         .iter()
         .map(|&frac| {
             let size = SizeSpec::new(frac, cfg.llc().size_bytes, opts.seed)
-                .with_zipf(opts.zipf_theta);
+                .with_zipf(opts.zipf_theta)
+                .with_sketch(opts.sketch);
             (frac, spec.build(&size))
         })
         .collect();
@@ -276,6 +286,43 @@ mod tests {
     }
 
     #[test]
+    fn zero_cycle_cells_report_no_speedup_instead_of_inf() {
+        use crate::exec::RunResult;
+        use crate::sim::stats::Stats;
+        let mk = |v: Variant, cyc: u64| RunResult {
+            benchmark: "synthetic".into(),
+            variant: v,
+            stats: {
+                let mut s = Stats::new(1, 3);
+                s.core_cycles = vec![cyc];
+                s
+            },
+            verified: true,
+            quality: None,
+            merge_fns: Vec::new(),
+        };
+        // degenerate CCache cell: zero cycles must not divide through
+        let p = SweepPoint {
+            frac: 1.0,
+            results: vec![mk(Variant::Fgl, 100), mk(Variant::CCache, 0)],
+        };
+        assert_eq!(p.speedup_vs_fgl(Variant::CCache), None);
+        // degenerate baseline poisons every ratio the same way
+        let p = SweepPoint {
+            frac: 1.0,
+            results: vec![mk(Variant::Fgl, 0), mk(Variant::CCache, 50)],
+        };
+        assert_eq!(p.speedup_vs_fgl(Variant::CCache), None);
+        assert_eq!(p.speedup_vs_fgl(Variant::Fgl), None);
+        // healthy cells are unaffected
+        let p = SweepPoint {
+            frac: 1.0,
+            results: vec![mk(Variant::Fgl, 100), mk(Variant::CCache, 50)],
+        };
+        assert_eq!(p.speedup_vs_fgl(Variant::CCache), Some(2.0));
+    }
+
+    #[test]
     fn unsupported_variants_skip_cells_instead_of_aborting() {
         let mut cfg = MachineConfig::test_small();
         cfg.cores = 2;
@@ -304,8 +351,8 @@ mod tests {
                 cfg.clone(),
                 SweepOptions {
                     seed: 7,
-                    zipf_theta: 0.0,
                     jobs,
+                    ..Default::default()
                 },
             )
         };

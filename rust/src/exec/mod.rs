@@ -25,7 +25,7 @@ pub mod scaffold;
 pub mod workload;
 
 pub use error::ExecError;
-pub use registry::{SizeSpec, WorkloadSpec};
+pub use registry::{SizeSpec, SketchSpec, WorkloadSpec};
 pub use workload::{Workload, WorkloadHandle};
 
 use crate::sim::stats::Stats;

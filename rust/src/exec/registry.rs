@@ -8,23 +8,41 @@
 
 use crate::workloads::graph::GraphKind;
 use crate::workloads::kvstore::KvMerge;
-use crate::workloads::{bfs, histogram, kmeans, kvstore, pagerank};
+use crate::workloads::{bfs, bloom, cms, histogram, hll, kmeans, kvstore, pagerank};
 
 use super::error::ExecError;
 use super::workload::WorkloadHandle;
 use super::Variant;
 
+/// Geometry knobs for the streaming-sketch workloads, carried alongside
+/// the size spec so sweeps and the CLI reshape sketches without new
+/// plumbing. `0` means "derive the default from the size spec".
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SketchSpec {
+    /// Count-min hash rows (`--cms-depth`; default 4).
+    pub cms_depth: usize,
+    /// Bloom probes per key (`--bloom-hashes`; default 4).
+    pub bloom_hashes: usize,
+    /// HyperLogLog precision `p`, registers = 2^p (`--hll-p`; default:
+    /// derived from the target working set, 1 byte per register).
+    pub hll_precision: usize,
+}
+
 /// How to size a workload instance: the working set of its contended
 /// structure targets `frac` x the LLC capacity (the paper's Section 6.1
-/// sweep axis), plus the RNG seed and the key-skew ablation knob.
+/// sweep axis), plus the RNG seed, the key-skew ablation knob and the
+/// sketch geometry knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SizeSpec {
     pub frac: f64,
     pub llc_bytes: usize,
     pub seed: u64,
     /// 0.0 = uniform keys (the paper); >0 = zipf-skewed keys for the
-    /// workloads with a key distribution (kvstore, histogram).
+    /// workloads with a key distribution (kvstore, histogram, and the
+    /// sketch family's key/item streams).
     pub zipf_theta: f64,
+    /// Sketch geometry (ignored by non-sketch workloads).
+    pub sketch: SketchSpec,
 }
 
 impl SizeSpec {
@@ -34,11 +52,17 @@ impl SizeSpec {
             llc_bytes,
             seed,
             zipf_theta: 0.0,
+            sketch: SketchSpec::default(),
         }
     }
 
     pub fn with_zipf(mut self, theta: f64) -> Self {
         self.zipf_theta = theta;
+        self
+    }
+
+    pub fn with_sketch(mut self, sketch: SketchSpec) -> Self {
+        self.sketch = sketch;
         self
     }
 
@@ -119,6 +143,18 @@ fn build_bfs_uniform(s: &SizeSpec) -> WorkloadHandle {
 
 fn build_histogram(s: &SizeSpec) -> WorkloadHandle {
     WorkloadHandle::new(histogram::HgWorkload::sized(s))
+}
+
+fn build_cms(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(cms::CmsWorkload::sized(s))
+}
+
+fn build_bloom(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(bloom::BloomWorkload::sized(s))
+}
+
+fn build_hll(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(hll::HllWorkload::sized(s))
 }
 
 static REGISTRY: &[WorkloadSpec] = &[
@@ -242,6 +278,36 @@ static REGISTRY: &[WorkloadSpec] = &[
         core: false,
         build: build_histogram,
     },
+    WorkloadSpec {
+        name: "cms",
+        aliases: &["count-min", "countmin"],
+        summary: "count-min sketch ingest, saturating per-cell counters",
+        variants: &cms::VARIANTS,
+        key_skew: true,
+        fig6: false,
+        core: false,
+        build: build_cms,
+    },
+    WorkloadSpec {
+        name: "bloom",
+        aliases: &["bloomfilter"],
+        summary: "Bloom-filter ingest, bitwise-OR merged bit array",
+        variants: &bloom::VARIANTS,
+        key_skew: true,
+        fig6: false,
+        core: false,
+        build: build_bloom,
+    },
+    WorkloadSpec {
+        name: "hll",
+        aliases: &["hyperloglog"],
+        summary: "HyperLogLog cardinality, lane-max merged registers",
+        variants: &hll::VARIANTS,
+        key_skew: true,
+        fig6: false,
+        core: false,
+        build: build_hll,
+    },
 ];
 
 /// Every registered workload, in display order.
@@ -293,6 +359,8 @@ mod tests {
         assert_eq!(lookup("BFS").unwrap().name, "bfs-rmat");
         assert_eq!(lookup("pagerank").unwrap().name, "pagerank-uniform");
         assert_eq!(lookup("hist").unwrap().name, "histogram");
+        assert_eq!(lookup("count-min").unwrap().name, "cms");
+        assert_eq!(lookup("hyperloglog").unwrap().name, "hll");
         assert!(matches!(
             lookup("nope"),
             Err(ExecError::UnknownBenchmark { .. })
@@ -302,7 +370,8 @@ mod tests {
     #[test]
     fn key_skew_marks_exactly_the_keyed_workloads() {
         for s in registry() {
-            let expect = s.name.starts_with("kvstore") || s.name == "histogram";
+            let expect = s.name.starts_with("kvstore")
+                || matches!(s.name, "histogram" | "cms" | "bloom" | "hll");
             assert_eq!(s.key_skew, expect, "{}: key_skew flag wrong", s.name);
         }
     }
@@ -311,7 +380,10 @@ mod tests {
     fn panel_sets() {
         assert_eq!(fig6_panels().len(), 10);
         assert_eq!(core_panels().len(), 4);
-        assert!(registry().len() >= 12, "histogram must be registered");
+        assert!(
+            registry().len() >= 15,
+            "histogram and the sketch family must be registered"
+        );
     }
 
     #[test]

@@ -21,8 +21,11 @@
 //!   ([`merge::ext`]: XOR, log-sum-exp) registered through the same
 //!   public API any user function uses.
 //! * [`workloads`] — the benchmark suite (key-value store, K-Means,
-//!   PageRank, BFS, histogram) plus the graph substrate and generators;
-//!   each benchmark is one [`exec::Workload`] trait impl.
+//!   PageRank, BFS, histogram, and the streaming-sketch family:
+//!   count-min, Bloom filter, HyperLogLog) plus the graph substrate and
+//!   generators; each benchmark is one [`exec::Workload`] trait impl.
+//!   `workloads::sketch` also defines the `max_u8x64` merge function,
+//!   registered through the public merge registry only.
 //! * [`exec`] — the execution layer: the variants the paper compares
 //!   (coarse/fine-grained locking, static duplication, atomics, CCache),
 //!   the [`exec::Workload`] trait, the generic [`exec::driver`] that

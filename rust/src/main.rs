@@ -20,26 +20,45 @@
 //! fault raised by the simulated machine — prints a diagnostic and
 //! exits 2 instead of panicking.
 //!
+//! The streaming-sketch family (`cms`, `bloom`, `hll`) takes geometry
+//! flags (`--cms-depth`, `--bloom-hashes`, `--hll-p`); its `max_u8x64`
+//! merge function is registered *here*, through the public registry API
+//! (`workloads::sketch::register_sketch_merges`) — consumer-side
+//! registration, exactly what a downstream crate would do.
+//!
 //! Examples:
 //!   ccache run --bench kvstore --variant ccache
 //!   ccache run --bench kvstore --variant ccache --merge sat_add_u32:100
 //!   ccache run --bench histogram --variant ccache --zipf 0.9
+//!   ccache run --bench cms --variant ccache --zipf 0.99 --cms-depth 4
+//!   ccache run --bench hll --variant ccache --hll-p 12
 //!   ccache run --bench kvstore --variant ccache --levels 2 --llc-kb 512
-//!   ccache sweep --bench pagerank-rmat --jobs 8 --json pagerank_sweep.json
+//!   ccache sweep --bench bloom --jobs 8 --json bloom_sweep.json
 //!   ccache --list-merges
 //!   ccache runtime
 
 use ccache::coordinator::{report, run_sweep_with, scaled_config, SweepOptions, WS_FRACTIONS};
-use ccache::exec::registry::{self, SizeSpec};
+use ccache::exec::registry::{self, SizeSpec, SketchSpec};
 use ccache::exec::{ExecError, Variant, WorkloadSpec};
 use ccache::merge;
+use ccache::merge::MergeRegistry;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::overhead::OverheadModel;
 use ccache::util::cli::Args;
+use ccache::workloads::sketch::register_sketch_merges;
 
 fn fail(msg: impl std::fmt::Display) -> ! {
     eprintln!("error: {msg}");
     std::process::exit(2);
+}
+
+/// The CLI's merge registry: the built-ins + extensions, plus the
+/// workload-layer sketch merges — registered through the same public
+/// `register` call any downstream user gets (no `merge/` edits).
+fn merge_registry() -> MergeRegistry {
+    let mut reg = merge::default_registry();
+    register_sketch_merges(&mut reg);
+    reg
 }
 
 /// Reject a --zipf theta the benchmark would ignore or the sampler
@@ -68,7 +87,10 @@ fn main() {
         .opt("frac", "1.0", "working set as a fraction of LLC capacity")
         .opt("seed", "42", "workload RNG seed")
         .opt("cores", "0", "override core count (0 = config default)")
-        .opt("zipf", "0.0", "zipf key-skew theta for kvstore/histogram (0 = uniform)")
+        .opt("zipf", "0.0", "zipf key-skew theta for keyed workloads (0 = uniform)")
+        .opt("cms-depth", "0", "count-min hash rows (0 = default 4)")
+        .opt("bloom-hashes", "0", "Bloom probes per key (0 = default 4)")
+        .opt("hll-p", "0", "HyperLogLog precision, registers = 2^p (0 = derived)")
         .opt("levels", "3", "hierarchy depth: 2 (L1+LLC), 3 (Table 2), 4 (adds an L3)")
         .opt("llc-kb", "0", "override shared LLC size in KiB (0 = config default)")
         .opt("l2-kb", "0", "override L2 size in KiB (0 = default; needs --levels >= 3)")
@@ -84,7 +106,7 @@ fn main() {
 
     if args.has("list-merges") {
         println!("merge functions (name — idempotent — summary):");
-        for spec in merge::default_registry().iter() {
+        for spec in merge_registry().iter() {
             let idem = spec
                 .build(None)
                 .map(|f| if f.idempotent() { "yes" } else { "no " })
@@ -135,6 +157,15 @@ fn main() {
         cfg.level_mut(1).size_bytes = l2_kb << 10;
     }
     let zipf_theta = args.get_f64("zipf");
+    let hll_p = args.get_usize("hll-p");
+    if hll_p != 0 && !(4..=16).contains(&hll_p) {
+        fail(format!("--hll-p must be 0 (derived) or in 4..=16, got {hll_p}"));
+    }
+    let sketch = SketchSpec {
+        cms_depth: args.get_usize("cms-depth"),
+        bloom_hashes: args.get_usize("bloom-hashes"),
+        hll_precision: hll_p,
+    };
 
     match cmd.as_str() {
         "run" => {
@@ -160,7 +191,7 @@ fn main() {
                             variant.name()
                         ));
                     }
-                    match merge::default_registry().build(spec_str) {
+                    match merge_registry().build(spec_str) {
                         Ok(f) => Some(f),
                         Err(e) => fail(e), // unknown merge / bad param -> exit 2
                     }
@@ -168,7 +199,8 @@ fn main() {
             };
             let size =
                 SizeSpec::new(args.get_f64("frac"), cfg.llc().size_bytes, args.get_u64("seed"))
-                    .with_zipf(zipf_theta);
+                    .with_zipf(zipf_theta)
+                    .with_sketch(sketch);
             let bench = spec.build(&size);
             eprintln!(
                 "running {} / {} on {}...",
@@ -224,6 +256,7 @@ fn main() {
                     seed: args.get_u64("seed"),
                     zipf_theta,
                     jobs: args.get_usize("jobs"),
+                    sketch,
                 },
             );
             report::fig6_table(&sweep).print();

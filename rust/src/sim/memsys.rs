@@ -302,7 +302,15 @@ impl MemSystem {
                 if write {
                     m.dirty = true;
                 }
-                m.merge_type = ty;
+                // a COp may re-type an already-privatized line: the
+                // source-buffer slot binding must follow the L1 meta, or
+                // the eventual merge resolves the stale slot captured at
+                // privatization (invariant 5). Re-typing is rare, so the
+                // source-buffer scan is gated on an actual change.
+                if m.merge_type != ty {
+                    m.merge_type = ty;
+                    self.src_buf[core].set_merge_type(line, ty);
+                }
                 return Ok(self.cfg.l1().hit_cycles);
             }
             // fall through: phase transition handled below
@@ -360,8 +368,13 @@ impl MemSystem {
     /// mergeable (merge-on-evict). Without the optimization this is a
     /// full merge (the Fig 9 baseline) — the policy decides.
     pub fn soft_merge(&mut self, core: usize) -> Result<u64, MergeFault> {
+        let entries = self.src_buf[core].valid_entries();
+        // an empty source buffer makes soft_merge a no-op in both policy
+        // paths: nothing to mark (or flush), so it costs 0 cycles
+        if entries.is_empty() {
+            return Ok(0);
+        }
         if !self.policy.defers_soft_merge() {
-            let entries = self.src_buf[core].valid_entries();
             let mut cycles = 0;
             for e in entries {
                 self.stats.src_buf_evictions += 1;
@@ -370,7 +383,7 @@ impl MemSystem {
             return Ok(cycles);
         }
         let mut marked: u64 = 0;
-        for e in self.src_buf[core].valid_entries() {
+        for e in entries {
             if let Some(idx) = self.path.innermost(core).probe(e.line) {
                 self.path.innermost_mut(core).meta_mut(idx).mergeable = true;
                 marked += 1;
@@ -486,7 +499,10 @@ impl MemSystem {
     /// 1. every valid source-buffer entry has a CData line innermost;
     /// 2. every CData line has a source-buffer entry and a private copy;
     /// 3. CData lines never appear outside the innermost level;
-    /// 4. the directory's internal state is consistent.
+    /// 4. the directory's internal state is consistent;
+    /// 5. every source-buffer entry's merge-type slot equals its L1
+    ///    meta's — a COp re-typing a privatized line must rebind both
+    ///    (the merge engine resolves the source-buffer slot).
     pub fn check_invariants(&self) -> Result<(), String> {
         for core in 0..self.cfg.cores {
             for e in self.src_buf[core].valid_entries() {
@@ -495,10 +511,18 @@ impl MemSystem {
                     .innermost(core)
                     .probe(e.line)
                     .ok_or(format!("core {core}: src-buf line {:#x} not in L1", e.line.0))?;
-                if !self.path.innermost(core).meta(idx).ccache {
+                let meta = self.path.innermost(core).meta(idx);
+                if !meta.ccache {
                     return Err(format!(
                         "core {core}: src-buf line {:#x} in L1 without CCache bit",
                         e.line.0
+                    ));
+                }
+                if meta.merge_type != e.merge_type {
+                    return Err(format!(
+                        "core {core}: line {:#x} merge-type skew (L1 meta slot {} \
+                         vs src-buf slot {})",
+                        e.line.0, meta.merge_type, e.merge_type
                     ));
                 }
             }

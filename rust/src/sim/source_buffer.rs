@@ -14,10 +14,14 @@ pub struct SourceEntry {
     pub line: Line,
     pub data: LineData,
     /// MFRF slot index of the line's merge function — the buffer stores
-    /// the *slot*, not the function: `merge_init` may rebind a slot, and
-    /// the MFRF ([`crate::sim::mfrf::Mfrf`]) resolves the installed
+    /// the *slot*, not the function: the MFRF
+    /// ([`crate::sim::mfrf::Mfrf`]) resolves the installed
     /// [`MergeHandle`](crate::merge::MergeHandle) at merge time, exactly
-    /// as the hardware would read the register file.
+    /// as the hardware would read the register file. `merge_init` may
+    /// rebind a slot, and a COp may re-type the line itself —
+    /// [`SourceBuffer::set_merge_type`] keeps this field in lock-step
+    /// with the L1 meta's merge-type bits so the merge engine resolves
+    /// the function the *last* COp named.
     pub merge_type: u8,
     lru: u64,
     valid: bool,
@@ -107,6 +111,21 @@ impl SourceBuffer {
         };
     }
 
+    /// Rebind the merge-type slot of `line`'s entry (no-op when the line
+    /// holds no source copy). A COp that re-types an already-privatized
+    /// line rewrites the L1 meta's merge-type field; the source copy's
+    /// binding must follow, or the eventual merge resolves the *stale*
+    /// slot (see `MemSystem::check_invariants`, invariant 5).
+    pub fn set_merge_type(&mut self, line: Line, merge_type: u8) {
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.valid && e.line == line)
+        {
+            e.merge_type = merge_type;
+        }
+    }
+
     /// Remove `line`'s entry, returning it.
     pub fn remove(&mut self, line: Line) -> Option<SourceEntry> {
         let e = self
@@ -182,6 +201,19 @@ mod tests {
         sb.insert(l(1), [0; 16], 0);
         sb.insert(l(2), [0; 16], 0);
         sb.insert(l(3), [0; 16], 0);
+    }
+
+    #[test]
+    fn set_merge_type_rebinds_only_the_named_line() {
+        let mut sb = SourceBuffer::new(4);
+        sb.insert(l(1), [0; 16], 0);
+        sb.insert(l(2), [0; 16], 0);
+        sb.set_merge_type(l(1), 3);
+        assert_eq!(sb.get(l(1)).unwrap().merge_type, 3);
+        assert_eq!(sb.get(l(2)).unwrap().merge_type, 0);
+        // absent lines are a no-op, not a panic
+        sb.set_merge_type(l(9), 1);
+        assert!(!sb.contains(l(9)));
     }
 
     #[test]

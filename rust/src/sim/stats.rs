@@ -159,10 +159,15 @@ impl fmt::Display for Stats {
         writeln!(f, "invalidations     {:>14}", self.invalidations)?;
         writeln!(f, "writebacks        {:>14}", self.writebacks)?;
         writeln!(f, "COps              {:>14}", self.cops)?;
+        writeln!(f, "ccache L1 hits    {:>14}", self.ccache_l1_hits)?;
+        writeln!(f, "ccache fills      {:>14}", self.ccache_fills)?;
         writeln!(f, "merges            {:>14}", self.merges)?;
         writeln!(f, "src-buf evictions {:>14}", self.src_buf_evictions)?;
         writeln!(f, "silent drops      {:>14}", self.silent_drops)?;
+        writeln!(f, "approx drops      {:>14}", self.approx_drops)?;
         writeln!(f, "lock acq/retry    {:>14}/{}", self.lock_acquires, self.lock_retries)?;
+        writeln!(f, "atomic RMWs       {:>14}", self.atomic_rmws)?;
+        writeln!(f, "barriers          {:>14}", self.barriers)?;
         writeln!(f, "bytes allocated   {:>14}", self.bytes_allocated)
     }
 }
@@ -211,5 +216,28 @@ mod tests {
         assert!(text.contains("directory msgs"));
         assert!(text.contains("L3"));
         assert!(text.contains("LLC"));
+    }
+
+    #[test]
+    fn display_emits_every_ccache_and_sync_counter() {
+        // regression: these were collected but never rendered, so runs
+        // silently hid the CCache hit/fill split and the sync traffic
+        let mut s = Stats::new(1, 3);
+        s.ccache_l1_hits = 11;
+        s.ccache_fills = 7;
+        s.approx_drops = 3;
+        s.atomic_rmws = 19;
+        s.barriers = 5;
+        let text = format!("{s}");
+        for (label, value) in [
+            ("ccache L1 hits", "11"),
+            ("ccache fills", "7"),
+            ("approx drops", "3"),
+            ("atomic RMWs", "19"),
+            ("barriers", "5"),
+        ] {
+            assert!(text.contains(label), "missing label {label}: {text}");
+            assert!(text.contains(value), "missing value {value}: {text}");
+        }
     }
 }

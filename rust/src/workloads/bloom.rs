@@ -1,0 +1,361 @@
+//! Bloom-filter ingest — streaming set membership over a shared bit
+//! array: cores stream keys and set `hashes` hashed bits per key.
+//! Bitwise OR is idempotent and commutative, so the CCache variant
+//! reuses the BFS bitmap merge ([`BitOr`]) and every interleaving
+//! produces the identical bit array — verification is exact equality
+//! with the sequential golden filter (and, by construction, zero false
+//! negatives).
+//!
+//! The contended structure is the bit array itself: hot words shared by
+//! every core are exactly the sharing-induced private-cache-miss pattern
+//! the ROADMAP's scenario-diversity goal targets.
+
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray};
+use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::merge::funcs::BitOr;
+use crate::merge::{handle, MergeHandle};
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
+use crate::workloads::sketch::{hash_key, keyed_stream};
+
+/// Salt base for the probe hash family.
+const PROBE_SALT: u64 = 0xB1_00;
+
+#[derive(Clone, Debug)]
+pub struct BloomParams {
+    /// Keys ingested.
+    pub items: usize,
+    /// Filter size in bits (rounded up to whole u32 words).
+    pub bits: usize,
+    /// Probes (bits set) per key.
+    pub hashes: usize,
+    pub seed: u64,
+    /// 0.0 = uniform keys; >0 = zipf-skewed (hot keys re-inserted).
+    pub zipf_theta: f64,
+}
+
+impl Default for BloomParams {
+    fn default() -> Self {
+        Self {
+            items: 8192,
+            bits: 1 << 16,
+            hashes: 4,
+            seed: 0xB1_003,
+            zipf_theta: 0.0,
+        }
+    }
+}
+
+impl BloomParams {
+    /// Bit-array words (the filter is word-granular in memory).
+    pub fn words(&self) -> usize {
+        self.bits.div_ceil(32)
+    }
+
+    /// Distinct keys the stream draws from.
+    pub fn key_space(&self) -> usize {
+        // ~m/8 distinct keys with k=4 keeps the fill factor in the
+        // filter's useful range
+        (self.bits / 8).max(64)
+    }
+
+    /// Input stream + bit array (the Fig 6 x-axis).
+    pub fn working_set_bytes(&self) -> u64 {
+        (self.items * 4 + self.words() * 4) as u64
+    }
+
+    /// The bit index of probe `h` for `key`.
+    pub fn probe(&self, key: u64, h: usize) -> u64 {
+        hash_key(key, PROBE_SALT + h as u64) % (self.words() as u64 * 32)
+    }
+}
+
+/// Host-side key stream (shared by programs and the golden run).
+fn key_stream(p: &BloomParams) -> Vec<u32> {
+    keyed_stream(p.seed ^ 0xB100_77, p.items, p.key_space(), p.zipf_theta)
+}
+
+/// Sequential golden filter: the bit array as u32 words.
+pub fn golden_words(p: &BloomParams) -> Vec<u32> {
+    let mut words = vec![0u32; p.words()];
+    for key in key_stream(p) {
+        for h in 0..p.hashes {
+            let bit = p.probe(key as u64, h);
+            words[(bit / 32) as usize] |= 1 << (bit % 32);
+        }
+    }
+    words
+}
+
+/// Membership query against a golden (or any) word array.
+pub fn contains(p: &BloomParams, words: &[u32], key: u64) -> bool {
+    (0..p.hashes).all(|h| {
+        let bit = p.probe(key, h);
+        words[(bit / 32) as usize] & (1 << (bit % 32)) != 0
+    })
+}
+
+#[derive(Clone, Copy)]
+pub struct BloomLayout {
+    input: Addr,
+    words: Addr,
+    locks: LockArray,
+    copies: DupSpace,
+}
+
+const SLOT_BITOR: usize = 0;
+
+/// The variants Bloom implements (CGL is pointless for a bit array the
+/// paper's FGL already locks at word granularity).
+pub const VARIANTS: [Variant; 4] = [
+    Variant::Fgl,
+    Variant::Dup,
+    Variant::CCache,
+    Variant::Atomic,
+];
+
+pub struct BloomWorkload {
+    p: BloomParams,
+}
+
+impl BloomWorkload {
+    pub fn new(p: BloomParams) -> Self {
+        Self { p }
+    }
+
+    /// Size the bit array to `frac` x LLC; the stream scales with it.
+    pub fn sized(s: &SizeSpec) -> Self {
+        let hashes = if s.sketch.bloom_hashes > 0 {
+            s.sketch.bloom_hashes
+        } else {
+            4
+        };
+        let bits = (s.target_bytes() * 8).max(2048) as usize;
+        Self::new(BloomParams {
+            items: (bits / 8).max(1024),
+            bits,
+            hashes,
+            seed: s.seed,
+            zipf_theta: s.zipf_theta,
+        })
+    }
+
+    pub fn params(&self) -> &BloomParams {
+        &self.p
+    }
+}
+
+impl Workload for BloomWorkload {
+    type Layout = BloomLayout;
+    type Golden = Vec<u32>;
+
+    fn name(&self) -> String {
+        "bloom".into()
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(SLOT_BITOR, handle(BitOr))]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> BloomLayout {
+        let p = &self.p;
+        let input = mem.alloc_lines(p.items as u64 * 4);
+        for (i, k) in key_stream(p).into_iter().enumerate() {
+            mem.poke(input.add(i as u64 * 4), k);
+        }
+        let words = mem.alloc_lines(p.words() as u64 * 4);
+        let mut l = BloomLayout {
+            input,
+            words,
+            locks: LockArray::none(),
+            copies: DupSpace::none(),
+        };
+        match variant {
+            Variant::Fgl => {
+                // one padded lock per bitmap word, as in BFS
+                l.locks = LockArray::alloc(mem, p.words() as u64, 64);
+            }
+            Variant::Dup => {
+                l.copies = DupSpace::alloc(mem, p.words() as u64 * 4, cores);
+            }
+            _ => {}
+        }
+        l
+    }
+
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &BloomLayout,
+    ) {
+        let p = &self.p;
+        let lo = core * p.items / cores;
+        let hi = (core + 1) * p.items / cores;
+        for i in lo..hi {
+            let key = ctx.read_u32(l.input.add(i as u64 * 4)) as u64;
+            for h in 0..p.hashes {
+                let b = p.probe(key, h);
+                let (w, bit) = (b / 32, 1u32 << (b % 32));
+                let a = l.words.add(w * 4);
+                match variant {
+                    Variant::Fgl => {
+                        l.locks.lock(ctx, w);
+                        let v = ctx.read_u32(a);
+                        ctx.write_u32(a, v | bit);
+                        l.locks.unlock(ctx, w);
+                    }
+                    Variant::Dup => {
+                        let pa = l.copies.copy_base(core).add(w * 4);
+                        let v = ctx.read_u32(pa);
+                        ctx.write_u32(pa, v | bit);
+                    }
+                    Variant::CCache => {
+                        let v = ctx.c_read_u32(a, SLOT_BITOR as u8);
+                        ctx.c_write_u32(a, v | bit, SLOT_BITOR as u8);
+                        ctx.soft_merge();
+                    }
+                    Variant::Atomic => {
+                        ctx.fetch_or_u32(a, bit);
+                    }
+                    Variant::Cgl => unreachable!("driver rejects unsupported variants"),
+                }
+                ctx.compute(2);
+            }
+        }
+        if variant == Variant::CCache {
+            ctx.merge();
+        }
+        ctx.barrier();
+        if variant == Variant::Dup {
+            // OR-reduce every core's private bit array into the master,
+            // word range partitioned across cores
+            let words = p.words() as u64;
+            let lo = core as u64 * words / cores as u64;
+            let hi = (core as u64 + 1) * words / cores as u64;
+            for w in lo..hi {
+                let master = l.words.add(w * 4);
+                let mut acc = ctx.read_u32(master);
+                for c in 0..cores {
+                    acc |= ctx.read_u32(l.copies.copy_base(c).add(w * 4));
+                    ctx.compute(1);
+                }
+                ctx.write_u32(master, acc);
+            }
+            ctx.barrier();
+        }
+    }
+
+    fn golden(&self, _cores: usize) -> Vec<u32> {
+        golden_words(&self.p)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &BloomLayout,
+        gold: &Vec<u32>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let ok = (0..self.p.words()).all(|w| mem.peek(l.words.add(w as u64 * 4)) == gold[w]);
+        (ok, None)
+    }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &BloomParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&BloomWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecError;
+
+    fn small() -> BloomParams {
+        BloomParams {
+            items: 2048,
+            bits: 1 << 13,
+            hashes: 3,
+            seed: 31,
+            zipf_theta: 0.0,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_variants_verify() {
+        for v in VARIANTS {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged from golden");
+        }
+    }
+
+    #[test]
+    fn zipf_stream_verifies() {
+        let p = BloomParams {
+            zipf_theta: 0.9,
+            ..small()
+        };
+        for v in [Variant::Fgl, Variant::CCache, Variant::Atomic] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {v:?} diverged");
+        }
+    }
+
+    #[test]
+    fn no_false_negatives() {
+        let p = small();
+        let words = golden_words(&p);
+        for k in key_stream(&p) {
+            assert!(
+                contains(&p, &words, k as u64),
+                "inserted key {k} queries negative"
+            );
+        }
+        // the filter is not degenerate (some bits still clear)
+        let set: u32 = words.iter().map(|w| w.count_ones()).sum();
+        assert!((set as usize) < p.words() * 32, "filter saturated");
+        assert!(set > 0);
+    }
+
+    #[test]
+    fn ccache_merges_with_bitor() {
+        let r = run(&small(), Variant::CCache, cfg());
+        assert!(r.stats.merges > 0);
+        assert_eq!(r.merge_fns, vec!["bitor".to_string()]);
+    }
+
+    #[test]
+    fn cgl_is_a_typed_error() {
+        let r = driver::run(&BloomWorkload::new(small()), Variant::Cgl, cfg());
+        assert!(matches!(
+            r,
+            Err(ExecError::UnsupportedVariant { variant: Variant::Cgl, .. })
+        ));
+    }
+
+    #[test]
+    fn sized_respects_hash_override() {
+        let mut s = SizeSpec::new(0.25, 1 << 16, 1);
+        s.sketch.bloom_hashes = 7;
+        let w = BloomWorkload::sized(&s);
+        assert_eq!(w.params().hashes, 7);
+    }
+}

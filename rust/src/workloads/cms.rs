@@ -1,0 +1,397 @@
+//! Count-min sketch ingest — the first of the streaming-sketch workload
+//! family: cores stream a zipf- (or uniformly-) keyed update stream and
+//! increment `depth` hashed cells per key in a `depth x width` counter
+//! matrix. Per-cell counters saturate at [`CmsParams::sat_max`]
+//! (narrow-counter emulation), so the CCache variant installs the
+//! saturating-add merge ([`SatAddU32`]) — the Section 6.3 "software
+//! merge functions generalize" scenario at sketch scale.
+//!
+//! Saturating increments commute: the final cell value is
+//! `min(total_increments, sat_max)` under every interleaving and every
+//! merge schedule, so verification demands *exact* equality with the
+//! sequential golden sketch on all variants.
+
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
+use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::merge::funcs::SatAddU32;
+use crate::merge::{handle, MergeHandle};
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
+use crate::workloads::sketch::{hash_key, keyed_stream};
+
+/// Salt base for the per-row hash family.
+const ROW_SALT: u64 = 0xC0_55;
+
+#[derive(Clone, Debug)]
+pub struct CmsParams {
+    /// Stream length (keys ingested).
+    pub items: usize,
+    /// Cells per row.
+    pub width: usize,
+    /// Hash rows.
+    pub depth: usize,
+    /// Per-cell saturation ceiling (narrow-counter emulation).
+    pub sat_max: u32,
+    pub seed: u64,
+    /// 0.0 = uniform keys; >0 = zipf-skewed hot keys.
+    pub zipf_theta: f64,
+}
+
+impl Default for CmsParams {
+    fn default() -> Self {
+        Self {
+            items: 16384,
+            width: 1024,
+            depth: 4,
+            sat_max: 65535,
+            seed: 0xC3_5,
+            zipf_theta: 0.0,
+        }
+    }
+}
+
+impl CmsParams {
+    /// Distinct keys the stream draws from (4x the row width keeps the
+    /// sketch in its over-subscribed, collision-bearing regime).
+    pub fn key_space(&self) -> usize {
+        self.width * 4
+    }
+
+    /// Input stream + counter matrix (the Fig 6 x-axis).
+    pub fn working_set_bytes(&self) -> u64 {
+        (self.items * 4 + self.depth * self.width * 4) as u64
+    }
+
+    /// The hashed column of `key` in row `r`.
+    pub fn column(&self, key: u64, r: usize) -> u64 {
+        hash_key(key, ROW_SALT + r as u64) % self.width as u64
+    }
+}
+
+/// Host-side key stream (shared by programs and the golden run).
+fn key_stream(p: &CmsParams) -> Vec<u32> {
+    keyed_stream(p.seed ^ 0xC4_5517, p.items, p.key_space(), p.zipf_theta)
+}
+
+/// Sequential golden sketch: row-major `depth x width` saturated counts.
+pub fn golden_cells(p: &CmsParams) -> Vec<u32> {
+    let mut cells = vec![0u32; p.depth * p.width];
+    for key in key_stream(p) {
+        for r in 0..p.depth {
+            let c = p.column(key as u64, r) as usize;
+            let cell = &mut cells[r * p.width + c];
+            *cell = cell.saturating_add(1).min(p.sat_max);
+        }
+    }
+    cells
+}
+
+/// Point query against a golden (or any row-major) cell array: the
+/// count-min estimate is the minimum over the key's row cells.
+pub fn point_query(p: &CmsParams, cells: &[u32], key: u64) -> u32 {
+    (0..p.depth)
+        .map(|r| cells[r * p.width + p.column(key, r) as usize])
+        .min()
+        .unwrap_or(0)
+}
+
+#[derive(Clone, Copy)]
+pub struct CmsLayout {
+    input: Addr,
+    /// Row-major `depth x width` u32 counter matrix.
+    cells: Addr,
+    global_lock: Addr,
+    locks: LockArray,
+    copies: DupSpace,
+}
+
+/// CMS implements every variant, like histogram (the CAS-loop atomic
+/// saturating increment included).
+pub const VARIANTS: [Variant; 5] = [
+    Variant::Cgl,
+    Variant::Fgl,
+    Variant::Dup,
+    Variant::CCache,
+    Variant::Atomic,
+];
+
+pub struct CmsWorkload {
+    p: CmsParams,
+}
+
+impl CmsWorkload {
+    pub fn new(p: CmsParams) -> Self {
+        Self { p }
+    }
+
+    /// Size the counter matrix to `frac` x LLC; the stream scales with
+    /// the width so per-cell traffic stays constant across fractions.
+    pub fn sized(s: &SizeSpec) -> Self {
+        let depth = if s.sketch.cms_depth > 0 {
+            s.sketch.cms_depth
+        } else {
+            4
+        };
+        let width = (s.target_bytes() / (4 * depth as u64)).max(64) as usize;
+        Self::new(CmsParams {
+            items: (width * 4).max(2048),
+            width,
+            depth,
+            sat_max: 65535,
+            seed: s.seed,
+            zipf_theta: s.zipf_theta,
+        })
+    }
+
+    pub fn params(&self) -> &CmsParams {
+        &self.p
+    }
+}
+
+impl Workload for CmsWorkload {
+    type Layout = CmsLayout;
+    type Golden = Vec<u32>;
+
+    fn name(&self) -> String {
+        "cms".into()
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(0, handle(SatAddU32 { max: self.p.sat_max }))]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> CmsLayout {
+        let p = &self.p;
+        let input = mem.alloc_lines(p.items as u64 * 4);
+        for (i, k) in key_stream(p).into_iter().enumerate() {
+            mem.poke(input.add(i as u64 * 4), k);
+        }
+        let cells = mem.alloc_lines((p.depth * p.width) as u64 * 4);
+        let mut l = CmsLayout {
+            input,
+            cells,
+            global_lock: Addr(0),
+            locks: LockArray::none(),
+            copies: DupSpace::none(),
+        };
+        match variant {
+            Variant::Cgl => l.global_lock = mem.alloc_lines(64),
+            Variant::Fgl => {
+                l.locks = LockArray::alloc(
+                    mem,
+                    (p.depth * p.width) as u64,
+                    PTHREAD_LOCK_BYTES,
+                )
+            }
+            Variant::Dup => {
+                l.copies = DupSpace::alloc(mem, (p.depth * p.width) as u64 * 4, cores)
+            }
+            _ => {}
+        }
+        l
+    }
+
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &CmsLayout,
+    ) {
+        let p = &self.p;
+        let lo = core * p.items / cores;
+        let hi = (core + 1) * p.items / cores;
+        for i in lo..hi {
+            let key = ctx.read_u32(l.input.add(i as u64 * 4)) as u64;
+            for r in 0..p.depth {
+                let cell = (r as u64) * p.width as u64 + p.column(key, r);
+                let a = l.cells.add(cell * 4);
+                match variant {
+                    Variant::Cgl | Variant::Fgl => {
+                        let lock = if variant == Variant::Fgl {
+                            l.locks.addr(cell)
+                        } else {
+                            l.global_lock
+                        };
+                        ctx.lock(lock);
+                        let v = ctx.read_u32(a);
+                        ctx.write_u32(a, v.saturating_add(1).min(p.sat_max));
+                        ctx.unlock(lock);
+                    }
+                    Variant::Dup => {
+                        // private copies hold raw counts; the reduction
+                        // applies the clamp against the master (the same
+                        // contract as the saturating merge function)
+                        let pa = l.copies.copy_base(core).add(cell * 4);
+                        let v = ctx.read_u32(pa);
+                        ctx.write_u32(pa, v.wrapping_add(1));
+                    }
+                    Variant::CCache => {
+                        let v = ctx.c_read_u32(a, 0);
+                        ctx.c_write_u32(a, v.saturating_add(1).min(p.sat_max), 0);
+                        ctx.soft_merge();
+                    }
+                    Variant::Atomic => loop {
+                        let v = ctx.read_u32(a);
+                        let n = v.saturating_add(1).min(p.sat_max);
+                        if n == v {
+                            break; // already saturated: nothing to publish
+                        }
+                        if ctx.cas_u32(a, v, n) {
+                            break;
+                        }
+                    },
+                }
+                ctx.compute(2);
+            }
+        }
+        if variant == Variant::CCache {
+            ctx.merge();
+        }
+        ctx.barrier();
+        if variant == Variant::Dup {
+            let cells = (p.depth * p.width) as u64;
+            let lo = core as u64 * cells / cores as u64;
+            let hi = (core as u64 + 1) * cells / cores as u64;
+            for cell in lo..hi {
+                let master = l.cells.add(cell * 4);
+                let mut acc = ctx.read_u32(master);
+                for c in 0..cores {
+                    let v = ctx.read_u32(l.copies.copy_base(c).add(cell * 4));
+                    acc = acc.saturating_add(v);
+                    ctx.compute(1);
+                }
+                ctx.write_u32(master, acc.min(p.sat_max));
+            }
+            ctx.barrier();
+        }
+    }
+
+    fn golden(&self, _cores: usize) -> Vec<u32> {
+        golden_cells(&self.p)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &CmsLayout,
+        gold: &Vec<u32>,
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let n = self.p.depth * self.p.width;
+        let ok = (0..n).all(|i| mem.peek(l.cells.add(i as u64 * 4)) == gold[i]);
+        (ok, None)
+    }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &CmsParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&CmsWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CmsParams {
+        CmsParams {
+            items: 4096,
+            width: 256,
+            depth: 3,
+            sat_max: 65535,
+            seed: 21,
+            zipf_theta: 0.0,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_five_variants_verify() {
+        for v in VARIANTS {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged from golden");
+        }
+    }
+
+    #[test]
+    fn zipf_stream_verifies_and_concentrates() {
+        let p = CmsParams {
+            zipf_theta: 0.99,
+            ..small()
+        };
+        for v in [Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {v:?} diverged");
+        }
+        // the hottest key dominates under heavy skew
+        let cells = golden_cells(&p);
+        let max = *cells.iter().max().unwrap() as f64;
+        let mean = p.items as f64 / p.width as f64;
+        assert!(max > 4.0 * mean, "zipf should concentrate: {max} vs {mean}");
+    }
+
+    #[test]
+    fn tiny_sat_max_clamps_identically_on_every_variant() {
+        // a 2-bit-counter-style ceiling forces the saturating paths
+        let p = CmsParams {
+            sat_max: 3,
+            zipf_theta: 0.99,
+            ..small()
+        };
+        let gold = golden_cells(&p);
+        assert!(gold.iter().any(|&c| c == 3), "clamp never engaged");
+        for v in VARIANTS {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {v:?} diverged under saturation");
+        }
+    }
+
+    #[test]
+    fn point_queries_never_undercount() {
+        let p = small();
+        let cells = golden_cells(&p);
+        // true per-key counts
+        let mut truth = vec![0u32; p.key_space()];
+        for k in key_stream(&p) {
+            truth[k as usize] += 1;
+        }
+        for (k, &t) in truth.iter().enumerate() {
+            let est = point_query(&p, &cells, k as u64);
+            assert!(
+                est >= t.min(p.sat_max),
+                "key {k}: estimate {est} < true {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn ccache_merges_with_the_saturating_function() {
+        let r = run(&small(), Variant::CCache, cfg());
+        assert!(r.stats.merges > 0);
+        assert_eq!(r.merge_fns, vec!["sat_add_u32".to_string()]);
+    }
+
+    #[test]
+    fn sized_respects_depth_override() {
+        let mut s = SizeSpec::new(0.25, 1 << 16, 1);
+        s.sketch.cms_depth = 2;
+        let w = CmsWorkload::sized(&s);
+        assert_eq!(w.params().depth, 2);
+        assert!(w.footprint() > 0);
+    }
+}

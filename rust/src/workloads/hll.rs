@@ -1,0 +1,447 @@
+//! HyperLogLog cardinality estimation — the third streaming-sketch
+//! workload: cores stream item ids and raise `m = 2^p` rank registers
+//! (packed four u8 registers per u32 word) to the lane-wise max of the
+//! observed hash ranks. The merge is [`MaxU8x64`] — a merge function
+//! defined in the *workload* layer and registered purely through the
+//! public [`MergeRegistry`](crate::merge::MergeRegistry) API, proving
+//! the merge layer is open one layer further out than `merge/ext.rs`.
+//!
+//! Lane max is idempotent and commutative, so every variant must produce
+//! the *bit-identical* register array of the sequential golden run;
+//! verification additionally checks the cardinality estimate against the
+//! stream's true distinct count (the quality metric reported for the
+//! run).
+
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray};
+use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::merge::{handle, MergeHandle};
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::CoreCtx;
+use crate::sim::memsys::MemSystem;
+use crate::workloads::sketch::{
+    hash_key, keyed_stream, lane_get, lane_max_word, lane_set, MaxU8x64,
+};
+
+/// Salt of the single item-hash function.
+const ITEM_SALT: u64 = 0x177;
+
+#[derive(Clone, Debug)]
+pub struct HllParams {
+    /// Items streamed (with repeats; the estimator counts distincts).
+    pub items: usize,
+    /// Precision: `m = 2^precision` registers. 4..=16.
+    pub precision: usize,
+    pub seed: u64,
+    /// 0.0 = uniform item ids; >0 = zipf-skewed (heavy repeats).
+    pub zipf_theta: f64,
+}
+
+impl Default for HllParams {
+    fn default() -> Self {
+        Self {
+            items: 16384,
+            precision: 10,
+            seed: 0x4117,
+            zipf_theta: 0.0,
+        }
+    }
+}
+
+impl HllParams {
+    /// Register count `m = 2^precision`.
+    pub fn registers(&self) -> usize {
+        1 << self.precision
+    }
+
+    /// Packed u32 words holding the registers (4 per word).
+    pub fn words(&self) -> usize {
+        self.registers() / 4
+    }
+
+    /// Distinct item ids the stream draws from.
+    pub fn key_space(&self) -> usize {
+        self.items.max(16)
+    }
+
+    /// Input stream + register array (the Fig 6 x-axis).
+    pub fn working_set_bytes(&self) -> u64 {
+        (self.items * 4 + self.registers()) as u64
+    }
+
+    /// `(register index, rank)` of one item: the top `precision` hash
+    /// bits select the register, the leading-zero run of the rest (+1)
+    /// is the rank, capped so it fits the register width.
+    pub fn index_rank(&self, item: u64) -> (usize, u8) {
+        let h = hash_key(item, ITEM_SALT);
+        let idx = (h >> (64 - self.precision)) as usize;
+        let tail = h << self.precision;
+        let rank = (tail.leading_zeros() as u8 + 1).min((64 - self.precision + 1) as u8);
+        (idx, rank)
+    }
+}
+
+/// Host-side item stream (shared by programs and the golden run).
+fn item_stream(p: &HllParams) -> Vec<u32> {
+    keyed_stream(p.seed ^ 0x477_11, p.items, p.key_space(), p.zipf_theta)
+}
+
+/// Sequential golden run: the register array (one u8 rank per register).
+pub fn golden_registers(p: &HllParams) -> Vec<u8> {
+    let mut regs = vec![0u8; p.registers()];
+    for item in item_stream(p) {
+        let (idx, rank) = p.index_rank(item as u64);
+        regs[idx] = regs[idx].max(rank);
+    }
+    regs
+}
+
+/// True distinct count of the stream (what the estimator approximates).
+pub fn true_cardinality(p: &HllParams) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    for item in item_stream(p) {
+        seen.insert(item);
+    }
+    seen.len()
+}
+
+/// The HyperLogLog estimate of a register array, with the standard
+/// small-range (linear counting) correction.
+pub fn estimate(regs: &[u8]) -> f64 {
+    let m = regs.len() as f64;
+    let alpha = match regs.len() {
+        16 => 0.673,
+        32 => 0.697,
+        64 => 0.709,
+        _ => 0.7213 / (1.0 + 1.079 / m),
+    };
+    let sum: f64 = regs.iter().map(|&r| 2f64.powi(-(r as i32))).sum();
+    let raw = alpha * m * m / sum;
+    if raw <= 2.5 * m {
+        let zeros = regs.iter().filter(|&&r| r == 0).count();
+        if zeros > 0 {
+            return m * (m / zeros as f64).ln();
+        }
+    }
+    raw
+}
+
+#[derive(Clone, Copy)]
+pub struct HllLayout {
+    input: Addr,
+    /// Packed register words (4 u8 registers per u32, little-lane).
+    words: Addr,
+    locks: LockArray,
+    copies: DupSpace,
+}
+
+const SLOT_MAX: usize = 0;
+
+/// The variants HLL implements (CGL is pointless at this granularity).
+pub const VARIANTS: [Variant; 4] = [
+    Variant::Fgl,
+    Variant::Dup,
+    Variant::CCache,
+    Variant::Atomic,
+];
+
+pub struct HllWorkload {
+    p: HllParams,
+}
+
+impl HllWorkload {
+    pub fn new(p: HllParams) -> Self {
+        assert!(
+            (4..=16).contains(&p.precision),
+            "HLL precision must be in 4..=16, got {}",
+            p.precision
+        );
+        Self { p }
+    }
+
+    /// Size the register array to `frac` x LLC (1 byte per register),
+    /// unless an explicit precision override is given.
+    pub fn sized(s: &SizeSpec) -> Self {
+        let precision = if s.sketch.hll_precision > 0 {
+            s.sketch.hll_precision
+        } else {
+            // largest p with 2^p <= target bytes, clamped to the legal range
+            (s.target_bytes().max(64).ilog2() as usize).clamp(4, 16)
+        };
+        let m = 1usize << precision;
+        Self::new(HllParams {
+            items: (m * 4).max(2048),
+            precision,
+            seed: s.seed,
+            zipf_theta: s.zipf_theta,
+        })
+    }
+
+    pub fn params(&self) -> &HllParams {
+        &self.p
+    }
+
+    /// Estimate tolerance for verification: generous multiple of the
+    /// estimator's theoretical standard error `1.04/sqrt(m)` so healthy
+    /// runs never flake, while a broken estimator or register array
+    /// still fails loudly.
+    pub fn tolerance(&self) -> f64 {
+        (5.0 * 1.04 / (self.p.registers() as f64).sqrt()).max(0.25)
+    }
+}
+
+impl Workload for HllWorkload {
+    type Layout = HllLayout;
+    type Golden = (Vec<u8>, usize);
+
+    fn name(&self) -> String {
+        "hll".into()
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        // the workload-layer merge function: no `merge/` edit anywhere
+        vec![(SLOT_MAX, handle(MaxU8x64))]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> HllLayout {
+        let p = &self.p;
+        let input = mem.alloc_lines(p.items as u64 * 4);
+        for (i, k) in item_stream(p).into_iter().enumerate() {
+            mem.poke(input.add(i as u64 * 4), k);
+        }
+        let words = mem.alloc_lines(p.words() as u64 * 4);
+        let mut l = HllLayout {
+            input,
+            words,
+            locks: LockArray::none(),
+            copies: DupSpace::none(),
+        };
+        match variant {
+            Variant::Fgl => {
+                // one padded lock per packed register word
+                l.locks = LockArray::alloc(mem, p.words() as u64, 64);
+            }
+            Variant::Dup => {
+                l.copies = DupSpace::alloc(mem, p.words() as u64 * 4, cores);
+            }
+            _ => {}
+        }
+        l
+    }
+
+    fn program(
+        &self,
+        ctx: &mut CoreCtx,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &HllLayout,
+    ) {
+        let p = &self.p;
+        let lo = core * p.items / cores;
+        let hi = (core + 1) * p.items / cores;
+        for i in lo..hi {
+            let item = ctx.read_u32(l.input.add(i as u64 * 4)) as u64;
+            let (idx, rank) = p.index_rank(item);
+            let (w, lane) = ((idx / 4) as u64, idx % 4);
+            let a = l.words.add(w * 4);
+            match variant {
+                Variant::Fgl => {
+                    l.locks.lock(ctx, w);
+                    let v = ctx.read_u32(a);
+                    if rank > lane_get(v, lane) {
+                        ctx.write_u32(a, lane_set(v, lane, rank));
+                    }
+                    l.locks.unlock(ctx, w);
+                }
+                Variant::Dup => {
+                    let pa = l.copies.copy_base(core).add(w * 4);
+                    let v = ctx.read_u32(pa);
+                    if rank > lane_get(v, lane) {
+                        ctx.write_u32(pa, lane_set(v, lane, rank));
+                    }
+                }
+                Variant::CCache => {
+                    let v = ctx.c_read_u32(a, SLOT_MAX as u8);
+                    if rank > lane_get(v, lane) {
+                        ctx.c_write_u32(a, lane_set(v, lane, rank), SLOT_MAX as u8);
+                    }
+                    // the c_read alone privatizes: keep the line evictable
+                    ctx.soft_merge();
+                }
+                Variant::Atomic => loop {
+                    let v = ctx.read_u32(a);
+                    if rank <= lane_get(v, lane) {
+                        break; // register already covers this rank
+                    }
+                    if ctx.cas_u32(a, v, lane_set(v, lane, rank)) {
+                        break;
+                    }
+                },
+                Variant::Cgl => unreachable!("driver rejects unsupported variants"),
+            }
+            ctx.compute(4);
+        }
+        if variant == Variant::CCache {
+            ctx.merge();
+        }
+        ctx.barrier();
+        if variant == Variant::Dup {
+            // lane-max reduce every core's registers into the master
+            let words = p.words() as u64;
+            let lo = core as u64 * words / cores as u64;
+            let hi = (core as u64 + 1) * words / cores as u64;
+            for w in lo..hi {
+                let master = l.words.add(w * 4);
+                let mut acc = ctx.read_u32(master);
+                for c in 0..cores {
+                    acc = lane_max_word(acc, ctx.read_u32(l.copies.copy_base(c).add(w * 4)));
+                    ctx.compute(1);
+                }
+                ctx.write_u32(master, acc);
+            }
+            ctx.barrier();
+        }
+    }
+
+    fn golden(&self, _cores: usize) -> (Vec<u8>, usize) {
+        (golden_registers(&self.p), true_cardinality(&self.p))
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &HllLayout,
+        gold: &(Vec<u8>, usize),
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        let (gold_regs, truth) = gold;
+        // 1. register-array equality (bit-exact: lane max commutes)
+        let mut regs = vec![0u8; self.p.registers()];
+        let mut equal = true;
+        for w in 0..self.p.words() {
+            let v = mem.peek(l.words.add(w as u64 * 4));
+            for lane in 0..4 {
+                let r = lane_get(v, lane);
+                regs[w * 4 + lane] = r;
+                equal &= r == gold_regs[w * 4 + lane];
+            }
+        }
+        // 2. the estimate tracks the true cardinality
+        let est = estimate(&regs);
+        let quality = (est - *truth as f64).abs() / (*truth as f64).max(1.0);
+        (equal && quality <= self.tolerance(), Some(quality))
+    }
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &HllParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&HllWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> HllParams {
+        HllParams {
+            items: 4096,
+            precision: 8,
+            seed: 17,
+            zipf_theta: 0.0,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn all_variants_verify_with_estimate_quality() {
+        for v in VARIANTS {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged from golden");
+            let q = r.quality.expect("HLL reports estimate quality");
+            assert!(q < 0.35, "estimate error {q} too large");
+        }
+    }
+
+    #[test]
+    fn zipf_stream_verifies() {
+        let p = HllParams {
+            zipf_theta: 0.99,
+            ..small()
+        };
+        for v in [Variant::Fgl, Variant::CCache, Variant::Dup] {
+            let r = run(&p, v, cfg());
+            assert!(r.verified, "variant {v:?} diverged");
+        }
+        // heavy skew shrinks the distinct set the estimator must track
+        assert!(true_cardinality(&p) < true_cardinality(&small()));
+    }
+
+    #[test]
+    fn estimator_tracks_known_cardinalities() {
+        // feed n distinct synthetic items straight into golden registers
+        for n in [100usize, 1000, 10000] {
+            let p = HllParams {
+                precision: 10,
+                ..small()
+            };
+            let mut regs = vec![0u8; p.registers()];
+            for item in 0..n as u64 {
+                let (idx, rank) = p.index_rank(item);
+                regs[idx] = regs[idx].max(rank);
+            }
+            let est = estimate(&regs);
+            let err = (est - n as f64).abs() / n as f64;
+            assert!(err < 0.15, "n={n}: estimate {est} err {err}");
+        }
+    }
+
+    #[test]
+    fn rank_is_capped_to_register_width() {
+        let p = small();
+        for item in 0..10_000u64 {
+            let (idx, rank) = p.index_rank(item);
+            assert!(idx < p.registers());
+            assert!((1..=(64 - p.precision + 1) as u8).contains(&rank));
+        }
+    }
+
+    #[test]
+    fn ccache_merges_with_the_workload_layer_function() {
+        let r = run(&small(), Variant::CCache, cfg());
+        assert!(r.stats.merges > 0);
+        assert_eq!(r.merge_fns, vec!["max_u8x64".to_string()]);
+    }
+
+    #[test]
+    fn sized_respects_precision_override_and_derives_otherwise() {
+        let mut s = SizeSpec::new(0.25, 1 << 16, 1);
+        let derived = HllWorkload::sized(&s);
+        // 16 KiB target -> 2^14 registers
+        assert_eq!(derived.params().precision, 14);
+        s.sketch.hll_precision = 6;
+        let forced = HllWorkload::sized(&s);
+        assert_eq!(forced.params().precision, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "precision must be in 4..=16")]
+    fn illegal_precision_is_rejected_at_construction() {
+        HllWorkload::new(HllParams {
+            precision: 2,
+            ..small()
+        });
+    }
+}

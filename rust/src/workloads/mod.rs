@@ -14,6 +14,11 @@
 //!   with an additional atomics variant (Section 6.2)
 //! * [`histogram`] — streaming binned counts with uniform/zipf skew: the
 //!   classic privatization workload, and the template for new scenarios
+//! * [`cms`] / [`bloom`] / [`hll`] — the streaming-sketch family
+//!   (count-min, Bloom filter, HyperLogLog): natively-commutative
+//!   aggregation under heavy keyed traffic; [`sketch`] holds the shared
+//!   hashing substrate and the workload-layer `max_u8x64` merge function
+//!   (registered through the public merge registry only)
 //! * [`graph`] — CSR + RMAT / SSCA / uniform generators (Graph500/GAP
 //!   input substitution)
 //!
@@ -25,8 +30,12 @@
 //! enumeration here anymore.
 
 pub mod bfs;
+pub mod bloom;
+pub mod cms;
 pub mod graph;
 pub mod histogram;
+pub mod hll;
 pub mod kmeans;
 pub mod kvstore;
 pub mod pagerank;
+pub mod sketch;

@@ -1,0 +1,186 @@
+//! Shared substrate for the streaming-sketch workload family
+//! ([`cms`](crate::workloads::cms), [`bloom`](crate::workloads::bloom),
+//! [`hll`](crate::workloads::hll)): salted 64-bit hashing, u8-lane
+//! packing helpers, and the [`MaxU8x64`] merge function.
+//!
+//! `MaxU8x64` is deliberately defined *here*, in the workload layer, and
+//! registered only through the public
+//! [`MergeRegistry::register`](crate::merge::MergeRegistry::register)
+//! call — the same proof shape as `merge/ext.rs`, one layer further out:
+//! no file under `merge/` names it, no match arm dispatches on it, yet it
+//! drives the HyperLogLog workload to golden verification and is
+//! law-checked by the auto-generated suite like any built-in. That is the
+//! openness property the merge-API redesign exists to provide.
+
+use crate::merge::registry::{no_param, MergeRegistry};
+use crate::merge::{handle, LineData, MergeFn, MergeOperand, LINE_WORDS};
+use crate::util::rng::{Rng, Zipf};
+
+// ---------------------------------------------------------------------
+// hashing
+// ---------------------------------------------------------------------
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mixer.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Salted key hash: the row/probe family every sketch derives its
+/// per-row (CMS), per-probe (Bloom) and register (HLL) indices from.
+/// Distinct salts give effectively independent hash functions.
+#[inline]
+pub fn hash_key(key: u64, salt: u64) -> u64 {
+    mix64(key ^ mix64(salt.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1)))
+}
+
+/// Host-side uniform-or-zipf key/item stream over `[0, key_space)` —
+/// the shared generator behind every sketch's ingest stream (programs
+/// and golden runs consume the same vector). `seed` is the workload
+/// seed already salted per sketch, so streams stay decorrelated.
+pub fn keyed_stream(seed: u64, items: usize, key_space: usize, zipf_theta: f64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let zipf = (zipf_theta > 0.0).then(|| Zipf::new(key_space, zipf_theta));
+    (0..items)
+        .map(|_| match &zipf {
+            Some(z) => z.sample(&mut rng) as u32,
+            None => rng.usize_below(key_space) as u32,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// u8-lane packing (HLL registers: 4 registers per u32 word)
+// ---------------------------------------------------------------------
+
+/// Extract u8 lane `lane` (0..4) of a packed word.
+#[inline]
+pub fn lane_get(word: u32, lane: usize) -> u8 {
+    word.to_le_bytes()[lane]
+}
+
+/// Return `word` with u8 lane `lane` replaced by `val`.
+#[inline]
+pub fn lane_set(word: u32, lane: usize, val: u8) -> u32 {
+    let mut b = word.to_le_bytes();
+    b[lane] = val;
+    u32::from_le_bytes(b)
+}
+
+/// Lane-wise u8 max of two packed words.
+#[inline]
+pub fn lane_max_word(a: u32, b: u32) -> u32 {
+    let (x, y) = (a.to_le_bytes(), b.to_le_bytes());
+    u32::from_le_bytes([
+        x[0].max(y[0]),
+        x[1].max(y[1]),
+        x[2].max(y[2]),
+        x[3].max(y[3]),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// the max_u8x64 merge function
+// ---------------------------------------------------------------------
+
+/// `mem = max(mem, upd)` lane-wise over the line's 64 u8 lanes — the
+/// HyperLogLog register merge (each 64-byte line holds 64 packed
+/// registers). Max is commutative, associative and idempotent, so the
+/// source copy is ignored and re-merging is harmless. No AOT batch
+/// kernel: the PJRT batch path transparently falls back to this native
+/// `apply`.
+pub struct MaxU8x64;
+
+impl MergeFn for MaxU8x64 {
+    fn name(&self) -> &str {
+        "max_u8x64"
+    }
+
+    fn apply(&self, _src: &LineData, upd: &LineData, mem: &LineData, _drop: bool) -> LineData {
+        let mut out = *mem;
+        for i in 0..LINE_WORDS {
+            out[i] = lane_max_word(mem[i], upd[i]);
+        }
+        out
+    }
+
+    fn idempotent(&self) -> bool {
+        true
+    }
+
+    fn sample_line(&self, rng: &mut Rng, _role: MergeOperand) -> LineData {
+        // lane max is defined bit-exactly for every byte pattern: draw
+        // the full u32 domain rather than the default f32 range
+        let mut l = [0u32; LINE_WORDS];
+        for w in l.iter_mut() {
+            *w = rng.next_u32();
+        }
+        l
+    }
+}
+
+/// Register the sketch merge functions into `reg` — consumer-side
+/// registration through the exact public API any downstream crate would
+/// use (the CLI and the property suite both call this; nothing under
+/// `merge/` knows these functions exist).
+pub fn register_sketch_merges(reg: &mut MergeRegistry) {
+    reg.register(
+        "max_u8x64",
+        "lane-wise u8 max over 64 lanes (HLL registers)",
+        |p| {
+            no_param("max_u8x64", p)?;
+            Ok(handle(MaxU8x64))
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_salts_decorrelate() {
+        // the same key under different salts must land on different
+        // values essentially always
+        let same = (0..1000u64)
+            .filter(|&k| hash_key(k, 1) % 64 == hash_key(k, 2) % 64)
+            .count();
+        assert!(same < 40, "salted hashes too correlated: {same}/1000");
+    }
+
+    #[test]
+    fn lane_roundtrip_and_max() {
+        let w = u32::from_le_bytes([1, 200, 3, 40]);
+        assert_eq!(lane_get(w, 1), 200);
+        assert_eq!(lane_get(lane_set(w, 2, 99), 2), 99);
+        let a = u32::from_le_bytes([1, 200, 3, 40]);
+        let b = u32::from_le_bytes([9, 100, 3, 41]);
+        assert_eq!(lane_max_word(a, b), u32::from_le_bytes([9, 200, 3, 41]));
+    }
+
+    #[test]
+    fn max_u8x64_is_lane_max_and_idempotent() {
+        let mem = [u32::from_le_bytes([5, 0, 255, 7]); LINE_WORDS];
+        let upd = [u32::from_le_bytes([4, 9, 1, 7]); LINE_WORDS];
+        let src = [0u32; LINE_WORDS];
+        let once = MaxU8x64.apply(&src, &upd, &mem, false);
+        assert_eq!(once, [u32::from_le_bytes([5, 9, 255, 7]); LINE_WORDS]);
+        let twice = MaxU8x64.apply(&src, &upd, &once, false);
+        assert_eq!(twice, once, "idempotence");
+        assert!(MaxU8x64.idempotent());
+    }
+
+    #[test]
+    fn max_u8x64_registers_through_the_public_api_and_obeys_the_laws() {
+        use crate::merge::default_registry;
+        use crate::util::ptest::check_merge_fn_laws;
+        let mut reg = default_registry();
+        register_sketch_merges(&mut reg);
+        let f = reg.build("max_u8x64").unwrap();
+        assert_eq!(f.name(), "max_u8x64");
+        assert!(f.idempotent());
+        check_merge_fn_laws(f.as_ref(), 0x5C, 50);
+    }
+}

@@ -153,6 +153,18 @@ fn property_every_registered_merge_obeys_the_laws() {
 }
 
 #[test]
+fn property_sketch_merges_register_publicly_and_obey_the_laws() {
+    // the workload-layer max_u8x64 registers through the same public
+    // call a downstream crate would use, and the auto-generated suite
+    // law-checks it alongside every built-in
+    let mut reg = default_registry();
+    ccache::workloads::sketch::register_sketch_merges(&mut reg);
+    let f = reg.build("max_u8x64").unwrap();
+    assert!(f.idempotent());
+    check_merge_laws(&reg, 0xA3, 40);
+}
+
+#[test]
 fn property_user_registered_merge_is_law_checked_for_free() {
     use ccache::merge::{LineData, MergeFn, LINE_WORDS};
 
@@ -205,21 +217,27 @@ fn property_memsys_invariants_random_phases() {
             let mut cfg = MachineConfig::test_small();
             cfg.cores = cores;
             let mut s = MemSystem::new(cfg).unwrap();
+            // the same function in two slots: random re-typing between
+            // them exercises the rebind path (invariant 5: the L1 meta
+            // and the source-buffer binding must stay in lock-step)
+            // without perturbing the additive results
             for c in 0..cores {
                 s.merge_init(c, 0, handle(AddU32));
+                s.merge_init(c, 1, handle(AddU32));
             }
             let cdata = s.alloc_lines(64 * 128);
             let coh = s.alloc_lines(64 * 128);
             let mut rng = Rng::new(seed);
             for _phase in 0..4 {
-                for _ in 0..500 {
+                for op in 0..500 {
                     let core = rng.usize_below(cores);
                     let k = rng.below(128);
                     match rng.below(4) {
                         0 | 1 => {
+                            let ty = rng.below(2) as u8;
                             let a = Addr(cdata.0 + k * 64);
-                            let (v, _) = s.c_read(core, a, 0).unwrap();
-                            s.c_write(core, a, v.wrapping_add(1), 0).unwrap();
+                            let (v, _) = s.c_read(core, a, ty).unwrap();
+                            s.c_write(core, a, v.wrapping_add(1), ty).unwrap();
                             s.soft_merge(core).unwrap();
                         }
                         2 => {
@@ -228,6 +246,11 @@ fn property_memsys_invariants_random_phases() {
                         _ => {
                             s.write(core, Addr(coh.0 + k * 64), k as u32).unwrap();
                         }
+                    }
+                    if op % 100 == 99 {
+                        // mid-phase: lines are still privatized here, so
+                        // merge-type skew is visible (post-merge it is not)
+                        s.check_invariants()?;
                     }
                 }
                 for c in 0..cores {

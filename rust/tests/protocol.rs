@@ -227,6 +227,27 @@ fn soft_merge_with_opt_defers() {
 }
 
 #[test]
+fn empty_soft_merge_is_free() {
+    // regression: a soft_merge with nothing privatized used to charge
+    // marked.max(1) = 1 cycle; a no-op must cost 0 in both policy paths
+    let mut s = sys();
+    s.merge_init(0, 0, handle(AddU32));
+    assert_eq!(s.soft_merge(0).unwrap(), 0, "deferred path");
+    let mut cfg = MachineConfig::test_small();
+    cfg.ccache.merge_on_evict = false;
+    let mut s = MemSystem::new(cfg).unwrap();
+    s.merge_init(0, 0, handle(AddU32));
+    assert_eq!(s.soft_merge(0).unwrap(), 0, "flush path");
+    // a non-empty soft_merge still charges at least one cycle
+    let mut s = sys();
+    s.merge_init(0, 0, handle(AddU32));
+    let a = s.alloc_lines(64);
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    s.c_write(0, a, v + 1, 0).unwrap();
+    assert!(s.soft_merge(0).unwrap() >= 1);
+}
+
+#[test]
 #[should_panic(expected = "w-1 rule")]
 fn pinned_cdata_overflow_deadlocks() {
     let mut cfg = MachineConfig::test_small();

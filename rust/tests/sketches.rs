@@ -1,0 +1,161 @@
+//! End-to-end coverage of the streaming-sketch workload family through
+//! the *registry* path — the same resolution the CLI and the sweeps use:
+//! count-min, Bloom and HyperLogLog each run CCache plus the baseline
+//! variants, verify against their sequential golden sketches, and flow
+//! into `sweep --json` cells. The `max_u8x64` merge function is
+//! exercised only through public-API registration (no `merge/` edits).
+
+use ccache::coordinator::report::sweep_json;
+use ccache::coordinator::sweep::{run_sweep_with, SweepOptions};
+use ccache::exec::registry::{self, SizeSpec, SketchSpec};
+use ccache::exec::Variant;
+use ccache::merge::default_registry;
+use ccache::sim::config::MachineConfig;
+use ccache::util::ptest::check_merge_laws;
+use ccache::workloads::sketch::register_sketch_merges;
+
+fn cfg() -> MachineConfig {
+    MachineConfig::test_small().with_cores(2)
+}
+
+/// Small but non-degenerate instances: 12.5% of a 64 KiB "LLC".
+fn size() -> SizeSpec {
+    SizeSpec::new(0.125, 1 << 16, 9)
+}
+
+#[test]
+fn sketches_run_ccache_plus_baselines_through_the_registry() {
+    // the acceptance floor: ccache + at least two baseline variants per
+    // sketch, resolved by registry name, golden-verified
+    for name in ["cms", "bloom", "hll"] {
+        let bench = registry::build(name, &size()).unwrap();
+        let supported = bench.supported_variants();
+        assert!(supported.contains(&Variant::CCache), "{name}: no ccache");
+        assert!(
+            supported.iter().filter(|&&v| v != Variant::CCache).count() >= 2,
+            "{name}: fewer than two baseline variants"
+        );
+        for &v in supported {
+            let r = bench.run(v, cfg()).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(
+                r.verified,
+                "{name}/{} diverged from the sequential golden sketch",
+                v.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sketch_ccache_cells_name_their_merge_functions() {
+    for (name, merge) in [
+        ("cms", "sat_add_u32"),
+        ("bloom", "bitor"),
+        ("hll", "max_u8x64"),
+    ] {
+        let bench = registry::build(name, &size()).unwrap();
+        let r = bench.run(Variant::CCache, cfg()).unwrap();
+        assert_eq!(r.merge_fns, vec![merge.to_string()], "{name}");
+        assert!(r.stats.merges > 0, "{name}: no merges executed");
+        assert!(r.stats.cops > 0, "{name}: no COps executed");
+    }
+}
+
+#[test]
+fn sketches_appear_in_sweep_json_with_the_full_counter_set() {
+    let sweep = run_sweep_with(
+        "hll",
+        &[Variant::Fgl, Variant::CCache],
+        &[0.125],
+        cfg(),
+        SweepOptions {
+            seed: 5,
+            ..Default::default()
+        },
+    );
+    let j = sweep_json(&sweep, &cfg());
+    assert!(j.contains("\"benchmark\": \"hll\""), "{j}");
+    assert!(j.contains("\"merge_fns\": [\"max_u8x64\"]"), "{j}");
+    for key in [
+        "\"ccache_l1_hits\"",
+        "\"ccache_fills\"",
+        "\"atomic_rmws\"",
+        "\"barriers\"",
+        "\"approx_drops\"",
+    ] {
+        assert!(j.contains(key), "sweep cell missing {key}");
+    }
+}
+
+#[test]
+fn sketch_sweeps_cover_the_fraction_axis() {
+    for name in ["cms", "bloom"] {
+        let sweep = run_sweep_with(
+            name,
+            &[Variant::Fgl, Variant::Dup, Variant::CCache],
+            &[0.125, 0.5],
+            cfg(),
+            SweepOptions::default(),
+        );
+        assert_eq!(sweep.points.len(), 2, "{name}");
+        for p in &sweep.points {
+            assert!(
+                p.speedup_vs_fgl(Variant::CCache).unwrap() > 0.0,
+                "{name}: missing ccache cell at frac {}",
+                p.frac
+            );
+        }
+    }
+}
+
+#[test]
+fn zipf_skew_flows_into_sketch_streams() {
+    for name in ["cms", "bloom", "hll"] {
+        let bench = registry::build(name, &size().with_zipf(0.9)).unwrap();
+        let r = bench.run(Variant::CCache, cfg()).unwrap();
+        assert!(r.verified, "{name} with zipf skew diverged");
+    }
+}
+
+#[test]
+fn sketch_geometry_flows_from_the_size_spec() {
+    let spec = size().with_sketch(SketchSpec {
+        cms_depth: 2,
+        bloom_hashes: 6,
+        hll_precision: 7,
+    });
+    // reshaped instances still verify end to end
+    for name in ["cms", "bloom", "hll"] {
+        let bench = registry::build(name, &spec).unwrap();
+        let r = bench.run(Variant::CCache, cfg()).unwrap();
+        assert!(r.verified, "{name} with custom geometry diverged");
+    }
+}
+
+#[test]
+fn hll_reports_estimate_quality() {
+    let bench = registry::build("hll", &size()).unwrap();
+    let r = bench.run(Variant::CCache, cfg()).unwrap();
+    let q = r.quality.expect("hll must report its estimate error");
+    assert!((0.0..0.35).contains(&q), "estimate error out of range: {q}");
+}
+
+#[test]
+fn max_u8x64_registers_via_the_public_api_only_and_passes_the_law_suite() {
+    // starting from the stock registry (which does NOT know the sketch
+    // functions)...
+    let reg = default_registry();
+    assert!(
+        reg.build("max_u8x64").is_err(),
+        "max_u8x64 must not be baked into merge/"
+    );
+    // ...one public register call makes it resolvable, listable and
+    // law-checked like any built-in
+    let mut reg = default_registry();
+    register_sketch_merges(&mut reg);
+    let f = reg.build("max_u8x64").unwrap();
+    assert_eq!(f.name(), "max_u8x64");
+    assert!(f.idempotent());
+    assert!(reg.names().contains(&"max_u8x64".to_string()));
+    check_merge_laws(&reg, 0x5E7C, 30);
+}

@@ -8,7 +8,7 @@
 //! a multi-core variant checks that coherence actions never corrupt
 //! another core's CData.
 
-use ccache::merge::funcs::AddU32;
+use ccache::merge::funcs::{AddU32, BitOr};
 use ccache::merge::handle;
 use ccache::sim::addr::Addr;
 use ccache::sim::config::MachineConfig;
@@ -26,19 +26,31 @@ fn random_cop_coherent_phases_keep_invariants() {
     let mut cfg = MachineConfig::test_small();
     cfg.cores = 1;
     let mut s = MemSystem::new(cfg).unwrap();
+    // same function in two MFRF slots: random re-typing between them
+    // exercises the rebind path (L1 meta + source buffer must track,
+    // invariant 5) without changing the additive results
     s.merge_init(0, 0, handle(AddU32));
+    s.merge_init(0, 1, handle(AddU32));
     let cdata = s.alloc_lines(64 * 2048);
     let coh = s.alloc_lines(64 * 2048);
     let mut x: u64 = 12345;
     for phase in 0..40 {
         // COp phase on the cdata region + coherent ops elsewhere
-        for _ in 0..2_000 {
+        for op in 0..2_000 {
+            if op % 500 == 499 {
+                // mid-phase check: catches merge-type skew while lines
+                // are still privatized (post-merge the buffer is empty
+                // and invariant 5 is vacuous)
+                s.check_invariants()
+                    .unwrap_or_else(|e| panic!("phase {phase} mid-phase: {e}"));
+            }
             let k = lcg(&mut x) % 2048;
             match lcg(&mut x) % 5 {
                 0 | 1 => {
+                    let ty = (lcg(&mut x) % 2) as u8;
                     let a = Addr(cdata.0 + k * 64);
-                    let (v, _) = s.c_read(0, a, 0).unwrap();
-                    s.c_write(0, a, v + 1, 0).unwrap();
+                    let (v, _) = s.c_read(0, a, ty).unwrap();
+                    s.c_write(0, a, v + 1, ty).unwrap();
                     // w-1 discipline: keep CData evictable
                     s.soft_merge(0).unwrap();
                 }
@@ -110,6 +122,44 @@ fn multicore_cop_with_cross_core_coherent_traffic() {
         let got = s.peek(Addr(region.0 + k * 64));
         assert_eq!(got, expected[k as usize], "line {k}");
     }
+}
+
+#[test]
+fn retyping_a_privatized_line_merges_with_the_rebound_function() {
+    // Regression for the merge-type rebind bug: the COp hit path rewrote
+    // the L1 meta's merge-type field but left the source-buffer entry's
+    // slot binding at the value captured at privatization, so the merge
+    // engine resolved the *stale* function. Privatize under slot 0
+    // (add_u32), re-type with slot 1 (bitor), merge: the values are
+    // chosen so the two functions disagree — bitor gives 8 | 3 = 11, the
+    // stale add gave 8 + (3 - 8) = 3.
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = 1;
+    let mut s = MemSystem::new(cfg).unwrap();
+    s.merge_init(0, 0, handle(AddU32));
+    s.merge_init(0, 1, handle(BitOr));
+    s.record_merges = true;
+    let a = s.alloc_lines(64);
+    s.poke(a, 8);
+    // privatize under slot 0
+    let (v, _) = s.c_read(0, a, 0).unwrap();
+    assert_eq!(v, 8);
+    // re-type the already-privatized line to slot 1 and update it
+    s.c_write(0, a, 3, 1).unwrap();
+    // both bindings must agree while the line is still privatized
+    s.check_invariants().unwrap();
+    s.merge_all(0).unwrap();
+    assert_eq!(
+        s.merge_log.len(),
+        1,
+        "exactly one line should have merged"
+    );
+    assert_eq!(
+        s.merge_log[0].merge.name(),
+        "bitor",
+        "the merge engine must run the function the last COp named"
+    );
+    assert_eq!(s.peek(a), 8 | 3);
 }
 
 #[test]
