@@ -1,114 +1,34 @@
 //! Simulator hot-path microbenchmarks (the EXPERIMENTS.md §Perf
-//! instrument): wall-clock throughput of the protocol engine and the
-//! machine interleaver, plus PJRT merge-batch dispatch cost.
+//! instrument), now a thin wrapper over the shared suite in
+//! `coordinator::perf` — the same scenarios the `ccache bench`
+//! subcommand runs, including the fast/slow twin runs and the COp
+//! miss/re-type and merge-on-evict stress loops.
 //!
-//!     cargo bench --bench perf_hotpath
+//!     cargo bench --bench perf_hotpath [-- --quick] [-- --json OUT]
 
-use std::time::Instant;
-
-use ccache::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
-use ccache::merge::funcs::AddU32;
-use ccache::merge::handle;
-use ccache::sim::addr::Addr;
-use ccache::sim::config::MachineConfig;
-use ccache::sim::machine::{CoreCtx, Machine};
-use ccache::sim::memsys::MemSystem;
-
-fn ops_per_sec(n: u64, secs: f64) -> String {
-    format!("{:.2} Mops/s", n as f64 / secs / 1e6)
-}
+use ccache::coordinator::perf::{run_suite, SuiteOptions};
 
 fn main() {
-    // 1. raw memsys: coherent read hit path
-    let mut cfg = MachineConfig::default();
-    cfg.cores = 8;
-    let mut s = MemSystem::new(cfg).expect("valid config");
-    let a = s.alloc_lines(64 * 1024);
-    let n = 4_000_000u64;
-    let t0 = Instant::now();
-    let mut acc = 0u64;
-    for i in 0..n {
-        let (v, c) = s.read(0, Addr(a.0 + (i % 1024) * 64)).unwrap();
-        acc = acc.wrapping_add(v as u64 + c);
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    println!("memsys read (L1-hit mix):        {}", ops_per_sec(n, dt));
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
 
-    // 2. raw memsys: COp + merge path
-    s.merge_init(0, 0, handle(AddU32));
-    let t0 = Instant::now();
-    for i in 0..n / 4 {
-        let addr = Addr(a.0 + (i % 1024) * 64);
-        let (v, _) = s.c_read(0, addr, 0).unwrap();
-        s.c_write(0, addr, v + 1, 0).unwrap();
-        s.soft_merge(0).unwrap();
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    println!("memsys COp update (+soft_merge): {}", ops_per_sec(n / 4 * 3, dt));
-    std::hint::black_box(acc);
-
-    // 3. machine interleaver: 8 threads, mixed ops
-    let cfg = MachineConfig::default();
-    let machine = Machine::new(cfg).expect("valid config");
-    let region = machine.setup(|mem| mem.alloc_lines(64 * 8192));
-    let per_core = 250_000u64;
-    let t0 = Instant::now();
-    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..8)
-        .map(|core| {
-            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                let mut x = core as u64 + 1;
-                for _ in 0..per_core {
-                    x = x.wrapping_mul(6364136223846793005).wrapping_add(97);
-                    let k = (x >> 33) % 8192;
-                    if x & 1 == 0 {
-                        ctx.read_u32(region.add(k * 64));
-                    } else {
-                        ctx.write_u32(region.add(k * 64), x as u32);
-                    }
-                }
-            });
-            f
-        })
-        .collect();
-    machine.run(programs);
-    let dt = t0.elapsed().as_secs_f64();
-    println!("machine 8-core interleaved ops:  {}", ops_per_sec(8 * per_core, dt));
-
-    // 4. merge batch executors
-    let items: Vec<MergeItem> = (0..4096)
-        .map(|i| MergeItem {
-            src: [i as u32; 16],
-            upd: [(i + 7) as u32; 16],
-            mem: [1000; 16],
-            drop_update: false,
-        })
-        .collect();
-    let t0 = Instant::now();
-    let reps = 200;
-    for _ in 0..reps {
-        std::hint::black_box(NativeExecutor.execute(&AddU32, &items));
-    }
-    let dt = t0.elapsed().as_secs_f64();
+    let report = run_suite(&SuiteOptions {
+        quick,
+        bench_id: "dev".into(),
+    });
+    report.table().print();
     println!(
-        "native merge batch (4096 lines):  {:.1} us/batch",
-        dt / reps as f64 * 1e6
+        "(suite wall clock {:.1} s{})",
+        report.wall_clock_secs,
+        if report.quick { ", quick mode" } else { "" }
     );
-
-    if ccache::runtime::artifacts::artifacts_available() {
-        let mut pjrt = ccache::runtime::PjrtMergeExecutor::load_default().unwrap();
-        // warm-up compile
-        pjrt.execute(&AddU32, &items[..256]);
-        let t0 = Instant::now();
-        let reps = 20;
-        for _ in 0..reps {
-            std::hint::black_box(pjrt.execute(&AddU32, &items));
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "pjrt merge batch (4096 lines):    {:.1} us/batch",
-            dt / reps as f64 * 1e6
-        );
-    } else {
-        println!("pjrt merge batch: skipped (run `make artifacts`)");
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_json()).expect("write bench json");
+        eprintln!("wrote {path}");
     }
 }

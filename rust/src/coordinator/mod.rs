@@ -1,9 +1,11 @@
 //! Experiment coordination: the scaled bench machine, registry-driven
-//! working-set sweeps and paper-style reporting. Every figure/table
-//! bench target is a thin wrapper over this module; benchmark
-//! enumeration and sizing live in [`exec::registry`](crate::exec::registry).
+//! working-set sweeps, paper-style reporting and the [`perf`] hot-path
+//! suite (`ccache bench`). Every figure/table bench target is a thin
+//! wrapper over this module; benchmark enumeration and sizing live in
+//! [`exec::registry`](crate::exec::registry).
 
 pub mod experiment;
+pub mod perf;
 pub mod report;
 pub mod sweep;
 

@@ -1,0 +1,284 @@
+//! The `perf_hotpath` suite as a library: every scenario the
+//! `ccache bench` subcommand and the `perf_hotpath` bench target run,
+//! producing one [`BenchReport`] — the persistent perf-trajectory
+//! record (`BENCH_<n>.json`).
+//!
+//! Engine scenarios run twice, once with the branch-light fast path
+//! ([`MachineConfig::fast_path`]) and once without, so every record
+//! carries its own fast/slow speedup; the differential suite
+//! (`tests/fastpath_diff.rs`) proves the two runs do identical
+//! simulated work, which is what makes the wall-clock ratio meaningful.
+
+use std::time::Instant;
+
+use crate::exec::registry::{self, SizeSpec};
+use crate::exec::Variant;
+use crate::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
+use crate::merge::funcs::AddU32;
+use crate::merge::handle;
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::{CoreCtx, Machine};
+use crate::sim::memsys::MemSystem;
+use crate::util::bench::{time, BenchReport, ScenarioResult};
+
+use super::experiment::scaled_config;
+
+/// How to run the suite.
+#[derive(Clone, Debug)]
+pub struct SuiteOptions {
+    /// Cut iteration counts ~20x: the CI smoke mode (`bench --quick`).
+    pub quick: bool,
+    /// Trajectory label for the record (`BENCH_<bench_id>.json`).
+    pub bench_id: String,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            bench_id: "dev".into(),
+        }
+    }
+}
+
+/// A fresh Table 2 memory system with the fast path on or off, plus an
+/// 8192-line region every engine scenario indexes into.
+fn memsys(fast: bool) -> (MemSystem, Addr) {
+    let mut cfg = MachineConfig::default();
+    cfg.fast_path = fast;
+    let mut s = MemSystem::new(cfg).expect("valid config");
+    let a = s.alloc_lines(64 * 8192);
+    (s, a)
+}
+
+/// Coherent read hits: 256 lines (well inside the 512-line L1) cycled
+/// `n` times — after one warm lap every access is the L1 read-hit path.
+fn read_hit(n: u64, fast: bool) -> u64 {
+    let (mut s, a) = memsys(fast);
+    let mut acc = 0u64;
+    for i in 0..n {
+        let (v, c) = s.read(0, Addr(a.0 + (i % 256) * 64)).unwrap();
+        acc = acc.wrapping_add(v as u64 + c);
+    }
+    std::hint::black_box(acc);
+    n
+}
+
+/// COp updates on resident CData: 8 lines (exactly the source-buffer
+/// capacity) so every `c_read`/`c_write` after the first lap is a
+/// private hit, with a periodic `soft_merge` re-marking them mergeable.
+fn cop_update(n: u64, fast: bool) -> u64 {
+    let (mut s, a) = memsys(fast);
+    s.merge_init(0, 0, handle(AddU32));
+    let mut ops = 0u64;
+    for i in 0..n {
+        let addr = Addr(a.0 + (i % 8) * 64);
+        let (v, _) = s.c_read(0, addr, 0).unwrap();
+        s.c_write(0, addr, v.wrapping_add(1), 0).unwrap();
+        ops += 2;
+        if i % 16 == 0 {
+            s.soft_merge(0).unwrap();
+            ops += 1;
+        }
+    }
+    ops
+}
+
+/// COp misses + merge-type re-binding: a 4096-line cold stream (far
+/// beyond the 8-entry source buffer, so every access privatizes and
+/// capacity-evicts), whose merge type flips each lap, interleaved with
+/// 4 hot resident lines whose type flips every access.
+fn cop_miss_retype(n: u64, fast: bool) -> u64 {
+    let (mut s, a) = memsys(fast);
+    s.merge_init(0, 0, handle(AddU32));
+    s.merge_init(0, 1, handle(AddU32));
+    let mut ops = 0u64;
+    for i in 0..n {
+        let cold = Addr(a.0 + (i % 4096) * 64);
+        let ty = ((i / 4096) & 1) as u8;
+        let (v, _) = s.c_read(0, cold, ty).unwrap();
+        s.c_write(0, cold, v.wrapping_add(1), ty).unwrap();
+        let hot = Addr(a.0 + 4096 * 64 + (i % 4) * 64);
+        s.c_write(0, hot, 1, (i & 1) as u8).unwrap();
+        ops += 3;
+        if i % 64 == 0 {
+            s.soft_merge(0).unwrap();
+            ops += 1;
+        }
+    }
+    ops
+}
+
+/// Merge-on-evict: 64 CData lines against an 8-entry source buffer with
+/// every line soft-merge-marked, so each `c_write` on a non-resident
+/// line forces an eviction-triggered merge through the merge engine.
+fn merge_on_evict(n: u64, fast: bool) -> u64 {
+    let (mut s, a) = memsys(fast);
+    s.merge_init(0, 0, handle(AddU32));
+    let mut ops = 0u64;
+    for i in 0..n {
+        s.c_write(0, Addr(a.0 + (i % 64) * 64), 1, 0).unwrap();
+        s.soft_merge(0).unwrap();
+        ops += 2;
+    }
+    ops
+}
+
+/// The 8-core interleaver with a mixed coherent read/write stream (the
+/// original `perf_hotpath` scenario 3).
+fn machine_interleave(per_core: u64, fast: bool) -> u64 {
+    let mut cfg = MachineConfig::default();
+    cfg.fast_path = fast;
+    let cores = cfg.cores;
+    let machine = Machine::new(cfg).expect("valid config");
+    let region = machine.setup(|mem| mem.alloc_lines(64 * 8192));
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
+                let mut x = core as u64 + 1;
+                for _ in 0..per_core {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(97);
+                    let k = (x >> 33) % 8192;
+                    if x & 1 == 0 {
+                        ctx.read_u32(region.add(k * 64));
+                    } else {
+                        ctx.write_u32(region.add(k * 64), x as u32);
+                    }
+                }
+            });
+            f
+        })
+        .collect();
+    machine.run(programs);
+    cores as u64 * per_core
+}
+
+fn batch_items() -> Vec<MergeItem> {
+    (0..4096)
+        .map(|i| MergeItem {
+            src: [i as u32; 16],
+            upd: [(i + 7) as u32; 16],
+            mem: [1000; 16],
+            drop_update: false,
+        })
+        .collect()
+}
+
+/// Run `f` once slow (fast path off) and once fast, returning the fast
+/// measurement annotated with the slow twin's throughput.
+fn fast_slow(name: &str, n: u64, f: fn(u64, bool) -> u64) -> ScenarioResult {
+    let (slow_ops, slow_secs) = time(|| f(n, false));
+    let (ops, secs) = time(|| f(n, true));
+    ScenarioResult {
+        name: name.into(),
+        ops,
+        secs,
+        slow_mops: Some(slow_ops as f64 / slow_secs / 1e6),
+    }
+}
+
+/// One representative registry cell (kvstore/ccache on the scaled bench
+/// machine), so the trajectory also tracks end-to-end workload
+/// throughput, not just synthetic engine loops.
+fn sweep_cell(quick: bool) -> ScenarioResult {
+    let cfg = scaled_config();
+    let spec = registry::lookup("kvstore").expect("kvstore is registered");
+    let frac = if quick { 0.1 } else { 0.5 };
+    let bench = spec.build(&SizeSpec::new(frac, cfg.llc().size_bytes, 42));
+    let t0 = Instant::now();
+    let r = bench
+        .run_with_merge(Variant::CCache, cfg, None)
+        .expect("sweep cell runs");
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(r.verified, "sweep cell failed golden verification");
+    ScenarioResult {
+        name: "sweep_cell_kvstore_ccache".into(),
+        ops: r.stats.cops + r.stats.l1().accesses(),
+        secs,
+        slow_mops: None,
+    }
+}
+
+/// Run the whole suite.
+pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
+    let div = if opts.quick { 20 } else { 1 };
+    let t0 = Instant::now();
+    let mut scenarios = vec![
+        fast_slow("memsys_read_hit", 4_000_000 / div, read_hit),
+        fast_slow("memsys_cop_update", 1_000_000 / div, cop_update),
+        fast_slow("cop_miss_retype", 200_000 / div, cop_miss_retype),
+        fast_slow("merge_on_evict", 200_000 / div, merge_on_evict),
+        fast_slow("machine_interleave_8core", 250_000 / div, machine_interleave),
+    ];
+
+    let items = batch_items();
+    let reps = (200 / div).max(1);
+    let (_, secs) = time(|| {
+        for _ in 0..reps {
+            std::hint::black_box(NativeExecutor.execute(&AddU32, &items));
+        }
+    });
+    scenarios.push(ScenarioResult {
+        name: "native_merge_batch".into(),
+        ops: reps * items.len() as u64,
+        secs,
+        slow_mops: None,
+    });
+
+    let pjrt = if crate::runtime::artifacts::artifacts_available() {
+        crate::runtime::PjrtMergeExecutor::load_default().ok()
+    } else {
+        None
+    };
+    if let Some(mut pjrt) = pjrt {
+        pjrt.execute(&AddU32, &items[..256]); // warm-up compile
+        let reps = (20 / div).max(1);
+        let (_, secs) = time(|| {
+            for _ in 0..reps {
+                std::hint::black_box(pjrt.execute(&AddU32, &items));
+            }
+        });
+        scenarios.push(ScenarioResult {
+            name: "pjrt_merge_batch".into(),
+            ops: reps * items.len() as u64,
+            secs,
+            slow_mops: None,
+        });
+    }
+
+    scenarios.push(sweep_cell(opts.quick));
+
+    BenchReport {
+        bench_id: opts.bench_id.clone(),
+        quick: opts.quick,
+        config: MachineConfig::default().describe(),
+        wall_clock_secs: t0.elapsed().as_secs_f64(),
+        note: String::new(),
+        scenarios,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tiny iteration counts: these assert the scenarios run and count,
+    // not that they are fast
+    #[test]
+    fn engine_scenarios_count_their_ops() {
+        assert_eq!(read_hit(64, true), 64);
+        assert_eq!(read_hit(64, false), 64);
+        assert!(cop_update(32, true) >= 64);
+        assert!(cop_miss_retype(32, true) >= 96);
+        assert_eq!(merge_on_evict(32, true), 64);
+    }
+
+    #[test]
+    fn fast_slow_records_the_twin() {
+        let s = fast_slow("memsys_read_hit", 64, read_hit);
+        assert_eq!(s.ops, 64);
+        assert!(s.slow_mops.is_some());
+        assert!(s.speedup().is_some());
+    }
+}

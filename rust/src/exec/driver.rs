@@ -92,6 +92,11 @@ pub fn run_with_merge<W: Workload>(
         }
     };
 
+    // post-run consistency sweep: the cross-structure invariants
+    // (directory bookkeeping, source-buffer/L1 bindings) must hold in
+    // the quiesced machine before we trust the verification pass
+    machine.setup(|mem| mem.check_invariants()).map_err(ExecError::from)?;
+
     let golden = workload.golden(cores);
     let (verified, quality) =
         machine.setup(|mem| workload.verify(mem, &layout, &golden, cores));

@@ -5,6 +5,7 @@
 use std::fmt;
 
 use crate::sim::config::ConfigError;
+use crate::sim::invariant::InvariantViolation;
 use crate::sim::mfrf::MergeFault;
 
 use super::Variant;
@@ -30,6 +31,12 @@ pub enum ExecError {
     /// — the simulated machine faulted. Carries the typed fault so the
     /// CLI prints the diagnostic and exits 2 instead of panicking.
     MergeFault(MergeFault),
+    /// The post-run consistency sweep found the simulated machine in an
+    /// inconsistent state (directory bookkeeping, source-buffer/L1
+    /// bindings). Carries the structured violation so stress-suite
+    /// failures name the structure, core and line instead of a bare
+    /// string.
+    Invariant(InvariantViolation),
 }
 
 impl From<ConfigError> for ExecError {
@@ -41,6 +48,12 @@ impl From<ConfigError> for ExecError {
 impl From<MergeFault> for ExecError {
     fn from(f: MergeFault) -> Self {
         ExecError::MergeFault(f)
+    }
+}
+
+impl From<InvariantViolation> for ExecError {
+    fn from(v: InvariantViolation) -> Self {
+        ExecError::Invariant(v)
     }
 }
 
@@ -73,6 +86,7 @@ impl fmt::Display for ExecError {
             }
             ExecError::InvalidConfig(e) => write!(f, "{e}"),
             ExecError::MergeFault(fault) => write!(f, "{fault}"),
+            ExecError::Invariant(v) => write!(f, "{v}"),
         }
     }
 }
@@ -113,6 +127,15 @@ mod tests {
         assert_eq!(e, ExecError::MergeFault(fault.clone()));
         assert_eq!(e.to_string(), fault.to_string());
         assert!(e.to_string().contains("merge_init"));
+    }
+
+    #[test]
+    fn invariant_violation_wraps_the_sim_diagnostic() {
+        let v = InvariantViolation::engine(1, 0xc0, "CData line lacks src-buf entry");
+        let e: ExecError = v.clone().into();
+        assert_eq!(e, ExecError::Invariant(v.clone()));
+        assert_eq!(e.to_string(), v.to_string());
+        assert!(e.to_string().contains("core 1"));
     }
 
     #[test]

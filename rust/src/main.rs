@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   run      — run one benchmark/variant, print stats + verification
 //!   sweep    — working-set sweep (Fig 6-style table) for one benchmark
+//!   bench    — perf_hotpath suite: engine throughput with fast/slow
+//!              speedups; `--json BENCH_<n>.json` writes the
+//!              perf-trajectory record (`--quick` for CI smoke)
 //!   overhead — Section 4.7 structural overhead report
 //!   runtime  — PJRT artifact smoke check (loads + executes merge_add)
 //!   list     — enumerate registered benchmarks and their variants
@@ -34,10 +37,11 @@
 //!   ccache run --bench hll --variant ccache --hll-p 12
 //!   ccache run --bench kvstore --variant ccache --levels 2 --llc-kb 512
 //!   ccache sweep --bench bloom --jobs 8 --json bloom_sweep.json
+//!   ccache bench --quick --json BENCH_smoke.json
 //!   ccache --list-merges
 //!   ccache runtime
 
-use ccache::coordinator::{report, run_sweep_with, scaled_config, SweepOptions, WS_FRACTIONS};
+use ccache::coordinator::{perf, report, run_sweep_with, scaled_config, SweepOptions, WS_FRACTIONS};
 use ccache::exec::registry::{self, SizeSpec, SketchSpec};
 use ccache::exec::{ExecError, Variant, WorkloadSpec};
 use ccache::merge;
@@ -95,8 +99,10 @@ fn main() {
         .opt("llc-kb", "0", "override shared LLC size in KiB (0 = config default)")
         .opt("l2-kb", "0", "override L2 size in KiB (0 = default; needs --levels >= 3)")
         .opt("jobs", "0", "sweep: parallel worker threads (0 = all host cores)")
-        .opt("json", "", "sweep: also write machine-readable results to this path")
+        .opt("json", "", "sweep/bench: also write machine-readable results to this path")
         .opt("merge", "", "override the installed merge function: name[:param]")
+        .opt("bench-id", "dev", "bench: trajectory label for the JSON record (BENCH_<id>.json)")
+        .flag("quick", "bench: cut iteration counts ~20x (CI smoke mode)")
         .flag("list-merges", "list registered merge functions and exit")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
@@ -275,6 +281,25 @@ fn main() {
                 }
             }
         }
+        "bench" => {
+            let bench_report = perf::run_suite(&perf::SuiteOptions {
+                quick: args.has("quick"),
+                bench_id: args.get("bench-id"),
+            });
+            bench_report.table().print();
+            println!(
+                "(suite wall clock {:.1} s{})",
+                bench_report.wall_clock_secs,
+                if bench_report.quick { ", quick mode" } else { "" }
+            );
+            let json_path = args.get("json");
+            if !json_path.is_empty() {
+                match std::fs::write(&json_path, bench_report.to_json()) {
+                    Ok(()) => eprintln!("wrote {json_path}"),
+                    Err(e) => fail(format!("writing {json_path}: {e}")),
+                }
+            }
+        }
         "overhead" => {
             let m = OverheadModel::for_config(&cfg);
             println!("CCache structural overhead (Section 4.7):");
@@ -331,7 +356,7 @@ fn main() {
             }
         }
         other => {
-            eprintln!("unknown command {other}; use run|sweep|overhead|runtime|list");
+            eprintln!("unknown command {other}; use run|sweep|bench|overhead|runtime|list");
             std::process::exit(2);
         }
     }

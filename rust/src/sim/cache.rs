@@ -4,14 +4,31 @@
 //! (coherent lines) or the per-core private copies (CData). Each line
 //! carries the paper's extra state: the CCache bit, the mergeable bit and
 //! the merge-type field (Section 4.1, Figure 4).
+//!
+//! Storage is struct-of-arrays: one flat `u64` tag array (probes touch a
+//! single cache line per set instead of striding over 40-byte metadata
+//! structs), one packed flag byte per slot, and separate merge-type and
+//! LRU arrays that only the paths needing them touch. [`LineMeta`] is a
+//! by-value *snapshot* assembled on demand for callers that want the
+//! whole picture (victim selection, invalidation, diagnostics); the hot
+//! paths use the per-field getters and setters.
 
 use super::addr::Line;
 
-/// Metadata for one cache line slot.
+/// Slot-is-empty sentinel in the tag array. Line addresses come from the
+/// machine's bump allocator over a bounded memory, so `u64::MAX` can
+/// never be a real line.
+const TAG_NONE: u64 = u64::MAX;
+
+const F_DIRTY: u8 = 1 << 0;
+const F_OWNED: u8 = 1 << 1;
+const F_CCACHE: u8 = 1 << 2;
+const F_MERGEABLE: u8 = 1 << 3;
+
+/// By-value snapshot of one (valid) cache line's metadata.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LineMeta {
     pub line: Line,
-    pub valid: bool,
     pub dirty: bool,
     /// MESI ownership: this private cache holds the line E or M (the
     /// directory's `Owned` state). Unused in the shared LLC.
@@ -22,27 +39,13 @@ pub struct LineMeta {
     pub mergeable: bool,
     /// MFRF slot index identifying the line's merge function.
     pub merge_type: u8,
-    lru: u64,
 }
 
 impl LineMeta {
-    fn empty() -> Self {
-        Self {
-            line: Line(0),
-            valid: false,
-            dirty: false,
-            owned: false,
-            ccache: false,
-            mergeable: false,
-            merge_type: 0,
-            lru: 0,
-        }
-    }
-
-    /// An eviction candidate: invalid, or a normal line, or a mergeable
-    /// CData line. Non-mergeable CData is pinned (Section 4.4).
+    /// An eviction candidate: a normal line, or a mergeable CData line.
+    /// Non-mergeable CData is pinned (Section 4.4).
     pub fn evictable(&self) -> bool {
-        !self.valid || !self.ccache || self.mergeable
+        !self.ccache || self.mergeable
     }
 }
 
@@ -62,18 +65,27 @@ pub struct Cache {
     sets: usize,
     ways: usize,
     set_mask: u64,
-    lines: Vec<LineMeta>,
+    /// Tag per slot, `TAG_NONE` = invalid.
+    tags: Vec<u64>,
+    /// Packed dirty/owned/ccache/mergeable bits per slot.
+    flags: Vec<u8>,
+    merge_types: Vec<u8>,
+    lru: Vec<u64>,
     tick: u64,
 }
 
 impl Cache {
     pub fn new(sets: usize, ways: usize) -> Self {
         assert!(sets.is_power_of_two(), "sets must be a power of two");
+        let n = sets * ways;
         Self {
             sets,
             ways,
             set_mask: (sets - 1) as u64,
-            lines: vec![LineMeta::empty(); sets * ways],
+            tags: vec![TAG_NONE; n],
+            flags: vec![0; n],
+            merge_types: vec![0; n],
+            lru: vec![0; n],
             tick: 0,
         }
     }
@@ -100,27 +112,99 @@ impl Cache {
     /// Find a line; returns its slot index without touching LRU.
     #[inline]
     pub fn probe(&self, line: Line) -> Option<usize> {
-        self.set_range(line)
-            .find(|&i| self.lines[i].valid && self.lines[i].line == line)
+        // an empty slot's TAG_NONE can never equal a real line address,
+        // so the tag compare alone decides validity
+        self.set_range(line).find(|&i| self.tags[i] == line.0)
     }
 
     /// Find a line and mark it most-recently-used.
     #[inline]
     pub fn lookup(&mut self, line: Line) -> Option<usize> {
         let idx = self.probe(line)?;
-        self.tick += 1;
-        self.lines[idx].lru = self.tick;
+        self.touch(idx);
         Some(idx)
     }
 
+    /// Mark slot `idx` most-recently-used (the LRU half of `lookup`, for
+    /// callers that already probed).
     #[inline]
-    pub fn meta(&self, idx: usize) -> &LineMeta {
-        &self.lines[idx]
+    pub fn touch(&mut self, idx: usize) {
+        self.tick += 1;
+        self.lru[idx] = self.tick;
+    }
+
+    /// Snapshot of slot `idx`'s metadata. Only meaningful for valid
+    /// slots (from `probe`/`lookup`/`valid_slots`/`choose_victim`).
+    #[inline]
+    pub fn meta(&self, idx: usize) -> LineMeta {
+        let f = self.flags[idx];
+        LineMeta {
+            line: Line(self.tags[idx]),
+            dirty: f & F_DIRTY != 0,
+            owned: f & F_OWNED != 0,
+            ccache: f & F_CCACHE != 0,
+            mergeable: f & F_MERGEABLE != 0,
+            merge_type: self.merge_types[idx],
+        }
     }
 
     #[inline]
-    pub fn meta_mut(&mut self, idx: usize) -> &mut LineMeta {
-        &mut self.lines[idx]
+    pub fn is_dirty(&self, idx: usize) -> bool {
+        self.flags[idx] & F_DIRTY != 0
+    }
+
+    #[inline]
+    pub fn is_owned(&self, idx: usize) -> bool {
+        self.flags[idx] & F_OWNED != 0
+    }
+
+    #[inline]
+    pub fn is_ccache(&self, idx: usize) -> bool {
+        self.flags[idx] & F_CCACHE != 0
+    }
+
+    #[inline]
+    pub fn is_mergeable(&self, idx: usize) -> bool {
+        self.flags[idx] & F_MERGEABLE != 0
+    }
+
+    #[inline]
+    pub fn merge_type(&self, idx: usize) -> u8 {
+        self.merge_types[idx]
+    }
+
+    #[inline]
+    fn set_flag(&mut self, idx: usize, bit: u8, v: bool) {
+        if v {
+            self.flags[idx] |= bit;
+        } else {
+            self.flags[idx] &= !bit;
+        }
+    }
+
+    #[inline]
+    pub fn set_dirty(&mut self, idx: usize, v: bool) {
+        self.set_flag(idx, F_DIRTY, v);
+    }
+
+    #[inline]
+    pub fn set_owned(&mut self, idx: usize, v: bool) {
+        self.set_flag(idx, F_OWNED, v);
+    }
+
+    #[inline]
+    pub fn set_ccache(&mut self, idx: usize, v: bool) {
+        self.set_flag(idx, F_CCACHE, v);
+    }
+
+    #[inline]
+    pub fn set_mergeable(&mut self, idx: usize, v: bool) {
+        self.set_flag(idx, F_MERGEABLE, v);
+    }
+
+    #[inline]
+    pub fn set_merge_type(&mut self, idx: usize, ty: u8) {
+        self.merge_types[idx] = ty;
     }
 
     /// Pick a victim way for inserting `line`. Preference order:
@@ -129,70 +213,58 @@ impl Cache {
         let mut best_normal: Option<usize> = None;
         let mut best_mergeable: Option<usize> = None;
         for i in self.set_range(line) {
-            let m = &self.lines[i];
-            if !m.valid {
+            if self.tags[i] == TAG_NONE {
                 return Victim::Free { way: i };
             }
-            if !m.ccache {
-                if best_normal.map_or(true, |b| m.lru < self.lines[b].lru) {
+            let f = self.flags[i];
+            if f & F_CCACHE == 0 {
+                if best_normal.map_or(true, |b| self.lru[i] < self.lru[b]) {
                     best_normal = Some(i);
                 }
-            } else if m.mergeable
-                && best_mergeable.map_or(true, |b| m.lru < self.lines[b].lru)
+            } else if f & F_MERGEABLE != 0
+                && best_mergeable.map_or(true, |b| self.lru[i] < self.lru[b])
             {
                 best_mergeable = Some(i);
             }
         }
-        if let Some(i) = best_normal {
+        if let Some(i) = best_normal.or(best_mergeable) {
             return Victim::Evict {
                 way: i,
-                meta: self.lines[i],
-            };
-        }
-        if let Some(i) = best_mergeable {
-            return Victim::Evict {
-                way: i,
-                meta: self.lines[i],
+                meta: self.meta(i),
             };
         }
         Victim::Deadlock
     }
 
-    /// Install `line` into slot `idx` (obtained from `choose_victim`).
-    pub fn install(&mut self, idx: usize, line: Line) -> &mut LineMeta {
-        self.tick += 1;
-        self.lines[idx] = LineMeta {
-            line,
-            valid: true,
-            dirty: false,
-            owned: false,
-            ccache: false,
-            mergeable: false,
-            merge_type: 0,
-            lru: self.tick,
-        };
-        &mut self.lines[idx]
+    /// Install `line` into slot `idx` (obtained from `choose_victim`),
+    /// resetting all MESI/CCache metadata and marking it MRU.
+    pub fn install(&mut self, idx: usize, line: Line) {
+        debug_assert_ne!(line.0, TAG_NONE, "line collides with the empty sentinel");
+        self.tags[idx] = line.0;
+        self.flags[idx] = 0;
+        self.merge_types[idx] = 0;
+        self.touch(idx);
     }
 
     /// Invalidate `line` if present; returns its metadata beforehand.
     pub fn invalidate(&mut self, line: Line) -> Option<LineMeta> {
         let idx = self.probe(line)?;
-        let meta = self.lines[idx];
-        self.lines[idx].valid = false;
+        let meta = self.meta(idx);
+        self.tags[idx] = TAG_NONE;
         Some(meta)
     }
 
     /// Slot indices of all valid lines in the cache (test/diagnostic use).
     pub fn valid_slots(&self) -> impl Iterator<Item = usize> + '_ {
-        (0..self.lines.len()).filter(|&i| self.lines[i].valid)
+        (0..self.tags.len()).filter(|&i| self.tags[i] != TAG_NONE)
     }
 
     /// Count of pinned (non-mergeable) CData ways in `line`'s set.
     pub fn pinned_cdata_in_set(&self, line: Line) -> usize {
         self.set_range(line)
             .filter(|&i| {
-                let m = &self.lines[i];
-                m.valid && m.ccache && !m.mergeable
+                self.tags[i] != TAG_NONE
+                    && self.flags[i] & (F_CCACHE | F_MERGEABLE) == F_CCACHE
             })
             .count()
     }
@@ -206,12 +278,18 @@ mod tests {
         Line(v)
     }
 
+    fn install_free(c: &mut Cache, line: Line) -> usize {
+        let Victim::Free { way } = c.choose_victim(line) else {
+            panic!("expected a free way for {line:?}")
+        };
+        c.install(way, line);
+        way
+    }
+
     #[test]
     fn hit_after_install() {
         let mut c = Cache::new(4, 2);
-        let v = c.choose_victim(l(5));
-        let Victim::Free { way } = v else { panic!() };
-        c.install(way, l(5));
+        install_free(&mut c, l(5));
         assert!(c.lookup(l(5)).is_some());
         assert!(c.lookup(l(9)).is_none()); // same set (5 % 4 == 1, 9 % 4 == 1), different tag
     }
@@ -219,16 +297,8 @@ mod tests {
     #[test]
     fn lru_evicts_least_recent() {
         let mut c = Cache::new(1, 2);
-        let w0 = match c.choose_victim(l(0)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        c.install(w0, l(0));
-        let w1 = match c.choose_victim(l(1)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        c.install(w1, l(1));
+        install_free(&mut c, l(0));
+        install_free(&mut c, l(1));
         // touch 0 so 1 becomes LRU
         c.lookup(l(0));
         match c.choose_victim(l(2)) {
@@ -241,12 +311,8 @@ mod tests {
     fn pinned_cdata_never_chosen() {
         let mut c = Cache::new(1, 2);
         for i in 0..2 {
-            let w = match c.choose_victim(l(i)) {
-                Victim::Free { way } => way,
-                _ => panic!(),
-            };
-            let m = c.install(w, l(i));
-            m.ccache = true; // pinned: ccache bit set, not mergeable
+            let w = install_free(&mut c, l(i));
+            c.set_ccache(w, true); // pinned: ccache bit set, not mergeable
         }
         assert_eq!(c.choose_victim(l(2)), Victim::Deadlock);
         assert_eq!(c.pinned_cdata_in_set(l(2)), 2);
@@ -256,24 +322,12 @@ mod tests {
     fn mergeable_cdata_evictable_after_normals() {
         let mut c = Cache::new(1, 3);
         // way0: mergeable CData (oldest), way1: normal, way2: pinned CData
-        let w = match c.choose_victim(l(0)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        let m = c.install(w, l(0));
-        m.ccache = true;
-        m.mergeable = true;
-        let w = match c.choose_victim(l(1)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        c.install(w, l(1));
-        let w = match c.choose_victim(l(2)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        let m = c.install(w, l(2));
-        m.ccache = true;
+        let w = install_free(&mut c, l(0));
+        c.set_ccache(w, true);
+        c.set_mergeable(w, true);
+        install_free(&mut c, l(1));
+        let w = install_free(&mut c, l(2));
+        c.set_ccache(w, true);
         // normal line evicted first even though the mergeable line is older
         match c.choose_victim(l(3)) {
             Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
@@ -284,11 +338,7 @@ mod tests {
     #[test]
     fn invalidate_removes_line() {
         let mut c = Cache::new(2, 2);
-        let w = match c.choose_victim(l(0)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        c.install(w, l(0));
+        install_free(&mut c, l(0));
         let meta = c.invalidate(l(0)).unwrap();
         assert_eq!(meta.line, l(0));
         assert!(c.lookup(l(0)).is_none());
@@ -306,18 +356,15 @@ mod tests {
     #[test]
     fn install_resets_all_mesi_and_ccache_metadata() {
         let mut c = Cache::new(1, 1);
-        let w = match c.choose_victim(l(0)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        let m = c.install(w, l(0));
-        m.owned = true;
-        m.dirty = true;
-        m.ccache = true;
-        m.mergeable = true;
-        m.merge_type = 3;
+        let w = install_free(&mut c, l(0));
+        c.set_owned(w, true);
+        c.set_dirty(w, true);
+        c.set_ccache(w, true);
+        c.set_mergeable(w, true);
+        c.set_merge_type(w, 3);
         // re-installing the slot (new line) must not inherit stale state
-        let m = c.install(w, l(9));
+        c.install(w, l(9));
+        let m = c.meta(w);
         assert_eq!(m.line, l(9));
         assert!(!m.owned && !m.dirty && !m.ccache && !m.mergeable);
         assert_eq!(m.merge_type, 0);
@@ -326,15 +373,11 @@ mod tests {
     #[test]
     fn mergeable_bit_unpins_a_cdata_line() {
         let mut c = Cache::new(1, 1);
-        let w = match c.choose_victim(l(0)) {
-            Victim::Free { way } => way,
-            _ => panic!(),
-        };
-        let m = c.install(w, l(0));
-        m.ccache = true;
+        let w = install_free(&mut c, l(0));
+        c.set_ccache(w, true);
         assert_eq!(c.choose_victim(l(1)), Victim::Deadlock);
         let idx = c.probe(l(0)).unwrap();
-        c.meta_mut(idx).mergeable = true;
+        c.set_mergeable(idx, true);
         match c.choose_victim(l(1)) {
             Victim::Evict { meta, .. } => assert_eq!(meta.line, l(0)),
             v => panic!("{v:?}"),
@@ -346,11 +389,7 @@ mod tests {
     fn invalidated_way_is_reused_before_evicting() {
         let mut c = Cache::new(1, 2);
         for i in 0..2 {
-            let w = match c.choose_victim(l(i)) {
-                Victim::Free { way } => way,
-                _ => panic!(),
-            };
-            c.install(w, l(i));
+            install_free(&mut c, l(i));
         }
         c.invalidate(l(0));
         // the freed way is preferred over evicting line 1
@@ -365,11 +404,7 @@ mod tests {
     fn probe_does_not_touch_lru_but_lookup_does() {
         let mut c = Cache::new(1, 2);
         for i in 0..2 {
-            let w = match c.choose_victim(l(i)) {
-                Victim::Free { way } => way,
-                _ => panic!(),
-            };
-            c.install(w, l(i));
+            install_free(&mut c, l(i));
         }
         // probe line 0 only: line 0 stays LRU and gets evicted
         c.probe(l(0));
@@ -383,5 +418,38 @@ mod tests {
             Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
             v => panic!("{v:?}"),
         }
+    }
+
+    #[test]
+    fn touch_is_equivalent_to_lookup_for_lru() {
+        let mut c = Cache::new(1, 2);
+        for i in 0..2 {
+            install_free(&mut c, l(i));
+        }
+        // probe + touch line 0 ≡ lookup line 0: line 1 becomes the victim
+        let idx = c.probe(l(0)).unwrap();
+        c.touch(idx);
+        match c.choose_victim(l(9)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
+            v => panic!("{v:?}"),
+        }
+    }
+
+    #[test]
+    fn meta_snapshot_mirrors_flag_setters() {
+        let mut c = Cache::new(2, 2);
+        let w = install_free(&mut c, l(3));
+        c.set_ccache(w, true);
+        c.set_dirty(w, true);
+        c.set_merge_type(w, 7);
+        let m = c.meta(w);
+        assert!(m.ccache && m.dirty && !m.owned && !m.mergeable);
+        assert_eq!(m.merge_type, 7);
+        assert!(!m.evictable());
+        assert!(c.is_ccache(w) && c.is_dirty(w));
+        assert!(!c.is_owned(w) && !c.is_mergeable(w));
+        assert_eq!(c.merge_type(w), 7);
+        c.set_dirty(w, false);
+        assert!(!c.is_dirty(w));
     }
 }

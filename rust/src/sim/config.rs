@@ -110,6 +110,13 @@ pub struct MachineConfig {
     pub ccache: CCacheConfig,
     /// Functional memory size in bytes.
     pub mem_bytes: usize,
+    /// Take the engine's branch-light fast path for coherent L1 read
+    /// hits and private-hit COps (default). The fast path is an exact
+    /// shortcut — stats and memory stay bit-identical to the full walk
+    /// (the differential suite in `tests/fastpath_diff.rs` proves it);
+    /// disabling it exists for that differential testing, not as a
+    /// semantic knob.
+    pub fast_path: bool,
 }
 
 impl Default for MachineConfig {
@@ -124,6 +131,7 @@ impl Default for MachineConfig {
             timing: Timing::table2(),
             ccache: CCacheConfig::default(),
             mem_bytes: 256 << 20,
+            fast_path: true,
         }
     }
 }

@@ -283,6 +283,9 @@ impl<'m> CoreCtx<'m> {
         let quantum = self.machine.quantum;
         let gen = {
             let g = self.state();
+            // a barrier is a phase boundary: fold this core's (and any
+            // already-parked cores') fast-path counters into the stats
+            g.mem.flush_hot_stats();
             g.mem.stats.barriers += 1;
             g.waiting[core] = true;
             let gen = g.barrier_gen;

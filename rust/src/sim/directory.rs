@@ -4,10 +4,16 @@
 //! tracks which private caches hold the line and whether one of them owns
 //! it exclusively (E/M). CData never appears here: c_read/c_write bypass
 //! coherence entirely (Section 4.4).
-
-use std::collections::HashMap;
+//!
+//! Storage is an open-addressed hash table (linear probing, fibonacci
+//! hashing, backward-shift deletion) rather than a `HashMap`: every
+//! coherent miss performs a directory transaction, so the lookup is on
+//! the simulator's hot path, and line addresses come densely from
+//! `alloc_lines` — a flat probe sequence touches one or two cache lines
+//! where the std map chases SipHash plus control bytes.
 
 use super::addr::Line;
+use super::invariant::InvariantViolation;
 
 /// Sharer bitmask (up to 64 cores).
 pub type SharerMask = u64;
@@ -61,32 +67,144 @@ pub struct CoherenceActions {
     pub dir_msgs: u32,
 }
 
+/// Key marking an empty table slot. Line addresses are `byte >> 6` of a
+/// bump-allocated, bounds-checked memory, so `u64::MAX` is unreachable.
+const EMPTY: u64 = u64::MAX;
+
 pub struct Directory {
-    entries: HashMap<u64, DirEntry>,
+    /// Line keys, `EMPTY` = free slot. Power-of-two length.
+    keys: Vec<u64>,
+    entries: Vec<DirEntry>,
+    len: usize,
+    /// `keys.len() - 1`, for probe wraparound.
+    mask: usize,
+    /// `64 - log2(keys.len())`: fibonacci hashing keeps the high bits.
+    shift: u32,
 }
 
 impl Directory {
+    const INITIAL_CAPACITY: usize = 1024;
+
     pub fn new() -> Self {
+        Self::with_capacity(Self::INITIAL_CAPACITY)
+    }
+
+    fn with_capacity(cap: usize) -> Self {
+        debug_assert!(cap.is_power_of_two());
         Self {
-            entries: HashMap::new(),
+            keys: vec![EMPTY; cap],
+            entries: vec![DirEntry::new(); cap],
+            len: 0,
+            mask: cap - 1,
+            shift: 64 - cap.trailing_zeros(),
+        }
+    }
+
+    /// Fibonacci hash: multiply spreads dense line indices across the
+    /// high bits, the shift keeps exactly `log2(capacity)` of them.
+    #[inline]
+    fn hash(&self, key: u64) -> usize {
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> self.shift) as usize
+    }
+
+    /// Slot of `key` if present.
+    #[inline]
+    fn find(&self, key: u64) -> Option<usize> {
+        let mut i = self.hash(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(i);
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Slot of `key`, inserting a fresh `Uncached` entry if absent.
+    fn slot_or_insert(&mut self, key: u64) -> usize {
+        debug_assert_ne!(key, EMPTY, "line address collides with the EMPTY sentinel");
+        if (self.len + 1) * 10 > self.keys.len() * 7 {
+            self.grow();
+        }
+        let mut i = self.hash(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return i;
+            }
+            if k == EMPTY {
+                self.keys[i] = key;
+                self.entries[i] = DirEntry::new();
+                self.len += 1;
+                return i;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Double the table and rehash every occupied slot.
+    fn grow(&mut self) {
+        let mut bigger = Self::with_capacity(self.keys.len() * 2);
+        for i in 0..self.keys.len() {
+            if self.keys[i] != EMPTY {
+                let j = bigger.slot_or_insert(self.keys[i]);
+                bigger.entries[j] = self.entries[i];
+            }
+        }
+        *self = bigger;
+    }
+
+    /// Remove `key`, repairing the probe chain with backward-shift
+    /// deletion (no tombstones: lookups stay one clean linear scan).
+    fn remove(&mut self, key: u64) -> Option<DirEntry> {
+        let mut i = self.find(key)?;
+        let removed = self.entries[i];
+        let mut j = i;
+        loop {
+            self.keys[i] = EMPTY;
+            loop {
+                j = (j + 1) & self.mask;
+                if self.keys[j] == EMPTY {
+                    self.len -= 1;
+                    return Some(removed);
+                }
+                let home = self.hash(self.keys[j]);
+                // keys[j] may stay put only if its home slot lies in the
+                // cyclic range (i, j] — otherwise the new hole at i
+                // breaks its probe chain and it must shift back
+                let stays = if i <= j {
+                    i < home && home <= j
+                } else {
+                    i < home || home <= j
+                };
+                if !stays {
+                    break;
+                }
+            }
+            self.keys[i] = self.keys[j];
+            self.entries[i] = self.entries[j];
+            i = j;
         }
     }
 
     pub fn entry(&self, line: Line) -> Option<&DirEntry> {
-        self.entries.get(&line.0)
+        self.find(line.0).map(|i| &self.entries[i])
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len == 0
     }
 
     /// Core `c` requests read access (GetS).
     pub fn get_s(&mut self, line: Line, c: usize) -> CoherenceActions {
-        let e = self.entries.entry(line.0).or_insert_with(DirEntry::new);
+        let e = &mut self.entries[self.slot_or_insert(line.0)];
         let mut act = CoherenceActions {
             dir_msgs: 1, // the GetS itself
             ..Default::default()
@@ -115,7 +233,7 @@ impl Directory {
 
     /// Core `c` requests write access (GetM / upgrade).
     pub fn get_m(&mut self, line: Line, c: usize) -> CoherenceActions {
-        let e = self.entries.entry(line.0).or_insert_with(DirEntry::new);
+        let e = &mut self.entries[self.slot_or_insert(line.0)];
         let mut act = CoherenceActions {
             dir_msgs: 1,
             ..Default::default()
@@ -150,7 +268,8 @@ impl Directory {
             dir_msgs: 1,
             ..Default::default()
         };
-        if let Some(e) = self.entries.get_mut(&line.0) {
+        if let Some(i) = self.find(line.0) {
+            let e = &mut self.entries[i];
             e.sharers &= !(1 << c);
             match e.state {
                 DirState::Owned { owner } if owner == c => {
@@ -175,7 +294,7 @@ impl Directory {
     /// LLC evicts the line (inclusive recall): every private copy must be
     /// invalidated; returns the sharers to invalidate and removes the entry.
     pub fn recall(&mut self, line: Line) -> (SharerMask, CoherenceActions) {
-        let Some(e) = self.entries.remove(&line.0) else {
+        let Some(e) = self.remove(line.0) else {
             return (0, CoherenceActions::default());
         };
         let act = CoherenceActions {
@@ -191,24 +310,35 @@ impl Directory {
     }
 
     /// Internal-consistency check used by the property tests.
-    pub fn check_invariants(&self) -> Result<(), String> {
-        for (&line, e) in &self.entries {
+    pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
+        for i in 0..self.keys.len() {
+            let line = self.keys[i];
+            if line == EMPTY {
+                continue;
+            }
+            let e = &self.entries[i];
             match e.state {
                 DirState::Uncached => {
                     if e.sharers != 0 {
-                        return Err(format!("line {line:#x}: Uncached but sharers != 0"));
+                        return Err(InvariantViolation::directory(
+                            line,
+                            format!("Uncached but sharers {:#b}", e.sharers),
+                        ));
                     }
                 }
                 DirState::Shared => {
                     if e.sharers == 0 {
-                        return Err(format!("line {line:#x}: Shared but no sharers"));
+                        return Err(InvariantViolation::directory(
+                            line,
+                            "Shared but no sharers",
+                        ));
                     }
                 }
                 DirState::Owned { owner } => {
                     if e.sharers != 1 << owner {
-                        return Err(format!(
-                            "line {line:#x}: Owned by {owner} but sharers {:#b}",
-                            e.sharers
+                        return Err(InvariantViolation::directory(
+                            line,
+                            format!("Owned by {owner} but sharers {:#b}", e.sharers),
                         ));
                     }
                 }
@@ -363,5 +493,64 @@ mod tests {
         d.get_m(l(1), 0);
         let dirty = d.put(l(1), 0, true);
         assert_eq!(dirty.dir_msgs, clean.dir_msgs + 1);
+    }
+
+    #[test]
+    fn growth_past_initial_capacity_preserves_every_entry() {
+        let mut d = Directory::new();
+        let n = (Directory::INITIAL_CAPACITY * 4) as u64;
+        for line in 0..n {
+            d.get_s(l(line), (line % 8) as usize);
+        }
+        assert_eq!(d.len(), n as usize);
+        for line in 0..n {
+            let e = d.entry(l(line)).unwrap_or_else(|| panic!("line {line} lost"));
+            assert_eq!(
+                e.state,
+                DirState::Owned {
+                    owner: (line % 8) as usize
+                }
+            );
+        }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn backward_shift_deletion_keeps_probe_chains_intact() {
+        // drive a dense key range through interleaved inserts and
+        // recalls: linear-probing clusters form and every deletion must
+        // repair the chain or later finds go EMPTY too early
+        let mut d = Directory::new();
+        for line in 0..4096u64 {
+            d.get_s(l(line), 0);
+        }
+        for line in (0..4096u64).step_by(2) {
+            d.recall(l(line));
+        }
+        assert_eq!(d.len(), 2048);
+        for line in 0..4096u64 {
+            if line % 2 == 0 {
+                assert!(d.entry(l(line)).is_none(), "line {line} should be gone");
+            } else {
+                assert!(d.entry(l(line)).is_some(), "line {line} lost its entry");
+            }
+        }
+        // survivors are still fully operational
+        for line in (1..4096u64).step_by(2) {
+            d.get_m(l(line), 1);
+        }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn len_tracks_inserts_and_recalls() {
+        let mut d = Directory::new();
+        assert!(d.is_empty());
+        d.get_s(l(1), 0);
+        d.get_m(l(2), 0);
+        assert_eq!(d.len(), 2);
+        d.recall(l(1));
+        d.recall(l(1)); // double recall is a no-op
+        assert_eq!(d.len(), 1);
     }
 }

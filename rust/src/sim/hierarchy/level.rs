@@ -1,5 +1,6 @@
 //! One level of the cache hierarchy: geometry + hit latency as data
-//! ([`LevelConfig`]) and the instantiated tag arrays ([`Level`]).
+//! ([`LevelConfig`]) and the instantiated flat tag/metadata arrays
+//! ([`Level`] wrapping the struct-of-arrays [`Cache`]).
 //!
 //! A level is either *private* (one [`Cache`] per core — L1, L2, ...)
 //! or *shared* (a single cache all cores reach — the LLC). The

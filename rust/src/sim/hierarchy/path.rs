@@ -101,6 +101,25 @@ impl AccessPath {
     // the coherent MESI walk
     // ------------------------------------------------------------------
 
+    /// Branch-light fast path for the dominant access class: a coherent
+    /// *read* hitting the innermost level. Returns the cycles to charge
+    /// on a clean hit, `None` when the full walk must run instead (miss,
+    /// or a CData line — the walk owns that diagnosis). Exactness: the
+    /// `touch` on the hit is the same LRU transaction `lookup` performs
+    /// in [`coherent_walk`], and on `None` no state has changed (`probe`
+    /// never ticks), so falling back replays the access bit-identically.
+    #[inline]
+    pub fn read_hit_innermost(&mut self, core: usize, line: Line) -> Option<u64> {
+        let hit_cycles = self.levels[0].cfg.hit_cycles;
+        let cache = self.levels[0].cache_mut(core);
+        let idx = cache.probe(line)?;
+        if cache.is_ccache(idx) {
+            return None; // the slow path asserts with the full diagnostic
+        }
+        cache.touch(idx);
+        Some(hit_cycles)
+    }
+
     /// Walk a coherent access through the stack: private levels innermost
     /// outward, then the shared level + directory. Performs all fills
     /// except the innermost one, which is returned for the engine to
@@ -122,7 +141,7 @@ impl AccessPath {
                 stats.levels[lvl].misses += 1;
                 continue;
             };
-            let meta = *self.levels[lvl].cache(core).meta(idx);
+            let meta = self.levels[lvl].cache(core).meta(idx);
             if lvl == 0 {
                 assert!(
                     !meta.ccache,
@@ -140,15 +159,15 @@ impl AccessPath {
                 // mark dirty/owned here and at every outer private level
                 // holding the line (inclusion bookkeeping)
                 {
-                    let m = self.levels[lvl].cache_mut(core).meta_mut(idx);
-                    m.dirty = true;
-                    m.owned = true;
+                    let c = self.levels[lvl].cache_mut(core);
+                    c.set_dirty(idx, true);
+                    c.set_owned(idx, true);
                 }
                 for outer in lvl + 1..n_priv {
                     if let Some(i2) = self.levels[outer].cache_mut(core).lookup(line) {
-                        let m2 = self.levels[outer].cache_mut(core).meta_mut(i2);
-                        m2.dirty = true;
-                        m2.owned = true;
+                        let c2 = self.levels[outer].cache_mut(core);
+                        c2.set_dirty(i2, true);
+                        c2.set_owned(i2, true);
                     }
                 }
             }
@@ -248,7 +267,7 @@ impl AccessPath {
             // (Section 4.4): leave them untouched even if the directory
             // has a stale registration for this core.
             if let Some(idx) = self.levels[0].cache(c).probe(line) {
-                if !self.levels[0].cache(c).meta(idx).ccache {
+                if !self.levels[0].cache(c).is_ccache(idx) {
                     self.levels[0].cache_mut(c).invalidate(line);
                 }
             }
@@ -263,9 +282,9 @@ impl AccessPath {
                 if owner != me {
                     for lvl in 0..n_priv {
                         if let Some(idx) = self.levels[lvl].cache(owner).probe(line) {
-                            let m = self.levels[lvl].cache_mut(owner).meta_mut(idx);
-                            m.owned = false;
-                            m.dirty = false;
+                            let c = self.levels[lvl].cache_mut(owner);
+                            c.set_owned(idx, false);
+                            c.set_dirty(idx, false);
                         }
                     }
                 }
@@ -292,9 +311,10 @@ impl AccessPath {
             return Ok(());
         }
         let way = self.try_cdata_way(core, line, stats)?;
-        let m = self.levels[0].cache_mut(core).install(way, line);
-        m.owned = owned;
-        m.dirty = dirty;
+        let c = self.levels[0].cache_mut(core);
+        c.install(way, line);
+        c.set_owned(way, owned);
+        c.set_dirty(way, dirty);
         Ok(())
     }
 
@@ -337,9 +357,11 @@ impl AccessPath {
         stats: &mut Stats,
     ) {
         if let Some(idx) = self.levels[lvl].cache_mut(core).lookup(line) {
-            let m = self.levels[lvl].cache_mut(core).meta_mut(idx);
-            m.owned = owned;
-            m.dirty |= dirty;
+            let c = self.levels[lvl].cache_mut(core);
+            c.set_owned(idx, owned);
+            if dirty {
+                c.set_dirty(idx, true);
+            }
             return;
         }
         let way = match self.levels[lvl].cache(core).choose_victim(line) {
@@ -351,9 +373,10 @@ impl AccessPath {
             }
             Victim::Deadlock => unreachable!("only the innermost level holds CData"),
         };
-        let m = self.levels[lvl].cache_mut(core).install(way, line);
-        m.owned = owned;
-        m.dirty = dirty;
+        let c = self.levels[lvl].cache_mut(core);
+        c.install(way, line);
+        c.set_owned(way, owned);
+        c.set_dirty(way, dirty);
     }
 
     /// Evict a coherent line from private level `lvl`: back-invalidate
@@ -376,14 +399,14 @@ impl AccessPath {
                 stats.writebacks += 1;
                 let sh = self.shared_index();
                 if let Some(i) = self.levels[sh].cache(0).probe(meta.line) {
-                    self.levels[sh].cache_mut(0).meta_mut(i).dirty = true;
+                    self.levels[sh].cache_mut(0).set_dirty(i, true);
                 }
             }
         } else if dirty {
             // write back into the next private level (inclusion
             // guarantees presence)
             if let Some(i) = self.levels[lvl + 1].cache(core).probe(meta.line) {
-                self.levels[lvl + 1].cache_mut(core).meta_mut(i).dirty = true;
+                self.levels[lvl + 1].cache_mut(core).set_dirty(i, true);
             }
         }
     }

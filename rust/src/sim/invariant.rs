@@ -1,0 +1,112 @@
+//! Typed invariant-violation errors for the simulator's
+//! cross-structure consistency checks.
+//!
+//! The stress and property suites call
+//! [`Directory::check_invariants`](super::directory::Directory::check_invariants)
+//! and [`MemSystem::check_invariants`](super::memsys::MemSystem::check_invariants)
+//! after every phase; a violation used to surface as a bare `String`,
+//! which the execution layer could neither match on nor attribute. This
+//! module gives those checks a structured error consistent with
+//! [`ExecError`](crate::exec::ExecError): the failing structure, the
+//! line, the core (for engine-side checks) and a human diagnostic.
+//!
+//! `From<InvariantViolation> for String` keeps the property-test
+//! closures (whose result type is `Result<(), String>`) working with
+//! `?` unchanged.
+
+use std::fmt;
+
+/// A broken cross-structure invariant, found by a `check_invariants`
+/// sweep. Carries enough structure for the execution layer to report
+/// *where* the simulated machine went inconsistent.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InvariantViolation {
+    /// The MESI directory's state/sharer bookkeeping is inconsistent.
+    Directory { line: u64, detail: String },
+    /// The CCache engine's L1/source-buffer/merge-type bindings are
+    /// inconsistent for one core.
+    Engine {
+        core: usize,
+        line: u64,
+        detail: String,
+    },
+}
+
+impl InvariantViolation {
+    pub fn directory(line: u64, detail: impl Into<String>) -> Self {
+        InvariantViolation::Directory {
+            line,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn engine(core: usize, line: u64, detail: impl Into<String>) -> Self {
+        InvariantViolation::Engine {
+            core,
+            line,
+            detail: detail.into(),
+        }
+    }
+
+    /// The line the violation was detected on.
+    pub fn line(&self) -> u64 {
+        match self {
+            InvariantViolation::Directory { line, .. }
+            | InvariantViolation::Engine { line, .. } => *line,
+        }
+    }
+}
+
+impl fmt::Display for InvariantViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InvariantViolation::Directory { line, detail } => {
+                write!(f, "directory invariant violated: line {line:#x}: {detail}")
+            }
+            InvariantViolation::Engine { core, line, detail } => {
+                write!(
+                    f,
+                    "engine invariant violated: core {core}: line {line:#x}: {detail}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for InvariantViolation {}
+
+/// The property-test driver's result type is `Result<(), String>`;
+/// this keeps `check_invariants()?` working inside those closures.
+impl From<InvariantViolation> for String {
+    fn from(v: InvariantViolation) -> String {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_structure_core_and_line() {
+        let v = InvariantViolation::engine(3, 0x40, "merge-type skew");
+        let msg = v.to_string();
+        assert!(msg.contains("core 3"), "{msg}");
+        assert!(msg.contains("0x40"), "{msg}");
+        assert!(msg.contains("merge-type skew"), "{msg}");
+        assert_eq!(v.line(), 0x40);
+
+        let v = InvariantViolation::directory(0x80, "Shared but no sharers");
+        assert!(v.to_string().starts_with("directory invariant"), "{v}");
+        assert_eq!(v.line(), 0x80);
+    }
+
+    #[test]
+    fn converts_to_string_for_prop_results() {
+        let run = || -> Result<(), String> {
+            Err(InvariantViolation::directory(1, "x"))?;
+            Ok(())
+        };
+        assert!(run().unwrap_err().contains("directory invariant"));
+    }
+}

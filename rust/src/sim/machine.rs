@@ -191,6 +191,9 @@ impl Machine {
             }
         });
         let mut g = self.state.lock().unwrap();
+        // end of run: fold the fast-path scratch counters in before the
+        // stats are cloned out
+        g.mem.flush_hot_stats();
         let clocks = g.clocks.clone();
         let mut stats = g.mem.stats.clone();
         stats.core_cycles = clocks;

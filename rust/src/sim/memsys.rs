@@ -12,20 +12,26 @@
 //! [`AccessPath`](super::hierarchy::path::AccessPath) — an arbitrary
 //! stack of private levels plus one shared level, built from
 //! [`MachineConfig::levels`]. This file keeps the CCache engine state
-//! (source buffers, MFRF, private updated copies, the background merge
-//! engine) and the merge execution, with the merge/merge-on-evict/
-//! dirty-merge decisions behind the
-//! [`MergePolicy`](super::hierarchy::merge_policy::MergePolicy) trait.
+//! (source buffers, MFRF, the background merge engine) and the merge
+//! execution, with the merge/merge-on-evict/dirty-merge decisions behind
+//! the [`MergePolicy`](super::hierarchy::merge_policy::MergePolicy) trait.
 //!
 //! Functional model: one flat `u32` memory is authoritative for coherent
 //! data (the workloads synchronize their racy accesses, so a single copy
 //! observes every serialization the protocol would produce). CData is
-//! different: each core's privatized *updated copy* lives in a per-core
-//! side table and its *source copy* in the source buffer, so merge
-//! functions compute real values — final memory contents are checked
-//! against sequential golden runs in the integration tests.
-
-use std::collections::HashMap;
+//! different: each core's privatized *updated copy* lives next to its
+//! *source copy* in the source buffer entry
+//! ([`SourceEntry::upd`](super::source_buffer::SourceEntry::upd)), so
+//! merge functions compute real values — final memory contents are
+//! checked against sequential golden runs in the integration tests.
+//!
+//! Hot path (`MachineConfig::fast_path`, default on): the two dominant
+//! access classes — coherent L1 read hits and private-hit COps — skip
+//! the full multi-level walk and bump per-core [`HotCounters`] instead
+//! of the shared [`Stats`]; [`MemSystem::flush_hot_stats`] folds the
+//! scratch in at phase boundaries. The fast path is exact: state
+//! transitions and post-flush stats are bit-identical to the full walk
+//! (`tests/fastpath_diff.rs` proves it differentially).
 
 use super::addr::{Addr, Line};
 use super::cache::Cache;
@@ -33,9 +39,10 @@ use super::config::{ConfigError, MachineConfig};
 use super::directory::Directory;
 use super::hierarchy::merge_policy::{self, MergeDecision, MergePolicy};
 use super::hierarchy::path::AccessPath;
+use super::invariant::InvariantViolation;
 use super::mfrf::{MergeFault, Mfrf};
 use super::source_buffer::SourceBuffer;
-use super::stats::Stats;
+use super::stats::{HotCounters, Stats};
 use crate::merge::batch::MergeItem;
 use crate::merge::{LineData, MergeHandle, LINE_WORDS};
 use crate::util::rng::Rng;
@@ -48,15 +55,22 @@ pub struct MergeRecord {
     pub item: MergeItem,
 }
 
+/// Sentinel in `cdata_slot`: this L1 way holds no CData binding.
+const NO_SLOT: u32 = u32::MAX;
+
 pub struct MemSystem {
     pub cfg: MachineConfig,
     /// The cache hierarchy + directory (structure); see module docs.
     path: AccessPath,
     /// Flat functional memory (word-addressed).
     mem: Vec<u32>,
-    /// Per-core CData updated copies (the L1 data array for CData lines).
-    priv_data: Vec<HashMap<u64, LineData>>,
     src_buf: Vec<SourceBuffer>,
+    /// `cdata_slot[core][l1_way_index]` = the source-buffer slot bound to
+    /// the CData line installed in that way (written at privatization).
+    /// Read only for ways whose CCache bit is set, so stale values after
+    /// an invalidation are harmless. Gives COp hits O(1) access to the
+    /// updated copy instead of an associative search.
+    cdata_slot: Vec<Vec<u32>>,
     mfrf: Vec<Mfrf>,
     /// Background merge-engine backlog per core, in cycles of queued
     /// merge work (victim-buffer model; see CCacheConfig::merge_engine_*).
@@ -64,6 +78,13 @@ pub struct MemSystem {
     /// Merge timing/disposition decisions (Section 4.3) as data.
     policy: Box<dyn MergePolicy>,
     pub stats: Stats,
+    /// Per-core fast-path counter scratch; folded into `stats` by
+    /// [`flush_hot_stats`](Self::flush_hot_stats).
+    hot: Vec<HotCounters>,
+    /// Reusable (lru, line) scratch for merge iteration — soft_merge and
+    /// merge_all walk the source buffer through this instead of
+    /// allocating a fresh sorted `Vec` per call.
+    merge_scratch: Vec<(u64, Line)>,
     alloc_cursor: u64,
     /// Deterministic stream for approximate-merge drop decisions.
     approx_rng: Rng,
@@ -85,17 +106,20 @@ impl MemSystem {
     pub fn new(cfg: MachineConfig) -> Result<Self, ConfigError> {
         cfg.validate()?;
         let cores = cfg.cores;
+        let l1_slots = cfg.l1().sets() * cfg.l1().ways;
         Ok(Self {
             path: AccessPath::new(&cfg),
             mem: vec![0u32; cfg.mem_bytes / 4],
-            priv_data: (0..cores).map(|_| HashMap::new()).collect(),
             src_buf: (0..cores)
                 .map(|_| SourceBuffer::new(cfg.ccache.source_buffer_entries))
                 .collect(),
+            cdata_slot: (0..cores).map(|_| vec![NO_SLOT; l1_slots]).collect(),
             engine_backlog: vec![0; cores],
             mfrf: (0..cores).map(|_| Mfrf::new(cfg.ccache.mfrf_slots)).collect(),
             policy: merge_policy::from_config(&cfg.ccache),
             stats: Stats::new(cores, cfg.depth()),
+            hot: vec![HotCounters::default(); cores],
+            merge_scratch: Vec::new(),
             alloc_cursor: 64, // keep address 0 unused
             approx_rng: Rng::new(0xA990_05ED),
             record_merges: false,
@@ -179,7 +203,18 @@ impl MemSystem {
 
     /// Coherent read of one word. Returns (value, cycles).
     pub fn read(&mut self, core: usize, addr: Addr) -> Result<(u32, u64), MergeFault> {
-        let cycles = self.coherent_access(core, addr.line(), false)?;
+        let line = addr.line();
+        // fast path: the dominant class — a read hitting L1. The probe
+        // either commits the exact hit transaction (LRU touch, one
+        // batched hit counter) or leaves no trace and the full walk runs.
+        if self.cfg.fast_path {
+            if let Some(cycles) = self.path.read_hit_innermost(core, line) {
+                self.hot[core].l1_hits += 1;
+                self.drain_engine(core, cycles);
+                return Ok((self.mem[addr.word_index()], cycles));
+            }
+        }
+        let cycles = self.coherent_access(core, line, false)?;
         self.drain_engine(core, cycles);
         Ok((self.mem[addr.word_index()], cycles))
     }
@@ -260,10 +295,9 @@ impl MemSystem {
     /// `c_read(CData, i)` — commutative read of one word.
     pub fn c_read(&mut self, core: usize, addr: Addr, ty: u8) -> Result<(u32, u64), MergeFault> {
         let line = addr.line();
-        let cycles = self.cop_access(core, line, ty, false)?;
+        let (cycles, slot) = self.cop_access(core, line, ty, false)?;
         self.drain_engine(core, cycles);
-        let data = &self.priv_data[core][&line.0];
-        Ok((data[(addr.offset() / 4) as usize], cycles))
+        Ok((self.src_buf[core].upd(slot)[(addr.offset() / 4) as usize], cycles))
     }
 
     /// `c_write(CData, v, i)` — commutative write of one word.
@@ -275,43 +309,78 @@ impl MemSystem {
         ty: u8,
     ) -> Result<u64, MergeFault> {
         let line = addr.line();
-        let cycles = self.cop_access(core, line, ty, true)?;
+        let (cycles, slot) = self.cop_access(core, line, ty, true)?;
         self.drain_engine(core, cycles);
-        let data = self.priv_data[core].get_mut(&line.0).unwrap();
-        data[(addr.offset() / 4) as usize] = val;
+        self.src_buf[core].upd_mut(slot)[(addr.offset() / 4) as usize] = val;
         Ok(cycles)
     }
 
-    /// Common path for c_read/c_write: hit innermost or privatize the line.
+    /// Common path for c_read/c_write: hit innermost or privatize the
+    /// line. Returns the cycles charged and the source-buffer slot
+    /// holding the line's updated copy.
     ///
     /// A COp naming a merge type whose MFRF slot was never initialized is
     /// the hardware's undefined-instruction case: it raises a typed
     /// [`MergeFault`] before touching any structure.
-    fn cop_access(&mut self, core: usize, line: Line, ty: u8, write: bool) -> Result<u64, MergeFault> {
+    fn cop_access(
+        &mut self,
+        core: usize,
+        line: Line,
+        ty: u8,
+        write: bool,
+    ) -> Result<(u64, usize), MergeFault> {
         if self.mfrf[core].get(ty).is_none() {
             return Err(self.merge_fault(core, ty));
         }
+
+        // fast path: private CData hit. Same transitions as the slow hit
+        // block below, with the counters batched per core; a probe miss
+        // or a coherent copy leaves no trace (probe never ticks) and
+        // falls through to the full path.
+        if self.cfg.fast_path {
+            let hit_cycles = self.cfg.l1().hit_cycles;
+            let l1 = self.path.innermost_mut(core);
+            if let Some(idx) = l1.probe(line) {
+                if l1.is_ccache(idx) {
+                    l1.touch(idx);
+                    l1.set_mergeable(idx, false);
+                    if write {
+                        l1.set_dirty(idx, true);
+                    }
+                    let retype = l1.merge_type(idx) != ty;
+                    if retype {
+                        l1.set_merge_type(idx, ty);
+                        self.src_buf[core].set_merge_type(line, ty);
+                    }
+                    self.hot[core].cops += 1;
+                    self.hot[core].ccache_l1_hits += 1;
+                    return Ok((hit_cycles, self.cdata_slot[core][idx] as usize));
+                }
+            }
+        }
+
         self.stats.cops += 1;
 
         if let Some(idx) = self.path.innermost_mut(core).lookup(line) {
-            if self.path.innermost(core).meta(idx).ccache {
+            if self.path.innermost(core).is_ccache(idx) {
+                // (with fast_path on, the block above already took this)
                 self.stats.ccache_l1_hits += 1;
-                let m = self.path.innermost_mut(core).meta_mut(idx);
+                let l1 = self.path.innermost_mut(core);
                 // a COp to a mergeable line resets the mergeable bit (4.3)
-                m.mergeable = false;
+                l1.set_mergeable(idx, false);
                 if write {
-                    m.dirty = true;
+                    l1.set_dirty(idx, true);
                 }
                 // a COp may re-type an already-privatized line: the
                 // source-buffer slot binding must follow the L1 meta, or
                 // the eventual merge resolves the stale slot captured at
                 // privatization (invariant 5). Re-typing is rare, so the
                 // source-buffer scan is gated on an actual change.
-                if m.merge_type != ty {
-                    m.merge_type = ty;
+                if l1.merge_type(idx) != ty {
+                    l1.set_merge_type(idx, ty);
                     self.src_buf[core].set_merge_type(line, ty);
                 }
-                return Ok(self.cfg.l1().hit_cycles);
+                return Ok((self.cfg.l1().hit_cycles, self.cdata_slot[core][idx] as usize));
             }
             // fall through: phase transition handled below
         }
@@ -355,20 +424,34 @@ impl MemSystem {
         // copy into the innermost level (updated copy) and source buffer
         // (source copy), in parallel (Section 4.1) — one latency charged
         let value = self.mem_line(line);
-        self.priv_data[core].insert(line.0, value);
-        self.src_buf[core].insert(line, value, ty);
-        let m = self.path.innermost_mut(core).install(way, line);
-        m.ccache = true;
-        m.merge_type = ty;
-        m.dirty = write;
-        Ok(cycles)
+        let slot = self.src_buf[core].insert(line, value, ty);
+        self.cdata_slot[core][way] = slot as u32;
+        let l1 = self.path.innermost_mut(core);
+        l1.install(way, line);
+        l1.set_ccache(way, true);
+        l1.set_merge_type(way, ty);
+        l1.set_dirty(way, write);
+        Ok((cycles, slot))
     }
 
     /// `soft_merge` — mark every valid source-buffer entry's line
     /// mergeable (merge-on-evict). Without the optimization this is a
     /// full merge (the Fig 9 baseline) — the policy decides.
     pub fn soft_merge(&mut self, core: usize) -> Result<u64, MergeFault> {
-        let entries = self.src_buf[core].valid_entries();
+        // reuse the engine-wide scratch (take/restore keeps the borrow
+        // checker happy while evictions run against &mut self)
+        let mut scratch = std::mem::take(&mut self.merge_scratch);
+        self.src_buf[core].collect_oldest_first(&mut scratch);
+        let result = self.soft_merge_entries(core, &scratch);
+        self.merge_scratch = scratch;
+        result
+    }
+
+    fn soft_merge_entries(
+        &mut self,
+        core: usize,
+        entries: &[(u64, Line)],
+    ) -> Result<u64, MergeFault> {
         // an empty source buffer makes soft_merge a no-op in both policy
         // paths: nothing to mark (or flush), so it costs 0 cycles
         if entries.is_empty() {
@@ -376,16 +459,16 @@ impl MemSystem {
         }
         if !self.policy.defers_soft_merge() {
             let mut cycles = 0;
-            for e in entries {
+            for &(_, line) in entries {
                 self.stats.src_buf_evictions += 1;
-                cycles += self.evict_cdata_line(core, e.line, false)?;
+                cycles += self.evict_cdata_line(core, line, false)?;
             }
             return Ok(cycles);
         }
         let mut marked: u64 = 0;
-        for e in entries {
-            if let Some(idx) = self.path.innermost(core).probe(e.line) {
-                self.path.innermost_mut(core).meta_mut(idx).mergeable = true;
+        for &(_, line) in entries {
+            if let Some(idx) = self.path.innermost(core).probe(line) {
+                self.path.innermost_mut(core).set_mergeable(idx, true);
                 marked += 1;
             }
         }
@@ -395,12 +478,40 @@ impl MemSystem {
 
     /// `merge` — merge every valid source-buffer entry now (Table 1).
     pub fn merge_all(&mut self, core: usize) -> Result<u64, MergeFault> {
-        let entries = self.src_buf[core].valid_entries();
+        // a merge is a phase boundary: fold the fast-path scratch in so
+        // anything inspecting stats right after sees exact totals
+        self.flush_hot_stats();
+        let mut scratch = std::mem::take(&mut self.merge_scratch);
+        self.src_buf[core].collect_oldest_first(&mut scratch);
         let mut cycles = 0;
-        for e in entries {
-            cycles += self.evict_cdata_line(core, e.line, true)?;
+        let mut result = Ok(());
+        for &(_, line) in &scratch {
+            match self.evict_cdata_line(core, line, true) {
+                Ok(c) => cycles += c,
+                Err(f) => {
+                    result = Err(f);
+                    break;
+                }
+            }
         }
-        Ok(cycles)
+        self.merge_scratch = scratch;
+        result.map(|()| cycles)
+    }
+
+    /// Fold the per-core fast-path scratch counters into [`Stats`].
+    /// Called at phase boundaries (end of run, barrier, merge); safe to
+    /// call any time — the fast path and the flush together account each
+    /// event exactly once.
+    pub fn flush_hot_stats(&mut self) {
+        for h in &mut self.hot {
+            if h.is_empty() {
+                continue;
+            }
+            self.stats.levels[0].hits += h.l1_hits;
+            self.stats.cops += h.cops;
+            self.stats.ccache_l1_hits += h.ccache_l1_hits;
+            *h = HotCounters::default();
+        }
     }
 
     /// The core ran `cycles` of other work: the background merge engine
@@ -425,7 +536,6 @@ impl MemSystem {
         };
         let l1_meta = self.path.innermost_mut(core).invalidate(line);
         let dirty = l1_meta.map_or(true, |m| m.dirty);
-        let upd = self.priv_data[core].remove(&line.0).expect("priv copy");
 
         // cop_access validated the slot at privatization time and
         // merge_init never uninstalls, so this holds in every reachable
@@ -455,7 +565,7 @@ impl MemSystem {
         } else {
             false
         };
-        let new = merge.apply(&entry.data, &upd, &mem_val, drop_update);
+        let new = merge.apply(&entry.data, &entry.upd, &mem_val, drop_update);
         self.set_mem_line(line, &new);
         if self.record_merges {
             self.merge_log.push(MergeRecord {
@@ -463,7 +573,7 @@ impl MemSystem {
                 line,
                 item: MergeItem {
                     src: entry.data,
-                    upd,
+                    upd: entry.upd,
                     mem: mem_val,
                     drop_update,
                 },
@@ -495,34 +605,41 @@ impl MemSystem {
         &self.path
     }
 
-    /// Cross-structure invariants (used by property tests):
+    /// Cross-structure invariants (used by property tests and the
+    /// execution driver):
     /// 1. every valid source-buffer entry has a CData line innermost;
-    /// 2. every CData line has a source-buffer entry and a private copy;
+    /// 2. every CData line has a source-buffer entry;
     /// 3. CData lines never appear outside the innermost level;
     /// 4. the directory's internal state is consistent;
     /// 5. every source-buffer entry's merge-type slot equals its L1
     ///    meta's — a COp re-typing a privatized line must rebind both
     ///    (the merge engine resolves the source-buffer slot).
-    pub fn check_invariants(&self) -> Result<(), String> {
+    pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
         for core in 0..self.cfg.cores {
-            for e in self.src_buf[core].valid_entries() {
-                let idx = self
-                    .path
-                    .innermost(core)
-                    .probe(e.line)
-                    .ok_or(format!("core {core}: src-buf line {:#x} not in L1", e.line.0))?;
+            for e in self.src_buf[core].iter_valid() {
+                let Some(idx) = self.path.innermost(core).probe(e.line) else {
+                    return Err(InvariantViolation::engine(
+                        core,
+                        e.line.0,
+                        "src-buf line not in L1",
+                    ));
+                };
                 let meta = self.path.innermost(core).meta(idx);
                 if !meta.ccache {
-                    return Err(format!(
-                        "core {core}: src-buf line {:#x} in L1 without CCache bit",
-                        e.line.0
+                    return Err(InvariantViolation::engine(
+                        core,
+                        e.line.0,
+                        "src-buf line in L1 without CCache bit",
                     ));
                 }
                 if meta.merge_type != e.merge_type {
-                    return Err(format!(
-                        "core {core}: line {:#x} merge-type skew (L1 meta slot {} \
-                         vs src-buf slot {})",
-                        e.line.0, meta.merge_type, e.merge_type
+                    return Err(InvariantViolation::engine(
+                        core,
+                        e.line.0,
+                        format!(
+                            "merge-type skew (L1 meta slot {} vs src-buf slot {})",
+                            meta.merge_type, e.merge_type
+                        ),
                     ));
                 }
             }
@@ -530,23 +647,18 @@ impl MemSystem {
                 let m = self.path.innermost(core).meta(slot);
                 if m.ccache {
                     if !self.src_buf[core].contains(m.line) {
-                        return Err(format!(
-                            "core {core}: CData line {:#x} lacks src-buf entry",
-                            m.line.0
-                        ));
-                    }
-                    if !self.priv_data[core].contains_key(&m.line.0) {
-                        return Err(format!(
-                            "core {core}: CData line {:#x} lacks private copy",
-                            m.line.0
+                        return Err(InvariantViolation::engine(
+                            core,
+                            m.line.0,
+                            "CData line lacks src-buf entry",
                         ));
                     }
                     for lvl in 1..self.path.private_depth() {
                         if self.path.level(lvl).cache(core).probe(m.line).is_some() {
-                            return Err(format!(
-                                "core {core}: CData line {:#x} leaked into L{}",
+                            return Err(InvariantViolation::engine(
+                                core,
                                 m.line.0,
-                                lvl + 1
+                                format!("CData line leaked into L{}", lvl + 1),
                             ));
                         }
                     }

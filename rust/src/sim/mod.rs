@@ -33,6 +33,7 @@
 //!   (`c_read`/`c_write`/`merge`/...), locks and barriers
 //! * [`stats`] — the counters behind every figure in Section 6,
 //!   per-level vectors following the configured hierarchy depth
+//! * [`invariant`] — typed cross-structure invariant-violation errors
 //! * [`overhead`] — Section 4.7 area/energy analytical model
 
 pub mod addr;
@@ -41,6 +42,7 @@ pub mod config;
 pub mod core_ctx;
 pub mod directory;
 pub mod hierarchy;
+pub mod invariant;
 pub mod machine;
 pub mod memsys;
 pub mod mfrf;

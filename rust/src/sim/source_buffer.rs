@@ -5,6 +5,14 @@
 //! privatized. One entry corresponds 1:1 with a CData line in the core's
 //! L1. Entries are LRU-replaced; replacing a valid entry forces a merge
 //! of its line (counted as a source-buffer eviction — the Fig 9 metric).
+//!
+//! Each entry also carries the core's private *updated* copy ([`upd`]):
+//! the COp working data that, in hardware, lives in the L1 data array.
+//! Keeping it next to the source copy gives the engine O(1) slot-indexed
+//! access on the COp hit path (via [`SourceBuffer::upd`]) instead of a
+//! hash lookup per word access.
+//!
+//! [`upd`]: SourceEntry::upd
 
 use super::addr::Line;
 use crate::merge::LineData;
@@ -12,7 +20,11 @@ use crate::merge::LineData;
 #[derive(Clone, Copy, Debug)]
 pub struct SourceEntry {
     pub line: Line,
+    /// The source copy: the line's memory value at privatization time.
     pub data: LineData,
+    /// The updated copy: the core's private working data, mutated by
+    /// c_read/c_write and handed to the merge function on eviction.
+    pub upd: LineData,
     /// MFRF slot index of the line's merge function — the buffer stores
     /// the *slot*, not the function: the MFRF
     /// ([`crate::sim::mfrf::Mfrf`]) resolves the installed
@@ -40,6 +52,7 @@ impl SourceBuffer {
                 SourceEntry {
                     line: Line(0),
                     data: [0; 16],
+                    upd: [0; 16],
                     merge_type: 0,
                     lru: 0,
                     valid: false,
@@ -91,24 +104,43 @@ impl SourceBuffer {
             .min_by_key(|e| e.lru)
     }
 
-    /// Insert a source copy. Precondition: `line` absent and not full
-    /// (memsys merges the LRU entry first when at capacity).
-    pub fn insert(&mut self, line: Line, data: LineData, merge_type: u8) {
+    /// Insert a source copy (the updated copy starts identical), and
+    /// return the slot index for later O(1) [`upd`](Self::upd) access.
+    /// Slots are stable until `remove`/`clear`. Precondition: `line`
+    /// absent and not full (memsys merges the LRU entry first when at
+    /// capacity).
+    pub fn insert(&mut self, line: Line, data: LineData, merge_type: u8) -> usize {
         debug_assert!(!self.contains(line), "duplicate source entry");
         self.tick += 1;
         let tick = self.tick;
         let slot = self
             .entries
-            .iter_mut()
-            .find(|e| !e.valid)
+            .iter()
+            .position(|e| !e.valid)
             .expect("source buffer full; caller must evict first");
-        *slot = SourceEntry {
+        self.entries[slot] = SourceEntry {
             line,
             data,
+            upd: data,
             merge_type,
             lru: tick,
             valid: true,
         };
+        slot
+    }
+
+    /// The updated (private working) copy in `slot`.
+    #[inline]
+    pub fn upd(&self, slot: usize) -> &LineData {
+        debug_assert!(self.entries[slot].valid, "stale source-buffer slot");
+        &self.entries[slot].upd
+    }
+
+    /// Mutable access to the updated copy in `slot` (the c_write path).
+    #[inline]
+    pub fn upd_mut(&mut self, slot: usize) -> &mut LineData {
+        debug_assert!(self.entries[slot].valid, "stale source-buffer slot");
+        &mut self.entries[slot].upd
     }
 
     /// Rebind the merge-type slot of `line`'s entry (no-op when the line
@@ -136,13 +168,24 @@ impl SourceBuffer {
         Some(*e)
     }
 
-    /// All valid entries, oldest first (merge walks the buffer in this
-    /// order, Table 1).
-    pub fn valid_entries(&self) -> Vec<SourceEntry> {
-        let mut v: Vec<SourceEntry> =
-            self.entries.iter().filter(|e| e.valid).copied().collect();
-        v.sort_by_key(|e| e.lru);
-        v
+    /// All valid entries, in slot order (diagnostic/invariant use).
+    pub fn iter_valid(&self) -> impl Iterator<Item = &SourceEntry> {
+        self.entries.iter().filter(|e| e.valid)
+    }
+
+    /// Collect the valid lines oldest-first into `out` (merge walks the
+    /// buffer in this order, Table 1). The caller owns `out` and reuses
+    /// it across merges, so the per-`soft_merge` allocation the old
+    /// `valid_entries()` paid is gone after the scratch's first growth.
+    pub fn collect_oldest_first(&self, out: &mut Vec<(u64, Line)>) {
+        out.clear();
+        out.extend(
+            self.entries
+                .iter()
+                .filter(|e| e.valid)
+                .map(|e| (e.lru, e.line)),
+        );
+        out.sort_unstable_by_key(|&(lru, _)| lru);
     }
 
     /// Flash-clear (end of a full merge, Table 1).
@@ -185,13 +228,28 @@ mod tests {
     }
 
     #[test]
-    fn valid_entries_oldest_first() {
+    fn collect_oldest_first_orders_by_lru_and_reuses_scratch() {
         let mut sb = SourceBuffer::new(4);
         sb.insert(l(5), [0; 16], 0);
         sb.insert(l(6), [0; 16], 0);
         sb.get(l(5));
-        let order: Vec<u64> = sb.valid_entries().iter().map(|e| e.line.0).collect();
+        let mut scratch = vec![(99, l(99))]; // stale content must vanish
+        sb.collect_oldest_first(&mut scratch);
+        let order: Vec<u64> = scratch.iter().map(|&(_, line)| line.0).collect();
         assert_eq!(order, vec![6, 5]);
+    }
+
+    #[test]
+    fn upd_starts_as_source_copy_and_tracks_writes() {
+        let mut sb = SourceBuffer::new(2);
+        let slot = sb.insert(l(1), [3; 16], 0);
+        assert_eq!(sb.upd(slot)[4], 3);
+        sb.upd_mut(slot)[4] = 9;
+        assert_eq!(sb.upd(slot)[4], 9);
+        // the source copy is untouched
+        let e = sb.remove(l(1)).unwrap();
+        assert_eq!(e.data[4], 3);
+        assert_eq!(e.upd[4], 9);
     }
 
     #[test]
@@ -214,6 +272,20 @@ mod tests {
         // absent lines are a no-op, not a panic
         sb.set_merge_type(l(9), 1);
         assert!(!sb.contains(l(9)));
+    }
+
+    #[test]
+    fn slots_are_stable_and_reused_after_remove() {
+        let mut sb = SourceBuffer::new(2);
+        let s1 = sb.insert(l(1), [1; 16], 0);
+        let s2 = sb.insert(l(2), [2; 16], 0);
+        assert_ne!(s1, s2);
+        sb.remove(l(1));
+        // s2 still addresses line 2's entry
+        assert_eq!(sb.upd(s2)[0], 2);
+        // the freed slot is handed out again
+        let s3 = sb.insert(l(3), [3; 16], 0);
+        assert_eq!(s3, s1);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::fmt;
 
 /// Per-level hit/miss counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LevelStats {
     pub hits: u64,
     pub misses: u64,
@@ -30,8 +30,30 @@ impl LevelStats {
     }
 }
 
+/// Per-core scratch counters for the engine's fast paths. The dominant
+/// access classes (coherent L1 read hits, private-hit COps) bump these
+/// plain integers instead of dereferencing into the shared [`Stats`];
+/// [`MemSystem::flush_hot_stats`](super::memsys::MemSystem::flush_hot_stats)
+/// folds them in at phase boundaries (end of run, barrier, merge), so
+/// the post-flush totals are identical to per-access accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HotCounters {
+    /// Innermost-level coherent read hits taken on the fast path.
+    pub l1_hits: u64,
+    /// COps executed on the fast path.
+    pub cops: u64,
+    /// CData L1 hits taken on the fast path.
+    pub ccache_l1_hits: u64,
+}
+
+impl HotCounters {
+    pub fn is_empty(&self) -> bool {
+        self.l1_hits == 0 && self.cops == 0 && self.ccache_l1_hits == 0
+    }
+}
+
 /// All counters collected during a simulation run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Stats {
     // -- time ---------------------------------------------------------
     /// Final per-core cycle counts; the run's "execution time" is the max.

@@ -1,9 +1,16 @@
 //! Bench harness: wall-clock timing plus paper-style ASCII tables and
-//! series plots. Criterion is unavailable offline; every `[[bench]]`
-//! target is a `harness = false` binary built on this module.
+//! series plots, and the persistent perf-trajectory record
+//! ([`BenchReport`] — the `BENCH_<n>.json` files `ccache bench --json`
+//! writes). Criterion is unavailable offline; every `[[bench]]` target
+//! is a `harness = false` binary built on this module.
 
 use std::fmt::Write as _;
 use std::time::Instant;
+
+/// Schema identifier stamped into every [`BenchReport`] JSON record so
+/// downstream tooling (CI smoke validation, cross-PR comparisons) can
+/// reject records it does not understand.
+pub const SCHEMA: &str = "ccache-bench-v1";
 
 /// Time a closure, returning (result, seconds).
 pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -37,6 +44,132 @@ pub struct BenchSample {
     pub min: f64,
     pub mean: f64,
     pub max: f64,
+}
+
+/// One perf-suite scenario: how many simulated operations ran, how long
+/// the wall clock took, and — for scenarios with a slow twin — the
+/// throughput of the same work with the engine fast path disabled.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub name: String,
+    /// Operations executed (reads, COps, merged lines, ... — whatever
+    /// the scenario counts as one unit of work).
+    pub ops: u64,
+    /// Wall-clock seconds for the (fast-path) run.
+    pub secs: f64,
+    /// Mops/s of the identical run with `fast_path` disabled; `None`
+    /// when the scenario has no fast/slow split (batch executors, the
+    /// sweep cell).
+    pub slow_mops: Option<f64>,
+}
+
+impl ScenarioResult {
+    /// Millions of operations per second.
+    pub fn mops(&self) -> f64 {
+        self.ops as f64 / self.secs / 1e6
+    }
+
+    /// Fast-path speedup over the slow twin, when one was measured.
+    pub fn speedup(&self) -> Option<f64> {
+        self.slow_mops.map(|s| self.mops() / s)
+    }
+}
+
+/// The perf-trajectory record one `ccache bench` run produces.
+/// Serialized (hand-rolled JSON — serde is unavailable offline) to
+/// `BENCH_<bench_id>.json`; committing one per perf-relevant PR gives
+/// the repo a wall-clock history reviewers can diff.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// Trajectory label, normally the PR number (`BENCH_6.json`).
+    pub bench_id: String,
+    /// True when iteration counts were cut ~20x (CI smoke mode).
+    pub quick: bool,
+    /// Machine fingerprint the scenarios ran on
+    /// ([`MachineConfig::describe`](crate::sim::config::MachineConfig::describe)).
+    pub config: String,
+    /// Wall clock for the whole suite.
+    pub wall_clock_secs: f64,
+    /// Free-form provenance (host notes, caveats); empty when none.
+    pub note: String,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {},\n", json_str(SCHEMA)));
+        out.push_str(&format!("  \"bench_id\": {},\n", json_str(&self.bench_id)));
+        out.push_str(&format!("  \"quick\": {},\n", self.quick));
+        out.push_str(&format!("  \"config\": {},\n", json_str(&self.config)));
+        out.push_str(&format!(
+            "  \"wall_clock_secs\": {:.3},\n",
+            self.wall_clock_secs
+        ));
+        out.push_str(&format!("  \"note\": {},\n", json_str(&self.note)));
+        out.push_str("  \"scenarios\": [\n");
+        for (i, s) in self.scenarios.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            let slow = s
+                .slow_mops
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or_else(|| "null".into());
+            let speedup = s
+                .speedup()
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "null".into());
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"ops\": {}, \"secs\": {:.6}, \
+                 \"mops\": {:.3}, \"slow_mops\": {slow}, \"speedup\": {speedup}}}",
+                json_str(&s.name),
+                s.ops,
+                s.secs,
+                s.mops()
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// The suite as a paper-style ASCII table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!("perf_hotpath — {}", self.config),
+            &["scenario", "Mops/s", "slow Mops/s", "speedup"],
+        );
+        for s in &self.scenarios {
+            t.row(&[
+                s.name.clone(),
+                format!("{:.2}", s.mops()),
+                s.slow_mops
+                    .map(|v| format!("{v:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+                s.speedup()
+                    .map(|v| format!("{v:.2}x"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// A simple right-aligned ASCII table with a title, matching the tabular
@@ -149,6 +282,59 @@ mod tests {
         let s = sample(1, 5, || std::thread::sleep(std::time::Duration::from_micros(50)));
         assert!(s.min <= s.mean && s.mean <= s.max);
         assert!(s.min > 0.0);
+    }
+
+    fn demo_report() -> BenchReport {
+        BenchReport {
+            bench_id: "6".into(),
+            quick: true,
+            config: "8 cores, L1 32 KiB".into(),
+            wall_clock_secs: 1.5,
+            note: "".into(),
+            scenarios: vec![
+                ScenarioResult {
+                    name: "memsys_read_hit".into(),
+                    ops: 4_000_000,
+                    secs: 0.5,
+                    slow_mops: Some(1.6),
+                },
+                ScenarioResult {
+                    name: "sweep_cell".into(),
+                    ops: 1000,
+                    secs: 0.1,
+                    slow_mops: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn scenario_math() {
+        let s = &demo_report().scenarios[0];
+        assert!((s.mops() - 8.0).abs() < 1e-9);
+        assert!((s.speedup().unwrap() - 5.0).abs() < 1e-9);
+        assert_eq!(demo_report().scenarios[1].speedup(), None);
+    }
+
+    #[test]
+    fn report_json_has_schema_and_balanced_structure() {
+        let j = demo_report().to_json();
+        assert!(j.contains("\"schema\": \"ccache-bench-v1\""), "{j}");
+        assert!(j.contains("\"bench_id\": \"6\""), "{j}");
+        assert!(j.contains("\"name\": \"memsys_read_hit\""), "{j}");
+        assert!(j.contains("\"speedup\": 5.00"), "{j}");
+        // scenarios without a slow twin serialize null, not a number
+        assert!(j.contains("\"slow_mops\": null"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
+    }
+
+    #[test]
+    fn report_table_renders_every_scenario() {
+        let t = demo_report().table().render();
+        assert!(t.contains("memsys_read_hit"), "{t}");
+        assert!(t.contains("5.00x"), "{t}");
+        assert!(t.contains('-'), "{t}"); // the no-twin scenario
     }
 
     #[test]

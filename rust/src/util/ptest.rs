@@ -107,6 +107,30 @@ where
     }
 }
 
+/// Differential property check: run each generated input through two
+/// executions (`run_a`, `run_b`) and require equal results, shrinking a
+/// divergence like any other property failure. The workhorse behind
+/// `tests/fastpath_diff.rs`, where A and B are the engine with the fast
+/// path on vs off and `R` bundles stats + final memory.
+pub fn check_diff<T, R, G, A, B>(seed: u64, cases: usize, gen: G, mut run_a: A, mut run_b: B)
+where
+    T: Shrink,
+    R: PartialEq + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    A: FnMut(&T) -> R,
+    B: FnMut(&T) -> R,
+{
+    check(seed, cases, gen, move |input| {
+        let a = run_a(input);
+        let b = run_b(input);
+        if a == b {
+            Ok(())
+        } else {
+            Err(format!("engines diverged:\n  A: {a:?}\n  B: {b:?}"))
+        }
+    });
+}
+
 fn shrink_loop<T: Shrink, P: FnMut(&T) -> PropResult>(
     mut input: T,
     mut msg: String,
@@ -242,6 +266,28 @@ mod tests {
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
         // greedy halving from any failing x >= 50 lands on exactly 50
         assert!(msg.contains("input: 50"), "got: {msg}");
+    }
+
+    #[test]
+    fn check_diff_passes_on_identical_executions() {
+        check_diff(3, 50, |r| r.below(1000), |&x| x * 2, |&x| x + x);
+    }
+
+    #[test]
+    fn check_diff_reports_a_divergence() {
+        let result = std::panic::catch_unwind(|| {
+            check_diff(
+                4,
+                50,
+                |r| r.below(1000),
+                |&x| x,
+                |&x| if x >= 100 { x + 1 } else { x },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("engines diverged"), "got: {msg}");
+        // shrink lands on the smallest diverging input
+        assert!(msg.contains("input: 100"), "got: {msg}");
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Differential proof that the engine's branch-light fast path
+//! (`MachineConfig::fast_path`) is an *exact* shortcut: identical
+//! randomized operation streams replayed through a fast-path-on and a
+//! fast-path-off engine must produce bit-identical [`Stats`], final
+//! memory, and cycle totals — and the same must hold end-to-end through
+//! the execution driver for all five workload variants.
+
+use ccache::exec::registry::{self, SizeSpec};
+use ccache::exec::Variant;
+use ccache::merge::funcs::AddU32;
+use ccache::merge::handle;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::memsys::MemSystem;
+use ccache::sim::stats::Stats;
+use ccache::util::ptest::check_diff;
+use ccache::util::rng::Rng;
+
+/// Replay a seeded stream of mixed operations — COp read-modify-writes
+/// over a CData region, coherent reads/writes/CAS/fetch_or over a
+/// disjoint region, and soft merges — through a fresh engine, with a
+/// full merge at each of three phase boundaries. Returns everything the
+/// fast path could possibly perturb: the final stats, a final-memory
+/// snapshot, and the sum of every cycle count the engine handed back.
+fn run_stream(seed: u64, cores: usize, fast: bool) -> (Stats, Vec<u32>, u64) {
+    let cores = cores.max(1);
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = cores;
+    cfg.fast_path = fast;
+    let mut s = MemSystem::new(cfg).unwrap();
+    let cdata = s.alloc_lines(64 * 128);
+    let coh = s.alloc_lines(64 * 128);
+    for core in 0..cores {
+        s.merge_init(core, 0, handle(AddU32));
+        s.merge_init(core, 1, handle(AddU32));
+    }
+    let mut rng = Rng::new(seed);
+    let mut cycles = 0u64;
+    for _phase in 0..3 {
+        for _ in 0..400 {
+            let core = rng.usize_below(cores);
+            let line = rng.below(128);
+            match rng.below(6) {
+                0 => {
+                    let ty = rng.below(2) as u8;
+                    let a = cdata.add(line * 64 + rng.below(16) * 4);
+                    let (v, c1) = s.c_read(core, a, ty).unwrap();
+                    let c2 = s.c_write(core, a, v.wrapping_add(1), ty).unwrap();
+                    cycles += c1 + c2;
+                }
+                1 => cycles += s.soft_merge(core).unwrap(),
+                2 => cycles += s.read(core, coh.add(line * 64)).unwrap().1,
+                3 => cycles += s.write(core, coh.add(line * 64), rng.next_u32()).unwrap(),
+                4 => {
+                    let (_, c) = s.cas(core, coh.add(line * 64), 0, rng.next_u32()).unwrap();
+                    cycles += c;
+                }
+                _ => {
+                    let (_, c) = s
+                        .fetch_or(core, coh.add(line * 64), rng.next_u32())
+                        .unwrap();
+                    cycles += c;
+                }
+            }
+        }
+        // phase boundary: every core merges its CData
+        for core in 0..cores {
+            cycles += s.merge_all(core).unwrap();
+        }
+    }
+    s.flush_hot_stats();
+    s.check_invariants().unwrap();
+    let mut memory = Vec::with_capacity(256);
+    for i in 0..128u64 {
+        memory.push(s.peek(cdata.add(i * 64)));
+    }
+    for i in 0..128u64 {
+        memory.push(s.peek(coh.add(i * 64)));
+    }
+    (s.stats.clone(), memory, cycles)
+}
+
+#[test]
+fn fast_path_is_bit_identical_on_random_streams() {
+    check_diff(
+        0xFA57,
+        10,
+        |rng| (rng.below(u64::MAX), 1 + rng.usize_below(2)),
+        |&(seed, cores)| run_stream(seed, cores, true),
+        |&(seed, cores)| run_stream(seed, cores, false),
+    );
+}
+
+/// The same exactness, end-to-end through the execution driver (machine
+/// threads, merge-region registration, golden verification) for every
+/// workload variant the repo ships: CGL, FGL, DUP, CCache, and BFS's
+/// atomic variant.
+#[test]
+fn five_variants_bit_identical_through_the_driver() {
+    let cells = [
+        ("kvstore", Variant::Cgl),
+        ("kvstore", Variant::Fgl),
+        ("kvstore", Variant::Dup),
+        ("kvstore", Variant::CCache),
+        ("bfs", Variant::Atomic),
+    ];
+    for (name, variant) in cells {
+        let spec = registry::lookup(name).unwrap();
+        let bench = spec.build(&SizeSpec::new(0.25, 16 << 10, 7));
+        let mut fast_cfg = MachineConfig::test_small();
+        fast_cfg.fast_path = true;
+        let mut slow_cfg = MachineConfig::test_small();
+        slow_cfg.fast_path = false;
+        let fast = bench.run_with_merge(variant, fast_cfg, None).unwrap();
+        let slow = bench.run_with_merge(variant, slow_cfg, None).unwrap();
+        assert!(
+            fast.verified && slow.verified,
+            "{name}/{} failed golden verification",
+            variant.name()
+        );
+        assert_eq!(
+            fast.stats,
+            slow.stats,
+            "stats diverged for {name}/{}",
+            variant.name()
+        );
+    }
+}

@@ -110,6 +110,7 @@ fn custom_level_stacks_validate_and_build() {
         },
         ccache: Default::default(),
         mem_bytes: 1 << 20,
+        fast_path: true,
     };
     cfg.validate().unwrap();
     let (mut p, mut stats) = path(&cfg);
