@@ -8,8 +8,10 @@ pub mod experiment;
 pub mod perf;
 pub mod report;
 pub mod sweep;
+pub mod xval;
 
 pub use experiment::{run_verified, scaled_config, sized_workload, SCALED_LLC_BYTES};
+pub use xval::{run_xval, XvalOptions, XvalReport};
 pub use sweep::{
     run_sweep, run_sweep_skewed, run_sweep_with, SweepOptions, SweepPoint, SweepResult,
     WS_FRACTIONS,

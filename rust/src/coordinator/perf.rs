@@ -12,7 +12,7 @@
 use std::time::Instant;
 
 use crate::exec::registry::{self, SizeSpec};
-use crate::exec::Variant;
+use crate::exec::{Backend, Variant};
 use crate::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
 use crate::merge::funcs::AddU32;
 use crate::merge::handle;
@@ -20,7 +20,7 @@ use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::{CoreCtx, Machine};
 use crate::sim::memsys::MemSystem;
-use crate::util::bench::{time, BenchReport, ScenarioResult};
+use crate::util::bench::{time, BenchReport, NativeResult, ScenarioResult};
 
 use super::experiment::scaled_config;
 
@@ -200,6 +200,43 @@ fn sweep_cell(quick: bool) -> ScenarioResult {
     }
 }
 
+/// Wall-clock measurements on the native-thread backend: a small set of
+/// registry cells, each golden-verified on real OS threads, paired with
+/// the same cell's simulated cycle count so the trajectory record can
+/// correlate measured throughput with the simulator's estimates. The
+/// cells cover both backend mapping families: coherent/atomic (fgl,
+/// atomic) and privatized (dup, ccache).
+fn native_section(quick: bool) -> Vec<NativeResult> {
+    let cfg = MachineConfig::test_small().with_cores(4);
+    let frac = if quick { 0.25 } else { 1.0 };
+    let cells = [
+        ("histogram", Variant::Fgl),
+        ("histogram", Variant::Atomic),
+        ("kvstore", Variant::Dup),
+        ("kvstore", Variant::CCache),
+    ];
+    let mut out = Vec::new();
+    for (name, variant) in cells {
+        let spec = registry::lookup(name).expect("registered workload");
+        let bench = spec.build(&SizeSpec::new(frac, cfg.llc().size_bytes, 42));
+        let nat = bench
+            .run_on(Backend::Native, variant, cfg.clone())
+            .expect("native cell runs");
+        let sim = bench
+            .run_on(Backend::Sim, variant, cfg.clone())
+            .expect("sim twin runs");
+        out.push(NativeResult {
+            name: name.into(),
+            variant: variant.name().into(),
+            ops: nat.ops_total(),
+            secs: nat.wall_secs.unwrap_or(0.0),
+            sim_cycles: sim.cycles(),
+            verified: nat.verified,
+        });
+    }
+    out
+}
+
 /// Run the whole suite.
 pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     let div = if opts.quick { 20 } else { 1 };
@@ -248,6 +285,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     }
 
     scenarios.push(sweep_cell(opts.quick));
+    let native = native_section(opts.quick);
 
     BenchReport {
         bench_id: opts.bench_id.clone(),
@@ -256,6 +294,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
         wall_clock_secs: t0.elapsed().as_secs_f64(),
         note: String::new(),
         scenarios,
+        native,
     }
 }
 
@@ -280,5 +319,16 @@ mod tests {
         assert_eq!(s.ops, 64);
         assert!(s.slow_mops.is_some());
         assert!(s.speedup().is_some());
+    }
+
+    #[test]
+    fn native_section_verifies_all_cells() {
+        let rows = native_section(true);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.verified, "{}-{} diverged on the native backend", r.name, r.variant);
+            assert!(r.ops > 0, "{}-{} counted no operations", r.name, r.variant);
+            assert!(r.sim_cycles > 0);
+        }
     }
 }

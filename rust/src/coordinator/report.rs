@@ -107,7 +107,16 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
             first = false;
             let speedup = p
                 .speedup_vs_fgl(r.variant)
+                .filter(|s| s.is_finite())
                 .map(|s| format!("{s:.4}"))
+                .unwrap_or_else(|| "null".into());
+            // quality is workload-defined (e.g. hll relative error) and
+            // optional; a non-finite value would poison json.loads, so
+            // both None and NaN/inf serialize as JSON null
+            let quality = r
+                .quality
+                .filter(|q| q.is_finite())
+                .map(|q| format!("{q:.6}"))
                 .unwrap_or_else(|| "null".into());
             let merge_fns = r
                 .merge_fns
@@ -123,7 +132,7 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                  \"ccache_fills\": {}, \"approx_drops\": {}, \
                  \"atomic_rmws\": {}, \"barriers\": {}, \"llc_misses\": {}, \
                  \"directory_msgs\": {}, \"invalidations\": {}, \
-                 \"speedup_vs_fgl\": {}}}",
+                 \"quality\": {}, \"speedup_vs_fgl\": {}}}",
                 p.frac,
                 json_str(r.variant.name()),
                 merge_fns,
@@ -140,6 +149,7 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                 r.stats.llc().misses,
                 r.stats.directory_msgs,
                 r.stats.invalidations,
+                quality,
                 speedup
             ));
         }
@@ -219,6 +229,9 @@ mod tests {
         assert!(j.contains("\"LLC\""), "{j}");
         // the FGL baseline cell reports speedup 1.0
         assert!(j.contains("\"speedup_vs_fgl\": 1.0000"), "{j}");
+        // kvstore is an exact workload: quality is None and must land
+        // in the record as JSON null, not be omitted or mangled
+        assert!(j.contains("\"quality\": null"), "{j}");
         // crude structural sanity: balanced braces/brackets
         assert_eq!(
             j.matches('{').count(),
@@ -226,5 +239,68 @@ mod tests {
             "unbalanced JSON"
         );
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn hll_sweep_json_carries_a_numeric_quality_cell() {
+        let cfg = MachineConfig::test_small().with_cores(2);
+        let sweep = run_sweep(
+            "hll",
+            &[Variant::Fgl, Variant::CCache],
+            &[0.25],
+            cfg.clone(),
+            1,
+        );
+        let j = sweep_json(&sweep, &cfg);
+        // hll's verify reports a relative-error quality on every cell;
+        // it must serialize as a bare JSON number, never a string
+        assert!(j.contains("\"quality\": 0."), "no numeric quality: {j}");
+        assert!(!j.contains("\"quality\": \""), "quality quoted: {j}");
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced JSON"
+        );
+    }
+
+    #[test]
+    fn degenerate_quality_and_speedup_serialize_as_null() {
+        use crate::coordinator::sweep::{SweepPoint, SweepResult};
+        use crate::exec::RunResult;
+        use crate::sim::stats::Stats;
+        let mk = |v: Variant, cyc: u64, quality: Option<f64>| RunResult {
+            benchmark: "synthetic".into(),
+            variant: v,
+            stats: {
+                let mut s = Stats::new(1, 3);
+                s.core_cycles = vec![cyc];
+                s
+            },
+            verified: true,
+            quality,
+            merge_fns: Vec::new(),
+            wall_secs: None,
+        };
+        // NaN quality and a zero-cycle cell: both degenerate paths must
+        // land as JSON null so `json.loads` round-trips the record
+        let sweep = SweepResult {
+            name: "synthetic".into(),
+            points: vec![SweepPoint {
+                frac: 1.0,
+                results: vec![
+                    mk(Variant::Fgl, 100, Some(f64::NAN)),
+                    mk(Variant::CCache, 0, Some(f64::INFINITY)),
+                ],
+            }],
+            wall_clock_ms: 1.0,
+            jobs: 1,
+        };
+        let cfg = MachineConfig::test_small();
+        let j = sweep_json(&sweep, &cfg);
+        assert!(j.contains("\"quality\": null"), "{j}");
+        assert!(!j.contains("NaN"), "raw NaN leaked into JSON: {j}");
+        assert!(!j.contains("inf"), "raw inf leaked into JSON: {j}");
+        // the zero-cycle ccache cell has no finite speedup
+        assert!(j.contains("\"speedup_vs_fgl\": null"), "{j}");
     }
 }

@@ -300,6 +300,7 @@ mod tests {
             verified: true,
             quality: None,
             merge_fns: Vec::new(),
+            wall_secs: None,
         };
         // degenerate CCache cell: zero cycles must not divide through
         let p = SweepPoint {

@@ -1,0 +1,205 @@
+//! Backend cross-validation: every registered workload, every variant it
+//! supports, run on **both** execution backends against the same
+//! sequential golden.
+//!
+//! The simulated backend ([`Backend::Sim`]) executes the program on the
+//! deterministic interleaver and cycle model; the native backend
+//! ([`Backend::Native`]) executes the *same* generic program (the
+//! [`ExecCtx`](crate::exec::ExecCtx) trait is the only op surface either
+//! one sees) on real OS threads with real atomics and software
+//! privatization. Both end states are checked against the workload's
+//! sequential golden run, so a pass means the CCache semantics — COps,
+//! soft merge, explicit merge, merge-function identity — survive the
+//! trip from model to metal. This is the `ccache xval` subcommand and
+//! the CI `native-xval` job.
+
+use std::time::Instant;
+
+use crate::exec::registry::{self, SizeSpec};
+use crate::exec::{Backend, Variant};
+use crate::sim::config::MachineConfig;
+use crate::util::bench::Table;
+
+/// Knobs for one cross-validation pass.
+#[derive(Clone, Debug)]
+pub struct XvalOptions {
+    /// Cores for both backends (native spawns this many OS threads).
+    pub cores: usize,
+    /// Working-set fraction of the (small) validation machine's LLC.
+    pub frac: f64,
+    pub seed: u64,
+    /// Restrict to these registry names (empty = the whole registry).
+    pub only: Vec<String>,
+}
+
+impl Default for XvalOptions {
+    fn default() -> Self {
+        Self {
+            cores: 4,
+            frac: 0.25,
+            seed: 42,
+            only: Vec::new(),
+        }
+    }
+}
+
+/// One (workload, variant) cell run on both backends.
+#[derive(Clone, Debug)]
+pub struct XvalCell {
+    pub workload: String,
+    pub variant: Variant,
+    /// Simulated cycle count (the model's currency).
+    pub sim_cycles: u64,
+    /// Native operations executed across all threads.
+    pub native_ops: u64,
+    /// Wall-clock seconds of the native parallel section.
+    pub native_secs: f64,
+    pub sim_verified: bool,
+    pub native_verified: bool,
+}
+
+impl XvalCell {
+    /// Both backends reached the golden memory image.
+    pub fn pass(&self) -> bool {
+        self.sim_verified && self.native_verified
+    }
+
+    /// Measured native throughput in Mops/s (0 for a degenerate timer).
+    pub fn native_mops(&self) -> f64 {
+        if self.native_secs > 0.0 {
+            self.native_ops as f64 / self.native_secs / 1e6
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct XvalReport {
+    pub cells: Vec<XvalCell>,
+    pub wall_clock_secs: f64,
+}
+
+impl XvalReport {
+    /// Every cell passed on both backends.
+    pub fn all_verified(&self) -> bool {
+        self.cells.iter().all(XvalCell::pass)
+    }
+
+    /// Names of the cells that failed, as `workload/variant` strings.
+    pub fn failures(&self) -> Vec<String> {
+        self.cells
+            .iter()
+            .filter(|c| !c.pass())
+            .map(|c| format!("{}/{}", c.workload, c.variant.name()))
+            .collect()
+    }
+
+    /// Human-readable summary table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Backend cross-validation — {} cells, {}",
+                self.cells.len(),
+                if self.all_verified() {
+                    "all verified"
+                } else {
+                    "FAILURES"
+                }
+            ),
+            &["workload", "variant", "sim cycles", "native Mops/s", "sim", "native"],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.workload.clone(),
+                c.variant.name().into(),
+                c.sim_cycles.to_string(),
+                format!("{:.2}", c.native_mops()),
+                if c.sim_verified { "ok" } else { "FAIL" }.into(),
+                if c.native_verified { "ok" } else { "FAIL" }.into(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run the cross-validation grid. Panics only on machine-config or
+/// driver errors — a golden divergence is *recorded* in the cell (and
+/// fails [`XvalReport::all_verified`]) so one bad cell doesn't hide the
+/// rest of the grid.
+pub fn run_xval(opts: &XvalOptions) -> XvalReport {
+    let cfg = MachineConfig::test_small().with_cores(opts.cores);
+    let t0 = Instant::now();
+    let mut cells = Vec::new();
+    for spec in registry::registry() {
+        if !opts.only.is_empty() && !opts.only.iter().any(|n| n == spec.name) {
+            continue;
+        }
+        let size = SizeSpec::new(opts.frac, cfg.llc().size_bytes, opts.seed);
+        let bench = spec.build(&size);
+        for &variant in spec.variants {
+            let sim = bench
+                .run_on(Backend::Sim, variant, cfg.clone())
+                .unwrap_or_else(|e| panic!("{}/{} (sim): {e}", spec.name, variant.name()));
+            let nat = bench
+                .run_on(Backend::Native, variant, cfg.clone())
+                .unwrap_or_else(|e| panic!("{}/{} (native): {e}", spec.name, variant.name()));
+            cells.push(XvalCell {
+                workload: spec.name.to_string(),
+                variant,
+                sim_cycles: sim.cycles(),
+                native_ops: nat.ops_total(),
+                native_secs: nat.wall_secs.unwrap_or(0.0),
+                sim_verified: sim.verified,
+                native_verified: nat.verified,
+            });
+        }
+    }
+    XvalReport {
+        cells,
+        wall_clock_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_grid_passes_on_both_backends() {
+        let report = run_xval(&XvalOptions {
+            cores: 2,
+            only: vec!["kvstore".into(), "bloom".into()],
+            ..Default::default()
+        });
+        // kvstore: 4 variants (cgl/fgl/dup/ccache), bloom: 4
+        // (fgl/dup/ccache/atomic) — one cell per supported variant
+        assert_eq!(report.cells.len(), 8);
+        assert!(
+            report.all_verified(),
+            "cross-validation failures: {:?}",
+            report.failures()
+        );
+        for c in &report.cells {
+            assert!(c.sim_cycles > 0, "{}/{} simulated no cycles", c.workload, c.variant.name());
+            assert!(c.native_ops > 0, "{}/{} counted no native ops", c.workload, c.variant.name());
+        }
+        let rendered = report.table().render();
+        assert!(rendered.contains("all verified"), "{rendered}");
+        assert!(rendered.contains("kvstore"), "{rendered}");
+    }
+
+    #[test]
+    fn failures_surface_in_the_table_title() {
+        let mut report = run_xval(&XvalOptions {
+            cores: 2,
+            only: vec!["histogram".into()],
+            ..Default::default()
+        });
+        assert!(report.all_verified());
+        report.cells[0].native_verified = false;
+        assert!(!report.all_verified());
+        assert_eq!(report.failures().len(), 1);
+        assert!(report.table().render().contains("FAILURES"));
+    }
+}

@@ -1,0 +1,108 @@
+//! The execution-context abstraction: the operation surface a workload
+//! program runs against, independent of *what machine* carries it out.
+//!
+//! [`ExecCtx`] captures exactly the instruction set the paper's core
+//! programs use — timed compute, coherent loads/stores, atomic RMWs,
+//! COps (`c_read`/`c_write`), merge control (`merge_init`, `soft_merge`,
+//! `merge`), locks and barriers. Two backends implement it:
+//!
+//! * the simulator's [`CoreCtx`](crate::sim::machine::CoreCtx) — logical
+//!   cores interleaved deterministically over the modeled cache
+//!   hierarchy, producing cycle counts;
+//! * the native backend's [`NativeCtx`](crate::runtime::native::NativeCtx)
+//!   — real OS threads over `AtomicU32` shared memory, producing
+//!   wall-clock time.
+//!
+//! `Workload::program` is generic over this trait, so every registry
+//! workload is *simultaneously* a simulation input and an actual
+//! parallel program; the driver cross-validates the two against the same
+//! goldens ([`coordinator::xval`](crate::coordinator::xval)).
+
+use crate::merge::MergeHandle;
+use crate::sim::addr::Addr;
+
+/// The operation surface of one core's program.
+///
+/// Semantics (both backends honor these):
+///
+/// * `read/write/cas/fetch_or` are ordinary coherent memory operations;
+///   on the native backend they are real `AtomicU32` accesses.
+/// * `c_read/c_write` are COps: they operate on an on-demand private
+///   copy of the line, tagged with MFRF slot `ty`; concurrent updates by
+///   other cores are reconciled only by merging.
+/// * `soft_merge` marks this core's private CData evictable
+///   (merge-on-evict); `merge` forces every private line through its
+///   registered merge function into shared memory.
+/// * `lock`/`unlock` implement a spinlock over the word at `addr`
+///   (0 = free); `barrier` is a full-machine phase barrier.
+/// * `compute(n)` models `n` cycles of pure computation (a no-op
+///   natively beyond operation accounting).
+///
+/// The f32 operations have default implementations over the u32 ones
+/// (bit-level transmute), so a backend only implements the u32 core.
+pub trait ExecCtx {
+    /// This core's index in `0..cores`.
+    fn core_id(&self) -> usize;
+
+    /// Cycles elapsed on this core (native: operations executed).
+    fn cycles(&mut self) -> u64;
+
+    /// Model `n` cycles of pure (memory-free) computation.
+    fn compute(&mut self, n: u64);
+
+    /// Coherent 32-bit load.
+    fn read_u32(&mut self, addr: Addr) -> u32;
+
+    /// Coherent 32-bit store.
+    fn write_u32(&mut self, addr: Addr, val: u32);
+
+    /// Coherent f32 load (bit-cast of [`ExecCtx::read_u32`]).
+    fn read_f32(&mut self, addr: Addr) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    /// Coherent f32 store (bit-cast of [`ExecCtx::write_u32`]).
+    fn write_f32(&mut self, addr: Addr, val: f32) {
+        self.write_u32(addr, val.to_bits());
+    }
+
+    /// Atomic compare-and-swap; returns whether the swap happened.
+    fn cas_u32(&mut self, addr: Addr, expected: u32, new: u32) -> bool;
+
+    /// Atomic fetch-or; returns the previous value.
+    fn fetch_or_u32(&mut self, addr: Addr, bits: u32) -> u32;
+
+    /// Install merge function `f` in this core's MFRF slot `slot`.
+    fn merge_init(&mut self, slot: usize, f: MergeHandle);
+
+    /// COp load from a private copy of `addr`'s line (slot `ty`).
+    fn c_read_u32(&mut self, addr: Addr, ty: u8) -> u32;
+
+    /// COp store to a private copy of `addr`'s line (slot `ty`).
+    fn c_write_u32(&mut self, addr: Addr, val: u32, ty: u8);
+
+    /// COp f32 load (bit-cast of [`ExecCtx::c_read_u32`]).
+    fn c_read_f32(&mut self, addr: Addr, ty: u8) -> f32 {
+        f32::from_bits(self.c_read_u32(addr, ty))
+    }
+
+    /// COp f32 store (bit-cast of [`ExecCtx::c_write_u32`]).
+    fn c_write_f32(&mut self, addr: Addr, val: f32, ty: u8) {
+        self.c_write_u32(addr, val.to_bits(), ty);
+    }
+
+    /// Mark this core's private CData mergeable (evictable).
+    fn soft_merge(&mut self);
+
+    /// Merge every private line through its registered merge function.
+    fn merge(&mut self);
+
+    /// Acquire the spinlock at `addr` (0 = free, 1 = held).
+    fn lock(&mut self, addr: Addr);
+
+    /// Release the spinlock at `addr`.
+    fn unlock(&mut self, addr: Addr);
+
+    /// Full-machine phase barrier.
+    fn barrier(&mut self);
+}

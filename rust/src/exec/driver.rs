@@ -10,12 +10,16 @@
 //! as [`ExecError::MergeFault`], not a panic).
 
 use crate::merge::MergeHandle;
+use crate::runtime::native::{NativeCtx, NativeMachine};
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::{CoreCtx, Machine};
+use crate::sim::memsys::MemSystem;
+use crate::sim::stats::Stats;
 
+use super::ctx::ExecCtx;
 use super::error::ExecError;
 use super::workload::Workload;
-use super::{RunResult, Variant};
+use super::{Backend, RunResult, Variant};
 
 pub fn run<W: Workload>(
     workload: &W,
@@ -23,6 +27,42 @@ pub fn run<W: Workload>(
     cfg: MachineConfig,
 ) -> Result<RunResult, ExecError> {
     run_with_merge(workload, variant, cfg, None)
+}
+
+/// Run on an explicit [`Backend`]: the simulator or the native-thread
+/// machine. Variant gating, merge registration, goldens and
+/// verification are identical on both paths.
+pub fn run_on<W: Workload>(
+    workload: &W,
+    backend: Backend,
+    variant: Variant,
+    cfg: MachineConfig,
+) -> Result<RunResult, ExecError> {
+    run_on_with_merge(workload, backend, variant, cfg, None)
+}
+
+/// [`run_on`] with a merge override.
+pub fn run_on_with_merge<W: Workload>(
+    workload: &W,
+    backend: Backend,
+    variant: Variant,
+    cfg: MachineConfig,
+    merge_override: Option<MergeHandle>,
+) -> Result<RunResult, ExecError> {
+    match backend {
+        Backend::Sim => run_with_merge(workload, variant, cfg, merge_override),
+        Backend::Native => run_native_with_merge(workload, variant, cfg, merge_override),
+    }
+}
+
+/// Run on real OS threads ([`Backend::Native`]); see
+/// [`run_native_with_merge`].
+pub fn run_native<W: Workload>(
+    workload: &W,
+    variant: Variant,
+    cfg: MachineConfig,
+) -> Result<RunResult, ExecError> {
+    run_native_with_merge(workload, variant, cfg, None)
 }
 
 /// [`run`] with the workload's merge functions optionally replaced by
@@ -108,5 +148,104 @@ pub fn run_with_merge<W: Workload>(
         verified,
         quality,
         merge_fns,
+        wall_secs: None,
+    })
+}
+
+/// The NativeDriver: [`run_with_merge`]'s contract carried out by the
+/// [`NativeMachine`] — real threads, real atomics, wall-clock time.
+///
+/// The simulator's `MemSystem` still does the backend-independent work:
+/// `Workload::setup` allocates and initializes the flat functional
+/// memory through it, that memory image seeds the native machine's
+/// `AtomicU32` array, and after the threads join the final image is
+/// written back so `Workload::verify` runs against the *same* goldens as
+/// a simulated run. Cycle-denominated stats don't exist here: the
+/// returned `stats.core_cycles` carries per-core *operation* counts and
+/// [`RunResult::wall_secs`] the measured parallel-section time.
+pub fn run_native_with_merge<W: Workload>(
+    workload: &W,
+    variant: Variant,
+    cfg: MachineConfig,
+    merge_override: Option<MergeHandle>,
+) -> Result<RunResult, ExecError> {
+    let supported = workload.supported_variants();
+    if !supported.contains(&variant) {
+        return Err(ExecError::UnsupportedVariant {
+            benchmark: workload.name(),
+            variant,
+            supported,
+        });
+    }
+
+    let cores = cfg.cores;
+    let mfrf_slots = cfg.ccache.mfrf_slots;
+    let depth = cfg.depth();
+    let mut mem = MemSystem::new(cfg).map_err(ExecError::from)?;
+    let layout = workload.setup(&mut mem, variant, cores);
+    let mut merge_slots = workload.merge_slots();
+    if let Some(m) = merge_override {
+        for (_, slot_fn) in merge_slots.iter_mut() {
+            *slot_fn = m.clone();
+        }
+    }
+    let merge_fns: Vec<String> = if variant == Variant::CCache {
+        merge_slots.iter().map(|(_, f)| f.name().to_string()).collect()
+    } else {
+        Vec::new()
+    };
+
+    let native = NativeMachine::new(&mem.snapshot_mem(), cores, mfrf_slots);
+    let programs: Vec<Box<dyn FnOnce(&mut NativeCtx) + Send + '_>> = (0..cores)
+        .map(|core| {
+            let layout = layout.clone();
+            let merge_slots = merge_slots.clone();
+            let f: Box<dyn FnOnce(&mut NativeCtx) + Send + '_> = Box::new(move |ctx| {
+                if variant == Variant::CCache {
+                    for (slot, f) in merge_slots {
+                        ctx.merge_init(slot, f);
+                    }
+                }
+                workload.native_program(ctx, core, cores, variant, &layout);
+            });
+            f
+        })
+        .collect();
+    let run = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        native.run(programs)
+    })) {
+        Ok(run) => run,
+        Err(payload) => {
+            // same fault-recovery contract as the simulated machine: the
+            // native machine records the typed fault before unwinding
+            if let Some(fault) = native.take_fault() {
+                return Err(ExecError::MergeFault(fault));
+            }
+            std::panic::resume_unwind(payload);
+        }
+    };
+
+    // write the final native memory image back so verification reads it
+    // through the ordinary MemSystem peek API
+    mem.restore_mem(&native.snapshot());
+    let golden = workload.golden(cores);
+    let (verified, quality) = workload.verify(&mut mem, &layout, &golden, cores);
+
+    let mut stats = Stats::new(cores, depth);
+    stats.core_cycles = run.per_core_ops.clone();
+    stats.cops = run.cops;
+    stats.atomic_rmws = run.atomic_rmws;
+    stats.lock_acquires = run.lock_acquires;
+    stats.merges = run.merges;
+    stats.barriers = run.barriers;
+
+    Ok(RunResult {
+        benchmark: workload.name(),
+        variant,
+        stats,
+        verified,
+        quality,
+        merge_fns,
+        wall_secs: Some(run.secs),
     })
 }

@@ -18,17 +18,51 @@
 //! workload doesn't implement surface as
 //! [`ExecError::UnsupportedVariant`] instead of panicking.
 
+pub mod ctx;
 pub mod driver;
 pub mod error;
 pub mod registry;
 pub mod scaffold;
 pub mod workload;
 
+pub use ctx::ExecCtx;
 pub use error::ExecError;
 pub use registry::{SizeSpec, SketchSpec, WorkloadSpec};
 pub use workload::{Workload, WorkloadHandle};
 
 use crate::sim::stats::Stats;
+
+/// Which machine carries out a workload program.
+///
+/// * [`Backend::Sim`] — the execution-driven simulator: deterministic
+///   logical-core interleaving over the modeled hierarchy; results are
+///   cycle counts.
+/// * [`Backend::Native`] — real OS threads over `AtomicU32` shared
+///   memory ([`runtime::native`](crate::runtime::native)); results are
+///   wall-clock measurements, verified against the *same* goldens.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Backend {
+    #[default]
+    Sim,
+    Native,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Native => "native",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "simulator" => Some(Backend::Sim),
+            "native" | "threads" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
@@ -89,6 +123,12 @@ pub struct RunResult {
     /// MFRF for this run (CCache variant; empty otherwise) — the merge
     /// identity reports and `sweep --json` emit.
     pub merge_fns: Vec<String>,
+    /// Wall-clock seconds of the parallel section under
+    /// [`Backend::Native`] (`None` for simulated runs, whose currency is
+    /// cycles). Native runs repurpose `stats.core_cycles` as per-core
+    /// *operation* counts, so `ops_total / wall_secs` is the measured
+    /// throughput the cross-validation reports.
+    pub wall_secs: Option<f64>,
 }
 
 impl RunResult {
@@ -105,6 +145,19 @@ impl RunResult {
         );
         self
     }
+
+    /// Total operations across cores (native runs; for simulated runs
+    /// this sums per-core cycle counts instead).
+    pub fn ops_total(&self) -> u64 {
+        self.stats.core_cycles.iter().sum()
+    }
+
+    /// Measured native throughput in Mops/s (`None` for simulated runs).
+    pub fn native_mops(&self) -> Option<f64> {
+        self.wall_secs
+            .filter(|&s| s > 0.0)
+            .map(|s| self.ops_total() as f64 / s / 1e6)
+    }
 }
 
 /// Speedup of `other` relative to `base` (cycles ratio, >1 = faster).
@@ -115,6 +168,16 @@ pub fn speedup(base: &RunResult, other: &RunResult) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [Backend::Sim, Backend::Native] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("threads"), Some(Backend::Native));
+        assert_eq!(Backend::parse("nope"), None);
+        assert_eq!(Backend::default(), Backend::Sim);
+    }
 
     #[test]
     fn variant_names_roundtrip() {
@@ -143,6 +206,7 @@ mod tests {
             verified: true,
             quality: None,
             merge_fns: Vec::new(),
+            wall_secs: None,
         };
         assert_eq!(speedup(&mk(200), &mk(100)), 2.0);
     }

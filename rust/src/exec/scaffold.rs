@@ -3,8 +3,8 @@
 //! math here (padded strides, line alignment) means every workload's
 //! Table 3 footprint comes from the same rules.
 
+use crate::exec::ExecCtx;
 use crate::sim::addr::Addr;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 
 /// A pthread-mutex-sized lock object (40 B), the FGL footprint unit the
@@ -40,11 +40,11 @@ impl LockArray {
         self.base.add(i * self.stride)
     }
 
-    pub fn lock(&self, ctx: &mut CoreCtx, i: u64) {
+    pub fn lock<C: ExecCtx>(&self, ctx: &mut C, i: u64) {
         ctx.lock(self.addr(i));
     }
 
-    pub fn unlock(&self, ctx: &mut CoreCtx, i: u64) {
+    pub fn unlock<C: ExecCtx>(&self, ctx: &mut C, i: u64) {
         ctx.unlock(self.addr(i));
     }
 }
@@ -89,9 +89,9 @@ impl DupSpace {
     /// every core's copy into the master array (both arrays indexed by
     /// 4-byte words). The caller partitions ranges across cores and
     /// places barriers.
-    pub fn reduce_add_u32(
+    pub fn reduce_add_u32<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         master: Addr,
         cores: usize,
         lo: u64,

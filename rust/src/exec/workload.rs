@@ -15,11 +15,11 @@ use std::sync::Arc;
 
 use crate::merge::MergeHandle;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 
+use super::ctx::ExecCtx;
 use super::error::ExecError;
-use super::{RunResult, Variant};
+use super::{Backend, RunResult, Variant};
 
 pub trait Workload: Send + Sync {
     /// Simulated-memory layout produced by [`Workload::setup`] and handed
@@ -53,15 +53,33 @@ pub trait Workload: Send + Sync {
     /// [`super::scaffold`]).
     fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> Self::Layout;
 
-    /// The program core `core` of `cores` executes.
-    fn program(
+    /// The program core `core` of `cores` executes. Generic over the
+    /// execution context ([`ExecCtx`]): the same body runs on the
+    /// simulator's `CoreCtx` and the native backend's `NativeCtx`.
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         cores: usize,
         variant: Variant,
         layout: &Self::Layout,
     );
+
+    /// Native-backend entry point: what one OS thread runs under
+    /// [`Backend::Native`]. Defaults to the same per-core
+    /// [`program`](Workload::program) — override only if a workload
+    /// needs backend-specific behavior (none of the built-ins do; the
+    /// point of [`ExecCtx`] is that they don't have to).
+    fn native_program<C: ExecCtx>(
+        &self,
+        ctx: &mut C,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        layout: &Self::Layout,
+    ) {
+        self.program(ctx, core, cores, variant, layout);
+    }
 
     /// Sequential golden run (host-side, untimed).
     fn golden(&self, cores: usize) -> Self::Golden;
@@ -87,7 +105,12 @@ pub struct WorkloadHandle {
     variants: Vec<Variant>,
     footprint: u64,
     runner: Box<
-        dyn Fn(Variant, MachineConfig, Option<MergeHandle>) -> Result<RunResult, ExecError>
+        dyn Fn(
+                Backend,
+                Variant,
+                MachineConfig,
+                Option<MergeHandle>,
+            ) -> Result<RunResult, ExecError>
             + Send
             + Sync,
     >,
@@ -103,8 +126,8 @@ impl WorkloadHandle {
             name,
             variants,
             footprint,
-            runner: Box::new(move |variant, cfg, merge| {
-                super::driver::run_with_merge(&*workload, variant, cfg, merge)
+            runner: Box::new(move |backend, variant, cfg, merge| {
+                super::driver::run_on_with_merge(&*workload, backend, variant, cfg, merge)
             }),
         }
     }
@@ -127,7 +150,7 @@ impl WorkloadHandle {
     }
 
     pub fn run(&self, variant: Variant, cfg: MachineConfig) -> Result<RunResult, ExecError> {
-        (self.runner)(variant, cfg, None)
+        (self.runner)(Backend::Sim, variant, cfg, None)
     }
 
     /// Run with every MFRF slot's merge function replaced by `merge`
@@ -141,6 +164,28 @@ impl WorkloadHandle {
         cfg: MachineConfig,
         merge: Option<MergeHandle>,
     ) -> Result<RunResult, ExecError> {
-        (self.runner)(variant, cfg, merge)
+        (self.runner)(Backend::Sim, variant, cfg, merge)
+    }
+
+    /// Run on an explicit [`Backend`] (`--backend native` takes this
+    /// path); goldens and verification are backend-independent.
+    pub fn run_on(
+        &self,
+        backend: Backend,
+        variant: Variant,
+        cfg: MachineConfig,
+    ) -> Result<RunResult, ExecError> {
+        (self.runner)(backend, variant, cfg, None)
+    }
+
+    /// [`run_on`](WorkloadHandle::run_on) with a merge override.
+    pub fn run_on_with_merge(
+        &self,
+        backend: Backend,
+        variant: Variant,
+        cfg: MachineConfig,
+        merge: Option<MergeHandle>,
+    ) -> Result<RunResult, ExecError> {
+        (self.runner)(backend, variant, cfg, merge)
     }
 }

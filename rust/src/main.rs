@@ -2,10 +2,13 @@
 //!
 //! Subcommands:
 //!   run      — run one benchmark/variant, print stats + verification
+//!              (`--backend native` executes on real OS threads)
 //!   sweep    — working-set sweep (Fig 6-style table) for one benchmark
 //!   bench    — perf_hotpath suite: engine throughput with fast/slow
 //!              speedups; `--json BENCH_<n>.json` writes the
 //!              perf-trajectory record (`--quick` for CI smoke)
+//!   xval     — cross-validate the sim and native backends: every
+//!              registered workload x variant on both, same goldens
 //!   overhead — Section 4.7 structural overhead report
 //!   runtime  — PJRT artifact smoke check (loads + executes merge_add)
 //!   list     — enumerate registered benchmarks and their variants
@@ -31,6 +34,8 @@
 //!
 //! Examples:
 //!   ccache run --bench kvstore --variant ccache
+//!   ccache run --bench histogram --variant atomic --backend native
+//!   ccache xval --cores 4
 //!   ccache run --bench kvstore --variant ccache --merge sat_add_u32:100
 //!   ccache run --bench histogram --variant ccache --zipf 0.9
 //!   ccache run --bench cms --variant ccache --zipf 0.99 --cms-depth 4
@@ -41,9 +46,11 @@
 //!   ccache --list-merges
 //!   ccache runtime
 
-use ccache::coordinator::{perf, report, run_sweep_with, scaled_config, SweepOptions, WS_FRACTIONS};
+use ccache::coordinator::{
+    perf, report, run_sweep_with, run_xval, scaled_config, SweepOptions, XvalOptions, WS_FRACTIONS,
+};
 use ccache::exec::registry::{self, SizeSpec, SketchSpec};
-use ccache::exec::{ExecError, Variant, WorkloadSpec};
+use ccache::exec::{Backend, ExecError, Variant, WorkloadSpec};
 use ccache::merge;
 use ccache::merge::MergeRegistry;
 use ccache::sim::config::MachineConfig;
@@ -88,6 +95,7 @@ fn main() {
     let args = Args::new("ccache — CCache paper reproduction CLI")
         .opt("bench", "kvstore", "benchmark name or alias (see `ccache list`)")
         .opt("variant", "ccache", "cgl|fgl|dup|ccache|atomic")
+        .opt("backend", "sim", "run/xval: execution backend, sim|native")
         .opt("frac", "1.0", "working set as a fraction of LLC capacity")
         .opt("seed", "42", "workload RNG seed")
         .opt("cores", "0", "override core count (0 = config default)")
@@ -203,27 +211,46 @@ fn main() {
                     }
                 }
             };
+            let backend = match Backend::parse(&args.get("backend")) {
+                Some(b) => b,
+                None => fail(format!(
+                    "unknown backend '{}'; use sim|native",
+                    args.get("backend")
+                )),
+            };
             let size =
                 SizeSpec::new(args.get_f64("frac"), cfg.llc().size_bytes, args.get_u64("seed"))
                     .with_zipf(zipf_theta)
                     .with_sketch(sketch);
             let bench = spec.build(&size);
             eprintln!(
-                "running {} / {} on {}...",
+                "running {} / {} ({} backend) on {}...",
                 bench.name(),
                 variant.name(),
+                backend.name(),
                 cfg.describe()
             );
-            let r = match bench.run_with_merge(variant, cfg.clone(), merge_override) {
+            let r = match bench.run_on_with_merge(backend, variant, cfg.clone(), merge_override) {
                 Ok(r) => r,
                 // unsupported variant / invalid config / merge fault -> exit 2
                 Err(e) => fail(e),
             };
+            let work = match r.wall_secs {
+                // native: measured ops + wall-clock throughput
+                Some(secs) => format!(
+                    "{} ops in {:.3} ms ({:.2} Mops/s)",
+                    r.ops_total(),
+                    secs * 1e3,
+                    r.native_mops().unwrap_or(0.0)
+                ),
+                // sim: the model's currency is cycles
+                None => format!("{} cycles", r.cycles()),
+            };
             println!(
-                "{}/{}: {} cycles, verified={}{}{}",
+                "{}/{}: {}, verified={}{}{}",
                 r.benchmark,
                 r.variant.name(),
-                r.cycles(),
+                work,
                 r.verified,
                 if r.merge_fns.is_empty() {
                     String::new()
@@ -287,6 +314,7 @@ fn main() {
                 bench_id: args.get("bench-id"),
             });
             bench_report.table().print();
+            bench_report.native_table().print();
             println!(
                 "(suite wall clock {:.1} s{})",
                 bench_report.wall_clock_secs,
@@ -298,6 +326,30 @@ fn main() {
                     Ok(()) => eprintln!("wrote {json_path}"),
                     Err(e) => fail(format!("writing {json_path}: {e}")),
                 }
+            }
+        }
+        "xval" => {
+            // the grid always runs both backends; --backend here would
+            // suggest otherwise, so reject anything but the default
+            if args.get("backend") != "sim" {
+                fail("xval always runs both backends; --backend does not apply");
+            }
+            let opts = XvalOptions {
+                cores: if cores > 0 { cores } else { 4 },
+                frac: args.get_f64("frac").min(1.0),
+                seed: args.get_u64("seed"),
+                only: Vec::new(),
+            };
+            eprintln!(
+                "cross-validating sim vs native: full registry, {} cores, frac {}...",
+                opts.cores, opts.frac
+            );
+            let xr = run_xval(&opts);
+            xr.table().print();
+            println!("({} cells in {:.1} s)", xr.cells.len(), xr.wall_clock_secs);
+            if !xr.all_verified() {
+                eprintln!("cross-validation FAILED: {}", xr.failures().join(", "));
+                std::process::exit(1);
             }
         }
         "overhead" => {
@@ -356,7 +408,7 @@ fn main() {
             }
         }
         other => {
-            eprintln!("unknown command {other}; use run|sweep|bench|overhead|runtime|list");
+            eprintln!("unknown command {other}; use run|sweep|bench|xval|overhead|runtime|list");
             std::process::exit(2);
         }
     }

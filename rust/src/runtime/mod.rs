@@ -13,6 +13,10 @@
 //! * [`engine::Engine::kmeans_step`] / [`engine::Engine::pagerank_iter`] —
 //!   the workload compute kernels used by the examples and the
 //!   end-to-end driver
+//! * [`native::NativeMachine`] — the `--backend native` execution
+//!   machine: real OS threads + atomics running the same `Workload`
+//!   programs the simulator runs (no PJRT involvement; it lives here
+//!   because `runtime/` is the "actually execute things" layer)
 //!
 //! Python never runs at simulation time: the rust binary is
 //! self-contained once `artifacts/` exists.
@@ -20,7 +24,9 @@
 pub mod artifacts;
 pub mod engine;
 pub mod merge_exec;
+pub mod native;
 
 pub use artifacts::{default_artifacts_dir, Manifest};
 pub use engine::Engine;
 pub use merge_exec::PjrtMergeExecutor;
+pub use native::{NativeCtx, NativeMachine, NativeRun};

@@ -1,0 +1,657 @@
+//! Native-thread execution backend: runs [`Workload`] programs on real
+//! OS threads over `AtomicU32` shared memory instead of the simulator.
+//!
+//! This is the machine half of `--backend native`
+//! ([`exec::driver::run_native`](crate::exec::driver::run_native) is the
+//! orchestration half). Where the simulator interleaves logical cores
+//! deterministically and charges cycles through the timing model, the
+//! [`NativeMachine`] spawns one scoped thread per core and lets the
+//! hardware schedule them:
+//!
+//! * coherent operations are real atomics — `Acquire` loads, `Release`
+//!   stores, `compare_exchange`/`fetch_or` RMWs;
+//! * `lock`/`unlock` are a CAS spinlock over the same lock words the
+//!   simulated variants use;
+//! * `barrier` is an abortable spin barrier (a faulting sibling releases
+//!   waiters instead of deadlocking them);
+//! * COps (`c_read`/`c_write`) privatize the accessed line into a
+//!   per-thread buffer — a software source buffer: original value
+//!   (`src`) plus updated copy (`upd`) — and `merge` pushes every
+//!   private line through its registry-resolved [`MergeFn`] handle via
+//!   the same [`BatchExecutor`] dispatch the simulator's merge engine
+//!   uses, under a global merge lock so each line merge is atomic.
+//!
+//! Merging only at explicit `merge` boundaries (no capacity evictions)
+//! is a *schedule* change, not a semantic one: registered merge
+//! functions are commutative delta/monotone reconciliations, so any
+//! merge order reaches the same final memory — which the driver then
+//! checks against the same sequential goldens as the simulation.
+//!
+//! A COp naming an uninstalled MFRF slot is the same machine fault as in
+//! the simulator: the thread records a typed [`MergeFault`] and unwinds;
+//! the driver recovers it as `ExecError::MergeFault`.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::exec::ctx::ExecCtx;
+use crate::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
+use crate::merge::{LineData, MergeHandle, LINE_WORDS};
+use crate::sim::addr::{Addr, Line};
+use crate::sim::machine::install_quiet_fault_hook;
+use crate::sim::mfrf::MergeFault;
+
+/// Spin barrier with abort support: a thread that unwinds (fault, bug)
+/// flips the abort flag so waiting siblings panic out instead of
+/// spinning forever on an arrival count that will never complete.
+pub struct SpinBarrier {
+    arrived: AtomicUsize,
+    generation: AtomicUsize,
+    cores: usize,
+    aborted: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(cores: usize) -> Self {
+        Self {
+            arrived: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            cores,
+            aborted: AtomicBool::new(false),
+        }
+    }
+
+    /// Release every current and future waiter by panicking it.
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::Release);
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    /// Block (spin) until all `cores` threads arrive. Panics with a
+    /// "sibling core panicked" notice if the barrier is aborted.
+    pub fn wait(&self) {
+        if self.is_aborted() {
+            panic!("sibling core panicked; aborting native barrier");
+        }
+        if self.cores <= 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.cores {
+            // last arrival: reset the count *before* publishing the new
+            // generation, so released threads re-entering the next
+            // barrier see a zeroed count
+            self.arrived.store(0, Ordering::Release);
+            self.generation.fetch_add(1, Ordering::AcqRel);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                if self.is_aborted() {
+                    panic!("sibling core panicked; aborting native barrier");
+                }
+                spins = spins.wrapping_add(1);
+                if spins % 4096 == 0 {
+                    // more threads than hardware cores: let the laggard run
+                    std::thread::yield_now();
+                }
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+/// State shared by every thread of one native run.
+struct NativeShared {
+    /// The flat functional memory, word-addressed — the native analog of
+    /// the simulator's `MemSystem` memory array.
+    words: Vec<AtomicU32>,
+    barrier: SpinBarrier,
+    /// Serializes merges so each line's read-reconcile-write is atomic
+    /// with respect to other threads' merges.
+    merge_lock: Mutex<()>,
+    /// First machine fault raised by any thread (authoritative, like
+    /// `MemSystem::take_fault`).
+    fault: Mutex<Option<MergeFault>>,
+    cores: usize,
+    mfrf_slots: usize,
+}
+
+/// One privatized line in a thread's software source buffer.
+#[derive(Clone)]
+struct PrivLine {
+    /// Line value at privatization time.
+    src: LineData,
+    /// The thread's updated copy (COps read/write this).
+    upd: LineData,
+    /// MFRF slot naming the merge function (last COp wins, mirroring
+    /// the simulator's re-typing rule).
+    ty: u8,
+}
+
+/// Per-thread operation tally, folded into [`NativeRun`] at join time.
+#[derive(Clone, Debug, Default)]
+pub struct CoreTally {
+    /// Memory operations + COps issued (the native "cycles").
+    pub ops: u64,
+    pub cops: u64,
+    pub atomic_rmws: u64,
+    pub lock_acquires: u64,
+    pub merges: u64,
+    pub barriers: u64,
+}
+
+/// Outcome of one native parallel section.
+#[derive(Clone, Debug)]
+pub struct NativeRun {
+    /// Per-core operation counts (the native stand-in for core clocks).
+    pub per_core_ops: Vec<u64>,
+    pub cops: u64,
+    pub atomic_rmws: u64,
+    pub lock_acquires: u64,
+    pub merges: u64,
+    pub barriers: u64,
+    /// Wall-clock seconds of the parallel section (threads spawned →
+    /// all joined).
+    pub secs: f64,
+}
+
+impl NativeRun {
+    pub fn ops_total(&self) -> u64 {
+        self.per_core_ops.iter().sum()
+    }
+
+    /// Measured throughput in Mops/s.
+    pub fn mops(&self) -> f64 {
+        if self.secs <= 0.0 {
+            return 0.0;
+        }
+        self.ops_total() as f64 / self.secs / 1e6
+    }
+}
+
+/// The native machine: shared atomic memory + one OS thread per core.
+pub struct NativeMachine {
+    shared: NativeShared,
+}
+
+impl NativeMachine {
+    /// Build shared memory initialized from a flat word snapshot (the
+    /// simulator `MemSystem` after `Workload::setup` — the allocator and
+    /// input data are backend-independent).
+    pub fn new(words: &[u32], cores: usize, mfrf_slots: usize) -> Self {
+        assert!(cores >= 1, "native machine needs at least one core");
+        Self {
+            shared: NativeShared {
+                words: words.iter().map(|&w| AtomicU32::new(w)).collect(),
+                barrier: SpinBarrier::new(cores),
+                merge_lock: Mutex::new(()),
+                fault: Mutex::new(None),
+                cores,
+                mfrf_slots,
+            },
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.shared.cores
+    }
+
+    /// Final flat memory (after `run`), for writing back into a
+    /// `MemSystem` and verifying against the golden.
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.shared
+            .words
+            .iter()
+            .map(|w| w.load(Ordering::Acquire))
+            .collect()
+    }
+
+    /// The first machine fault any thread raised, if one did.
+    pub fn take_fault(&self) -> Option<MergeFault> {
+        self.shared
+            .fault
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+    }
+
+    /// Run one program per core on real threads; returns the tallies and
+    /// wall clock. A thread panic (machine fault included) aborts the
+    /// barrier, joins the siblings, and re-raises the first payload —
+    /// the same contract as the simulator's `Machine::run`, so the
+    /// driver's fault recovery is backend-independent.
+    pub fn run(&self, programs: Vec<Box<dyn FnOnce(&mut NativeCtx) + Send + '_>>) -> NativeRun {
+        install_quiet_fault_hook();
+        let cores = self.shared.cores;
+        assert_eq!(programs.len(), cores, "one program per core");
+        let mut tallies: Vec<CoreTally> = Vec::with_capacity(cores);
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        let start = Instant::now();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = programs
+                .into_iter()
+                .enumerate()
+                .map(|(core, prog)| {
+                    let shared = &self.shared;
+                    s.spawn(move || {
+                        let out = catch_unwind(AssertUnwindSafe(|| {
+                            let mut ctx = NativeCtx::new(shared, core);
+                            prog(&mut ctx);
+                            // drain any still-private lines: commutative
+                            // merge functions make this an identity for
+                            // clean (read-only) lines, and it publishes
+                            // updates a program left unmerged
+                            ctx.merge();
+                            ctx.tally()
+                        }));
+                        if out.is_err() {
+                            // release siblings spinning at a barrier
+                            shared.barrier.abort();
+                        }
+                        match out {
+                            Ok(t) => t,
+                            Err(p) => resume_unwind(p),
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(t) => tallies.push(t),
+                    Err(p) => {
+                        if first_panic.is_none() {
+                            first_panic = Some(p);
+                        }
+                    }
+                }
+            }
+        });
+        let secs = start.elapsed().as_secs_f64();
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+        NativeRun {
+            per_core_ops: tallies.iter().map(|t| t.ops).collect(),
+            cops: tallies.iter().map(|t| t.cops).sum(),
+            atomic_rmws: tallies.iter().map(|t| t.atomic_rmws).sum(),
+            lock_acquires: tallies.iter().map(|t| t.lock_acquires).sum(),
+            merges: tallies.iter().map(|t| t.merges).sum(),
+            barriers: tallies.iter().map(|t| t.barriers).sum(),
+            secs,
+        }
+    }
+}
+
+/// Load one line (16 words) from shared memory.
+fn load_line(words: &[AtomicU32], line: Line) -> LineData {
+    let base = line.word_index();
+    let mut data = [0u32; LINE_WORDS];
+    for (i, d) in data.iter_mut().enumerate() {
+        *d = words[base + i].load(Ordering::Acquire);
+    }
+    data
+}
+
+/// Store one line (16 words) into shared memory.
+fn store_line(words: &[AtomicU32], line: Line, data: &LineData) {
+    let base = line.word_index();
+    for (i, d) in data.iter().enumerate() {
+        words[base + i].store(*d, Ordering::Release);
+    }
+}
+
+/// The native implementation of [`ExecCtx`]: one OS thread's view of the
+/// shared machine. Operation semantics match `CoreCtx` (the contract is
+/// documented on the trait); timing does not — `cycles()` reports the
+/// operation count, and wall-clock time is measured by the machine.
+pub struct NativeCtx<'m> {
+    shared: &'m NativeShared,
+    core: usize,
+    /// Per-thread MFRF: slot → merge handle.
+    mfrf: Vec<Option<MergeHandle>>,
+    /// Software source buffer: privatized lines under COps.
+    priv_lines: HashMap<u64, PrivLine>,
+    tally: CoreTally,
+}
+
+impl<'m> NativeCtx<'m> {
+    fn new(shared: &'m NativeShared, core: usize) -> Self {
+        Self {
+            shared,
+            core,
+            mfrf: vec![None; shared.mfrf_slots],
+            priv_lines: HashMap::new(),
+            tally: CoreTally::default(),
+        }
+    }
+
+    fn tally(&self) -> CoreTally {
+        self.tally.clone()
+    }
+
+    /// Number of currently privatized lines (diagnostics/tests).
+    pub fn private_lines(&self) -> usize {
+        self.priv_lines.len()
+    }
+
+    fn word(&self, addr: Addr) -> &AtomicU32 {
+        &self.shared.words[addr.word_index()]
+    }
+
+    /// Raise the machine fault for MFRF slot `ty`: record it, release
+    /// the siblings, unwind this thread with the typed payload.
+    fn merge_fault(&self, ty: u8) -> ! {
+        let fault = MergeFault {
+            core: self.core,
+            slot: ty,
+            slots: self.shared.mfrf_slots,
+        };
+        {
+            let mut slot = self
+                .shared
+                .fault
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            slot.get_or_insert(fault.clone());
+        }
+        self.shared.barrier.abort();
+        std::panic::panic_any(fault)
+    }
+
+    /// Privatize `line` (if not already private) and bind it to MFRF
+    /// slot `ty`; faults if the slot holds no merge function.
+    fn privatize(&mut self, line: Line, ty: u8) -> &mut PrivLine {
+        if self
+            .mfrf
+            .get(ty as usize)
+            .and_then(|s| s.as_ref())
+            .is_none()
+        {
+            self.merge_fault(ty);
+        }
+        if !self.priv_lines.contains_key(&line.0) {
+            let data = load_line(&self.shared.words, line);
+            self.priv_lines.insert(
+                line.0,
+                PrivLine {
+                    src: data,
+                    upd: data,
+                    ty,
+                },
+            );
+        }
+        let entry = self.priv_lines.get_mut(&line.0).unwrap();
+        // re-typing: the last COp names the merge function
+        entry.ty = ty;
+        entry
+    }
+}
+
+impl ExecCtx for NativeCtx<'_> {
+    fn core_id(&self) -> usize {
+        self.core
+    }
+
+    fn cycles(&mut self) -> u64 {
+        self.tally.ops
+    }
+
+    fn compute(&mut self, _n: u64) {
+        // modeled computation is free natively; only memory operations
+        // count toward the measured throughput
+    }
+
+    fn read_u32(&mut self, addr: Addr) -> u32 {
+        self.tally.ops += 1;
+        self.word(addr).load(Ordering::Acquire)
+    }
+
+    fn write_u32(&mut self, addr: Addr, val: u32) {
+        self.tally.ops += 1;
+        self.word(addr).store(val, Ordering::Release);
+    }
+
+    fn cas_u32(&mut self, addr: Addr, expected: u32, new: u32) -> bool {
+        self.tally.ops += 1;
+        self.tally.atomic_rmws += 1;
+        self.word(addr)
+            .compare_exchange(expected, new, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    fn fetch_or_u32(&mut self, addr: Addr, bits: u32) -> u32 {
+        self.tally.ops += 1;
+        self.tally.atomic_rmws += 1;
+        self.word(addr).fetch_or(bits, Ordering::AcqRel)
+    }
+
+    fn merge_init(&mut self, slot: usize, f: MergeHandle) {
+        assert!(
+            slot < self.mfrf.len(),
+            "MFRF slot {slot} out of range (have {})",
+            self.mfrf.len()
+        );
+        self.mfrf[slot] = Some(f);
+    }
+
+    fn c_read_u32(&mut self, addr: Addr, ty: u8) -> u32 {
+        self.tally.ops += 1;
+        self.tally.cops += 1;
+        let off = (addr.offset() / 4) as usize;
+        self.privatize(addr.line(), ty).upd[off]
+    }
+
+    fn c_write_u32(&mut self, addr: Addr, val: u32, ty: u8) {
+        self.tally.ops += 1;
+        self.tally.cops += 1;
+        let off = (addr.offset() / 4) as usize;
+        self.privatize(addr.line(), ty).upd[off] = val;
+    }
+
+    fn soft_merge(&mut self) {
+        // no capacity pressure natively: private lines live until the
+        // explicit merge, so marking them evictable is a no-op
+    }
+
+    fn merge(&mut self) {
+        if self.priv_lines.is_empty() {
+            return;
+        }
+        // deterministic line order, grouped into homogeneous same-type
+        // batches for the BatchExecutor dispatch the sim engine also uses
+        let mut lines: Vec<(u64, PrivLine)> = self.priv_lines.drain().collect();
+        lines.sort_by_key(|(l, e)| (e.ty, *l));
+        let _guard = self
+            .shared
+            .merge_lock
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let mut exec = NativeExecutor;
+        let mut i = 0;
+        while i < lines.len() {
+            let ty = lines[i].1.ty;
+            let mut j = i;
+            while j < lines.len() && lines[j].1.ty == ty {
+                j += 1;
+            }
+            let Some(f) = self.mfrf[ty as usize].clone() else {
+                // unreachable through privatize(), which gates on the
+                // slot — but a fault beats silent data loss
+                self.merge_fault(ty);
+            };
+            let items: Vec<MergeItem> = lines[i..j]
+                .iter()
+                .map(|(l, e)| MergeItem {
+                    src: e.src,
+                    upd: e.upd,
+                    mem: load_line(&self.shared.words, Line(*l)),
+                    drop_update: false,
+                })
+                .collect();
+            let out = exec.execute(&*f, &items);
+            for ((l, _), data) in lines[i..j].iter().zip(out.iter()) {
+                store_line(&self.shared.words, Line(*l), data);
+            }
+            self.tally.merges += (j - i) as u64;
+            i = j;
+        }
+    }
+
+    fn lock(&mut self, addr: Addr) {
+        self.tally.ops += 1;
+        self.tally.lock_acquires += 1;
+        let w = self.word(addr);
+        let mut spins = 0u32;
+        while w
+            .compare_exchange_weak(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            spins = spins.wrapping_add(1);
+            if spins % 1024 == 0 {
+                if self.shared.barrier.is_aborted() {
+                    panic!("sibling core panicked; aborting native lock wait");
+                }
+                std::thread::yield_now();
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    fn unlock(&mut self, addr: Addr) {
+        self.tally.ops += 1;
+        self.word(addr).store(0, Ordering::Release);
+    }
+
+    fn barrier(&mut self) {
+        self.tally.barriers += 1;
+        self.shared.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::funcs::AddU32;
+    use crate::merge::handle;
+
+    fn programs<'a>(
+        cores: usize,
+        f: impl Fn(&mut NativeCtx, usize) + Send + Sync + Copy + 'a,
+    ) -> Vec<Box<dyn FnOnce(&mut NativeCtx) + Send + 'a>> {
+        (0..cores)
+            .map(|core| {
+                let b: Box<dyn FnOnce(&mut NativeCtx) + Send + 'a> =
+                    Box::new(move |ctx| f(ctx, core));
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cas_increments_are_not_lost() {
+        let cores = 4;
+        let m = NativeMachine::new(&[0u32; 16], cores, 4);
+        let run = m.run(programs(cores, |ctx, _| {
+            for _ in 0..1000 {
+                loop {
+                    let v = ctx.read_u32(Addr(0));
+                    if ctx.cas_u32(Addr(0), v, v + 1) {
+                        break;
+                    }
+                }
+            }
+        }));
+        assert_eq!(m.snapshot()[0], 4000);
+        assert_eq!(run.per_core_ops.len(), cores);
+        assert!(run.atomic_rmws >= 4000);
+        assert!(run.secs > 0.0);
+    }
+
+    #[test]
+    fn spinlock_protects_a_plain_counter() {
+        let cores = 4;
+        // word 0 = lock, word 16 (next line) = counter
+        let m = NativeMachine::new(&[0u32; 32], cores, 4);
+        m.run(programs(cores, |ctx, _| {
+            for _ in 0..500 {
+                ctx.lock(Addr(0));
+                let v = ctx.read_u32(Addr(64));
+                ctx.write_u32(Addr(64), v + 1);
+                ctx.unlock(Addr(0));
+            }
+        }));
+        assert_eq!(m.snapshot()[16], 2000);
+        assert_eq!(m.snapshot()[0], 0, "lock released");
+    }
+
+    #[test]
+    fn cop_updates_merge_to_the_sum() {
+        let cores = 4;
+        let m = NativeMachine::new(&[0u32; 16], cores, 4);
+        let run = m.run(programs(cores, |ctx, _| {
+            ctx.merge_init(0, handle(AddU32));
+            for _ in 0..100 {
+                let v = ctx.c_read_u32(Addr(4), 0);
+                ctx.c_write_u32(Addr(4), v + 1, 0);
+            }
+            ctx.merge();
+            ctx.barrier();
+        }));
+        assert_eq!(m.snapshot()[1], 400);
+        assert_eq!(run.merges, cores as u64);
+        assert_eq!(run.barriers, cores as u64);
+    }
+
+    #[test]
+    fn unmerged_private_lines_drain_at_thread_exit() {
+        let m = NativeMachine::new(&[0u32; 16], 2, 4);
+        m.run(programs(2, |ctx, core| {
+            ctx.merge_init(0, handle(AddU32));
+            let v = ctx.c_read_u32(Addr(0), 0);
+            ctx.c_write_u32(Addr(0), v + 1 + core as u32, 0);
+            // no explicit merge: the machine drains on exit
+        }));
+        assert_eq!(m.snapshot()[0], 3); // (1) + (2)
+    }
+
+    #[test]
+    fn uninstalled_slot_is_a_recovered_merge_fault() {
+        let m = NativeMachine::new(&[0u32; 16], 2, 4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            m.run(programs(2, |ctx, _| {
+                // barrier first: proves an aborted barrier releases the
+                // sibling instead of deadlocking the join
+                let _ = ctx.c_read_u32(Addr(0), 3);
+                ctx.barrier();
+            }));
+        }));
+        assert!(r.is_err(), "fault must unwind");
+        let fault = m.take_fault().expect("fault recorded");
+        assert_eq!(fault.slot, 3);
+        assert!(m.take_fault().is_none(), "fault is taken once");
+    }
+
+    #[test]
+    fn barrier_synchronizes_phases() {
+        let cores = 3;
+        // one counter word per core in distinct lines
+        let words = vec![0u32; 16 * cores];
+        let m = NativeMachine::new(&words, cores, 4);
+        m.run(programs(cores, |ctx, core| {
+            ctx.write_u32(Addr(core as u64 * 64), 7);
+            ctx.barrier();
+            // after the barrier every sibling's phase-1 store is visible
+            let mut sum = 0;
+            for c in 0..3u64 {
+                sum += ctx.read_u32(Addr(c * 64));
+            }
+            assert_eq!(sum, 21);
+        }));
+    }
+}

@@ -9,6 +9,7 @@ use std::sync::MutexGuard;
 use super::addr::Addr;
 use super::machine::{MachState, Machine};
 use super::mfrf::MergeFault;
+use crate::exec::ctx::ExecCtx;
 use crate::merge::MergeHandle;
 
 /// The per-core execution context: every method is one "instruction" that
@@ -335,5 +336,71 @@ impl<'m> CoreCtx<'m> {
             panic!("sibling core panicked during barrier");
         }
         drop(g);
+    }
+}
+
+/// The simulator backend of the execution-context abstraction: pure
+/// delegation to the inherent (timed, interleaved) methods above, so
+/// generic `Workload::program<C: ExecCtx>` bodies run unchanged on the
+/// simulated machine.
+impl ExecCtx for CoreCtx<'_> {
+    fn core_id(&self) -> usize {
+        CoreCtx::core_id(self)
+    }
+
+    fn cycles(&mut self) -> u64 {
+        CoreCtx::cycles(self)
+    }
+
+    fn compute(&mut self, n: u64) {
+        CoreCtx::compute(self, n)
+    }
+
+    fn read_u32(&mut self, addr: Addr) -> u32 {
+        CoreCtx::read_u32(self, addr)
+    }
+
+    fn write_u32(&mut self, addr: Addr, val: u32) {
+        CoreCtx::write_u32(self, addr, val)
+    }
+
+    fn cas_u32(&mut self, addr: Addr, expected: u32, new: u32) -> bool {
+        CoreCtx::cas_u32(self, addr, expected, new)
+    }
+
+    fn fetch_or_u32(&mut self, addr: Addr, bits: u32) -> u32 {
+        CoreCtx::fetch_or_u32(self, addr, bits)
+    }
+
+    fn merge_init(&mut self, slot: usize, f: MergeHandle) {
+        CoreCtx::merge_init(self, slot, f)
+    }
+
+    fn c_read_u32(&mut self, addr: Addr, ty: u8) -> u32 {
+        CoreCtx::c_read_u32(self, addr, ty)
+    }
+
+    fn c_write_u32(&mut self, addr: Addr, val: u32, ty: u8) {
+        CoreCtx::c_write_u32(self, addr, val, ty)
+    }
+
+    fn soft_merge(&mut self) {
+        CoreCtx::soft_merge(self)
+    }
+
+    fn merge(&mut self) {
+        CoreCtx::merge(self)
+    }
+
+    fn lock(&mut self, addr: Addr) {
+        CoreCtx::lock(self, addr)
+    }
+
+    fn unlock(&mut self, addr: Addr) {
+        CoreCtx::unlock(self, addr)
+    }
+
+    fn barrier(&mut self) {
+        CoreCtx::barrier(self)
     }
 }

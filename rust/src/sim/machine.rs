@@ -27,10 +27,11 @@ use super::stats::Stats;
 /// with the typed [`MergeFault`] as payload, and sibling cores unwind
 /// with a "sibling core panicked" notice; both are expected, recovered
 /// control flow — not crashes. Filter them out of the process panic
-/// hook (once, first Machine construction) so the execution layer's
-/// clean diagnostic is not buried under raw panic spew; every other
-/// panic still reaches the previous hook untouched.
-fn install_quiet_fault_hook() {
+/// hook (once, first Machine construction — the native backend installs
+/// the same hook, since its faults unwind identically) so the execution
+/// layer's clean diagnostic is not buried under raw panic spew; every
+/// other panic still reaches the previous hook untouched.
+pub(crate) fn install_quiet_fault_hook() {
     static ONCE: std::sync::Once = std::sync::Once::new();
     ONCE.call_once(|| {
         let prev = std::panic::take_hook();

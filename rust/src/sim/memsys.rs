@@ -66,10 +66,14 @@ pub struct MemSystem {
     mem: Vec<u32>,
     src_buf: Vec<SourceBuffer>,
     /// `cdata_slot[core][l1_way_index]` = the source-buffer slot bound to
-    /// the CData line installed in that way (written at privatization).
-    /// Read only for ways whose CCache bit is set, so stale values after
-    /// an invalidation are harmless. Gives COp hits O(1) access to the
-    /// updated copy instead of an associative search.
+    /// the CData line installed in that way. Written at privatization and
+    /// cleared to [`NO_SLOT`] when the way's CData line is merged away
+    /// ([`Self::evict_cdata_line`]), so a binding is live exactly while
+    /// the way's CCache bit is set — invariant 6 in
+    /// [`Self::check_invariants`] pins this (a stale binding would make
+    /// the COp fast path resolve another line's updated copy). Gives COp
+    /// hits O(1) access to the updated copy instead of an associative
+    /// search.
     cdata_slot: Vec<Vec<u32>>,
     mfrf: Vec<Mfrf>,
     /// Background merge-engine backlog per core, in cycles of queued
@@ -183,6 +187,24 @@ impl MemSystem {
 
     pub fn poke_f32(&mut self, addr: Addr, val: f32) {
         self.poke(addr, val.to_bits());
+    }
+
+    /// Clone the flat functional memory image. The native backend seeds
+    /// its `AtomicU32` array from this after `Workload::setup` ran.
+    pub fn snapshot_mem(&self) -> Vec<u32> {
+        self.mem.clone()
+    }
+
+    /// Overwrite the flat functional memory image (same length). The
+    /// native backend writes its final image back through this so
+    /// `Workload::verify` reads it via the ordinary peek API.
+    pub fn restore_mem(&mut self, words: &[u32]) {
+        assert_eq!(
+            words.len(),
+            self.mem.len(),
+            "restored memory image must match the configured size"
+        );
+        self.mem.copy_from_slice(words);
     }
 
     fn mem_line(&self, line: Line) -> LineData {
@@ -514,6 +536,22 @@ impl MemSystem {
         }
     }
 
+    /// Exact statistics at any instant, fast path on or off: a copy of
+    /// [`Stats`] with the per-core fast-path scratch counters folded in
+    /// *non-destructively*. Mid-phase readers must use this (or call
+    /// [`Self::flush_hot_stats`] first) — reading `self.stats` raw while
+    /// `fast_path` is on under-reports L1 hits and COps by whatever the
+    /// hot counters have batched since the last phase boundary.
+    pub fn stats_snapshot(&self) -> Stats {
+        let mut stats = self.stats.clone();
+        for h in &self.hot {
+            stats.levels[0].hits += h.l1_hits;
+            stats.cops += h.cops;
+            stats.ccache_l1_hits += h.ccache_l1_hits;
+        }
+        stats
+    }
+
     /// The core ran `cycles` of other work: the background merge engine
     /// drains in parallel.
     #[inline]
@@ -534,6 +572,15 @@ impl MemSystem {
         let Some(entry) = self.src_buf[core].remove(line) else {
             return Ok(0);
         };
+        // drop the way's fast-path binding with the line: a later CData
+        // fill reusing this way rebinds before its first COp, but only
+        // because privatization writes `cdata_slot` unconditionally — a
+        // stale slot here would silently alias another line's updated
+        // copy if that ordering ever changed, so clear it defensively
+        // (invariant 6 then pins the live-binding property)
+        if let Some(idx) = self.path.innermost(core).probe(line) {
+            self.cdata_slot[core][idx] = NO_SLOT;
+        }
         let l1_meta = self.path.innermost_mut(core).invalidate(line);
         let dirty = l1_meta.map_or(true, |m| m.dirty);
 
@@ -613,7 +660,11 @@ impl MemSystem {
     /// 4. the directory's internal state is consistent;
     /// 5. every source-buffer entry's merge-type slot equals its L1
     ///    meta's — a COp re-typing a privatized line must rebind both
-    ///    (the merge engine resolves the source-buffer slot).
+    ///    (the merge engine resolves the source-buffer slot);
+    /// 6. every CCache-bit way's `cdata_slot` binding is live: not
+    ///    `NO_SLOT`, and the bound source-buffer slot holds exactly the
+    ///    way's line — the COp fast path resolves the updated copy
+    ///    through this binding, so a stale one would corrupt data.
     pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
         for core in 0..self.cfg.cores {
             for e in self.src_buf[core].iter_valid() {
@@ -651,6 +702,23 @@ impl MemSystem {
                             core,
                             m.line.0,
                             "CData line lacks src-buf entry",
+                        ));
+                    }
+                    let bound = self.cdata_slot[core][slot];
+                    if bound == NO_SLOT {
+                        return Err(InvariantViolation::engine(
+                            core,
+                            m.line.0,
+                            "CData way has no cdata_slot binding",
+                        ));
+                    }
+                    if self.src_buf[core].slot_line(bound as usize) != Some(m.line) {
+                        return Err(InvariantViolation::engine(
+                            core,
+                            m.line.0,
+                            format!(
+                                "stale cdata_slot binding (way {slot} -> src-buf slot {bound})"
+                            ),
                         ));
                     }
                     for lvl in 1..self.path.private_depth() {

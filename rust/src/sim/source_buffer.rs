@@ -143,6 +143,16 @@ impl SourceBuffer {
         &mut self.entries[slot].upd
     }
 
+    /// The line held in `slot`, or `None` if the slot is invalid or out
+    /// of range (invariant checks validate `cdata_slot` bindings with
+    /// this — see `MemSystem::check_invariants`, invariant 6).
+    pub fn slot_line(&self, slot: usize) -> Option<Line> {
+        self.entries
+            .get(slot)
+            .filter(|e| e.valid)
+            .map(|e| e.line)
+    }
+
     /// Rebind the merge-type slot of `line`'s entry (no-op when the line
     /// holds no source copy). A COp that re-types an already-privatized
     /// line rewrites the L1 meta's merge-type field; the source copy's
@@ -286,6 +296,16 @@ mod tests {
         // the freed slot is handed out again
         let s3 = sb.insert(l(3), [3; 16], 0);
         assert_eq!(s3, s1);
+    }
+
+    #[test]
+    fn slot_line_reports_only_live_slots() {
+        let mut sb = SourceBuffer::new(2);
+        let s1 = sb.insert(l(4), [0; 16], 0);
+        assert_eq!(sb.slot_line(s1), Some(l(4)));
+        sb.remove(l(4));
+        assert_eq!(sb.slot_line(s1), None);
+        assert_eq!(sb.slot_line(99), None);
     }
 
     #[test]

@@ -75,6 +75,37 @@ impl ScenarioResult {
     }
 }
 
+/// One native-backend measurement: a registry workload run on real OS
+/// threads (`--backend native`), wall-clock timed, with the matching
+/// simulated cycle count alongside so trajectory diffs can correlate the
+/// two. Serialized under the report's top-level `"native"` key — a new
+/// key, not a new scenario shape, so existing `scenarios` validators
+/// keep passing.
+#[derive(Clone, Debug)]
+pub struct NativeResult {
+    pub name: String,
+    pub variant: String,
+    /// Operations executed across all threads (memory ops + COps).
+    pub ops: u64,
+    /// Wall-clock seconds of the parallel section.
+    pub secs: f64,
+    /// Simulated cycles of the same workload/variant on the sim backend.
+    pub sim_cycles: u64,
+    /// Golden verification outcome of the native run.
+    pub verified: bool,
+}
+
+impl NativeResult {
+    /// Millions of operations per second (wall clock).
+    pub fn mops(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.ops as f64 / self.secs / 1e6
+        } else {
+            0.0
+        }
+    }
+}
+
 /// The perf-trajectory record one `ccache bench` run produces.
 /// Serialized (hand-rolled JSON — serde is unavailable offline) to
 /// `BENCH_<bench_id>.json`; committing one per perf-relevant PR gives
@@ -93,6 +124,9 @@ pub struct BenchReport {
     /// Free-form provenance (host notes, caveats); empty when none.
     pub note: String,
     pub scenarios: Vec<ScenarioResult>,
+    /// Native-backend wall-clock measurements (empty when the suite ran
+    /// sim-only).
+    pub native: Vec<NativeResult>,
 }
 
 impl BenchReport {
@@ -130,6 +164,25 @@ impl BenchReport {
                 s.mops()
             ));
         }
+        out.push_str("\n  ],\n");
+        out.push_str("  \"native\": [\n");
+        for (i, n) in self.native.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"variant\": {}, \"ops\": {}, \
+                 \"secs\": {:.6}, \"mops\": {:.3}, \"sim_cycles\": {}, \
+                 \"verified\": {}}}",
+                json_str(&n.name),
+                json_str(&n.variant),
+                n.ops,
+                n.secs,
+                n.mops(),
+                n.sim_cycles,
+                n.verified
+            ));
+        }
         out.push_str("\n  ]\n}\n");
         out
     }
@@ -150,6 +203,25 @@ impl BenchReport {
                 s.speedup()
                     .map(|v| format!("{v:.2}x"))
                     .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// The native-backend section as its own table (empty reports render
+    /// a header-only table).
+    pub fn native_table(&self) -> Table {
+        let mut t = Table::new(
+            format!("native backend — {}", self.config),
+            &["workload", "variant", "wall Mops/s", "sim cycles", "verified"],
+        );
+        for n in &self.native {
+            t.row(&[
+                n.name.clone(),
+                n.variant.clone(),
+                format!("{:.2}", n.mops()),
+                n.sim_cycles.to_string(),
+                n.verified.to_string(),
             ]);
         }
         t
@@ -305,6 +377,14 @@ mod tests {
                     slow_mops: None,
                 },
             ],
+            native: vec![NativeResult {
+                name: "histogram".into(),
+                variant: "atomic".into(),
+                ops: 2_000_000,
+                secs: 0.25,
+                sim_cycles: 9_000_000,
+                verified: true,
+            }],
         }
     }
 
@@ -325,8 +405,28 @@ mod tests {
         assert!(j.contains("\"speedup\": 5.00"), "{j}");
         // scenarios without a slow twin serialize null, not a number
         assert!(j.contains("\"slow_mops\": null"), "{j}");
+        // the native section is a top-level key with its own shape
+        assert!(j.contains("\"native\": ["), "{j}");
+        assert!(j.contains("\"variant\": \"atomic\""), "{j}");
+        assert!(j.contains("\"sim_cycles\": 9000000"), "{j}");
+        assert!(j.contains("\"verified\": true"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
+    }
+
+    #[test]
+    fn native_result_mops_handles_zero_secs() {
+        let n = NativeResult {
+            name: "x".into(),
+            variant: "fgl".into(),
+            ops: 100,
+            secs: 0.0,
+            sim_cycles: 0,
+            verified: true,
+        };
+        assert_eq!(n.mops(), 0.0);
+        let t = demo_report().native_table().render();
+        assert!(t.contains("histogram"), "{t}");
     }
 
     #[test]

@@ -9,12 +9,11 @@
 
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
-use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::exec::{driver, ExecCtx, RunResult, Variant, Workload};
 use crate::merge::funcs::AddU32;
 use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 use crate::util::rng::{Rng, Zipf};
 
@@ -155,9 +154,9 @@ impl Workload for HgWorkload {
         l
     }
 
-    fn program(
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         cores: usize,
         variant: Variant,

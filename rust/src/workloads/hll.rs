@@ -14,11 +14,10 @@
 
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray};
-use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::exec::{driver, ExecCtx, RunResult, Variant, Workload};
 use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 use crate::workloads::sketch::{
     hash_key, keyed_stream, lane_get, lane_max_word, lane_set, MaxU8x64,
@@ -238,9 +237,9 @@ impl Workload for HllWorkload {
         l
     }
 
-    fn program(
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         cores: usize,
         variant: Variant,

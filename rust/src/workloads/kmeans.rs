@@ -18,12 +18,11 @@
 
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray};
-use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::exec::{driver, ExecCtx, RunResult, Variant, Workload};
 use crate::merge::funcs::AddF32;
 use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 use crate::util::rng::Rng;
 
@@ -259,9 +258,9 @@ impl Workload for KmWorkload {
         l
     }
 
-    fn program(
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         cores: usize,
         variant: Variant,

@@ -19,12 +19,11 @@
 
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
-use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::exec::{driver, ExecCtx, RunResult, Variant, Workload};
 use crate::merge::funcs::{AddU32, CmulF32, SatAddU32};
 use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 use crate::util::rng::{Rng, Zipf};
 
@@ -234,9 +233,9 @@ impl Workload for KvWorkload {
         l
     }
 
-    fn program(
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         cores: usize,
         variant: Variant,
@@ -329,7 +328,7 @@ pub fn run(p: &KvParams, variant: Variant, cfg: MachineConfig) -> RunResult {
 }
 
 /// One coherent (locked or private-copy) update.
-fn update_coherent(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32, fi: f32) {
+fn update_coherent<C: ExecCtx>(ctx: &mut C, p: &KvParams, base: Addr, k: u64, fr: f32, fi: f32) {
     match p.merge {
         KvMerge::Add => {
             let a = base.add(k * 4);
@@ -353,7 +352,7 @@ fn update_coherent(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32,
 }
 
 /// One CCache COp update.
-fn update_ccache(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32, fi: f32) {
+fn update_ccache<C: ExecCtx>(ctx: &mut C, p: &KvParams, base: Addr, k: u64, fr: f32, fi: f32) {
     match p.merge {
         KvMerge::Add | KvMerge::Sat { .. } => {
             let a = base.add(k * 4);
@@ -375,7 +374,7 @@ fn update_ccache(ctx: &mut CoreCtx, p: &KvParams, base: Addr, k: u64, fr: f32, f
 /// master array. Note for Sat: private copies hold raw counts; the clamp
 /// is applied against the master (the DUP merge function, same as
 /// CCache's — the paper uses the same merge for both).
-fn dup_reduce(ctx: &mut CoreCtx, p: &KvParams, l: &KvLayout, cores: usize, lo: u64, hi: u64) {
+fn dup_reduce<C: ExecCtx>(ctx: &mut C, p: &KvParams, l: &KvLayout, cores: usize, lo: u64, hi: u64) {
     match p.merge {
         KvMerge::Add => l.copies.reduce_add_u32(ctx, l.values, cores, lo, hi),
         KvMerge::Sat { max } => {

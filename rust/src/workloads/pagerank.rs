@@ -16,12 +16,11 @@
 
 use crate::exec::registry::SizeSpec;
 use crate::exec::scaffold::LockArray;
-use crate::exec::{driver, RunResult, Variant, Workload};
+use crate::exec::{driver, ExecCtx, RunResult, Variant, Workload};
 use crate::merge::funcs::AddF32;
 use crate::merge::{handle, MergeHandle};
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
-use crate::sim::machine::CoreCtx;
 use crate::sim::memsys::MemSystem;
 use crate::workloads::graph::{generate, Csr, GraphKind};
 
@@ -227,9 +226,9 @@ impl Workload for PrWorkload {
         l
     }
 
-    fn program(
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         cores: usize,
         variant: Variant,

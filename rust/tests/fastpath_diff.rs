@@ -90,6 +90,167 @@ fn fast_path_is_bit_identical_on_random_streams() {
     );
 }
 
+/// Number of lines that collide in a single L1 set of
+/// [`MachineConfig::test_small`] (1 KiB, 4-way, 64 B lines -> 4 sets),
+/// deliberately larger than the 4 ways so CData lines continuously
+/// evict and the freed ways get reused by *different* CData lines.
+const PRESSURE_LINES: u64 = 12;
+
+/// Byte stride that keeps consecutive stream lines in the same set
+/// (4 sets x 64 B).
+const SET_STRIDE: u64 = 256;
+
+/// Like [`run_stream`], but every CData access lands in one L1 set with
+/// a working set 3x the way count: the pure eviction-pressure regime
+/// where a stale `cdata_slot` way binding would resolve a COp to the
+/// wrong source-buffer slot.
+fn run_pressure_stream(seed: u64, cores: usize, fast: bool) -> (Stats, Vec<u32>, u64) {
+    let cores = cores.max(1);
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = cores;
+    cfg.fast_path = fast;
+    let mut s = MemSystem::new(cfg).unwrap();
+    let cdata = s.alloc_lines(SET_STRIDE * PRESSURE_LINES);
+    for core in 0..cores {
+        s.merge_init(core, 0, handle(AddU32));
+    }
+    let mut rng = Rng::new(seed);
+    let mut cycles = 0u64;
+    for _phase in 0..3 {
+        for _ in 0..300 {
+            let core = rng.usize_below(cores);
+            let a = cdata.add(rng.below(PRESSURE_LINES) * SET_STRIDE);
+            match rng.below(4) {
+                0 => {
+                    let (v, c1) = s.c_read(core, a, 0).unwrap();
+                    let c2 = s.c_write(core, a, v.wrapping_add(1), 0).unwrap();
+                    cycles += c1 + c2;
+                }
+                1 => cycles += s.c_write(core, a, rng.next_u32(), 0).unwrap(),
+                2 => cycles += s.soft_merge(core).unwrap(),
+                _ => cycles += s.c_read(core, a, 0).unwrap().1,
+            }
+            s.check_invariants().unwrap();
+        }
+        for core in 0..cores {
+            cycles += s.merge_all(core).unwrap();
+        }
+    }
+    s.flush_hot_stats();
+    s.check_invariants().unwrap();
+    let memory = (0..PRESSURE_LINES)
+        .map(|i| s.peek(cdata.add(i * SET_STRIDE)))
+        .collect();
+    (s.stats.clone(), memory, cycles)
+}
+
+#[test]
+fn fast_path_is_bit_identical_under_eviction_pressure() {
+    check_diff(
+        0xE71C,
+        8,
+        |rng| (rng.below(u64::MAX), 1 + rng.usize_below(2)),
+        |&(seed, cores)| run_pressure_stream(seed, cores, true),
+        |&(seed, cores)| run_pressure_stream(seed, cores, false),
+    );
+}
+
+/// Regression for the `cdata_slot` stale-binding hazard: merge a CData
+/// line out of a full set, install a *different* CData line into the
+/// freed way, and check the COp fast path resolves the new line's
+/// source-buffer slot (a stale binding would hand back the evicted
+/// line's slot — invariant 6 in `check_invariants` pins this).
+fn way_reuse(fast: bool) -> Vec<u32> {
+    let mut cfg = MachineConfig::test_small();
+    cfg.cores = 1;
+    cfg.fast_path = fast;
+    let mut s = MemSystem::new(cfg).unwrap();
+    let cdata = s.alloc_lines(SET_STRIDE * 5);
+    s.merge_init(0, 0, handle(AddU32));
+    // fill one 4-way set with four CData lines
+    for (i, val) in [10u32, 20, 30, 40].into_iter().enumerate() {
+        s.c_write(0, cdata.add(i as u64 * SET_STRIDE), val, 0).unwrap();
+    }
+    // mark them mergeable so the eviction below merges instead of faulting
+    s.soft_merge(0).unwrap();
+    // the fifth line forces a CData eviction and reuses the freed way
+    let fifth = cdata.add(4 * SET_STRIDE);
+    s.c_write(0, fifth, 50, 0).unwrap();
+    s.check_invariants().unwrap();
+    // the COp must see the new line's slot, not the evicted line's
+    let (v, _) = s.c_read(0, fifth, 0).unwrap();
+    assert_eq!(v, 50, "fast path resolved a stale cdata_slot binding");
+    // the evicted lines re-read their own values (resident or merged)
+    for (i, val) in [10u32, 20, 30, 40].into_iter().enumerate() {
+        let (v, _) = s.c_read(0, cdata.add(i as u64 * SET_STRIDE), 0).unwrap();
+        assert_eq!(v, val, "line {i} lost its update across the way reuse");
+    }
+    s.merge_all(0).unwrap();
+    s.flush_hot_stats();
+    s.check_invariants().unwrap();
+    (0..5).map(|i| s.peek(cdata.add(i * SET_STRIDE))).collect()
+}
+
+#[test]
+fn cdata_way_reuse_resolves_the_new_slot() {
+    assert_eq!(way_reuse(true), vec![10, 20, 30, 40, 50]);
+    assert_eq!(way_reuse(false), vec![10, 20, 30, 40, 50]);
+}
+
+/// Mid-phase stats must be readable without flushing: `stats_snapshot`
+/// folds the fast path's hot counters non-destructively, so a fast-path
+/// engine mid-phase reports exactly what a slow-path engine does — and
+/// asking twice changes nothing.
+#[test]
+fn mid_phase_stats_snapshot_matches_slow_path() {
+    let run = |fast: bool| {
+        let mut cfg = MachineConfig::test_small();
+        cfg.cores = 1;
+        cfg.fast_path = fast;
+        let mut s = MemSystem::new(cfg).unwrap();
+        let cdata = s.alloc_lines(64 * 32);
+        let coh = s.alloc_lines(64 * 32);
+        s.merge_init(0, 0, handle(AddU32));
+        let mut rng = Rng::new(0x57A7);
+        for _ in 0..200 {
+            let line = rng.below(32);
+            match rng.below(3) {
+                0 => {
+                    let a = cdata.add(line * 64);
+                    let (v, _) = s.c_read(0, a, 0).unwrap();
+                    s.c_write(0, a, v.wrapping_add(1), 0).unwrap();
+                }
+                1 => {
+                    s.read(0, coh.add(line * 64)).unwrap();
+                }
+                _ => {
+                    s.write(0, coh.add(line * 64), rng.next_u32()).unwrap();
+                }
+            }
+        }
+        s
+    };
+    let fast = run(true);
+    let slow = run(false);
+    // mid-phase (nothing flushed): the snapshots agree across paths
+    let snap_fast = fast.stats_snapshot();
+    assert_eq!(snap_fast, slow.stats_snapshot());
+    // non-destructive: a second snapshot is identical, and the fold
+    // did not drain the hot counters into the base stats
+    assert_eq!(fast.stats_snapshot(), snap_fast);
+    // the raw (unfolded) fast-path stats really were behind, so the
+    // snapshot is load-bearing, not a tautology
+    assert!(
+        fast.stats.levels[0].hits < snap_fast.levels[0].hits
+            || fast.stats.cops < snap_fast.cops,
+        "fast path kept no hot counters; snapshot test is vacuous"
+    );
+    // a destructive flush lands on the same totals
+    let mut fast = fast;
+    fast.flush_hot_stats();
+    assert_eq!(fast.stats, snap_fast);
+}
+
 /// The same exactness, end-to-end through the execution driver (machine
 /// threads, merge-region registration, golden verification) for every
 /// workload variant the repo ships: CGL, FGL, DUP, CCache, and BFS's

@@ -12,11 +12,10 @@
 //! CI runs this file, so breaking the extension path fails the build.
 
 use ccache::exec::registry::{self, SizeSpec};
-use ccache::exec::{driver, ExecError, Variant, Workload};
+use ccache::exec::{driver, ExecCtx, ExecError, Variant, Workload};
 use ccache::merge::{handle, LineData, MergeFn, MergeHandle, MergeRegistry, LINE_WORDS};
 use ccache::sim::addr::Addr;
 use ccache::sim::config::MachineConfig;
-use ccache::sim::machine::CoreCtx;
 use ccache::sim::memsys::MemSystem;
 use ccache::util::ptest::check_merge_laws;
 
@@ -141,9 +140,9 @@ impl Workload for BrokenSlotWorkload {
         mem.alloc_lines(64)
     }
 
-    fn program(
+    fn program<C: ExecCtx>(
         &self,
-        ctx: &mut CoreCtx,
+        ctx: &mut C,
         core: usize,
         _cores: usize,
         _variant: Variant,

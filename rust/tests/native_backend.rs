@@ -1,0 +1,170 @@
+//! The native-thread execution backend, end to end: every workload
+//! family the registry ships runs its generic [`Workload`] program on
+//! real OS threads (`--backend native`) and lands on the same golden
+//! memory image the sequential reference computes — with the coherent
+//! variants mapped to real atomics/locks and the privatized variants
+//! (dup, ccache) to per-thread buffers merged through the registry's
+//! [`MergeFn`](ccache::merge::MergeFn) handles. A merge fault raised on
+//! a native thread must surface as the same typed `ExecError` the
+//! simulator reports, and the cross-validation grid must agree with the
+//! simulator cell for cell.
+
+use ccache::coordinator::{run_xval, XvalOptions};
+use ccache::exec::registry::{self, SizeSpec};
+use ccache::exec::{driver, Backend, ExecCtx, ExecError, Variant, Workload};
+use ccache::merge::{handle, MergeHandle};
+use ccache::sim::addr::Addr;
+use ccache::sim::config::MachineConfig;
+use ccache::sim::memsys::MemSystem;
+
+fn cfg() -> MachineConfig {
+    MachineConfig::test_small().with_cores(4)
+}
+
+fn build(name: &str) -> ccache::exec::WorkloadHandle {
+    let spec = registry::lookup(name).unwrap_or_else(|e| panic!("{e}"));
+    spec.build(&SizeSpec::new(0.25, cfg().llc().size_bytes, 9))
+}
+
+/// One representative of each of the eight workload families, every
+/// variant it supports, on real threads to golden-verified memory.
+#[test]
+fn all_eight_families_verify_on_native_threads() {
+    let families = [
+        "kvstore",
+        "kmeans",
+        "pagerank-uniform",
+        "bfs-rmat",
+        "histogram",
+        "cms",
+        "bloom",
+        "hll",
+    ];
+    for name in families {
+        let spec = registry::lookup(name).unwrap();
+        let bench = build(name);
+        for &variant in spec.variants {
+            let r = bench
+                .run_on(Backend::Native, variant, cfg())
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", variant.name()));
+            assert!(
+                r.verified,
+                "{name}/{} diverged from golden on the native backend",
+                variant.name()
+            );
+            assert!(r.wall_secs.is_some(), "native run lost its wall clock");
+            assert!(r.ops_total() > 0, "{name}/{} counted no ops", variant.name());
+        }
+    }
+}
+
+/// The coherent mapping really uses atomics and the privatized mapping
+/// really merges: the stats the native machine reports distinguish the
+/// two families.
+#[test]
+fn native_stats_reflect_the_mapping() {
+    let bench = build("histogram");
+    let atomic = bench.run_on(Backend::Native, Variant::Atomic, cfg()).unwrap();
+    assert!(atomic.stats.atomic_rmws > 0, "atomic variant issued no RMWs");
+    assert_eq!(atomic.stats.merges, 0);
+    let ccache = bench.run_on(Backend::Native, Variant::CCache, cfg()).unwrap();
+    assert!(ccache.stats.merges > 0, "ccache variant merged nothing");
+    let fgl = bench.run_on(Backend::Native, Variant::Fgl, cfg()).unwrap();
+    assert!(fgl.stats.lock_acquires > 0, "fgl variant acquired no locks");
+}
+
+/// Minimal workload whose program uses an MFRF slot nothing initialized
+/// (the same shape `tests/merge_registry.rs` uses against the sim).
+struct BrokenSlotWorkload;
+
+impl Workload for BrokenSlotWorkload {
+    type Layout = Addr;
+    type Golden = ();
+
+    fn name(&self) -> String {
+        "broken-slot".into()
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        vec![Variant::CCache]
+    }
+
+    fn footprint(&self) -> u64 {
+        64
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(0, handle(ccache::merge::funcs::AddU32))]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, _variant: Variant, _cores: usize) -> Addr {
+        mem.alloc_lines(64)
+    }
+
+    fn program<C: ExecCtx>(
+        &self,
+        ctx: &mut C,
+        core: usize,
+        _cores: usize,
+        _variant: Variant,
+        layout: &Addr,
+    ) {
+        if core == 0 {
+            ctx.c_read_u32(*layout, 3); // slot 3 was never merge_init'ed
+        } else {
+            ctx.compute(10);
+        }
+    }
+
+    fn golden(&self, _cores: usize) {}
+
+    fn verify(
+        &self,
+        _mem: &mut MemSystem,
+        _layout: &Addr,
+        _golden: &(),
+        _cores: usize,
+    ) -> (bool, Option<f64>) {
+        (true, None)
+    }
+}
+
+/// A merge fault on a native thread is recovered into the same typed
+/// error the simulator produces — not a process abort.
+#[test]
+fn native_merge_fault_is_a_typed_error() {
+    let r = driver::run_on(&BrokenSlotWorkload, Backend::Native, Variant::CCache, cfg());
+    match r {
+        Err(ExecError::MergeFault(fault)) => {
+            assert_eq!(fault.core, 0);
+            assert_eq!(fault.slot, 3);
+        }
+        other => panic!("expected MergeFault, got {other:?}"),
+    }
+}
+
+/// Unsupported variants are rejected before any thread spawns.
+#[test]
+fn native_backend_rejects_unsupported_variants() {
+    let r = driver::run_on(&BrokenSlotWorkload, Backend::Native, Variant::Cgl, cfg());
+    assert!(matches!(
+        r,
+        Err(ExecError::UnsupportedVariant { variant: Variant::Cgl, .. })
+    ));
+}
+
+/// Cross-validation smoke: a registry subset agrees across backends.
+#[test]
+fn xval_subset_agrees_across_backends() {
+    let report = run_xval(&XvalOptions {
+        cores: 2,
+        only: vec!["cms".into(), "hll".into()],
+        ..Default::default()
+    });
+    assert_eq!(report.cells.len(), 9); // cms: 5 variants, hll: 4
+    assert!(
+        report.all_verified(),
+        "backend disagreement: {:?}",
+        report.failures()
+    );
+}
