@@ -13,8 +13,16 @@ use ccache::util::bench::Table;
 
 fn main() {
     let full = scaled_config();
-    let mut half = full.clone();
-    half.llc_mut().size_bytes = full.llc().size_bytes / 2;
+    // Route the halved geometry through the same validation path CLI
+    // configs take: a base LLC whose half has a non-power-of-two set
+    // count (or violates associativity) must be a diagnostic, not a
+    // mis-indexed tag array. `sim/config.rs` pins the rejection cases
+    // next to `half_llc_for_fig7`.
+    let half = full.clone().with_llc_bytes(full.llc().size_bytes / 2);
+    if let Err(e) = half.validate() {
+        eprintln!("fig7: halving the LLC breaks the geometry: {e}");
+        std::process::exit(2);
+    }
 
     let mut t = Table::new(
         "Fig 7 — CCache @ half LLC vs DUP @ full LLC (ws = full LLC)",

@@ -1,0 +1,578 @@
+//! The partition sweep: LLC capacity x partition-ways x policy x
+//! co-runner, CCache variant, over the fig 7 benchmark set. The
+//! experiment behind the tentpole question of reuse-aware way
+//! partitioning: *when does fencing the merge region off from the rest
+//! of the LLC pay for the capacity it takes away?*
+//!
+//! Each cell is one simulated run. The grid crosses:
+//! * **LLC capacity** — full, and (full mode) halved, fig 7 style: the
+//!   working set stays sized against the *full* LLC, so the halved
+//!   cells measure capacity pressure, not a smaller problem;
+//! * **partition mode** — no partition, a static merge region, or the
+//!   reuse-aware controller that resizes the region each epoch
+//!   ([`PartitionPolicy::ReuseAware`]);
+//! * **co-runner** — none, or a cache-hostile streaming scanner
+//!   ([`CorunSpec`]) evicting the workload's shared-level footprint.
+//!   Partitioned cells confine the scanner to the ordinary ways, so the
+//!   merge region's CData survives; unpartitioned cells let it thrash
+//!   everything. The with-co-runner columns are where partitioning is
+//!   expected to win.
+//!
+//! Cells fan out over a scoped worker pool exactly like
+//! [`sweep`](super::sweep) — each cell builds its own machine, so
+//! results are bit-identical to serial execution and `--jobs` changes
+//! wall-clock only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::exec::{CorunSpec, RunResult, Variant, WorkloadHandle};
+use crate::sim::config::MachineConfig;
+use crate::sim::hierarchy::level::PartitionPolicy;
+use crate::util::bench::Table;
+
+use super::experiment::{scaled_config, sized_workload};
+
+/// Working-set fraction of the *base* (full) LLC every cell uses. Kept
+/// below 1.0 so the shared structure fits the full LLC with room for
+/// the merge region — the halved-capacity cells then squeeze it.
+pub const PART_WS_FRAC: f64 = 0.5;
+
+/// Workload cores every cell runs (co-runner cores ride on top).
+pub const PART_WORK_CORES: usize = 4;
+
+/// Default co-runner width for the with-stressor cells.
+pub const PART_CORUN_CORES: usize = 2;
+
+/// The fig 7 benchmark set; `--quick` keeps the first two.
+pub const PART_BENCHES: [&str; 4] = ["kvstore", "kmeans", "pagerank-uniform", "bfs-rmat"];
+
+/// LLC capacity scales; `--quick` keeps the full-capacity column.
+pub const PART_CAPS: [f64; 2] = [1.0, 0.5];
+
+/// How a cell partitions the shared level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartMode {
+    /// No way partition — the pre-partitioning baseline.
+    NoPartition,
+    /// A fixed merge region ([`PartitionPolicy::Static`]).
+    Static,
+    /// The epoch-based controller ([`PartitionPolicy::ReuseAware`]).
+    Reuse,
+}
+
+impl PartMode {
+    pub const ALL: [PartMode; 3] = [PartMode::NoPartition, PartMode::Static, PartMode::Reuse];
+
+    /// Stable CLI/JSON token.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartMode::NoPartition => "none",
+            PartMode::Static => "static",
+            PartMode::Reuse => "reuse",
+        }
+    }
+}
+
+/// Knobs for one partition sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct PartsweepOptions {
+    /// Trim the grid for CI smoke: 2 benchmarks, full capacity only.
+    pub quick: bool,
+    /// Worker threads for the cell grid; 0 = all host cores.
+    pub jobs: usize,
+    pub seed: u64,
+    /// Scanner cores for the with-co-runner cells (0 disables them).
+    pub corun_cores: usize,
+}
+
+impl Default for PartsweepOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            jobs: 0,
+            seed: 42,
+            corun_cores: PART_CORUN_CORES,
+        }
+    }
+}
+
+/// One grid cell: the configuration axes plus the counters the
+/// trajectory record and the CI schema check consume.
+#[derive(Clone, Debug)]
+pub struct PartCell {
+    pub benchmark: String,
+    /// LLC capacity relative to the base machine (1.0 or 0.5).
+    pub cap: f64,
+    /// Partition mode token ([`PartMode::name`]).
+    pub policy: &'static str,
+    /// Configured merge-region ways (0 when unpartitioned).
+    pub ccache_ways: u64,
+    /// Co-runner scanner cores (0 = no stressor).
+    pub corun: usize,
+    /// Workload cycles ([`RunResult::cycles`]; co-runner cores excluded).
+    pub cycles: u64,
+    pub verified: bool,
+    pub ways_min: u64,
+    pub ways_max: u64,
+    pub ways_final: u64,
+    pub repartitions: u64,
+    pub ccache_l1_hits: u64,
+    pub ccache_fills: u64,
+    pub llc_misses: u64,
+}
+
+impl PartCell {
+    fn from_run(
+        benchmark: &str,
+        cap: f64,
+        mode: PartMode,
+        ccache_ways: usize,
+        corun: usize,
+        r: &RunResult,
+    ) -> Self {
+        Self {
+            benchmark: benchmark.to_string(),
+            cap,
+            policy: mode.name(),
+            ccache_ways: ccache_ways as u64,
+            corun,
+            cycles: r.cycles(),
+            verified: r.verified,
+            ways_min: r.stats.partition_ways_min,
+            ways_max: r.stats.partition_ways_max,
+            ways_final: r.stats.partition_ways_final,
+            repartitions: r.stats.repartitions,
+            ccache_l1_hits: r.stats.ccache_l1_hits,
+            ccache_fills: r.stats.ccache_fills,
+            llc_misses: r.stats.llc().misses,
+        }
+    }
+}
+
+/// A completed partition sweep.
+#[derive(Clone, Debug)]
+pub struct PartsweepResult {
+    /// Base (full-capacity) LLC bytes cells were sized against.
+    pub llc_bytes: usize,
+    pub work_cores: usize,
+    pub seed: u64,
+    pub cells: Vec<PartCell>,
+    pub wall_clock_ms: f64,
+    pub jobs: usize,
+}
+
+impl PartsweepResult {
+    /// With-co-runner cells where the reuse-aware partition beats the
+    /// unpartitioned baseline outright (strictly fewer cycles on the
+    /// same benchmark/capacity/co-runner axes) — the sweep's headline.
+    pub fn reuse_wins_under_corun(&self) -> Vec<&PartCell> {
+        self.cells
+            .iter()
+            .filter(|c| c.corun > 0 && c.policy == "reuse")
+            .filter(|reuse| {
+                self.cells.iter().any(|base| {
+                    base.policy == "none"
+                        && base.benchmark == reuse.benchmark
+                        && base.cap == reuse.cap
+                        && base.corun == reuse.corun
+                        && reuse.cycles < base.cycles
+                })
+            })
+            .collect()
+    }
+
+    /// Hand-rolled JSON (serde is unavailable offline), one object per
+    /// cell under a top-level `"partsweep"` key. Shape is pinned by the
+    /// CI `partsweep-smoke` schema check.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n  \"partsweep\": {\n");
+        out.push_str(&format!("    \"llc_bytes\": {},\n", self.llc_bytes));
+        out.push_str(&format!("    \"work_cores\": {},\n", self.work_cores));
+        out.push_str(&format!("    \"ws_frac\": {:.2},\n", PART_WS_FRAC));
+        out.push_str(&format!("    \"seed\": {},\n", self.seed));
+        out.push_str(&format!("    \"jobs\": {},\n", self.jobs));
+        out.push_str(&format!(
+            "    \"wall_clock_ms\": {:.1},\n",
+            self.wall_clock_ms
+        ));
+        out.push_str(&format!(
+            "    \"reuse_wins_under_corun\": {},\n",
+            self.reuse_wins_under_corun().len()
+        ));
+        out.push_str("    \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "      {{\"benchmark\": \"{}\", \"cap\": {:.2}, \"policy\": \"{}\", \
+                 \"ccache_ways\": {}, \"corun\": {}, \"cycles\": {}, \"verified\": {}, \
+                 \"ways_min\": {}, \"ways_max\": {}, \"ways_final\": {}, \
+                 \"repartitions\": {}, \"ccache_l1_hits\": {}, \"ccache_fills\": {}, \
+                 \"llc_misses\": {}}}",
+                c.benchmark,
+                c.cap,
+                c.policy,
+                c.ccache_ways,
+                c.corun,
+                c.cycles,
+                c.verified,
+                c.ways_min,
+                c.ways_max,
+                c.ways_final,
+                c.repartitions,
+                c.ccache_l1_hits,
+                c.ccache_fills,
+                c.llc_misses
+            ));
+        }
+        out.push_str("\n    ]\n  }\n}\n");
+        out
+    }
+
+    /// The grid as a paper-style ASCII table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "partsweep — CCache cycles by LLC capacity / partition / co-runner",
+            &[
+                "benchmark",
+                "cap",
+                "policy",
+                "ways",
+                "corun",
+                "Mcyc",
+                "llc miss",
+                "repart",
+                "final",
+            ],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.benchmark.clone(),
+                format!("{:.2}", c.cap),
+                c.policy.to_string(),
+                if c.ccache_ways == 0 {
+                    "-".into()
+                } else {
+                    c.ccache_ways.to_string()
+                },
+                c.corun.to_string(),
+                format!("{:.2}", c.cycles as f64 / 1e6),
+                c.llc_misses.to_string(),
+                c.repartitions.to_string(),
+                if c.ccache_ways == 0 {
+                    "-".into()
+                } else {
+                    c.ways_final.to_string()
+                },
+            ]);
+        }
+        t
+    }
+}
+
+/// Initial merge-region width for a partitioned cell: a quarter of the
+/// LLC's ways (4 of 16 on the Table 2 shape), the static column's fixed
+/// width and the reuse-aware controller's starting point.
+fn init_ways(cfg: &MachineConfig) -> usize {
+    (cfg.llc().ways / 4).max(1)
+}
+
+/// The machine one cell runs on: base geometry, scaled LLC capacity,
+/// partition mode. Halved capacities reuse the fig 7 validation path —
+/// a geometry the shrink breaks is a panic here, not a mis-indexed run.
+fn cell_config(base: &MachineConfig, cap: f64, mode: PartMode) -> MachineConfig {
+    let mut cfg = base.clone();
+    if cap != 1.0 {
+        cfg = cfg.with_llc_bytes((base.llc().size_bytes as f64 * cap) as usize);
+    }
+    cfg = match mode {
+        PartMode::NoPartition => cfg,
+        PartMode::Static => {
+            let w = init_ways(&cfg);
+            cfg.with_partition(w, PartitionPolicy::Static)
+        }
+        PartMode::Reuse => {
+            let w = init_ways(&cfg);
+            cfg.with_partition(w, PartitionPolicy::ReuseAware)
+        }
+    };
+    cfg.validate().unwrap_or_else(|e| panic!("{e}"));
+    cfg
+}
+
+/// Run the partition sweep on the scaled bench machine.
+pub fn run_partsweep(opts: PartsweepOptions) -> PartsweepResult {
+    let mut base = scaled_config();
+    base.cores = PART_WORK_CORES;
+    run_partsweep_on(base, opts)
+}
+
+/// [`run_partsweep`] on an explicit base machine (tests use the small
+/// config; `base.cores` is the workload core count).
+pub fn run_partsweep_on(base: MachineConfig, opts: PartsweepOptions) -> PartsweepResult {
+    base.validate().unwrap_or_else(|e| panic!("{e}"));
+    let t0 = Instant::now();
+    let benches: &[&str] = if opts.quick {
+        &PART_BENCHES[..2]
+    } else {
+        &PART_BENCHES
+    };
+    let caps: &[f64] = if opts.quick { &PART_CAPS[..1] } else { &PART_CAPS };
+    let coruns: Vec<usize> = if opts.corun_cores == 0 {
+        vec![0]
+    } else {
+        vec![0, opts.corun_cores]
+    };
+
+    // one sized instance per benchmark — the working set tracks the
+    // *base* LLC so halved-capacity cells measure pressure, not a
+    // smaller problem (fig 7's methodology)
+    let handles: Vec<(&str, WorkloadHandle)> = benches
+        .iter()
+        .map(|&name| {
+            (
+                name,
+                sized_workload(name, PART_WS_FRAC, base.llc().size_bytes, opts.seed),
+            )
+        })
+        .collect();
+
+    // the independent cell grid, benchmark-major
+    struct CellSpec<'a> {
+        name: &'a str,
+        bench: &'a WorkloadHandle,
+        cap: f64,
+        mode: PartMode,
+        ways: usize,
+        corun: usize,
+        cfg: MachineConfig,
+    }
+    let cells: Vec<CellSpec> = handles
+        .iter()
+        .flat_map(|(name, bench)| {
+            let name: &str = name;
+            let base = &base;
+            let coruns = &coruns;
+            caps.iter().flat_map(move |&cap| {
+                PartMode::ALL.iter().flat_map(move |&mode| {
+                    coruns.iter().map(move |&corun| {
+                        let cfg = cell_config(base, cap, mode);
+                        let ways = match mode {
+                            PartMode::NoPartition => 0,
+                            _ => init_ways(&cfg),
+                        };
+                        CellSpec {
+                            name,
+                            bench,
+                            cap,
+                            mode,
+                            ways,
+                            corun,
+                            cfg,
+                        }
+                    })
+                })
+            })
+        })
+        .collect();
+
+    let run_cell = |spec: &CellSpec| -> RunResult {
+        let corun = (spec.corun > 0).then(|| CorunSpec::new(spec.corun));
+        spec.bench
+            .run_corun(Variant::CCache, spec.cfg.clone(), corun)
+            .unwrap_or_else(|e| panic!("partsweep {}: {e}", spec.name))
+    };
+
+    let jobs = effective_jobs(opts.jobs, cells.len());
+    let results: Vec<RunResult> = if jobs <= 1 {
+        cells.iter().map(run_cell).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<RunResult>>> = Mutex::new(vec![None; cells.len()]);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let r = run_cell(&cells[i]);
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every cell completed"))
+            .collect()
+    };
+
+    let out_cells: Vec<PartCell> = cells
+        .iter()
+        .zip(&results)
+        .map(|(spec, r)| {
+            assert!(
+                r.verified,
+                "partsweep {}/{}/corun{} diverged from the golden run",
+                spec.name,
+                spec.mode.name(),
+                spec.corun
+            );
+            PartCell::from_run(spec.name, spec.cap, spec.mode, spec.ways, spec.corun, r)
+        })
+        .collect();
+
+    PartsweepResult {
+        llc_bytes: base.llc().size_bytes,
+        work_cores: base.cores,
+        seed: opts.seed,
+        cells: out_cells,
+        wall_clock_ms: t0.elapsed().as_secs_f64() * 1e3,
+        jobs,
+    }
+}
+
+fn effective_jobs(requested: usize, cells: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = if requested == 0 { auto } else { requested };
+    j.clamp(1, cells.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> PartsweepOptions {
+        PartsweepOptions {
+            quick: true,
+            jobs: 0,
+            seed: 42,
+            corun_cores: 2,
+        }
+    }
+
+    fn small_base() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn quick_grid_covers_every_axis_combination() {
+        let r = run_partsweep_on(small_base(), small_opts());
+        // 2 benchmarks x 1 capacity x 3 modes x 2 co-runner widths
+        assert_eq!(r.cells.len(), 12);
+        assert!(r.cells.iter().all(|c| c.verified));
+        for policy in ["none", "static", "reuse"] {
+            assert!(r.cells.iter().any(|c| c.policy == policy));
+        }
+        assert!(r.cells.iter().any(|c| c.corun == 2));
+        assert!(r.cells.iter().any(|c| c.corun == 0));
+        // unpartitioned cells carry no partition telemetry
+        for c in r.cells.iter().filter(|c| c.policy == "none") {
+            assert_eq!((c.ccache_ways, c.ways_max, c.repartitions), (0, 0, 0));
+        }
+        // partitioned cells report the configured region
+        for c in r.cells.iter().filter(|c| c.policy == "static") {
+            assert_eq!(c.ccache_ways, 2); // 8-way small LLC / 4
+            assert_eq!(c.ways_final, c.ccache_ways);
+            assert_eq!(c.repartitions, 0, "static partitions never move");
+        }
+    }
+
+    #[test]
+    fn corun_interference_costs_cycles() {
+        let r = run_partsweep_on(small_base(), small_opts());
+        // the stressor must actually stress: for every benchmark, the
+        // unpartitioned with-co-runner cell is slower than the quiet one
+        for name in ["kvstore", "kmeans"] {
+            let cell = |corun: usize| {
+                r.cells
+                    .iter()
+                    .find(|c| c.benchmark == name && c.policy == "none" && c.corun == corun)
+                    .unwrap()
+            };
+            assert!(
+                cell(2).cycles > cell(0).cycles,
+                "{name}: corun cell not slower ({} <= {})",
+                cell(2).cycles,
+                cell(0).cycles
+            );
+        }
+    }
+
+    #[test]
+    fn reuse_beats_no_partition_under_the_corun_stressor() {
+        // the tentpole acceptance cell: with a scanner thrashing the
+        // LLC, fencing the merge region must win outright somewhere
+        let r = run_partsweep_on(small_base(), small_opts());
+        let wins = r.reuse_wins_under_corun();
+        assert!(
+            !wins.is_empty(),
+            "no corun cell where reuse-aware beats no-partition:\n{}",
+            r.table().render()
+        );
+    }
+
+    #[test]
+    fn json_shape_is_stable_for_the_ci_schema_check() {
+        let mut opts = small_opts();
+        opts.jobs = 1;
+        let r = run_partsweep_on(small_base(), opts);
+        let j = r.to_json();
+        assert!(j.contains("\"partsweep\""), "{j}");
+        for key in [
+            "\"benchmark\"",
+            "\"cap\"",
+            "\"policy\"",
+            "\"ccache_ways\"",
+            "\"corun\"",
+            "\"cycles\"",
+            "\"verified\"",
+            "\"ways_min\"",
+            "\"ways_max\"",
+            "\"ways_final\"",
+            "\"repartitions\"",
+            "\"ccache_l1_hits\"",
+            "\"ccache_fills\"",
+            "\"llc_misses\"",
+            "\"reuse_wins_under_corun\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
+    }
+
+    #[test]
+    fn parallel_cells_match_serial_cell_for_cell() {
+        let serial = run_partsweep_on(small_base(), PartsweepOptions {
+            jobs: 1,
+            ..small_opts()
+        });
+        let parallel = run_partsweep_on(small_base(), PartsweepOptions {
+            jobs: 4,
+            ..small_opts()
+        });
+        assert_eq!(serial.cells.len(), parallel.cells.len());
+        for (s, p) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(s.benchmark, p.benchmark);
+            assert_eq!(s.cycles, p.cycles, "cycles diverged under --jobs");
+            assert_eq!(s.repartitions, p.repartitions);
+            assert_eq!(s.llc_misses, p.llc_misses);
+        }
+    }
+
+    #[test]
+    fn mode_tokens_are_stable() {
+        assert_eq!(PartMode::NoPartition.name(), "none");
+        assert_eq!(PartMode::Static.name(), "static");
+        assert_eq!(PartMode::Reuse.name(), "reuse");
+    }
+}

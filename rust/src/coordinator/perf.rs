@@ -12,15 +12,16 @@
 use std::time::Instant;
 
 use crate::exec::registry::{self, SizeSpec};
-use crate::exec::{Backend, Variant};
+use crate::exec::{Backend, CorunSpec, Variant};
 use crate::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
 use crate::merge::funcs::AddU32;
 use crate::merge::handle;
 use crate::sim::addr::Addr;
 use crate::sim::config::MachineConfig;
+use crate::sim::hierarchy::level::PartitionPolicy;
 use crate::sim::machine::{CoreCtx, Machine};
 use crate::sim::memsys::MemSystem;
-use crate::util::bench::{time, BenchReport, NativeResult, ScenarioResult};
+use crate::util::bench::{time, BenchReport, NativeResult, PartitionResult, ScenarioResult};
 
 use super::experiment::scaled_config;
 
@@ -237,6 +238,48 @@ fn native_section(quick: bool) -> Vec<NativeResult> {
     out
 }
 
+/// LLC-partition cells for the trajectory record: kvstore and kmeans
+/// under the CCache variant with the streaming co-runner attached, once
+/// unpartitioned and once with the reuse-aware controller. Runs in
+/// quick mode too — the partitioned-vs-not cycle delta under
+/// interference is the number `partsweep` exists to track, and the
+/// trajectory should carry it from the first record on.
+fn partition_section(quick: bool) -> Vec<PartitionResult> {
+    let cfg = MachineConfig::test_small().with_cores(2);
+    let frac = if quick { 0.25 } else { 0.5 };
+    let init_ways = (cfg.llc().ways / 4).max(1);
+    let mut out = Vec::new();
+    for name in ["kvstore", "kmeans"] {
+        let spec = registry::lookup(name).expect("registered workload");
+        let bench = spec.build(&SizeSpec::new(frac, cfg.llc().size_bytes, 42));
+        let cells = [
+            ("none", cfg.clone()),
+            (
+                "reuse",
+                cfg.clone()
+                    .with_partition(init_ways, PartitionPolicy::ReuseAware),
+            ),
+        ];
+        for (policy, pcfg) in cells {
+            let r = bench
+                .run_corun(Variant::CCache, pcfg, Some(CorunSpec::new(2)))
+                .expect("partition cell runs");
+            out.push(PartitionResult {
+                name: name.into(),
+                policy: policy.into(),
+                corun: 2,
+                cycles: r.cycles(),
+                ways_min: r.stats.partition_ways_min,
+                ways_max: r.stats.partition_ways_max,
+                ways_final: r.stats.partition_ways_final,
+                repartitions: r.stats.repartitions,
+                verified: r.verified,
+            });
+        }
+    }
+    out
+}
+
 /// Run the whole suite.
 pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     let div = if opts.quick { 20 } else { 1 };
@@ -286,6 +329,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
 
     scenarios.push(sweep_cell(opts.quick));
     let native = native_section(opts.quick);
+    let partition = partition_section(opts.quick);
 
     BenchReport {
         bench_id: opts.bench_id.clone(),
@@ -295,6 +339,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
         note: String::new(),
         scenarios,
         native,
+        partition,
     }
 }
 
@@ -319,6 +364,25 @@ mod tests {
         assert_eq!(s.ops, 64);
         assert!(s.slow_mops.is_some());
         assert!(s.speedup().is_some());
+    }
+
+    #[test]
+    fn partition_section_covers_both_policies_per_workload() {
+        let rows = partition_section(true);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.verified, "{}-{} diverged under the co-runner", r.name, r.policy);
+            assert!(r.cycles > 0);
+            assert_eq!(r.corun, 2);
+        }
+        // unpartitioned cells carry no way telemetry; reuse cells do
+        for r in rows.iter().filter(|r| r.policy == "none") {
+            assert_eq!((r.ways_min, r.ways_max, r.ways_final, r.repartitions), (0, 0, 0, 0));
+        }
+        for r in rows.iter().filter(|r| r.policy == "reuse") {
+            assert!(r.ways_max >= 1, "{}: no partition telemetry", r.name);
+            assert!(r.ways_min >= 1);
+        }
     }
 
     #[test]

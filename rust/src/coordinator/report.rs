@@ -132,6 +132,8 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                  \"ccache_fills\": {}, \"approx_drops\": {}, \
                  \"atomic_rmws\": {}, \"barriers\": {}, \"llc_misses\": {}, \
                  \"directory_msgs\": {}, \"invalidations\": {}, \
+                 \"partition_ways_min\": {}, \"partition_ways_max\": {}, \
+                 \"partition_ways_final\": {}, \"repartitions\": {}, \
                  \"quality\": {}, \"speedup_vs_fgl\": {}}}",
                 p.frac,
                 json_str(r.variant.name()),
@@ -149,6 +151,10 @@ pub fn sweep_json(sweep: &SweepResult, cfg: &MachineConfig) -> String {
                 r.stats.llc().misses,
                 r.stats.directory_msgs,
                 r.stats.invalidations,
+                r.stats.partition_ways_min,
+                r.stats.partition_ways_max,
+                r.stats.partition_ways_final,
+                r.stats.repartitions,
                 quality,
                 speedup
             ));
@@ -221,6 +227,16 @@ mod tests {
             "\"approx_drops\"",
             "\"atomic_rmws\"",
             "\"barriers\"",
+        ] {
+            assert!(j.contains(key), "cell record missing {key}: {j}");
+        }
+        // LLC partition telemetry rides on every cell; an unpartitioned
+        // sweep reports zeros, never omits the keys
+        for key in [
+            "\"partition_ways_min\": 0",
+            "\"partition_ways_max\": 0",
+            "\"partition_ways_final\": 0",
+            "\"repartitions\": 0",
         ] {
             assert!(j.contains(key), "cell record missing {key}: {j}");
         }

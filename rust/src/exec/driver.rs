@@ -11,6 +11,7 @@
 
 use crate::merge::MergeHandle;
 use crate::runtime::native::{NativeCtx, NativeMachine};
+use crate::sim::addr::LINE_BYTES;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::{CoreCtx, Machine};
 use crate::sim::memsys::MemSystem;
@@ -19,7 +20,13 @@ use crate::sim::stats::Stats;
 use super::ctx::ExecCtx;
 use super::error::ExecError;
 use super::workload::Workload;
-use super::{Backend, RunResult, Variant};
+use super::{Backend, CorunSpec, RunResult, Variant};
+
+/// Lines each co-runner core streams through between polls of the
+/// workload's done counter: long enough that the scan dominates the
+/// scanner's traffic, short enough that scanners retire promptly once
+/// the workload finishes.
+const CORUN_SCAN_BATCH: usize = 64;
 
 pub fn run<W: Workload>(
     workload: &W,
@@ -74,6 +81,35 @@ pub fn run_with_merge<W: Workload>(
     cfg: MachineConfig,
     merge_override: Option<MergeHandle>,
 ) -> Result<RunResult, ExecError> {
+    run_sim(workload, variant, cfg, merge_override, None)
+}
+
+/// The simulator path, optionally with a cache-hostile co-runner.
+///
+/// With `corun = Some(spec)` the machine grows `spec.cores` extra cores
+/// that stream a coherent read scan over a buffer larger than the LLC
+/// (allocated *after* the workload's own setup, so workload addresses
+/// are unchanged) for as long as any workload core is still running.
+/// Termination handshake: each workload core bumps a shared done
+/// counter (CAS loop) after its program returns; scanners poll the
+/// counter between scan batches and retire once it reaches the workload
+/// core count. A merge fault on a workload core aborts the machine and
+/// unwinds the scanners with it — the usual sibling-panic recovery path
+/// applies unchanged.
+///
+/// Reported results cover the *workload* cores only: scanner entries
+/// are truncated from `stats.core_cycles`, so `RunResult::cycles()`
+/// (max over cores) measures how much the interference slowed the
+/// workload down, not how long the scanners spun. Without a co-runner
+/// (`None` or zero cores) this is byte-identical to the plain
+/// [`run_with_merge`] path — no extra allocations, no done counter.
+pub fn run_sim<W: Workload>(
+    workload: &W,
+    variant: Variant,
+    cfg: MachineConfig,
+    merge_override: Option<MergeHandle>,
+    corun: Option<CorunSpec>,
+) -> Result<RunResult, ExecError> {
     let supported = workload.supported_variants();
     if !supported.contains(&variant) {
         return Err(ExecError::UnsupportedVariant {
@@ -83,10 +119,29 @@ pub fn run_with_merge<W: Workload>(
         });
     }
 
-    let cores = cfg.cores;
+    let corun = corun.filter(|c| c.cores > 0);
+    let work_cores = cfg.cores;
+    let llc_lines = cfg.llc().size_bytes as u64 / LINE_BYTES;
+    let mut cfg = cfg;
+    if let Some(c) = corun {
+        // scanner cores ride on top of the workload's; an over-wide
+        // machine fails MachineConfig validation below as usual
+        cfg.cores = work_cores + c.cores;
+    }
+    let total_cores = cfg.cores;
     // a malformed machine config surfaces as a typed error, not a panic
     let machine = Machine::new(cfg).map_err(ExecError::from)?;
-    let layout = machine.setup(|mem| workload.setup(mem, variant, cores));
+    let layout = machine.setup(|mem| workload.setup(mem, variant, work_cores));
+    // co-runner scaffolding: the scan buffer and the done counter, laid
+    // out after the workload footprint (scan addr, scan lines, done addr)
+    let corun_layout = corun.map(|c| {
+        machine.setup(|mem| {
+            let lines = c.effective_lines(llc_lines).max(1);
+            let scan = mem.alloc_lines(lines * LINE_BYTES);
+            let done = mem.alloc_lines(LINE_BYTES);
+            (scan, lines, done)
+        })
+    });
     let mut merge_slots = workload.merge_slots();
     if let Some(m) = merge_override {
         for (_, slot_fn) in merge_slots.iter_mut() {
@@ -101,22 +156,52 @@ pub fn run_with_merge<W: Workload>(
         Vec::new()
     };
 
-    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..cores)
+    let programs: Vec<Box<dyn FnOnce(&mut CoreCtx) + Send + '_>> = (0..total_cores)
         .map(|core| {
             let layout = layout.clone();
             let merge_slots = merge_slots.clone();
             let f: Box<dyn FnOnce(&mut CoreCtx) + Send + '_> = Box::new(move |ctx| {
-                if variant == Variant::CCache {
-                    for (slot, f) in merge_slots {
-                        ctx.merge_init(slot, f);
+                if core < work_cores {
+                    if variant == Variant::CCache {
+                        for (slot, f) in merge_slots {
+                            ctx.merge_init(slot, f);
+                        }
+                    }
+                    workload.program(ctx, core, work_cores, variant, &layout);
+                    if let Some((_, _, done)) = corun_layout {
+                        // announce completion so the scanners can retire
+                        loop {
+                            let cur = ctx.read_u32(done);
+                            if ctx.cas_u32(done, cur, cur + 1) {
+                                break;
+                            }
+                        }
+                    }
+                } else {
+                    let (scan, lines, done) = corun_layout
+                        .expect("scanner cores exist only when corun is active");
+                    // stagger scanner start offsets so they don't convoy
+                    // on the same sets
+                    let scanners = (total_cores - work_cores) as u64;
+                    let mut pos = lines * (core - work_cores) as u64 / scanners;
+                    loop {
+                        for _ in 0..CORUN_SCAN_BATCH {
+                            let _ = ctx.read_u32(scan.add(pos * LINE_BYTES));
+                            pos += 1;
+                            if pos >= lines {
+                                pos = 0;
+                            }
+                        }
+                        if ctx.read_u32(done) >= work_cores as u32 {
+                            break;
+                        }
                     }
                 }
-                workload.program(ctx, core, cores, variant, &layout);
             });
             f
         })
         .collect();
-    let stats = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    let mut stats = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         machine.run(programs)
     })) {
         Ok(stats) => stats,
@@ -137,9 +222,16 @@ pub fn run_with_merge<W: Workload>(
     // the quiesced machine before we trust the verification pass
     machine.setup(|mem| mem.check_invariants()).map_err(ExecError::from)?;
 
-    let golden = workload.golden(cores);
+    // scanner cores spin until the last workload core finishes, so
+    // their cycle counts track the scheduler, not the workload — report
+    // workload cores only
+    if corun.is_some() {
+        stats.core_cycles.truncate(work_cores);
+    }
+
+    let golden = workload.golden(work_cores);
     let (verified, quality) =
-        machine.setup(|mem| workload.verify(mem, &layout, &golden, cores));
+        machine.setup(|mem| workload.verify(mem, &layout, &golden, work_cores));
 
     Ok(RunResult {
         benchmark: workload.name(),

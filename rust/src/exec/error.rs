@@ -37,6 +37,9 @@ pub enum ExecError {
     /// failures name the structure, core and line instead of a bare
     /// string.
     Invariant(InvariantViolation),
+    /// The co-runner stressor cannot be applied to this run (native
+    /// backend, or more stressor cores than the machine can add).
+    Corun { reason: String },
 }
 
 impl From<ConfigError> for ExecError {
@@ -87,6 +90,7 @@ impl fmt::Display for ExecError {
             ExecError::InvalidConfig(e) => write!(f, "{e}"),
             ExecError::MergeFault(fault) => write!(f, "{fault}"),
             ExecError::Invariant(v) => write!(f, "{v}"),
+            ExecError::Corun { reason } => write!(f, "co-runner stressor: {reason}"),
         }
     }
 }
@@ -136,6 +140,15 @@ mod tests {
         assert_eq!(e, ExecError::Invariant(v.clone()));
         assert_eq!(e.to_string(), v.to_string());
         assert!(e.to_string().contains("core 1"));
+    }
+
+    #[test]
+    fn corun_rejection_names_the_reason() {
+        let e = ExecError::Corun {
+            reason: "the native backend has no cycle-accurate co-runner model".into(),
+        };
+        assert!(e.to_string().starts_with("co-runner stressor:"), "{e}");
+        assert!(e.to_string().contains("native backend"), "{e}");
     }
 
     #[test]

@@ -64,6 +64,39 @@ impl Backend {
     }
 }
 
+/// A cache-hostile co-runner riding next to a simulated workload: extra
+/// cores running a streaming coherent scan over a buffer larger than
+/// the LLC, evicting the workload's shared-level footprint for as long
+/// as the workload runs. The stressor behind the `partsweep`
+/// with-co-runner cells and the CLI `--corun` flag; only the simulator
+/// backend supports it (native runs measure wall-clock on real cores,
+/// where a synthetic scanner would just measure host scheduling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CorunSpec {
+    /// Cores added to the machine for the scanner (the workload keeps
+    /// its own cores; reported cycles cover workload cores only).
+    pub cores: usize,
+    /// Scan working set in cache lines; 0 derives 2x the LLC's line
+    /// capacity, enough to defeat any LRU retention.
+    pub lines: u64,
+}
+
+impl CorunSpec {
+    pub fn new(cores: usize) -> Self {
+        Self { cores, lines: 0 }
+    }
+
+    /// The scan footprint in lines for a machine whose LLC holds
+    /// `llc_lines` lines.
+    pub fn effective_lines(&self, llc_lines: u64) -> u64 {
+        if self.lines == 0 {
+            llc_lines * 2
+        } else {
+            self.lines
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
     Cgl,

@@ -19,7 +19,7 @@ use crate::sim::memsys::MemSystem;
 
 use super::ctx::ExecCtx;
 use super::error::ExecError;
-use super::{Backend, RunResult, Variant};
+use super::{Backend, CorunSpec, RunResult, Variant};
 
 pub trait Workload: Send + Sync {
     /// Simulated-memory layout produced by [`Workload::setup`] and handed
@@ -110,6 +110,7 @@ pub struct WorkloadHandle {
                 Variant,
                 MachineConfig,
                 Option<MergeHandle>,
+                Option<CorunSpec>,
             ) -> Result<RunResult, ExecError>
             + Send
             + Sync,
@@ -126,8 +127,22 @@ impl WorkloadHandle {
             name,
             variants,
             footprint,
-            runner: Box::new(move |backend, variant, cfg, merge| {
-                super::driver::run_on_with_merge(&*workload, backend, variant, cfg, merge)
+            runner: Box::new(move |backend, variant, cfg, merge, corun| {
+                match backend {
+                    Backend::Sim => {
+                        super::driver::run_sim(&*workload, variant, cfg, merge, corun)
+                    }
+                    Backend::Native => {
+                        if corun.is_some_and(|c| c.cores > 0) {
+                            return Err(ExecError::Corun {
+                                reason: "the native backend has no cycle-accurate \
+                                         co-runner model (use --backend sim)"
+                                    .to_string(),
+                            });
+                        }
+                        super::driver::run_native_with_merge(&*workload, variant, cfg, merge)
+                    }
+                }
             }),
         }
     }
@@ -150,7 +165,20 @@ impl WorkloadHandle {
     }
 
     pub fn run(&self, variant: Variant, cfg: MachineConfig) -> Result<RunResult, ExecError> {
-        (self.runner)(Backend::Sim, variant, cfg, None)
+        (self.runner)(Backend::Sim, variant, cfg, None, None)
+    }
+
+    /// Simulated run with an optional cache-hostile co-runner
+    /// ([`CorunSpec`]): the `--corun N` CLI flag and the partsweep's
+    /// with-co-runner cells. `None` (or zero stressor cores) is
+    /// byte-identical to [`run`](WorkloadHandle::run).
+    pub fn run_corun(
+        &self,
+        variant: Variant,
+        cfg: MachineConfig,
+        corun: Option<CorunSpec>,
+    ) -> Result<RunResult, ExecError> {
+        (self.runner)(Backend::Sim, variant, cfg, None, corun)
     }
 
     /// Run with every MFRF slot's merge function replaced by `merge`
@@ -164,7 +192,7 @@ impl WorkloadHandle {
         cfg: MachineConfig,
         merge: Option<MergeHandle>,
     ) -> Result<RunResult, ExecError> {
-        (self.runner)(Backend::Sim, variant, cfg, merge)
+        (self.runner)(Backend::Sim, variant, cfg, merge, None)
     }
 
     /// Run on an explicit [`Backend`] (`--backend native` takes this
@@ -175,7 +203,21 @@ impl WorkloadHandle {
         variant: Variant,
         cfg: MachineConfig,
     ) -> Result<RunResult, ExecError> {
-        (self.runner)(backend, variant, cfg, None)
+        (self.runner)(backend, variant, cfg, None, None)
+    }
+
+    /// The general form: backend, merge override and co-runner all
+    /// explicit (the CLI `run` path). A co-runner on the native backend
+    /// is rejected with [`ExecError::Corun`].
+    pub fn run_on_with_corun(
+        &self,
+        backend: Backend,
+        variant: Variant,
+        cfg: MachineConfig,
+        merge: Option<MergeHandle>,
+        corun: Option<CorunSpec>,
+    ) -> Result<RunResult, ExecError> {
+        (self.runner)(backend, variant, cfg, merge, corun)
     }
 
     /// [`run_on`](WorkloadHandle::run_on) with a merge override.
@@ -186,6 +228,6 @@ impl WorkloadHandle {
         cfg: MachineConfig,
         merge: Option<MergeHandle>,
     ) -> Result<RunResult, ExecError> {
-        (self.runner)(backend, variant, cfg, merge)
+        (self.runner)(backend, variant, cfg, merge, None)
     }
 }

@@ -2,8 +2,13 @@
 //!
 //! Subcommands:
 //!   run      — run one benchmark/variant, print stats + verification
-//!              (`--backend native` executes on real OS threads)
+//!              (`--backend native` executes on real OS threads;
+//!              `--partition-ways`/`--partition-policy` fence the LLC
+//!              merge region, `--corun N` adds a streaming co-runner)
 //!   sweep    — working-set sweep (Fig 6-style table) for one benchmark
+//!   partsweep— LLC capacity x partition x co-runner grid for the
+//!              CCache variant (`--quick` for CI smoke, `--json` for
+//!              the schema-checked record)
 //!   bench    — perf_hotpath suite: engine throughput with fast/slow
 //!              speedups; `--json BENCH_<n>.json` writes the
 //!              perf-trajectory record (`--quick` for CI smoke)
@@ -41,19 +46,24 @@
 //!   ccache run --bench cms --variant ccache --zipf 0.99 --cms-depth 4
 //!   ccache run --bench hll --variant ccache --hll-p 12
 //!   ccache run --bench kvstore --variant ccache --levels 2 --llc-kb 512
+//!   ccache run --bench kvstore --partition-ways 4 --partition-policy reuse --corun 2
 //!   ccache sweep --bench bloom --jobs 8 --json bloom_sweep.json
+//!   ccache partsweep --quick --json partsweep.json
 //!   ccache bench --quick --json BENCH_smoke.json
 //!   ccache --list-merges
 //!   ccache runtime
 
+use ccache::coordinator::partsweep::{PART_CORUN_CORES, PART_WORK_CORES};
 use ccache::coordinator::{
-    perf, report, run_sweep_with, run_xval, scaled_config, SweepOptions, XvalOptions, WS_FRACTIONS,
+    perf, report, run_partsweep_on, run_sweep_with, run_xval, scaled_config, PartsweepOptions,
+    SweepOptions, XvalOptions, WS_FRACTIONS,
 };
 use ccache::exec::registry::{self, SizeSpec, SketchSpec};
-use ccache::exec::{Backend, ExecError, Variant, WorkloadSpec};
+use ccache::exec::{Backend, CorunSpec, ExecError, Variant, WorkloadSpec};
 use ccache::merge;
 use ccache::merge::MergeRegistry;
 use ccache::sim::config::MachineConfig;
+use ccache::sim::hierarchy::level::PartitionPolicy;
 use ccache::sim::overhead::OverheadModel;
 use ccache::util::cli::Args;
 use ccache::workloads::sketch::register_sketch_merges;
@@ -106,11 +116,14 @@ fn main() {
         .opt("levels", "3", "hierarchy depth: 2 (L1+LLC), 3 (Table 2), 4 (adds an L3)")
         .opt("llc-kb", "0", "override shared LLC size in KiB (0 = config default)")
         .opt("l2-kb", "0", "override L2 size in KiB (0 = default; needs --levels >= 3)")
+        .opt("partition-ways", "0", "run: LLC ways reserved for the merge region (0 = off)")
+        .opt("partition-policy", "static", "run: static|reuse (reuse-aware resizing)")
+        .opt("corun", "0", "streaming co-runner cores (run: 0 = none; partsweep: 0 = default 2)")
         .opt("jobs", "0", "sweep: parallel worker threads (0 = all host cores)")
         .opt("json", "", "sweep/bench: also write machine-readable results to this path")
         .opt("merge", "", "override the installed merge function: name[:param]")
         .opt("bench-id", "dev", "bench: trajectory label for the JSON record (BENCH_<id>.json)")
-        .flag("quick", "bench: cut iteration counts ~20x (CI smoke mode)")
+        .flag("quick", "bench/partsweep: trim the workload grid (CI smoke mode)")
         .flag("list-merges", "list registered merge functions and exit")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
@@ -170,6 +183,15 @@ fn main() {
         }
         cfg.level_mut(1).size_bytes = l2_kb << 10;
     }
+    let part_ways = args.get_usize("partition-ways");
+    let part_policy = match args.get("partition-policy").as_str() {
+        "static" => PartitionPolicy::Static,
+        "reuse" | "reuse-aware" => PartitionPolicy::ReuseAware,
+        other => fail(format!(
+            "unknown --partition-policy '{other}'; use static|reuse"
+        )),
+    };
+    let corun_cores = args.get_usize("corun");
     let zipf_theta = args.get_f64("zipf");
     let hll_p = args.get_usize("hll-p");
     if hll_p != 0 && !(4..=16).contains(&hll_p) {
@@ -223,6 +245,13 @@ fn main() {
                     .with_zipf(zipf_theta)
                     .with_sketch(sketch);
             let bench = spec.build(&size);
+            if part_ways > 0 {
+                cfg = cfg.with_partition(part_ways, part_policy);
+                if let Err(e) = cfg.validate() {
+                    fail(e); // e.g. ways >= LLC associativity -> exit 2
+                }
+            }
+            let corun = (corun_cores > 0).then(|| CorunSpec::new(corun_cores));
             eprintln!(
                 "running {} / {} ({} backend) on {}...",
                 bench.name(),
@@ -230,9 +259,11 @@ fn main() {
                 backend.name(),
                 cfg.describe()
             );
-            let r = match bench.run_on_with_merge(backend, variant, cfg.clone(), merge_override) {
+            let r = match bench.run_on_with_corun(backend, variant, cfg.clone(), merge_override, corun)
+            {
                 Ok(r) => r,
-                // unsupported variant / invalid config / merge fault -> exit 2
+                // unsupported variant / invalid config / merge fault /
+                // co-runner on the native backend -> exit 2
                 Err(e) => fail(e),
             };
             let work = match r.wall_secs {
@@ -277,6 +308,12 @@ fn main() {
             if !args.get("merge").is_empty() {
                 fail("--merge applies to `run` only (sweeps install each workload's own merges)");
             }
+            if part_ways > 0 || corun_cores > 0 {
+                // a partition starves the non-CCache variants' ordinary
+                // ways and a co-runner skews every baseline — the
+                // partition experiment is `partsweep`
+                fail("--partition-ways/--corun apply to `run` and `partsweep`, not `sweep`");
+            }
             if let Err(e) = cfg.validate() {
                 fail(e);
             }
@@ -308,6 +345,50 @@ fn main() {
                 }
             }
         }
+        "partsweep" => {
+            if part_ways > 0 {
+                fail("partsweep crosses its own partition modes; --partition-ways applies to `run`");
+            }
+            if cores == 0 {
+                cfg.cores = PART_WORK_CORES;
+            }
+            if let Err(e) = cfg.validate() {
+                fail(e);
+            }
+            let opts = PartsweepOptions {
+                quick: args.has("quick"),
+                jobs: args.get_usize("jobs"),
+                seed: args.get_u64("seed"),
+                corun_cores: if corun_cores == 0 {
+                    PART_CORUN_CORES
+                } else {
+                    corun_cores
+                },
+            };
+            eprintln!(
+                "partition sweep on {} ({} workload cores{})...",
+                cfg.describe(),
+                cfg.cores,
+                if opts.quick { ", quick grid" } else { "" }
+            );
+            let r = run_partsweep_on(cfg.clone(), opts);
+            r.table().print();
+            println!(
+                "({} cells in {:.0} ms on {} jobs; reuse-aware beats no-partition on {} \
+                 co-runner cell(s))",
+                r.cells.len(),
+                r.wall_clock_ms,
+                r.jobs,
+                r.reuse_wins_under_corun().len()
+            );
+            let json_path = args.get("json");
+            if !json_path.is_empty() {
+                match std::fs::write(&json_path, r.to_json()) {
+                    Ok(()) => eprintln!("wrote {json_path}"),
+                    Err(e) => fail(format!("writing {json_path}: {e}")),
+                }
+            }
+        }
         "bench" => {
             let bench_report = perf::run_suite(&perf::SuiteOptions {
                 quick: args.has("quick"),
@@ -315,6 +396,7 @@ fn main() {
             });
             bench_report.table().print();
             bench_report.native_table().print();
+            bench_report.partition_table().print();
             println!(
                 "(suite wall clock {:.1} s{})",
                 bench_report.wall_clock_secs,
@@ -408,7 +490,9 @@ fn main() {
             }
         }
         other => {
-            eprintln!("unknown command {other}; use run|sweep|bench|xval|overhead|runtime|list");
+            eprintln!(
+                "unknown command {other}; use run|sweep|partsweep|bench|xval|overhead|runtime|list"
+            );
             std::process::exit(2);
         }
     }

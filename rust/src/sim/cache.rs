@@ -236,6 +236,38 @@ impl Cache {
         Victim::Deadlock
     }
 
+    /// Pick a victim way for inserting `line`, restricted to the way
+    /// positions set in `way_mask` (bit `p` allows way position `p` of
+    /// the set). The shared-level way partition routes CData installs to
+    /// the merge-region ways and coherent installs to the rest; within
+    /// the allowed ways every valid line is evictable — the shared level
+    /// holds no pinned CData, the F_CCACHE bit there is a class tag, not
+    /// a pin. Returns `Deadlock` only for an empty mask (prevented by
+    /// config validation).
+    pub fn choose_victim_masked(&self, line: Line, way_mask: u64) -> Victim {
+        let start = self.set_index(line) * self.ways;
+        let mut best: Option<usize> = None;
+        for p in 0..self.ways {
+            if way_mask & (1u64 << p) == 0 {
+                continue;
+            }
+            let i = start + p;
+            if self.tags[i] == TAG_NONE {
+                return Victim::Free { way: i };
+            }
+            if best.map_or(true, |b| self.lru[i] < self.lru[b]) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => Victim::Evict {
+                way: i,
+                meta: self.meta(i),
+            },
+            None => Victim::Deadlock,
+        }
+    }
+
     /// Install `line` into slot `idx` (obtained from `choose_victim`),
     /// resetting all MESI/CCache metadata and marking it MRU.
     pub fn install(&mut self, idx: usize, line: Line) {
@@ -433,6 +465,55 @@ mod tests {
             Victim::Evict { meta, .. } => assert_eq!(meta.line, l(1)),
             v => panic!("{v:?}"),
         }
+    }
+
+    #[test]
+    fn masked_victims_stay_inside_the_mask() {
+        let mut c = Cache::new(1, 4);
+        for i in 0..4 {
+            install_free(&mut c, l(i));
+        }
+        // make way 0 the globally-LRU line, then exclude it: the masked
+        // chooser must pick the LRU way *inside* the mask (way 2)
+        c.lookup(l(1));
+        c.lookup(l(3));
+        c.lookup(l(2)); // LRU order now: 0 < 1 < 3 < 2
+        match c.choose_victim_masked(l(9), 0b1100) {
+            Victim::Evict { way, meta } => {
+                assert_eq!(way % 4, 3, "LRU of ways {{2,3}} is way 3 (line 3)");
+                assert_eq!(meta.line, l(3));
+            }
+            v => panic!("{v:?}"),
+        }
+        // the unmasked chooser would have evicted way 0
+        match c.choose_victim(l(9)) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(0)),
+            v => panic!("{v:?}"),
+        }
+    }
+
+    #[test]
+    fn masked_chooser_prefers_free_ways_and_ignores_ccache_pinning() {
+        let mut c = Cache::new(1, 4);
+        // ways 0,1 valid CData-tagged (non-mergeable — the plain chooser
+        // would treat them as pinned); ways 2,3 free
+        for i in 0..2 {
+            let w = install_free(&mut c, l(i));
+            c.set_ccache(w, true);
+        }
+        // free way inside the mask wins
+        match c.choose_victim_masked(l(9), 0b0111) {
+            Victim::Free { way } => assert_eq!(way % 4, 2),
+            v => panic!("{v:?}"),
+        }
+        // mask covering only CData-tagged ways still evicts: at the
+        // shared level F_CCACHE is a class tag, not a pin
+        match c.choose_victim_masked(l(9), 0b0011) {
+            Victim::Evict { meta, .. } => assert_eq!(meta.line, l(0)),
+            v => panic!("{v:?}"),
+        }
+        // empty mask is the only Deadlock
+        assert_eq!(c.choose_victim_masked(l(9), 0), Victim::Deadlock);
     }
 
     #[test]

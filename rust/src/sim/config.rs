@@ -10,7 +10,7 @@
 
 use std::fmt;
 
-use super::hierarchy::level::LevelConfig;
+use super::hierarchy::level::{LevelConfig, PartitionPolicy};
 use super::hierarchy::timing::Timing;
 
 /// Why a machine configuration is illegal. Produced by
@@ -22,6 +22,8 @@ pub enum ConfigError {
     Level { level: String, reason: String },
     /// The level stack itself is malformed.
     Hierarchy { reason: String },
+    /// A merge-region way partition is misplaced or mis-sized.
+    Partition { level: String, reason: String },
     Cores { cores: usize },
     MfrfSlots { slots: usize },
     MemBytes { bytes: usize },
@@ -35,6 +37,9 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::Hierarchy { reason } => {
                 write!(f, "invalid machine config: hierarchy: {reason}")
+            }
+            ConfigError::Partition { level, reason } => {
+                write!(f, "invalid machine config: {level} partition: {reason}")
             }
             ConfigError::Cores { cores } => {
                 write!(f, "invalid machine config: cores must be in 1..=64, got {cores}")
@@ -212,6 +217,20 @@ impl MachineConfig {
         self
     }
 
+    /// Reserve `ccache_ways` of the shared level's ways for merge-region
+    /// lines under `policy` (`ccache_ways == 0` clears the partition).
+    pub fn with_partition(mut self, ccache_ways: usize, policy: PartitionPolicy) -> Self {
+        self.llc_mut().partition = if ccache_ways == 0 {
+            None
+        } else {
+            Some(crate::sim::hierarchy::level::WayPartition::new(
+                ccache_ways,
+                policy,
+            ))
+        };
+        self
+    }
+
     /// Reshape the hierarchy to `depth` levels, keeping the current
     /// innermost and shared levels:
     /// * 2 — L1 + shared LLC (embedded shape)
@@ -286,6 +305,12 @@ impl MachineConfig {
             let name = self.level_name(i);
             lv.validate(&name)?;
             let is_last = i + 1 == self.levels.len();
+            if lv.partition.is_some() && !is_last {
+                return Err(ConfigError::Partition {
+                    level: name.clone(),
+                    reason: "way partitioning applies to the shared level only".to_string(),
+                });
+            }
             if lv.shared != is_last {
                 return Err(ConfigError::Hierarchy {
                     reason: if is_last {
@@ -340,6 +365,58 @@ mod tests {
         let cfg = MachineConfig::default().with_llc_bytes(2 << 20);
         assert_eq!(cfg.llc().sets(), 2048);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fig7_style_shrinks_must_revalidate_geometry() {
+        // Halving a power-of-two LLC is always legal...
+        MachineConfig::default()
+            .with_llc_bytes((4 << 20) / 2)
+            .validate()
+            .unwrap();
+        // ...but a blind `size_bytes / 2` on an arbitrary base config is
+        // not: a 192 KiB LLC halves to 96 KiB = 96 sets at 16 ways —
+        // not a power of two. The halved config must go through
+        // validate(), which rejects it instead of mis-indexing sets.
+        let odd = MachineConfig::default().with_llc_bytes(192 << 10);
+        assert!(odd.validate().is_err(), "base 192 KiB already invalid");
+        let halved = MachineConfig::default().with_llc_bytes((192 << 10) / 2);
+        assert!(matches!(
+            halved.validate(),
+            Err(ConfigError::Level { .. })
+        ));
+        // And a shrink below ways*64 bytes violates associativity: a
+        // 16-way LLC needs at least 1 KiB (one set).
+        let tiny = MachineConfig::default().with_llc_bytes(512);
+        assert!(matches!(tiny.validate(), Err(ConfigError::Level { .. })));
+    }
+
+    #[test]
+    fn partition_must_sit_on_the_shared_level() {
+        use crate::sim::hierarchy::level::WayPartition;
+        // legal: shared-level partition within associativity
+        let cfg = MachineConfig::default().with_partition(4, PartitionPolicy::ReuseAware);
+        cfg.validate().unwrap();
+        assert_eq!(
+            cfg.llc().partition,
+            Some(WayPartition::new(4, PartitionPolicy::ReuseAware))
+        );
+        // ccache_ways == 0 clears rather than configures
+        let cfg = cfg.with_partition(0, PartitionPolicy::Static);
+        assert_eq!(cfg.llc().partition, None);
+        cfg.validate().unwrap();
+        // a partition on a private level is rejected with a typed error
+        let mut cfg = MachineConfig::default();
+        cfg.level_mut(1).partition = Some(WayPartition::new(2, PartitionPolicy::Static));
+        let err = cfg.validate().unwrap_err();
+        assert!(matches!(err, ConfigError::Partition { .. }), "{err:?}");
+        assert!(err.to_string().contains("shared level only"), "{err}");
+        // and one wider than the associativity is rejected per-level
+        let cfg = MachineConfig::default().with_partition(16, PartitionPolicy::Static);
+        assert!(matches!(
+            cfg.validate(),
+            Err(ConfigError::Partition { .. })
+        ));
     }
 
     #[test]

@@ -10,6 +10,51 @@
 use crate::sim::cache::Cache;
 use crate::sim::config::ConfigError;
 
+/// How the merge-region way partition is sized over a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// The configured `ccache_ways` split is fixed for the whole run.
+    Static,
+    /// An epoch-based controller in the memory system grows/shrinks the
+    /// merge partition one way at a time from the observed CData reuse
+    /// ratio (`ccache_l1_hits` vs `ccache_fills`); `ccache_ways` is the
+    /// initial split.
+    ReuseAware,
+}
+
+impl PartitionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionPolicy::Static => "static",
+            PartitionPolicy::ReuseAware => "reuse",
+        }
+    }
+}
+
+/// Way-partitioning of the shared level between CData (merge-region)
+/// lines and ordinary coherent data. Replacement-only: lookups still
+/// hit across the whole set, but CData installs pick victims inside the
+/// low `ccache_ways` way positions and coherent installs pick victims
+/// outside them, so a streaming co-runner cannot evict the merge
+/// region's LLC footprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WayPartition {
+    /// Ways reserved for merge-region (CData) lines; the remaining
+    /// `ways - ccache_ways` hold ordinary coherent data. Must satisfy
+    /// `1 <= ccache_ways < ways` (validated by the machine config).
+    pub ccache_ways: usize,
+    pub policy: PartitionPolicy,
+}
+
+impl WayPartition {
+    pub const fn new(ccache_ways: usize, policy: PartitionPolicy) -> Self {
+        Self {
+            ccache_ways,
+            policy,
+        }
+    }
+}
+
 /// Declarative description of one hierarchy level (the rows of a
 /// Table 2-style machine spec). Part of
 /// [`MachineConfig::levels`](crate::sim::config::MachineConfig::levels).
@@ -23,6 +68,10 @@ pub struct LevelConfig {
     /// Exactly the last level of a hierarchy is shared; the directory
     /// lives there.
     pub shared: bool,
+    /// Optional merge-region way partition. Only legal on the shared
+    /// level (validated by the machine config); `None` keeps the
+    /// unpartitioned replacement behavior bit-identical to before.
+    pub partition: Option<WayPartition>,
 }
 
 impl LevelConfig {
@@ -32,7 +81,15 @@ impl LevelConfig {
             ways,
             hit_cycles,
             shared,
+            partition: None,
         }
+    }
+
+    /// Builder: reserve `ccache_ways` of this level's ways for
+    /// merge-region lines under `policy`.
+    pub fn with_partition(mut self, ccache_ways: usize, policy: PartitionPolicy) -> Self {
+        self.partition = Some(WayPartition::new(ccache_ways, policy));
+        self
     }
 
     pub fn sets(&self) -> usize {
@@ -63,6 +120,17 @@ impl LevelConfig {
                 level: name.to_string(),
                 reason: format!("sets ({}) not a power of two", self.sets()),
             });
+        }
+        if let Some(p) = self.partition {
+            if p.ccache_ways == 0 || p.ccache_ways >= self.ways {
+                return Err(ConfigError::Partition {
+                    level: name.to_string(),
+                    reason: format!(
+                        "ccache_ways must be in 1..{} (ways), got {}",
+                        self.ways, p.ccache_ways
+                    ),
+                });
+            }
         }
         Ok(())
     }
@@ -146,5 +214,34 @@ mod tests {
         assert!(LevelConfig::new(1000, 8, 4, false).validate("l1").is_err());
         assert!(LevelConfig::new(3 * 64 * 8, 8, 4, false).validate("l1").is_err()); // 3 sets
         assert!(LevelConfig::new(0, 8, 4, false).validate("l1").is_err());
+    }
+
+    #[test]
+    fn partition_ways_must_leave_room_for_both_classes() {
+        let llc = LevelConfig::new(16 << 10, 8, 70, true);
+        // legal splits: 1..=7 of 8 ways
+        for w in 1..8 {
+            llc.with_partition(w, PartitionPolicy::Static)
+                .validate("llc")
+                .unwrap();
+        }
+        // zero ways would starve CData installs; all ways would starve
+        // coherent installs — both rejected with a typed Partition error
+        for w in [0, 8, 9] {
+            let err = llc
+                .with_partition(w, PartitionPolicy::ReuseAware)
+                .validate("llc")
+                .unwrap_err();
+            assert!(
+                matches!(err, ConfigError::Partition { .. }),
+                "ccache_ways={w}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn policy_names_are_stable_cli_tokens() {
+        assert_eq!(PartitionPolicy::Static.name(), "static");
+        assert_eq!(PartitionPolicy::ReuseAware.name(), "reuse");
     }
 }

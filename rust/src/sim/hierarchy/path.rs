@@ -23,9 +23,21 @@ use crate::sim::addr::Line;
 use crate::sim::cache::{Cache, LineMeta, Victim};
 use crate::sim::config::MachineConfig;
 use crate::sim::directory::{CoherenceActions, Directory, DirState};
+use crate::sim::invariant::InvariantViolation;
 use crate::sim::stats::Stats;
 
 use super::level::Level;
+
+/// Low-`n` way-position mask (`n == 64` would overflow the shift; way
+/// counts are validated far below that, but stay total anyway).
+#[inline]
+fn low_ways_mask(n: usize) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
 
 /// Result of the shared portion of a coherent walk: cycles charged plus
 /// the pending innermost-level fill (absent when the access hit
@@ -48,6 +60,12 @@ pub struct AccessPath {
     levels: Vec<Level>,
     dir: Directory,
     mem_cycles: u64,
+    /// Current shared-level merge-region width in ways; `None` when the
+    /// config carries no [`WayPartition`](super::level::WayPartition).
+    /// Mutable at run time — the reuse-aware controller in
+    /// [`MemSystem`](crate::sim::memsys::MemSystem) resizes it through
+    /// [`set_ccache_ways`](Self::set_ccache_ways).
+    ccache_ways: Option<usize>,
 }
 
 impl AccessPath {
@@ -61,7 +79,71 @@ impl AccessPath {
                 .collect(),
             dir: Directory::new(),
             mem_cycles: cfg.timing.mem_cycles,
+            ccache_ways: cfg.llc().partition.map(|p| p.ccache_ways),
         }
+    }
+
+    /// Current merge-region partition width (`None` = unpartitioned).
+    pub fn ccache_ways(&self) -> Option<usize> {
+        self.ccache_ways
+    }
+
+    /// Resize the merge-region partition to `new` ways (partitioned
+    /// configs only; clamped by the caller to `1..llc_ways`). Shrinking
+    /// strands CData-classed lines in way positions now outside the
+    /// merge region; their class tag is cleared so they age out as
+    /// ordinary lines and the partition invariant holds immediately.
+    /// Growing needs no sweep — ordinary lines stranded inside the new
+    /// merge region are evicted naturally by CData installs.
+    pub fn set_ccache_ways(&mut self, new: usize) {
+        let sh = self.shared_index();
+        let ways = self.levels[sh].cfg.ways;
+        debug_assert!(self.ccache_ways.is_some(), "resize on unpartitioned path");
+        debug_assert!(new >= 1 && new < ways, "partition width out of range");
+        let old = self.ccache_ways.unwrap_or(0);
+        if new < old {
+            let cache = self.levels[sh].cache_mut(0);
+            let demoted: Vec<usize> = cache
+                .valid_slots()
+                .filter(|&i| {
+                    let p = i % ways;
+                    p >= new && p < old && cache.is_ccache(i)
+                })
+                .collect();
+            for i in demoted {
+                cache.set_ccache(i, false);
+            }
+        }
+        self.ccache_ways = Some(new);
+    }
+
+    /// Partition invariant (engine invariant 7): with a partition
+    /// active, every CData-classed shared-level line sits at a way
+    /// position inside the merge region; without one, no shared-level
+    /// line is CData-classed at all.
+    pub fn check_partition_invariant(&self) -> Result<(), InvariantViolation> {
+        let sh = self.shared_index();
+        let cache = self.levels[sh].cache(0);
+        let ways = self.levels[sh].cfg.ways;
+        let limit = self.ccache_ways.unwrap_or(0);
+        for i in cache.valid_slots() {
+            if !cache.is_ccache(i) {
+                continue;
+            }
+            let p = i % ways;
+            if p >= limit {
+                let line = cache.meta(i).line;
+                return Err(InvariantViolation::partition(
+                    line.0,
+                    if limit == 0 {
+                        format!("CData-classed LLC line in way {p} with no partition configured")
+                    } else {
+                        format!("CData-classed LLC line in way {p}, merge region is 0..{limit}")
+                    },
+                ));
+            }
+        }
+        Ok(())
     }
 
     pub fn depth(&self) -> usize {
@@ -202,7 +284,7 @@ impl AccessPath {
         }
         self.apply_actions(core, line, &act, stats);
 
-        if !self.fetch_shared(line, stats) {
+        if !self.fetch_shared(line, false, stats) {
             cycles += self.mem_cycles;
         }
 
@@ -416,9 +498,13 @@ impl AccessPath {
     // ------------------------------------------------------------------
 
     /// Look `line` up in the shared level, installing it (with an
-    /// inclusive recall of any victim) on a miss. Returns whether it hit;
-    /// the caller charges memory latency on a miss.
-    pub fn fetch_shared(&mut self, line: Line, stats: &mut Stats) -> bool {
+    /// inclusive recall of any victim) on a miss. `cdata` classifies the
+    /// access for the way partition: `true` for merge-region
+    /// (privatization) fetches, `false` for coherent ones. Lookups hit
+    /// across the whole set regardless — only a miss's victim choice is
+    /// partitioned. Returns whether it hit; the caller charges memory
+    /// latency on a miss.
+    pub fn fetch_shared(&mut self, line: Line, cdata: bool, stats: &mut Stats) -> bool {
         let sh = self.shared_index();
         if self.levels[sh].cache_mut(0).lookup(line).is_some() {
             stats.levels[sh].hits += 1;
@@ -426,19 +512,37 @@ impl AccessPath {
         } else {
             stats.levels[sh].misses += 1;
             stats.mem_accesses += 1;
-            self.install_shared(line, stats);
+            self.install_shared(line, cdata, stats);
             false
         }
     }
 
     /// Install `line` into the shared level; an evicted victim triggers
-    /// an inclusive recall killing every private copy.
-    fn install_shared(&mut self, line: Line, stats: &mut Stats) {
+    /// an inclusive recall killing every private copy. With a partition
+    /// active, CData installs pick victims inside the merge-region way
+    /// mask and coherent installs outside it, and the installed line is
+    /// class-tagged (F_CCACHE at this level is the partition's class
+    /// tag, never a pin). Without a partition the byte-identical
+    /// pre-partitioning behavior runs: plain LRU choice, no tagging.
+    fn install_shared(&mut self, line: Line, cdata: bool, stats: &mut Stats) {
         let sh = self.shared_index();
         if self.levels[sh].cache(0).probe(line).is_some() {
             return;
         }
-        let way = match self.levels[sh].cache(0).choose_victim(line) {
+        let victim = match self.ccache_ways {
+            None => self.levels[sh].cache(0).choose_victim(line),
+            Some(cw) => {
+                let ways = self.levels[sh].cfg.ways;
+                let merge_mask = low_ways_mask(cw);
+                let mask = if cdata {
+                    merge_mask
+                } else {
+                    low_ways_mask(ways) & !merge_mask
+                };
+                self.levels[sh].cache(0).choose_victim_masked(line, mask)
+            }
+        };
+        let way = match victim {
             Victim::Free { way } => way,
             Victim::Evict { way, meta } => {
                 let (_, act) = self.dir.recall(meta.line);
@@ -460,9 +564,14 @@ impl AccessPath {
                 }
                 way
             }
-            Victim::Deadlock => unreachable!("the shared level holds no pinned CData"),
+            Victim::Deadlock => unreachable!(
+                "the shared level holds no pinned CData and partition masks are non-empty"
+            ),
         };
         self.levels[sh].cache_mut(0).install(way, line);
+        if self.ccache_ways.is_some() {
+            self.levels[sh].cache_mut(0).set_ccache(way, cdata);
+        }
     }
 
     /// Drop any coherent copies of `line` held by `core`'s private levels

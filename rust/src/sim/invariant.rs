@@ -30,6 +30,10 @@ pub enum InvariantViolation {
         line: u64,
         detail: String,
     },
+    /// The shared level's merge-region way partition is inconsistent: a
+    /// CData-classed line sits outside the merge-region ways (or a line
+    /// is CData-classed while no partition is configured).
+    Partition { line: u64, detail: String },
 }
 
 impl InvariantViolation {
@@ -48,11 +52,19 @@ impl InvariantViolation {
         }
     }
 
+    pub fn partition(line: u64, detail: impl Into<String>) -> Self {
+        InvariantViolation::Partition {
+            line,
+            detail: detail.into(),
+        }
+    }
+
     /// The line the violation was detected on.
     pub fn line(&self) -> u64 {
         match self {
             InvariantViolation::Directory { line, .. }
-            | InvariantViolation::Engine { line, .. } => *line,
+            | InvariantViolation::Engine { line, .. }
+            | InvariantViolation::Partition { line, .. } => *line,
         }
     }
 }
@@ -67,6 +79,12 @@ impl fmt::Display for InvariantViolation {
                 write!(
                     f,
                     "engine invariant violated: core {core}: line {line:#x}: {detail}"
+                )
+            }
+            InvariantViolation::Partition { line, detail } => {
+                write!(
+                    f,
+                    "partition invariant violated: line {line:#x}: {detail}"
                 )
             }
         }
@@ -99,6 +117,11 @@ mod tests {
         let v = InvariantViolation::directory(0x80, "Shared but no sharers");
         assert!(v.to_string().starts_with("directory invariant"), "{v}");
         assert_eq!(v.line(), 0x80);
+
+        let v = InvariantViolation::partition(0x1c0, "CData line in way 5, partition is 2");
+        assert!(v.to_string().starts_with("partition invariant"), "{v}");
+        assert!(v.to_string().contains("way 5"), "{v}");
+        assert_eq!(v.line(), 0x1c0);
     }
 
     #[test]

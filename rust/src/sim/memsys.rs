@@ -37,12 +37,13 @@ use super::addr::{Addr, Line};
 use super::cache::Cache;
 use super::config::{ConfigError, MachineConfig};
 use super::directory::Directory;
+use super::hierarchy::level::PartitionPolicy;
 use super::hierarchy::merge_policy::{self, MergeDecision, MergePolicy};
 use super::hierarchy::path::AccessPath;
 use super::invariant::InvariantViolation;
 use super::mfrf::{MergeFault, Mfrf};
 use super::source_buffer::SourceBuffer;
-use super::stats::{HotCounters, Stats};
+use super::stats::{reuse_ratio, HotCounters, Stats};
 use crate::merge::batch::MergeItem;
 use crate::merge::{LineData, MergeHandle, LINE_WORDS};
 use crate::util::rng::Rng;
@@ -57,6 +58,36 @@ pub struct MergeRecord {
 
 /// Sentinel in `cdata_slot`: this L1 way holds no CData binding.
 const NO_SLOT: u32 = u32::MAX;
+
+/// Reuse-aware partition controller epoch, in memory operations (every
+/// timed access ticks once, fast path or slow — the tick rides on
+/// [`MemSystem::drain_engine`], the one point both paths share).
+const PARTITION_EPOCH_OPS: u32 = 512;
+/// Grow only when the epoch saw real privatization traffic: at least
+/// one fill per 16 ops.
+const PARTITION_GROW_MIN_FILLS: u64 = (PARTITION_EPOCH_OPS / 16) as u64;
+/// Shrink when privatization traffic dried up: under one fill per 64
+/// ops means the merge region is over-provisioned.
+const PARTITION_SHRINK_MAX_FILLS: u64 = (PARTITION_EPOCH_OPS / 64) as u64;
+
+/// Epoch state of the reuse-aware way-partition controller (present
+/// only when the shared level is partitioned with
+/// [`PartitionPolicy::ReuseAware`]). Each epoch it compares the CData
+/// reuse observed since the last decision — hits amortize fills, so
+/// `reuse_ratio >= 1` means every privatized line earned its LLC way —
+/// and grows or shrinks the merge region one way at a time, clamped to
+/// `1..llc_ways`. Decisions are deterministic functions of the op
+/// count and the exact counters, so fast- and slow-path runs repartition
+/// at identical points (the differential suite relies on this).
+struct PartitionCtl {
+    /// Current merge-region width (mirrors `AccessPath::ccache_ways`).
+    ways: usize,
+    /// Ops seen this epoch.
+    ops: u32,
+    /// Counter snapshots at the last epoch boundary.
+    last_hits: u64,
+    last_fills: u64,
+}
 
 pub struct MemSystem {
     pub cfg: MachineConfig,
@@ -81,6 +112,9 @@ pub struct MemSystem {
     engine_backlog: Vec<u64>,
     /// Merge timing/disposition decisions (Section 4.3) as data.
     policy: Box<dyn MergePolicy>,
+    /// Reuse-aware way-partition controller; `None` for unpartitioned
+    /// or statically partitioned configs.
+    part_ctl: Option<PartitionCtl>,
     pub stats: Stats,
     /// Per-core fast-path counter scratch; folded into `stats` by
     /// [`flush_hot_stats`](Self::flush_hot_stats).
@@ -111,6 +145,14 @@ impl MemSystem {
         cfg.validate()?;
         let cores = cfg.cores;
         let l1_slots = cfg.l1().sets() * cfg.l1().ways;
+        let partition = cfg.llc().partition;
+        let mut stats = Stats::new(cores, cfg.depth());
+        if let Some(p) = partition {
+            let w = p.ccache_ways as u64;
+            stats.partition_ways_min = w;
+            stats.partition_ways_max = w;
+            stats.partition_ways_final = w;
+        }
         Ok(Self {
             path: AccessPath::new(&cfg),
             mem: vec![0u32; cfg.mem_bytes / 4],
@@ -121,7 +163,15 @@ impl MemSystem {
             engine_backlog: vec![0; cores],
             mfrf: (0..cores).map(|_| Mfrf::new(cfg.ccache.mfrf_slots)).collect(),
             policy: merge_policy::from_config(&cfg.ccache),
-            stats: Stats::new(cores, cfg.depth()),
+            part_ctl: partition.and_then(|p| {
+                (p.policy == PartitionPolicy::ReuseAware).then_some(PartitionCtl {
+                    ways: p.ccache_ways,
+                    ops: 0,
+                    last_hits: 0,
+                    last_fills: 0,
+                })
+            }),
+            stats,
             hot: vec![HotCounters::default(); cores],
             merge_scratch: Vec::new(),
             alloc_cursor: 64, // keep address 0 unused
@@ -420,8 +470,9 @@ impl MemSystem {
         let mut cycles = self.cfg.l1().hit_cycles + self.cfg.llc().hit_cycles;
 
         // fetch current shared value (shared level or memory), no
-        // coherence actions
-        if !self.path.fetch_shared(line, &mut self.stats) {
+        // coherence actions; classed as CData so a partitioned LLC
+        // allocates it inside the merge-region ways
+        if !self.path.fetch_shared(line, true, &mut self.stats) {
             cycles += self.cfg.timing.mem_cycles;
         }
 
@@ -553,11 +604,63 @@ impl MemSystem {
     }
 
     /// The core ran `cycles` of other work: the background merge engine
-    /// drains in parallel.
+    /// drains in parallel. Also the reuse-aware partition controller's
+    /// tick point: every timed access passes through here exactly once
+    /// on both the fast and the slow path, so epoch boundaries (and
+    /// therefore repartition decisions) land on identical op indices in
+    /// either mode — `tests/fastpath_diff.rs` proves it.
     #[inline]
     fn drain_engine(&mut self, core: usize, cycles: u64) {
         let b = &mut self.engine_backlog[core];
         *b = b.saturating_sub(cycles);
+        if self.part_ctl.is_some() {
+            self.tick_partition();
+        }
+    }
+
+    /// One controller tick; at each epoch boundary compare the CData
+    /// reuse since the last decision and resize the merge region by at
+    /// most one way (see [`PartitionCtl`]).
+    fn tick_partition(&mut self) {
+        let Some(ctl) = self.part_ctl.as_mut() else {
+            return;
+        };
+        ctl.ops += 1;
+        if ctl.ops < PARTITION_EPOCH_OPS {
+            return;
+        }
+        ctl.ops = 0;
+        // exact counters regardless of fast-path batching: the hot
+        // scratch holds whatever hasn't been folded into `stats` yet
+        let hits = self.stats.ccache_l1_hits
+            + self.hot.iter().map(|h| h.ccache_l1_hits).sum::<u64>();
+        let fills = self.stats.ccache_fills;
+        let d_hits = hits - ctl.last_hits;
+        let d_fills = fills - ctl.last_fills;
+        ctl.last_hits = hits;
+        ctl.last_fills = fills;
+        let max_ways = self.cfg.llc().ways - 1;
+        let target = if d_fills >= PARTITION_GROW_MIN_FILLS && reuse_ratio(d_hits, d_fills) >= 1.0
+        {
+            // sustained privatization whose hits amortize the fills:
+            // the merge region earns more capacity
+            (ctl.ways + 1).min(max_ways)
+        } else if d_fills < PARTITION_SHRINK_MAX_FILLS {
+            // privatization traffic dried up (resident CData or a
+            // coherent phase): give ways back to ordinary data
+            ctl.ways.saturating_sub(1).max(1)
+        } else {
+            ctl.ways
+        };
+        if target != ctl.ways {
+            ctl.ways = target;
+            self.path.set_ccache_ways(target);
+            self.stats.repartitions += 1;
+            let w = target as u64;
+            self.stats.partition_ways_min = self.stats.partition_ways_min.min(w);
+            self.stats.partition_ways_max = self.stats.partition_ways_max.max(w);
+            self.stats.partition_ways_final = w;
+        }
     }
 
     /// Merge one CData line and remove it from the core's innermost
@@ -664,7 +767,11 @@ impl MemSystem {
     /// 6. every CCache-bit way's `cdata_slot` binding is live: not
     ///    `NO_SLOT`, and the bound source-buffer slot holds exactly the
     ///    way's line — the COp fast path resolves the updated copy
-    ///    through this binding, so a stale one would corrupt data.
+    ///    through this binding, so a stale one would corrupt data;
+    /// 7. with a shared-level way partition active, every CData-classed
+    ///    LLC line sits inside the merge-region ways (repartition
+    ///    shrinks clear stranded class tags); without one, no LLC line
+    ///    is CData-classed at all.
     pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
         for core in 0..self.cfg.cores {
             for e in self.src_buf[core].iter_valid() {
@@ -733,6 +840,7 @@ impl MemSystem {
                 }
             }
         }
+        self.path.check_partition_invariant()?;
         self.path.directory().check_invariants()
     }
 }

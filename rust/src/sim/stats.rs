@@ -9,6 +9,23 @@
 
 use std::fmt;
 
+/// CData reuse: L1 hits amortizing each privatizing fill. The shared
+/// form behind [`Stats::ccache_reuse_ratio`], the kmeans residency
+/// check, and the reuse-aware partition controller's epoch deltas.
+/// `hits/fills`, with the zero-fill edge cases pinned: no fills but
+/// hits is perfect reuse (`inf`), no traffic at all is `0.0`.
+pub fn reuse_ratio(hits: u64, fills: u64) -> f64 {
+    if fills == 0 {
+        if hits > 0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    } else {
+        hits as f64 / fills as f64
+    }
+}
+
 /// Per-level hit/miss counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LevelStats {
@@ -90,6 +107,18 @@ pub struct Stats {
     /// Approximate merges whose update was dropped.
     pub approx_drops: u64,
 
+    // -- LLC way partitioning ---------------------------------------------
+    /// Smallest merge-region width (in ways) the run saw; 0 when the
+    /// shared level is unpartitioned. Static partitions keep
+    /// min == max == final == the configured width.
+    pub partition_ways_min: u64,
+    /// Largest merge-region width the run saw.
+    pub partition_ways_max: u64,
+    /// Merge-region width at the end of the run.
+    pub partition_ways_final: u64,
+    /// Resize decisions the reuse-aware controller took.
+    pub repartitions: u64,
+
     // -- synchronization -------------------------------------------------
     pub lock_acquires: u64,
     pub lock_retries: u64,
@@ -156,6 +185,14 @@ impl Stats {
     pub fn llc_misses_per_kc(&self) -> f64 {
         self.per_kilocycle(self.llc().misses)
     }
+
+    /// CData reuse over the whole run: L1 hits per privatizing fill
+    /// (see [`reuse_ratio`] for the zero-fill conventions). A ratio
+    /// well above 1 means privatized lines stay resident and keep
+    /// absorbing COps; near 0 means every COp re-privatizes.
+    pub fn ccache_reuse_ratio(&self) -> f64 {
+        reuse_ratio(self.ccache_l1_hits, self.ccache_fills)
+    }
 }
 
 impl fmt::Display for Stats {
@@ -187,6 +224,17 @@ impl fmt::Display for Stats {
         writeln!(f, "src-buf evictions {:>14}", self.src_buf_evictions)?;
         writeln!(f, "silent drops      {:>14}", self.silent_drops)?;
         writeln!(f, "approx drops      {:>14}", self.approx_drops)?;
+        if self.partition_ways_max > 0 {
+            writeln!(
+                f,
+                "partition ways    {:>14} (min {} / max {} / final {})",
+                self.partition_ways_final,
+                self.partition_ways_min,
+                self.partition_ways_max,
+                self.partition_ways_final
+            )?;
+            writeln!(f, "repartitions      {:>14}", self.repartitions)?;
+        }
         writeln!(f, "lock acq/retry    {:>14}/{}", self.lock_acquires, self.lock_retries)?;
         writeln!(f, "atomic RMWs       {:>14}", self.atomic_rmws)?;
         writeln!(f, "barriers          {:>14}", self.barriers)?;
@@ -238,6 +286,48 @@ mod tests {
         assert!(text.contains("directory msgs"));
         assert!(text.contains("L3"));
         assert!(text.contains("LLC"));
+    }
+
+    #[test]
+    fn reuse_ratio_is_hits_per_fill_with_pinned_edges() {
+        assert_eq!(reuse_ratio(8, 2), 4.0);
+        assert_eq!(reuse_ratio(1, 2), 0.5);
+        // resident CData: hits with zero fills is perfect reuse
+        assert_eq!(reuse_ratio(5, 0), f64::INFINITY);
+        // no CData traffic at all
+        assert_eq!(reuse_ratio(0, 0), 0.0);
+    }
+
+    #[test]
+    fn ccache_reuse_ratio_reads_the_run_counters() {
+        let mut s = Stats::new(1, 3);
+        s.ccache_l1_hits = 41;
+        s.ccache_fills = 10;
+        // the kmeans residency check `hits > fills * 4` is exactly
+        // `ratio > 4.0` — pin the equivalence both ways
+        assert!(s.ccache_reuse_ratio() > 4.0);
+        s.ccache_l1_hits = 40;
+        assert!(s.ccache_reuse_ratio() <= 4.0);
+        s.ccache_fills = 0;
+        assert_eq!(s.ccache_reuse_ratio(), f64::INFINITY);
+        s.ccache_l1_hits = 0;
+        assert_eq!(s.ccache_reuse_ratio(), 0.0);
+    }
+
+    #[test]
+    fn display_emits_partition_counters_only_when_partitioned() {
+        let mut s = Stats::new(1, 3);
+        // unpartitioned runs don't render the section at all
+        assert!(!format!("{s}").contains("partition ways"));
+        s.partition_ways_min = 2;
+        s.partition_ways_max = 6;
+        s.partition_ways_final = 5;
+        s.repartitions = 9;
+        let text = format!("{s}");
+        assert!(text.contains("partition ways"), "{text}");
+        assert!(text.contains("min 2 / max 6 / final 5"), "{text}");
+        assert!(text.contains("repartitions"), "{text}");
+        assert!(text.contains("9"), "{text}");
     }
 
     #[test]

@@ -106,6 +106,27 @@ impl NativeResult {
     }
 }
 
+/// One LLC-partition measurement: a CCache workload run next to the
+/// streaming co-runner, with and without the reuse-aware merge-region
+/// partition. Serialized under the report's top-level `"partition"` key
+/// (same precedent as `"native"`: a new key with its own shape, so
+/// existing section validators keep passing).
+#[derive(Clone, Debug)]
+pub struct PartitionResult {
+    pub name: String,
+    /// Partition mode token: "none" | "static" | "reuse".
+    pub policy: String,
+    /// Co-runner scanner cores the cell ran against.
+    pub corun: usize,
+    /// Workload cycles (co-runner cores excluded).
+    pub cycles: u64,
+    pub ways_min: u64,
+    pub ways_max: u64,
+    pub ways_final: u64,
+    pub repartitions: u64,
+    pub verified: bool,
+}
+
 /// The perf-trajectory record one `ccache bench` run produces.
 /// Serialized (hand-rolled JSON — serde is unavailable offline) to
 /// `BENCH_<bench_id>.json`; committing one per perf-relevant PR gives
@@ -127,6 +148,9 @@ pub struct BenchReport {
     /// Native-backend wall-clock measurements (empty when the suite ran
     /// sim-only).
     pub native: Vec<NativeResult>,
+    /// LLC-partition cells: the partitioned-vs-unpartitioned cycle
+    /// trajectory under the co-runner stressor.
+    pub partition: Vec<PartitionResult>,
 }
 
 impl BenchReport {
@@ -183,6 +207,27 @@ impl BenchReport {
                 n.verified
             ));
         }
+        out.push_str("\n  ],\n");
+        out.push_str("  \"partition\": [\n");
+        for (i, p) in self.partition.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"policy\": {}, \"corun\": {}, \
+                 \"cycles\": {}, \"ways_min\": {}, \"ways_max\": {}, \
+                 \"ways_final\": {}, \"repartitions\": {}, \"verified\": {}}}",
+                json_str(&p.name),
+                json_str(&p.policy),
+                p.corun,
+                p.cycles,
+                p.ways_min,
+                p.ways_max,
+                p.ways_final,
+                p.repartitions,
+                p.verified
+            ));
+        }
         out.push_str("\n  ]\n}\n");
         out
     }
@@ -203,6 +248,27 @@ impl BenchReport {
                 s.speedup()
                     .map(|v| format!("{v:.2}x"))
                     .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// The LLC-partition section as its own table (empty reports render
+    /// a header-only table).
+    pub fn partition_table(&self) -> Table {
+        let mut t = Table::new(
+            format!("LLC partition under co-runner — {}", self.config),
+            &["workload", "policy", "corun", "cycles", "ways min/max/final", "repart", "verified"],
+        );
+        for p in &self.partition {
+            t.row(&[
+                p.name.clone(),
+                p.policy.clone(),
+                p.corun.to_string(),
+                p.cycles.to_string(),
+                format!("{}/{}/{}", p.ways_min, p.ways_max, p.ways_final),
+                p.repartitions.to_string(),
+                p.verified.to_string(),
             ]);
         }
         t
@@ -385,6 +451,17 @@ mod tests {
                 sim_cycles: 9_000_000,
                 verified: true,
             }],
+            partition: vec![PartitionResult {
+                name: "kvstore".into(),
+                policy: "reuse".into(),
+                corun: 2,
+                cycles: 5_000_000,
+                ways_min: 2,
+                ways_max: 6,
+                ways_final: 5,
+                repartitions: 7,
+                verified: true,
+            }],
         }
     }
 
@@ -410,6 +487,11 @@ mod tests {
         assert!(j.contains("\"variant\": \"atomic\""), "{j}");
         assert!(j.contains("\"sim_cycles\": 9000000"), "{j}");
         assert!(j.contains("\"verified\": true"), "{j}");
+        // so is the partition section (PR 8 trajectory record)
+        assert!(j.contains("\"partition\": ["), "{j}");
+        assert!(j.contains("\"policy\": \"reuse\""), "{j}");
+        assert!(j.contains("\"ways_final\": 5"), "{j}");
+        assert!(j.contains("\"repartitions\": 7"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
     }
@@ -427,6 +509,14 @@ mod tests {
         assert_eq!(n.mops(), 0.0);
         let t = demo_report().native_table().render();
         assert!(t.contains("histogram"), "{t}");
+    }
+
+    #[test]
+    fn partition_table_renders_the_way_trajectory() {
+        let t = demo_report().partition_table().render();
+        assert!(t.contains("kvstore"), "{t}");
+        assert!(t.contains("reuse"), "{t}");
+        assert!(t.contains("2/6/5"), "{t}");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use ccache::exec::Variant;
 use ccache::merge::funcs::AddU32;
 use ccache::merge::handle;
 use ccache::sim::config::MachineConfig;
+use ccache::sim::hierarchy::level::PartitionPolicy;
 use ccache::sim::memsys::MemSystem;
 use ccache::sim::stats::Stats;
 use ccache::util::ptest::check_diff;
@@ -249,6 +250,145 @@ fn mid_phase_stats_snapshot_matches_slow_path() {
     let mut fast = fast;
     fast.flush_hot_stats();
     assert_eq!(fast.stats, snap_fast);
+}
+
+/// Like [`run_stream`], but on an LLC whose merge region is way-
+/// partitioned. The coherent region (384 lines) outsizes the ordinary
+/// partition of the small LLC (32 sets x 6 non-merge ways = 192 lines)
+/// and the CData region (128 lines) outsizes the 2-way merge region
+/// (64 lines), so shared-level evictions continuously cross the
+/// way-mask boundary in both classes. Under the reuse-aware policy the
+/// epoch controller resizes the region mid-stream — the partition
+/// invariant is checked every 128 ops, and the fast path must stay
+/// bit-identical through every repartition (the controller ticks once
+/// per timed access on both paths, so epoch decisions land on the same
+/// op indices).
+fn run_partitioned_stream(
+    seed: u64,
+    cores: usize,
+    policy: PartitionPolicy,
+    fast: bool,
+) -> (Stats, Vec<u32>, u64) {
+    let cores = cores.max(1);
+    let mut cfg = MachineConfig::test_small().with_partition(2, policy);
+    cfg.cores = cores;
+    cfg.fast_path = fast;
+    let mut s = MemSystem::new(cfg).unwrap();
+    let cdata = s.alloc_lines(64 * 128);
+    let coh = s.alloc_lines(64 * 384);
+    for core in 0..cores {
+        s.merge_init(core, 0, handle(AddU32));
+        s.merge_init(core, 1, handle(AddU32));
+    }
+    let mut rng = Rng::new(seed);
+    let mut cycles = 0u64;
+    let mut ops = 0u64;
+    for _phase in 0..3 {
+        for _ in 0..400 {
+            let core = rng.usize_below(cores);
+            match rng.below(6) {
+                0 => {
+                    let ty = rng.below(2) as u8;
+                    let a = cdata.add(rng.below(128) * 64 + rng.below(16) * 4);
+                    let (v, c1) = s.c_read(core, a, ty).unwrap();
+                    let c2 = s.c_write(core, a, v.wrapping_add(1), ty).unwrap();
+                    cycles += c1 + c2;
+                }
+                1 => cycles += s.soft_merge(core).unwrap(),
+                2 => cycles += s.read(core, coh.add(rng.below(384) * 64)).unwrap().1,
+                3 => {
+                    cycles += s
+                        .write(core, coh.add(rng.below(384) * 64), rng.next_u32())
+                        .unwrap()
+                }
+                4 => {
+                    let (_, c) = s
+                        .cas(core, coh.add(rng.below(384) * 64), 0, rng.next_u32())
+                        .unwrap();
+                    cycles += c;
+                }
+                _ => {
+                    let (_, c) = s
+                        .fetch_or(core, coh.add(rng.below(384) * 64), rng.next_u32())
+                        .unwrap();
+                    cycles += c;
+                }
+            }
+            ops += 1;
+            if ops % 128 == 0 {
+                // invariant 7 rides along: CData-classed shared lines
+                // stay inside the (possibly just-resized) merge region
+                s.check_invariants().unwrap();
+            }
+        }
+        for core in 0..cores {
+            cycles += s.merge_all(core).unwrap();
+        }
+    }
+    s.flush_hot_stats();
+    s.check_invariants().unwrap();
+    let mut memory = Vec::with_capacity(512);
+    for i in 0..128u64 {
+        memory.push(s.peek(cdata.add(i * 64)));
+    }
+    for i in 0..384u64 {
+        memory.push(s.peek(coh.add(i * 64)));
+    }
+    (s.stats.clone(), memory, cycles)
+}
+
+#[test]
+fn fast_path_is_bit_identical_on_partitioned_machines() {
+    for (tag, policy) in [
+        (0x9A27u64, PartitionPolicy::Static),
+        (0x9A28, PartitionPolicy::ReuseAware),
+    ] {
+        check_diff(
+            tag,
+            6,
+            |rng| (rng.below(u64::MAX), 1 + rng.usize_below(2)),
+            |&(seed, cores)| run_partitioned_stream(seed, cores, policy, true),
+            |&(seed, cores)| run_partitioned_stream(seed, cores, policy, false),
+        );
+    }
+}
+
+/// Non-vacuity pin for the differential test above: a deterministic
+/// stream that forces the reuse-aware controller to actually move the
+/// boundary. A burst of CData traffic, then a long coherent-only
+/// stretch — the first full epoch (512 timed accesses) without CData
+/// fills must shrink the merge region, so `repartitions` is provably
+/// nonzero on the very streams the bit-identity test replays.
+#[test]
+fn reuse_controller_repartitions_mid_stream() {
+    let mut cfg = MachineConfig::test_small().with_partition(2, PartitionPolicy::ReuseAware);
+    cfg.cores = 1;
+    let mut s = MemSystem::new(cfg).unwrap();
+    // 8 CData lines: resident in the small L1 (16 lines), so the burst
+    // never forces an unmergeable eviction
+    let cdata = s.alloc_lines(64 * 8);
+    let coh = s.alloc_lines(64 * 64);
+    s.merge_init(0, 0, handle(AddU32));
+    for i in 0..64u64 {
+        s.c_write(0, cdata.add((i % 8) * 64), 1, 0).unwrap();
+    }
+    // > 2 epochs of coherent-only traffic: zero CData fills per epoch
+    for i in 0..1200u64 {
+        s.read(0, coh.add((i % 64) * 64)).unwrap();
+    }
+    s.merge_all(0).unwrap();
+    s.flush_hot_stats();
+    s.check_invariants().unwrap();
+    assert!(
+        s.stats.repartitions > 0,
+        "the reuse-aware controller never resized the merge region"
+    );
+    assert!(
+        s.stats.partition_ways_min < 2,
+        "fill-starved epochs should have shrunk the 2-way region (min {})",
+        s.stats.partition_ways_min
+    );
+    assert!(s.stats.partition_ways_final >= 1);
 }
 
 /// The same exactness, end-to-end through the execution driver (machine
