@@ -1,0 +1,39 @@
+//! The kvserve staleness-vs-throughput frontier at paper scale: the
+//! full `serve` sweep (skew x merge-deadline x variant) on the
+//! Table-2-shaped hierarchy, printed as the ASCII table the `ccache
+//! serve` subcommand emits plus the headline frontier.
+//!
+//!     cargo bench --bench serve_frontier
+
+use ccache::coordinator::{run_serve, ServeOptions};
+use ccache::util::bench::time;
+
+fn main() {
+    let (res, secs) = time(|| {
+        run_serve(ServeOptions {
+            jobs: 0,
+            ..ServeOptions::default()
+        })
+    });
+
+    res.table().print();
+
+    println!("staleness-vs-throughput frontier (ccache cells):");
+    for c in res.frontier() {
+        println!(
+            "  skew {:.2}  deadline {:>4}  stale max {:>4} mean {:>7.2}  {:.3} ops/kcyc",
+            c.skew,
+            c.deadline,
+            c.staleness_max,
+            c.staleness_mean,
+            c.ops_per_kcycle()
+        );
+    }
+    println!(
+        "ccache beats atomic at {}/{} grid points; native check: {:?}; {:.1}s",
+        res.ccache_wins_vs_atomic(),
+        res.grid_points().len(),
+        res.native_verified,
+        secs
+    );
+}

@@ -8,13 +8,15 @@ pub mod experiment;
 pub mod partsweep;
 pub mod perf;
 pub mod report;
+pub mod serve;
 pub mod sweep;
 pub mod xval;
 
 pub use experiment::{run_verified, scaled_config, sized_workload, SCALED_LLC_BYTES};
 pub use partsweep::{run_partsweep, run_partsweep_on, PartsweepOptions, PartsweepResult};
-pub use xval::{run_xval, XvalOptions, XvalReport};
+pub use serve::{run_serve, run_serve_on, ServeOptions, ServeResult};
 pub use sweep::{
     run_sweep, run_sweep_skewed, run_sweep_with, SweepOptions, SweepPoint, SweepResult,
     WS_FRACTIONS,
 };
+pub use xval::{run_xval, XvalOptions, XvalReport};

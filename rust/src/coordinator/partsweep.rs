@@ -121,6 +121,12 @@ pub struct PartCell {
     pub ccache_l1_hits: u64,
     pub ccache_fills: u64,
     pub llc_misses: u64,
+    /// Merge functions installed in the MFRF — shared cell key with the
+    /// sweep and serve emitters (CCache cells; empty otherwise).
+    pub merge_fns: Vec<String>,
+    /// Quality metric of approximate variants (shared cell key; `null`
+    /// for the exact partsweep benchmarks).
+    pub quality: Option<f64>,
 }
 
 impl PartCell {
@@ -147,6 +153,8 @@ impl PartCell {
             ccache_l1_hits: r.stats.ccache_l1_hits,
             ccache_fills: r.stats.ccache_fills,
             llc_misses: r.stats.llc().misses,
+            merge_fns: r.merge_fns.clone(),
+            quality: r.quality,
         }
     }
 }
@@ -212,7 +220,7 @@ impl PartsweepResult {
                  \"ccache_ways\": {}, \"corun\": {}, \"cycles\": {}, \"verified\": {}, \
                  \"ways_min\": {}, \"ways_max\": {}, \"ways_final\": {}, \
                  \"repartitions\": {}, \"ccache_l1_hits\": {}, \"ccache_fills\": {}, \
-                 \"llc_misses\": {}}}",
+                 \"llc_misses\": {}, \"merge_fns\": [{}], \"quality\": {}}}",
                 c.benchmark,
                 c.cap,
                 c.policy,
@@ -226,7 +234,16 @@ impl PartsweepResult {
                 c.repartitions,
                 c.ccache_l1_hits,
                 c.ccache_fills,
-                c.llc_misses
+                c.llc_misses,
+                c.merge_fns
+                    .iter()
+                    .map(|f| format!("\"{f}\""))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                c.quality
+                    .filter(|q| q.is_finite())
+                    .map(|q| format!("{q:.6}"))
+                    .unwrap_or_else(|| "null".into()),
             ));
         }
         out.push_str("\n    ]\n  }\n}\n");
@@ -542,6 +559,8 @@ mod tests {
             "\"ccache_l1_hits\"",
             "\"ccache_fills\"",
             "\"llc_misses\"",
+            "\"merge_fns\"",
+            "\"quality\"",
             "\"reuse_wins_under_corun\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");

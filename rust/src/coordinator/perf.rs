@@ -12,7 +12,7 @@
 use std::time::Instant;
 
 use crate::exec::registry::{self, SizeSpec};
-use crate::exec::{Backend, CorunSpec, Variant};
+use crate::exec::{driver, Backend, CorunSpec, Variant};
 use crate::merge::batch::{BatchExecutor, MergeItem, NativeExecutor};
 use crate::merge::funcs::AddU32;
 use crate::merge::handle;
@@ -21,9 +21,14 @@ use crate::sim::config::MachineConfig;
 use crate::sim::hierarchy::level::PartitionPolicy;
 use crate::sim::machine::{CoreCtx, Machine};
 use crate::sim::memsys::MemSystem;
-use crate::util::bench::{time, BenchReport, NativeResult, PartitionResult, ScenarioResult};
+use crate::util::bench::{
+    time, BenchReport, KvServeResult, NativeResult, PartitionResult, ScenarioResult,
+};
+use crate::workloads::kvserve::{KvServeWorkload, ServeParams};
+use crate::workloads::traffic::{Mix, TrafficSpec};
 
 use super::experiment::scaled_config;
+use super::serve::SERVE_DEADLINES;
 
 /// How to run the suite.
 #[derive(Clone, Debug)]
@@ -280,6 +285,48 @@ fn partition_section(quick: bool) -> Vec<PartitionResult> {
     out
 }
 
+/// kvserve cells for the trajectory record: the serving tier across the
+/// merge-deadline axis under the CCache variant, with the atomic
+/// baseline at each deadline — the staleness-vs-throughput numbers the
+/// `serve` subcommand sweeps, carried in every trajectory record.
+fn serve_section(quick: bool) -> Vec<KvServeResult> {
+    let cfg = MachineConfig::test_small().with_cores(2);
+    let mut out = Vec::new();
+    for &deadline in &SERVE_DEADLINES {
+        let p = ServeParams {
+            traffic: TrafficSpec {
+                tenants: 4,
+                keys_per_tenant: if quick { 64 } else { 128 },
+                shards: 4,
+                mix: Mix::default(),
+                base_theta: 0.6,
+                skew_drift: 0.2,
+                scan_len: 8,
+                seed: 42,
+            },
+            epochs: if quick { 2 } else { 4 },
+            accesses_per_key: if quick { 4 } else { 8 },
+            merge_deadline: deadline,
+        };
+        let ops = (p.ops_per_core_epoch(cfg.cores) * cfg.cores * p.epochs) as u64;
+        for variant in [Variant::CCache, Variant::Atomic] {
+            let wl = KvServeWorkload::new(p.clone());
+            let r = driver::run(&wl, variant, cfg.clone()).expect("serve cell runs");
+            let st = wl.staleness().expect("verify ran");
+            out.push(KvServeResult {
+                deadline,
+                variant: variant.name().into(),
+                cycles: r.cycles(),
+                ops,
+                staleness_max: st.max_ops,
+                staleness_mean: st.mean_ops(),
+                verified: r.verified,
+            });
+        }
+    }
+    out
+}
+
 /// Run the whole suite.
 pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     let div = if opts.quick { 20 } else { 1 };
@@ -330,6 +377,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     scenarios.push(sweep_cell(opts.quick));
     let native = native_section(opts.quick);
     let partition = partition_section(opts.quick);
+    let kvserve = serve_section(opts.quick);
 
     BenchReport {
         bench_id: opts.bench_id.clone(),
@@ -340,6 +388,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
         scenarios,
         native,
         partition,
+        kvserve,
     }
 }
 
@@ -382,6 +431,22 @@ mod tests {
         for r in rows.iter().filter(|r| r.policy == "reuse") {
             assert!(r.ways_max >= 1, "{}: no partition telemetry", r.name);
             assert!(r.ways_min >= 1);
+        }
+    }
+
+    #[test]
+    fn serve_section_tracks_the_deadline_axis() {
+        let rows = serve_section(true);
+        // ccache + atomic at each of the three deadlines
+        assert_eq!(rows.len(), 2 * SERVE_DEADLINES.len());
+        for r in &rows {
+            assert!(r.verified, "{}-d{} diverged", r.variant, r.deadline);
+            assert!(r.cycles > 0 && r.ops > 0);
+            match r.variant.as_str() {
+                "atomic" => assert_eq!(r.staleness_max, 0, "atomic published late"),
+                "ccache" => assert!(r.staleness_max <= r.deadline as u64),
+                other => panic!("unexpected variant {other}"),
+            }
         }
     }
 

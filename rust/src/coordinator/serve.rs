@@ -1,0 +1,687 @@
+//! The serving sweep behind `ccache serve`: merge-deadline x skew x
+//! variant over the [`kvserve`](crate::workloads::kvserve) tier, with
+//! the **staleness-vs-throughput frontier** as the headline result.
+//!
+//! Each cell is one epoch-phased serving run. The grid crosses:
+//! * **merge deadline** — how many unmerged updates a core may sit on
+//!   before being forced to publish ([`SERVE_DEADLINES`]). Only the
+//!   ccache variant consumes it; the coherent baselines ride along at
+//!   every deadline so each frontier point carries its own baselines;
+//! * **base skew** — the tenants' zipf theta the drift schedule
+//!   oscillates around (`--quick` keeps one);
+//! * **variant** — fgl, atomic, dup, ccache ([`kvserve::VARIANTS`]).
+//!
+//! The sweep composes with the rest of the bench harness: an optional
+//! streaming co-runner ([`CorunSpec`]) and an optional reuse-aware LLC
+//! way partition squeeze the serving tier exactly like `partsweep`
+//! cells, and one ccache cell is re-run on the native-thread backend as
+//! a golden cross-check. Cells fan out over the same scoped worker pool
+//! as [`sweep`](super::sweep)/[`partsweep`](super::partsweep), so
+//! results are bit-identical to serial execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::exec::{driver, CorunSpec, RunResult, Variant};
+use crate::sim::config::MachineConfig;
+use crate::sim::hierarchy::level::PartitionPolicy;
+use crate::util::bench::Table;
+use crate::workloads::kvserve::{KvServeWorkload, ServeParams, Staleness, VARIANTS};
+use crate::workloads::traffic::{Mix, TrafficSpec};
+
+use super::experiment::scaled_config;
+
+/// Serving-table fraction of the LLC. Quarter-LLC keeps room for the
+/// merge region and the co-runner experiments.
+pub const SERVE_WS_FRAC: f64 = 0.25;
+
+/// Front-end cores the tier runs on (co-runner cores ride on top).
+pub const SERVE_WORK_CORES: usize = 4;
+
+/// The merge-deadline axis, in unmerged updates per core. All three
+/// survive `--quick` — the frontier *is* the experiment.
+pub const SERVE_DEADLINES: [usize; 3] = [16, 64, 256];
+
+/// Base zipf skews; `--quick` keeps the first.
+pub const SERVE_SKEWS: [f64; 2] = [0.6, 0.9];
+
+/// Knobs for one serving sweep (the `ccache serve` subcommand).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Trim for CI smoke: one skew, shorter epochs.
+    pub quick: bool,
+    /// Worker threads for the cell grid; 0 = all host cores.
+    pub jobs: usize,
+    pub seed: u64,
+    /// Tenants in the tier (0 = default 4).
+    pub tenants: usize,
+    /// Shards the tenants map onto (0 = one per tenant).
+    pub shards: usize,
+    pub mix: Mix,
+    /// Peak amplitude of the per-epoch skew drift.
+    pub skew_drift: f64,
+    /// Pin the deadline axis to one value (0 = sweep the full axis).
+    pub deadline: usize,
+    /// Streaming co-runner cores (0 = none).
+    pub corun_cores: usize,
+    /// Reuse-aware merge-region ways (0 = unpartitioned LLC).
+    pub partition_ways: usize,
+    /// Re-run one ccache cell on the native backend as a cross-check.
+    pub native_check: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            jobs: 0,
+            seed: 42,
+            tenants: 0,
+            shards: 0,
+            mix: Mix::default(),
+            skew_drift: 0.2,
+            deadline: 0,
+            corun_cores: 0,
+            partition_ways: 0,
+            native_check: true,
+        }
+    }
+}
+
+/// One grid cell: axes plus the measurements the report, the JSON
+/// record and the CI schema check consume.
+#[derive(Clone, Debug)]
+pub struct ServeCell {
+    /// Merge deadline this frontier point ran under (ccache consumes
+    /// it; baselines carry it as their grid coordinate).
+    pub deadline: usize,
+    pub skew: f64,
+    pub variant: Variant,
+    pub cycles: u64,
+    /// Requests served (the trace length, identical for every variant
+    /// on the same axes).
+    pub ops: u64,
+    pub verified: bool,
+    pub merges: u64,
+    pub merge_fns: Vec<String>,
+    /// The measured staleness bound: max age, in ops, of an update at
+    /// publication.
+    pub staleness_max: u64,
+    pub staleness_mean: f64,
+    /// [`RunResult::quality`] — the mean staleness age, reported like
+    /// hll's cardinality error.
+    pub quality: Option<f64>,
+}
+
+impl ServeCell {
+    /// Simulated throughput: requests served per thousand cycles.
+    pub fn ops_per_kcycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.ops as f64 * 1e3 / self.cycles as f64
+        }
+    }
+}
+
+/// A completed serving sweep.
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    pub llc_bytes: usize,
+    pub work_cores: usize,
+    pub seed: u64,
+    pub tenants: usize,
+    pub shards: usize,
+    pub mix: Mix,
+    pub skew_drift: f64,
+    pub corun: usize,
+    pub partition_ways: usize,
+    pub cells: Vec<ServeCell>,
+    /// Outcome of the native-backend cross-check cell (`None` when the
+    /// check was disabled).
+    pub native_verified: Option<bool>,
+    pub wall_clock_ms: f64,
+    pub jobs: usize,
+}
+
+impl ServeResult {
+    /// The headline frontier: the ccache cells, deadline-ordered within
+    /// each skew — staleness bound on one axis, throughput on the other.
+    pub fn frontier(&self) -> Vec<&ServeCell> {
+        let mut f: Vec<&ServeCell> = self
+            .cells
+            .iter()
+            .filter(|c| c.variant == Variant::CCache)
+            .collect();
+        f.sort_by(|a, b| {
+            a.skew
+                .partial_cmp(&b.skew)
+                .unwrap()
+                .then(a.deadline.cmp(&b.deadline))
+        });
+        f
+    }
+
+    /// Grid points (skew, deadline) where ccache's throughput is at
+    /// least atomic's — the acceptance headline counts these.
+    pub fn ccache_wins_vs_atomic(&self) -> usize {
+        self.grid_points()
+            .into_iter()
+            .filter(|&(skew, deadline)| {
+                let cycles = |v: Variant| {
+                    self.cells
+                        .iter()
+                        .find(|c| c.variant == v && c.skew == skew && c.deadline == deadline)
+                        .map(|c| c.cycles)
+                };
+                matches!((cycles(Variant::CCache), cycles(Variant::Atomic)),
+                    (Some(cc), Some(at)) if cc <= at)
+            })
+            .count()
+    }
+
+    /// Distinct (skew, deadline) coordinates in the grid.
+    pub fn grid_points(&self) -> Vec<(f64, usize)> {
+        let mut pts: Vec<(f64, usize)> = Vec::new();
+        for c in &self.cells {
+            if !pts.contains(&(c.skew, c.deadline)) {
+                pts.push((c.skew, c.deadline));
+            }
+        }
+        pts
+    }
+
+    /// Hand-rolled JSON under a top-level `"kvserve"` key (the
+    /// `ccache-bench-v1` section name). Cell objects share the
+    /// `cycles`/`verified`/`merge_fns`/`quality` key-set with the sweep
+    /// and partsweep emitters; staleness keys are always present and
+    /// null-safe. Shape is pinned by the CI `serve-smoke` check.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n  \"kvserve\": {\n");
+        out.push_str(&format!("    \"llc_bytes\": {},\n", self.llc_bytes));
+        out.push_str(&format!("    \"work_cores\": {},\n", self.work_cores));
+        out.push_str(&format!("    \"seed\": {},\n", self.seed));
+        out.push_str(&format!("    \"tenants\": {},\n", self.tenants));
+        out.push_str(&format!("    \"shards\": {},\n", self.shards));
+        out.push_str(&format!("    \"mix\": \"{}\",\n", self.mix.token()));
+        out.push_str(&format!("    \"skew_drift\": {:.3},\n", self.skew_drift));
+        out.push_str(&format!("    \"corun\": {},\n", self.corun));
+        out.push_str(&format!(
+            "    \"partition_ways\": {},\n",
+            self.partition_ways
+        ));
+        out.push_str(&format!("    \"jobs\": {},\n", self.jobs));
+        out.push_str(&format!(
+            "    \"wall_clock_ms\": {:.1},\n",
+            self.wall_clock_ms
+        ));
+        out.push_str(&format!(
+            "    \"native_verified\": {},\n",
+            match self.native_verified {
+                Some(v) => v.to_string(),
+                None => "null".into(),
+            }
+        ));
+        out.push_str(&format!(
+            "    \"ccache_wins_vs_atomic\": {},\n",
+            self.ccache_wins_vs_atomic()
+        ));
+        out.push_str(&format!(
+            "    \"grid_points\": {},\n",
+            self.grid_points().len()
+        ));
+        out.push_str("    \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "      {{\"deadline\": {}, \"skew\": {:.3}, \"variant\": \"{}\", \
+                 \"cycles\": {}, \"ops\": {}, \"ops_per_kcycle\": {:.4}, \
+                 \"verified\": {}, \"merges\": {}, \"merge_fns\": [{}], \
+                 \"staleness_max\": {}, \"staleness_mean\": {:.4}, \"quality\": {}}}",
+                c.deadline,
+                c.skew,
+                c.variant.name(),
+                c.cycles,
+                c.ops,
+                c.ops_per_kcycle(),
+                c.verified,
+                c.merges,
+                c.merge_fns
+                    .iter()
+                    .map(|f| format!("\"{f}\""))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                c.staleness_max,
+                c.staleness_mean,
+                c.quality
+                    .filter(|q| q.is_finite())
+                    .map(|q| format!("{q:.4}"))
+                    .unwrap_or_else(|| "null".into()),
+            ));
+        }
+        out.push_str("\n    ],\n");
+        // the headline: staleness bound vs throughput, ccache cells only
+        out.push_str("    \"staleness_vs_throughput\": [\n");
+        let frontier = self.frontier();
+        for (i, c) in frontier.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "      {{\"deadline\": {}, \"skew\": {:.3}, \"staleness_max\": {}, \
+                 \"staleness_mean\": {:.4}, \"ops_per_kcycle\": {:.4}}}",
+                c.deadline,
+                c.skew,
+                c.staleness_max,
+                c.staleness_mean,
+                c.ops_per_kcycle(),
+            ));
+        }
+        out.push_str("\n    ]\n  }\n}\n");
+        out
+    }
+
+    /// The grid as a paper-style ASCII table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "serve — staleness vs throughput by merge deadline / skew / variant",
+            &[
+                "deadline",
+                "skew",
+                "variant",
+                "Mcyc",
+                "ops/kcyc",
+                "stale max",
+                "stale mean",
+                "merges",
+                "ok",
+            ],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.deadline.to_string(),
+                format!("{:.2}", c.skew),
+                c.variant.name().to_string(),
+                format!("{:.2}", c.cycles as f64 / 1e6),
+                format!("{:.2}", c.ops_per_kcycle()),
+                c.staleness_max.to_string(),
+                format!("{:.1}", c.staleness_mean),
+                c.merges.to_string(),
+                if c.verified { "yes" } else { "NO" }.into(),
+            ]);
+        }
+        t
+    }
+}
+
+/// The serving parameters one cell runs: sweep geometry, the cell's
+/// skew as the drift base, the cell's deadline.
+fn cell_params(llc_bytes: usize, opts: &ServeOptions, skew: f64, deadline: usize) -> ServeParams {
+    let tenants = if opts.tenants == 0 { 4 } else { opts.tenants };
+    let keys_total = ((SERVE_WS_FRAC * llc_bytes as f64) as usize / 4).max(256);
+    let keys_per_tenant = (keys_total / tenants).max(64);
+    let shards = if opts.shards == 0 {
+        tenants
+    } else {
+        opts.shards
+    };
+    ServeParams {
+        traffic: TrafficSpec {
+            tenants,
+            keys_per_tenant,
+            shards,
+            mix: opts.mix,
+            base_theta: skew,
+            skew_drift: opts.skew_drift,
+            scan_len: 8,
+            seed: opts.seed,
+        },
+        epochs: if opts.quick { 2 } else { 4 },
+        accesses_per_key: if opts.quick { 4 } else { 8 },
+        merge_deadline: deadline,
+    }
+}
+
+/// The machine one cell runs on: optional reuse-aware merge region on
+/// top of the base geometry.
+fn cell_config(base: &MachineConfig, partition_ways: usize) -> MachineConfig {
+    let cfg = if partition_ways == 0 {
+        base.clone()
+    } else {
+        base.clone()
+            .with_partition(partition_ways, PartitionPolicy::ReuseAware)
+    };
+    cfg.validate().unwrap_or_else(|e| panic!("{e}"));
+    cfg
+}
+
+/// Run the serving sweep on the scaled bench machine.
+pub fn run_serve(opts: ServeOptions) -> ServeResult {
+    let mut base = scaled_config();
+    base.cores = SERVE_WORK_CORES;
+    run_serve_on(base, opts)
+}
+
+/// [`run_serve`] on an explicit base machine (tests use the small
+/// config; `base.cores` is the front-end core count).
+pub fn run_serve_on(base: MachineConfig, opts: ServeOptions) -> ServeResult {
+    base.validate().unwrap_or_else(|e| panic!("{e}"));
+    let t0 = Instant::now();
+    let deadlines: Vec<usize> = if opts.deadline > 0 {
+        vec![opts.deadline]
+    } else {
+        SERVE_DEADLINES.to_vec()
+    };
+    let skews: &[f64] = if opts.quick {
+        &SERVE_SKEWS[..1]
+    } else {
+        &SERVE_SKEWS
+    };
+    let cfg = cell_config(&base, opts.partition_ways);
+
+    struct CellSpec {
+        skew: f64,
+        deadline: usize,
+        variant: Variant,
+        params: ServeParams,
+    }
+    let cells: Vec<CellSpec> = skews
+        .iter()
+        .flat_map(|&skew| {
+            let deadlines = &deadlines;
+            let opts = &opts;
+            let llc = base.llc().size_bytes;
+            deadlines.iter().flat_map(move |&deadline| {
+                VARIANTS.iter().map(move |&variant| CellSpec {
+                    skew,
+                    deadline,
+                    variant,
+                    params: cell_params(llc, opts, skew, deadline),
+                })
+            })
+        })
+        .collect();
+
+    let run_cell = |spec: &CellSpec| -> (RunResult, Staleness) {
+        let wl = KvServeWorkload::new(spec.params.clone());
+        let corun = (opts.corun_cores > 0).then(|| CorunSpec::new(opts.corun_cores));
+        let r = driver::run_sim(&wl, spec.variant, cfg.clone(), None, corun).unwrap_or_else(|e| {
+            panic!(
+                "serve {}/d{}/theta{}: {e}",
+                spec.variant.name(),
+                spec.deadline,
+                spec.skew
+            )
+        });
+        let st = wl.staleness().expect("verify ran");
+        (r, st)
+    };
+
+    let jobs = effective_jobs(opts.jobs, cells.len());
+    let results: Vec<(RunResult, Staleness)> = if jobs <= 1 {
+        cells.iter().map(run_cell).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<(RunResult, Staleness)>>> =
+            Mutex::new(vec![None; cells.len()]);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let r = run_cell(&cells[i]);
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every cell completed"))
+            .collect()
+    };
+
+    let out_cells: Vec<ServeCell> = cells
+        .iter()
+        .zip(&results)
+        .map(|(spec, (r, st))| {
+            assert!(
+                r.verified,
+                "serve {}/d{} diverged from the golden run",
+                spec.variant.name(),
+                spec.deadline
+            );
+            let p = &spec.params;
+            let ops = (p.ops_per_core_epoch(base.cores) * base.cores * p.epochs) as u64;
+            ServeCell {
+                deadline: spec.deadline,
+                skew: spec.skew,
+                variant: spec.variant,
+                cycles: r.cycles(),
+                ops,
+                verified: r.verified,
+                merges: r.stats.merges,
+                merge_fns: r.merge_fns.clone(),
+                staleness_max: st.max_ops,
+                staleness_mean: st.mean_ops(),
+                quality: r.quality,
+            }
+        })
+        .collect();
+
+    // golden cross-check on the native backend: one ccache cell at the
+    // middle deadline (real threads, real atomics, same trace)
+    let native_verified = opts.native_check.then(|| {
+        let deadline = deadlines[deadlines.len() / 2];
+        let params = cell_params(base.llc().size_bytes, &opts, skews[0], deadline);
+        let wl = KvServeWorkload::new(params);
+        driver::run_native_with_merge(&wl, Variant::CCache, base.clone(), None)
+            .map(|r| r.verified)
+            .unwrap_or(false)
+    });
+
+    ServeResult {
+        llc_bytes: base.llc().size_bytes,
+        work_cores: base.cores,
+        seed: opts.seed,
+        tenants: if opts.tenants == 0 { 4 } else { opts.tenants },
+        shards: if opts.shards == 0 {
+            if opts.tenants == 0 {
+                4
+            } else {
+                opts.tenants
+            }
+        } else {
+            opts.shards
+        },
+        mix: opts.mix,
+        skew_drift: opts.skew_drift,
+        corun: opts.corun_cores,
+        partition_ways: opts.partition_ways,
+        cells: out_cells,
+        native_verified,
+        wall_clock_ms: t0.elapsed().as_secs_f64() * 1e3,
+        jobs,
+    }
+}
+
+fn effective_jobs(requested: usize, cells: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = if requested == 0 { auto } else { requested };
+    j.clamp(1, cells.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> ServeOptions {
+        ServeOptions {
+            quick: true,
+            jobs: 0,
+            native_check: false,
+            ..ServeOptions::default()
+        }
+    }
+
+    fn small_base() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn quick_grid_covers_the_frontier_axes() {
+        let r = run_serve_on(small_base(), small_opts());
+        // 1 skew x 3 deadlines x 4 variants
+        assert_eq!(r.cells.len(), 12);
+        assert!(r.cells.iter().all(|c| c.verified));
+        let frontier = r.frontier();
+        assert!(
+            frontier.len() >= 3,
+            "frontier needs >= 3 deadline points, got {}",
+            frontier.len()
+        );
+        // every cell serves the same trace on the same axes
+        for pts in r.grid_points() {
+            let ops: Vec<u64> = r
+                .cells
+                .iter()
+                .filter(|c| (c.skew, c.deadline) == pts)
+                .map(|c| c.ops)
+                .collect();
+            assert!(ops.windows(2).all(|w| w[0] == w[1]), "{ops:?}");
+        }
+    }
+
+    #[test]
+    fn staleness_bound_tightens_with_the_deadline() {
+        // the acceptance pin: along the frontier, the measured bound is
+        // monotonically non-increasing as the deadline tightens
+        let r = run_serve_on(small_base(), small_opts());
+        let f = r.frontier();
+        for pair in f.windows(2) {
+            assert!(
+                pair[0].staleness_max <= pair[1].staleness_max,
+                "bound grew as the deadline tightened: d{} -> {} vs d{} -> {}",
+                pair[0].deadline,
+                pair[0].staleness_max,
+                pair[1].deadline,
+                pair[1].staleness_max
+            );
+            assert!(pair[0].staleness_max <= pair[0].deadline as u64);
+        }
+        // coherent baselines publish immediately
+        for c in r.cells.iter().filter(|c| c.variant == Variant::Fgl) {
+            assert_eq!(c.staleness_max, 0);
+        }
+    }
+
+    #[test]
+    fn ccache_throughput_dominates_atomic_on_the_quick_grid() {
+        // the acceptance headline: ccache >= atomic at every deadline
+        let r = run_serve_on(small_base(), small_opts());
+        assert_eq!(
+            r.ccache_wins_vs_atomic(),
+            r.grid_points().len(),
+            "ccache lost to atomic somewhere:\n{}",
+            r.table().render()
+        );
+    }
+
+    #[test]
+    fn corun_and_partition_compose() {
+        let opts = ServeOptions {
+            corun_cores: 2,
+            partition_ways: 2,
+            ..small_opts()
+        };
+        let r = run_serve_on(small_base(), opts);
+        assert!(r.cells.iter().all(|c| c.verified));
+        // the stressor slows the tier down
+        let quiet = run_serve_on(small_base(), small_opts());
+        let cycles = |res: &ServeResult| {
+            res.cells
+                .iter()
+                .find(|c| c.variant == Variant::CCache && c.deadline == SERVE_DEADLINES[0])
+                .unwrap()
+                .cycles
+        };
+        assert!(cycles(&r) > cycles(&quiet), "co-runner did not cost cycles");
+    }
+
+    #[test]
+    fn json_shape_is_stable_for_the_ci_schema_check() {
+        let mut opts = small_opts();
+        opts.jobs = 1;
+        let r = run_serve_on(small_base(), opts);
+        let j = r.to_json();
+        assert!(j.contains("\"kvserve\""), "{j}");
+        for key in [
+            "\"deadline\"",
+            "\"skew\"",
+            "\"variant\"",
+            "\"cycles\"",
+            "\"ops\"",
+            "\"ops_per_kcycle\"",
+            "\"verified\"",
+            "\"merges\"",
+            "\"merge_fns\"",
+            "\"staleness_max\"",
+            "\"staleness_mean\"",
+            "\"quality\"",
+            "\"staleness_vs_throughput\"",
+            "\"ccache_wins_vs_atomic\"",
+            "\"native_verified\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
+        // the native check was disabled -> null, never omitted
+        assert!(j.contains("\"native_verified\": null"), "{j}");
+    }
+
+    #[test]
+    fn parallel_cells_match_serial_cell_for_cell() {
+        let serial = run_serve_on(
+            small_base(),
+            ServeOptions {
+                jobs: 1,
+                ..small_opts()
+            },
+        );
+        let parallel = run_serve_on(
+            small_base(),
+            ServeOptions {
+                jobs: 4,
+                ..small_opts()
+            },
+        );
+        assert_eq!(serial.cells.len(), parallel.cells.len());
+        for (s, p) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(s.variant, p.variant);
+            assert_eq!(s.cycles, p.cycles, "cycles diverged under --jobs");
+            assert_eq!(s.staleness_max, p.staleness_max);
+            assert_eq!(s.staleness_mean, p.staleness_mean);
+        }
+    }
+
+    #[test]
+    fn native_cross_check_verifies() {
+        let opts = ServeOptions {
+            deadline: 32,
+            native_check: true,
+            ..small_opts()
+        };
+        let r = run_serve_on(small_base(), opts);
+        assert_eq!(r.native_verified, Some(true), "native backend diverged");
+    }
+}

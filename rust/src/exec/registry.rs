@@ -8,7 +8,7 @@
 
 use crate::workloads::graph::GraphKind;
 use crate::workloads::kvstore::KvMerge;
-use crate::workloads::{bfs, bloom, cms, histogram, hll, kmeans, kvstore, pagerank};
+use crate::workloads::{bfs, bloom, cms, histogram, hll, kmeans, kvserve, kvstore, pagerank};
 
 use super::error::ExecError;
 use super::workload::WorkloadHandle;
@@ -28,6 +28,37 @@ pub struct SketchSpec {
     pub hll_precision: usize,
 }
 
+/// Geometry knobs for the `kvserve` serving tier, carried alongside the
+/// size spec like [`SketchSpec`]. Sentinels mean "derive the default":
+/// `0` for the integer knobs, a negative `skew_drift`, an all-zero mix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// Tenants in the tier (`--tenants`; default 4).
+    pub tenants: usize,
+    /// Shards the tenants map onto (`--shards`; default: one per
+    /// tenant).
+    pub shards: usize,
+    /// Read:update:scan weights (`--mix r:u:s`; default 70:25:5).
+    pub mix: (u32, u32, u32),
+    /// Skew-drift amplitude (`--skew-drift`; `< 0` = default 0.2).
+    pub skew_drift: f64,
+    /// Soft-merge deadline in unmerged updates (`--merge-deadline`;
+    /// default 64).
+    pub merge_deadline: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            tenants: 0,
+            shards: 0,
+            mix: (0, 0, 0),
+            skew_drift: -1.0,
+            merge_deadline: 0,
+        }
+    }
+}
+
 /// How to size a workload instance: the working set of its contended
 /// structure targets `frac` x the LLC capacity (the paper's Section 6.1
 /// sweep axis), plus the RNG seed, the key-skew ablation knob and the
@@ -43,6 +74,8 @@ pub struct SizeSpec {
     pub zipf_theta: f64,
     /// Sketch geometry (ignored by non-sketch workloads).
     pub sketch: SketchSpec,
+    /// Serving-tier geometry (ignored by everything but `kvserve`).
+    pub serve: ServeSpec,
 }
 
 impl SizeSpec {
@@ -53,6 +86,7 @@ impl SizeSpec {
             seed,
             zipf_theta: 0.0,
             sketch: SketchSpec::default(),
+            serve: ServeSpec::default(),
         }
     }
 
@@ -63,6 +97,11 @@ impl SizeSpec {
 
     pub fn with_sketch(mut self, sketch: SketchSpec) -> Self {
         self.sketch = sketch;
+        self
+    }
+
+    pub fn with_serve(mut self, serve: ServeSpec) -> Self {
+        self.serve = serve;
         self
     }
 
@@ -88,6 +127,9 @@ pub struct WorkloadSpec {
     pub fig6: bool,
     /// One of the four core paper benchmarks.
     pub core: bool,
+    /// Runs on the native-thread backend (`Backend::Native`);
+    /// `--list-workloads` reports it.
+    pub native: bool,
     pub build: fn(&SizeSpec) -> WorkloadHandle,
 }
 
@@ -157,6 +199,10 @@ fn build_hll(s: &SizeSpec) -> WorkloadHandle {
     WorkloadHandle::new(hll::HllWorkload::sized(s))
 }
 
+fn build_kvserve(s: &SizeSpec) -> WorkloadHandle {
+    WorkloadHandle::new(kvserve::KvServeWorkload::sized(s))
+}
+
 static REGISTRY: &[WorkloadSpec] = &[
     WorkloadSpec {
         name: "kvstore",
@@ -166,6 +212,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: true,
         core: true,
+        native: true,
         build: build_kv_add,
     },
     WorkloadSpec {
@@ -176,6 +223,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: true,
         core: false,
+        native: true,
         build: build_kv_sat,
     },
     WorkloadSpec {
@@ -186,6 +234,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: true,
         core: false,
+        native: true,
         build: build_kv_cmul,
     },
     WorkloadSpec {
@@ -196,6 +245,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: true,
+        native: true,
         build: build_kmeans,
     },
     WorkloadSpec {
@@ -206,6 +256,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: false,
+        native: true,
         build: build_kmeans_approx,
     },
     WorkloadSpec {
@@ -216,6 +267,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: false,
+        native: true,
         build: build_pagerank_rmat,
     },
     WorkloadSpec {
@@ -226,6 +278,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: false,
+        native: true,
         build: build_pagerank_ssca,
     },
     WorkloadSpec {
@@ -236,6 +289,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: true,
+        native: true,
         build: build_pagerank_uniform,
     },
     WorkloadSpec {
@@ -246,6 +300,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: true,
+        native: true,
         build: build_bfs_rmat,
     },
     WorkloadSpec {
@@ -256,6 +311,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: false,
         core: false,
+        native: true,
         build: build_bfs_ssca,
     },
     WorkloadSpec {
@@ -266,6 +322,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: false,
         fig6: true,
         core: false,
+        native: true,
         build: build_bfs_uniform,
     },
     WorkloadSpec {
@@ -276,6 +333,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: false,
         core: false,
+        native: true,
         build: build_histogram,
     },
     WorkloadSpec {
@@ -286,6 +344,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: false,
         core: false,
+        native: true,
         build: build_cms,
     },
     WorkloadSpec {
@@ -296,6 +355,7 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: false,
         core: false,
+        native: true,
         build: build_bloom,
     },
     WorkloadSpec {
@@ -306,7 +366,19 @@ static REGISTRY: &[WorkloadSpec] = &[
         key_skew: true,
         fig6: false,
         core: false,
+        native: true,
         build: build_hll,
+    },
+    WorkloadSpec {
+        name: "kvserve",
+        aliases: &["serve", "kv-serve"],
+        summary: "multi-tenant KV serving tier, staleness-bounded soft-merges",
+        variants: &kvserve::VARIANTS,
+        key_skew: true,
+        fig6: false,
+        core: false,
+        native: true,
+        build: build_kvserve,
     },
 ];
 
@@ -361,6 +433,7 @@ mod tests {
         assert_eq!(lookup("hist").unwrap().name, "histogram");
         assert_eq!(lookup("count-min").unwrap().name, "cms");
         assert_eq!(lookup("hyperloglog").unwrap().name, "hll");
+        assert_eq!(lookup("serve").unwrap().name, "kvserve");
         assert!(matches!(
             lookup("nope"),
             Err(ExecError::UnknownBenchmark { .. })
@@ -371,7 +444,7 @@ mod tests {
     fn key_skew_marks_exactly_the_keyed_workloads() {
         for s in registry() {
             let expect = s.name.starts_with("kvstore")
-                || matches!(s.name, "histogram" | "cms" | "bloom" | "hll");
+                || matches!(s.name, "histogram" | "cms" | "bloom" | "hll" | "kvserve");
             assert_eq!(s.key_skew, expect, "{}: key_skew flag wrong", s.name);
         }
     }
@@ -381,8 +454,12 @@ mod tests {
         assert_eq!(fig6_panels().len(), 10);
         assert_eq!(core_panels().len(), 4);
         assert!(
-            registry().len() >= 15,
-            "histogram and the sketch family must be registered"
+            registry().len() >= 16,
+            "histogram, the sketch family and kvserve must be registered"
+        );
+        assert!(
+            registry().iter().all(|s| s.native),
+            "every workload runs on the native backend"
         );
     }
 

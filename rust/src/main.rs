@@ -9,6 +9,11 @@
 //!   partsweep— LLC capacity x partition x co-runner grid for the
 //!              CCache variant (`--quick` for CI smoke, `--json` for
 //!              the schema-checked record)
+//!   serve    — kvserve serving sweep: merge-deadline x skew x variant
+//!              staleness-vs-throughput frontier (`--tenants`,
+//!              `--shards`, `--mix r:u:s`, `--skew-drift`,
+//!              `--merge-deadline` pin the tier; composes with
+//!              `--corun` and `--partition-ways`)
 //!   bench    — perf_hotpath suite: engine throughput with fast/slow
 //!              speedups; `--json BENCH_<n>.json` writes the
 //!              perf-trajectory record (`--quick` for CI smoke)
@@ -49,16 +54,21 @@
 //!   ccache run --bench kvstore --partition-ways 4 --partition-policy reuse --corun 2
 //!   ccache sweep --bench bloom --jobs 8 --json bloom_sweep.json
 //!   ccache partsweep --quick --json partsweep.json
+//!   ccache serve --quick --json serve.json
+//!   ccache serve --tenants 8 --mix 80:15:5 --merge-deadline 32 --corun 2
+//!   ccache run --bench kvserve --variant ccache --tenants 8 --skew-drift 0.3
+//!   ccache --list-workloads
 //!   ccache bench --quick --json BENCH_smoke.json
 //!   ccache --list-merges
 //!   ccache runtime
 
 use ccache::coordinator::partsweep::{PART_CORUN_CORES, PART_WORK_CORES};
+use ccache::coordinator::serve::SERVE_WORK_CORES;
 use ccache::coordinator::{
-    perf, report, run_partsweep_on, run_sweep_with, run_xval, scaled_config, PartsweepOptions,
-    SweepOptions, XvalOptions, WS_FRACTIONS,
+    perf, report, run_partsweep_on, run_serve_on, run_sweep_with, run_xval, scaled_config,
+    PartsweepOptions, ServeOptions, SweepOptions, XvalOptions, WS_FRACTIONS,
 };
-use ccache::exec::registry::{self, SizeSpec, SketchSpec};
+use ccache::exec::registry::{self, ServeSpec, SizeSpec, SketchSpec};
 use ccache::exec::{Backend, CorunSpec, ExecError, Variant, WorkloadSpec};
 use ccache::merge;
 use ccache::merge::MergeRegistry;
@@ -67,6 +77,7 @@ use ccache::sim::hierarchy::level::PartitionPolicy;
 use ccache::sim::overhead::OverheadModel;
 use ccache::util::cli::Args;
 use ccache::workloads::sketch::register_sketch_merges;
+use ccache::workloads::traffic::Mix;
 
 fn fail(msg: impl std::fmt::Display) -> ! {
     eprintln!("error: {msg}");
@@ -123,8 +134,14 @@ fn main() {
         .opt("json", "", "sweep/bench: also write machine-readable results to this path")
         .opt("merge", "", "override the installed merge function: name[:param]")
         .opt("bench-id", "dev", "bench: trajectory label for the JSON record (BENCH_<id>.json)")
-        .flag("quick", "bench/partsweep: trim the workload grid (CI smoke mode)")
+        .opt("tenants", "0", "kvserve: tenants in the serving tier (0 = default 4)")
+        .opt("shards", "0", "kvserve: shards tenants map onto (0 = one per tenant)")
+        .opt("mix", "", "kvserve: read:update:scan weights, e.g. 70:25:5 (default)")
+        .opt("skew-drift", "-1", "kvserve: per-epoch skew drift amplitude (-1 = default 0.2)")
+        .opt("merge-deadline", "0", "kvserve: soft-merge deadline, in updates (0 = default)")
+        .flag("quick", "bench/partsweep/serve: trim the workload grid (CI smoke mode)")
         .flag("list-merges", "list registered merge functions and exit")
+        .flag("list-workloads", "list registered workloads (variants, native support) and exit")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
         .flag("no-dirty-merge", "disable the dirty-merge optimization")
@@ -141,6 +158,21 @@ fn main() {
             println!("  {:<18} {idem}  {}", spec.name, spec.summary);
         }
         println!("(select with --merge name[:param]; extend via merge::MergeRegistry)");
+        return;
+    }
+
+    if args.has("list-workloads") {
+        println!("workloads (name — variants — native backend):");
+        for spec in registry::registry() {
+            let variants: Vec<&str> = spec.variants.iter().map(|v| v.name()).collect();
+            println!(
+                "  {:<14} {:<28} native={}",
+                spec.name,
+                variants.join(" "),
+                if spec.native { "yes" } else { "no" }
+            );
+        }
+        println!("(run one with `ccache run --bench <name>`; aliases via `ccache list`)");
         return;
     }
 
@@ -202,6 +234,20 @@ fn main() {
         bloom_hashes: args.get_usize("bloom-hashes"),
         hll_precision: hll_p,
     };
+    let mix = match args.get("mix").as_str() {
+        "" => Mix::default(),
+        s => match Mix::parse(s) {
+            Ok(m) => m,
+            Err(e) => fail(e),
+        },
+    };
+    let serve_spec = ServeSpec {
+        tenants: args.get_usize("tenants"),
+        shards: args.get_usize("shards"),
+        mix: (mix.read, mix.update, mix.scan),
+        skew_drift: args.get_f64("skew-drift"),
+        merge_deadline: args.get_usize("merge-deadline"),
+    };
 
     match cmd.as_str() {
         "run" => {
@@ -243,7 +289,8 @@ fn main() {
             let size =
                 SizeSpec::new(args.get_f64("frac"), cfg.llc().size_bytes, args.get_u64("seed"))
                     .with_zipf(zipf_theta)
-                    .with_sketch(sketch);
+                    .with_sketch(sketch)
+                    .with_serve(serve_spec);
             let bench = spec.build(&size);
             if part_ways > 0 {
                 cfg = cfg.with_partition(part_ways, part_policy);
@@ -389,6 +436,75 @@ fn main() {
                 }
             }
         }
+        "serve" => {
+            if !args.get("merge").is_empty() {
+                fail("--merge applies to `run` only (serve installs kvserve's own merges)");
+            }
+            if cores == 0 {
+                cfg.cores = SERVE_WORK_CORES;
+            }
+            if let Err(e) = cfg.validate() {
+                fail(e);
+            }
+            let opts = ServeOptions {
+                quick: args.has("quick"),
+                jobs: args.get_usize("jobs"),
+                seed: args.get_u64("seed"),
+                tenants: args.get_usize("tenants"),
+                shards: args.get_usize("shards"),
+                mix,
+                skew_drift: {
+                    let d = args.get_f64("skew-drift");
+                    if d < 0.0 { 0.2 } else { d }
+                },
+                deadline: args.get_usize("merge-deadline"),
+                corun_cores,
+                partition_ways: part_ways,
+                native_check: true,
+            };
+            eprintln!(
+                "serving sweep on {} ({} front-end cores{}{}{})...",
+                cfg.describe(),
+                cfg.cores,
+                if opts.quick { ", quick grid" } else { "" },
+                if opts.corun_cores > 0 {
+                    ", with co-runner"
+                } else {
+                    ""
+                },
+                if opts.partition_ways > 0 {
+                    ", reuse-aware partition"
+                } else {
+                    ""
+                }
+            );
+            let r = run_serve_on(cfg.clone(), opts);
+            r.table().print();
+            println!(
+                "({} cells in {:.0} ms on {} jobs; ccache >= atomic on {}/{} grid points; \
+                 native check: {})",
+                r.cells.len(),
+                r.wall_clock_ms,
+                r.jobs,
+                r.ccache_wins_vs_atomic(),
+                r.grid_points().len(),
+                match r.native_verified {
+                    Some(true) => "verified",
+                    Some(false) => "FAILED",
+                    None => "skipped",
+                }
+            );
+            let json_path = args.get("json");
+            if !json_path.is_empty() {
+                match std::fs::write(&json_path, r.to_json()) {
+                    Ok(()) => eprintln!("wrote {json_path}"),
+                    Err(e) => fail(format!("writing {json_path}: {e}")),
+                }
+            }
+            if r.native_verified == Some(false) {
+                std::process::exit(1);
+            }
+        }
         "bench" => {
             let bench_report = perf::run_suite(&perf::SuiteOptions {
                 quick: args.has("quick"),
@@ -397,6 +513,7 @@ fn main() {
             bench_report.table().print();
             bench_report.native_table().print();
             bench_report.partition_table().print();
+            bench_report.serve_table().print();
             println!(
                 "(suite wall clock {:.1} s{})",
                 bench_report.wall_clock_secs,
@@ -491,7 +608,7 @@ fn main() {
         }
         other => {
             eprintln!(
-                "unknown command {other}; use run|sweep|partsweep|bench|xval|overhead|runtime|list"
+                "unknown command {other}; use run|sweep|partsweep|serve|bench|xval|overhead|runtime|list"
             );
             std::process::exit(2);
         }

@@ -127,6 +127,37 @@ pub struct PartitionResult {
     pub verified: bool,
 }
 
+/// One kvserve serving cell for the trajectory record: the staleness
+/// bound and throughput of the serving tier at one merge deadline.
+/// Serialized under the report's top-level `"kvserve"` key (same
+/// precedent as `"native"`/`"partition"`: a new key with its own shape,
+/// so existing section validators keep passing).
+#[derive(Clone, Debug)]
+pub struct KvServeResult {
+    /// Soft-merge deadline the cell ran under, in unmerged updates.
+    pub deadline: usize,
+    pub variant: String,
+    pub cycles: u64,
+    /// Requests served.
+    pub ops: u64,
+    /// Measured staleness bound: max age, in ops, of an update at
+    /// publication (0 for the coherent baselines).
+    pub staleness_max: u64,
+    pub staleness_mean: f64,
+    pub verified: bool,
+}
+
+impl KvServeResult {
+    /// Simulated throughput: requests per thousand cycles.
+    pub fn ops_per_kcycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.ops as f64 * 1e3 / self.cycles as f64
+        }
+    }
+}
+
 /// The perf-trajectory record one `ccache bench` run produces.
 /// Serialized (hand-rolled JSON — serde is unavailable offline) to
 /// `BENCH_<bench_id>.json`; committing one per perf-relevant PR gives
@@ -151,6 +182,9 @@ pub struct BenchReport {
     /// LLC-partition cells: the partitioned-vs-unpartitioned cycle
     /// trajectory under the co-runner stressor.
     pub partition: Vec<PartitionResult>,
+    /// kvserve serving cells: the staleness-vs-throughput trajectory
+    /// across merge deadlines (ccache plus the atomic baseline).
+    pub kvserve: Vec<KvServeResult>,
 }
 
 impl BenchReport {
@@ -228,6 +262,26 @@ impl BenchReport {
                 p.verified
             ));
         }
+        out.push_str("\n  ],\n");
+        out.push_str("  \"kvserve\": [\n");
+        for (i, k) in self.kvserve.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"deadline\": {}, \"variant\": {}, \"cycles\": {}, \
+                 \"ops\": {}, \"ops_per_kcycle\": {:.4}, \"staleness_max\": {}, \
+                 \"staleness_mean\": {:.4}, \"verified\": {}}}",
+                k.deadline,
+                json_str(&k.variant),
+                k.cycles,
+                k.ops,
+                k.ops_per_kcycle(),
+                k.staleness_max,
+                k.staleness_mean,
+                k.verified
+            ));
+        }
         out.push_str("\n  ]\n}\n");
         out
     }
@@ -269,6 +323,26 @@ impl BenchReport {
                 format!("{}/{}/{}", p.ways_min, p.ways_max, p.ways_final),
                 p.repartitions.to_string(),
                 p.verified.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// The kvserve serving section as its own table (empty reports
+    /// render a header-only table).
+    pub fn serve_table(&self) -> Table {
+        let mut t = Table::new(
+            format!("kvserve staleness vs throughput — {}", self.config),
+            &["deadline", "variant", "ops/kcyc", "stale max", "stale mean", "verified"],
+        );
+        for k in &self.kvserve {
+            t.row(&[
+                k.deadline.to_string(),
+                k.variant.clone(),
+                format!("{:.2}", k.ops_per_kcycle()),
+                k.staleness_max.to_string(),
+                format!("{:.1}", k.staleness_mean),
+                k.verified.to_string(),
             ]);
         }
         t
@@ -462,6 +536,15 @@ mod tests {
                 repartitions: 7,
                 verified: true,
             }],
+            kvserve: vec![KvServeResult {
+                deadline: 64,
+                variant: "ccache".into(),
+                cycles: 2_000_000,
+                ops: 40_000,
+                staleness_max: 61,
+                staleness_mean: 17.25,
+                verified: true,
+            }],
         }
     }
 
@@ -492,6 +575,11 @@ mod tests {
         assert!(j.contains("\"policy\": \"reuse\""), "{j}");
         assert!(j.contains("\"ways_final\": 5"), "{j}");
         assert!(j.contains("\"repartitions\": 7"), "{j}");
+        // and the kvserve serving section (PR 9 trajectory record)
+        assert!(j.contains("\"kvserve\": ["), "{j}");
+        assert!(j.contains("\"deadline\": 64"), "{j}");
+        assert!(j.contains("\"staleness_max\": 61"), "{j}");
+        assert!(j.contains("\"staleness_mean\": 17.2500"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
     }
@@ -517,6 +605,14 @@ mod tests {
         assert!(t.contains("kvstore"), "{t}");
         assert!(t.contains("reuse"), "{t}");
         assert!(t.contains("2/6/5"), "{t}");
+    }
+
+    #[test]
+    fn serve_table_renders_the_frontier_cell() {
+        let t = demo_report().serve_table().render();
+        assert!(t.contains("ccache"), "{t}");
+        assert!(t.contains("61"), "{t}");
+        assert!(t.contains("17.2"), "{t}");
     }
 
     #[test]

@@ -1,0 +1,631 @@
+//! `kvserve` — the sharded multi-tenant KV *serving* workload: a
+//! sustained request stream (trace-driven, [`traffic`](super::traffic))
+//! against the commutatively-updated value table, executed in epochs
+//! with a **soft-merge deadline**.
+//!
+//! Where the batch `kvstore` workload measures one update phase, this
+//! models a serving tier: reads, commutative-increment updates and
+//! short scans arrive interleaved per the YCSB-style mix, tenants' zipf
+//! skews drift across epochs, and readers may observe *stale* values —
+//! updates privatized by other cores and not yet merged. The run
+//! measures that staleness as its quality metric:
+//!
+//! * **staleness age** of an update = operations (on the issuing core)
+//!   between the update and the merge that publishes it;
+//! * the run reports the **max** (the staleness *bound*) and the
+//!   **mean** across all updates, in ops.
+//!
+//! Per variant: fgl/atomic publish immediately (age 0); dup publishes
+//! at the per-epoch reduction (age bounded by the epoch length); ccache
+//! soft-merges continuously and *forces* a merge every
+//! [`ServeParams::merge_deadline`] updates, so its bound is the
+//! deadline — the knob the `ccache serve` frontier sweeps. The bound is
+//! not just reported but *checked* in [`Workload::verify`] on both
+//! backends.
+//!
+//! Staleness accounting is performed by the program itself (it is a
+//! pure function of the deterministic merge schedule, identical on the
+//! simulator and the native backend) and published post-barrier into a
+//! per-core stats line that verification reads back.
+
+use std::sync::Mutex;
+
+use crate::exec::registry::SizeSpec;
+use crate::exec::scaffold::{DupSpace, LockArray, PTHREAD_LOCK_BYTES};
+use crate::exec::{driver, ExecCtx, RunResult, Variant, Workload};
+use crate::merge::funcs::AddU32;
+use crate::merge::{handle, MergeHandle};
+use crate::sim::addr::Addr;
+use crate::sim::config::MachineConfig;
+use crate::sim::memsys::MemSystem;
+
+use super::traffic::{Mix, OpKind, Request, TraceGen, TrafficSpec};
+
+/// Parameters of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    pub traffic: TrafficSpec,
+    /// Epoch-phased execution: every epoch ends in a publish + barrier.
+    pub epochs: usize,
+    /// Total requests = total_keys * accesses_per_key, split evenly
+    /// across cores and epochs.
+    pub accesses_per_key: usize,
+    /// CCache variant: force a full merge after this many unmerged
+    /// updates — the staleness bound, in ops.
+    pub merge_deadline: usize,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        Self {
+            traffic: TrafficSpec {
+                tenants: 4,
+                keys_per_tenant: 256,
+                shards: 4,
+                mix: Mix::default(),
+                base_theta: 0.6,
+                skew_drift: 0.2,
+                scan_len: 8,
+                seed: 0x5E7E,
+            },
+            epochs: 4,
+            accesses_per_key: 8,
+            merge_deadline: 64,
+        }
+    }
+}
+
+impl ServeParams {
+    /// Requests one core issues per epoch.
+    pub fn ops_per_core_epoch(&self, cores: usize) -> usize {
+        (self.traffic.total_keys() * self.accesses_per_key / (cores * self.epochs)).max(1)
+    }
+
+    /// Working-set bytes of the value table.
+    pub fn working_set_bytes(&self) -> u64 {
+        self.traffic.total_keys() as u64 * 4
+    }
+}
+
+/// Aggregated staleness of one run: the bound (max age), the age sum
+/// and the update count, all in ops. See the module docs for the model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Staleness {
+    pub max_ops: u64,
+    pub sum_ops: u64,
+    pub updates: u64,
+}
+
+impl Staleness {
+    /// Mean age of an update at publication, in ops.
+    pub fn mean_ops(&self) -> f64 {
+        if self.updates == 0 {
+            0.0
+        } else {
+            self.sum_ops as f64 / self.updates as f64
+        }
+    }
+}
+
+/// Per-core staleness accumulator the program carries through the run.
+#[derive(Clone, Copy, Debug, Default)]
+struct StalenessAcc {
+    max: u64,
+    sum: u64,
+    cnt: u64,
+}
+
+impl StalenessAcc {
+    /// `w` pending updates just got published together: their ages at
+    /// the merge point are `w, w-1, ..., 1`.
+    fn window(&mut self, w: u64) {
+        if w > 0 {
+            self.max = self.max.max(w);
+            self.sum += w * (w + 1) / 2;
+            self.cnt += w;
+        }
+    }
+
+    /// `n` updates published immediately (age 0 — fgl/atomic).
+    fn immediate(&mut self, n: u64) {
+        self.cnt += n;
+    }
+}
+
+/// Bytes reserved per core for the published staleness tallies (one
+/// cache line each, so the post-barrier writes never false-share).
+const STATS_LINE: u64 = 64;
+
+#[derive(Clone, Copy)]
+pub struct ServeLayout {
+    values: Addr,
+    locks: LockArray,
+    copies: DupSpace,
+    /// Per-core staleness stats lines ([max, sum_lo, sum_hi, cnt_lo,
+    /// cnt_hi] as u32 words), written post-barrier, read by `verify`.
+    stats: Addr,
+    variant: Variant,
+}
+
+/// The variants the serving tier implements: no CGL (a global lock on a
+/// serving tier is not a credible baseline), atomics included (point
+/// increments map to CAS).
+pub const VARIANTS: [Variant; 4] = [Variant::Fgl, Variant::Dup, Variant::CCache, Variant::Atomic];
+
+/// The serving workload. Keeps the staleness report of the last
+/// verified run so the serve coordinator can read max *and* mean
+/// (`RunResult::quality` only carries the mean).
+pub struct KvServeWorkload {
+    p: ServeParams,
+    last: Mutex<Option<Staleness>>,
+}
+
+impl KvServeWorkload {
+    pub fn new(p: ServeParams) -> Self {
+        Self {
+            p,
+            last: Mutex::new(None),
+        }
+    }
+
+    /// Size the tier to `frac` x LLC, deriving defaults for every
+    /// [`ServeSpec`](crate::exec::registry::ServeSpec) knob left at its
+    /// sentinel.
+    pub fn sized(s: &SizeSpec) -> Self {
+        let sv = s.serve;
+        let tenants = if sv.tenants == 0 { 4 } else { sv.tenants };
+        let keys_total = ((s.target_bytes() / 4) as usize).max(256);
+        let keys_per_tenant = (keys_total / tenants).max(64);
+        let shards = if sv.shards == 0 { tenants } else { sv.shards };
+        let mix = if sv.mix == (0, 0, 0) {
+            Mix::default()
+        } else {
+            Mix {
+                read: sv.mix.0,
+                update: sv.mix.1,
+                scan: sv.mix.2,
+            }
+        };
+        Self::new(ServeParams {
+            traffic: TrafficSpec {
+                tenants,
+                keys_per_tenant,
+                shards,
+                mix,
+                base_theta: if s.zipf_theta > 0.0 {
+                    s.zipf_theta
+                } else {
+                    0.6
+                },
+                skew_drift: if sv.skew_drift < 0.0 {
+                    0.2
+                } else {
+                    sv.skew_drift
+                },
+                scan_len: 8,
+                seed: s.seed,
+            },
+            epochs: 4,
+            accesses_per_key: 8,
+            merge_deadline: if sv.merge_deadline == 0 {
+                64
+            } else {
+                sv.merge_deadline
+            },
+        })
+    }
+
+    pub fn params(&self) -> &ServeParams {
+        &self.p
+    }
+
+    /// Staleness of the last verified run (`None` before any verify).
+    pub fn staleness(&self) -> Option<Staleness> {
+        *self.last.lock().unwrap()
+    }
+
+    fn read_one<C: ExecCtx>(&self, ctx: &mut C, variant: Variant, l: &ServeLayout, key: usize) {
+        let a = l.values.add(key as u64 * 4);
+        // ccache reads go through the COp path (own updates visible,
+        // other cores' unmerged updates not — the staleness semantics);
+        // the other variants read the shared table coherently
+        let _ = match variant {
+            Variant::CCache => ctx.c_read_u32(a, 0),
+            _ => ctx.read_u32(a),
+        };
+    }
+
+    fn update_one<C: ExecCtx>(
+        &self,
+        ctx: &mut C,
+        core: usize,
+        variant: Variant,
+        l: &ServeLayout,
+        key: usize,
+    ) {
+        let k = key as u64;
+        let a = l.values.add(k * 4);
+        match variant {
+            Variant::Fgl => {
+                let lock = l.locks.addr(k);
+                ctx.lock(lock);
+                let v = ctx.read_u32(a);
+                ctx.write_u32(a, v.wrapping_add(1));
+                ctx.unlock(lock);
+            }
+            Variant::Atomic => loop {
+                // fetch-add via CAS loop (the ISA has no fetch-add)
+                let v = ctx.read_u32(a);
+                if ctx.cas_u32(a, v, v.wrapping_add(1)) {
+                    break;
+                }
+            },
+            Variant::Dup => {
+                let pa = l.copies.copy_base(core).add(k * 4);
+                let v = ctx.read_u32(pa);
+                ctx.write_u32(pa, v.wrapping_add(1));
+            }
+            Variant::CCache => {
+                let v = ctx.c_read_u32(a, 0);
+                ctx.c_write_u32(a, v.wrapping_add(1), 0);
+            }
+            Variant::Cgl => unreachable!("driver rejects unsupported variants"),
+        }
+    }
+
+    fn scan_one<C: ExecCtx>(&self, ctx: &mut C, variant: Variant, l: &ServeLayout, req: Request) {
+        let kpt = self.p.traffic.keys_per_tenant;
+        let tstart = req.tenant * kpt;
+        for i in 0..self.p.traffic.scan_len {
+            let k = tstart + (req.key - tstart + i) % kpt;
+            self.read_one(ctx, variant, l, k);
+        }
+    }
+
+    /// Per-epoch DUP reduction: this core folds its key range over all
+    /// copies into the master and zeroes the copies, so the next epoch
+    /// accumulates fresh deltas.
+    fn dup_reduce_epoch<C: ExecCtx>(
+        &self,
+        ctx: &mut C,
+        core: usize,
+        cores: usize,
+        l: &ServeLayout,
+    ) {
+        let keys = self.p.traffic.total_keys();
+        let lo = (core * keys / cores) as u64;
+        let hi = ((core + 1) * keys / cores) as u64;
+        for k in lo..hi {
+            let master = l.values.add(k * 4);
+            let mut acc = ctx.read_u32(master);
+            let mut touched = false;
+            for c in 0..cores {
+                let pa = l.copies.copy_base(c).add(k * 4);
+                let v = ctx.read_u32(pa);
+                if v != 0 {
+                    acc = acc.wrapping_add(v);
+                    ctx.write_u32(pa, 0);
+                    touched = true;
+                }
+                ctx.compute(1);
+            }
+            if touched {
+                ctx.write_u32(master, acc);
+            }
+        }
+    }
+}
+
+impl Workload for KvServeWorkload {
+    type Layout = ServeLayout;
+    type Golden = Vec<u32>;
+
+    fn name(&self) -> String {
+        "kvserve".into()
+    }
+
+    fn supported_variants(&self) -> Vec<Variant> {
+        VARIANTS.to_vec()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.p.working_set_bytes()
+    }
+
+    fn merge_slots(&self) -> Vec<(usize, MergeHandle)> {
+        vec![(0, handle(AddU32))]
+    }
+
+    fn setup(&self, mem: &mut MemSystem, variant: Variant, cores: usize) -> ServeLayout {
+        let keys = self.p.traffic.total_keys() as u64;
+        let values = mem.alloc_lines(keys * 4);
+        let mut l = ServeLayout {
+            values,
+            locks: LockArray::none(),
+            copies: DupSpace::none(),
+            stats: Addr(0),
+            variant,
+        };
+        match variant {
+            Variant::Fgl => l.locks = LockArray::alloc(mem, keys, PTHREAD_LOCK_BYTES),
+            Variant::Dup => l.copies = DupSpace::alloc(mem, keys * 4, cores),
+            _ => {}
+        }
+        l.stats = mem.alloc_lines(cores as u64 * STATS_LINE);
+        l
+    }
+
+    fn program<C: ExecCtx>(
+        &self,
+        ctx: &mut C,
+        core: usize,
+        cores: usize,
+        variant: Variant,
+        l: &ServeLayout,
+    ) {
+        let p = &self.p;
+        let per_epoch = p.ops_per_core_epoch(cores);
+        let deadline = p.merge_deadline as u64;
+        let mut acc = StalenessAcc::default();
+        let mut pending: u64 = 0; // unpublished updates by this core
+        for epoch in 0..p.epochs {
+            let mut gen = TraceGen::new(&p.traffic, core, cores, epoch);
+            for _ in 0..per_epoch {
+                let req = gen.next_request();
+                match req.op {
+                    OpKind::Read => self.read_one(ctx, variant, l, req.key),
+                    OpKind::Scan => self.scan_one(ctx, variant, l, req),
+                    OpKind::Update => {
+                        self.update_one(ctx, core, variant, l, req.key);
+                        match variant {
+                            Variant::CCache => {
+                                pending += 1;
+                                ctx.soft_merge();
+                                if pending >= deadline {
+                                    ctx.merge();
+                                    acc.window(pending);
+                                    pending = 0;
+                                }
+                            }
+                            Variant::Dup => pending += 1,
+                            _ => acc.immediate(1),
+                        }
+                    }
+                }
+                ctx.compute(2);
+            }
+            // epoch boundary: publish everything still pending, then
+            // synchronize — every variant runs the same barrier count
+            match variant {
+                Variant::CCache => {
+                    ctx.merge();
+                    acc.window(pending);
+                    pending = 0;
+                    ctx.barrier();
+                }
+                Variant::Dup => {
+                    ctx.barrier();
+                    self.dup_reduce_epoch(ctx, core, cores, l);
+                    acc.window(pending);
+                    pending = 0;
+                    ctx.barrier();
+                }
+                _ => ctx.barrier(),
+            }
+        }
+        ctx.barrier();
+        // publish this core's tallies in its own stats line (plain
+        // coherent stores; distinct lines, so no contention)
+        let base = l.stats.add(core as u64 * STATS_LINE);
+        ctx.write_u32(base, acc.max as u32);
+        ctx.write_u32(base.add(4), acc.sum as u32);
+        ctx.write_u32(base.add(8), (acc.sum >> 32) as u32);
+        ctx.write_u32(base.add(12), acc.cnt as u32);
+        ctx.write_u32(base.add(16), (acc.cnt >> 32) as u32);
+    }
+
+    fn golden(&self, cores: usize) -> Vec<u32> {
+        golden_counts(&self.p, cores)
+    }
+
+    fn verify(
+        &self,
+        mem: &mut MemSystem,
+        l: &ServeLayout,
+        counts: &Vec<u32>,
+        cores: usize,
+    ) -> (bool, Option<f64>) {
+        let p = &self.p;
+        let values_ok =
+            (0..p.traffic.total_keys()).all(|k| mem.peek(l.values.add(k as u64 * 4)) == counts[k]);
+        // aggregate the per-core staleness tallies
+        let mut st = Staleness::default();
+        for core in 0..cores {
+            let base = l.stats.add(core as u64 * STATS_LINE);
+            st.max_ops = st.max_ops.max(mem.peek(base) as u64);
+            st.sum_ops += mem.peek(base.add(4)) as u64 | (mem.peek(base.add(8)) as u64) << 32;
+            st.updates += mem.peek(base.add(12)) as u64 | (mem.peek(base.add(16)) as u64) << 32;
+        }
+        // the staleness *bound* is part of verification, per variant:
+        // immediate publication for fgl/atomic, the merge deadline for
+        // ccache, the epoch length for dup
+        let bound_ok = match l.variant {
+            Variant::Fgl | Variant::Atomic => st.max_ops == 0,
+            Variant::CCache => st.max_ops <= p.merge_deadline as u64,
+            Variant::Dup => st.max_ops <= p.ops_per_core_epoch(cores) as u64,
+            Variant::Cgl => false,
+        };
+        *self.last.lock().unwrap() = Some(st);
+        (values_ok && bound_ok, Some(st.mean_ops()))
+    }
+}
+
+/// Sequential golden run: per-key update counts, replaying the same
+/// deterministic traces every core consumes.
+pub fn golden_counts(p: &ServeParams, cores: usize) -> Vec<u32> {
+    let per_epoch = p.ops_per_core_epoch(cores);
+    let mut counts = vec![0u32; p.traffic.total_keys()];
+    for core in 0..cores {
+        for epoch in 0..p.epochs {
+            let mut gen = TraceGen::new(&p.traffic, core, cores, epoch);
+            for _ in 0..per_epoch {
+                let r = gen.next_request();
+                if r.op == OpKind::Update {
+                    counts[r.key] += 1;
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// Run through the generic driver, panicking on unsupported variants.
+pub fn run(p: &ServeParams, variant: Variant, cfg: MachineConfig) -> RunResult {
+    driver::run(&KvServeWorkload::new(p.clone()), variant, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ServeParams {
+        ServeParams {
+            traffic: TrafficSpec {
+                tenants: 4,
+                keys_per_tenant: 64,
+                shards: 4,
+                mix: Mix::default(),
+                base_theta: 0.6,
+                skew_drift: 0.2,
+                scan_len: 4,
+                seed: 11,
+            },
+            epochs: 2,
+            accesses_per_key: 8,
+            merge_deadline: 32,
+        }
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    fn run_staleness(p: &ServeParams, v: Variant) -> (RunResult, Staleness) {
+        let w = KvServeWorkload::new(p.clone());
+        let r = driver::run(&w, v, cfg()).unwrap_or_else(|e| panic!("{e}"));
+        let st = w.staleness().expect("verify ran");
+        (r, st)
+    }
+
+    #[test]
+    fn all_variants_verify() {
+        for v in VARIANTS {
+            let r = run(&small(), v, cfg());
+            assert!(r.verified, "variant {v:?} diverged");
+        }
+    }
+
+    #[test]
+    fn coherent_variants_have_zero_staleness() {
+        for v in [Variant::Fgl, Variant::Atomic] {
+            let (r, st) = run_staleness(&small(), v);
+            assert!(r.verified);
+            assert_eq!(st.max_ops, 0, "{v:?} published late");
+            assert_eq!(r.quality, Some(0.0));
+            assert!(st.updates > 0, "no updates in the mix");
+        }
+    }
+
+    #[test]
+    fn ccache_staleness_respects_the_deadline() {
+        let p = small();
+        let (r, st) = run_staleness(&p, Variant::CCache);
+        assert!(r.verified);
+        assert!(st.max_ops > 0, "deadline-batched merges show no staleness");
+        assert!(st.max_ops <= p.merge_deadline as u64);
+        assert!(st.mean_ops() > 0.0 && st.mean_ops() <= st.max_ops as f64);
+    }
+
+    #[test]
+    fn staleness_bound_is_monotone_in_the_deadline() {
+        let mut prev = 0u64;
+        for deadline in [4, 16, 64] {
+            let p = ServeParams {
+                merge_deadline: deadline,
+                ..small()
+            };
+            let (r, st) = run_staleness(&p, Variant::CCache);
+            assert!(r.verified);
+            assert!(
+                st.max_ops >= prev,
+                "staleness bound not monotone: {} at deadline {deadline} after {prev}",
+                st.max_ops
+            );
+            prev = st.max_ops;
+        }
+    }
+
+    #[test]
+    fn dup_staleness_is_epoch_bounded_and_coarser_than_ccache() {
+        let p = ServeParams {
+            merge_deadline: 8,
+            ..small()
+        };
+        let (_, dup) = run_staleness(&p, Variant::Dup);
+        let (_, cc) = run_staleness(&p, Variant::CCache);
+        assert!(dup.max_ops <= p.ops_per_core_epoch(2) as u64);
+        assert!(
+            dup.max_ops > cc.max_ops,
+            "epoch-batched dup ({}) should be staler than deadline-8 ccache ({})",
+            dup.max_ops,
+            cc.max_ops
+        );
+    }
+
+    #[test]
+    fn update_free_mix_serves_reads_only() {
+        let mut p = small();
+        p.traffic.mix = Mix {
+            read: 1,
+            update: 0,
+            scan: 0,
+        };
+        let (r, st) = run_staleness(&p, Variant::CCache);
+        assert!(r.verified);
+        assert_eq!(st.updates, 0);
+        assert_eq!(st.mean_ops(), 0.0);
+    }
+
+    #[test]
+    fn ccache_merges_and_fgl_locks() {
+        let c = run(&small(), Variant::CCache, cfg());
+        assert!(c.stats.merges > 0);
+        assert!(c.stats.cops > 0);
+        let f = run(&small(), Variant::Fgl, cfg());
+        assert!(f.stats.lock_acquires > 0);
+        let a = run(&small(), Variant::Atomic, cfg());
+        assert!(a.stats.atomic_rmws > 0);
+    }
+
+    #[test]
+    fn sized_derives_serve_defaults() {
+        let w = KvServeWorkload::sized(&SizeSpec::new(0.25, 1 << 18, 7));
+        let p = w.params();
+        assert_eq!(p.traffic.tenants, 4);
+        assert_eq!(p.traffic.shards, 4);
+        assert_eq!(p.merge_deadline, 64);
+        assert_eq!(p.traffic.mix, Mix::default());
+        assert!((p.traffic.base_theta - 0.6).abs() < 1e-12);
+        assert!((p.traffic.skew_drift - 0.2).abs() < 1e-12);
+        assert!(w.footprint() > 0);
+    }
+
+    #[test]
+    fn golden_is_deterministic() {
+        let p = small();
+        assert_eq!(golden_counts(&p, 2), golden_counts(&p, 2));
+        // per-core op split covers the whole request budget
+        let total: u64 = golden_counts(&p, 2).iter().map(|&c| c as u64).sum();
+        assert!(total > 0);
+    }
+}

@@ -19,6 +19,12 @@
 //!   aggregation under heavy keyed traffic; [`sketch`] holds the shared
 //!   hashing substrate and the workload-layer `max_u8x64` merge function
 //!   (registered through the public merge registry only)
+//! * [`kvserve`] — the sharded multi-tenant KV *serving* tier: a
+//!   sustained trace-driven read/update/scan stream ([`traffic`]) under
+//!   epoch-phased execution with a soft-merge deadline; quality metric
+//!   is the measured **staleness bound** of unmerged updates
+//! * [`traffic`] — the deterministic YCSB-style trace engine behind
+//!   kvserve: per-tenant zipf distributions with seeded skew drift
 //! * [`graph`] — CSR + RMAT / SSCA / uniform generators (Graph500/GAP
 //!   input substitution)
 //!
@@ -36,6 +42,8 @@ pub mod graph;
 pub mod histogram;
 pub mod hll;
 pub mod kmeans;
+pub mod kvserve;
 pub mod kvstore;
 pub mod pagerank;
 pub mod sketch;
+pub mod traffic;

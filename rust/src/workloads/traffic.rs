@@ -1,0 +1,342 @@
+//! Deterministic trace engine for the serving-tier workloads: a
+//! YCSB-style read/update/scan request mix over a multi-tenant key
+//! space, with per-tenant zipf key distributions whose skew *drifts*
+//! across epochs on a seeded, replayable schedule.
+//!
+//! The generator is a pure function of `(spec, core, epoch)` — no
+//! hidden state, no host entropy — so the same spec replays the same
+//! trace on the simulator and the native-thread backend, and the golden
+//! run can re-derive exactly the requests every core issued
+//! (`tests/traffic.rs` pins both properties, plus a chi-square
+//! goodness-of-fit of the sampler against the analytic zipf mass).
+//!
+//! Tenancy model: `tenants` tenants each own a contiguous range of
+//! `keys_per_tenant` keys; tenant `t` lives on shard `t % shards` and
+//! shard `s` is pinned to core `s % cores`. Every front-end core draws
+//! requests for *all* tenants (commutative updates need no routing —
+//! the CCache premise), but with probability [`LOCAL_BIAS`] it picks
+//! one of its own pinned tenants, modeling affinity routing.
+
+use crate::util::rng::{Rng, SplitMix64, Zipf};
+
+/// Probability that a request targets one of the issuing core's pinned
+/// tenants rather than a uniformly random tenant.
+pub const LOCAL_BIAS: f64 = 0.5;
+
+/// Request kinds in the YCSB-style mix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Point read of one key.
+    Read,
+    /// Commutative increment of one key.
+    Update,
+    /// Short sequential read of [`TrafficSpec::scan_len`] keys.
+    Scan,
+}
+
+/// One generated request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub tenant: usize,
+    /// Global key index in `[0, tenants * keys_per_tenant)`.
+    pub key: usize,
+    pub op: OpKind,
+}
+
+/// Read:update:scan weights (the `--mix r:u:s` CLI flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mix {
+    pub read: u32,
+    pub update: u32,
+    pub scan: u32,
+}
+
+impl Default for Mix {
+    /// The YCSB-B-flavored serving default.
+    fn default() -> Self {
+        Self {
+            read: 70,
+            update: 25,
+            scan: 5,
+        }
+    }
+}
+
+impl Mix {
+    /// Parse `"r:u:s"` (e.g. `70:25:5`). At least one weight must be
+    /// non-zero; updates may be zero (a read-only tier is legal).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("--mix wants r:u:s (e.g. 70:25:5), got '{s}'"));
+        }
+        let w: Vec<u32> = parts
+            .iter()
+            .map(|p| p.trim().parse::<u32>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("--mix '{s}': {e}"))?;
+        let mix = Self {
+            read: w[0],
+            update: w[1],
+            scan: w[2],
+        };
+        if mix.total() == 0 {
+            return Err(format!("--mix '{s}': all weights are zero"));
+        }
+        Ok(mix)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.read as u64 + self.update as u64 + self.scan as u64
+    }
+
+    /// Stable `r:u:s` token for reports and JSON.
+    pub fn token(&self) -> String {
+        format!("{}:{}:{}", self.read, self.update, self.scan)
+    }
+}
+
+/// Everything that determines a trace. Two equal specs generate
+/// byte-identical request streams on any backend.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficSpec {
+    pub tenants: usize,
+    pub keys_per_tenant: usize,
+    /// Shards the tenant set is mapped onto (pinned round-robin across
+    /// cores).
+    pub shards: usize,
+    pub mix: Mix,
+    /// Zipf skew every tenant starts each drift period at.
+    pub base_theta: f64,
+    /// Peak-to-base amplitude of the per-epoch skew drift (0 = static
+    /// skew). Drifted thetas are clamped to the sampler's legal range.
+    pub skew_drift: f64,
+    /// Keys one scan request touches.
+    pub scan_len: usize,
+    pub seed: u64,
+}
+
+impl TrafficSpec {
+    pub fn total_keys(&self) -> usize {
+        self.tenants * self.keys_per_tenant
+    }
+
+    /// The core a tenant's shard is pinned to.
+    pub fn home_core(&self, tenant: usize, cores: usize) -> usize {
+        (tenant % self.shards) % cores
+    }
+}
+
+/// Drift period in epochs: skew ramps up and back over this many epochs
+/// (triangle wave), phase-shifted per tenant so tenants peak at
+/// different times — the multi-tenant interference pattern.
+const DRIFT_PERIOD: f64 = 8.0;
+
+/// The zipf theta tenant `tenant` serves during `epoch` — the seeded,
+/// replayable drift schedule. Clamped away from the sampler's poles
+/// (`theta > 0`, `theta != 1`).
+pub fn drifted_theta(spec: &TrafficSpec, tenant: usize, epoch: usize) -> f64 {
+    let base = spec.base_theta;
+    let theta = if spec.skew_drift == 0.0 {
+        base
+    } else {
+        let phase = (epoch as f64 + tenant as f64 * 1.7).rem_euclid(DRIFT_PERIOD) / DRIFT_PERIOD;
+        // triangle wave in [-1, 1]: -1 at phase 0, +1 at phase 0.5
+        let tri = 2.0 * (1.0 - (2.0 * phase - 1.0).abs()) - 1.0;
+        base + spec.skew_drift * tri
+    };
+    theta.clamp(0.05, 0.95)
+}
+
+/// Analytic zipf mass `P(rank = k)` over `[0, n)` at skew `theta` —
+/// the reference distribution for the chi-square goodness-of-fit test.
+pub fn zipf_pmf(n: usize, theta: f64, k: usize) -> f64 {
+    let h: f64 = (1..=n).map(|i| (i as f64).powf(-theta)).sum();
+    (k as f64 + 1.0).powf(-theta) / h
+}
+
+/// The per-`(core, epoch)` request generator. Construction derives the
+/// epoch's drifted skew for every tenant; [`TraceGen::next`] then emits
+/// requests from one deterministic RNG stream.
+pub struct TraceGen {
+    rng: Rng,
+    zipf: Vec<Zipf>,
+    local: Vec<usize>,
+    spec: TrafficSpec,
+}
+
+impl TraceGen {
+    pub fn new(spec: &TrafficSpec, core: usize, cores: usize, epoch: usize) -> Self {
+        assert!(spec.tenants > 0 && spec.keys_per_tenant > 0 && spec.shards > 0);
+        // mix core and epoch into the stream seed through SplitMix64 so
+        // neighboring (core, epoch) pairs get uncorrelated streams
+        let mut sm = SplitMix64::new(
+            spec.seed
+                ^ (core as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (epoch as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let rng = Rng::new(sm.next_u64());
+        let zipf = (0..spec.tenants)
+            .map(|t| Zipf::new(spec.keys_per_tenant, drifted_theta(spec, t, epoch)))
+            .collect();
+        let local = (0..spec.tenants)
+            .filter(|&t| spec.home_core(t, cores) == core)
+            .collect();
+        Self {
+            rng,
+            zipf,
+            local,
+            spec: *spec,
+        }
+    }
+
+    /// The next request in the stream.
+    pub fn next_request(&mut self) -> Request {
+        let tenant = if !self.local.is_empty() && self.rng.bernoulli(LOCAL_BIAS) {
+            self.local[self.rng.usize_below(self.local.len())]
+        } else {
+            self.rng.usize_below(self.spec.tenants)
+        };
+        let mix = self.spec.mix;
+        let draw = self.rng.below(mix.total());
+        let op = if draw < mix.read as u64 {
+            OpKind::Read
+        } else if draw < mix.read as u64 + mix.update as u64 {
+            OpKind::Update
+        } else {
+            OpKind::Scan
+        };
+        let key = tenant * self.spec.keys_per_tenant + self.zipf[tenant].sample(&mut self.rng);
+        Request { tenant, key, op }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TrafficSpec {
+        TrafficSpec {
+            tenants: 4,
+            keys_per_tenant: 256,
+            shards: 4,
+            mix: Mix::default(),
+            base_theta: 0.6,
+            skew_drift: 0.2,
+            scan_len: 8,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn mix_parses_and_rejects() {
+        assert_eq!(
+            Mix::parse("70:25:5").unwrap(),
+            Mix {
+                read: 70,
+                update: 25,
+                scan: 5
+            }
+        );
+        assert_eq!(Mix::parse(" 1 : 0 : 0 ").unwrap().update, 0);
+        assert!(Mix::parse("70:25").is_err());
+        assert!(Mix::parse("a:b:c").is_err());
+        assert!(Mix::parse("0:0:0").is_err());
+        assert_eq!(Mix::default().token(), "70:25:5");
+    }
+
+    #[test]
+    fn drift_schedule_is_bounded_and_moves() {
+        let s = spec();
+        let thetas: Vec<f64> = (0..16).map(|e| drifted_theta(&s, 0, e)).collect();
+        for &t in &thetas {
+            assert!((0.05..=0.95).contains(&t), "theta {t} out of range");
+        }
+        assert!(
+            thetas.iter().any(|&t| (t - thetas[0]).abs() > 0.05),
+            "drift schedule never moved: {thetas:?}"
+        );
+        // zero drift is static
+        let flat = TrafficSpec {
+            skew_drift: 0.0,
+            ..s
+        };
+        for e in 0..16 {
+            assert_eq!(drifted_theta(&flat, 1, e), flat.base_theta);
+        }
+    }
+
+    #[test]
+    fn tenants_peak_at_different_epochs() {
+        let s = spec();
+        let peak = |tenant: usize| {
+            (0..8)
+                .max_by(|&a, &b| {
+                    drifted_theta(&s, tenant, a)
+                        .partial_cmp(&drifted_theta(&s, tenant, b))
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        assert_ne!(peak(0), peak(1), "tenant phases collide");
+    }
+
+    #[test]
+    fn requests_stay_in_tenant_ranges() {
+        let s = spec();
+        let mut gen = TraceGen::new(&s, 0, 2, 0);
+        for _ in 0..2000 {
+            let r = gen.next_request();
+            assert!(r.tenant < s.tenants);
+            assert_eq!(r.key / s.keys_per_tenant, r.tenant, "key outside tenant range");
+        }
+    }
+
+    #[test]
+    fn identical_specs_replay_identical_traces() {
+        let s = spec();
+        for (core, epoch) in [(0, 0), (1, 3), (3, 7)] {
+            let mut a = TraceGen::new(&s, core, 4, epoch);
+            let mut b = TraceGen::new(&s, core, 4, epoch);
+            for _ in 0..500 {
+                assert_eq!(a.next_request(), b.next_request());
+            }
+        }
+    }
+
+    #[test]
+    fn cores_and_epochs_get_distinct_streams() {
+        let s = spec();
+        let take = |core: usize, epoch: usize| -> Vec<Request> {
+            let mut g = TraceGen::new(&s, core, 4, epoch);
+            (0..200).map(|_| g.next_request()).collect()
+        };
+        assert_ne!(take(0, 0), take(1, 0), "cores share a stream");
+        assert_ne!(take(0, 0), take(0, 1), "epochs share a stream");
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let total: f64 = (0..64).map(|k| zipf_pmf(64, 0.6, k)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "pmf sums to {total}");
+    }
+
+    #[test]
+    fn local_bias_favors_pinned_tenants() {
+        let s = spec(); // 4 tenants on 4 shards over 2 cores: core 0 owns tenants 0, 2
+        let mut gen = TraceGen::new(&s, 0, 2, 0);
+        let n = 4000;
+        let local = (0..n)
+            .filter(|_| {
+                let r = gen.next_request();
+                s.home_core(r.tenant, 2) == 0
+            })
+            .count();
+        // expect LOCAL_BIAS + (1 - LOCAL_BIAS)/2 = 75%; allow slack
+        assert!(
+            local as f64 / n as f64 > 0.65,
+            "local fraction {}",
+            local as f64 / n as f64
+        );
+    }
+}

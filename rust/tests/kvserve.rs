@@ -1,0 +1,116 @@
+//! Acceptance pins for the kvserve serving subsystem (ISSUE 9):
+//! the `serve` sweep produces a staleness-vs-throughput frontier
+//! across at least three merge deadlines and all four serving
+//! variants, ccache throughput dominates the atomic baseline at every
+//! grid point, the measured staleness bound is monotone in the
+//! deadline, and golden verification holds on both backends.
+
+use std::collections::BTreeSet;
+
+use ccache::coordinator::{run_serve_on, ServeOptions};
+use ccache::exec::{driver, Backend, Variant};
+use ccache::sim::config::MachineConfig;
+use ccache::workloads::kvserve::{KvServeWorkload, ServeParams, VARIANTS};
+use ccache::workloads::traffic::TrafficSpec;
+
+fn small_cfg() -> MachineConfig {
+    MachineConfig::test_small().with_cores(2)
+}
+
+fn quick_opts() -> ServeOptions {
+    ServeOptions {
+        quick: true,
+        jobs: 1,
+        native_check: false,
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn frontier_spans_three_deadlines_and_four_variants() {
+    let res = run_serve_on(small_cfg(), quick_opts());
+
+    let deadlines: BTreeSet<usize> = res.cells.iter().map(|c| c.deadline).collect();
+    assert!(
+        deadlines.len() >= 3,
+        "frontier needs >= 3 deadlines, got {deadlines:?}"
+    );
+    for &(skew, deadline) in res.grid_points().iter() {
+        let variants: BTreeSet<&str> = res
+            .cells
+            .iter()
+            .filter(|c| c.skew == skew && c.deadline == deadline)
+            .map(|c| c.variant.name())
+            .collect();
+        assert_eq!(
+            variants,
+            ["atomic", "ccache", "dup", "fgl"].into_iter().collect(),
+            "grid point ({skew}, {deadline}) missing variants"
+        );
+    }
+    assert!(res.cells.iter().all(|c| c.verified), "a cell diverged");
+    assert!(!res.frontier().is_empty());
+}
+
+#[test]
+fn ccache_throughput_dominates_atomic_across_the_grid() {
+    let res = run_serve_on(small_cfg(), quick_opts());
+    assert_eq!(
+        res.ccache_wins_vs_atomic(),
+        res.grid_points().len(),
+        "ccache lost to atomic somewhere on the quick grid"
+    );
+}
+
+#[test]
+fn staleness_bound_is_monotone_as_the_deadline_tightens() {
+    let res = run_serve_on(small_cfg(), quick_opts());
+    for &(skew, _) in res.grid_points().iter() {
+        let mut cc: Vec<_> = res
+            .cells
+            .iter()
+            .filter(|c| c.skew == skew && c.variant == Variant::CCache)
+            .collect();
+        cc.sort_by_key(|c| c.deadline);
+        for w in cc.windows(2) {
+            assert!(
+                w[0].staleness_max <= w[1].staleness_max,
+                "skew {skew}: tightening the deadline ({} -> {}) raised the bound",
+                w[1].deadline,
+                w[0].deadline
+            );
+            assert!(w[0].staleness_mean <= w[1].staleness_mean + 1e-9);
+        }
+        for c in &cc {
+            assert!(c.staleness_max <= c.deadline as u64);
+        }
+    }
+}
+
+#[test]
+fn golden_verification_holds_on_both_backends() {
+    let p = ServeParams {
+        traffic: TrafficSpec {
+            keys_per_tenant: 64,
+            ..ServeParams::default().traffic
+        },
+        epochs: 2,
+        accesses_per_key: 4,
+        merge_deadline: 32,
+    };
+    let cfg = small_cfg();
+    for &variant in VARIANTS.iter() {
+        for backend in [Backend::Sim, Backend::Native] {
+            let wl = KvServeWorkload::new(p.clone());
+            let r = driver::run_on(&wl, backend, variant, cfg.clone())
+                .unwrap_or_else(|e| panic!("{variant:?} on {backend:?}: {e}"));
+            assert!(r.verified, "{variant:?} on {backend:?} failed verification");
+            let st = wl.staleness().expect("verify computed staleness");
+            match variant {
+                Variant::Fgl | Variant::Atomic => assert_eq!(st.max_ops, 0),
+                Variant::CCache => assert!(st.max_ops <= p.merge_deadline as u64),
+                _ => {}
+            }
+        }
+    }
+}

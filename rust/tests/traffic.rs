@@ -1,0 +1,162 @@
+//! Statistical and determinism guarantees for the kvserve trace engine.
+//!
+//! The serving-tier results are only meaningful if (a) the zipf key
+//! sampler actually follows the analytic zipf mass at the skews the
+//! tests and sweeps use, and (b) a trace is a pure function of
+//! `(spec, core, epoch)` — identical on every backend, every run, with
+//! the skew-drift schedule included. Chi-square goodness-of-fit pins
+//! the first; replay + cross-backend golden verification pin the
+//! second.
+
+use ccache::exec::{driver, Backend, Variant};
+use ccache::sim::config::MachineConfig;
+use ccache::util::rng::{Rng, Zipf};
+use ccache::workloads::kvserve::{golden_counts, KvServeWorkload, ServeParams};
+use ccache::workloads::traffic::{drifted_theta, zipf_pmf, Mix, TraceGen, TrafficSpec};
+
+/// Pearson chi-square statistic of `observed` against `expected`.
+fn chi_square(observed: &[u64], expected: &[f64]) -> f64 {
+    observed
+        .iter()
+        .zip(expected)
+        .map(|(&o, &e)| {
+            let d = o as f64 - e;
+            d * d / e
+        })
+        .sum()
+}
+
+/// With 63 degrees of freedom the chi-square mean is 63 and the
+/// standard deviation ~11.2; 150 sits beyond any plausible tail for a
+/// correct sampler while a uniform or off-by-one sampler lands in the
+/// thousands. Seeds are fixed, so the test is fully deterministic.
+const CHI2_BOUND_DF63: f64 = 150.0;
+
+#[test]
+fn zipf_sampler_matches_the_analytic_mass() {
+    let n = 64;
+    let draws = 20_000u64;
+    for (seed, theta) in [(11u64, 0.6f64), (12, 0.9)] {
+        let zipf = Zipf::new(n, theta);
+        let mut rng = Rng::new(seed);
+        let mut observed = vec![0u64; n];
+        for _ in 0..draws {
+            observed[zipf.sample(&mut rng)] += 1;
+        }
+        let expected: Vec<f64> = (0..n)
+            .map(|k| draws as f64 * zipf_pmf(n, theta, k))
+            .collect();
+        assert!(expected.iter().all(|&e| e > 5.0), "bins too thin for GOF");
+        let chi2 = chi_square(&observed, &expected);
+        assert!(
+            chi2 < CHI2_BOUND_DF63,
+            "theta {theta}: chi2 {chi2:.1} rejects zipf fit"
+        );
+    }
+}
+
+#[test]
+fn trace_keys_follow_the_drifted_zipf_mass() {
+    // One core sees every tenant (cores = 1 makes all tenants local),
+    // so conditioning requests on the tenant gives per-tenant key
+    // histograms to test against that tenant's *drifted* theta.
+    let spec = TrafficSpec {
+        tenants: 4,
+        keys_per_tenant: 64,
+        shards: 4,
+        mix: Mix::default(),
+        base_theta: 0.6,
+        skew_drift: 0.2,
+        scan_len: 8,
+        seed: 77,
+    };
+    let epoch = 3; // mid-drift: tenants sit at distinct effective thetas
+    let mut gen = TraceGen::new(&spec, 0, 1, epoch);
+    let mut hist = vec![vec![0u64; spec.keys_per_tenant]; spec.tenants];
+    let draws = 60_000usize;
+    for _ in 0..draws {
+        let r = gen.next_request();
+        hist[r.tenant][r.key - r.tenant * spec.keys_per_tenant] += 1;
+    }
+    for t in 0..spec.tenants {
+        let total: u64 = hist[t].iter().sum();
+        assert!(total > 8_000, "tenant {t} undersampled ({total})");
+        let theta = drifted_theta(&spec, t, epoch);
+        let expected: Vec<f64> = (0..spec.keys_per_tenant)
+            .map(|k| total as f64 * zipf_pmf(spec.keys_per_tenant, theta, k))
+            .collect();
+        let chi2 = chi_square(&hist[t], &expected);
+        assert!(
+            chi2 < CHI2_BOUND_DF63,
+            "tenant {t} (theta {theta:.3}): chi2 {chi2:.1} rejects drifted fit"
+        );
+    }
+}
+
+#[test]
+fn traces_replay_identically_with_the_drift_schedule() {
+    let spec = TrafficSpec {
+        tenants: 3,
+        keys_per_tenant: 32,
+        shards: 3,
+        mix: Mix::parse("60:30:10").unwrap(),
+        base_theta: 0.7,
+        skew_drift: 0.3,
+        scan_len: 4,
+        seed: 1234,
+    };
+    for epoch in 0..6 {
+        for core in 0..2 {
+            let mut a = TraceGen::new(&spec, core, 2, epoch);
+            let mut b = TraceGen::new(&spec, core, 2, epoch);
+            for _ in 0..500 {
+                assert_eq!(a.next_request(), b.next_request());
+            }
+        }
+    }
+    // The drift schedule itself is replayable spec-to-spec.
+    let twin = spec;
+    for epoch in 0..16 {
+        for t in 0..spec.tenants {
+            assert_eq!(
+                drifted_theta(&spec, t, epoch),
+                drifted_theta(&twin, t, epoch)
+            );
+        }
+    }
+}
+
+/// The end-to-end determinism claim: the same spec yields the same
+/// golden update counts, and both backends reproduce that golden —
+/// i.e. the trace a native thread replays is bit-identical to the one
+/// the simulator replays.
+#[test]
+fn sim_and_native_replay_the_same_trace() {
+    let p = ServeParams {
+        traffic: TrafficSpec {
+            tenants: 4,
+            keys_per_tenant: 64,
+            shards: 4,
+            mix: Mix::default(),
+            base_theta: 0.6,
+            skew_drift: 0.2,
+            scan_len: 8,
+            seed: 9090,
+        },
+        epochs: 3,
+        accesses_per_key: 4,
+        merge_deadline: 16,
+    };
+    let cores = 2;
+    assert_eq!(golden_counts(&p, cores), golden_counts(&p, cores));
+
+    let cfg = MachineConfig::test_small().with_cores(cores);
+    for variant in [Variant::Fgl, Variant::CCache] {
+        for backend in [Backend::Sim, Backend::Native] {
+            let wl = KvServeWorkload::new(p.clone());
+            let r = driver::run_on(&wl, backend, variant, cfg.clone())
+                .unwrap_or_else(|e| panic!("{variant:?} on {backend:?}: {e}"));
+            assert!(r.verified, "{variant:?} on {backend:?} diverged from golden");
+        }
+    }
+}
