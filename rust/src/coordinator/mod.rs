@@ -7,6 +7,7 @@
 pub mod experiment;
 pub mod partsweep;
 pub mod perf;
+pub mod protosweep;
 pub mod report;
 pub mod serve;
 pub mod sweep;
@@ -14,6 +15,9 @@ pub mod xval;
 
 pub use experiment::{run_verified, scaled_config, sized_workload, SCALED_LLC_BYTES};
 pub use partsweep::{run_partsweep, run_partsweep_on, PartsweepOptions, PartsweepResult};
+pub use protosweep::{
+    run_protosweep, run_protosweep_on, ProtosweepOptions, ProtosweepResult,
+};
 pub use serve::{run_serve, run_serve_on, ServeOptions, ServeResult};
 pub use sweep::{
     run_sweep, run_sweep_skewed, run_sweep_with, SweepOptions, SweepPoint, SweepResult,

@@ -22,12 +22,14 @@ use crate::sim::hierarchy::level::PartitionPolicy;
 use crate::sim::machine::{CoreCtx, Machine};
 use crate::sim::memsys::MemSystem;
 use crate::util::bench::{
-    time, BenchReport, KvServeResult, NativeResult, PartitionResult, ScenarioResult,
+    time, BenchReport, KvServeResult, NativeResult, PartitionResult, ProtoResult,
+    ScenarioResult,
 };
 use crate::workloads::kvserve::{KvServeWorkload, ServeParams};
 use crate::workloads::traffic::{Mix, TrafficSpec};
 
 use super::experiment::scaled_config;
+use super::protosweep::{run_protosweep_on, ProtosweepOptions};
 use super::serve::SERVE_DEADLINES;
 
 /// How to run the suite.
@@ -327,6 +329,37 @@ fn serve_section(quick: bool) -> Vec<KvServeResult> {
     out
 }
 
+/// Coherence-protocol cells for the trajectory record: the protosweep
+/// grid on the small machine, one row per benchmark × protocol ×
+/// variant, so the trajectory tracks how mesi/dragon/partial move
+/// relative to each other PR over PR. Always the quick (two-benchmark)
+/// grid — the full grid is `ccache protosweep`'s job; the record only
+/// needs the relative-cycle signal.
+fn proto_section(_quick: bool) -> Vec<ProtoResult> {
+    let base = MachineConfig::test_small().with_cores(2);
+    let r = run_protosweep_on(
+        base,
+        ProtosweepOptions {
+            quick: true,
+            jobs: 0,
+            seed: 42,
+        },
+    );
+    r.cells
+        .iter()
+        .map(|c| ProtoResult {
+            name: c.benchmark.clone(),
+            protocol: c.protocol.into(),
+            variant: c.variant.into(),
+            supported: c.supported,
+            cycles: c.cycles,
+            dragon_updates: c.dragon_updates,
+            dir_msgs: c.dir_msgs,
+            verified: c.verified,
+        })
+        .collect()
+}
+
 /// Run the whole suite.
 pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     let div = if opts.quick { 20 } else { 1 };
@@ -378,6 +411,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
     let native = native_section(opts.quick);
     let partition = partition_section(opts.quick);
     let kvserve = serve_section(opts.quick);
+    let protosweep = proto_section(opts.quick);
 
     BenchReport {
         bench_id: opts.bench_id.clone(),
@@ -389,6 +423,7 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
         native,
         partition,
         kvserve,
+        protosweep,
     }
 }
 
@@ -446,6 +481,28 @@ mod tests {
                 "atomic" => assert_eq!(r.staleness_max, 0, "atomic published late"),
                 "ccache" => assert!(r.staleness_max <= r.deadline as u64),
                 other => panic!("unexpected variant {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn proto_section_covers_every_protocol() {
+        let rows = proto_section(true);
+        for p in ["mesi", "dragon", "partial"] {
+            assert!(
+                rows.iter().any(|r| r.protocol == p && r.supported),
+                "no supported {p} cell in the record"
+            );
+        }
+        for r in &rows {
+            if r.supported {
+                assert!(r.verified, "{}-{}-{} diverged", r.name, r.protocol, r.variant);
+                assert!(r.cycles > 0);
+            } else {
+                assert_eq!(r.cycles, 0);
+            }
+            if r.protocol != "dragon" {
+                assert_eq!(r.dragon_updates, 0, "{}-{} broadcast updates", r.name, r.protocol);
             }
         }
     }

@@ -1,0 +1,581 @@
+//! The protocol sweep: coherence protocol x execution variant x
+//! benchmark, the experiment behind the protocol-generic hierarchy
+//! refactor: *which coherence protocol serves which sharing pattern,
+//! and does CCache keep winning under all of them?*
+//!
+//! Each cell is one simulated run of a benchmark/variant pair under one
+//! [`ProtocolKind`]:
+//! * **mesi** — the write-invalidate baseline every earlier experiment
+//!   ran on (the refactor is pinned bit-identical to the pre-trait walk
+//!   by `tests/mesi_refactor_diff.rs`);
+//! * **dragon** — write-update: writes broadcast to sharers instead of
+//!   invalidating them, trading invalidation+refetch storms for update
+//!   bandwidth (`dragon_updates`/`update_words` count it);
+//! * **partial** — the shared level stops ordering plain stores; only
+//!   CCache merges and barrier flushes publish. Variants that need
+//!   coherent RMWs (fgl, atomic, cgl) are typed-rejected
+//!   ([`ExecError::UnsupportedProtocol`]) and recorded as unsupported
+//!   cells, not failures.
+//!
+//! Cells fan out over the same scoped worker pool as
+//! [`partsweep`](super::partsweep): each cell builds its own machine,
+//! so results are bit-identical to serial execution and `--jobs`
+//! changes wall-clock only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::exec::{ExecError, RunResult, Variant, WorkloadHandle};
+use crate::sim::config::MachineConfig;
+use crate::sim::hierarchy::protocol::ProtocolKind;
+use crate::util::bench::Table;
+
+use super::experiment::{scaled_config, sized_workload};
+
+/// Working-set fraction of the LLC every cell uses — big enough that
+/// the shared structure spills across private caches (sharing traffic
+/// is the whole point of a protocol sweep).
+pub const PROTO_WS_FRAC: f64 = 0.5;
+
+/// Workload cores every cell runs.
+pub const PROTO_WORK_CORES: usize = 4;
+
+/// The benchmark set; `--quick` keeps the first two.
+pub const PROTO_BENCHES: [&str; 4] = ["kvstore", "kmeans", "pagerank-uniform", "kvserve"];
+
+/// Knobs for one protocol sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct ProtosweepOptions {
+    /// Trim the grid for CI smoke: 2 benchmarks.
+    pub quick: bool,
+    /// Worker threads for the cell grid; 0 = all host cores.
+    pub jobs: usize,
+    pub seed: u64,
+}
+
+impl Default for ProtosweepOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            jobs: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// One grid cell: the axes plus the counters the trajectory record and
+/// the CI schema check consume. `merge_fns`/`quality` are the shared
+/// sweep-cell keys every coordinator emitter carries.
+#[derive(Clone, Debug)]
+pub struct ProtoCell {
+    pub benchmark: String,
+    /// Protocol token ([`ProtocolKind::name`]).
+    pub protocol: &'static str,
+    /// Variant token ([`Variant::name`]).
+    pub variant: &'static str,
+    /// False when the protocol typed-rejected the variant (partial x
+    /// fgl); every timing field below is then zero.
+    pub supported: bool,
+    pub cycles: u64,
+    pub verified: bool,
+    pub dir_msgs: u64,
+    pub invalidations: u64,
+    pub dragon_updates: u64,
+    pub llc_misses: u64,
+    /// Merge functions installed in the MFRF (CCache cells; empty
+    /// otherwise) — shared cell key with the other sweep emitters.
+    pub merge_fns: Vec<String>,
+    /// Quality metric of approximate variants (shared cell key; `null`
+    /// for the exact protosweep benchmarks).
+    pub quality: Option<f64>,
+}
+
+impl ProtoCell {
+    fn from_run(
+        benchmark: &str,
+        protocol: ProtocolKind,
+        variant: Variant,
+        r: Option<&RunResult>,
+    ) -> Self {
+        match r {
+            Some(r) => Self {
+                benchmark: benchmark.to_string(),
+                protocol: protocol.name(),
+                variant: variant.name(),
+                supported: true,
+                cycles: r.cycles(),
+                verified: r.verified,
+                dir_msgs: r.stats.directory_msgs,
+                invalidations: r.stats.invalidations,
+                dragon_updates: r.stats.dragon_updates,
+                llc_misses: r.stats.llc().misses,
+                merge_fns: r.merge_fns.clone(),
+                quality: r.quality,
+            },
+            None => Self {
+                benchmark: benchmark.to_string(),
+                protocol: protocol.name(),
+                variant: variant.name(),
+                supported: false,
+                cycles: 0,
+                verified: false,
+                dir_msgs: 0,
+                invalidations: 0,
+                dragon_updates: 0,
+                llc_misses: 0,
+                merge_fns: Vec::new(),
+                quality: None,
+            },
+        }
+    }
+}
+
+/// A completed protocol sweep.
+#[derive(Clone, Debug)]
+pub struct ProtosweepResult {
+    pub llc_bytes: usize,
+    pub work_cores: usize,
+    pub seed: u64,
+    pub cells: Vec<ProtoCell>,
+    pub wall_clock_ms: f64,
+    pub jobs: usize,
+}
+
+impl ProtosweepResult {
+    /// The headline: per protocol, the benchmarks where the CCache
+    /// variant beats every other supported variant outright (strictly
+    /// fewer cycles). Returned in [`ProtocolKind::ALL`] order.
+    pub fn ccache_wins_by_protocol(&self) -> Vec<(&'static str, usize)> {
+        ProtocolKind::ALL
+            .iter()
+            .map(|p| {
+                let wins = self
+                    .cells
+                    .iter()
+                    .filter(|c| {
+                        c.protocol == p.name() && c.variant == "ccache" && c.supported
+                    })
+                    .filter(|cc| {
+                        self.cells
+                            .iter()
+                            .filter(|o| {
+                                o.protocol == cc.protocol
+                                    && o.benchmark == cc.benchmark
+                                    && o.variant != "ccache"
+                                    && o.supported
+                            })
+                            .all(|o| cc.cycles < o.cycles)
+                    })
+                    .count();
+                (p.name(), wins)
+            })
+            .collect()
+    }
+
+    /// Cells where a non-MESI protocol's cycle total differs from the
+    /// MESI cell on the same benchmark/variant axes — the sweep is
+    /// vacuous if the protocols never diverge.
+    pub fn divergent_cells(&self) -> Vec<&ProtoCell> {
+        self.cells
+            .iter()
+            .filter(|c| c.protocol != "mesi" && c.supported)
+            .filter(|c| {
+                self.cells.iter().any(|m| {
+                    m.protocol == "mesi"
+                        && m.benchmark == c.benchmark
+                        && m.variant == c.variant
+                        && m.cycles != c.cycles
+                })
+            })
+            .collect()
+    }
+
+    /// Hand-rolled JSON (serde is unavailable offline), one object per
+    /// cell under a top-level `"protosweep"` key, headlined by
+    /// `ccache_wins_by_protocol`. Shape is pinned by the CI
+    /// `protosweep-smoke` schema check.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n  \"protosweep\": {\n");
+        out.push_str(&format!("    \"llc_bytes\": {},\n", self.llc_bytes));
+        out.push_str(&format!("    \"work_cores\": {},\n", self.work_cores));
+        out.push_str(&format!("    \"ws_frac\": {:.2},\n", PROTO_WS_FRAC));
+        out.push_str(&format!("    \"seed\": {},\n", self.seed));
+        out.push_str(&format!("    \"jobs\": {},\n", self.jobs));
+        out.push_str(&format!(
+            "    \"wall_clock_ms\": {:.1},\n",
+            self.wall_clock_ms
+        ));
+        out.push_str("    \"ccache_wins_by_protocol\": {");
+        for (i, (name, wins)) in self.ccache_wins_by_protocol().iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{name}\": {wins}"));
+        }
+        out.push_str("},\n");
+        out.push_str(&format!(
+            "    \"divergent_cells\": {},\n",
+            self.divergent_cells().len()
+        ));
+        out.push_str("    \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "      {{\"benchmark\": \"{}\", \"protocol\": \"{}\", \"variant\": \"{}\", \
+                 \"supported\": {}, \"cycles\": {}, \"verified\": {}, \"dir_msgs\": {}, \
+                 \"invalidations\": {}, \"dragon_updates\": {}, \"llc_misses\": {}, \
+                 \"merge_fns\": [{}], \"quality\": {}}}",
+                c.benchmark,
+                c.protocol,
+                c.variant,
+                c.supported,
+                c.cycles,
+                c.verified,
+                c.dir_msgs,
+                c.invalidations,
+                c.dragon_updates,
+                c.llc_misses,
+                c.merge_fns
+                    .iter()
+                    .map(|f| format!("\"{f}\""))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                c.quality
+                    .filter(|q| q.is_finite())
+                    .map(|q| format!("{q:.6}"))
+                    .unwrap_or_else(|| "null".into()),
+            ));
+        }
+        out.push_str("\n    ]\n  }\n}\n");
+        out
+    }
+
+    /// The grid as a paper-style ASCII table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "protosweep — cycles by protocol / variant / benchmark",
+            &[
+                "benchmark",
+                "protocol",
+                "variant",
+                "Mcyc",
+                "dir msg",
+                "inval",
+                "updates",
+                "llc miss",
+            ],
+        );
+        for c in &self.cells {
+            if !c.supported {
+                t.row(&[
+                    c.benchmark.clone(),
+                    c.protocol.to_string(),
+                    c.variant.to_string(),
+                    "unsupported".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            t.row(&[
+                c.benchmark.clone(),
+                c.protocol.to_string(),
+                c.variant.to_string(),
+                format!("{:.2}", c.cycles as f64 / 1e6),
+                c.dir_msgs.to_string(),
+                c.invalidations.to_string(),
+                c.dragon_updates.to_string(),
+                c.llc_misses.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run the protocol sweep on the scaled bench machine.
+pub fn run_protosweep(opts: ProtosweepOptions) -> ProtosweepResult {
+    let mut base = scaled_config();
+    base.cores = PROTO_WORK_CORES;
+    run_protosweep_on(base, opts)
+}
+
+/// [`run_protosweep`] on an explicit base machine (tests use the small
+/// config). `base.protocol` is ignored — the grid crosses every
+/// registered protocol.
+pub fn run_protosweep_on(base: MachineConfig, opts: ProtosweepOptions) -> ProtosweepResult {
+    base.validate().unwrap_or_else(|e| panic!("{e}"));
+    let t0 = Instant::now();
+    let benches: &[&str] = if opts.quick {
+        &PROTO_BENCHES[..2]
+    } else {
+        &PROTO_BENCHES
+    };
+
+    let handles: Vec<(&str, WorkloadHandle)> = benches
+        .iter()
+        .map(|&name| {
+            (
+                name,
+                sized_workload(name, PROTO_WS_FRAC, base.llc().size_bytes, opts.seed),
+            )
+        })
+        .collect();
+
+    // the independent cell grid, benchmark-major, protocol-minor — so
+    // the table groups a benchmark's protocol columns together
+    struct CellSpec<'a> {
+        name: &'a str,
+        bench: &'a WorkloadHandle,
+        protocol: ProtocolKind,
+        variant: Variant,
+        cfg: MachineConfig,
+    }
+    let cells: Vec<CellSpec> = handles
+        .iter()
+        .flat_map(|(name, bench)| {
+            let name: &str = name;
+            let base = &base;
+            ProtocolKind::ALL.iter().flat_map(move |&protocol| {
+                Variant::MAIN
+                    .iter()
+                    .filter(|v| bench.supports(**v))
+                    .map(move |&variant| CellSpec {
+                        name,
+                        bench,
+                        protocol,
+                        variant,
+                        cfg: base.clone().with_protocol(protocol),
+                    })
+            })
+        })
+        .collect();
+
+    // a protocol rejecting a variant is a recorded grid fact, not a
+    // failure; anything else aborts the sweep
+    let run_cell = |spec: &CellSpec| -> Option<RunResult> {
+        match spec.bench.run(spec.variant, spec.cfg.clone()) {
+            Ok(r) => Some(r),
+            Err(ExecError::UnsupportedProtocol { .. }) => None,
+            Err(e) => panic!(
+                "protosweep {}/{}/{}: {e}",
+                spec.name,
+                spec.protocol.name(),
+                spec.variant.name()
+            ),
+        }
+    };
+
+    let jobs = effective_jobs(opts.jobs, cells.len());
+    let results: Vec<Option<RunResult>> = if jobs <= 1 {
+        cells.iter().map(run_cell).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<Option<RunResult>>>> = Mutex::new(vec![None; cells.len()]);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let r = run_cell(&cells[i]);
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every cell completed"))
+            .collect()
+    };
+
+    let out_cells: Vec<ProtoCell> = cells
+        .iter()
+        .zip(&results)
+        .map(|(spec, r)| {
+            if let Some(r) = r {
+                assert!(
+                    r.verified,
+                    "protosweep {}/{}/{} diverged from the golden run",
+                    spec.name,
+                    spec.protocol.name(),
+                    spec.variant.name()
+                );
+            }
+            ProtoCell::from_run(spec.name, spec.protocol, spec.variant, r.as_ref())
+        })
+        .collect();
+
+    ProtosweepResult {
+        llc_bytes: base.llc().size_bytes,
+        work_cores: base.cores,
+        seed: opts.seed,
+        cells: out_cells,
+        wall_clock_ms: t0.elapsed().as_secs_f64() * 1e3,
+        jobs,
+    }
+}
+
+fn effective_jobs(requested: usize, cells: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = if requested == 0 { auto } else { requested };
+    j.clamp(1, cells.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> ProtosweepOptions {
+        ProtosweepOptions {
+            quick: true,
+            jobs: 0,
+            seed: 42,
+        }
+    }
+
+    fn small_base() -> MachineConfig {
+        MachineConfig::test_small().with_cores(2)
+    }
+
+    #[test]
+    fn quick_grid_covers_every_protocol_and_variant() {
+        let r = run_protosweep_on(small_base(), small_opts());
+        // 2 benchmarks x 3 protocols x 3 variants
+        assert_eq!(r.cells.len(), 18);
+        for p in ProtocolKind::ALL {
+            assert!(r.cells.iter().any(|c| c.protocol == p.name()));
+        }
+        // partial rejects fgl but runs dup and ccache
+        for c in r.cells.iter().filter(|c| c.protocol == "partial") {
+            assert_eq!(c.supported, c.variant != "fgl", "{c:?}");
+        }
+        // every supported cell ran and verified
+        for c in r.cells.iter().filter(|c| c.supported) {
+            assert!(c.verified, "{c:?}");
+            assert!(c.cycles > 0, "{c:?}");
+        }
+        // unsupported cells carry no telemetry
+        for c in r.cells.iter().filter(|c| !c.supported) {
+            assert_eq!((c.cycles, c.dir_msgs, c.llc_misses), (0, 0, 0));
+        }
+    }
+
+    #[test]
+    fn non_mesi_protocols_actually_change_the_timing() {
+        // the sweep's non-vacuity: dragon and partial must each produce
+        // a different cycle total than mesi on at least one
+        // sharing-heavy cell, and only dragon ever broadcasts updates
+        let r = run_protosweep_on(small_base(), small_opts());
+        let div = r.divergent_cells();
+        for p in ["dragon", "partial"] {
+            assert!(
+                div.iter().any(|c| c.protocol == p),
+                "{p} never diverged from mesi:\n{}",
+                r.table().render()
+            );
+        }
+        assert!(
+            r.cells
+                .iter()
+                .any(|c| c.protocol == "dragon" && c.dragon_updates > 0),
+            "dragon cells never broadcast an update"
+        );
+        for c in r.cells.iter().filter(|c| c.protocol != "dragon") {
+            assert_eq!(c.dragon_updates, 0, "{c:?}");
+        }
+        // partial's whole point: private hits never consult the
+        // directory, so its dup cells send no directory messages
+        for c in r
+            .cells
+            .iter()
+            .filter(|c| c.protocol == "partial" && c.supported)
+        {
+            assert_eq!((c.dir_msgs, c.invalidations), (0, 0), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn json_shape_is_stable_for_the_ci_schema_check() {
+        let mut opts = small_opts();
+        opts.jobs = 1;
+        let r = run_protosweep_on(small_base(), opts);
+        let j = r.to_json();
+        assert!(j.contains("\"protosweep\""), "{j}");
+        for key in [
+            "\"ccache_wins_by_protocol\"",
+            "\"divergent_cells\"",
+            "\"benchmark\"",
+            "\"protocol\"",
+            "\"variant\"",
+            "\"supported\"",
+            "\"cycles\"",
+            "\"verified\"",
+            "\"dir_msgs\"",
+            "\"invalidations\"",
+            "\"dragon_updates\"",
+            "\"llc_misses\"",
+            "\"merge_fns\"",
+            "\"quality\"",
+            "\"mesi\"",
+            "\"dragon\"",
+            "\"partial\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
+    }
+
+    #[test]
+    fn parallel_cells_match_serial_cell_for_cell() {
+        let serial = run_protosweep_on(
+            small_base(),
+            ProtosweepOptions {
+                jobs: 1,
+                ..small_opts()
+            },
+        );
+        let parallel = run_protosweep_on(
+            small_base(),
+            ProtosweepOptions {
+                jobs: 4,
+                ..small_opts()
+            },
+        );
+        assert_eq!(serial.cells.len(), parallel.cells.len());
+        for (s, p) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(s.benchmark, p.benchmark);
+            assert_eq!(s.protocol, p.protocol);
+            assert_eq!(s.variant, p.variant);
+            assert_eq!(s.cycles, p.cycles, "cycles diverged under --jobs");
+            assert_eq!(s.dir_msgs, p.dir_msgs);
+            assert_eq!(s.llc_misses, p.llc_misses);
+        }
+    }
+
+    #[test]
+    fn headline_counts_only_outright_wins() {
+        let r = run_protosweep_on(small_base(), small_opts());
+        let wins = r.ccache_wins_by_protocol();
+        assert_eq!(wins.len(), ProtocolKind::ALL.len());
+        for (name, count) in &wins {
+            assert!(
+                ProtocolKind::ALL.iter().any(|p| p.name() == *name),
+                "{name}"
+            );
+            // quick grid: at most 2 benchmarks can be won per protocol
+            assert!(*count <= 2, "{name}: {count}");
+        }
+    }
+}

@@ -118,6 +118,19 @@ pub fn run_sim<W: Workload>(
             supported,
         });
     }
+    // protocol gating: partial coherence has no coherent RMWs, so
+    // variants built on locks/atomics are typed-rejected up front
+    if !cfg.protocol.supports(variant.name()) {
+        return Err(ExecError::UnsupportedProtocol {
+            benchmark: workload.name(),
+            protocol: cfg.protocol.name(),
+            variant,
+            supported: supported
+                .into_iter()
+                .filter(|v| cfg.protocol.supports(v.name()))
+                .collect(),
+        });
+    }
 
     let corun = corun.filter(|c| c.cores > 0);
     let work_cores = cfg.cores;
@@ -267,6 +280,19 @@ pub fn run_native_with_merge<W: Workload>(
             benchmark: workload.name(),
             variant,
             supported,
+        });
+    }
+    // same protocol gate as the simulator path: the native machine's
+    // real atomics cannot model a non-coherent shared level either
+    if !cfg.protocol.supports(variant.name()) {
+        return Err(ExecError::UnsupportedProtocol {
+            benchmark: workload.name(),
+            protocol: cfg.protocol.name(),
+            variant,
+            supported: supported
+                .into_iter()
+                .filter(|v| cfg.protocol.supports(v.name()))
+                .collect(),
         });
     }
 

@@ -19,6 +19,16 @@ pub enum ExecError {
         variant: Variant,
         supported: Vec<Variant>,
     },
+    /// The configured coherence protocol cannot run this execution
+    /// variant — partial coherence has no coherent RMWs, so the
+    /// lock-based and atomics variants are rejected before the machine
+    /// is built.
+    UnsupportedProtocol {
+        benchmark: String,
+        protocol: &'static str,
+        variant: Variant,
+        supported: Vec<Variant>,
+    },
     /// No registered workload matches this name or alias.
     UnknownBenchmark { name: String, known: Vec<String> },
     /// Not one of [`Variant::ALL`].
@@ -76,6 +86,21 @@ impl fmt::Display for ExecError {
                     names.join(" ")
                 )
             }
+            ExecError::UnsupportedProtocol {
+                benchmark,
+                protocol,
+                variant,
+                supported,
+            } => {
+                let names: Vec<&str> = supported.iter().map(|v| v.name()).collect();
+                write!(
+                    f,
+                    "the {protocol} protocol cannot run {benchmark} variant '{}' \
+                     (it needs coherent RMWs; supported under {protocol}: {})",
+                    variant.name(),
+                    names.join(" ")
+                )
+            }
             ExecError::UnknownBenchmark { name, known } => {
                 write!(
                     f,
@@ -118,6 +143,21 @@ mod tests {
             known: vec!["kvstore".into(), "histogram".into()],
         };
         assert!(e.to_string().contains("kvstore histogram"));
+    }
+
+    #[test]
+    fn protocol_rejection_names_protocol_variant_and_alternatives() {
+        let e = ExecError::UnsupportedProtocol {
+            benchmark: "kvstore".into(),
+            protocol: "partial",
+            variant: Variant::Fgl,
+            supported: vec![Variant::Dup, Variant::CCache],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("partial"), "{msg}");
+        assert!(msg.contains("kvstore"), "{msg}");
+        assert!(msg.contains("'fgl'"), "{msg}");
+        assert!(msg.contains("dup ccache"), "{msg}");
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //!   partsweep— LLC capacity x partition x co-runner grid for the
 //!              CCache variant (`--quick` for CI smoke, `--json` for
 //!              the schema-checked record)
+//!   protosweep— coherence protocol x variant x benchmark grid
+//!              (mesi/dragon/partial; `--quick` for CI smoke, `--json`
+//!              for the schema-checked record)
 //!   serve    — kvserve serving sweep: merge-deadline x skew x variant
 //!              staleness-vs-throughput frontier (`--tenants`,
 //!              `--shards`, `--mix r:u:s`, `--skew-drift`,
@@ -32,9 +35,10 @@
 //! runs). There is no per-benchmark or per-merge dispatch here.
 //! The machine is configurable: `--levels` picks the hierarchy depth
 //! (2 = L1+LLC, 3 = the Table 2 shape, 4 = adds an L3) and
-//! `--llc-kb`/`--l2-kb` resize levels; an illegal geometry — or a merge
-//! fault raised by the simulated machine — prints a diagnostic and
-//! exits 2 instead of panicking.
+//! `--llc-kb`/`--l2-kb` resize levels; `--protocol` selects the
+//! coherence protocol (`--list-protocols` enumerates the registry); an
+//! illegal geometry — or a merge fault raised by the simulated machine
+//! — prints a diagnostic and exits 2 instead of panicking.
 //!
 //! The streaming-sketch family (`cms`, `bloom`, `hll`) takes geometry
 //! flags (`--cms-depth`, `--bloom-hashes`, `--hll-p`); its `max_u8x64`
@@ -54,6 +58,9 @@
 //!   ccache run --bench kvstore --partition-ways 4 --partition-policy reuse --corun 2
 //!   ccache sweep --bench bloom --jobs 8 --json bloom_sweep.json
 //!   ccache partsweep --quick --json partsweep.json
+//!   ccache run --bench kvstore --variant ccache --protocol dragon
+//!   ccache protosweep --quick --json protosweep.json
+//!   ccache --list-protocols
 //!   ccache serve --quick --json serve.json
 //!   ccache serve --tenants 8 --mix 80:15:5 --merge-deadline 32 --corun 2
 //!   ccache run --bench kvserve --variant ccache --tenants 8 --skew-drift 0.3
@@ -63,10 +70,12 @@
 //!   ccache runtime
 
 use ccache::coordinator::partsweep::{PART_CORUN_CORES, PART_WORK_CORES};
+use ccache::coordinator::protosweep::PROTO_WORK_CORES;
 use ccache::coordinator::serve::SERVE_WORK_CORES;
 use ccache::coordinator::{
-    perf, report, run_partsweep_on, run_serve_on, run_sweep_with, run_xval, scaled_config,
-    PartsweepOptions, ServeOptions, SweepOptions, XvalOptions, WS_FRACTIONS,
+    perf, report, run_partsweep_on, run_protosweep_on, run_serve_on, run_sweep_with, run_xval,
+    scaled_config, PartsweepOptions, ProtosweepOptions, ServeOptions, SweepOptions, XvalOptions,
+    WS_FRACTIONS,
 };
 use ccache::exec::registry::{self, ServeSpec, SizeSpec, SketchSpec};
 use ccache::exec::{Backend, CorunSpec, ExecError, Variant, WorkloadSpec};
@@ -74,6 +83,7 @@ use ccache::merge;
 use ccache::merge::MergeRegistry;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::hierarchy::level::PartitionPolicy;
+use ccache::sim::hierarchy::protocol::ProtocolKind;
 use ccache::sim::overhead::OverheadModel;
 use ccache::util::cli::Args;
 use ccache::workloads::sketch::register_sketch_merges;
@@ -129,6 +139,7 @@ fn main() {
         .opt("l2-kb", "0", "override L2 size in KiB (0 = default; needs --levels >= 3)")
         .opt("partition-ways", "0", "run: LLC ways reserved for the merge region (0 = off)")
         .opt("partition-policy", "static", "run: static|reuse (reuse-aware resizing)")
+        .opt("protocol", "mesi", "run/sweep: coherence protocol, mesi|dragon|partial")
         .opt("corun", "0", "streaming co-runner cores (run: 0 = none; partsweep: 0 = default 2)")
         .opt("jobs", "0", "sweep: parallel worker threads (0 = all host cores)")
         .opt("json", "", "sweep/bench: also write machine-readable results to this path")
@@ -142,6 +153,7 @@ fn main() {
         .flag("quick", "bench/partsweep/serve: trim the workload grid (CI smoke mode)")
         .flag("list-merges", "list registered merge functions and exit")
         .flag("list-workloads", "list registered workloads (variants, native support) and exit")
+        .flag("list-protocols", "list registered coherence protocols and exit")
         .flag("full-size", "use the paper's full Table 2 geometry")
         .flag("no-merge-on-evict", "disable the merge-on-evict optimization")
         .flag("no-dirty-merge", "disable the dirty-merge optimization")
@@ -158,6 +170,20 @@ fn main() {
             println!("  {:<18} {idem}  {}", spec.name, spec.summary);
         }
         println!("(select with --merge name[:param]; extend via merge::MergeRegistry)");
+        return;
+    }
+
+    if args.has("list-protocols") {
+        println!("coherence protocols (name — variants — summary):");
+        for p in ProtocolKind::ALL {
+            println!(
+                "  {:<10} {:<24} {}",
+                p.name(),
+                p.supported_variants().join(" "),
+                p.description()
+            );
+        }
+        println!("(select with --protocol <name>; cross them all with `ccache protosweep`)");
         return;
     }
 
@@ -223,6 +249,13 @@ fn main() {
             "unknown --partition-policy '{other}'; use static|reuse"
         )),
     };
+    match ProtocolKind::parse(&args.get("protocol")) {
+        Some(p) => cfg.protocol = p,
+        None => fail(format!(
+            "unknown --protocol '{}'; use mesi|dragon|partial (see --list-protocols)",
+            args.get("protocol")
+        )),
+    }
     let corun_cores = args.get_usize("corun");
     let zipf_theta = args.get_f64("zipf");
     let hll_p = args.get_usize("hll-p");
@@ -361,6 +394,17 @@ fn main() {
                 // partition experiment is `partsweep`
                 fail("--partition-ways/--corun apply to `run` and `partsweep`, not `sweep`");
             }
+            if let Some(v) = Variant::MAIN.iter().find(|v| !cfg.protocol.supports(v.name())) {
+                // the sweep grid crosses every main variant, so a
+                // protocol that rejects one cannot run it — the
+                // cross-protocol experiment is `protosweep`
+                fail(format!(
+                    "sweep crosses the {} variant, which the {} protocol cannot run \
+                     (use `ccache protosweep`)",
+                    v.name(),
+                    cfg.protocol.name()
+                ));
+            }
             if let Err(e) = cfg.validate() {
                 fail(e);
             }
@@ -427,6 +471,54 @@ fn main() {
                 r.wall_clock_ms,
                 r.jobs,
                 r.reuse_wins_under_corun().len()
+            );
+            let json_path = args.get("json");
+            if !json_path.is_empty() {
+                match std::fs::write(&json_path, r.to_json()) {
+                    Ok(()) => eprintln!("wrote {json_path}"),
+                    Err(e) => fail(format!("writing {json_path}: {e}")),
+                }
+            }
+        }
+        "protosweep" => {
+            if cfg.protocol != ProtocolKind::Mesi {
+                fail("protosweep crosses every protocol itself; --protocol applies to `run`/`sweep`");
+            }
+            if part_ways > 0 || corun_cores > 0 {
+                fail("--partition-ways/--corun do not apply to `protosweep`");
+            }
+            if cores == 0 {
+                cfg.cores = PROTO_WORK_CORES;
+            }
+            if let Err(e) = cfg.validate() {
+                fail(e);
+            }
+            let opts = ProtosweepOptions {
+                quick: args.has("quick"),
+                jobs: args.get_usize("jobs"),
+                seed: args.get_u64("seed"),
+            };
+            eprintln!(
+                "protocol sweep on {} ({} workload cores{})...",
+                cfg.describe(),
+                cfg.cores,
+                if opts.quick { ", quick grid" } else { "" }
+            );
+            let r = run_protosweep_on(cfg.clone(), opts);
+            r.table().print();
+            let wins: Vec<String> = r
+                .ccache_wins_by_protocol()
+                .iter()
+                .map(|(p, n)| format!("{p}={n}"))
+                .collect();
+            println!(
+                "({} cells in {:.0} ms on {} jobs; ccache outright wins by protocol: {}; \
+                 {} cell(s) diverge from mesi)",
+                r.cells.len(),
+                r.wall_clock_ms,
+                r.jobs,
+                wins.join(" "),
+                r.divergent_cells().len()
             );
             let json_path = args.get("json");
             if !json_path.is_empty() {
@@ -514,6 +606,7 @@ fn main() {
             bench_report.native_table().print();
             bench_report.partition_table().print();
             bench_report.serve_table().print();
+            bench_report.proto_table().print();
             println!(
                 "(suite wall clock {:.1} s{})",
                 bench_report.wall_clock_secs,
@@ -608,7 +701,7 @@ fn main() {
         }
         other => {
             eprintln!(
-                "unknown command {other}; use run|sweep|partsweep|serve|bench|xval|overhead|runtime|list"
+                "unknown command {other}; use run|sweep|partsweep|protosweep|serve|bench|xval|overhead|runtime|list"
             );
             std::process::exit(2);
         }

@@ -11,6 +11,7 @@
 use std::fmt;
 
 use super::hierarchy::level::{LevelConfig, PartitionPolicy};
+use super::hierarchy::protocol::ProtocolKind;
 use super::hierarchy::timing::Timing;
 
 /// Why a machine configuration is illegal. Produced by
@@ -113,6 +114,13 @@ pub struct MachineConfig {
     /// backoff).
     pub timing: Timing,
     pub ccache: CCacheConfig,
+    /// The coherence protocol the hierarchy walk runs
+    /// ([`ProtocolKind::Mesi`] reproduces the paper's machine; see
+    /// [`protocol`](super::hierarchy::protocol) for Dragon and partial
+    /// coherence). Variant support is protocol-dependent — the driver
+    /// rejects combinations the protocol cannot run (e.g. atomics under
+    /// partial coherence).
+    pub protocol: ProtocolKind,
     /// Functional memory size in bytes.
     pub mem_bytes: usize,
     /// Take the engine's branch-light fast path for coherent L1 read
@@ -135,6 +143,7 @@ impl Default for MachineConfig {
             ],
             timing: Timing::table2(),
             ccache: CCacheConfig::default(),
+            protocol: ProtocolKind::Mesi,
             mem_bytes: 256 << 20,
             fast_path: true,
         }
@@ -201,7 +210,12 @@ impl MachineConfig {
             })
             .collect::<Vec<_>>()
             .join(" + ");
-        format!("{} cores, {}", self.cores, levels)
+        let proto = if self.protocol == ProtocolKind::Mesi {
+            String::new() // the default machine; keep the familiar banner
+        } else {
+            format!(", {} protocol", self.protocol.name())
+        };
+        format!("{} cores, {}{}", self.cores, levels, proto)
     }
 
     // ---- builders ----------------------------------------------------
@@ -214,6 +228,12 @@ impl MachineConfig {
 
     pub fn with_cores(mut self, cores: usize) -> Self {
         self.cores = cores;
+        self
+    }
+
+    /// Select the coherence protocol (`--protocol` on the CLI).
+    pub fn with_protocol(mut self, protocol: ProtocolKind) -> Self {
+        self.protocol = protocol;
         self
     }
 
@@ -356,8 +376,19 @@ mod tests {
         assert_eq!(cfg.timing.mem_cycles, 300);
         assert_eq!(cfg.ccache.source_buffer_entries, 8);
         assert_eq!(cfg.ccache.merge_latency, 170);
+        assert_eq!(cfg.protocol, ProtocolKind::Mesi);
         assert!(cfg.llc().shared && !cfg.l1().shared);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn with_protocol_selects_and_describes() {
+        let cfg = MachineConfig::test_small().with_protocol(ProtocolKind::Dragon);
+        assert_eq!(cfg.protocol, ProtocolKind::Dragon);
+        cfg.validate().unwrap();
+        assert!(cfg.describe().contains("dragon protocol"), "{}", cfg.describe());
+        // the default MESI machine keeps its familiar banner
+        assert!(!MachineConfig::default().describe().contains("protocol"));
     }
 
     #[test]

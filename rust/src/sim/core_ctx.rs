@@ -285,8 +285,12 @@ impl<'m> CoreCtx<'m> {
         let gen = {
             let g = self.state();
             // a barrier is a phase boundary: fold this core's (and any
-            // already-parked cores') fast-path counters into the stats
+            // already-parked cores') fast-path counters into the stats,
+            // and publish this core's buffered stores — under partial
+            // coherence the barrier flush is what makes plain stores
+            // globally visible
             g.mem.flush_hot_stats();
+            g.mem.publish_partial(core);
             g.mem.stats.barriers += 1;
             g.waiting[core] = true;
             let gen = g.barrier_gen;

@@ -1,9 +1,13 @@
-//! Full-map MESI directory, co-located with the (inclusive) LLC.
+//! Full-map directory *storage*, co-located with the (inclusive) LLC.
 //!
 //! A directory entry exists exactly for lines resident in the LLC. It
 //! tracks which private caches hold the line and whether one of them owns
-//! it exclusively (E/M). CData never appears here: c_read/c_write bypass
-//! coherence entirely (Section 4.4).
+//! it exclusively. The *transactions* over these entries (GetS/GetM/Put/
+//! recall state machines) are not here: they belong to the active
+//! [`CoherenceProtocol`](super::hierarchy::protocol::CoherenceProtocol) —
+//! this module only stores protocol-opaque line states and hands out
+//! mutable entries. CData never appears here under any protocol:
+//! c_read/c_write bypass coherence entirely (Section 4.4).
 //!
 //! Storage is an open-addressed hash table (linear probing, fibonacci
 //! hashing, backward-shift deletion) rather than a `HashMap`: every
@@ -53,8 +57,8 @@ impl DirEntry {
     }
 }
 
-/// Directory operations return what coherence actions the caller (memsys)
-/// must perform and account.
+/// Protocol transactions return what coherence actions the caller (the
+/// hierarchy walk) must perform and account.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CoherenceActions {
     /// Invalidation messages to send (count of private caches).
@@ -65,6 +69,13 @@ pub struct CoherenceActions {
     pub owner_writeback: Option<usize>,
     /// Directory messages exchanged for this transaction.
     pub dir_msgs: u32,
+    /// Bitmask of cores whose retained copies receive a write-update
+    /// message (Dragon); always 0 for invalidate-based protocols.
+    pub update_mask: SharerMask,
+    /// The forwarding owner keeps its dirty bit (Dragon Sm: writeback
+    /// responsibility stays with the last writer instead of the data
+    /// being cleaned through on the fetch).
+    pub keep_owner_dirty: bool,
 }
 
 /// Key marking an empty table slot. Line addresses are `byte >> 6` of a
@@ -194,119 +205,40 @@ impl Directory {
         self.find(line.0).map(|i| &self.entries[i])
     }
 
+    /// Mutable entry access for protocol transactions (and for the
+    /// invariant tests, which inject corrupted states through it).
+    pub fn entry_mut(&mut self, line: Line) -> Option<&mut DirEntry> {
+        self.find(line.0).map(|i| &mut self.entries[i])
+    }
+
+    /// Entry for `line`, inserting a fresh `Uncached` one if absent —
+    /// the allocation half of a GetS/GetM transaction.
+    pub fn entry_or_insert(&mut self, line: Line) -> &mut DirEntry {
+        let i = self.slot_or_insert(line.0);
+        &mut self.entries[i]
+    }
+
+    /// Remove the entry for `line` (the storage half of an inclusive
+    /// recall), returning it so the protocol can derive invalidations.
+    pub fn remove_entry(&mut self, line: Line) -> Option<DirEntry> {
+        self.remove(line.0)
+    }
+
+    /// Every occupied entry, for whole-directory invariant sweeps.
+    pub fn iter_entries(&self) -> impl Iterator<Item = (Line, &DirEntry)> + '_ {
+        self.keys
+            .iter()
+            .zip(self.entries.iter())
+            .filter(|(&k, _)| k != EMPTY)
+            .map(|(&k, e)| (Line(k), e))
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
-    }
-
-    /// Core `c` requests read access (GetS).
-    pub fn get_s(&mut self, line: Line, c: usize) -> CoherenceActions {
-        let e = &mut self.entries[self.slot_or_insert(line.0)];
-        let mut act = CoherenceActions {
-            dir_msgs: 1, // the GetS itself
-            ..Default::default()
-        };
-        match e.state {
-            DirState::Uncached => {
-                e.state = DirState::Owned { owner: c }; // grant E
-                e.sharers = 1 << c;
-            }
-            DirState::Shared => {
-                e.sharers |= 1 << c;
-            }
-            DirState::Owned { owner } if owner == c => {
-                // already owner (e.g. refetch after L1 evict, L2 hit path)
-            }
-            DirState::Owned { owner } => {
-                // downgrade owner: fetch its (possibly dirty) data
-                act.owner_writeback = Some(owner);
-                act.dir_msgs += 2; // fwd + data
-                e.state = DirState::Shared;
-                e.sharers |= 1 << c;
-            }
-        }
-        act
-    }
-
-    /// Core `c` requests write access (GetM / upgrade).
-    pub fn get_m(&mut self, line: Line, c: usize) -> CoherenceActions {
-        let e = &mut self.entries[self.slot_or_insert(line.0)];
-        let mut act = CoherenceActions {
-            dir_msgs: 1,
-            ..Default::default()
-        };
-        match e.state {
-            DirState::Uncached => {}
-            DirState::Shared => {
-                let others = e.sharers & !(1 << c);
-                act.invalidations = others.count_ones();
-                act.inv_mask = others;
-                act.dir_msgs += act.invalidations; // one inv per sharer
-            }
-            DirState::Owned { owner } if owner == c => {
-                e.sharers = 1 << c;
-                return act; // silent upgrade, nothing to do
-            }
-            DirState::Owned { owner } => {
-                act.owner_writeback = Some(owner);
-                act.invalidations = 1;
-                act.inv_mask = 1 << owner;
-                act.dir_msgs += 2;
-            }
-        }
-        e.state = DirState::Owned { owner: c };
-        e.sharers = 1 << c;
-        act
-    }
-
-    /// Core `c` evicted its private copy (PutS/PutM). `dirty` = had M.
-    pub fn put(&mut self, line: Line, c: usize, dirty: bool) -> CoherenceActions {
-        let mut act = CoherenceActions {
-            dir_msgs: 1,
-            ..Default::default()
-        };
-        if let Some(i) = self.find(line.0) {
-            let e = &mut self.entries[i];
-            e.sharers &= !(1 << c);
-            match e.state {
-                DirState::Owned { owner } if owner == c => {
-                    e.state = if e.sharers == 0 {
-                        DirState::Uncached
-                    } else {
-                        DirState::Shared
-                    };
-                }
-                DirState::Shared if e.sharers == 0 => {
-                    e.state = DirState::Uncached;
-                }
-                _ => {}
-            }
-            if dirty {
-                act.dir_msgs += 1; // data message with the writeback
-            }
-        }
-        act
-    }
-
-    /// LLC evicts the line (inclusive recall): every private copy must be
-    /// invalidated; returns the sharers to invalidate and removes the entry.
-    pub fn recall(&mut self, line: Line) -> (SharerMask, CoherenceActions) {
-        let Some(e) = self.remove(line.0) else {
-            return (0, CoherenceActions::default());
-        };
-        let act = CoherenceActions {
-            invalidations: e.sharer_count(),
-            inv_mask: e.sharers,
-            owner_writeback: match e.state {
-                DirState::Owned { owner } => Some(owner),
-                _ => None,
-            },
-            dir_msgs: 1 + e.sharer_count(),
-        };
-        (e.sharers, act)
     }
 
     /// Internal-consistency check used by the property tests.
@@ -356,143 +288,67 @@ impl Default for Directory {
 
 #[cfg(test)]
 mod tests {
+    // Transaction-level (MESI/Dragon) tests live with the protocols in
+    // `hierarchy/protocol.rs`; these cover the raw storage: probing,
+    // growth, deletion, and the state/sharer consistency check.
     use super::*;
 
     fn l(v: u64) -> Line {
         Line(v)
     }
 
-    #[test]
-    fn first_reader_gets_exclusive() {
-        let mut d = Directory::new();
-        let act = d.get_s(l(1), 0);
-        assert_eq!(act.invalidations, 0);
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 0 });
+    /// Register `core` as exclusive holder of `line` (the storage writes
+    /// a protocol would perform on a cold GetS/GetM).
+    fn claim(d: &mut Directory, line: Line, core: usize) {
+        let e = d.entry_or_insert(line);
+        e.state = DirState::Owned { owner: core };
+        e.sharers = 1 << core;
     }
 
     #[test]
-    fn second_reader_downgrades_owner() {
+    fn entry_or_insert_starts_uncached() {
         let mut d = Directory::new();
-        d.get_s(l(1), 0);
-        let act = d.get_s(l(1), 1);
-        assert_eq!(act.owner_writeback, Some(0));
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Shared);
-        assert_eq!(d.entry(l(1)).unwrap().sharer_count(), 2);
+        let e = d.entry_or_insert(l(1));
+        assert_eq!(e.state, DirState::Uncached);
+        assert_eq!(e.sharers, 0);
+        assert_eq!(d.len(), 1);
+        // a second call finds the same entry rather than resetting it
+        d.entry_or_insert(l(1)).sharers = 0b11;
+        assert_eq!(d.entry_or_insert(l(1)).sharers, 0b11);
+        assert_eq!(d.len(), 1);
     }
 
     #[test]
-    fn writer_invalidates_sharers() {
+    fn entry_mut_is_none_for_absent_lines() {
         let mut d = Directory::new();
-        d.get_s(l(1), 0);
-        d.get_s(l(1), 1);
-        d.get_s(l(1), 2);
-        let act = d.get_m(l(1), 0);
-        assert_eq!(act.invalidations, 2); // cores 1, 2
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 0 });
-        d.check_invariants().unwrap();
+        assert!(d.entry_mut(l(9)).is_none());
+        assert!(d.entry(l(9)).is_none());
+        assert!(d.remove_entry(l(9)).is_none());
     }
 
     #[test]
-    fn writer_steals_from_dirty_owner() {
+    fn remove_entry_returns_the_stored_state() {
         let mut d = Directory::new();
-        d.get_m(l(1), 0);
-        let act = d.get_m(l(1), 1);
-        assert_eq!(act.owner_writeback, Some(0));
-        assert_eq!(act.invalidations, 1);
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 1 });
-    }
-
-    #[test]
-    fn silent_upgrade_costs_nothing_extra() {
-        let mut d = Directory::new();
-        d.get_s(l(1), 0); // granted E
-        let act = d.get_m(l(1), 0);
-        assert_eq!(act.invalidations, 0);
-        assert_eq!(act.owner_writeback, None);
-    }
-
-    #[test]
-    fn put_last_sharer_uncaches() {
-        let mut d = Directory::new();
-        d.get_s(l(1), 0);
-        d.put(l(1), 0, false);
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Uncached);
-        d.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn recall_reports_all_sharers() {
-        let mut d = Directory::new();
-        d.get_s(l(1), 0);
-        d.get_s(l(1), 1);
-        let (mask, act) = d.recall(l(1));
-        assert_eq!(mask, 0b11);
-        assert_eq!(act.invalidations, 2);
+        claim(&mut d, l(1), 3);
+        let e = d.remove_entry(l(1)).unwrap();
+        assert_eq!(e.state, DirState::Owned { owner: 3 });
+        assert_eq!(e.sharers, 1 << 3);
         assert!(d.entry(l(1)).is_none());
+        assert!(d.remove_entry(l(1)).is_none(), "double remove is a no-op");
     }
 
     #[test]
-    fn recall_absent_line_is_noop() {
+    fn iter_entries_walks_every_occupied_slot() {
         let mut d = Directory::new();
-        let (mask, act) = d.recall(l(9));
-        assert_eq!(mask, 0);
-        assert_eq!(act, CoherenceActions::default());
-    }
-
-    #[test]
-    fn rfo_from_uncached_grants_m_without_invalidations() {
-        let mut d = Directory::new();
-        let act = d.get_m(l(1), 3);
-        assert_eq!(act.invalidations, 0);
-        assert_eq!(act.owner_writeback, None);
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 3 });
-        assert!(d.entry(l(1)).unwrap().is_sharer(3));
-        d.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn put_of_unregistered_line_is_harmless() {
-        let mut d = Directory::new();
-        let act = d.put(l(5), 0, false);
-        assert_eq!(act.invalidations, 0);
-        assert!(d.entry(l(5)).is_none());
-        d.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn put_of_a_non_owner_sharer_keeps_the_line_shared() {
-        let mut d = Directory::new();
-        d.get_s(l(1), 0);
-        d.get_s(l(1), 1); // downgrades 0 -> Shared {0,1}
-        d.put(l(1), 1, false);
-        let e = d.entry(l(1)).unwrap();
-        assert_eq!(e.state, DirState::Shared);
-        assert!(e.is_sharer(0));
-        assert!(!e.is_sharer(1));
-        d.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn reacquire_after_recall_regrants_exclusive() {
-        let mut d = Directory::new();
-        d.get_s(l(1), 0);
-        d.get_s(l(1), 1);
-        d.recall(l(1));
-        // the entry is gone; the next reader is alone again -> E
-        let act = d.get_s(l(1), 1);
-        assert_eq!(act.owner_writeback, None);
-        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 1 });
-        d.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn dirty_put_costs_an_extra_data_message() {
-        let mut d = Directory::new();
-        d.get_m(l(1), 0);
-        let clean = d.put(l(1), 0, false);
-        d.get_m(l(1), 0);
-        let dirty = d.put(l(1), 0, true);
-        assert_eq!(dirty.dir_msgs, clean.dir_msgs + 1);
+        for line in 0..100u64 {
+            claim(&mut d, l(line), (line % 4) as usize);
+        }
+        let mut seen: Vec<u64> = d.iter_entries().map(|(line, _)| line.0).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100u64).collect::<Vec<_>>());
+        for (line, e) in d.iter_entries() {
+            assert_eq!(e.state, DirState::Owned { owner: (line.0 % 4) as usize });
+        }
     }
 
     #[test]
@@ -500,7 +356,7 @@ mod tests {
         let mut d = Directory::new();
         let n = (Directory::INITIAL_CAPACITY * 4) as u64;
         for line in 0..n {
-            d.get_s(l(line), (line % 8) as usize);
+            claim(&mut d, l(line), (line % 8) as usize);
         }
         assert_eq!(d.len(), n as usize);
         for line in 0..n {
@@ -518,14 +374,14 @@ mod tests {
     #[test]
     fn backward_shift_deletion_keeps_probe_chains_intact() {
         // drive a dense key range through interleaved inserts and
-        // recalls: linear-probing clusters form and every deletion must
+        // removals: linear-probing clusters form and every deletion must
         // repair the chain or later finds go EMPTY too early
         let mut d = Directory::new();
         for line in 0..4096u64 {
-            d.get_s(l(line), 0);
+            claim(&mut d, l(line), 0);
         }
         for line in (0..4096u64).step_by(2) {
-            d.recall(l(line));
+            d.remove_entry(l(line));
         }
         assert_eq!(d.len(), 2048);
         for line in 0..4096u64 {
@@ -537,20 +393,38 @@ mod tests {
         }
         // survivors are still fully operational
         for line in (1..4096u64).step_by(2) {
-            d.get_m(l(line), 1);
+            claim(&mut d, l(line), 1);
         }
         d.check_invariants().unwrap();
     }
 
     #[test]
-    fn len_tracks_inserts_and_recalls() {
+    fn len_tracks_inserts_and_removes() {
         let mut d = Directory::new();
         assert!(d.is_empty());
-        d.get_s(l(1), 0);
-        d.get_m(l(2), 0);
+        claim(&mut d, l(1), 0);
+        claim(&mut d, l(2), 0);
         assert_eq!(d.len(), 2);
-        d.recall(l(1));
-        d.recall(l(1)); // double recall is a no-op
+        d.remove_entry(l(1));
+        d.remove_entry(l(1));
         assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn invariant_check_rejects_inconsistent_states() {
+        let mut d = Directory::new();
+        claim(&mut d, l(1), 2);
+        d.check_invariants().unwrap();
+        // an Owned entry whose sharer mask disagrees with the owner
+        d.entry_mut(l(1)).unwrap().sharers = 0b11;
+        assert!(d.check_invariants().is_err());
+        // Shared with no sharers is equally broken
+        let e = d.entry_mut(l(1)).unwrap();
+        e.state = DirState::Shared;
+        e.sharers = 0;
+        assert!(d.check_invariants().is_err());
+        // and a consistent Shared state passes again
+        d.entry_mut(l(1)).unwrap().sharers = 0b101;
+        d.check_invariants().unwrap();
     }
 }

@@ -8,12 +8,17 @@
 //! * [`level`] — [`LevelConfig`](level::LevelConfig) (size / ways /
 //!   latency / shared-vs-private) and the instantiated
 //!   [`Level`](level::Level) tag arrays
-//! * [`path`] — [`AccessPath`](path::AccessPath): the MESI walk over an
-//!   arbitrary stack of private levels + one shared level, with the
-//!   directory co-located at the shared level
+//! * [`path`] — [`AccessPath`](path::AccessPath): the protocol-generic
+//!   walk over an arbitrary stack of private levels + one shared level,
+//!   with the directory co-located at the shared level
+//! * [`protocol`] — [`CoherenceProtocol`](protocol::CoherenceProtocol):
+//!   the coherence state machine as a trait, with MESI
+//!   (write-invalidate), Dragon (write-update) and partial coherence
+//!   (non-coherent shared level) behind one registry
+//!   ([`ProtocolKind`](protocol::ProtocolKind))
 //! * [`timing`] — [`Timing`](timing::Timing): machine-wide latencies
-//!   (memory, interleaver quantum, lock backoff) replacing the
-//!   hard-coded Table 2 constants
+//!   (memory, interleaver quantum, lock backoff, update messages)
+//!   replacing the hard-coded Table 2 constants
 //! * [`merge_policy`] — [`MergePolicy`](merge_policy::MergePolicy): the
 //!   merge / merge-on-evict / dirty-merge decisions behind a trait, with
 //!   the paper's policy as the default implementation
@@ -26,9 +31,11 @@
 pub mod level;
 pub mod merge_policy;
 pub mod path;
+pub mod protocol;
 pub mod timing;
 
 pub use level::{Level, LevelConfig};
 pub use merge_policy::{MergeDecision, MergePolicy, PaperMergePolicy};
 pub use path::{AccessPath, CoherentWalk, FillReq};
+pub use protocol::{CoherenceProtocol, Grant, ProtocolKind};
 pub use timing::Timing;

@@ -3,11 +3,19 @@
 //! operations (fills, evictions, invalidations, inclusive recalls) the
 //! protocol engine composes.
 //!
-//! The path owns the instantiated [`Level`]s and the MESI [`Directory`]
-//! (co-located with the shared level). It is shape-agnostic: the same
-//! walk serves the paper's 3-level machine, a 2-level embedded shape, or
-//! deeper hierarchies — the stack is data from
-//! [`MachineConfig::levels`](crate::sim::config::MachineConfig::levels).
+//! The path owns the instantiated [`Level`]s, the [`Directory`]
+//! (co-located with the shared level) and the active
+//! [`CoherenceProtocol`](super::protocol::CoherenceProtocol). It is
+//! shape- *and protocol*-agnostic: the same walk serves the paper's
+//! 3-level machine, a 2-level embedded shape, or deeper hierarchies —
+//! the stack is data from
+//! [`MachineConfig::levels`](crate::sim::config::MachineConfig::levels)
+//! — and every directory transaction (who to invalidate, who to update,
+//! what a fill may own) is delegated to the protocol picked by
+//! [`MachineConfig::protocol`](crate::sim::config::MachineConfig::protocol).
+//! The walk's own job is timing and cache structure: latencies, fills,
+//! inclusion bookkeeping, and applying whatever
+//! [`CoherenceActions`] the protocol hands back.
 //!
 //! Division of labour with [`MemSystem`](crate::sim::memsys::MemSystem):
 //! the path performs every structural step of an access *except*
@@ -22,11 +30,12 @@
 use crate::sim::addr::Line;
 use crate::sim::cache::{Cache, LineMeta, Victim};
 use crate::sim::config::MachineConfig;
-use crate::sim::directory::{CoherenceActions, Directory, DirState};
+use crate::sim::directory::{CoherenceActions, Directory};
 use crate::sim::invariant::InvariantViolation;
 use crate::sim::stats::Stats;
 
 use super::level::Level;
+use super::protocol::CoherenceProtocol;
 
 /// Low-`n` way-position mask (`n == 64` would overflow the shift; way
 /// counts are validated far below that, but stay total anyway).
@@ -59,7 +68,14 @@ pub struct AccessPath {
     /// Innermost (L1) first; the last entry is the single shared level.
     levels: Vec<Level>,
     dir: Directory,
+    /// The coherence state machine every directory transaction routes
+    /// through ([`MachineConfig::protocol`](crate::sim::config::MachineConfig::protocol)).
+    protocol: Box<dyn CoherenceProtocol>,
+    cores: usize,
     mem_cycles: u64,
+    /// Cycles per write-update message (Dragon), from
+    /// [`Timing::update_cycles`](super::Timing).
+    update_cycles: u64,
     /// Current shared-level merge-region width in ways; `None` when the
     /// config carries no [`WayPartition`](super::level::WayPartition).
     /// Mutable at run time — the reuse-aware controller in
@@ -78,9 +94,17 @@ impl AccessPath {
                 .map(|lc| Level::new(*lc, cfg.cores))
                 .collect(),
             dir: Directory::new(),
+            protocol: cfg.protocol.build(),
+            cores: cfg.cores,
             mem_cycles: cfg.timing.mem_cycles,
+            update_cycles: cfg.timing.update_cycles,
             ccache_ways: cfg.llc().partition.map(|p| p.ccache_ways),
         }
+    }
+
+    /// The active coherence protocol.
+    pub fn protocol(&self) -> &dyn CoherenceProtocol {
+        &*self.protocol
     }
 
     /// Current merge-region partition width (`None` = unpartitioned).
@@ -168,6 +192,13 @@ impl AccessPath {
         &self.dir
     }
 
+    /// Mutable directory access — exists for the invariant tests, which
+    /// inject corrupted sharer bits and assert the engine catches them.
+    /// Production callers go through the protocol transactions.
+    pub fn directory_mut(&mut self) -> &mut Directory {
+        &mut self.dir
+    }
+
     /// The innermost (CData-bearing) cache of `core`.
     #[inline]
     pub fn innermost(&self, core: usize) -> &Cache {
@@ -180,7 +211,7 @@ impl AccessPath {
     }
 
     // ------------------------------------------------------------------
-    // the coherent MESI walk
+    // the protocol-generic coherent walk
     // ------------------------------------------------------------------
 
     /// Branch-light fast path for the dominant access class: a coherent
@@ -235,21 +266,27 @@ impl AccessPath {
             let mut owned = meta.owned;
             if write {
                 if !owned {
-                    cycles += self.upgrade(core, line, stats);
-                    owned = true;
+                    // MESI: S->M upgrade, always granted exclusive.
+                    // Dragon: update broadcast — exclusivity only once
+                    // no other sharer remains, so the next write here
+                    // consults the protocol again.
+                    let (up_cycles, exclusive) = self.upgrade(core, line, stats);
+                    cycles += up_cycles;
+                    owned = exclusive;
                 }
-                // mark dirty/owned here and at every outer private level
-                // holding the line (inclusion bookkeeping)
+                // mark dirty (and ownership as granted) here and at every
+                // outer private level holding the line (inclusion
+                // bookkeeping)
                 {
                     let c = self.levels[lvl].cache_mut(core);
                     c.set_dirty(idx, true);
-                    c.set_owned(idx, true);
+                    c.set_owned(idx, owned);
                 }
                 for outer in lvl + 1..n_priv {
                     if let Some(i2) = self.levels[outer].cache_mut(core).lookup(line) {
                         let c2 = self.levels[outer].cache_mut(core);
                         c2.set_dirty(i2, true);
-                        c2.set_owned(i2, true);
+                        c2.set_owned(i2, owned);
                     }
                 }
             }
@@ -269,32 +306,31 @@ impl AccessPath {
             return CoherentWalk { cycles, fill };
         }
 
-        // ---- shared level + directory ----
+        // ---- shared level + protocol transaction ----
         let sh = self.shared_index();
         cycles += self.levels[sh].cfg.hit_cycles;
-        let act = if write {
-            self.dir.get_m(line, core)
+        let grant = if write {
+            self.protocol.write_shared(&mut self.dir, line, core)
         } else {
-            self.dir.get_s(line, core)
+            self.protocol.read_shared(&mut self.dir, line, core)
         };
+        let act = grant.actions;
         // remote dirty owner: the directory must forward the request and
         // wait for the owner's data — one extra shared-level round trip
         if act.owner_writeback.map_or(false, |o| o != core) {
             cycles += self.levels[sh].cfg.hit_cycles;
         }
+        cycles += self.update_cycles * u64::from(act.update_mask.count_ones());
         self.apply_actions(core, line, &act, stats);
 
         if !self.fetch_shared(line, false, stats) {
             cycles += self.mem_cycles;
         }
 
-        // owned iff the directory granted exclusivity (E on first read,
-        // M on any write)
-        let owned = write
-            || matches!(
-                self.dir.entry(line).map(|e| e.state),
-                Some(DirState::Owned { .. })
-            );
+        // owned iff the protocol granted exclusivity (MESI: E on a lone
+        // read, M on any write; Dragon: only when no other sharer holds
+        // a copy; partial coherence: always)
+        let owned = grant.exclusive;
         for lvl in (1..n_priv).rev() {
             self.fill_private(core, lvl, line, owned, write, stats);
         }
@@ -307,21 +343,26 @@ impl AccessPath {
         }
     }
 
-    /// S->M upgrade: directory transaction + invalidations. Returns the
-    /// cycles charged (one shared-level round trip, two when a remote
-    /// owner's data must be forwarded).
-    pub fn upgrade(&mut self, core: usize, line: Line, stats: &mut Stats) -> u64 {
+    /// Write permission for a line already held non-exclusively: the
+    /// protocol's write transaction (MESI S->M upgrade + invalidations;
+    /// Dragon update broadcast). Returns the cycles charged (one
+    /// shared-level round trip, one more when a remote owner's data must
+    /// be forwarded, plus per-recipient update messages) and whether the
+    /// writer now holds the line exclusively.
+    pub fn upgrade(&mut self, core: usize, line: Line, stats: &mut Stats) -> (u64, bool) {
         let sh_hit = self.levels[self.shared_index()].cfg.hit_cycles;
-        let act = self.dir.get_m(line, core);
+        let grant = self.protocol.write_shared(&mut self.dir, line, core);
+        let act = grant.actions;
         let mut cycles = sh_hit;
         if act.owner_writeback.map_or(false, |o| o != core) {
             cycles += sh_hit;
         }
+        cycles += self.update_cycles * u64::from(act.update_mask.count_ones());
         self.apply_actions(core, line, &act, stats);
-        cycles
+        (cycles, grant.exclusive)
     }
 
-    /// Apply a directory transaction's side effects to the other cores'
+    /// Apply a protocol transaction's side effects to the other cores'
     /// private levels and the stats.
     fn apply_actions(
         &mut self,
@@ -332,8 +373,17 @@ impl AccessPath {
     ) {
         stats.directory_msgs += act.dir_msgs as u64;
         stats.invalidations += act.invalidations as u64;
+        if act.update_mask != 0 {
+            // write-update broadcast: recipients keep their (refreshed)
+            // copies; the flat functional memory already carries the
+            // value, so only the accounting happens here
+            stats.dragon_updates += 1;
+            stats.update_words += u64::from(act.update_mask.count_ones());
+        }
         if let Some(owner) = act.owner_writeback {
-            if owner != me {
+            // keep_owner_dirty (Dragon Sm) forwards cache-to-cache
+            // without cleaning through to memory: no writeback counted
+            if owner != me && !act.keep_owner_dirty {
                 stats.writebacks += 1;
             }
         }
@@ -357,8 +407,9 @@ impl AccessPath {
                 self.levels[lvl].cache_mut(c).invalidate(line);
             }
         }
-        // a pure downgrade (GetS hitting an owner) leaves the owner's copy
-        // in place but clears its ownership
+        // a pure downgrade (a fetch hitting an owner) leaves the owner's
+        // copy in place but clears its ownership; under Dragon's Sm the
+        // dirty bit survives — the owner still owes the writeback
         if act.inv_mask == 0 {
             if let Some(owner) = act.owner_writeback {
                 if owner != me {
@@ -366,7 +417,9 @@ impl AccessPath {
                         if let Some(idx) = self.levels[lvl].cache(owner).probe(line) {
                             let c = self.levels[lvl].cache_mut(owner);
                             c.set_owned(idx, false);
-                            c.set_dirty(idx, false);
+                            if !act.keep_owner_dirty {
+                                c.set_dirty(idx, false);
+                            }
                         }
                     }
                 }
@@ -474,8 +527,8 @@ impl AccessPath {
         }
         self.levels[lvl].cache_mut(core).invalidate(meta.line);
         if lvl + 1 == self.shared_index() {
-            // outermost private level: the directory must be told
-            let act = self.dir.put(meta.line, core, dirty);
+            // outermost private level: the protocol must be told
+            let act = self.protocol.evict(&mut self.dir, meta.line, core, dirty);
             stats.directory_msgs += act.dir_msgs as u64;
             if dirty {
                 stats.writebacks += 1;
@@ -545,7 +598,7 @@ impl AccessPath {
         let way = match victim {
             Victim::Free { way } => way,
             Victim::Evict { way, meta } => {
-                let (_, act) = self.dir.recall(meta.line);
+                let (_, act) = self.protocol.recall(&mut self.dir, meta.line);
                 stats.directory_msgs += act.dir_msgs as u64;
                 stats.invalidations += act.invalidations as u64;
                 let mut dirty = meta.dirty;
@@ -577,6 +630,14 @@ impl AccessPath {
     /// Drop any coherent copies of `line` held by `core`'s private levels
     /// (phase transition into CData, Section 4.4): the directory
     /// registration is released as if the core had evicted the line.
+    ///
+    /// The eviction transaction fires when a copy was found *or* when the
+    /// directory still registers this core — gating on presence alone
+    /// would leak a sharer bit whenever the registration outlives the
+    /// cached copy, and a stale bit inflates every later invalidation
+    /// (MESI) or update broadcast (Dragon) for the line. Engine
+    /// invariant 8 ([`check_sharer_invariant`](Self::check_sharer_invariant))
+    /// pins the discipline.
     pub fn drop_coherent(&mut self, core: usize, line: Line, stats: &mut Stats) {
         let n_priv = self.private_depth();
         let mut dirty = false;
@@ -587,13 +648,82 @@ impl AccessPath {
                 present = true;
             }
         }
-        if present {
-            let act = self.dir.put(line, core, dirty);
+        let registered = self.protocol.is_coherent()
+            && self.dir.entry(line).map_or(false, |e| e.is_sharer(core));
+        if present || registered {
+            let act = self.protocol.evict(&mut self.dir, line, core, dirty);
             stats.directory_msgs += act.dir_msgs as u64;
             if dirty {
                 stats.writebacks += 1;
             }
         }
+    }
+
+    /// Engine invariant 8: the directory's sharer bookkeeping and the
+    /// private caches agree. For a coherent protocol, every sharer bit
+    /// corresponds to a real, non-CData copy in that core's outermost
+    /// private level, and every coherent line cached there is registered
+    /// (drop_coherent/eviction leaks would break Dragon's update fan-out
+    /// and MESI's invalidation sets). For partial coherence the
+    /// directory must simply stay empty — no transaction ever writes it.
+    pub fn check_sharer_invariant(&self) -> Result<(), InvariantViolation> {
+        let outer = self.private_depth() - 1;
+        if !self.protocol.is_coherent() {
+            return match self.dir.iter_entries().next() {
+                None => Ok(()),
+                Some((line, _)) => Err(InvariantViolation::directory(
+                    line.0,
+                    "non-coherent protocol but the directory has an entry",
+                )),
+            };
+        }
+        // directory -> caches: no stale sharer bits
+        for (line, e) in self.dir.iter_entries() {
+            let mut mask = e.sharers;
+            while mask != 0 {
+                let c = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let cache = self.levels[outer].cache(c);
+                match cache.probe(line) {
+                    Some(idx) if !cache.is_ccache(idx) => {}
+                    Some(_) => {
+                        return Err(InvariantViolation::directory(
+                            line.0,
+                            format!("core {c} registered as sharer but holds the line as CData"),
+                        ))
+                    }
+                    None => {
+                        return Err(InvariantViolation::directory(
+                            line.0,
+                            format!(
+                                "stale sharer bit: core {c} registered but holds no copy in \
+                                 private level {outer}"
+                            ),
+                        ))
+                    }
+                }
+            }
+        }
+        // caches -> directory: no unregistered coherent residents
+        for core in 0..self.cores {
+            let cache = self.levels[outer].cache(core);
+            for i in cache.valid_slots() {
+                if cache.is_ccache(i) {
+                    continue;
+                }
+                let line = cache.meta(i).line;
+                if !self.dir.entry(line).map_or(false, |e| e.is_sharer(core)) {
+                    return Err(InvariantViolation::directory(
+                        line.0,
+                        format!(
+                            "core {core} holds coherent line in private level {outer} without a \
+                             sharer registration"
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,738 @@
+//! Pluggable coherence protocols: the state machine that used to be
+//! inlined in [`path`](super::path) and `directory.rs`, extracted behind
+//! the [`CoherenceProtocol`] trait so the hierarchy walk is
+//! protocol-generic and the [`Directory`] is plain storage of
+//! protocol-opaque line states.
+//!
+//! Three implementations:
+//!
+//! * [`Mesi`] — the paper's baseline: write-invalidate, full-map
+//!   directory. A bit-identical refactor of the walk that used to be
+//!   hard-coded (pinned by `tests/mesi_refactor_diff.rs`).
+//! * [`Dragon`] — write-update: a write to a shared line broadcasts the
+//!   word to every other sharer instead of invalidating them. Sharers
+//!   keep read hits; every write to a still-shared line pays the
+//!   broadcast again ([`Timing::update_cycles`](super::Timing) per
+//!   recipient, counted in `Stats::{dragon_updates, update_words}`).
+//!   A reader fetching from a dirty owner leaves the owner's copy dirty
+//!   (Sm-style: writeback responsibility stays with the last writer,
+//!   signalled by [`CoherenceActions::keep_owner_dirty`]).
+//! * [`PartialCoherence`] — the shared level is non-coherent (modeled on
+//!   partially cache-coherent CXL memory): no directory traffic at all,
+//!   private hits never consult anyone, and remote stores become visible
+//!   only when the writer publishes — at a barrier, an explicit merge,
+//!   or end of run (store buffering lives in `memsys`). Variants that
+//!   need coherent RMWs (cgl/fgl/atomic) are typed-rejected.
+//!
+//! The trait's contract with the walk: `read_shared`/`write_shared` run
+//! the directory transaction for a shared-level access and return a
+//! [`Grant`] — the coherence actions the caller must account (message
+//! counts, invalidation mask, owner writeback, update fan-out) plus
+//! whether the requester may treat the line as exclusive. `evict` and
+//! `recall` are the PutS/PutM and inclusive-recall transactions. CData
+//! never reaches any of these: c_read/c_write bypass coherence entirely
+//! (Section 4.4), which is exactly why merge-based privatization can be
+//! swept *against* these protocols (`ccache protosweep`).
+
+use crate::sim::addr::Line;
+use crate::sim::directory::{CoherenceActions, DirState, Directory, SharerMask};
+
+/// The protocol registry: every selectable protocol, its CLI token, and
+/// what it supports. `--list-protocols` and config validation both read
+/// this, so help text cannot drift from the implementations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    /// Write-invalidate MESI (the paper's machine).
+    Mesi,
+    /// Write-update Dragon.
+    Dragon,
+    /// Non-coherent shared level; only merges/barriers publish.
+    Partial,
+}
+
+impl ProtocolKind {
+    pub const ALL: [ProtocolKind; 3] = [
+        ProtocolKind::Mesi,
+        ProtocolKind::Dragon,
+        ProtocolKind::Partial,
+    ];
+
+    /// CLI token (`--protocol <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ProtocolKind::Mesi => "mesi",
+            ProtocolKind::Dragon => "dragon",
+            ProtocolKind::Partial => "partial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mesi" => Some(ProtocolKind::Mesi),
+            "dragon" => Some(ProtocolKind::Dragon),
+            "partial" | "partial-coherence" => Some(ProtocolKind::Partial),
+            _ => None,
+        }
+    }
+
+    /// One-line summary for `--list-protocols`.
+    pub fn description(self) -> &'static str {
+        match self {
+            ProtocolKind::Mesi => {
+                "write-invalidate full-map directory MESI (the paper's baseline)"
+            }
+            ProtocolKind::Dragon => {
+                "write-update: writes broadcast word updates to sharers instead of invalidating"
+            }
+            ProtocolKind::Partial => {
+                "non-coherent shared level: only CCache merges and barrier flushes publish stores"
+            }
+        }
+    }
+
+    /// Names of the execution variants this protocol can run. Partial
+    /// coherence has no coherent RMWs, so every lock- or atomic-based
+    /// variant (cgl, fgl, atomic) is out; dup and ccache communicate
+    /// only at merge/barrier points, which is exactly what publishes.
+    pub fn supported_variants(self) -> &'static [&'static str] {
+        match self {
+            ProtocolKind::Mesi | ProtocolKind::Dragon => {
+                &["cgl", "fgl", "dup", "ccache", "atomic"]
+            }
+            ProtocolKind::Partial => &["dup", "ccache"],
+        }
+    }
+
+    pub fn supports(self, variant_name: &str) -> bool {
+        self.supported_variants().contains(&variant_name)
+    }
+
+    /// Instantiate the protocol behind the trait.
+    pub fn build(self) -> Box<dyn CoherenceProtocol> {
+        match self {
+            ProtocolKind::Mesi => Box::new(Mesi),
+            ProtocolKind::Dragon => Box::new(Dragon),
+            ProtocolKind::Partial => Box::new(PartialCoherence),
+        }
+    }
+}
+
+impl std::fmt::Display for ProtocolKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a shared-level access transaction grants the requester.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Grant {
+    /// Coherence actions the walk must perform and account.
+    pub actions: CoherenceActions,
+    /// May the requester install/hold the line exclusively (E/M)? When
+    /// false, a later write by the same core must re-consult the
+    /// protocol (MESI: upgrade; Dragon: re-broadcast).
+    pub exclusive: bool,
+}
+
+/// A coherence protocol: owns every directory transaction the hierarchy
+/// walk performs. Implementations mutate the [`Directory`] (plain
+/// storage) and return the actions/grants the walk accounts; they never
+/// touch caches or stats themselves, so the walk stays the single place
+/// where timing is charged.
+pub trait CoherenceProtocol: Send + Sync {
+    fn kind(&self) -> ProtocolKind;
+
+    /// Core `core` misses privately and reads `line` at the shared level
+    /// (GetS-shaped).
+    fn read_shared(&self, dir: &mut Directory, line: Line, core: usize) -> Grant;
+
+    /// Core `core` writes `line` at the shared level (GetM / upgrade /
+    /// Dragon update-broadcast).
+    fn write_shared(&self, dir: &mut Directory, line: Line, core: usize) -> Grant;
+
+    /// Core `core` dropped its private copy (PutS/PutM). `dirty` = the
+    /// copy was modified and is being written back.
+    fn evict(&self, dir: &mut Directory, line: Line, core: usize, dirty: bool)
+        -> CoherenceActions;
+
+    /// The inclusive LLC evicts `line`: every private copy must go.
+    /// Returns the sharer set to invalidate; the entry is removed.
+    fn recall(&self, dir: &mut Directory, line: Line) -> (SharerMask, CoherenceActions);
+
+    /// False for protocols that keep the directory empty and publish
+    /// through explicit merges/barriers only (partial coherence).
+    fn is_coherent(&self) -> bool {
+        true
+    }
+}
+
+/// The paper's write-invalidate MESI. These four transactions are the
+/// former `Directory::{get_s, get_m, put, recall}`, moved verbatim; the
+/// differential test in `tests/mesi_refactor_diff.rs` pins them
+/// bit-identical to the pre-refactor walk.
+pub struct Mesi;
+
+impl CoherenceProtocol for Mesi {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Mesi
+    }
+
+    fn read_shared(&self, dir: &mut Directory, line: Line, core: usize) -> Grant {
+        let e = dir.entry_or_insert(line);
+        let mut act = CoherenceActions {
+            dir_msgs: 1, // the GetS itself
+            ..Default::default()
+        };
+        match e.state {
+            DirState::Uncached => {
+                e.state = DirState::Owned { owner: core }; // grant E
+                e.sharers = 1 << core;
+            }
+            DirState::Shared => {
+                e.sharers |= 1 << core;
+            }
+            DirState::Owned { owner } if owner == core => {
+                // already owner (e.g. refetch after L1 evict, L2 hit path)
+            }
+            DirState::Owned { owner } => {
+                // downgrade owner: fetch its (possibly dirty) data
+                act.owner_writeback = Some(owner);
+                act.dir_msgs += 2; // fwd + data
+                e.state = DirState::Shared;
+                e.sharers |= 1 << core;
+            }
+        }
+        Grant {
+            // post-state Owned can only mean owned by `core` here
+            exclusive: matches!(e.state, DirState::Owned { .. }),
+            actions: act,
+        }
+    }
+
+    fn write_shared(&self, dir: &mut Directory, line: Line, core: usize) -> Grant {
+        let e = dir.entry_or_insert(line);
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        match e.state {
+            DirState::Uncached => {}
+            DirState::Shared => {
+                let others = e.sharers & !(1 << core);
+                act.invalidations = others.count_ones();
+                act.inv_mask = others;
+                act.dir_msgs += act.invalidations; // one inv per sharer
+            }
+            DirState::Owned { owner } if owner == core => {
+                e.sharers = 1 << core;
+                return Grant {
+                    actions: act,
+                    exclusive: true,
+                }; // silent upgrade, nothing to do
+            }
+            DirState::Owned { owner } => {
+                act.owner_writeback = Some(owner);
+                act.invalidations = 1;
+                act.inv_mask = 1 << owner;
+                act.dir_msgs += 2;
+            }
+        }
+        e.state = DirState::Owned { owner: core };
+        e.sharers = 1 << core;
+        Grant {
+            actions: act,
+            exclusive: true,
+        }
+    }
+
+    fn evict(
+        &self,
+        dir: &mut Directory,
+        line: Line,
+        core: usize,
+        dirty: bool,
+    ) -> CoherenceActions {
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        if let Some(e) = dir.entry_mut(line) {
+            e.sharers &= !(1 << core);
+            match e.state {
+                DirState::Owned { owner } if owner == core => {
+                    e.state = if e.sharers == 0 {
+                        DirState::Uncached
+                    } else {
+                        DirState::Shared
+                    };
+                }
+                DirState::Shared if e.sharers == 0 => {
+                    e.state = DirState::Uncached;
+                }
+                _ => {}
+            }
+            if dirty {
+                act.dir_msgs += 1; // data message with the writeback
+            }
+        }
+        act
+    }
+
+    fn recall(&self, dir: &mut Directory, line: Line) -> (SharerMask, CoherenceActions) {
+        let Some(e) = dir.remove_entry(line) else {
+            return (0, CoherenceActions::default());
+        };
+        let act = CoherenceActions {
+            invalidations: e.sharer_count(),
+            inv_mask: e.sharers,
+            owner_writeback: match e.state {
+                DirState::Owned { owner } => Some(owner),
+                _ => None,
+            },
+            dir_msgs: 1 + e.sharer_count(),
+            ..Default::default()
+        };
+        (e.sharers, act)
+    }
+}
+
+/// Write-update Dragon. Reads behave like MESI reads except a dirty
+/// owner keeps its dirty bit (Sm: writeback responsibility stays put).
+/// Writes never invalidate: a write to a shared line stays shared and
+/// broadcasts the word to every other sharer (`update_mask`), so a
+/// producer re-pays the broadcast on every write for as long as
+/// consumers keep copies — the cost signature `protosweep` contrasts
+/// against MESI's invalidate-then-miss pattern.
+pub struct Dragon;
+
+impl CoherenceProtocol for Dragon {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Dragon
+    }
+
+    fn read_shared(&self, dir: &mut Directory, line: Line, core: usize) -> Grant {
+        let e = dir.entry_or_insert(line);
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        match e.state {
+            DirState::Uncached => {
+                e.state = DirState::Owned { owner: core }; // alone: E
+                e.sharers = 1 << core;
+            }
+            DirState::Shared => {
+                e.sharers |= 1 << core;
+            }
+            DirState::Owned { owner } if owner == core => {}
+            DirState::Owned { owner } => {
+                // fetch from the owner, but unlike MESI the owner's copy
+                // stays dirty: Sm keeps writeback responsibility, memory
+                // is not updated
+                act.owner_writeback = Some(owner);
+                act.keep_owner_dirty = true;
+                act.dir_msgs += 2; // fwd + data
+                e.state = DirState::Shared;
+                e.sharers |= 1 << core;
+            }
+        }
+        Grant {
+            exclusive: matches!(e.state, DirState::Owned { .. }),
+            actions: act,
+        }
+    }
+
+    fn write_shared(&self, dir: &mut Directory, line: Line, core: usize) -> Grant {
+        let e = dir.entry_or_insert(line);
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        let exclusive = match e.state {
+            DirState::Uncached => {
+                e.state = DirState::Owned { owner: core };
+                e.sharers = 1 << core;
+                true
+            }
+            DirState::Shared => {
+                e.sharers |= 1 << core;
+                let others = e.sharers & !(1 << core);
+                if others == 0 {
+                    // sole remaining sharer: promote to M silently
+                    e.state = DirState::Owned { owner: core };
+                    true
+                } else {
+                    // broadcast the word; everyone keeps their copy
+                    act.update_mask = others;
+                    act.dir_msgs += others.count_ones();
+                    false
+                }
+            }
+            DirState::Owned { owner } if owner == core => {
+                e.sharers = 1 << core;
+                true
+            }
+            DirState::Owned { owner } => {
+                // fetch from the old owner, then update its (retained)
+                // copy; writeback responsibility moves to the writer
+                act.owner_writeback = Some(owner);
+                act.update_mask = 1 << owner;
+                act.dir_msgs += 3; // fwd + data + update
+                e.state = DirState::Shared;
+                e.sharers = (1 << owner) | (1 << core);
+                false
+            }
+        };
+        Grant {
+            actions: act,
+            exclusive,
+        }
+    }
+
+    fn evict(
+        &self,
+        dir: &mut Directory,
+        line: Line,
+        core: usize,
+        dirty: bool,
+    ) -> CoherenceActions {
+        let mut act = CoherenceActions {
+            dir_msgs: 1,
+            ..Default::default()
+        };
+        if let Some(e) = dir.entry_mut(line) {
+            e.sharers &= !(1 << core);
+            match e.state {
+                DirState::Owned { owner } if owner == core => {
+                    e.state = if e.sharers == 0 {
+                        DirState::Uncached
+                    } else {
+                        DirState::Shared
+                    };
+                }
+                DirState::Shared if e.sharers == 0 => {
+                    e.state = DirState::Uncached;
+                }
+                DirState::Shared if e.sharers.count_ones() == 1 => {
+                    // last-sharer degrade: the survivor stops being a
+                    // broadcast target and future writes go exclusive
+                    e.state = DirState::Owned {
+                        owner: e.sharers.trailing_zeros() as usize,
+                    };
+                }
+                _ => {}
+            }
+            if dirty {
+                act.dir_msgs += 1;
+            }
+        }
+        act
+    }
+
+    fn recall(&self, dir: &mut Directory, line: Line) -> (SharerMask, CoherenceActions) {
+        // inclusive recall is invalidation-shaped in any protocol
+        Mesi.recall(dir, line)
+    }
+}
+
+/// Partial coherence: the shared level answers fetches but tracks
+/// nothing. No transaction touches the directory (it stays empty — the
+/// engine invariant checks that), every fill is trivially "exclusive",
+/// and evict/recall are silent. Store visibility is the caller's
+/// problem: `memsys` buffers each core's coherent stores and publishes
+/// them at merges, barriers and end of run.
+pub struct PartialCoherence;
+
+impl CoherenceProtocol for PartialCoherence {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Partial
+    }
+
+    fn read_shared(&self, _dir: &mut Directory, _line: Line, _core: usize) -> Grant {
+        Grant {
+            actions: CoherenceActions::default(),
+            exclusive: true,
+        }
+    }
+
+    fn write_shared(&self, _dir: &mut Directory, _line: Line, _core: usize) -> Grant {
+        Grant {
+            actions: CoherenceActions::default(),
+            exclusive: true,
+        }
+    }
+
+    fn evict(
+        &self,
+        _dir: &mut Directory,
+        _line: Line,
+        _core: usize,
+        _dirty: bool,
+    ) -> CoherenceActions {
+        CoherenceActions::default()
+    }
+
+    fn recall(&self, _dir: &mut Directory, _line: Line) -> (SharerMask, CoherenceActions) {
+        (0, CoherenceActions::default())
+    }
+
+    fn is_coherent(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(v: u64) -> Line {
+        Line(v)
+    }
+
+    // ---- registry ----
+
+    #[test]
+    fn tokens_round_trip_and_cover_all() {
+        for kind in ProtocolKind::ALL {
+            assert_eq!(ProtocolKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().kind(), kind);
+            assert!(!kind.description().is_empty());
+        }
+        assert_eq!(ProtocolKind::parse("moesi"), None);
+        assert_eq!(
+            ProtocolKind::parse("partial-coherence"),
+            Some(ProtocolKind::Partial)
+        );
+    }
+
+    #[test]
+    fn partial_rejects_rmw_variants() {
+        let p = ProtocolKind::Partial;
+        assert!(p.supports("ccache") && p.supports("dup"));
+        assert!(!p.supports("fgl") && !p.supports("atomic") && !p.supports("cgl"));
+        for kind in [ProtocolKind::Mesi, ProtocolKind::Dragon] {
+            assert_eq!(kind.supported_variants().len(), 5);
+        }
+    }
+
+    // ---- MESI (moved from directory.rs: semantics are unchanged) ----
+
+    #[test]
+    fn mesi_first_reader_gets_exclusive() {
+        let mut d = Directory::new();
+        let g = Mesi.read_shared(&mut d, l(1), 0);
+        assert_eq!(g.actions.invalidations, 0);
+        assert!(g.exclusive);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 0 });
+    }
+
+    #[test]
+    fn mesi_second_reader_downgrades_owner() {
+        let mut d = Directory::new();
+        Mesi.read_shared(&mut d, l(1), 0);
+        let g = Mesi.read_shared(&mut d, l(1), 1);
+        assert_eq!(g.actions.owner_writeback, Some(0));
+        assert!(!g.actions.keep_owner_dirty, "MESI downgrade cleans the owner");
+        assert!(!g.exclusive);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Shared);
+        assert_eq!(d.entry(l(1)).unwrap().sharer_count(), 2);
+    }
+
+    #[test]
+    fn mesi_writer_invalidates_sharers() {
+        let mut d = Directory::new();
+        Mesi.read_shared(&mut d, l(1), 0);
+        Mesi.read_shared(&mut d, l(1), 1);
+        Mesi.read_shared(&mut d, l(1), 2);
+        let g = Mesi.write_shared(&mut d, l(1), 0);
+        assert_eq!(g.actions.invalidations, 2); // cores 1, 2
+        assert_eq!(g.actions.inv_mask, 0b110);
+        assert_eq!(g.actions.update_mask, 0, "MESI never updates");
+        assert!(g.exclusive);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 0 });
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mesi_writer_steals_from_dirty_owner() {
+        let mut d = Directory::new();
+        Mesi.write_shared(&mut d, l(1), 0);
+        let g = Mesi.write_shared(&mut d, l(1), 1);
+        assert_eq!(g.actions.owner_writeback, Some(0));
+        assert_eq!(g.actions.invalidations, 1);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 1 });
+    }
+
+    #[test]
+    fn mesi_silent_upgrade_costs_nothing_extra() {
+        let mut d = Directory::new();
+        Mesi.read_shared(&mut d, l(1), 0); // granted E
+        let g = Mesi.write_shared(&mut d, l(1), 0);
+        assert_eq!(g.actions.invalidations, 0);
+        assert_eq!(g.actions.owner_writeback, None);
+    }
+
+    #[test]
+    fn mesi_put_last_sharer_uncaches() {
+        let mut d = Directory::new();
+        Mesi.read_shared(&mut d, l(1), 0);
+        Mesi.evict(&mut d, l(1), 0, false);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Uncached);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mesi_put_of_a_non_owner_sharer_keeps_the_line_shared() {
+        let mut d = Directory::new();
+        Mesi.read_shared(&mut d, l(1), 0);
+        Mesi.read_shared(&mut d, l(1), 1); // downgrades 0 -> Shared {0,1}
+        Mesi.evict(&mut d, l(1), 1, false);
+        let e = d.entry(l(1)).unwrap();
+        assert_eq!(e.state, DirState::Shared);
+        assert!(e.is_sharer(0) && !e.is_sharer(1));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mesi_recall_reports_all_sharers() {
+        let mut d = Directory::new();
+        Mesi.read_shared(&mut d, l(1), 0);
+        Mesi.read_shared(&mut d, l(1), 1);
+        let (mask, act) = Mesi.recall(&mut d, l(1));
+        assert_eq!(mask, 0b11);
+        assert_eq!(act.invalidations, 2);
+        assert!(d.entry(l(1)).is_none());
+        // the entry is gone; the next reader is alone again -> E
+        let g = Mesi.read_shared(&mut d, l(1), 1);
+        assert!(g.exclusive);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mesi_dirty_put_costs_an_extra_data_message() {
+        let mut d = Directory::new();
+        Mesi.write_shared(&mut d, l(1), 0);
+        let clean = Mesi.evict(&mut d, l(1), 0, false);
+        Mesi.write_shared(&mut d, l(1), 0);
+        let dirty = Mesi.evict(&mut d, l(1), 0, true);
+        assert_eq!(dirty.dir_msgs, clean.dir_msgs + 1);
+    }
+
+    // ---- Dragon ----
+
+    #[test]
+    fn dragon_write_updates_sharers_without_invalidating() {
+        let mut d = Directory::new();
+        Dragon.read_shared(&mut d, l(1), 0);
+        Dragon.read_shared(&mut d, l(1), 1);
+        Dragon.read_shared(&mut d, l(1), 2);
+        let g = Dragon.write_shared(&mut d, l(1), 0);
+        assert_eq!(g.actions.invalidations, 0, "write-update never invalidates");
+        assert_eq!(g.actions.inv_mask, 0);
+        assert_eq!(g.actions.update_mask, 0b110, "cores 1 and 2 get the word");
+        assert!(!g.exclusive, "line stays shared while others hold it");
+        let e = d.entry(l(1)).unwrap();
+        assert_eq!(e.state, DirState::Shared);
+        assert_eq!(e.sharer_count(), 3, "every sharer keeps its copy");
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dragon_repeated_writes_keep_broadcasting() {
+        let mut d = Directory::new();
+        Dragon.read_shared(&mut d, l(1), 0);
+        Dragon.read_shared(&mut d, l(1), 1);
+        for _ in 0..3 {
+            let g = Dragon.write_shared(&mut d, l(1), 0);
+            assert_eq!(g.actions.update_mask, 0b10);
+            assert!(!g.exclusive);
+        }
+    }
+
+    #[test]
+    fn dragon_sole_writer_goes_exclusive() {
+        let mut d = Directory::new();
+        let g = Dragon.write_shared(&mut d, l(1), 3);
+        assert!(g.exclusive);
+        assert_eq!(g.actions.update_mask, 0);
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Owned { owner: 3 });
+    }
+
+    #[test]
+    fn dragon_read_from_dirty_owner_keeps_owner_dirty() {
+        let mut d = Directory::new();
+        Dragon.write_shared(&mut d, l(1), 0); // owner, dirty copy
+        let g = Dragon.read_shared(&mut d, l(1), 1);
+        assert_eq!(g.actions.owner_writeback, Some(0));
+        assert!(g.actions.keep_owner_dirty, "Sm: owner retains writeback duty");
+        assert_eq!(d.entry(l(1)).unwrap().state, DirState::Shared);
+    }
+
+    #[test]
+    fn dragon_write_steal_retains_old_owner_as_sharer() {
+        let mut d = Directory::new();
+        Dragon.write_shared(&mut d, l(1), 0);
+        let g = Dragon.write_shared(&mut d, l(1), 1);
+        assert_eq!(g.actions.owner_writeback, Some(0));
+        assert_eq!(g.actions.invalidations, 0);
+        assert_eq!(g.actions.update_mask, 0b1, "old owner is updated, not dropped");
+        let e = d.entry(l(1)).unwrap();
+        assert_eq!(e.state, DirState::Shared);
+        assert!(e.is_sharer(0) && e.is_sharer(1));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dragon_last_sharer_eviction_degrades_to_exclusive() {
+        let mut d = Directory::new();
+        Dragon.read_shared(&mut d, l(1), 0);
+        Dragon.read_shared(&mut d, l(1), 1);
+        Dragon.write_shared(&mut d, l(1), 0); // Shared {0,1}, broadcasting
+        Dragon.evict(&mut d, l(1), 1, false);
+        assert_eq!(
+            d.entry(l(1)).unwrap().state,
+            DirState::Owned { owner: 0 },
+            "survivor stops being a broadcast target"
+        );
+        // and its next write is silent
+        let g = Dragon.write_shared(&mut d, l(1), 0);
+        assert_eq!(g.actions.update_mask, 0);
+        assert!(g.exclusive);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dragon_recall_invalidates_like_mesi() {
+        let mut d = Directory::new();
+        Dragon.read_shared(&mut d, l(1), 0);
+        Dragon.read_shared(&mut d, l(1), 1);
+        let (mask, act) = Dragon.recall(&mut d, l(1));
+        assert_eq!(mask, 0b11);
+        assert_eq!(act.invalidations, 2);
+        assert!(d.entry(l(1)).is_none());
+    }
+
+    // ---- partial coherence ----
+
+    #[test]
+    fn partial_never_touches_the_directory() {
+        let mut d = Directory::new();
+        let p = PartialCoherence;
+        assert!(p.read_shared(&mut d, l(1), 0).exclusive);
+        assert!(p.write_shared(&mut d, l(1), 1).exclusive);
+        p.evict(&mut d, l(1), 0, true);
+        let (mask, act) = p.recall(&mut d, l(1));
+        assert_eq!(mask, 0);
+        assert_eq!(act, CoherenceActions::default());
+        assert!(d.is_empty(), "partial coherence keeps the directory empty");
+        assert!(!p.is_coherent());
+    }
+
+    #[test]
+    fn partial_grants_carry_no_traffic() {
+        let mut d = Directory::new();
+        let g = PartialCoherence.write_shared(&mut d, l(7), 2);
+        assert_eq!(g.actions, CoherenceActions::default());
+        assert_eq!(g.actions.dir_msgs, 0);
+    }
+}

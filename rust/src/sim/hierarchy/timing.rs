@@ -16,6 +16,9 @@
 //! `quantum` and `lock_backoff` are simulator knobs (deterministic
 //! interleaver granularity and spin-retry interval), not paper
 //! constants; their defaults match the seed configuration.
+//! `update_cycles` prices one write-update message for the Dragon
+//! protocol ([`protocol`](super::protocol)) — the paper's machine is
+//! invalidate-based, so this too is a modeling constant.
 
 /// Whole-machine timing knobs (everything not per-level).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +32,11 @@ pub struct Timing {
     /// Cycles charged per failed lock-acquire attempt before retrying
     /// (spin backoff).
     pub lock_backoff: u64,
+    /// Cycles charged per update message a write-update protocol
+    /// (Dragon) sends to one sharer. A modeling constant, not a Table 2
+    /// value: an update carries one word point-to-point, cheaper than a
+    /// full line transfer but not free.
+    pub update_cycles: u64,
 }
 
 impl Timing {
@@ -39,6 +47,7 @@ impl Timing {
             mem_cycles: 300,
             quantum: 256,
             lock_backoff: 40,
+            update_cycles: 10,
         }
     }
 }
@@ -59,6 +68,7 @@ mod tests {
         assert_eq!(t.mem_cycles, 300);
         assert_eq!(t.quantum, 256);
         assert_eq!(t.lock_backoff, 40);
+        assert_eq!(t.update_cycles, 10);
         assert_eq!(t, Timing::table2());
     }
 }

@@ -193,8 +193,10 @@ impl Machine {
         });
         let mut g = self.state.lock().unwrap();
         // end of run: fold the fast-path scratch counters in before the
-        // stats are cloned out
+        // stats are cloned out, and publish any stores still buffered
+        // under partial coherence so `Workload::verify` reads final data
         g.mem.flush_hot_stats();
+        g.mem.publish_partial_all();
         let clocks = g.clocks.clone();
         let mut stats = g.mem.stats.clone();
         stats.core_cycles = clocks;

@@ -25,6 +25,16 @@
 //! merge functions compute real values — final memory contents are
 //! checked against sequential golden runs in the integration tests.
 //!
+//! Partial coherence
+//! ([`ProtocolKind::Partial`](super::hierarchy::protocol::ProtocolKind)):
+//! the shared level stops ordering plain stores, so the flat memory can
+//! no longer stand in for instant visibility. Each core's plain stores
+//! land in a private word buffer (`partial_store`); its own loads read
+//! through the buffer, remote cores keep seeing the stale flat-memory
+//! word, and the buffer drains to flat memory only at publish points —
+//! explicit CCache merges (line-granular at privatization/merge, full
+//! at `merge`) and barrier flushes (`publish_partial`).
+//!
 //! Hot path (`MachineConfig::fast_path`, default on): the two dominant
 //! access classes — coherent L1 read hits and private-hit COps — skip
 //! the full multi-level walk and bump per-core [`HotCounters`] instead
@@ -33,6 +43,8 @@
 //! transitions and post-flush stats are bit-identical to the full walk
 //! (`tests/fastpath_diff.rs` proves it differentially).
 
+use std::collections::HashMap;
+
 use super::addr::{Addr, Line};
 use super::cache::Cache;
 use super::config::{ConfigError, MachineConfig};
@@ -40,6 +52,7 @@ use super::directory::Directory;
 use super::hierarchy::level::PartitionPolicy;
 use super::hierarchy::merge_policy::{self, MergeDecision, MergePolicy};
 use super::hierarchy::path::AccessPath;
+use super::hierarchy::protocol::ProtocolKind;
 use super::invariant::InvariantViolation;
 use super::mfrf::{MergeFault, Mfrf};
 use super::source_buffer::SourceBuffer;
@@ -115,6 +128,12 @@ pub struct MemSystem {
     /// Reuse-aware way-partition controller; `None` for unpartitioned
     /// or statically partitioned configs.
     part_ctl: Option<PartitionCtl>,
+    /// Per-core private store buffers (word index -> value), present
+    /// exactly when the protocol is non-coherent
+    /// ([`ProtocolKind::Partial`]): plain stores buffer here and become
+    /// globally visible only at publish points. `None` under coherent
+    /// protocols, where the flat memory is authoritative directly.
+    partial_store: Option<Vec<HashMap<usize, u32>>>,
     pub stats: Stats,
     /// Per-core fast-path counter scratch; folded into `stats` by
     /// [`flush_hot_stats`](Self::flush_hot_stats).
@@ -171,6 +190,8 @@ impl MemSystem {
                     last_fills: 0,
                 })
             }),
+            partial_store: (cfg.protocol == ProtocolKind::Partial)
+                .then(|| vec![HashMap::new(); cores]),
             stats,
             hot: vec![HotCounters::default(); cores],
             merge_scratch: Vec::new(),
@@ -257,6 +278,68 @@ impl MemSystem {
         self.mem.copy_from_slice(words);
     }
 
+    /// One word as `core` observes it: its own buffered store if partial
+    /// coherence holds one back, the flat memory otherwise. Both the
+    /// fast and the slow read path load through this, so they are
+    /// value-identical by construction.
+    #[inline]
+    fn load_word(&self, core: usize, i: usize) -> u32 {
+        if let Some(buf) = &self.partial_store {
+            if let Some(&v) = buf[core].get(&i) {
+                return v;
+            }
+        }
+        self.mem[i]
+    }
+
+    /// Store one word as `core`: buffered privately under partial
+    /// coherence, straight to flat memory under coherent protocols.
+    #[inline]
+    fn store_word(&mut self, core: usize, i: usize, val: u32) {
+        if let Some(buf) = &mut self.partial_store {
+            buf[core].insert(i, val);
+        } else {
+            self.mem[i] = val;
+        }
+    }
+
+    /// Publish every store `core` has buffered (partial coherence
+    /// barrier flush; a no-op under coherent protocols). Distinct words
+    /// drain independently, so the hash-map drain order cannot change
+    /// the final image.
+    pub fn publish_partial(&mut self, core: usize) {
+        if let Some(buf) = &mut self.partial_store {
+            for (i, v) in buf[core].drain() {
+                self.mem[i] = v;
+            }
+        }
+    }
+
+    /// Publish every core's buffered stores (end-of-run flush).
+    pub fn publish_partial_all(&mut self) {
+        for core in 0..self.cfg.cores {
+            self.publish_partial(core);
+        }
+    }
+
+    /// Fold `core`'s buffered stores covering `line` into the flat
+    /// memory. Runs before the engine reads a whole line on `core`'s
+    /// behalf (privatizing fill source copy, merge target) — a CCache
+    /// merge is a publish point under partial coherence, and the core
+    /// must at least see its own earlier plain stores.
+    fn publish_partial_line(&mut self, core: usize, line: Line) {
+        if self.partial_store.is_none() {
+            return;
+        }
+        let base = line.word_index();
+        let buf = self.partial_store.as_mut().unwrap();
+        for i in base..base + LINE_WORDS {
+            if let Some(v) = buf[core].remove(&i) {
+                self.mem[i] = v;
+            }
+        }
+    }
+
     fn mem_line(&self, line: Line) -> LineData {
         let base = line.word_index();
         let mut out = [0u32; LINE_WORDS];
@@ -283,12 +366,12 @@ impl MemSystem {
             if let Some(cycles) = self.path.read_hit_innermost(core, line) {
                 self.hot[core].l1_hits += 1;
                 self.drain_engine(core, cycles);
-                return Ok((self.mem[addr.word_index()], cycles));
+                return Ok((self.load_word(core, addr.word_index()), cycles));
             }
         }
         let cycles = self.coherent_access(core, line, false)?;
         self.drain_engine(core, cycles);
-        Ok((self.mem[addr.word_index()], cycles))
+        Ok((self.load_word(core, addr.word_index()), cycles))
     }
 
     /// Coherent write of one word. Returns cycles.
@@ -296,7 +379,7 @@ impl MemSystem {
         let cycles = self.coherent_access(core, addr.line(), true)?;
         self.drain_engine(core, cycles);
         let i = addr.word_index();
-        self.mem[i] = val;
+        self.store_word(core, i, val);
         Ok(cycles)
     }
 
@@ -311,6 +394,9 @@ impl MemSystem {
         let cycles = self.coherent_access(core, addr.line(), true)?;
         self.drain_engine(core, cycles);
         self.stats.atomic_rmws += 1;
+        // RMWs need a coherent shared level to be atomic; the driver
+        // rejects RMW variants under partial coherence, so these operate
+        // on the flat memory directly in every reachable configuration.
         let i = addr.word_index();
         if self.mem[i] == expected {
             self.mem[i] = new;
@@ -495,7 +581,10 @@ impl MemSystem {
         };
 
         // copy into the innermost level (updated copy) and source buffer
-        // (source copy), in parallel (Section 4.1) — one latency charged
+        // (source copy), in parallel (Section 4.1) — one latency charged.
+        // Under partial coherence the core's own buffered plain stores
+        // to this line publish first, so the source copy sees them.
+        self.publish_partial_line(core, line);
         let value = self.mem_line(line);
         let slot = self.src_buf[core].insert(line, value, ty);
         self.cdata_slot[core][way] = slot as u32;
@@ -552,8 +641,10 @@ impl MemSystem {
     /// `merge` — merge every valid source-buffer entry now (Table 1).
     pub fn merge_all(&mut self, core: usize) -> Result<u64, MergeFault> {
         // a merge is a phase boundary: fold the fast-path scratch in so
-        // anything inspecting stats right after sees exact totals
+        // anything inspecting stats right after sees exact totals, and
+        // publish the core's buffered stores (partial coherence)
         self.flush_hot_stats();
+        self.publish_partial(core);
         let mut scratch = std::mem::take(&mut self.merge_scratch);
         self.src_buf[core].collect_oldest_first(&mut scratch);
         let mut cycles = 0;
@@ -704,6 +795,9 @@ impl MemSystem {
         }
         let cost = self.policy.charge(sync, &mut self.engine_backlog[core]);
 
+        // a merge publishes: fold the core's buffered stores to this
+        // line in (partial coherence) before reading the merge target
+        self.publish_partial_line(core, line);
         let mem_val = self.mem_line(line);
         let drop_p = merge.drop_probability();
         let drop_update = if drop_p > 0.0 {
@@ -755,6 +849,14 @@ impl MemSystem {
         &self.path
     }
 
+    /// Mutable hierarchy access — exists for invariant-injection tests
+    /// (corrupt the directory through
+    /// [`AccessPath::directory_mut`], then watch
+    /// [`Self::check_invariants`] catch it); engine code never needs it.
+    pub fn hierarchy_mut(&mut self) -> &mut AccessPath {
+        &mut self.path
+    }
+
     /// Cross-structure invariants (used by property tests and the
     /// execution driver):
     /// 1. every valid source-buffer entry has a CData line innermost;
@@ -771,7 +873,12 @@ impl MemSystem {
     /// 7. with a shared-level way partition active, every CData-classed
     ///    LLC line sits inside the merge-region ways (repartition
     ///    shrinks clear stranded class tags); without one, no LLC line
-    ///    is CData-classed at all.
+    ///    is CData-classed at all;
+    /// 8. directory registration and outermost-private-level residency
+    ///    agree under coherent protocols (every sharer bit is backed by
+    ///    a non-CData copy and vice versa); under partial coherence the
+    ///    directory stays empty — see
+    ///    [`AccessPath::check_sharer_invariant`].
     pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
         for core in 0..self.cfg.cores {
             for e in self.src_buf[core].iter_valid() {
@@ -841,6 +948,7 @@ impl MemSystem {
             }
         }
         self.path.check_partition_invariant()?;
+        self.path.check_sharer_invariant()?;
         self.path.directory().check_invariants()
     }
 }

@@ -89,6 +89,13 @@ pub struct Stats {
     pub invalidations: u64,
     /// Dirty-line writebacks between levels and to memory.
     pub writebacks: u64,
+    /// Write-update broadcasts performed (Dragon: one per write to a
+    /// line with other sharers; always 0 under invalidate-based
+    /// protocols).
+    pub dragon_updates: u64,
+    /// Update words delivered across all broadcasts (one per recipient
+    /// sharer), i.e. the update-message fan-out Dragon pays.
+    pub update_words: u64,
 
     // -- CCache (Fig 9, Section 6.4) ------------------------------------
     /// c_read/c_write operations executed.
@@ -217,6 +224,13 @@ impl fmt::Display for Stats {
         writeln!(f, "directory msgs    {:>14}", self.directory_msgs)?;
         writeln!(f, "invalidations     {:>14}", self.invalidations)?;
         writeln!(f, "writebacks        {:>14}", self.writebacks)?;
+        if self.dragon_updates > 0 {
+            writeln!(
+                f,
+                "dragon updates    {:>14} ({} words)",
+                self.dragon_updates, self.update_words
+            )?;
+        }
         writeln!(f, "COps              {:>14}", self.cops)?;
         writeln!(f, "ccache L1 hits    {:>14}", self.ccache_l1_hits)?;
         writeln!(f, "ccache fills      {:>14}", self.ccache_fills)?;
@@ -328,6 +342,19 @@ mod tests {
         assert!(text.contains("min 2 / max 6 / final 5"), "{text}");
         assert!(text.contains("repartitions"), "{text}");
         assert!(text.contains("9"), "{text}");
+    }
+
+    #[test]
+    fn display_emits_dragon_counters_only_under_write_update() {
+        let mut s = Stats::new(1, 3);
+        // invalidate-based runs never broadcast: section stays hidden
+        assert!(!format!("{s}").contains("dragon updates"));
+        s.dragon_updates = 13;
+        s.update_words = 37;
+        let text = format!("{s}");
+        assert!(text.contains("dragon updates"), "{text}");
+        assert!(text.contains("13"), "{text}");
+        assert!(text.contains("(37 words)"), "{text}");
     }
 
     #[test]

@@ -158,6 +158,28 @@ impl KvServeResult {
     }
 }
 
+/// One coherence-protocol cell for the trajectory record: a benchmark ×
+/// protocol × variant point from the protosweep grid, so the trajectory
+/// tracks how mesi/dragon/partial move relative to each other.
+/// Serialized under the report's top-level `"protosweep"` key (same
+/// precedent as `"native"`/`"partition"`/`"kvserve"`: a new key with its
+/// own shape, so existing section validators keep passing).
+#[derive(Clone, Debug)]
+pub struct ProtoResult {
+    pub name: String,
+    /// Protocol token: "mesi" | "dragon" | "partial".
+    pub protocol: String,
+    pub variant: String,
+    /// False when the protocol typed-rejects the variant (partial
+    /// coherence has no coherent RMWs); numeric fields are zero then.
+    pub supported: bool,
+    pub cycles: u64,
+    /// Dragon write-update broadcasts (0 under invalidate protocols).
+    pub dragon_updates: u64,
+    pub dir_msgs: u64,
+    pub verified: bool,
+}
+
 /// The perf-trajectory record one `ccache bench` run produces.
 /// Serialized (hand-rolled JSON — serde is unavailable offline) to
 /// `BENCH_<bench_id>.json`; committing one per perf-relevant PR gives
@@ -185,6 +207,9 @@ pub struct BenchReport {
     /// kvserve serving cells: the staleness-vs-throughput trajectory
     /// across merge deadlines (ccache plus the atomic baseline).
     pub kvserve: Vec<KvServeResult>,
+    /// Coherence-protocol cells: the protosweep grid on the small
+    /// machine, one row per benchmark × protocol × variant.
+    pub protosweep: Vec<ProtoResult>,
 }
 
 impl BenchReport {
@@ -282,6 +307,26 @@ impl BenchReport {
                 k.verified
             ));
         }
+        out.push_str("\n  ],\n");
+        out.push_str("  \"protosweep\": [\n");
+        for (i, p) in self.protosweep.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"protocol\": {}, \"variant\": {}, \
+                 \"supported\": {}, \"cycles\": {}, \"dragon_updates\": {}, \
+                 \"dir_msgs\": {}, \"verified\": {}}}",
+                json_str(&p.name),
+                json_str(&p.protocol),
+                json_str(&p.variant),
+                p.supported,
+                p.cycles,
+                p.dragon_updates,
+                p.dir_msgs,
+                p.verified
+            ));
+        }
         out.push_str("\n  ]\n}\n");
         out
     }
@@ -344,6 +389,39 @@ impl BenchReport {
                 format!("{:.1}", k.staleness_mean),
                 k.verified.to_string(),
             ]);
+        }
+        t
+    }
+
+    /// The coherence-protocol section as its own table (empty reports
+    /// render a header-only table).
+    pub fn proto_table(&self) -> Table {
+        let mut t = Table::new(
+            format!("coherence protocols — {}", self.config),
+            &["workload", "protocol", "variant", "cycles", "updates", "dir msgs", "verified"],
+        );
+        for p in &self.protosweep {
+            if p.supported {
+                t.row(&[
+                    p.name.clone(),
+                    p.protocol.clone(),
+                    p.variant.clone(),
+                    p.cycles.to_string(),
+                    p.dragon_updates.to_string(),
+                    p.dir_msgs.to_string(),
+                    p.verified.to_string(),
+                ]);
+            } else {
+                t.row(&[
+                    p.name.clone(),
+                    p.protocol.clone(),
+                    p.variant.clone(),
+                    "unsupported".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
         }
         t
     }
@@ -545,6 +623,28 @@ mod tests {
                 staleness_mean: 17.25,
                 verified: true,
             }],
+            protosweep: vec![
+                ProtoResult {
+                    name: "kvstore".into(),
+                    protocol: "dragon".into(),
+                    variant: "ccache".into(),
+                    supported: true,
+                    cycles: 3_000_000,
+                    dragon_updates: 128,
+                    dir_msgs: 900,
+                    verified: true,
+                },
+                ProtoResult {
+                    name: "kvstore".into(),
+                    protocol: "partial".into(),
+                    variant: "fgl".into(),
+                    supported: false,
+                    cycles: 0,
+                    dragon_updates: 0,
+                    dir_msgs: 0,
+                    verified: false,
+                },
+            ],
         }
     }
 
@@ -580,6 +680,11 @@ mod tests {
         assert!(j.contains("\"deadline\": 64"), "{j}");
         assert!(j.contains("\"staleness_max\": 61"), "{j}");
         assert!(j.contains("\"staleness_mean\": 17.2500"), "{j}");
+        // and the protosweep section (PR 10 trajectory record)
+        assert!(j.contains("\"protosweep\": ["), "{j}");
+        assert!(j.contains("\"protocol\": \"dragon\""), "{j}");
+        assert!(j.contains("\"dragon_updates\": 128"), "{j}");
+        assert!(j.contains("\"supported\": false"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
     }
@@ -613,6 +718,14 @@ mod tests {
         assert!(t.contains("ccache"), "{t}");
         assert!(t.contains("61"), "{t}");
         assert!(t.contains("17.2"), "{t}");
+    }
+
+    #[test]
+    fn proto_table_marks_rejected_cells() {
+        let t = demo_report().proto_table().render();
+        assert!(t.contains("dragon"), "{t}");
+        assert!(t.contains("3000000"), "{t}");
+        assert!(t.contains("unsupported"), "{t}");
     }
 
     #[test]

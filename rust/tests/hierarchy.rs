@@ -7,7 +7,7 @@
 use ccache::sim::addr::Line;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::hierarchy::path::AccessPath;
-use ccache::sim::hierarchy::{LevelConfig, Timing};
+use ccache::sim::hierarchy::{LevelConfig, ProtocolKind, Timing};
 use ccache::sim::stats::Stats;
 
 fn path(cfg: &MachineConfig) -> (AccessPath, Stats) {
@@ -107,10 +107,12 @@ fn custom_level_stacks_validate_and_build() {
             mem_cycles: 150,
             quantum: 0,
             lock_backoff: 40,
+            update_cycles: 10,
         },
         ccache: Default::default(),
         mem_bytes: 1 << 20,
         fast_path: true,
+        protocol: ProtocolKind::Mesi,
     };
     cfg.validate().unwrap();
     let (mut p, mut stats) = path(&cfg);

@@ -1,13 +1,20 @@
-//! Direct MESI-transition coverage through the protocol engine: upgrade,
+//! Coherence-transition coverage through the composed engine: upgrade,
 //! remote fetch from a dirty owner, RFO, and eviction of shared lines —
 //! transitions that were previously only covered indirectly via golden
 //! runs. Each test asserts the directory state and coherence-event
 //! counters, on the 3-level Table 2 shape and the 2-level variant where
 //! the shape changes who must notify the directory.
+//!
+//! The MESI tests pin the baseline; the protocol-parametric and
+//! Dragon/partial-coherence sections exercise the same walk under the
+//! other [`ProtocolKind`]s — write-update broadcasts instead of
+//! invalidations, and a non-coherent shared level where remote stores
+//! stay invisible until published.
 
 use ccache::sim::addr::Addr;
 use ccache::sim::config::MachineConfig;
 use ccache::sim::directory::DirState;
+use ccache::sim::hierarchy::ProtocolKind;
 use ccache::sim::memsys::MemSystem;
 
 fn sys3(cores: usize) -> MemSystem {
@@ -16,6 +23,15 @@ fn sys3(cores: usize) -> MemSystem {
 
 fn sys2(cores: usize) -> MemSystem {
     MemSystem::new(MachineConfig::test_small_2level().with_cores(cores)).unwrap()
+}
+
+fn sys3_proto(cores: usize, p: ProtocolKind) -> MemSystem {
+    MemSystem::new(
+        MachineConfig::test_small()
+            .with_cores(cores)
+            .with_protocol(p),
+    )
+    .unwrap()
 }
 
 #[test]
@@ -155,4 +171,223 @@ fn dirty_eviction_writes_back_through_the_hierarchy() {
     let (v, _) = s.read(0, Addr(base.0)).unwrap();
     assert_eq!(v, 77);
     s.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// protocol-parametric: the same walk under every registered protocol
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_core_streams_are_identical_across_mesi_and_dragon() {
+    // with no second sharer anywhere, write-update degenerates to
+    // write-invalidate: every transaction takes the owner==core or
+    // Uncached arm in both protocols
+    let mut per_proto = Vec::new();
+    for p in [ProtocolKind::Mesi, ProtocolKind::Dragon] {
+        let mut s = sys3_proto(1, p);
+        let a = s.alloc_lines(64 * 16);
+        let mut cycles = 0u64;
+        for i in 0..64u64 {
+            let addr = Addr(a.0 + (i % 16) * 64);
+            cycles += s.write(0, addr, i as u32).unwrap();
+            let (v, c) = s.read(0, addr).unwrap();
+            assert_eq!(v, i as u32);
+            cycles += c;
+        }
+        assert_eq!(s.stats.dragon_updates, 0, "{p}: no sharer, no broadcast");
+        per_proto.push((cycles, s.stats.directory_msgs, s.stats.invalidations));
+        s.check_invariants().unwrap();
+    }
+    assert_eq!(per_proto[0], per_proto[1]);
+}
+
+#[test]
+fn sharing_traffic_distinguishes_every_protocol() {
+    // one producer, one consumer, same line: MESI ping-pongs
+    // (invalidate + refetch), Dragon broadcasts into retained copies,
+    // partial coherence goes fully private — three different bills
+    let mut totals = Vec::new();
+    for p in ProtocolKind::ALL {
+        let mut s = sys3_proto(2, p);
+        let a = s.alloc_lines(64);
+        let mut cycles = 0u64;
+        for i in 0..8 {
+            cycles += s.write(0, a, i).unwrap();
+            cycles += s.read(1, a).unwrap().1;
+        }
+        s.check_invariants().unwrap();
+        totals.push(cycles);
+    }
+    assert_ne!(totals[0], totals[1], "dragon must not cost like mesi here");
+    assert_ne!(totals[0], totals[2], "partial must not cost like mesi here");
+}
+
+#[test]
+fn eviction_releases_the_registration_under_both_invalidate_and_update() {
+    // the sys3 eviction scenario, parametric: a leaked sharer bit would
+    // inflate MESI invalidations and Dragon update fan-out alike
+    for p in [ProtocolKind::Mesi, ProtocolKind::Dragon] {
+        let mut s = sys3_proto(2, p);
+        let l2_sets = s.cfg.level(1).sets() as u64;
+        let l2_ways = s.cfg.level(1).ways as u64;
+        let base = s.alloc_lines(64 * l2_sets * (l2_ways + 2));
+        let stride = l2_sets * 64;
+        let addrs: Vec<Addr> = (0..=l2_ways).map(|i| Addr(base.0 + i * stride)).collect();
+        for &a in &addrs {
+            s.read(0, a).unwrap();
+        }
+        let deregistered = s
+            .directory()
+            .entry(addrs[0].line())
+            .map_or(true, |e| !e.is_sharer(0));
+        assert!(deregistered, "{p}: eviction did not deregister the sharer");
+        let inv_before = s.stats.invalidations;
+        let upd_before = s.stats.dragon_updates;
+        s.write(1, addrs[0], 5).unwrap();
+        assert_eq!(s.stats.invalidations, inv_before, "{p}: stale sharer invalidated");
+        assert_eq!(s.stats.dragon_updates, upd_before, "{p}: stale sharer updated");
+        s.check_invariants().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dragon: write-update through the composed engine
+// ---------------------------------------------------------------------
+
+#[test]
+fn dragon_write_broadcasts_instead_of_invalidating() {
+    let mut s = sys3_proto(4, ProtocolKind::Dragon);
+    let a = s.alloc_lines(64);
+    for core in 0..4 {
+        s.read(core, a).unwrap();
+    }
+    let inv_before = s.stats.invalidations;
+    let c = s.write(0, a, 1).unwrap();
+    // L1 hit + one directory round trip + one update message per sharer
+    assert_eq!(c, 4 + 70 + 3 * 10);
+    assert_eq!(s.stats.invalidations, inv_before, "write-update never invalidates");
+    assert_eq!(s.stats.dragon_updates, 1);
+    assert_eq!(s.stats.update_words, 3);
+    // every sharer kept its copy: the remote read is an L1 hit and sees
+    // the broadcast value
+    let misses = s.stats.l1().misses;
+    let (v, c_r) = s.read(1, a).unwrap();
+    assert_eq!((v, c_r), (1, 4));
+    assert_eq!(s.stats.l1().misses, misses);
+    let e = s.directory().entry(a.line()).unwrap();
+    assert_eq!(e.state, DirState::Shared);
+    assert_eq!(e.sharer_count(), 4);
+    // and the producer pays the broadcast again on its next write
+    s.write(0, a, 2).unwrap();
+    assert_eq!(s.stats.dragon_updates, 2);
+    assert_eq!(s.stats.update_words, 6);
+    s.check_invariants().unwrap();
+}
+
+#[test]
+fn dragon_write_steal_updates_the_old_owner_instead_of_dropping_it() {
+    let mut s = sys3_proto(2, ProtocolKind::Dragon);
+    let a = s.alloc_lines(64);
+    assert_eq!(s.write(0, a, 9).unwrap(), 4 + 10 + 70 + 300); // cold, like MESI
+    let inv_before = s.stats.invalidations;
+    let c = s.write(1, a, 5).unwrap();
+    // walk misses both private levels, forwards from the owner, then
+    // pays one update message into the owner's retained copy
+    assert_eq!(c, 4 + 10 + 70 + 70 + 10);
+    assert_eq!(s.stats.invalidations, inv_before);
+    assert_eq!(s.stats.dragon_updates, 1);
+    let e = s.directory().entry(a.line()).unwrap();
+    assert_eq!(e.state, DirState::Shared);
+    assert!(e.is_sharer(0) && e.is_sharer(1), "old owner stays a sharer");
+    // the old owner still reads its (updated) copy as an L1 hit
+    let (v, c_r) = s.read(0, a).unwrap();
+    assert_eq!((v, c_r), (5, 4));
+    s.check_invariants().unwrap();
+}
+
+#[test]
+fn dragon_read_from_dirty_owner_leaves_writeback_with_the_owner() {
+    // MESI cleans the owner through on the forward (writeback counted);
+    // Dragon's Sm keeps writeback responsibility with the last writer
+    let mut s = sys3_proto(2, ProtocolKind::Dragon);
+    let a = s.alloc_lines(64);
+    s.write(0, a, 9).unwrap();
+    let wb_before = s.stats.writebacks;
+    let (v, c_r) = s.read(1, a).unwrap();
+    assert_eq!(v, 9);
+    assert_eq!(c_r, 4 + 10 + 70 + 70, "forwarding round trip like MESI");
+    assert_eq!(s.stats.writebacks, wb_before, "Sm: no clean-through on the fetch");
+    assert_eq!(s.directory().entry(a.line()).unwrap().state, DirState::Shared);
+    s.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// partial coherence: remote stores are invisible until published
+// ---------------------------------------------------------------------
+
+#[test]
+fn partial_remote_write_is_invisible_until_merge() {
+    let mut s = sys3_proto(2, ProtocolKind::Partial);
+    let a = s.alloc_lines(64);
+    s.write(0, a, 42).unwrap();
+    let (v0, _) = s.read(0, a).unwrap();
+    assert_eq!(v0, 42, "the writer reads through its own store buffer");
+    let (v1, _) = s.read(1, a).unwrap();
+    assert_eq!(v1, 0, "non-coherent: the remote store has not been published");
+    // no transaction ever touched the directory
+    assert_eq!(s.stats.directory_msgs, 0);
+    assert_eq!(s.stats.invalidations, 0);
+    assert!(s.directory().is_empty());
+    s.check_invariants().unwrap();
+    // publishing (what a barrier or merge does) makes it visible
+    s.publish_partial(0);
+    let (v1, c) = s.read(1, a).unwrap();
+    assert_eq!(v1, 42, "published store must be visible");
+    assert_eq!(c, 4, "the reader's copy never went anywhere");
+}
+
+#[test]
+fn partial_private_hits_pay_no_coherence_at_all() {
+    let mut s = sys3_proto(2, ProtocolKind::Partial);
+    let a = s.alloc_lines(64);
+    s.read(0, a).unwrap();
+    s.read(1, a).unwrap();
+    // both cores hold the line "exclusively"; writes are pure L1 hits
+    for i in 0..4 {
+        assert_eq!(s.write(0, a, i).unwrap(), 4);
+        assert_eq!(s.write(1, a, 100 + i).unwrap(), 4);
+    }
+    assert_eq!(s.stats.directory_msgs, 0);
+    assert_eq!(s.stats.dragon_updates, 0);
+    s.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// engine invariant 8: injected sharer-set corruption is caught
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_sharer_bit_injection_is_caught_by_the_engine_invariant() {
+    let mut s = sys3(2);
+    let a = s.alloc_lines(64);
+    s.read(0, a).unwrap();
+    s.check_invariants().unwrap();
+    // leak a registration for core 1, which holds no copy — exactly what
+    // a drop_coherent/eviction bookkeeping bug would leave behind
+    let e = s.hierarchy_mut().directory_mut().entry_mut(a.line()).unwrap();
+    e.state = DirState::Shared;
+    e.sharers |= 0b10;
+    let err = s.check_invariants().unwrap_err();
+    assert!(err.to_string().contains("stale sharer bit"), "{err}");
+}
+
+#[test]
+fn partial_coherence_directory_entries_are_caught_by_the_invariant() {
+    let mut s = sys3_proto(1, ProtocolKind::Partial);
+    let a = s.alloc_lines(64);
+    s.read(0, a).unwrap();
+    s.check_invariants().unwrap();
+    // a non-coherent protocol must never populate the directory
+    s.hierarchy_mut().directory_mut().entry_or_insert(a.line());
+    assert!(s.check_invariants().is_err());
 }
